@@ -1,0 +1,37 @@
+//! Fig 10 — replication factor vs partitioning methods over k = 4..128.
+//!
+//! Expected shape (paper): NE best, GEO+CEP a close second, both far
+//! below the hash family (DBH < 2D < 1D) and BVC; MTS between.
+
+use egs::graph::datasets;
+use egs::metrics::table::{f3, Table};
+use egs::ordering::geo::{self, GeoConfig};
+use egs::partition::quality::replication_factor;
+use egs::partition::{edge_partition_by_name, EdgePartition};
+
+const KS: &[usize] = &[4, 8, 16, 32, 64, 128];
+const METHODS: &[&str] = &["cep", "ne", "mts", "hdrf", "dbh", "2d", "1d", "bvc", "cvp"];
+
+fn main() {
+    for dataset in ["pokec-s", "road-ca-s", "orkut-s"] {
+        let g = datasets::by_name(dataset, 42).unwrap();
+        let ordered = geo::order(&g, &GeoConfig::default()).apply(&g);
+        let mut t = Table::new(
+            &format!("Fig 10: RF on {dataset} (|E|={})", g.num_edges()),
+            &["method", "k=4", "k=8", "k=16", "k=32", "k=64", "k=128"],
+        );
+        for &method in METHODS {
+            let mut row = vec![if method == "cep" { "geo+cep".into() } else { method.to_string() }];
+            for &k in KS {
+                // CEP slices the GEO-ordered list; others see the raw graph
+                let input = if method == "cep" { &ordered } else { &g };
+                let part: EdgePartition =
+                    edge_partition_by_name(method, input, k, 42).unwrap();
+                row.push(f3(replication_factor(input, &part)));
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    println!("paper Fig 10: NE < GEO+CEP << MTS/HDRF/DBH/2D < 1D < BVC");
+}

@@ -1,0 +1,46 @@
+//! Fig 11 — replication factor vs *ordering* methods. Vertex orderings
+//! (GO/RO/RGB/LLP/RCM/DEG/DEF) feed CVP then the §6.2 vertex→edge
+//! conversion; GEO feeds CEP directly.
+//!
+//! Expected shape (paper): GEO+CEP best everywhere; RO/LLP close on
+//! community-structured graphs; DEG/DEF worst.
+
+use egs::graph::datasets;
+use egs::metrics::table::{f3, Table};
+use egs::ordering::{geo, vertex_ordering_by_name};
+use egs::partition::quality::replication_factor;
+use egs::partition::{cep::Cep, cvp, vertex2edge, EdgePartition};
+
+const KS: &[usize] = &[4, 8, 16, 32, 64, 128];
+const VERTEX_ORDERINGS: &[&str] = &["go", "ro", "rgb", "llp", "rcm", "deg", "vdef"];
+
+fn main() {
+    for dataset in ["pokec-s", "road-ca-s", "flickr-s"] {
+        let g = datasets::by_name(dataset, 42).unwrap();
+        let mut t = Table::new(
+            &format!("Fig 11: RF by ordering method on {dataset}"),
+            &["ordering", "k=4", "k=8", "k=16", "k=32", "k=64", "k=128"],
+        );
+        // GEO + CEP (ours)
+        let ordered = geo::order(&g, &geo::GeoConfig::default()).apply(&g);
+        let mut row = vec!["geo+cep".to_string()];
+        for &k in KS {
+            let part = EdgePartition::from_cep(&Cep::new(ordered.num_edges(), k));
+            row.push(f3(replication_factor(&ordered, &part)));
+        }
+        t.row(row);
+        // vertex orderings + CVP + random-adjacent conversion
+        for &name in VERTEX_ORDERINGS {
+            let vo = vertex_ordering_by_name(name, &g, 42).unwrap();
+            let mut row = vec![format!("{name}+cvp")];
+            for &k in KS {
+                let vp = cvp::partition(&vo, k);
+                let ep = vertex2edge::convert(&g, &vp, 42);
+                row.push(f3(replication_factor(&g, &ep)));
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    println!("paper Fig 11: GEO+CEP lowest at every k; RO/LLP competitive on road/flickr");
+}

@@ -1,0 +1,36 @@
+//! Fig 12 — preprocessing (ordering) time per method. GEO should sit in
+//! the same band as GO/RGB/LLP, above the trivial DEG/RCM sorts.
+
+use egs::graph::datasets;
+use egs::metrics::table::{secs, Table};
+use egs::metrics::timer::once;
+use egs::ordering::{geo, vertex_ordering_by_name};
+
+fn main() {
+    let sets = ["pokec-s", "orkut-s", "twitter-s"];
+    let mut t = Table::new(
+        "Fig 12: ordering preprocessing time",
+        &["method", sets[0], sets[1], sets[2]],
+    );
+    let methods = ["geo", "go", "ro", "rgb", "llp", "rcm", "deg"];
+    let mut cells: Vec<Vec<String>> = vec![Vec::new(); methods.len()];
+    for ds in sets {
+        let g = datasets::by_name(ds, 42).unwrap();
+        eprintln!("... {ds}: |E|={}", g.num_edges());
+        for (i, name) in methods.iter().enumerate() {
+            let dt = if *name == "geo" {
+                once(|| geo::order(&g, &geo::GeoConfig::default())).1
+            } else {
+                once(|| vertex_ordering_by_name(name, &g, 42).unwrap()).1
+            };
+            cells[i].push(secs(dt.as_secs_f64()));
+        }
+    }
+    for (i, name) in methods.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        row.extend(cells[i].clone());
+        t.row(row);
+    }
+    t.print();
+    println!("paper Fig 12: GEO comparable to GO/RGB/LLP; DEG/RCM cheapest");
+}

@@ -1,0 +1,53 @@
+//! Fig 13 — total migrated edges under the §6.4.2 ScaleOut/ScaleIn
+//! scenarios (scaled to 13→18 / 18→13 here) for BVC, 1D and CEP, plus the
+//! Theorem 2 closed-form prediction for CEP.
+//!
+//! Expected shape (paper): CEP ≈ BVC ≪ 1D.
+
+use egs::graph::datasets;
+use egs::metrics::table::Table;
+use egs::scaling::scaler::{BvcScaler, CepScaler, DynamicScaler, Hash1dScaler};
+use egs::scaling::theory;
+
+fn main() {
+    let g = datasets::by_name("pokec-s", 42).unwrap();
+    let m = g.num_edges();
+    let (k_lo, k_hi) = (13usize, 18usize);
+
+    let mut t = Table::new(
+        &format!("Fig 13: total migrated edges (|E|={m})"),
+        &["method", &format!("ScaleOut {k_lo}->{k_hi}"), &format!("ScaleIn {k_hi}->{k_lo}")],
+    );
+
+    let run =
+        |mk: &dyn Fn(usize) -> Box<dyn DynamicScaler>, from: usize, to: usize| -> u64 {
+            let mut s = mk(from);
+            let mut total = 0u64;
+            let step: i64 = if to > from { 1 } else { -1 };
+            let mut k = from as i64;
+            while k != to as i64 {
+                k += step;
+                total += s.scale_to(k as usize);
+            }
+            total
+        };
+
+    let factories: Vec<(&str, Box<dyn Fn(usize) -> Box<dyn DynamicScaler>>)> = vec![
+        ("cep", Box::new(move |k| Box::new(CepScaler::new(m, k)) as Box<dyn DynamicScaler>)),
+        ("bvc", Box::new(move |k| Box::new(BvcScaler::new(m, k, 7)) as Box<dyn DynamicScaler>)),
+        ("1d", Box::new(move |k| Box::new(Hash1dScaler::new(m, k)) as Box<dyn DynamicScaler>)),
+    ];
+    for (name, mk) in &factories {
+        let out = run(mk, k_lo, k_hi);
+        let inn = run(mk, k_hi, k_lo);
+        t.row(vec![name.to_string(), out.to_string(), inn.to_string()]);
+    }
+    // Theorem 2 prediction for the CEP chain (sum of x=1 hops)
+    let mut pred = 0.0;
+    for k in k_lo..k_hi {
+        pred += theory::theorem2_migrated(m as u64, k as u64, 1);
+    }
+    t.row(vec!["cep (Thm 2)".into(), format!("{pred:.0}"), format!("{pred:.0}")]);
+    t.print();
+    println!("paper Fig 13: CEP ~ BVC << 1D (both chunk methods move contiguous ranges)");
+}

@@ -1,0 +1,86 @@
+//! Fig 14 — emulated migration wall time for one ScaleOut step under
+//! varying network bandwidth (1–32 Gbps) and per-edge value size
+//! (0–32 B), for CEP, BVC and 1D.
+//!
+//! Expected shape (paper): CEP and 1D (single shuffle) beat BVC (ring
+//! move + barrier-synchronized balance refinement), even though BVC moves
+//! no more edges than CEP — the synchronization dominates.
+
+use egs::graph::datasets;
+use egs::metrics::table::{secs, Table};
+use egs::partition::bvc::BvcState;
+use egs::partition::cep::Cep;
+use egs::partition::{hash1d, EdgePartition};
+use egs::scaling::migration::MigrationPlan;
+use egs::scaling::network::Network;
+
+fn main() {
+    let g = datasets::by_name("pokec-s", 42).unwrap();
+    let m = g.num_edges();
+    let (from_k, to_k) = (13usize, 14usize);
+
+    // precompute the three migration plans for the same scale step
+    let cep_plan = {
+        let a = EdgePartition::from_cep(&Cep::new(m, from_k));
+        let b = EdgePartition::from_cep(&Cep::new(m, to_k));
+        MigrationPlan::diff(&a, &b)
+    };
+    let (bvc_plan, bvc_stats) = {
+        let mut s = BvcState::build(m, from_k, 7);
+        let before = s.to_partition();
+        let stats = s.scale_to(to_k);
+        (MigrationPlan::diff(&before, &s.to_partition()), stats)
+    };
+    let h1_plan = {
+        let a = hash1d::partition(&g, from_k);
+        let b = hash1d::partition(&g, to_k);
+        // 1d rehash: recompute by hashing edge ids over the new k
+        let a2 = EdgePartition::new(
+            to_k,
+            (0..m as u64).map(|e| hash1d::assign_one(e, from_k)).collect(),
+        );
+        let b2 = EdgePartition::new(
+            to_k,
+            (0..m as u64).map(|e| hash1d::assign_one(e, to_k)).collect(),
+        );
+        let _ = (a, b);
+        MigrationPlan::diff(&a2, &b2)
+    };
+
+    for value_bytes in [0u64, 8, 32] {
+        let mut t = Table::new(
+            &format!(
+                "Fig 14: migration time, {from_k}->{to_k}, value={value_bytes} B/edge (|E|={m})"
+            ),
+            &["bandwidth", "cep", "1d", "bvc"],
+        );
+        for gbps in [1.0f64, 2.0, 4.0, 8.0, 16.0, 32.0] {
+            let net = Network::gbps(gbps);
+            let cep_t = net.migration_time(&cep_plan, to_k, value_bytes);
+            let h1_t = net.migration_time(&h1_plan, to_k, value_bytes);
+            let bvc_t = net.bvc_migration_time(
+                &bvc_plan,
+                bvc_stats.refine_migrated,
+                bvc_stats.refine_rounds,
+                to_k,
+                value_bytes,
+            );
+            t.row(vec![
+                format!("{gbps} Gbps"),
+                secs(cep_t),
+                secs(h1_t),
+                secs(bvc_t),
+            ]);
+        }
+        t.print();
+    }
+    println!(
+        "migrated edges: cep={} 1d={} bvc={} (+{} refine, {} rounds)",
+        cep_plan.migrated_edges(),
+        h1_plan.migrated_edges(),
+        bvc_plan.migrated_edges(),
+        bvc_stats.refine_migrated,
+        bvc_stats.refine_rounds
+    );
+    println!("paper Fig 14: CEP/1D single shuffle beat BVC's multi-barrier refinement");
+}

@@ -1,0 +1,31 @@
+//! Fig 15 — GEO scalability on RMAT graphs: ordering time vs graph size
+//! for several edge factors. Expected: near-linear growth in |E|.
+
+use egs::graph::generators::{rmat, RmatParams};
+use egs::metrics::table::{secs, Table};
+use egs::metrics::timer::once;
+use egs::ordering::geo::{self, GeoConfig};
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 15: GEO scalability on RMAT",
+        &["scale", "edge factor", "|V|", "|E|", "ordering time", "Medges/s"],
+    );
+    for ef in [16usize, 24, 40] {
+        for scale in [12u32, 13, 14, 15] {
+            let g = rmat(&RmatParams { scale, edge_factor: ef, ..Default::default() }, 9);
+            let (_, dt) = once(|| geo::order(&g, &GeoConfig::default()));
+            let meps = g.num_edges() as f64 / dt.as_secs_f64() / 1e6;
+            t.row(vec![
+                scale.to_string(),
+                ef.to_string(),
+                g.num_vertices().to_string(),
+                g.num_edges().to_string(),
+                secs(dt.as_secs_f64()),
+                format!("{meps:.2}"),
+            ]);
+        }
+    }
+    t.print();
+    println!("paper Fig 15: elapsed time grows linearly with |E| at every edge factor");
+}

@@ -1,0 +1,55 @@
+//! Table 6 — application performance on a fixed partition count
+//! (12 here, scaled from the paper's 36): RF/EB/VB quality plus TIME and
+//! COM for SSSP, WCC and PageRank, across 1D, 2D, Oblivious,
+//! Hybrid-Ginger and GEO+CEP.
+//!
+//! Expected shape (paper): GEO+CEP lowest RF ⇒ lowest COM ⇒ fastest,
+//! with perfect EB and slightly worse VB.
+
+use egs::engine::{apps, Engine};
+use egs::graph::datasets;
+use egs::metrics::table::{f2, Table};
+use egs::ordering::geo::{self, GeoConfig};
+use egs::partition::{edge_partition_by_name, quality};
+use egs::runtime::native::NativeBackend;
+
+const K: usize = 12;
+const PR_ITERS: u32 = 20;
+
+fn main() {
+    for dataset in ["orkut-s", "pokec-s"] {
+        let g = datasets::by_name(dataset, 42).unwrap();
+        let ordered = geo::order(&g, &GeoConfig::default()).apply(&g);
+        let mut t = Table::new(
+            &format!("Table 6: apps on {K} partitions, {dataset} (|E|={})", g.num_edges()),
+            &[
+                "method", "RF", "EB", "VB", "sssp s", "sssp MB", "wcc s", "wcc MB",
+                "pr s", "pr MB",
+            ],
+        );
+        for method in ["1d", "2d", "oblivious", "ginger", "cep"] {
+            let input = if method == "cep" { &ordered } else { &g };
+            let part = edge_partition_by_name(method, input, K, 42).unwrap();
+            let q = quality::quality(input, &part);
+            let mut engine =
+                Engine::new(input, &part, |_| Box::new(NativeBackend::new())).unwrap();
+            let sssp = apps::sssp::run(&mut engine, 0, 10_000).unwrap().report;
+            let wcc = apps::wcc::run(&mut engine, 10_000).unwrap().report;
+            let pr = apps::pagerank::run(&mut engine, input, PR_ITERS).unwrap().report;
+            t.row(vec![
+                if method == "cep" { "geo+cep".into() } else { method.to_string() },
+                f2(q.rf),
+                f2(q.eb),
+                f2(q.vb),
+                format!("{:.3}", sssp.time_s),
+                f2(sssp.com_bytes as f64 / 1e6),
+                format!("{:.3}", wcc.time_s),
+                f2(wcc.com_bytes as f64 / 1e6),
+                format!("{:.3}", pr.time_s),
+                f2(pr.com_bytes as f64 / 1e6),
+            ]);
+        }
+        t.print();
+    }
+    println!("paper Table 6: GEO+CEP wins TIME and COM on every app; EB=1.00; VB slightly high");
+}

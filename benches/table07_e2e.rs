@@ -1,0 +1,46 @@
+//! Table 7 — end-to-end PageRank with dynamic scaling: total time (ALL)
+//! and its INIT / APP / SCALE breakdown under the ScaleOut and ScaleIn
+//! scenarios (scaled here to 6→9 / 9→6, one step every 5 iterations),
+//! for 1D, Oblivious, Hybrid-Ginger and GEO+CEP.
+//!
+//! Expected shape (paper): GEO+CEP wins ALL through every component —
+//! INIT (no per-edge pass), APP (lowest RF), SCALE (O(1) repartitioning).
+
+use egs::coordinator::{run_scenario, ControllerConfig};
+use egs::graph::datasets;
+use egs::metrics::table::{secs, Table};
+use egs::ordering::geo::{self, GeoConfig};
+use egs::runtime::native::NativeBackend;
+use egs::scaling::scenario::Scenario;
+
+fn main() {
+    let dataset = "pokec-s";
+    let g = datasets::by_name(dataset, 42).unwrap();
+    let ordered = geo::order(&g, &GeoConfig::default()).apply(&g);
+    let (out_sc, in_sc) = Scenario::paper_pair(6, 9, 5);
+
+    for scenario in [&out_sc, &in_sc] {
+        let mut t = Table::new(
+            &format!("Table 7: PageRank {} on {dataset}", scenario.name),
+            &["method", "ALL", "INIT", "APP", "SCALE", "migrated", "COM MB"],
+        );
+        for method in ["1d", "oblivious", "ginger", "cep"] {
+            let cfg = ControllerConfig { method: method.into(), ..Default::default() };
+            // CEP needs the GEO-ordered list; the others their raw input
+            let input = if method == "cep" { &ordered } else { &g };
+            let out = run_scenario(input, scenario, &cfg, |_| Box::new(NativeBackend::new()))
+                .unwrap();
+            t.row(vec![
+                if method == "cep" { "geo+cep".into() } else { method.into() },
+                secs(out.all_s),
+                secs(out.init_s),
+                secs(out.app_s),
+                secs(out.scale_s),
+                out.migrated_edges.to_string(),
+                format!("{:.2}", out.com_bytes as f64 / 1e6),
+            ]);
+        }
+        t.print();
+    }
+    println!("paper Table 7: GEO+CEP lowest in ALL and in every component");
+}

@@ -1,0 +1,207 @@
+//! **End-to-end driver** (DESIGN.md §5): the full three-layer stack on a
+//! real workload.
+//!
+//! * loads a ~1M-edge synthetic social graph (LiveJournal stand-in),
+//! * GEO-orders it once (the paper's preprocessing),
+//! * boots the PowerLyra-like engine with the **XLA backend** — every
+//!   per-partition superstep executes the AOT-compiled JAX/Pallas
+//!   artifact through the PJRT CPU client (falling back to the native
+//!   backend with a warning if `make artifacts` hasn't run),
+//! * runs PageRank while a spot-instance trace provisions/preempts
+//!   workers (k = 8 → … bounded in [6, 12]),
+//! * rescales with CEP at every event, migrating chunks through the
+//!   emulated 8 Gbps network,
+//! * logs per-epoch RF, repartition time, migrated edges, COM and the
+//!   rank residual; prints the Table 7-style breakdown at the end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example elastic_pagerank
+//! ```
+
+use egs::coordinator::events::{SpotEvent, SpotTrace};
+use egs::engine::{Combine, Engine};
+use egs::graph::datasets;
+use egs::metrics::table::{secs, Table};
+use egs::ordering::geo::{self, GeoConfig};
+use egs::partition::cep::Cep;
+use egs::partition::{quality, EdgePartition};
+use egs::runtime::artifact::Manifest;
+use egs::runtime::executor::XlaBackend;
+use egs::runtime::native::NativeBackend;
+use egs::runtime::{ComputeBackend, StepKind};
+use egs::scaling::migration::MigrationPlan;
+use egs::scaling::network::Network;
+use std::time::Instant;
+
+fn main() -> egs::Result<()> {
+    let t_total = Instant::now();
+
+    // ---------- load + preprocess ----------
+    let t = Instant::now();
+    let g = datasets::by_name("livej-s", 42).expect("dataset");
+    println!(
+        "[load]    livej-s: |V|={} |E|={} ({:?})",
+        g.num_vertices(),
+        g.num_edges(),
+        t.elapsed()
+    );
+    let t = Instant::now();
+    let ordered = geo::order(&g, &GeoConfig::default()).apply(&g);
+    println!("[geo]     ordered {} edges in {:?}", ordered.num_edges(), t.elapsed());
+
+    // ---------- backend: XLA artifacts if available ----------
+    let xla = match Manifest::load(&Manifest::default_dir()) {
+        Ok(m) => Some(XlaBackend::start(m)?),
+        Err(e) => {
+            eprintln!("[warn]    no artifacts ({e}); using native backend");
+            None
+        }
+    };
+    let make_backend = |xla: &Option<XlaBackend>| -> Box<dyn ComputeBackend> {
+        match xla {
+            Some(h) => Box::new(h.clone()),
+            None => Box::new(NativeBackend::new()),
+        }
+    };
+    println!(
+        "[backend] {}",
+        if xla.is_some() { "xla (PJRT CPU, AOT JAX/Pallas artifacts)" } else { "native" }
+    );
+
+    // ---------- initial deployment ----------
+    let n = ordered.num_vertices();
+    let m = ordered.num_edges();
+    let k0 = 8usize;
+    let t = Instant::now();
+    let mut cep = Cep::new(m, k0);
+    let mut part = EdgePartition::from_cep(&cep);
+    let mut engine = Engine::new(&ordered, &part, |_| make_backend(&xla))?;
+    let init_s = t.elapsed().as_secs_f64();
+    println!(
+        "[init]    k={k0} engine up in {} (RF={:.3})",
+        secs(init_s),
+        quality::replication_factor_chunked(&ordered, &cep)
+    );
+
+    // ---------- spot-market trace ----------
+    let total_iters = 60u32;
+    let trace = SpotTrace::generate(k0, 6, 12, total_iters, 6, 7);
+    println!("[trace]   {} spot events over {total_iters} iterations", trace.events.len());
+
+    // ---------- PageRank state ----------
+    let aux: Vec<f32> = (0..n as u32)
+        .map(|v| {
+            let d = ordered.degree(v);
+            if d == 0 {
+                0.0
+            } else {
+                1.0 / d as f32
+            }
+        })
+        .collect();
+    let mut ranks = vec![1.0f32 / n as f32; n];
+    let active = vec![true; n];
+    let base = (1.0 - 0.85) / n as f32;
+    let net = Network::gbps(8.0);
+
+    let mut app_s = 0.0;
+    let mut scale_s = 0.0;
+    let mut total_migrated = 0u64;
+    let mut total_com = 0u64;
+    let mut k = k0;
+    let mut ev_idx = 0usize;
+    let mut log = Table::new(
+        "elastic_pagerank epoch log",
+        &["iter", "event", "k", "RF", "repart", "migrated", "net-time", "residual"],
+    );
+
+    for it in 0..total_iters {
+        // ---- spot event?
+        let mut event_str = "-".to_string();
+        let mut repart = "-".to_string();
+        let mut migrated_str = "-".to_string();
+        let mut nettime = "-".to_string();
+        if ev_idx < trace.events.len() && trace.events[ev_idx].0 == it {
+            let (_, ev) = trace.events[ev_idx];
+            ev_idx += 1;
+            let new_k = match ev {
+                SpotEvent::Provision => k + 1,
+                SpotEvent::Preempt => k - 1,
+            };
+            event_str = format!("{ev:?}");
+            let t = Instant::now();
+            let new_cep = cep.rescaled(new_k); // O(1) — the paper's claim
+            let repart_t = t.elapsed();
+            let new_part = EdgePartition::from_cep(&new_cep);
+            let plan = MigrationPlan::diff(&part, &new_part);
+            let moved = plan.migrated_edges();
+            let net_s = net.migration_time(&plan, k.max(new_k), 8);
+            let t = Instant::now();
+            engine = Engine::new(&ordered, &new_part, |_| make_backend(&xla))?;
+            let rebuild_s = t.elapsed().as_secs_f64();
+            scale_s += repart_t.as_secs_f64() + net_s + rebuild_s;
+            total_migrated += moved;
+            cep = new_cep;
+            part = new_part;
+            k = new_k;
+            repart = format!("{repart_t:?}");
+            migrated_str = moved.to_string();
+            nettime = secs(net_s);
+        }
+
+        // ---- one PageRank iteration
+        let t = Instant::now();
+        engine.comm.reset();
+        let (contrib, _) =
+            engine.superstep(StepKind::PageRank, Combine::Sum, &ranks, &aux, &active)?;
+        let mut residual = 0.0f32;
+        for v in 0..n {
+            let next = base + 0.85 * contrib[v];
+            residual += (next - ranks[v]).abs();
+            ranks[v] = next;
+        }
+        total_com += engine.comm.total_bytes();
+        app_s += t.elapsed().as_secs_f64();
+
+        if event_str != "-" || it % 10 == 0 {
+            log.row(vec![
+                it.to_string(),
+                event_str,
+                k.to_string(),
+                format!("{:.3}", quality::replication_factor_chunked(&ordered, &cep)),
+                repart,
+                migrated_str,
+                nettime,
+                format!("{residual:.2e}"),
+            ]);
+        }
+    }
+    log.print();
+
+    // ---------- Table 7-style breakdown ----------
+    let all = init_s + app_s + scale_s;
+    let mut summary = Table::new(
+        "breakdown (Table 7 analogue)",
+        &["ALL", "INIT", "APP", "SCALE", "migrated", "COM MB", "final k"],
+    );
+    summary.row(vec![
+        secs(all),
+        secs(init_s),
+        secs(app_s),
+        secs(scale_s),
+        total_migrated.to_string(),
+        format!("{:.1}", total_com as f64 / 1e6),
+        k.to_string(),
+    ]);
+    summary.print();
+    let top: f32 = ranks.iter().cloned().fold(0.0, f32::max);
+    println!(
+        "done in {:?}; rank mass {:.6}, max rank {top:.3e}",
+        t_total.elapsed(),
+        ranks.iter().sum::<f32>()
+    );
+    if let Some(h) = xla {
+        h.shutdown();
+    }
+    Ok(())
+}

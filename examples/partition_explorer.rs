@@ -1,0 +1,64 @@
+//! Interactive sweep: any dataset × every partitioner × a k range, with
+//! RF/EB/VB and elapsed time per cell — the workhorse for exploring the
+//! quality/efficiency trade-off space of Table 4's methods.
+//!
+//! ```bash
+//! cargo run --release --example partition_explorer -- \
+//!     --dataset orkut-s --ks 4,16,64 --methods cep,ne,hdrf,1d
+//! ```
+
+use egs::graph::datasets;
+use egs::metrics::table::{f3, Table};
+use egs::metrics::timer::{human_duration, once};
+use egs::ordering::geo::{self, GeoConfig};
+use egs::partition::{edge_partition_by_name, quality, ALL_EDGE_METHODS};
+use egs::util::args::Args;
+
+fn main() -> egs::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let dataset = args.get_or("dataset", "pokec-s");
+    let seed = args.get_parse::<u64>("seed", 42);
+    let ks: Vec<usize> = args
+        .get_list("ks")
+        .unwrap_or_else(|| vec!["4".into(), "16".into(), "64".into()])
+        .iter()
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let methods: Vec<String> = args
+        .get_list("methods")
+        .unwrap_or_else(|| ALL_EDGE_METHODS.iter().map(|s| s.to_string()).collect());
+
+    let g = datasets::by_name(&dataset, seed).expect("unknown dataset; see graph/datasets.rs");
+    println!("{dataset}: |V|={} |E|={}", g.num_vertices(), g.num_edges());
+
+    // CEP consumes the GEO ordering (computed once); others take raw order
+    let (ordering, t_geo) = once(|| geo::order(&g, &GeoConfig { seed, ..Default::default() }));
+    let ordered = ordering.apply(&g);
+    println!("GEO preprocessing: {}", human_duration(t_geo));
+
+    let mut table = Table::new(
+        &format!("partition explorer on {dataset}"),
+        &["method", "k", "RF", "EB", "VB", "time"],
+    );
+    for method in &methods {
+        for &k in &ks {
+            let input = if method == "cep" { &ordered } else { &g };
+            let (part, dt) = once(|| edge_partition_by_name(method, input, k, seed));
+            let Some(part) = part else {
+                eprintln!("skipping unknown method {method}");
+                continue;
+            };
+            let q = quality::quality(input, &part);
+            table.row(vec![
+                method.clone(),
+                k.to_string(),
+                f3(q.rf),
+                f3(q.eb),
+                f3(q.vb),
+                human_duration(dt),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}

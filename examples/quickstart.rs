@@ -1,0 +1,46 @@
+//! Quickstart: order a graph with GEO, slice it with CEP, rescale for
+//! free, and inspect quality — the paper's workflow in ~40 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use egs::graph::datasets;
+use egs::metrics::timer::once;
+use egs::ordering::geo::{self, GeoConfig};
+use egs::partition::cep::Cep;
+use egs::partition::quality;
+
+fn main() -> egs::Result<()> {
+    // 1. load a graph (synthetic Pokec stand-in, ~150k edges)
+    let g = datasets::by_name("pokec-s", 42).expect("dataset");
+    println!("graph: |V|={} |E|={}", g.num_vertices(), g.num_edges());
+
+    // 2. preprocess once: GEO edge ordering (Algorithm 4)
+    let (ordering, t_order) = once(|| geo::order(&g, &GeoConfig::default()));
+    let ordered = ordering.apply(&g);
+    println!("GEO ordering: {:?}", t_order);
+
+    // 3. partition at any k in O(1) — and rescale for free
+    for k in [4usize, 8, 16, 32, 64, 128] {
+        let (cep, t_part) = once(|| Cep::new(ordered.num_edges(), k));
+        let rf = quality::replication_factor_chunked(&ordered, &cep);
+        println!(
+            "  k={k:>3}: partitioning took {t_part:?}, RF={rf:.3}, \
+             chunk sizes {}..{}",
+            (0..k as u32).map(|p| cep.width(p)).min().unwrap(),
+            (0..k as u32).map(|p| cep.width(p)).max().unwrap(),
+        );
+    }
+
+    // 4. dynamic scaling: 8 -> 9 partitions moves ≈ |E|/2 edges (Cor. 1)
+    let from = Cep::new(ordered.num_edges(), 8);
+    let to = from.rescaled(9);
+    let moved = egs::scaling::scaler::migration_between_ceps(&from, &to);
+    println!(
+        "scale 8->9: {moved} of {} edges migrate ({:.1}%)",
+        ordered.num_edges(),
+        100.0 * moved as f64 / ordered.num_edges() as f64
+    );
+    Ok(())
+}

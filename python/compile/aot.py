@@ -1,0 +1,98 @@
+"""AOT lowering: JAX/Pallas model steps -> HLO text artifacts + manifest.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Shapes are frozen per variant; the rust runtime pads each partition's
+buffers up to the smallest variant that fits (`runtime/artifact.rs`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: compiled size variants (vertex capacity, edge capacity). Edge capacity
+#: must be a multiple of the kernel's EDGE_BLOCK (2048) or below one block.
+#: §Perf: the ladder is dense (×2 per rung) because the engine pads every
+#: partition's buffers up to the selected variant — a sparse ladder wasted
+#: up to 8× compute on interpolation gaps (9.74 s → 2.20 s APP time in the
+#: elastic_pagerank driver after densifying; see EXPERIMENTS.md §Perf).
+VARIANTS = [
+    (1024, 16384),
+    (2048, 32768),
+    (4096, 65536),
+    (8192, 131072),
+    (16384, 262144),
+    (32768, 524288),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_app(app: str, vcap: int, ecap: int) -> str:
+    """Lower one app step at one size variant to HLO text."""
+    fn = model.APPS[app]
+    f32v = jax.ShapeDtypeStruct((vcap,), jnp.float32)
+    i32e = jax.ShapeDtypeStruct((ecap,), jnp.int32)
+    f32e = jax.ShapeDtypeStruct((ecap,), jnp.float32)
+    # keep_unused: the rust runtime always feeds the uniform 6-array
+    # signature, so unused inputs (e.g. weight in pagerank) must remain
+    # ENTRY parameters instead of being pruned at trace time
+    lowered = jax.jit(fn, keep_unused=True).lower(f32v, f32v, i32e, i32e, f32e, f32e)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, variants=None, apps=None) -> dict:
+    """Lower every (app, variant) pair and write artifacts + manifest."""
+    variants = variants or VARIANTS
+    apps = apps or sorted(model.APPS)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "variants": []}
+    for vcap, ecap in variants:
+        files = {}
+        for app in apps:
+            fname = f"{app}_v{vcap}_e{ecap}.hlo.txt"
+            text = lower_app(app, vcap, ecap)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            files[app] = fname
+            print(f"  wrote {fname} ({len(text)} chars)")
+        manifest["variants"].append({"vcap": vcap, "ecap": ecap, "files": files})
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['variants'])} variants to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact output directory")
+    p.add_argument("--apps", default=None, help="comma-separated app subset")
+    args = p.parse_args()
+    apps = args.apps.split(",") if args.apps else None
+    build(args.out, apps=apps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""L2 — per-partition superstep compute graphs in JAX.
+
+Each app step takes the uniform 6-array signature the rust runtime feeds
+(`rust/src/runtime/backend.rs`):
+
+    (state f32[V], aux f32[V], src i32[E], dst i32[E],
+     weight f32[E], mask f32[E])  ->  (out f32[V],)
+
+The edge-message gather runs through the L1 Pallas kernel
+(`kernels/edge_ops.py`); the destination combine (segment sum / min) is
+jnp `.at[]` scatter which XLA lowers natively. Shapes are frozen per AOT
+variant by `aot.py`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import edge_ops
+from .kernels.edge_ops import MASKED
+
+
+def pagerank_step(state, aux, src, dst, weight, mask):
+    """Contribution pass: out[v] = Σ_{e:dst=v} state[src]·aux[src]·mask.
+
+    Damping and teleport are applied by the rust coordinator (they are
+    O(V) elementwise and keep the artifact app-agnostic in damping).
+    """
+    del weight
+    msgs = edge_ops.pr_messages(state, aux, src, mask)
+    return (jnp.zeros_like(state).at[dst].add(msgs),)
+
+
+def sssp_step(state, aux, src, dst, weight, mask):
+    """One Bellman-Ford sweep: out[v] = min(state[v], min msgs to v)."""
+    msgs = edge_ops.sssp_messages(state, aux, src, weight, mask)
+    relaxed = jnp.full_like(state, MASKED).at[dst].min(msgs)
+    return (jnp.minimum(state, relaxed),)
+
+
+def wcc_step(state, aux, src, dst, weight, mask):
+    """One label-propagation hop: out[v] = min(state[v], labels to v)."""
+    del weight
+    msgs = edge_ops.wcc_messages(state, aux, src, mask)
+    relaxed = jnp.full_like(state, MASKED).at[dst].min(msgs)
+    return (jnp.minimum(state, relaxed),)
+
+
+#: app name -> step function (the artifact set `aot.py` lowers)
+APPS = {
+    "pagerank": pagerank_step,
+    "sssp": sssp_step,
+    "wcc": wcc_step,
+}

@@ -1,0 +1,20 @@
+"""Shared fixtures: randomized step inputs used across test modules."""
+
+import numpy as np
+import pytest
+
+
+def make_inputs(rng: np.random.Generator, nv: int, ne: int, pad_frac: float = 0.2):
+    """Random padded step inputs mirroring what the rust worker feeds."""
+    state = rng.random(nv, dtype=np.float32)
+    aux = rng.random(nv, dtype=np.float32)
+    src = rng.integers(0, nv, ne).astype(np.int32)
+    dst = rng.integers(0, nv, ne).astype(np.int32)
+    weight = rng.random(ne, dtype=np.float32)
+    mask = (rng.random(ne) > pad_frac).astype(np.float32)
+    return state, aux, src, dst, weight, mask
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xE65)

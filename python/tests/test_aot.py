@@ -1,0 +1,41 @@
+"""AOT pipeline sanity: lowering produces parseable HLO text with the
+expected parameter arity, and the manifest round-trips."""
+
+import json
+import os
+
+from compile import aot, model
+
+
+def test_lower_smallest_variant_has_six_params():
+    text = aot.lower_app("pagerank", 64, 2048)
+    assert "ENTRY" in text
+    # six parameters in the ENTRY computation (sub-computations have their
+    # own parameter(i) lines, so scope to the ENTRY block)
+    entry = text[text.index("ENTRY") :]
+    for i in range(6):
+        assert f"parameter({i})" in entry, f"missing parameter({i}) in ENTRY"
+    assert "f32[64]" in entry
+    assert "s32[2048]" in entry
+
+
+def test_min_apps_lower():
+    for app in model.APPS:
+        text = aot.lower_app(app, 32, 2048)
+        assert "ENTRY" in text, app
+        # min-combine apps must contain a scatter or select chain
+        assert len(text) > 500, app
+
+
+def test_build_writes_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.build(out, variants=[(32, 2048)], apps=["wcc"])
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["version"] == 1
+    v = on_disk["variants"][0]
+    assert v["vcap"] == 32 and v["ecap"] == 2048
+    hlo_path = os.path.join(out, v["files"]["wcc"])
+    assert os.path.exists(hlo_path)
+    assert "ENTRY" in open(hlo_path).read()

@@ -1,0 +1,106 @@
+//! Synthetic spot-instance traces — the motivating scenario of §1: VMs
+//! appear when spare capacity exists and are preempted without warning.
+//! Generated as a seeded Markov chain over capacity so experiments are
+//! reproducible.
+
+use crate::util::rng::Rng;
+
+/// One infrastructure event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpotEvent {
+    /// a VM became available → scale out by one
+    Provision,
+    /// a VM was preempted → scale in by one
+    Preempt,
+}
+
+/// A timed trace of events over application iterations.
+#[derive(Clone, Debug)]
+pub struct SpotTrace {
+    /// `(iteration, event)` pairs, iteration-sorted
+    pub events: Vec<(u32, SpotEvent)>,
+    /// lower bound on cluster size the trace respects
+    pub k_min: usize,
+    /// upper bound
+    pub k_max: usize,
+}
+
+impl SpotTrace {
+    /// Generate a trace: every `period` iterations the market flips a
+    /// biased coin; capacity does a bounded random walk in `[k_min, k_max]`.
+    pub fn generate(
+        k_start: usize,
+        k_min: usize,
+        k_max: usize,
+        total_iters: u32,
+        period: u32,
+        seed: u64,
+    ) -> SpotTrace {
+        assert!(k_min >= 1 && k_min <= k_start && k_start <= k_max);
+        let mut rng = Rng::new(seed);
+        let mut k = k_start;
+        let mut events = Vec::new();
+        let mut it = period;
+        while it < total_iters {
+            // drift towards the middle of the band, as spot markets revert
+            let mid = (k_min + k_max) as f64 / 2.0;
+            let p_up = if (k as f64) < mid { 0.62 } else { 0.38 };
+            if rng.chance(p_up) {
+                if k < k_max {
+                    k += 1;
+                    events.push((it, SpotEvent::Provision));
+                }
+            } else if k > k_min {
+                k -= 1;
+                events.push((it, SpotEvent::Preempt));
+            }
+            it += period;
+        }
+        SpotTrace { events, k_min, k_max }
+    }
+
+    /// Resulting k sequence starting from `k_start` (for tests/plots).
+    pub fn k_sequence(&self, k_start: usize) -> Vec<usize> {
+        let mut k = k_start;
+        let mut out = vec![k];
+        for (_, e) in &self.events {
+            match e {
+                SpotEvent::Provision => k += 1,
+                SpotEvent::Preempt => k -= 1,
+            }
+            out.push(k);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_bounds() {
+        let t = SpotTrace::generate(8, 4, 16, 10_000, 10, 7);
+        for k in t.k_sequence(8) {
+            assert!((4..=16).contains(&k));
+        }
+        assert!(!t.events.is_empty());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = SpotTrace::generate(8, 4, 16, 1000, 10, 1);
+        let b = SpotTrace::generate(8, 4, 16, 1000, 10, 1);
+        assert_eq!(a.events, b.events);
+        let c = SpotTrace::generate(8, 4, 16, 1000, 10, 2);
+        assert_ne!(a.events, c.events);
+    }
+
+    #[test]
+    fn events_are_time_ordered() {
+        let t = SpotTrace::generate(6, 2, 12, 5000, 25, 3);
+        for w in t.events.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! The elastic control plane — the L3 "coordination" layer: reacts to
+//! infrastructure events (spot-instance provisioning/preemption), rescales
+//! the partitioning with the configured method, migrates data through the
+//! emulated network, and keeps the application running across epochs.
+
+pub mod controller;
+pub mod events;
+pub mod provisioner;
+pub mod state;
+
+pub use controller::{run_scenario, ControllerConfig, RunBreakdown};

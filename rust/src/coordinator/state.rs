@@ -1,0 +1,79 @@
+//! Cluster state tracking: epochs, partition-map versions and an audit
+//! log of every scaling action (what a production control plane would
+//! persist for observability).
+
+use std::time::Duration;
+
+/// One completed scaling action.
+#[derive(Clone, Debug)]
+pub struct ScaleRecord {
+    /// epoch after the action
+    pub epoch: u64,
+    /// partition count before
+    pub from_k: usize,
+    /// partition count after
+    pub to_k: usize,
+    /// edges migrated
+    pub migrated_edges: u64,
+    /// wall/emulated duration of the whole action
+    pub duration: Duration,
+}
+
+/// Mutable cluster state.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    /// monotonically increasing partition-map version
+    pub epoch: u64,
+    /// current partition count
+    pub k: usize,
+    /// audit log
+    pub history: Vec<ScaleRecord>,
+}
+
+impl ClusterState {
+    /// Fresh cluster at `k` partitions, epoch 0.
+    pub fn new(k: usize) -> ClusterState {
+        ClusterState { epoch: 0, k, history: Vec::new() }
+    }
+
+    /// Record a completed scale action and bump the epoch.
+    pub fn record_scale(&mut self, to_k: usize, migrated: u64, duration: Duration) {
+        self.epoch += 1;
+        self.history.push(ScaleRecord {
+            epoch: self.epoch,
+            from_k: self.k,
+            to_k,
+            migrated_edges: migrated,
+            duration,
+        });
+        self.k = to_k;
+    }
+
+    /// Total migrated edges across the run.
+    pub fn total_migrated(&self) -> u64 {
+        self.history.iter().map(|r| r.migrated_edges).sum()
+    }
+
+    /// Total time spent scaling.
+    pub fn total_scale_time(&self) -> Duration {
+        self.history.iter().map(|r| r.duration).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epochs_and_totals() {
+        let mut s = ClusterState::new(4);
+        s.record_scale(5, 1000, Duration::from_millis(10));
+        s.record_scale(6, 2000, Duration::from_millis(20));
+        assert_eq!(s.epoch, 2);
+        assert_eq!(s.k, 6);
+        assert_eq!(s.total_migrated(), 3000);
+        assert_eq!(s.total_scale_time(), Duration::from_millis(30));
+        assert_eq!(s.history[0].from_k, 4);
+        assert_eq!(s.history[1].from_k, 5);
+    }
+}

@@ -1,0 +1,26 @@
+//! The three benchmark applications of §6.4, with the workload spread the
+//! paper uses: SSSP (lightest), WCC (middle), PageRank (heaviest).
+
+pub mod pagerank;
+pub mod sssp;
+pub mod wcc;
+
+/// Common run report: elapsed compute time and communication volume.
+#[derive(Clone, Debug)]
+pub struct AppReport {
+    /// app name
+    pub app: &'static str,
+    /// supersteps executed
+    pub iterations: u32,
+    /// wall-clock seconds of the app loop (TIME in Table 6)
+    pub time_s: f64,
+    /// metered communication bytes (COM in Table 6)
+    pub com_bytes: u64,
+}
+
+impl AppReport {
+    /// COM in gigabytes, the unit Table 6 reports.
+    pub fn com_gb(&self) -> f64 {
+        self.com_bytes as f64 / 1e9
+    }
+}

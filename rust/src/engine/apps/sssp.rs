@@ -1,0 +1,104 @@
+//! Single-source shortest paths (hop distance on unweighted graphs):
+//! Bellman-Ford relaxation sweeps until no distance improves. The paper's
+//! lightest workload — only the expanding frontier communicates.
+
+use super::AppReport;
+use crate::engine::{Combine, Engine};
+use crate::runtime::StepKind;
+use crate::Result;
+use crate::VertexId;
+
+/// Result of an SSSP run.
+#[derive(Clone, Debug)]
+pub struct SsspResult {
+    /// final distances (`f32::INFINITY` = unreachable)
+    pub dist: Vec<f32>,
+    /// reached vertex count
+    pub reached: usize,
+    /// report
+    pub report: AppReport,
+}
+
+/// Run SSSP from `source` (the paper uses vertex 0).
+pub fn run(engine: &mut Engine, source: VertexId, max_iters: u32) -> Result<SsspResult> {
+    let n = engine.layout().num_vertices();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    let mut active = vec![false; n];
+    active[source as usize] = true;
+    let aux = vec![0.0f32; n];
+    engine.comm.reset();
+    let t0 = std::time::Instant::now();
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        iters += 1;
+        let (next, changed) =
+            engine.superstep(StepKind::Sssp, Combine::Min, &dist, &aux, &active)?;
+        let any = changed.iter().any(|&c| c);
+        dist = next;
+        active = changed;
+        if !any {
+            break;
+        }
+    }
+    let time_s = t0.elapsed().as_secs_f64();
+    let reached = dist.iter().filter(|d| d.is_finite()).count();
+    Ok(SsspResult {
+        dist,
+        reached,
+        report: AppReport {
+            app: "sssp",
+            iterations: iters,
+            time_s,
+            com_bytes: engine.comm.total_bytes(),
+        },
+    })
+}
+
+/// Reference BFS distances (oracle).
+pub fn reference(g: &crate::graph::Graph, source: VertexId) -> Vec<f32> {
+    let n = g.num_vertices();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    let mut queue = std::collections::VecDeque::from([source]);
+    while let Some(v) = queue.pop_front() {
+        for (u, _) in g.neighbors(v) {
+            if dist[u as usize].is_infinite() {
+                dist[u as usize] = dist[v as usize] + 1.0;
+                queue.push_back(u);
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Engine;
+    use crate::graph::generators::erdos_renyi;
+    use crate::partition::{cep::Cep, EdgePartition};
+    use crate::runtime::native::NativeBackend;
+
+    #[test]
+    fn matches_bfs_reference() {
+        let g = erdos_renyi(150, 500, 9);
+        let oracle = reference(&g, 0);
+        for k in [1usize, 4] {
+            let part = EdgePartition::from_cep(&Cep::new(g.num_edges(), k));
+            let mut e = Engine::new(&g, &part, |_| Box::new(NativeBackend::new())).unwrap();
+            let out = run(&mut e, 0, 1000).unwrap();
+            assert_eq!(out.dist, oracle, "k={k}");
+        }
+    }
+
+    #[test]
+    fn terminates_before_max_iters() {
+        let g = erdos_renyi(100, 400, 10);
+        let part = EdgePartition::from_cep(&Cep::new(g.num_edges(), 4));
+        let mut e = Engine::new(&g, &part, |_| Box::new(NativeBackend::new())).unwrap();
+        let out = run(&mut e, 0, 1000).unwrap();
+        assert!(out.report.iterations < 100, "iters={}", out.report.iterations);
+        assert!(out.reached > 1);
+    }
+}

@@ -1,0 +1,93 @@
+//! Communication metering — the COM column of Table 6: every byte that
+//! would cross the network in a real deployment (master→mirror scatter,
+//! mirror→master gather) is recorded here.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread-safe byte/message counters.
+#[derive(Debug, Default)]
+pub struct CommMeter {
+    scatter_bytes: AtomicU64,
+    gather_bytes: AtomicU64,
+    messages: AtomicU64,
+}
+
+impl CommMeter {
+    /// Fresh meter.
+    pub fn new() -> CommMeter {
+        CommMeter::default()
+    }
+
+    /// Record a master→mirror transfer.
+    pub fn record_scatter(&self, bytes: u64) {
+        self.scatter_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a mirror→master transfer.
+    pub fn record_gather(&self, bytes: u64) {
+        self.gather_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total bytes both directions.
+    pub fn total_bytes(&self) -> u64 {
+        self.scatter_bytes.load(Ordering::Relaxed) + self.gather_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Scatter-direction bytes.
+    pub fn scatter(&self) -> u64 {
+        self.scatter_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Gather-direction bytes.
+    pub fn gather(&self) -> u64 {
+        self.gather_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Message count.
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    /// Reset all counters (between app runs).
+    pub fn reset(&self) {
+        self.scatter_bytes.store(0, Ordering::Relaxed);
+        self.gather_bytes.store(0, Ordering::Relaxed);
+        self.messages.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_resets() {
+        let m = CommMeter::new();
+        m.record_scatter(100);
+        m.record_gather(50);
+        assert_eq!(m.total_bytes(), 150);
+        assert_eq!(m.scatter(), 100);
+        assert_eq!(m.gather(), 50);
+        assert_eq!(m.messages(), 2);
+        m.reset();
+        assert_eq!(m.total_bytes(), 0);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(CommMeter::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.record_scatter(1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.scatter(), 4000);
+    }
+}

@@ -1,0 +1,184 @@
+//! Vertex master/mirror placement over an edge partitioning.
+//!
+//! In a vertex-cut engine every partition materializes the vertices of its
+//! edges; one replica per vertex is the **master** (owner of the canonical
+//! value), the rest are mirrors. Masters are placed on the replica
+//! partition chosen by a degree-independent hash, which balances master
+//! counts across partitions (PowerGraph's strategy).
+
+use crate::graph::Graph;
+use crate::partition::EdgePartition;
+use crate::util::rng::mix64;
+use crate::VertexId;
+
+/// Immutable layout: per-partition vertex sets, local edge endpoints and
+/// the global master assignment.
+pub struct PartitionLayout {
+    k: usize,
+    n: usize,
+    /// sorted global vertex ids present in each partition
+    vertices: Vec<Vec<VertexId>>,
+    /// per-partition directed edge endpoints in local indices (both
+    /// directions of each undirected edge)
+    local_src: Vec<Vec<i32>>,
+    local_dst: Vec<Vec<i32>>,
+    /// master partition per vertex (u32::MAX for isolated vertices)
+    master: Vec<u32>,
+    /// number of replicas per vertex
+    replicas: Vec<u32>,
+}
+
+impl PartitionLayout {
+    /// Build the layout for `(g, part)`.
+    pub fn build(g: &Graph, part: &EdgePartition) -> PartitionLayout {
+        let k = part.k;
+        let n = g.num_vertices();
+        // collect vertex sets
+        let mut present: Vec<std::collections::BTreeSet<VertexId>> =
+            vec![Default::default(); k];
+        for (eid, e) in g.edges().iter().enumerate() {
+            let p = part.assign[eid] as usize;
+            present[p].insert(e.u);
+            present[p].insert(e.v);
+        }
+        let vertices: Vec<Vec<VertexId>> =
+            present.into_iter().map(|s| s.into_iter().collect()).collect();
+
+        // master per vertex: hash-pick among its replica partitions
+        let mut replica_parts: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (p, vs) in vertices.iter().enumerate() {
+            for &v in vs {
+                replica_parts[v as usize].push(p as u32);
+            }
+        }
+        let mut master = vec![u32::MAX; n];
+        let mut replicas = vec![0u32; n];
+        for v in 0..n {
+            let parts = &replica_parts[v];
+            replicas[v] = parts.len() as u32;
+            if !parts.is_empty() {
+                master[v] = parts[(mix64(v as u64) % parts.len() as u64) as usize];
+            }
+        }
+
+        // local edge arrays (both directions)
+        let mut local_src: Vec<Vec<i32>> = vec![Vec::new(); k];
+        let mut local_dst: Vec<Vec<i32>> = vec![Vec::new(); k];
+        // local index lookup per partition
+        let lindex: Vec<std::collections::HashMap<VertexId, i32>> = vertices
+            .iter()
+            .map(|vs| {
+                vs.iter().enumerate().map(|(i, &v)| (v, i as i32)).collect()
+            })
+            .collect();
+        for (eid, e) in g.edges().iter().enumerate() {
+            let p = part.assign[eid] as usize;
+            let lu = lindex[p][&e.u];
+            let lv = lindex[p][&e.v];
+            local_src[p].push(lu);
+            local_dst[p].push(lv);
+            local_src[p].push(lv);
+            local_dst[p].push(lu);
+        }
+
+        PartitionLayout { k, n, vertices, local_src, local_dst, master, replicas }
+    }
+
+    /// Number of partitions.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of global vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Sorted global vertices of partition `p`.
+    pub fn vertices_of(&self, p: usize) -> &[VertexId] {
+        &self.vertices[p]
+    }
+
+    /// Local directed source endpoints of partition `p`.
+    pub fn src_of(&self, p: usize) -> &[i32] {
+        &self.local_src[p]
+    }
+
+    /// Local directed destination endpoints of partition `p`.
+    pub fn dst_of(&self, p: usize) -> &[i32] {
+        &self.local_dst[p]
+    }
+
+    /// Master partition of vertex `v`.
+    pub fn master_of(&self, v: VertexId) -> u32 {
+        self.master[v as usize]
+    }
+
+    /// Replica count of vertex `v`.
+    pub fn replicas_of(&self, v: VertexId) -> u32 {
+        self.replicas[v as usize]
+    }
+
+    /// Replication factor implied by the layout (cross-check with
+    /// [`crate::partition::quality::replication_factor`]).
+    pub fn rf(&self) -> f64 {
+        self.replicas.iter().map(|&r| r as u64).sum::<u64>() as f64 / self.n as f64
+    }
+
+    /// Total mirrors (replicas beyond the master).
+    pub fn num_mirrors(&self) -> u64 {
+        self.replicas.iter().map(|&r| (r.max(1) - 1) as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::erdos_renyi;
+    use crate::partition::quality::replication_factor;
+    use crate::partition::{cep::Cep, EdgePartition};
+
+    #[test]
+    fn masters_are_replica_partitions() {
+        let g = erdos_renyi(100, 400, 1);
+        let part = EdgePartition::from_cep(&Cep::new(g.num_edges(), 5));
+        let l = PartitionLayout::build(&g, &part);
+        for v in 0..g.num_vertices() as VertexId {
+            let m = l.master_of(v);
+            assert!(l.vertices_of(m as usize).binary_search(&v).is_ok());
+        }
+    }
+
+    #[test]
+    fn rf_matches_quality_metric() {
+        let g = erdos_renyi(120, 600, 2);
+        let part = EdgePartition::from_cep(&Cep::new(g.num_edges(), 7));
+        let l = PartitionLayout::build(&g, &part);
+        let rf = replication_factor(&g, &part);
+        assert!((l.rf() - rf).abs() < 1e-9);
+    }
+
+    #[test]
+    fn both_directions_materialized() {
+        let g = GraphBuilder::new().edge(0, 1).build();
+        let part = EdgePartition::new(1, vec![0]);
+        let l = PartitionLayout::build(&g, &part);
+        assert_eq!(l.src_of(0).len(), 2);
+        assert_eq!(l.src_of(0), &[0, 1]);
+        assert_eq!(l.dst_of(0), &[1, 0]);
+    }
+
+    #[test]
+    fn mirror_count_consistency() {
+        let g = erdos_renyi(80, 300, 3);
+        let part = EdgePartition::from_cep(&Cep::new(g.num_edges(), 4));
+        let l = PartitionLayout::build(&g, &part);
+        let total_replicas: u64 =
+            (0..4).map(|p| l.vertices_of(p).len() as u64).sum();
+        let masters = (0..g.num_vertices() as VertexId)
+            .filter(|&v| l.master_of(v) != u32::MAX)
+            .count() as u64;
+        assert_eq!(l.num_mirrors(), total_replicas - masters);
+    }
+}

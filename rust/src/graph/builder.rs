@@ -1,0 +1,129 @@
+//! Graph construction with invariant enforcement (dedup, self-loop
+//! removal, dense vertex ids).
+
+use super::csr::Csr;
+use super::edgelist::{Edge, EdgeList};
+use super::Graph;
+use crate::VertexId;
+use std::collections::HashSet;
+
+/// Builder accumulating raw (possibly messy) edges.
+#[derive(Default)]
+pub struct GraphBuilder {
+    raw: Vec<(VertexId, VertexId)>,
+    max_vertex: VertexId,
+}
+
+impl GraphBuilder {
+    /// Fresh builder.
+    pub fn new() -> GraphBuilder {
+        GraphBuilder::default()
+    }
+
+    /// Add an edge (self loops silently dropped; duplicates deduped at
+    /// build time). Returns `self` for chaining.
+    pub fn edge(mut self, u: VertexId, v: VertexId) -> GraphBuilder {
+        self.push(u, v);
+        self
+    }
+
+    /// Add an edge (by reference flavour for loops).
+    pub fn push(&mut self, u: VertexId, v: VertexId) {
+        self.max_vertex = self.max_vertex.max(u).max(v);
+        self.raw.push((u, v));
+    }
+
+    /// Number of raw edges accumulated so far.
+    pub fn raw_len(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// Finalize: dedup, drop self loops, keep vertex ids as given
+    /// (`0..=max_vertex`), build CSR.
+    pub fn build(self) -> Graph {
+        let n = if self.raw.is_empty() { 0 } else { self.max_vertex as usize + 1 };
+        let mut seen: HashSet<(VertexId, VertexId)> = HashSet::with_capacity(self.raw.len());
+        let mut edges = Vec::with_capacity(self.raw.len());
+        for (u, v) in self.raw {
+            if u == v {
+                continue;
+            }
+            let key = Edge::new(u, v).canonical();
+            if seen.insert(key) {
+                edges.push(Edge::new(u, v));
+            }
+        }
+        let el = EdgeList::from_vec(edges);
+        let csr = Csr::build(n, &el);
+        Graph::from_parts(el, csr)
+    }
+
+    /// Finalize and additionally **compact** vertex ids so that only
+    /// vertices with at least one edge get ids (`0..|V(E)|`). Generators
+    /// that sample sparse id spaces use this.
+    pub fn build_compacted(self) -> Graph {
+        let mut seen: HashSet<(VertexId, VertexId)> = HashSet::with_capacity(self.raw.len());
+        let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(self.raw.len());
+        for (u, v) in self.raw {
+            if u == v {
+                continue;
+            }
+            let key = Edge::new(u, v).canonical();
+            if seen.insert(key) {
+                edges.push((u, v));
+            }
+        }
+        // dense remap in first-seen order
+        let mut remap: std::collections::HashMap<VertexId, VertexId> = Default::default();
+        let mut next: VertexId = 0;
+        let mut mapped = Vec::with_capacity(edges.len());
+        for (u, v) in edges {
+            let mu = *remap.entry(u).or_insert_with(|| {
+                let x = next;
+                next += 1;
+                x
+            });
+            let mv = *remap.entry(v).or_insert_with(|| {
+                let x = next;
+                next += 1;
+                x
+            });
+            mapped.push(Edge::new(mu, mv));
+        }
+        let el = EdgeList::from_vec(mapped);
+        let csr = Csr::build(next as usize, &el);
+        Graph::from_parts(el, csr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = GraphBuilder::new()
+            .edge(0, 1)
+            .edge(1, 0) // dup (reversed)
+            .edge(0, 1) // dup
+            .edge(2, 2) // self loop
+            .edge(1, 2)
+            .build();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.num_vertices(), 3);
+    }
+
+    #[test]
+    fn compaction_densifies_ids() {
+        let g = GraphBuilder::new().edge(100, 7).edge(7, 55).build_compacted();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new().build();
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Compressed sparse row adjacency over an [`EdgeList`].
+//!
+//! Each undirected edge appears in both endpoints' adjacency rows, tagged
+//! with its edge id so that ordering algorithms can mark edges as assigned.
+
+use super::edgelist::EdgeList;
+use crate::{EdgeId, VertexId};
+
+/// CSR adjacency: `offsets[v]..offsets[v+1]` indexes into parallel arrays
+/// `nbr` (neighbour vertex) and `eid` (edge id in the edge list).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    offsets: Vec<u64>,
+    nbr: Vec<VertexId>,
+    eid: Vec<EdgeId>,
+}
+
+impl Csr {
+    /// Build from an edge list over `n` vertices (two passes, O(|V|+|E|)).
+    pub fn build(n: usize, edges: &EdgeList) -> Csr {
+        let mut counts = vec![0u64; n + 1];
+        for e in edges.iter() {
+            counts[e.u as usize + 1] += 1;
+            counts[e.v as usize + 1] += 1;
+        }
+        for i in 1..=n {
+            counts[i] += counts[i - 1];
+        }
+        let offsets = counts.clone();
+        let m2 = *offsets.last().unwrap_or(&0) as usize;
+        let mut nbr = vec![0 as VertexId; m2];
+        let mut eid = vec![0 as EdgeId; m2];
+        let mut cursor = offsets.clone();
+        for (id, e) in edges.iter().enumerate() {
+            let cu = cursor[e.u as usize] as usize;
+            nbr[cu] = e.v;
+            eid[cu] = id as EdgeId;
+            cursor[e.u as usize] += 1;
+            let cv = cursor[e.v as usize] as usize;
+            nbr[cv] = e.u;
+            eid[cv] = id as EdgeId;
+            cursor[e.v as usize] += 1;
+        }
+        // Sort each row by neighbour id for deterministic traversal order
+        // (the paper: "each neighbor edge is accessed in ascending order of
+        // the destination vertex id").
+        let mut csr = Csr { offsets, nbr, eid };
+        csr.sort_rows();
+        csr
+    }
+
+    fn sort_rows(&mut self) {
+        for v in 0..self.num_vertices() {
+            let lo = self.offsets[v] as usize;
+            let hi = self.offsets[v + 1] as usize;
+            // sort (nbr, eid) jointly by nbr then eid
+            let mut row: Vec<(VertexId, EdgeId)> = (lo..hi)
+                .map(|i| (self.nbr[i], self.eid[i]))
+                .collect();
+            row.sort_unstable();
+            for (off, (n, e)) in row.into_iter().enumerate() {
+                self.nbr[lo + off] = n;
+                self.eid[lo + off] = e;
+            }
+        }
+    }
+
+    /// Number of vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Iterate `(neighbour, edge id)` in ascending neighbour order.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> impl Iterator<Item = (VertexId, EdgeId)> + '_ {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        (lo..hi).map(move |i| (self.nbr[i], self.eid[i]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::edgelist::Edge;
+
+    fn small() -> (usize, EdgeList) {
+        // triangle 0-1-2 plus pendant 3 on 2
+        (
+            4,
+            EdgeList::from_vec(vec![
+                Edge::new(0, 1),
+                Edge::new(1, 2),
+                Edge::new(2, 0),
+                Edge::new(2, 3),
+            ]),
+        )
+    }
+
+    #[test]
+    fn degrees() {
+        let (n, el) = small();
+        let csr = Csr::build(n, &el);
+        assert_eq!(csr.degree(0), 2);
+        assert_eq!(csr.degree(1), 2);
+        assert_eq!(csr.degree(2), 3);
+        assert_eq!(csr.degree(3), 1);
+    }
+
+    #[test]
+    fn neighbors_sorted_with_edge_ids() {
+        let (n, el) = small();
+        let csr = Csr::build(n, &el);
+        let nb: Vec<_> = csr.neighbors(2).collect();
+        assert_eq!(nb, vec![(0, 2), (1, 1), (3, 3)]);
+    }
+
+    #[test]
+    fn isolated_vertices_allowed() {
+        let el = EdgeList::from_vec(vec![Edge::new(0, 1)]);
+        let csr = Csr::build(5, &el);
+        assert_eq!(csr.degree(4), 0);
+        assert_eq!(csr.neighbors(3).count(), 0);
+    }
+
+    #[test]
+    fn total_adjacency_is_twice_edges() {
+        let (n, el) = small();
+        let csr = Csr::build(n, &el);
+        let total: usize = (0..n as VertexId).map(|v| csr.degree(v)).sum();
+        assert_eq!(total, 2 * el.len());
+    }
+}

@@ -1,0 +1,110 @@
+//! Flat edge-list storage.
+
+use crate::VertexId;
+
+/// A single undirected edge `{u, v}` stored as an ordered pair for
+/// determinism (`u <= v` is *not* required: generators may emit either
+/// orientation; deduplication canonicalizes before insertion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Edge {
+    /// one endpoint
+    pub u: VertexId,
+    /// the other endpoint
+    pub v: VertexId,
+}
+
+impl Edge {
+    /// Construct an edge.
+    #[inline]
+    pub fn new(u: VertexId, v: VertexId) -> Edge {
+        Edge { u, v }
+    }
+
+    /// Canonical orientation (`min, max`) — used for dedup keys.
+    #[inline]
+    pub fn canonical(self) -> (VertexId, VertexId) {
+        if self.u <= self.v {
+            (self.u, self.v)
+        } else {
+            (self.v, self.u)
+        }
+    }
+
+    /// The endpoint that is not `x` (panics if `x` is not an endpoint).
+    #[inline]
+    pub fn other(self, x: VertexId) -> VertexId {
+        if self.u == x {
+            self.v
+        } else {
+            debug_assert_eq!(self.v, x);
+            self.u
+        }
+    }
+}
+
+/// Contiguous edge array. Positions in this array *are* the edge ids the
+/// rest of the crate uses; an "ordering" is a permutation of this array.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeList {
+    edges: Vec<Edge>,
+}
+
+impl EdgeList {
+    /// Wrap a vector of edges.
+    pub fn from_vec(edges: Vec<Edge>) -> EdgeList {
+        EdgeList { edges }
+    }
+
+    /// Number of edges.
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Iterate edges in id order.
+    pub fn iter(&self) -> std::slice::Iter<'_, Edge> {
+        self.edges.iter()
+    }
+
+    /// Raw slice.
+    pub fn as_slice(&self) -> &[Edge] {
+        &self.edges
+    }
+}
+
+impl std::ops::Index<usize> for EdgeList {
+    type Output = Edge;
+    #[inline]
+    fn index(&self, i: usize) -> &Edge {
+        &self.edges[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_orders_endpoints() {
+        assert_eq!(Edge::new(5, 2).canonical(), (2, 5));
+        assert_eq!(Edge::new(2, 5).canonical(), (2, 5));
+    }
+
+    #[test]
+    fn other_endpoint() {
+        let e = Edge::new(3, 7);
+        assert_eq!(e.other(3), 7);
+        assert_eq!(e.other(7), 3);
+    }
+
+    #[test]
+    fn indexing() {
+        let el = EdgeList::from_vec(vec![Edge::new(0, 1), Edge::new(1, 2)]);
+        assert_eq!(el.len(), 2);
+        assert_eq!(el[1], Edge::new(1, 2));
+    }
+}

@@ -1,0 +1,47 @@
+//! 2-D lattice ("road network") generator — the non-skewed stand-in for
+//! Road-CA: bounded degree (≤4), long diameter, strong spatial locality.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+use crate::VertexId;
+
+/// `rows × cols` grid with 4-neighbour connectivity. `drop_prob` removes a
+/// fraction of edges at random (road networks are not perfect grids); the
+/// graph may then have isolated vertices, which are compacted away.
+pub fn lattice2d(rows: usize, cols: usize, drop_prob: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new();
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols && !rng.chance(drop_prob) {
+                b.push(id(r, c), id(r, c + 1));
+            }
+            if r + 1 < rows && !rng.chance(drop_prob) {
+                b.push(id(r, c), id(r + 1, c));
+            }
+        }
+    }
+    b.build_compacted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_grid_counts() {
+        let g = lattice2d(10, 10, 0.0, 1);
+        assert_eq!(g.num_vertices(), 100);
+        assert_eq!(g.num_edges(), 2 * 10 * 9);
+        assert!(g.max_degree() <= 4);
+    }
+
+    #[test]
+    fn dropping_reduces_edges() {
+        let g = lattice2d(20, 20, 0.3, 2);
+        assert!(g.num_edges() < 2 * 20 * 19);
+        assert!(g.num_edges() > (2.0 * 20.0 * 19.0 * 0.5) as usize);
+    }
+}

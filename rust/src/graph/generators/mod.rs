@@ -1,0 +1,17 @@
+//! Synthetic graph generators.
+//!
+//! These stand in for the paper's SNAP/KONECT datasets (unavailable in this
+//! offline image; see DESIGN.md §3): RMAT reproduces the skewed
+//! degree-distribution + community structure of the social graphs, the 2-D
+//! lattice reproduces the non-skewed Road-CA, Erdős–Rényi and
+//! Barabási–Albert provide controlled extremes for tests and ablations.
+
+pub mod ba;
+pub mod erdos;
+pub mod lattice;
+pub mod rmat;
+
+pub use ba::barabasi_albert;
+pub use erdos::erdos_renyi;
+pub use lattice::lattice2d;
+pub use rmat::{rmat, RmatParams};

@@ -1,0 +1,141 @@
+//! Graph and ordering IO.
+//!
+//! Two formats:
+//! * **text edge list** — `u v` per line, `#` comments (SNAP-compatible),
+//!   for interoperability;
+//! * **binary ordered edge list** (`.egs`) — the artifact the paper's
+//!   pipeline persists after GEO so that CEP can `O(1)`-slice it straight
+//!   from storage (little-endian `u32` magic/version/|V|, `u64` |E|, then
+//!   `u32` pairs).
+
+use super::builder::GraphBuilder;
+use super::Graph;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: u32 = 0x4547_5331; // "EGS1"
+
+/// Load a SNAP-style text edge list.
+pub fn load_text(path: &Path) -> Result<Graph> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut b = GraphBuilder::new();
+    for (ln, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: u32 = it.next().context("missing u")?.parse().with_context(|| format!("line {}", ln + 1))?;
+        let v: u32 = it.next().context("missing v")?.parse().with_context(|| format!("line {}", ln + 1))?;
+        b.push(u, v);
+    }
+    Ok(b.build_compacted())
+}
+
+/// Save as text edge list.
+pub fn save_text(g: &Graph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# egs edge list |V|={} |E|={}", g.num_vertices(), g.num_edges())?;
+    for e in g.edges().iter() {
+        writeln!(w, "{} {}", e.u, e.v)?;
+    }
+    Ok(())
+}
+
+/// Save the (ordered) edge list in the binary `.egs` format.
+pub fn save_binary(g: &Graph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&1u32.to_le_bytes())?; // version
+    w.write_all(&(g.num_vertices() as u32).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    let mut buf = Vec::with_capacity(g.num_edges() * 8);
+    for e in g.edges().iter() {
+        buf.extend_from_slice(&e.u.to_le_bytes());
+        buf.extend_from_slice(&e.v.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Load a binary `.egs` file.
+pub fn load_binary(path: &Path) -> Result<Graph> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut hdr = [0u8; 20];
+    f.read_exact(&mut hdr)?;
+    let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("not an egs file: bad magic {magic:#x}");
+    }
+    let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+    if version != 1 {
+        bail!("unsupported egs version {version}");
+    }
+    let _nv = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+    let ne = u64::from_le_bytes(hdr[12..20].try_into().unwrap()) as usize;
+    let mut buf = vec![0u8; ne * 8];
+    f.read_exact(&mut buf)?;
+    let mut b = GraphBuilder::new();
+    for c in buf.chunks_exact(8) {
+        let u = u32::from_le_bytes(c[0..4].try_into().unwrap());
+        let v = u32::from_le_bytes(c[4..8].try_into().unwrap());
+        b.push(u, v);
+    }
+    Ok(b.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("egs_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn text_round_trip() {
+        let g = erdos_renyi(100, 300, 1);
+        let p = tmp("t.txt");
+        save_text(&g, &p).unwrap();
+        let h = load_text(&p).unwrap();
+        assert_eq!(g.num_edges(), h.num_edges());
+        assert_eq!(g.num_vertices(), h.num_vertices());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_round_trip_preserves_order() {
+        let g = erdos_renyi(100, 300, 2);
+        let p = tmp("t.egs");
+        save_binary(&g, &p).unwrap();
+        let h = load_binary(&p).unwrap();
+        // binary format must preserve the edge ORDER (it is the CEP input)
+        assert_eq!(g.edges().as_slice(), h.edges().as_slice());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.egs");
+        std::fs::write(&p, b"this is not an egs file at all....").unwrap();
+        assert!(load_binary(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn text_skips_comments() {
+        let p = tmp("c.txt");
+        std::fs::write(&p, "# header\n0 1\n% other\n1 2\n\n").unwrap();
+        let g = load_text(&p).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+}

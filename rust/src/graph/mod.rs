@@ -1,0 +1,112 @@
+//! Graph substrate: edge-list / CSR storage, synthetic generators,
+//! dataset registry, IO and degree statistics.
+//!
+//! The whole crate operates on *undirected, unweighted* graphs stored as an
+//! explicit edge list (the object GEO orders and CEP slices) plus an
+//! adjacency index ([`csr::Csr`]) for neighbourhood queries.
+
+pub mod builder;
+pub mod csr;
+pub mod datasets;
+pub mod edgelist;
+pub mod generators;
+pub mod io;
+pub mod stats;
+
+pub use csr::Csr;
+pub use edgelist::{Edge, EdgeList};
+
+use crate::VertexId;
+
+/// An undirected graph: canonical edge list + CSR adjacency.
+///
+/// Invariants maintained by [`builder::GraphBuilder`]:
+/// * vertex ids are dense `0..num_vertices`
+/// * no self loops, no duplicate edges (in either direction)
+#[derive(Clone, Debug)]
+pub struct Graph {
+    edges: EdgeList,
+    csr: Csr,
+}
+
+impl Graph {
+    /// Assemble from parts (used by the builder; not public API).
+    pub(crate) fn from_parts(edges: EdgeList, csr: Csr) -> Graph {
+        Graph { edges, csr }
+    }
+
+    /// Number of vertices `|V|`.
+    pub fn num_vertices(&self) -> usize {
+        self.csr.num_vertices()
+    }
+
+    /// Number of undirected edges `|E|`.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// The canonical edge list.
+    pub fn edges(&self) -> &EdgeList {
+        &self.edges
+    }
+
+    /// Adjacency index.
+    pub fn csr(&self) -> &Csr {
+        &self.csr
+    }
+
+    /// Degree of `v`.
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.csr.degree(v)
+    }
+
+    /// Neighbour iterator: `(neighbour, edge id)` pairs.
+    pub fn neighbors(&self, v: VertexId) -> impl Iterator<Item = (VertexId, crate::EdgeId)> + '_ {
+        self.csr.neighbors(v)
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Rebuild this graph with its edge list permuted by `perm`
+    /// (`perm[new_position] = old_edge_id`). Used to materialize orderings.
+    pub fn permute_edges(&self, perm: &[crate::EdgeId]) -> Graph {
+        assert_eq!(perm.len(), self.num_edges(), "permutation length");
+        let mut new_edges = Vec::with_capacity(perm.len());
+        for &old in perm {
+            new_edges.push(self.edges[old as usize]);
+        }
+        let edges = EdgeList::from_vec(new_edges);
+        let csr = Csr::build(self.num_vertices(), &edges);
+        Graph { edges, csr }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::builder::GraphBuilder;
+
+    #[test]
+    fn permute_edges_preserves_structure() {
+        let g = GraphBuilder::new()
+            .edge(0, 1)
+            .edge(1, 2)
+            .edge(2, 0)
+            .edge(2, 3)
+            .build();
+        let perm = vec![3, 2, 1, 0];
+        let h = g.permute_edges(&perm);
+        assert_eq!(h.num_edges(), 4);
+        assert_eq!(h.num_vertices(), 4);
+        assert_eq!(h.edges()[0], g.edges()[3]);
+        // degrees unchanged
+        for v in 0..4 {
+            assert_eq!(g.degree(v), h.degree(v));
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Degree statistics and power-law diagnostics (used to sanity-check the
+//! synthetic Table 3 stand-ins and to feed Table 2's α parameter).
+
+use super::Graph;
+use crate::VertexId;
+
+/// Summary statistics of a graph's degree distribution.
+#[derive(Clone, Debug)]
+pub struct DegreeStats {
+    /// |V|
+    pub num_vertices: usize,
+    /// |E|
+    pub num_edges: usize,
+    /// mean degree (2|E|/|V|)
+    pub mean: f64,
+    /// maximum degree
+    pub max: usize,
+    /// continuous MLE power-law exponent α̂ (Clauset et al., d_min = 1):
+    /// `α̂ = 1 + n / Σ ln(d_i / d_min)` over vertices with degree ≥ d_min
+    pub alpha_mle: f64,
+    /// Gini coefficient of the degree distribution (0 = uniform)
+    pub gini: f64,
+}
+
+/// Compute [`DegreeStats`].
+pub fn degree_stats(g: &Graph) -> DegreeStats {
+    let n = g.num_vertices();
+    let mut degs: Vec<usize> = (0..n as VertexId).map(|v| g.degree(v)).collect();
+    degs.sort_unstable();
+    let max = *degs.last().unwrap_or(&0);
+    let sum: usize = degs.iter().sum();
+    let mean = if n == 0 { 0.0 } else { sum as f64 / n as f64 };
+
+    // Clauset continuous MLE with d_min = 1 over non-isolated vertices
+    let mut cnt = 0usize;
+    let mut ln_sum = 0.0f64;
+    for &d in &degs {
+        if d >= 1 {
+            cnt += 1;
+            ln_sum += (d as f64).ln();
+        }
+    }
+    let alpha_mle = if ln_sum > 0.0 { 1.0 + cnt as f64 / ln_sum } else { f64::INFINITY };
+
+    // Gini: 2*Σ i*x_i / (n*Σ x_i) - (n+1)/n, over sorted x
+    let gini = if sum == 0 {
+        0.0
+    } else {
+        let mut weighted = 0.0f64;
+        for (i, &d) in degs.iter().enumerate() {
+            weighted += (i as f64 + 1.0) * d as f64;
+        }
+        (2.0 * weighted) / (n as f64 * sum as f64) - (n as f64 + 1.0) / n as f64
+    };
+
+    DegreeStats { num_vertices: n, num_edges: g.num_edges(), mean, max, alpha_mle, gini }
+}
+
+/// Degree histogram as `(degree, count)` pairs, ascending.
+pub fn degree_histogram(g: &Graph) -> Vec<(usize, usize)> {
+    let mut map = std::collections::BTreeMap::new();
+    for v in 0..g.num_vertices() as VertexId {
+        *map.entry(g.degree(v)).or_insert(0usize) += 1;
+    }
+    map.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{barabasi_albert, erdos_renyi, lattice2d};
+
+    #[test]
+    fn lattice_is_unskewed() {
+        let s = degree_stats(&lattice2d(30, 30, 0.0, 1));
+        assert!(s.gini < 0.15, "gini={}", s.gini);
+        assert_eq!(s.max, 4);
+    }
+
+    #[test]
+    fn ba_is_skewed() {
+        let s = degree_stats(&barabasi_albert(3000, 3, 1));
+        assert!(s.gini > 0.3, "gini={}", s.gini);
+        assert!(s.alpha_mle > 1.5 && s.alpha_mle < 4.0, "alpha={}", s.alpha_mle);
+    }
+
+    #[test]
+    fn mean_degree_identity() {
+        let g = erdos_renyi(100, 450, 2);
+        let s = degree_stats(&g);
+        assert!((s.mean - 2.0 * 450.0 / g.num_vertices() as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_sums_to_v() {
+        let g = erdos_renyi(200, 800, 3);
+        let h = degree_histogram(&g);
+        let total: usize = h.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, g.num_vertices());
+    }
+}

@@ -1,0 +1,63 @@
+//! # Elastic Graph Scaling (EGS)
+//!
+//! A reproduction of *"Time-Efficient and High-Quality Graph Partitioning
+//! for Graph Dynamic Scaling"* (Hanai, Tziritas, Suzumura, Cai,
+//! Theodoropoulos, 2021) as a production-shaped Rust + JAX + Pallas stack.
+//!
+//! The paper's contribution is the pair
+//!
+//! * [`ordering::geo`] — **G**raph **E**dge **O**rdering: an `O(d²·|V|·log|V|)`
+//!   greedy preprocessing pass that lays edges out so that graph-local edges
+//!   receive nearby ids, and
+//! * [`partition::cep`] — **C**hunk-based **E**dge **P**artitioning: an
+//!   `O(1)` partitioner that slices the ordered edge list into perfectly
+//!   balanced contiguous chunks, making *dynamic scaling* (changing the
+//!   number of partitions `k` at run time) essentially free.
+//!
+//! Everything the paper evaluates against is also here: the partitioner zoo
+//! ([`partition`]), the ordering zoo ([`ordering`]), a PowerLyra-like
+//! distributed graph engine ([`engine`]) whose per-partition compute runs
+//! through AOT-compiled XLA artifacts ([`runtime`]), the elastic control
+//! plane ([`coordinator`]), migration/network emulation ([`scaling`]), and
+//! the theoretical bounds of Table 2 ([`theory`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use egs::graph::datasets;
+//! use egs::ordering::{geo::GeoConfig, EdgeOrdering};
+//! use egs::partition::{cep::Cep, quality};
+//!
+//! let g = datasets::by_name("pokec-s", 42).unwrap();
+//! let order = egs::ordering::geo::order(&g, &GeoConfig::default());
+//! let ordered = order.apply(&g);
+//! for k in [4usize, 8, 16] {
+//!     let parts = Cep::new(ordered.num_edges(), k);
+//!     let rf = quality::replication_factor_chunked(&ordered, &parts);
+//!     println!("k={k} RF={rf:.3}");
+//! }
+//! ```
+#![warn(missing_docs)]
+
+pub mod coordinator;
+pub mod engine;
+pub mod graph;
+pub mod metrics;
+pub mod ordering;
+pub mod partition;
+pub mod runtime;
+pub mod scaling;
+pub mod theory;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Vertex identifier (dense, `0..|V|`).
+pub type VertexId = u32;
+
+/// Edge identifier / position in an (ordered) edge list (`0..|E|`).
+pub type EdgeId = u64;
+
+/// Partition identifier (`0..k`).
+pub type PartitionId = u32;

@@ -1,0 +1,253 @@
+//! `egs` — the Elastic Graph Scaling command-line interface.
+//!
+//! ```text
+//! egs generate  --dataset orkut-s --out graph.txt [--seed 42]
+//! egs order     --dataset orkut-s --method geo --out ordered.egs
+//! egs partition --dataset orkut-s --order geo --method cep --k 8
+//! egs scale     --dataset orkut-s --method cep --from 8 --to 12
+//! egs run       --dataset orkut-s --app pagerank --k 8 [--backend xla]
+//! egs elastic   --dataset orkut-s --method cep --scenario out --k 8 --steps 4
+//! egs table2
+//! egs info      --dataset orkut-s
+//! ```
+
+use anyhow::{bail, Context};
+use egs::coordinator::{run_scenario, ControllerConfig};
+use egs::engine::{apps, Engine};
+use egs::graph::{datasets, io, stats};
+use egs::metrics::table::{f2, secs, Table};
+use egs::ordering::{edge_ordering_by_name, geo};
+use egs::partition::{edge_partition_by_name, quality};
+use egs::runtime::executor::XlaBackend;
+use egs::runtime::native::NativeBackend;
+use egs::runtime::ComputeBackend;
+use egs::scaling::scaler::{BvcScaler, CepScaler, DynamicScaler, Hash1dScaler};
+use egs::scaling::scenario::Scenario;
+use egs::theory::bounds;
+use egs::util::args::Args;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("egs: error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_dataset(args: &Args) -> egs::Result<egs::graph::Graph> {
+    if let Some(path) = args.get("input") {
+        let p = PathBuf::from(path);
+        return if path.ends_with(".egs") { io::load_binary(&p) } else { io::load_text(&p) };
+    }
+    let name = args.get_or("dataset", "pokec-s");
+    let seed = args.get_parse::<u64>("seed", 42);
+    datasets::by_name(&name, seed).with_context(|| format!("unknown dataset {name}"))
+}
+
+fn backend_factory(
+    args: &Args,
+) -> egs::Result<Box<dyn FnMut(usize) -> Box<dyn ComputeBackend>>> {
+    match args.get_or("backend", "native").as_str() {
+        "native" => Ok(Box::new(|_| Box::new(NativeBackend::new()))),
+        "xla" => {
+            let handle = XlaBackend::from_default_dir()?;
+            Ok(Box::new(move |_| Box::new(handle.clone())))
+        }
+        other => bail!("unknown backend {other} (native|xla)"),
+    }
+}
+
+fn dispatch(args: &Args) -> egs::Result<()> {
+    match args.command.as_deref() {
+        Some("generate") => cmd_generate(args),
+        Some("order") => cmd_order(args),
+        Some("partition") => cmd_partition(args),
+        Some("scale") => cmd_scale(args),
+        Some("run") => cmd_run(args),
+        Some("elastic") => cmd_elastic(args),
+        Some("table2") => cmd_table2(),
+        Some("info") => cmd_info(args),
+        Some(other) => bail!("unknown command {other}"),
+        None => {
+            eprintln!("usage: egs <generate|order|partition|scale|run|elastic|table2|info> [--options]");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_generate(args: &Args) -> egs::Result<()> {
+    let g = load_dataset(args)?;
+    let out = PathBuf::from(args.get_or("out", "graph.txt"));
+    if out.extension().map(|e| e == "egs").unwrap_or(false) {
+        io::save_binary(&g, &out)?;
+    } else {
+        io::save_text(&g, &out)?;
+    }
+    println!("wrote |V|={} |E|={} to {}", g.num_vertices(), g.num_edges(), out.display());
+    Ok(())
+}
+
+fn cmd_order(args: &Args) -> egs::Result<()> {
+    let g = load_dataset(args)?;
+    let method = args.get_or("method", "geo");
+    let seed = args.get_parse::<u64>("seed", 42);
+    let (order, dt) = egs::metrics::timer::once(|| {
+        edge_ordering_by_name(&method, &g, seed)
+            .with_context(|| format!("unknown ordering {method}"))
+    });
+    let order = order?;
+    let ordered = order.apply(&g);
+    println!("ordered {} edges with {method} in {}", g.num_edges(), egs::metrics::timer::human_duration(dt));
+    if let Some(out) = args.get("out") {
+        io::save_binary(&ordered, &PathBuf::from(out))?;
+        println!("wrote ordered edge list to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> egs::Result<()> {
+    let g = load_dataset(args)?;
+    let order_name = args.get_or("order", "default");
+    let method = args.get_or("method", "cep");
+    let k = args.get_parse::<usize>("k", 8);
+    let seed = args.get_parse::<u64>("seed", 42);
+    let order = edge_ordering_by_name(&order_name, &g, seed)
+        .with_context(|| format!("unknown ordering {order_name}"))?;
+    let ordered = order.apply(&g);
+    let (part, dt) = egs::metrics::timer::once(|| {
+        edge_partition_by_name(&method, &ordered, k, seed)
+            .with_context(|| format!("unknown partitioner {method}"))
+    });
+    let part = part?;
+    let q = quality::quality(&ordered, &part);
+    println!(
+        "{method} (order={order_name}) k={k}: RF={:.3} EB={:.3} VB={:.3} time={}",
+        q.rf,
+        q.eb,
+        q.vb,
+        egs::metrics::timer::human_duration(dt)
+    );
+    Ok(())
+}
+
+fn cmd_scale(args: &Args) -> egs::Result<()> {
+    let g = load_dataset(args)?;
+    let method = args.get_or("method", "cep");
+    let from = args.get_parse::<usize>("from", 8);
+    let to = args.get_parse::<usize>("to", 9);
+    let seed = args.get_parse::<u64>("seed", 42);
+    let m = g.num_edges();
+    let mut scaler: Box<dyn DynamicScaler> = match method.as_str() {
+        "cep" => Box::new(CepScaler::new(m, from)),
+        "bvc" => Box::new(BvcScaler::new(m, from, seed)),
+        "1d" => Box::new(Hash1dScaler::new(m, from)),
+        other => bail!("unknown scaler {other} (cep|bvc|1d)"),
+    };
+    let (moved, dt) = egs::metrics::timer::once(|| scaler.scale_to(to));
+    println!(
+        "{method}: {from} -> {to} over {m} edges: migrated {moved} ({:.1}%) repartition-time {}",
+        100.0 * moved as f64 / m as f64,
+        egs::metrics::timer::human_duration(dt)
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> egs::Result<()> {
+    let g = load_dataset(args)?;
+    let order_name = args.get_or("order", "geo");
+    let seed = args.get_parse::<u64>("seed", 42);
+    let k = args.get_parse::<usize>("k", 8);
+    let app = args.get_or("app", "pagerank");
+    let iters = args.get_parse::<u32>("iters", 20);
+    let order = edge_ordering_by_name(&order_name, &g, seed).context("ordering")?;
+    let ordered = order.apply(&g);
+    let part = edge_partition_by_name(&args.get_or("method", "cep"), &ordered, k, seed)
+        .context("partitioner")?;
+    let mut factory = backend_factory(args)?;
+    let mut engine = Engine::new(&ordered, &part, &mut *factory)?;
+    let report = match app.as_str() {
+        "pagerank" => apps::pagerank::run(&mut engine, &ordered, iters)?.report,
+        "sssp" => apps::sssp::run(&mut engine, 0, 10_000)?.report,
+        "wcc" => apps::wcc::run(&mut engine, 10_000)?.report,
+        other => bail!("unknown app {other} (pagerank|sssp|wcc)"),
+    };
+    println!(
+        "{} k={k} backend={}: iters={} time={} COM={:.3} MB",
+        report.app,
+        args.get_or("backend", "native"),
+        report.iterations,
+        secs(report.time_s),
+        report.com_bytes as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_elastic(args: &Args) -> egs::Result<()> {
+    let g = load_dataset(args)?;
+    let seed = args.get_parse::<u64>("seed", 42);
+    let ordered = geo::order(&g, &geo::GeoConfig { seed, ..Default::default() }).apply(&g);
+    let k = args.get_parse::<usize>("k", 8);
+    let steps = args.get_parse::<usize>("steps", 4);
+    let period = args.get_parse::<u32>("period", 5);
+    let scenario = match args.get_or("scenario", "out").as_str() {
+        "out" => Scenario::scale_out(k, steps, period),
+        "in" => Scenario::scale_in(k, steps, period),
+        other => bail!("unknown scenario {other} (out|in)"),
+    };
+    let cfg = ControllerConfig { method: args.get_or("method", "cep"), ..Default::default() };
+    let mut factory = backend_factory(args)?;
+    let out = run_scenario(&ordered, &scenario, &cfg, &mut *factory)?;
+    let mut t = Table::new(
+        &format!("{} on {}", scenario.name, args.get_or("dataset", "pokec-s")),
+        &["method", "ALL", "INIT", "APP", "SCALE", "migrated", "COM MB"],
+    );
+    t.row(vec![
+        out.method.clone(),
+        secs(out.all_s),
+        secs(out.init_s),
+        secs(out.app_s),
+        secs(out.scale_s),
+        out.migrated_edges.to_string(),
+        format!("{:.2}", out.com_bytes as f64 / 1e6),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_table2() -> egs::Result<()> {
+    let mut t = Table::new(
+        "Table 2: theoretical RF upper bound, power-law graph (k=256, |V|=1e6)",
+        &["method", "a=2.2", "2.4", "2.6", "2.8", "paper 2.2", "2.4", "2.6", "2.8"],
+    );
+    let ours = bounds::computed_table2(256, 1e6);
+    for ((name, got), (_, paper)) in ours.iter().zip(bounds::PAPER_TABLE2.iter()) {
+        t.row(vec![
+            name.to_string(),
+            f2(got[0]),
+            f2(got[1]),
+            f2(got[2]),
+            f2(got[3]),
+            f2(paper[0]),
+            f2(paper[1]),
+            f2(paper[2]),
+            f2(paper[3]),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> egs::Result<()> {
+    let g = load_dataset(args)?;
+    let s = stats::degree_stats(&g);
+    println!(
+        "|V|={} |E|={} mean-deg={:.2} max-deg={} alpha-MLE={:.2} gini={:.3}",
+        s.num_vertices, s.num_edges, s.mean, s.max, s.alpha_mle, s.gini
+    );
+    Ok(())
+}

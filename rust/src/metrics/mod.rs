@@ -1,0 +1,5 @@
+//! Measurement helpers: wall-clock timers with warm-up/median semantics
+//! and paper-style table/series printers shared by the bench harnesses.
+
+pub mod table;
+pub mod timer;

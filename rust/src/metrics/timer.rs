@@ -1,0 +1,104 @@
+//! Wall-clock measurement (no `criterion` in the vendored crate set): a
+//! small best-practice harness — warm-up runs, N timed repetitions, and
+//! median/min reporting so the figure benches are stable.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary over repetitions.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    /// median wall time
+    pub median: Duration,
+    /// fastest observed run
+    pub min: Duration,
+    /// repetitions measured
+    pub reps: usize,
+}
+
+impl Timing {
+    /// Median in seconds.
+    pub fn secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    /// Human format (auto units).
+    pub fn human(&self) -> String {
+        human_duration(self.median)
+    }
+}
+
+/// Format a duration with sensible units.
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Measure `f` with `warmup` discarded runs and `reps` timed runs.
+/// The closure's return value is black-boxed to prevent dead-code elision.
+pub fn measure<T, F: FnMut() -> T>(warmup: usize, reps: usize, mut f: F) -> Timing {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    Timing { median: times[times.len() / 2], min: times[0], reps }
+}
+
+/// Time a single run (for long jobs where repetitions are impractical).
+pub fn once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_monotonic_work() {
+        // black-box the bound so release builds cannot const-fold the loop
+        let small = black_box(10_000u64);
+        let large = black_box(10_000_000u64);
+        let work = |n: u64| (0..n).fold(0u64, |a, x| a ^ x.wrapping_mul(0x9E37));
+        let t_small = measure(1, 5, || work(small));
+        let t_large = measure(1, 5, || work(large));
+        assert!(t_large.median > t_small.median);
+        assert!(t_small.min <= t_small.median);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human_duration(Duration::from_secs(2)).ends_with(" s"));
+        assert!(human_duration(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(human_duration(Duration::from_micros(7)).ends_with(" µs"));
+        assert!(human_duration(Duration::from_nanos(9)).ends_with(" ns"));
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let (v, d) = once(|| 42);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

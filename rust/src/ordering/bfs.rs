@@ -1,0 +1,64 @@
+//! Breadth-first vertex ordering — the shared traversal core used by RCM
+//! and a baseline in its own right.
+
+use super::VertexOrdering;
+use crate::graph::Graph;
+use crate::VertexId;
+use std::collections::VecDeque;
+
+/// BFS ordering from vertex 0 (restarting at the smallest unvisited vertex
+/// per component), neighbours in ascending id order.
+pub fn order(g: &Graph) -> VertexOrdering {
+    order_with(g, |_v| 0)
+}
+
+/// BFS ordering where neighbour expansion is sorted by `key(v)` then id.
+/// RCM passes the vertex degree here.
+pub fn order_with<K: Fn(VertexId) -> usize>(g: &Graph, key: K) -> VertexOrdering {
+    let n = g.num_vertices();
+    let mut visited = vec![false; n];
+    let mut perm: Vec<VertexId> = Vec::with_capacity(n);
+    let mut queue = VecDeque::new();
+    for start in 0..n as VertexId {
+        if visited[start as usize] {
+            continue;
+        }
+        visited[start as usize] = true;
+        queue.push_back(start);
+        while let Some(v) = queue.pop_front() {
+            perm.push(v);
+            let mut nbrs: Vec<VertexId> = g
+                .neighbors(v)
+                .map(|(u, _)| u)
+                .filter(|&u| !visited[u as usize])
+                .collect();
+            nbrs.sort_by_key(|&u| (key(u), u));
+            nbrs.dedup();
+            for u in nbrs {
+                if !visited[u as usize] {
+                    visited[u as usize] = true;
+                    queue.push_back(u);
+                }
+            }
+        }
+    }
+    VertexOrdering::new(perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    #[test]
+    fn level_order_on_path() {
+        let g = GraphBuilder::new().edge(0, 1).edge(1, 2).edge(2, 3).build();
+        assert_eq!(order(&g).as_slice(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn covers_disconnected_components() {
+        let g = GraphBuilder::new().edge(0, 1).edge(2, 3).build();
+        assert_eq!(order(&g).as_slice().len(), 4);
+    }
+}

@@ -1,0 +1,28 @@
+//! **DEG** — simple degree sorting (Table 5): vertices in descending
+//! degree, ties by vertex id.
+
+use super::VertexOrdering;
+use crate::graph::Graph;
+use crate::VertexId;
+
+/// Sort vertices by descending degree.
+pub fn order(g: &Graph) -> VertexOrdering {
+    let mut perm: Vec<VertexId> = (0..g.num_vertices() as VertexId).collect();
+    perm.sort_by_key(|&v| (std::cmp::Reverse(g.degree(v)), v));
+    VertexOrdering::new(perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    #[test]
+    fn descending_degree() {
+        // star around 0 plus pendant chain
+        let g = GraphBuilder::new().edge(0, 1).edge(0, 2).edge(0, 3).edge(3, 4).build();
+        let o = order(&g);
+        assert_eq!(o.as_slice()[0], 0); // degree 3
+        assert_eq!(o.as_slice()[1], 3); // degree 2
+    }
+}

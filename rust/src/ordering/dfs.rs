@@ -1,0 +1,45 @@
+//! Depth-first vertex ordering baseline.
+
+use super::VertexOrdering;
+use crate::graph::Graph;
+use crate::VertexId;
+
+/// Iterative DFS from vertex 0, restarting per component; neighbours are
+/// pushed in descending id so they pop in ascending order.
+pub fn order(g: &Graph) -> VertexOrdering {
+    let n = g.num_vertices();
+    let mut visited = vec![false; n];
+    let mut perm = Vec::with_capacity(n);
+    let mut stack: Vec<VertexId> = Vec::new();
+    for start in 0..n as VertexId {
+        if visited[start as usize] {
+            continue;
+        }
+        stack.push(start);
+        while let Some(v) = stack.pop() {
+            if visited[v as usize] {
+                continue;
+            }
+            visited[v as usize] = true;
+            perm.push(v);
+            let mut nbrs: Vec<VertexId> =
+                g.neighbors(v).map(|(u, _)| u).filter(|&u| !visited[u as usize]).collect();
+            nbrs.sort_unstable_by(|a, b| b.cmp(a));
+            stack.extend(nbrs);
+        }
+    }
+    VertexOrdering::new(perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    #[test]
+    fn dives_deep_first() {
+        // 0 - {1, 3}; 1 - 2
+        let g = GraphBuilder::new().edge(0, 1).edge(0, 3).edge(1, 2).build();
+        assert_eq!(order(&g).as_slice(), &[0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Graph ordering algorithms.
+//!
+//! Two families, matching the paper's Table 5:
+//!
+//! * **Edge orderings** ([`EdgeOrdering`]) — permutations of the edge list.
+//!   The paper's contribution **GEO** ([`geo`]) lives here, together with
+//!   the random / default controls.
+//! * **Vertex orderings** ([`VertexOrdering`]) — permutations of the vertex
+//!   set (GO, RabbitOrder, RGB, LLP, RCM, DEG, DEF). These feed CVP
+//!   (chunk-based *vertex* partitioning) in the Fig 11 comparison, and can
+//!   also *induce* an edge ordering for ablations.
+
+pub mod baseline_greedy;
+pub mod bfs;
+pub mod degree;
+pub mod dfs;
+pub mod geo;
+pub mod geo_parallel;
+pub mod gorder;
+pub mod incremental;
+pub mod llp;
+pub mod objective;
+pub mod pq;
+pub mod random;
+pub mod rabbit;
+pub mod rcm;
+pub mod rgb;
+pub mod window;
+
+use crate::graph::Graph;
+use crate::{EdgeId, VertexId};
+
+/// A permutation of the edge list: `perm[new_position] = old_edge_id`.
+#[derive(Clone, Debug)]
+pub struct EdgeOrdering {
+    perm: Vec<EdgeId>,
+}
+
+impl EdgeOrdering {
+    /// Wrap a permutation vector; validates it is a permutation in debug.
+    pub fn new(perm: Vec<EdgeId>) -> EdgeOrdering {
+        debug_assert!(is_permutation(&perm));
+        EdgeOrdering { perm }
+    }
+
+    /// Identity ("DEF" — the dataset's default edge order).
+    pub fn identity(m: usize) -> EdgeOrdering {
+        EdgeOrdering { perm: (0..m as EdgeId).collect() }
+    }
+
+    /// `perm[new] = old` view.
+    pub fn as_slice(&self) -> &[EdgeId] {
+        &self.perm
+    }
+
+    /// Number of edges.
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// Materialize the ordered graph (edge list permuted accordingly).
+    pub fn apply(&self, g: &Graph) -> Graph {
+        g.permute_edges(&self.perm)
+    }
+}
+
+/// A permutation of the vertex set: `perm[new_position] = old_vertex_id`.
+#[derive(Clone, Debug)]
+pub struct VertexOrdering {
+    perm: Vec<VertexId>,
+}
+
+impl VertexOrdering {
+    /// Wrap a permutation vector.
+    pub fn new(perm: Vec<VertexId>) -> VertexOrdering {
+        debug_assert!({
+            let mut s = perm.clone();
+            s.sort_unstable();
+            s.iter().enumerate().all(|(i, &x)| i as VertexId == x)
+        });
+        VertexOrdering { perm }
+    }
+
+    /// Identity ("DEF").
+    pub fn identity(n: usize) -> VertexOrdering {
+        VertexOrdering { perm: (0..n as VertexId).collect() }
+    }
+
+    /// `perm[new] = old` view.
+    pub fn as_slice(&self) -> &[VertexId] {
+        &self.perm
+    }
+
+    /// Inverse map: `rank[old_vertex] = new_position`.
+    pub fn ranks(&self) -> Vec<u32> {
+        let mut r = vec![0u32; self.perm.len()];
+        for (new, &old) in self.perm.iter().enumerate() {
+            r[old as usize] = new as u32;
+        }
+        r
+    }
+
+    /// Induce an edge ordering: edges sorted by
+    /// `(min(rank[u],rank[v]), max(rank[u],rank[v]))` — the natural way to
+    /// feed a vertex ordering into CEP for ablation studies.
+    pub fn induced_edge_order(&self, g: &Graph) -> EdgeOrdering {
+        let rank = self.ranks();
+        let mut ids: Vec<EdgeId> = (0..g.num_edges() as EdgeId).collect();
+        ids.sort_by_key(|&id| {
+            let e = g.edges()[id as usize];
+            let (a, b) = (rank[e.u as usize], rank[e.v as usize]);
+            if a <= b {
+                (a, b)
+            } else {
+                (b, a)
+            }
+        });
+        EdgeOrdering::new(ids)
+    }
+}
+
+fn is_permutation(perm: &[EdgeId]) -> bool {
+    let mut seen = vec![false; perm.len()];
+    for &p in perm {
+        if p as usize >= perm.len() || seen[p as usize] {
+            return false;
+        }
+        seen[p as usize] = true;
+    }
+    true
+}
+
+/// Registry of edge orderings by CLI name.
+pub fn edge_ordering_by_name(
+    name: &str,
+    g: &Graph,
+    seed: u64,
+) -> Option<EdgeOrdering> {
+    Some(match name {
+        "geo" => geo::order(g, &geo::GeoConfig { seed, ..Default::default() }),
+        "random" => random::random_edge_order(g, seed),
+        "default" | "def" => EdgeOrdering::identity(g.num_edges()),
+        // induced from vertex orderings (ablations)
+        other => {
+            let vo = vertex_ordering_by_name(other, g, seed)?;
+            vo.induced_edge_order(g)
+        }
+    })
+}
+
+/// Registry of vertex orderings by CLI name (Table 5).
+pub fn vertex_ordering_by_name(name: &str, g: &Graph, seed: u64) -> Option<VertexOrdering> {
+    Some(match name {
+        "go" | "gorder" => gorder::order(g, gorder::WINDOW_DEFAULT),
+        "ro" | "rabbit" => rabbit::order(g, seed),
+        "rgb" => rgb::order(g),
+        "llp" => llp::order(g, seed),
+        "rcm" => rcm::order(g),
+        "deg" => degree::order(g),
+        "bfs" => bfs::order(g),
+        "dfs" => dfs::order(g),
+        "vdef" | "vdefault" => VertexOrdering::identity(g.num_vertices()),
+        "vrandom" => random::random_vertex_order(g, seed),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+
+    #[test]
+    fn identity_round_trip() {
+        let g = erdos_renyi(50, 120, 1);
+        let o = EdgeOrdering::identity(g.num_edges());
+        let h = o.apply(&g);
+        assert_eq!(g.edges().as_slice(), h.edges().as_slice());
+    }
+
+    #[test]
+    fn induced_edge_order_is_permutation() {
+        let g = erdos_renyi(60, 200, 2);
+        let vo = random::random_vertex_order(&g, 3);
+        let eo = vo.induced_edge_order(&g);
+        assert_eq!(eo.len(), g.num_edges());
+        // smoke: apply works
+        let h = eo.apply(&g);
+        assert_eq!(h.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn registries_resolve_all_names() {
+        let g = erdos_renyi(40, 100, 3);
+        for n in ["geo", "random", "default"] {
+            assert!(edge_ordering_by_name(n, &g, 1).is_some(), "{n}");
+        }
+        for n in ["go", "ro", "rgb", "llp", "rcm", "deg", "bfs", "dfs", "vdef", "vrandom"] {
+            assert!(vertex_ordering_by_name(n, &g, 1).is_some(), "{n}");
+        }
+        assert!(vertex_ordering_by_name("nope", &g, 1).is_none());
+    }
+
+    #[test]
+    fn vertex_ranks_inverse() {
+        let vo = VertexOrdering::new(vec![2, 0, 1]);
+        assert_eq!(vo.ranks(), vec![1, 2, 0]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Evaluators for the graph-edge-ordering objective:
+//! Eq. (1) of Def. 4 (full ordering) and Eq. (7) (partial ordering, used
+//! by the baseline greedy Algorithm 3), plus the `S_k` splitting-point
+//! indicator of Def. 5.
+
+use crate::graph::Graph;
+use crate::partition::cep::{chunk_range, chunk_width, id2p};
+
+/// Eq. (1): `(1/|V|) Σ_{k=k_min}^{k_max} Σ_p |V(chunk(k,p))|` for a graph
+/// whose edge list is already in φ order. O((k_max−k_min)·|E|) with an
+/// epoch-stamped vertex marker (no per-chunk allocation).
+pub fn eval_eq1(g_ordered: &Graph, k_min: usize, k_max: usize) -> f64 {
+    assert!(k_min >= 1 && k_max >= k_min);
+    let n = g_ordered.num_vertices();
+    let m = g_ordered.num_edges() as u64;
+    if n == 0 || m == 0 {
+        return 0.0;
+    }
+    let edges = g_ordered.edges();
+    let mut stamp = vec![0u32; n];
+    let mut epoch = 0u32;
+    let mut total: u64 = 0;
+    for k in k_min..=k_max {
+        for p in 0..k as u64 {
+            epoch += 1;
+            let mut cnt = 0u64;
+            for i in chunk_range(m, k as u64, p) {
+                let e = edges[i as usize];
+                if stamp[e.u as usize] != epoch {
+                    stamp[e.u as usize] = epoch;
+                    cnt += 1;
+                }
+                if stamp[e.v as usize] != epoch {
+                    stamp[e.v as usize] = epoch;
+                    cnt += 1;
+                }
+            }
+            total += cnt;
+        }
+    }
+    total as f64 / n as f64
+}
+
+/// `S_k(i)` (Def. 5): 1 iff `i` is the last edge of a chunk of `k`
+/// partitions (including `i = m−1`).
+#[inline]
+pub fn is_split_point(m: u64, k: u64, i: u64) -> bool {
+    i + 1 == m || id2p(m, k, i) != id2p(m, k, i + 1)
+}
+
+/// Eq. (7): the objective extended to a *partial* ordered edge list `X`
+/// (a prefix of a future full ordering over a graph with `m_total` edges).
+/// `x_edges` are the ordered edges so far as `(u, v)` pairs. Returns the
+/// un-normalized sum (divide by |V| for the paper's value).
+///
+/// Chunks are clipped per Def. 5's extension:
+/// `X_ch(i−w+1, w)` = edges `[max(0, i−w+1), min(i, |X|−1)]`, empty when
+/// `|X| ≤ i−w+1`.
+pub fn eval_partial_eq7(
+    n: usize,
+    x_edges: &[(u32, u32)],
+    m_total: u64,
+    k_min: usize,
+    k_max: usize,
+) -> u64 {
+    let xlen = x_edges.len() as u64;
+    if xlen == 0 {
+        return 0;
+    }
+    let mut stamp = vec![0u32; n];
+    let mut epoch = 0u32;
+    let mut total = 0u64;
+    for k in k_min as u64..=k_max as u64 {
+        // iterate split points i (ends of chunks); the sum over all i of
+        // f_k(X, i, w) has non-zero terms only at split points
+        for p in 0..k {
+            let r = chunk_range(m_total, k, p);
+            if r.is_empty() {
+                continue;
+            }
+            let i = r.end - 1; // the split index for partition p
+            let w = chunk_width(m_total, k, p);
+            // clipped chunk of X: [i-w+1, i] ∩ [0, xlen-1]
+            let lo = i + 1 - w; // = r.start
+            if xlen <= lo {
+                continue; // empty per the Def. 5 extension
+            }
+            let hi = i.min(xlen - 1);
+            epoch += 1;
+            let mut cnt = 0u64;
+            for j in lo..=hi {
+                let (u, v) = x_edges[j as usize];
+                if stamp[u as usize] != epoch {
+                    stamp[u as usize] = epoch;
+                    cnt += 1;
+                }
+                if stamp[v as usize] != epoch {
+                    stamp[v as usize] = epoch;
+                    cnt += 1;
+                }
+            }
+            total += cnt;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::erdos_renyi;
+
+    #[test]
+    fn eq1_on_path_graph() {
+        // path 0-1-2-3-4: edges in order. k=2 → chunks {01,12},{23,34}
+        // |V(c0)|=3, |V(c1)|=3 → (3+3)/5 = 1.2
+        let g = GraphBuilder::new().edge(0, 1).edge(1, 2).edge(2, 3).edge(3, 4).build();
+        let v = eval_eq1(&g, 2, 2);
+        assert!((v - 6.0 / 5.0).abs() < 1e-12, "{v}");
+    }
+
+    #[test]
+    fn eq1_grows_with_scattered_order() {
+        // same path but interleaved edge order has more replicas
+        let good = GraphBuilder::new().edge(0, 1).edge(1, 2).edge(2, 3).edge(3, 4).build();
+        let bad = GraphBuilder::new().edge(0, 1).edge(2, 3).edge(1, 2).edge(3, 4).build();
+        assert!(eval_eq1(&bad, 2, 2) > eval_eq1(&good, 2, 2));
+    }
+
+    #[test]
+    fn split_points_count_equals_k() {
+        for (m, k) in [(14u64, 4u64), (100, 7), (9, 3), (5, 9)] {
+            let nonempty = (0..k).filter(|&p| chunk_width(m, k, p) > 0).count();
+            let splits = (0..m).filter(|&i| is_split_point(m, k, i)).count();
+            assert_eq!(splits, nonempty, "m={m} k={k}");
+        }
+    }
+
+    #[test]
+    fn partial_eq7_equals_eq1_on_complete_ordering() {
+        // Lemma 1: Def. 4 ≡ Def. 5; with X = E the partial evaluator must
+        // reproduce eval_eq1 exactly.
+        let g = erdos_renyi(40, 120, 5);
+        let x: Vec<(u32, u32)> = g.edges().iter().map(|e| (e.u, e.v)).collect();
+        let m = g.num_edges() as u64;
+        for (kmin, kmax) in [(2usize, 2usize), (2, 5), (3, 8)] {
+            let full = eval_eq1(&g, kmin, kmax);
+            let partial = eval_partial_eq7(g.num_vertices(), &x, m, kmin, kmax);
+            let normalized = partial as f64 / g.num_vertices() as f64;
+            assert!((full - normalized).abs() < 1e-9, "kmin={kmin} kmax={kmax}");
+        }
+    }
+
+    #[test]
+    fn partial_eq7_monotone_in_prefix() {
+        let g = erdos_renyi(30, 90, 6);
+        let x: Vec<(u32, u32)> = g.edges().iter().map(|e| (e.u, e.v)).collect();
+        let m = g.num_edges() as u64;
+        let mut prev = 0;
+        for len in [10usize, 30, 60, 90] {
+            let v = eval_partial_eq7(g.num_vertices(), &x[..len], m, 2, 4);
+            assert!(v >= prev, "objective should not shrink as X grows");
+            prev = v;
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! The paper's priority queue (§4.2): an **indexed binary min-heap** over
+//! vertices with priority `p(v) = α·D[v] − β·M[v]` (Eq. 8), supporting
+//! `enqueue`, `dequeue` and `update` (re-key) in `O(log n)`.
+//!
+//! `update` has *upsert* semantics (inserts when absent), which merges the
+//! paper's Algorithm 4 lines 15–17 into one operation. Ties are broken by
+//! vertex id so runs are fully deterministic.
+
+use crate::VertexId;
+
+/// Priority value. `i128` because `α·D[v]` can approach `|E|·(k_max−k_min)·d_max`,
+/// which overflows `i64` for billion-edge graphs.
+pub type Priority = i128;
+
+/// Indexed min-heap keyed by vertex id.
+#[derive(Debug)]
+pub struct IndexedPq {
+    /// heap of (priority, vertex)
+    heap: Vec<(Priority, VertexId)>,
+    /// `pos[v]` = index in `heap`, or `NONE`
+    pos: Vec<u32>,
+}
+
+const NONE: u32 = u32::MAX;
+
+impl IndexedPq {
+    /// Create with capacity for vertices `0..n`.
+    pub fn new(n: usize) -> IndexedPq {
+        IndexedPq { heap: Vec::with_capacity(1024), pos: vec![NONE; n] }
+    }
+
+    /// Number of queued vertices.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no vertices are queued.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Is `v` currently queued?
+    pub fn contains(&self, v: VertexId) -> bool {
+        self.pos[v as usize] != NONE
+    }
+
+    /// Current priority of `v` if queued.
+    pub fn priority(&self, v: VertexId) -> Option<Priority> {
+        let p = self.pos[v as usize];
+        (p != NONE).then(|| self.heap[p as usize].0)
+    }
+
+    /// Insert or re-key `v` (the paper's `enqueue`/`update` pair).
+    pub fn upsert(&mut self, v: VertexId, priority: Priority) {
+        let p = self.pos[v as usize];
+        if p == NONE {
+            self.heap.push((priority, v));
+            self.pos[v as usize] = (self.heap.len() - 1) as u32;
+            self.sift_up(self.heap.len() - 1);
+        } else {
+            let i = p as usize;
+            let old = self.heap[i].0;
+            self.heap[i].0 = priority;
+            if priority < old {
+                self.sift_up(i);
+            } else if priority > old {
+                self.sift_down(i);
+            }
+        }
+    }
+
+    /// Pop the minimum-priority vertex (ties: smallest vertex id).
+    pub fn dequeue(&mut self) -> Option<(VertexId, Priority)> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let (pri, v) = self.heap[0];
+        self.remove_at(0);
+        Some((v, pri))
+    }
+
+    /// Remove `v` if queued; returns whether it was present.
+    pub fn remove(&mut self, v: VertexId) -> bool {
+        let p = self.pos[v as usize];
+        if p == NONE {
+            return false;
+        }
+        self.remove_at(p as usize);
+        true
+    }
+
+    fn remove_at(&mut self, i: usize) {
+        let last = self.heap.len() - 1;
+        let removed = self.heap[i].1;
+        self.heap.swap(i, last);
+        self.heap.pop();
+        self.pos[removed as usize] = NONE;
+        if i < self.heap.len() {
+            self.pos[self.heap[i].1 as usize] = i as u32;
+            self.sift_down(i);
+            self.sift_up(i);
+        }
+    }
+
+    #[inline]
+    fn less(&self, a: usize, b: usize) -> bool {
+        self.heap[a] < self.heap[b] // lexicographic: priority then vertex id
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.less(i, parent) {
+                self.swap_nodes(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut smallest = i;
+            if l < self.heap.len() && self.less(l, smallest) {
+                smallest = l;
+            }
+            if r < self.heap.len() && self.less(r, smallest) {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.swap_nodes(i, smallest);
+            i = smallest;
+        }
+    }
+
+    #[inline]
+    fn swap_nodes(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a].1 as usize] = a as u32;
+        self.pos[self.heap[b].1 as usize] = b as u32;
+    }
+
+    #[cfg(test)]
+    fn check_invariants(&self) {
+        for i in 1..self.heap.len() {
+            let parent = (i - 1) / 2;
+            assert!(
+                !self.less(i, parent),
+                "heap violated at {i}: {:?} < parent {:?}",
+                self.heap[i],
+                self.heap[parent]
+            );
+        }
+        for (i, &(_, v)) in self.heap.iter().enumerate() {
+            assert_eq!(self.pos[v as usize], i as u32, "pos map broken for {v}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn basic_order() {
+        let mut pq = IndexedPq::new(10);
+        pq.upsert(3, 30);
+        pq.upsert(1, 10);
+        pq.upsert(2, 20);
+        assert_eq!(pq.dequeue(), Some((1, 10)));
+        assert_eq!(pq.dequeue(), Some((2, 20)));
+        assert_eq!(pq.dequeue(), Some((3, 30)));
+        assert_eq!(pq.dequeue(), None);
+    }
+
+    #[test]
+    fn update_rekeys() {
+        let mut pq = IndexedPq::new(10);
+        pq.upsert(0, 100);
+        pq.upsert(1, 50);
+        pq.upsert(0, 10); // decrease
+        assert_eq!(pq.dequeue(), Some((0, 10)));
+        pq.upsert(1, 500); // increase while queued
+        pq.upsert(2, 400);
+        assert_eq!(pq.dequeue(), Some((2, 400)));
+        assert_eq!(pq.dequeue(), Some((1, 500)));
+    }
+
+    #[test]
+    fn ties_break_by_vertex_id() {
+        let mut pq = IndexedPq::new(10);
+        pq.upsert(7, 5);
+        pq.upsert(2, 5);
+        pq.upsert(4, 5);
+        assert_eq!(pq.dequeue(), Some((2, 5)));
+        assert_eq!(pq.dequeue(), Some((4, 5)));
+        assert_eq!(pq.dequeue(), Some((7, 5)));
+    }
+
+    #[test]
+    fn remove_absent_is_false() {
+        let mut pq = IndexedPq::new(4);
+        assert!(!pq.remove(2));
+        pq.upsert(2, 1);
+        assert!(pq.remove(2));
+        assert!(!pq.contains(2));
+    }
+
+    /// Randomized differential test against a naive priority map.
+    #[test]
+    fn matches_naive_model_under_random_ops() {
+        check(0xBEEF, 48, |rng| {
+            let n = 64usize;
+            let mut pq = IndexedPq::new(n);
+            let mut model: std::collections::BTreeMap<VertexId, Priority> = Default::default();
+            for _ in 0..400 {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let v = rng.below(n as u64) as VertexId;
+                        let pri = rng.below(1000) as Priority - 500;
+                        pq.upsert(v, pri);
+                        model.insert(v, pri);
+                    }
+                    2 => {
+                        // dequeue and compare against model minimum
+                        let got = pq.dequeue();
+                        let want = model
+                            .iter()
+                            .min_by_key(|&(v, p)| (*p, *v))
+                            .map(|(v, p)| (*v, *p));
+                        assert_eq!(got, want);
+                        if let Some((v, _)) = want {
+                            model.remove(&v);
+                        }
+                    }
+                    _ => {
+                        let v = rng.below(n as u64) as VertexId;
+                        assert_eq!(pq.remove(v), model.remove(&v).is_some());
+                    }
+                }
+                pq.check_invariants();
+                assert_eq!(pq.len(), model.len());
+            }
+        });
+    }
+}

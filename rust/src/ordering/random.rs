@@ -1,0 +1,37 @@
+//! Random edge/vertex orderings — the lower-bound controls.
+
+use super::{EdgeOrdering, VertexOrdering};
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+use crate::{EdgeId, VertexId};
+
+/// Uniformly random edge permutation.
+pub fn random_edge_order(g: &Graph, seed: u64) -> EdgeOrdering {
+    let mut perm: Vec<EdgeId> = (0..g.num_edges() as EdgeId).collect();
+    Rng::new(seed).shuffle(&mut perm);
+    EdgeOrdering::new(perm)
+}
+
+/// Uniformly random vertex permutation.
+pub fn random_vertex_order(g: &Graph, seed: u64) -> VertexOrdering {
+    let mut perm: Vec<VertexId> = (0..g.num_vertices() as VertexId).collect();
+    Rng::new(seed).shuffle(&mut perm);
+    VertexOrdering::new(perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+
+    #[test]
+    fn permutations_are_valid_and_seeded() {
+        let g = erdos_renyi(50, 200, 1);
+        let a = random_edge_order(&g, 5);
+        let b = random_edge_order(&g, 5);
+        let c = random_edge_order(&g, 6);
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert_ne!(a.as_slice(), c.as_slice());
+        assert_eq!(a.len(), g.num_edges());
+    }
+}

@@ -1,0 +1,126 @@
+//! Sliding δ-window over the tail of the ordered edge list.
+//!
+//! Algorithm 3/4 admit a two-hop edge `e_{u,w}` only when
+//! `w ∈ V(X_ch(|X|−δ, δ))` — i.e. `w` appears in one of the last `δ`
+//! ordered edges. This structure maintains that vertex multiset in O(1)
+//! per appended edge: a ring buffer of the last `δ` edges plus a per-vertex
+//! occurrence counter.
+
+use crate::graph::Edge;
+use crate::VertexId;
+use std::collections::VecDeque;
+
+/// Vertex-membership window over the last `δ` appended edges.
+#[derive(Debug)]
+pub struct TailWindow {
+    delta: usize,
+    ring: VecDeque<Edge>,
+    counts: Vec<u32>,
+}
+
+impl TailWindow {
+    /// `n` = number of vertices, `delta` = window size in edges (≥ 1).
+    pub fn new(n: usize, delta: usize) -> TailWindow {
+        TailWindow {
+            delta: delta.max(1),
+            ring: VecDeque::with_capacity(delta.max(1) + 1),
+            counts: vec![0; n],
+        }
+    }
+
+    /// Window size.
+    pub fn delta(&self) -> usize {
+        self.delta
+    }
+
+    /// Number of edges currently in the window (≤ δ).
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// True when no edges have been appended yet.
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Append the next ordered edge; evicts the (now δ+1)-old edge.
+    pub fn push(&mut self, e: Edge) {
+        self.ring.push_back(e);
+        self.counts[e.u as usize] += 1;
+        self.counts[e.v as usize] += 1;
+        if self.ring.len() > self.delta {
+            let old = self.ring.pop_front().unwrap();
+            self.counts[old.u as usize] -= 1;
+            self.counts[old.v as usize] -= 1;
+        }
+    }
+
+    /// Is `v` an endpoint of any edge in the window —
+    /// `v ∈ V(X_ch(|X|−δ, δ))`?
+    #[inline]
+    pub fn contains(&self, v: VertexId) -> bool {
+        self.counts[v as usize] > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn membership_tracks_last_delta_edges() {
+        let mut w = TailWindow::new(10, 2);
+        w.push(Edge::new(0, 1));
+        w.push(Edge::new(2, 3));
+        assert!(w.contains(0) && w.contains(3));
+        w.push(Edge::new(4, 5)); // evicts (0,1)
+        assert!(!w.contains(0) && !w.contains(1));
+        assert!(w.contains(2) && w.contains(5));
+    }
+
+    #[test]
+    fn repeated_vertex_counted() {
+        let mut w = TailWindow::new(10, 2);
+        w.push(Edge::new(0, 1));
+        w.push(Edge::new(0, 2));
+        w.push(Edge::new(3, 4)); // evicts (0,1) but 0 still present via (0,2)
+        assert!(w.contains(0));
+        w.push(Edge::new(5, 6)); // evicts (0,2)
+        assert!(!w.contains(0));
+    }
+
+    #[test]
+    fn delta_zero_clamped_to_one() {
+        let mut w = TailWindow::new(4, 0);
+        w.push(Edge::new(0, 1));
+        assert!(w.contains(0));
+        w.push(Edge::new(2, 3));
+        assert!(!w.contains(0));
+        assert_eq!(w.delta(), 1);
+    }
+
+    /// Differential test vs. a naive recomputation of V(X_ch(|X|−δ, δ)).
+    #[test]
+    fn matches_naive_model() {
+        check(0xD17A, 32, |rng| {
+            let n = 32usize;
+            let delta = 1 + rng.below_usize(8);
+            let mut w = TailWindow::new(n, delta);
+            let mut hist: Vec<Edge> = Vec::new();
+            for _ in 0..200 {
+                let e = Edge::new(
+                    rng.below(n as u64) as VertexId,
+                    rng.below(n as u64) as VertexId,
+                );
+                w.push(e);
+                hist.push(e);
+                let tail = &hist[hist.len().saturating_sub(delta)..];
+                for v in 0..n as VertexId {
+                    let naive = tail.iter().any(|t| t.u == v || t.v == v);
+                    assert_eq!(w.contains(v), naive, "v={v} delta={delta}");
+                }
+            }
+        });
+    }
+}

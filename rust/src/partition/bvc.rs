@@ -1,0 +1,244 @@
+//! **BVC** — the consistent-hashing dynamic-scaling comparator
+//! (Fan et al., PVLDB'19; the paper's `BVC+/-`).
+//!
+//! Edges are hashed onto a ring owned by virtual nodes of the `k`
+//! partitions; scaling to `k±x` only moves the edges in the ring arcs
+//! claimed/released by the added/removed partitions. Because the hash
+//! ignores locality, quality is poor (Table 2 / Fig 10), and because
+//! near-perfect balance (ε = 0.001, §6.2) is enforced by an explicit
+//! *refinement* phase of barrier-synchronized excess moves, its migration
+//! wall-time exceeds CEP's single shuffle (Fig 14).
+
+use super::EdgePartition;
+use crate::util::rng::mix64;
+use crate::PartitionId;
+use std::collections::BTreeMap;
+
+/// Virtual nodes per partition (higher = smoother arcs).
+pub const VNODES: usize = 64;
+/// Default balance slack ε (paper §6.2 uses 0.001).
+pub const EPSILON_DEFAULT: f64 = 0.001;
+
+/// Statistics of one scaling operation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BvcScaleStats {
+    /// edges whose partition changed due to ring arcs moving
+    pub ring_migrated: u64,
+    /// edges moved by the balance-refinement phase
+    pub refine_migrated: u64,
+    /// barrier-synchronized refinement rounds executed
+    pub refine_rounds: u32,
+}
+
+impl BvcScaleStats {
+    /// Total migrated edges.
+    pub fn total_migrated(&self) -> u64 {
+        self.ring_migrated + self.refine_migrated
+    }
+}
+
+/// Consistent-hash ring + materialized assignment.
+pub struct BvcState {
+    m: u64,
+    k: usize,
+    seed: u64,
+    epsilon: f64,
+    ring: BTreeMap<u64, PartitionId>,
+    assign: Vec<PartitionId>,
+}
+
+impl BvcState {
+    /// Build the ring for `k` partitions over `m` edges, assign and refine.
+    pub fn build(m: usize, k: usize, seed: u64) -> BvcState {
+        Self::build_with_epsilon(m, k, seed, EPSILON_DEFAULT)
+    }
+
+    /// Build with an explicit balance slack.
+    pub fn build_with_epsilon(m: usize, k: usize, seed: u64, epsilon: f64) -> BvcState {
+        let mut s = BvcState {
+            m: m as u64,
+            k,
+            seed,
+            epsilon,
+            ring: BTreeMap::new(),
+            assign: vec![0; m],
+        };
+        for p in 0..k as PartitionId {
+            s.add_vnodes(p);
+        }
+        for eid in 0..m as u64 {
+            s.assign[eid as usize] = s.ring_owner(eid);
+        }
+        s.refine();
+        s
+    }
+
+    /// Current number of partitions.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Materialize as an [`EdgePartition`].
+    pub fn to_partition(&self) -> EdgePartition {
+        EdgePartition::new(self.k, self.assign.clone())
+    }
+
+    fn add_vnodes(&mut self, p: PartitionId) {
+        for r in 0..VNODES as u64 {
+            let pos = mix64(self.seed ^ ((p as u64) << 24) ^ r);
+            self.ring.insert(pos, p);
+        }
+    }
+
+    fn remove_vnodes(&mut self, p: PartitionId) {
+        for r in 0..VNODES as u64 {
+            let pos = mix64(self.seed ^ ((p as u64) << 24) ^ r);
+            self.ring.remove(&pos);
+        }
+    }
+
+    /// Ring lookup: owner of the first virtual node clockwise from the
+    /// edge's hash position.
+    fn ring_owner(&self, eid: u64) -> PartitionId {
+        let pos = mix64(eid.wrapping_add(self.seed.rotate_left(17)));
+        match self.ring.range(pos..).next() {
+            Some((_, &p)) => p,
+            None => *self.ring.values().next().expect("empty ring"),
+        }
+    }
+
+    /// Scale to `new_k` partitions (new ids appended / highest removed, as
+    /// in the paper's Theorem 2 convention). Returns migration statistics.
+    pub fn scale_to(&mut self, new_k: usize) -> BvcScaleStats {
+        assert!(new_k >= 1);
+        let mut stats = BvcScaleStats::default();
+        if new_k > self.k {
+            for p in self.k as PartitionId..new_k as PartitionId {
+                self.add_vnodes(p);
+            }
+        } else {
+            for p in new_k as PartitionId..self.k as PartitionId {
+                self.remove_vnodes(p);
+            }
+        }
+        self.k = new_k;
+        // phase 1: ring migration — only arc-stolen edges move
+        for eid in 0..self.m {
+            let owner = self.ring_owner(eid);
+            // on scale-in, edges of removed partitions must move; on
+            // scale-out only edges whose arc got claimed move
+            if self.assign[eid as usize] as usize >= new_k
+                || owner != self.assign[eid as usize]
+            {
+                // consistent hashing property: an edge only moves if its
+                // owner changed
+                if owner != self.assign[eid as usize] {
+                    self.assign[eid as usize] = owner;
+                    stats.ring_migrated += 1;
+                }
+            }
+        }
+        // phase 2: barrier-synchronized balance refinement
+        let (rounds, moved) = self.refine();
+        stats.refine_rounds = rounds;
+        stats.refine_migrated = moved;
+        stats
+    }
+
+    /// Refinement: pair the most-overloaded with the most-underloaded
+    /// partition each round (one transfer per partition per barrier) until
+    /// every partition is within `(1+ε)·m/k`. Returns (rounds, moved).
+    fn refine(&mut self) -> (u32, u64) {
+        // capacity must be at least ⌈m/k⌉ or perfect balance is infeasible
+        let ceil_avg = self.m.div_ceil(self.k as u64).max(1);
+        let cap = (((1.0 + self.epsilon) * self.m as f64 / self.k as f64).floor() as u64)
+            .max(ceil_avg);
+        // bucket edges by partition for cheap donor selection
+        let mut buckets: Vec<Vec<u64>> = vec![Vec::new(); self.k];
+        for eid in 0..self.m {
+            buckets[self.assign[eid as usize] as usize].push(eid);
+        }
+        let mut rounds = 0u32;
+        let mut moved = 0u64;
+        loop {
+            let mut over: Vec<PartitionId> = (0..self.k as PartitionId)
+                .filter(|&p| buckets[p as usize].len() as u64 > cap)
+                .collect();
+            if over.is_empty() {
+                break;
+            }
+            let mut under: Vec<PartitionId> = (0..self.k as PartitionId)
+                .filter(|&p| (buckets[p as usize].len() as u64) < cap)
+                .collect();
+            rounds += 1;
+            // largest donors to the emptiest receivers, one pair at a time
+            over.sort_by_key(|&p| std::cmp::Reverse(buckets[p as usize].len()));
+            under.sort_by_key(|&p| buckets[p as usize].len());
+            for (&src, &dst) in over.iter().zip(under.iter()) {
+                let excess = buckets[src as usize].len() as u64 - cap;
+                let deficit = cap - buckets[dst as usize].len() as u64;
+                let n = excess.min(deficit);
+                for _ in 0..n {
+                    let eid = buckets[src as usize].pop().unwrap();
+                    self.assign[eid as usize] = dst;
+                    buckets[dst as usize].push(eid);
+                    moved += 1;
+                }
+            }
+            if rounds > 10_000 {
+                unreachable!("refinement failed to converge");
+            }
+        }
+        (rounds, moved)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::quality::edge_balance;
+
+    #[test]
+    fn balanced_after_build() {
+        let s = BvcState::build(100_000, 16, 1);
+        let eb = edge_balance(&s.to_partition());
+        assert!(eb <= 1.0 + EPSILON_DEFAULT + 16.0 / 100_000.0, "eb={eb}");
+    }
+
+    #[test]
+    fn scale_out_moves_roughly_one_kth() {
+        // consistent hashing: adding 1 of k+1 partitions moves ≈ m/(k+1)
+        // edges via the ring (+ refinement extras), far below the ~m·k/(k+1)
+        // a plain rehash would move
+        let mut s = BvcState::build(200_000, 8, 2);
+        let stats = s.scale_to(9);
+        let ring_frac = stats.ring_migrated as f64 / 200_000.0;
+        assert!(ring_frac < 0.25, "ring moved {ring_frac}");
+        assert!(ring_frac > 0.05, "suspiciously few moves {ring_frac}");
+        assert!(stats.refine_rounds >= 1, "tight ε must force refinement");
+        // still balanced after
+        assert!(edge_balance(&s.to_partition()) < 1.01);
+    }
+
+    #[test]
+    fn scale_in_rebalances_removed_partitions() {
+        let mut s = BvcState::build(50_000, 10, 3);
+        let stats = s.scale_to(8);
+        assert!(s.to_partition().assign.iter().all(|&p| p < 8));
+        // at least the removed partitions' edges moved (~2/10 of edges)
+        assert!(stats.total_migrated() as f64 >= 0.15 * 50_000.0);
+        assert!(edge_balance(&s.to_partition()) < 1.01);
+    }
+
+    #[test]
+    fn sequential_scaling_chain() {
+        // the paper's protocol: k = 4 → 8 → 16 → 32
+        let mut s = BvcState::build(80_000, 4, 4);
+        for k in [8usize, 16, 32] {
+            let st = s.scale_to(k);
+            assert!(st.total_migrated() > 0);
+            assert_eq!(s.k(), k);
+            assert!(edge_balance(&s.to_partition()) < 1.02, "k={k}");
+        }
+    }
+}

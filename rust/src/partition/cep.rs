@@ -1,0 +1,218 @@
+//! **CEP** — chunk-based edge partitioning (§3.3) and the `ID2P`
+//! order-to-partition conversion (Algorithm 2), including Theorem 1's
+//! `O(1)` closed forms.
+//!
+//! Partition `p` of `k` over an ordered edge list of length `m` is the
+//! contiguous chunk
+//!
+//! ```text
+//! E_k[p] = E_ch( Σ_{x<p} ⌊(m+x)/k⌋ ,  ⌊(m+p)/k⌋ )
+//! ```
+//!
+//! with the prefix sum collapsing (Theorem 1) to
+//! `p·⌊m/k⌋ + θ_k(p)`, `θ_k(p) = max(0, p − k + (m mod k))`.
+
+use crate::{EdgeId, PartitionId};
+use std::ops::Range;
+
+/// Width of partition `p`: `⌊(m+p)/k⌋` (the first `k − m mod k` chunks are
+/// one edge shorter; perfect balance, ε ≈ 0).
+#[inline]
+pub fn chunk_width(m: u64, k: u64, p: u64) -> u64 {
+    debug_assert!(p < k);
+    (m + p) / k
+}
+
+/// θ_k(p) = max(0, p − k + (m mod k)) — Theorem 1.
+#[inline]
+pub fn theta(m: u64, k: u64, p: u64) -> u64 {
+    (p + (m % k)).saturating_sub(k)
+}
+
+/// Start offset of partition `p` in O(1): `p·⌊m/k⌋ + θ_k(p)` (Theorem 1).
+#[inline]
+pub fn chunk_start(m: u64, k: u64, p: u64) -> u64 {
+    debug_assert!(p <= k); // p == k allowed: returns m (end sentinel)
+    if p == k {
+        return m;
+    }
+    p * (m / k) + theta(m, k, p)
+}
+
+/// Half-open edge-id range `[start, start+width)` of partition `p`.
+#[inline]
+pub fn chunk_range(m: u64, k: u64, p: u64) -> Range<u64> {
+    let s = chunk_start(m, k, p);
+    s..s + chunk_width(m, k, p)
+}
+
+/// `ID2P_k(i)` in O(1): the partition that edge order `i` falls into.
+///
+/// Derivation: the first `k − (m mod k)` partitions have width `w = ⌊m/k⌋`;
+/// the remaining `m mod k` have width `w+1`. With
+/// `boundary = (k − m mod k)·w`:
+/// `p = i/w` below the boundary, `(k − m mod k) + (i−boundary)/(w+1)` above.
+#[inline]
+pub fn id2p(m: u64, k: u64, i: u64) -> PartitionId {
+    debug_assert!(i < m, "edge id {i} out of range (m={m})");
+    let w = m / k;
+    let r = m % k;
+    if w == 0 {
+        // fewer edges than partitions: first k−r partitions are empty and
+        // the last r hold one edge each
+        return ((k - r) + i) as PartitionId;
+    }
+    let boundary = (k - r) * w;
+    if i < boundary {
+        (i / w) as PartitionId
+    } else {
+        ((k - r) + (i - boundary) / (w + 1)) as PartitionId
+    }
+}
+
+/// Algorithm 2 verbatim (O(k) loop) — retained as the differential-test
+/// oracle for [`id2p`].
+pub fn id2p_iterative(m: u64, k: u64, i: u64) -> PartitionId {
+    let mut p = 0u64;
+    let mut cur = chunk_width(m, k, p);
+    while i >= cur {
+        p += 1;
+        cur += chunk_width(m, k, p);
+    }
+    p as PartitionId
+}
+
+/// A chunk-based edge partitioning of an ordered edge list: pure metadata
+/// (`m`, `k`); every query is O(1). This *is* the paper's headline object —
+/// rescaling constructs a new `Cep` and nothing else.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cep {
+    m: u64,
+    k: u64,
+}
+
+impl Cep {
+    /// Partition `m` ordered edges into `k` chunks.
+    pub fn new(m: usize, k: usize) -> Cep {
+        assert!(k >= 1, "k >= 1");
+        Cep { m: m as u64, k: k as u64 }
+    }
+
+    /// Total number of edges.
+    pub fn num_edges(&self) -> u64 {
+        self.m
+    }
+
+    /// Number of partitions.
+    pub fn k(&self) -> usize {
+        self.k as usize
+    }
+
+    /// Partition of ordered-edge id `i` — O(1).
+    #[inline]
+    pub fn partition_of(&self, i: EdgeId) -> PartitionId {
+        id2p(self.m, self.k, i)
+    }
+
+    /// Edge-id range of partition `p` — O(1).
+    #[inline]
+    pub fn range(&self, p: PartitionId) -> Range<u64> {
+        chunk_range(self.m, self.k, p as u64)
+    }
+
+    /// Number of edges in partition `p`.
+    #[inline]
+    pub fn width(&self, p: PartitionId) -> u64 {
+        chunk_width(self.m, self.k, p as u64)
+    }
+
+    /// Rescale to `k ± x` partitions — the paper's `sc(E_k, ±x)`: O(1).
+    pub fn rescaled(&self, new_k: usize) -> Cep {
+        Cep::new(self.m as usize, new_k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn figure3_worked_example() {
+        // |E| = 14, k = 4 → widths 3,3,4,4 at starts 0,3,6,10 (paper Fig 3)
+        let widths: Vec<u64> = (0..4).map(|p| chunk_width(14, 4, p)).collect();
+        assert_eq!(widths, vec![3, 3, 4, 4]);
+        let starts: Vec<u64> = (0..4).map(|p| chunk_start(14, 4, p)).collect();
+        assert_eq!(starts, vec![0, 3, 6, 10]);
+    }
+
+    #[test]
+    fn closed_form_start_equals_prefix_sum() {
+        check(0xCE9, 64, |rng| {
+            let m = 1 + rng.below(10_000);
+            let k = 1 + rng.below(200);
+            let mut prefix = 0u64;
+            for p in 0..k {
+                assert_eq!(chunk_start(m, k, p), prefix, "m={m} k={k} p={p}");
+                prefix += chunk_width(m, k, p);
+            }
+            assert_eq!(prefix, m, "chunks must cover all edges exactly");
+            assert_eq!(chunk_start(m, k, k), m);
+        });
+    }
+
+    #[test]
+    fn id2p_matches_algorithm2() {
+        check(0x1D2F, 48, |rng| {
+            let m = 1 + rng.below(5_000);
+            let k = 1 + rng.below(300); // includes k > m
+            for _ in 0..64 {
+                let i = rng.below(m);
+                assert_eq!(
+                    id2p(m, k, i),
+                    id2p_iterative(m, k, i),
+                    "m={m} k={k} i={i}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn id2p_is_inverse_of_ranges() {
+        for (m, k) in [(14u64, 4u64), (100, 7), (5, 9), (1, 1), (64, 64)] {
+            for p in 0..k {
+                for i in chunk_range(m, k, p) {
+                    assert_eq!(id2p(m, k, i) as u64, p, "m={m} k={k} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn perfect_balance() {
+        // max size − min size ≤ 1 for all (m, k): ε ≈ 0 in Def. 2
+        check(0xBA1, 48, |rng| {
+            let m = 1 + rng.below(100_000);
+            let k = 1 + rng.below(512);
+            let mut lo = u64::MAX;
+            let mut hi = 0;
+            for p in 0..k {
+                let w = chunk_width(m, k, p);
+                lo = lo.min(w);
+                hi = hi.max(w);
+            }
+            assert!(hi - lo <= 1, "m={m} k={k}: widths {lo}..{hi}");
+        });
+    }
+
+    #[test]
+    fn rescale_is_pure_metadata() {
+        let c = Cep::new(1_000_000, 26);
+        let c2 = c.rescaled(36);
+        assert_eq!(c2.k(), 36);
+        assert_eq!(c2.num_edges(), 1_000_000);
+        // widths sum invariant after rescale
+        let total: u64 = (0..36).map(|p| c2.width(p)).sum();
+        assert_eq!(total, 1_000_000);
+    }
+}

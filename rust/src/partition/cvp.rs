@@ -1,0 +1,47 @@
+//! **CVP** — chunk-based *vertex* partitioning (the Gemini [71] layout):
+//! slice an ordered vertex list into `k` equal chunks. The vertex-side
+//! analogue of CEP, used in Fig 11 to evaluate vertex-ordering baselines.
+
+use super::cep::chunk_range;
+use super::VertexPartition;
+use crate::ordering::VertexOrdering;
+use crate::PartitionId;
+
+/// Chunk the given vertex ordering into `k` contiguous vertex partitions
+/// (same `⌊(n+p)/k⌋` widths as CEP, so perfect vertex balance).
+pub fn partition(order: &VertexOrdering, k: usize) -> VertexPartition {
+    let n = order.as_slice().len();
+    let mut assign = vec![0 as PartitionId; n];
+    for p in 0..k as u64 {
+        for pos in chunk_range(n as u64, k as u64, p) {
+            let v = order.as_slice()[pos as usize];
+            assign[v as usize] = p as PartitionId;
+        }
+    }
+    VertexPartition::new(k, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_follow_order() {
+        let o = VertexOrdering::new(vec![3, 1, 0, 2]); // new order: 3,1,0,2
+        let vp = partition(&o, 2);
+        // chunk 0 = {3, 1}, chunk 1 = {0, 2}
+        assert_eq!(vp.assign[3], 0);
+        assert_eq!(vp.assign[1], 0);
+        assert_eq!(vp.assign[0], 1);
+        assert_eq!(vp.assign[2], 1);
+    }
+
+    #[test]
+    fn balanced_sizes() {
+        let o = VertexOrdering::identity(10);
+        let vp = partition(&o, 3);
+        let mut sizes = vp.sizes();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![3, 3, 4]);
+    }
+}

@@ -1,0 +1,56 @@
+//! **DBH** — Degree-Based Hashing (Xie et al., NeurIPS'14): each edge is
+//! assigned by hashing its *lower-degree* endpoint, so hubs are the ones
+//! replicated (they would be replicated anyway) while low-degree vertices
+//! stay intact.
+
+use super::EdgePartition;
+use crate::graph::Graph;
+use crate::util::rng::mix64;
+use crate::PartitionId;
+
+/// Partition by degree-based hashing.
+pub fn partition(g: &Graph, k: usize) -> EdgePartition {
+    let assign = g
+        .edges()
+        .iter()
+        .map(|e| {
+            let (du, dv) = (g.degree(e.u), g.degree(e.v));
+            // hash the endpoint with smaller degree (ties: smaller id)
+            let anchor = if (du, e.u) <= (dv, e.v) { e.u } else { e.v };
+            (mix64(anchor as u64) % k as u64) as PartitionId
+        })
+        .collect();
+    EdgePartition::new(k, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::hash1d;
+    use crate::partition::quality::replication_factor;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::{rmat, RmatParams};
+
+    #[test]
+    fn star_graph_keeps_leaves_intact() {
+        // star: leaves have degree 1, hub degree 9 — each edge hashes its
+        // leaf, so every leaf appears in exactly one partition
+        let mut b = GraphBuilder::new();
+        for i in 1..10u32 {
+            b.push(0, i);
+        }
+        let g = b.build();
+        let p = partition(&g, 4);
+        // RF = (replicas of hub ≤ 4 + 9 leaves) / 10 ≤ 1.3
+        let rf = replication_factor(&g, &p);
+        assert!(rf <= 1.31, "rf={rf}");
+    }
+
+    #[test]
+    fn beats_1d_on_powerlaw() {
+        let g = rmat(&RmatParams { scale: 11, edge_factor: 12, ..Default::default() }, 2);
+        let rf_dbh = replication_factor(&g, &partition(&g, 32));
+        let rf_1d = replication_factor(&g, &hash1d::partition(&g, 32));
+        assert!(rf_dbh < rf_1d, "dbh {rf_dbh} vs 1d {rf_1d}");
+    }
+}

@@ -1,0 +1,43 @@
+//! **1D** — random hash of the edge id onto `0..k` (Table 4's simplest
+//! baseline; PowerGraph's "random" edge placement).
+
+use super::EdgePartition;
+use crate::graph::Graph;
+use crate::util::rng::mix64;
+use crate::PartitionId;
+
+/// Partition by hashing edge ids.
+pub fn partition(g: &Graph, k: usize) -> EdgePartition {
+    let assign = (0..g.num_edges() as u64)
+        .map(|eid| (mix64(eid) % k as u64) as PartitionId)
+        .collect();
+    EdgePartition::new(k, assign)
+}
+
+/// Assignment of a single edge id — used by the dynamic-scaling migration
+/// experiment (every edge may move when k changes).
+#[inline]
+pub fn assign_one(eid: u64, k: usize) -> PartitionId {
+    (mix64(eid) % k as u64) as PartitionId
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+    use crate::partition::quality::edge_balance;
+
+    #[test]
+    fn roughly_balanced() {
+        let g = erdos_renyi(500, 20_000, 1);
+        let p = partition(&g, 16);
+        assert!(edge_balance(&p) < 1.1, "eb={}", edge_balance(&p));
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = erdos_renyi(100, 500, 2);
+        assert_eq!(partition(&g, 8).assign, partition(&g, 8).assign);
+        assert_eq!(partition(&g, 8).assign[3], assign_one(3, 8));
+    }
+}

@@ -1,0 +1,65 @@
+//! **2D (Grid)** — each edge is hashed into a 2-D partition grid: the
+//! source hash picks the row, the destination hash the column (§6.1). A
+//! vertex's replicas are then confined to one row + one column, bounding
+//! RF by `r + c − 1` instead of `k`.
+
+use super::EdgePartition;
+use crate::graph::Graph;
+use crate::util::rng::mix64;
+use crate::PartitionId;
+
+/// Choose grid dimensions `r × c ≥ k` with `r ≤ c` as square as possible.
+pub fn grid_dims(k: usize) -> (usize, usize) {
+    let r = (k as f64).sqrt().floor() as usize;
+    let r = r.max(1);
+    let c = k.div_ceil(r);
+    (r, c)
+}
+
+/// Partition by 2-D grid hash. Cells beyond `k` (when `r·c > k`) fold back
+/// with a modulo, a standard generalization for non-square `k`.
+pub fn partition(g: &Graph, k: usize) -> EdgePartition {
+    let (r, c) = grid_dims(k);
+    let assign = g
+        .edges()
+        .iter()
+        .map(|e| {
+            let row = (mix64(e.u as u64) % r as u64) as usize;
+            let col = (mix64(0x9E37 ^ e.v as u64) % c as u64) as usize;
+            ((row * c + col) % k) as PartitionId
+        })
+        .collect();
+    EdgePartition::new(k, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi, rmat, RmatParams};
+    use crate::partition::hash1d;
+    use crate::partition::quality::replication_factor;
+
+    #[test]
+    fn dims_cover_k() {
+        for k in 1..50 {
+            let (r, c) = grid_dims(k);
+            assert!(r * c >= k, "k={k}");
+            assert!(r <= c);
+        }
+    }
+
+    #[test]
+    fn better_rf_than_1d_on_skewed_graph() {
+        let g = rmat(&RmatParams { scale: 11, edge_factor: 12, ..Default::default() }, 1);
+        let rf_2d = replication_factor(&g, &partition(&g, 16));
+        let rf_1d = replication_factor(&g, &hash1d::partition(&g, 16));
+        assert!(rf_2d < rf_1d, "2d {rf_2d} should beat 1d {rf_1d}");
+    }
+
+    #[test]
+    fn valid_assignment() {
+        let g = erdos_renyi(100, 400, 3);
+        let p = partition(&g, 7);
+        assert!(p.assign.iter().all(|&x| x < 7));
+    }
+}

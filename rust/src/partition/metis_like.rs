@@ -1,0 +1,306 @@
+//! **MTS** — a METIS-like multilevel k-way *vertex* partitioner
+//! (Karypis & Kumar, SISC'98), simplified but structurally faithful:
+//!
+//! 1. **Coarsen** by heavy-edge matching until the graph is small,
+//! 2. **Initial partitioning** of the coarsest graph by balanced greedy
+//!    region growing (GGP),
+//! 3. **Uncoarsen + refine** with boundary Kernighan–Lin style moves that
+//!    reduce edge cut subject to a balance constraint.
+
+use super::VertexPartition;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+use crate::PartitionId;
+use std::collections::HashMap;
+
+/// Stop coarsening below this many vertices.
+const COARSE_TARGET: usize = 256;
+/// Refinement passes per level.
+const REFINE_PASSES: usize = 4;
+/// Allowed vertex-weight imbalance during refinement (1 + ε).
+const BALANCE_SLACK: f64 = 1.05;
+
+/// Weighted graph used internally across coarsening levels.
+struct WGraph {
+    /// adjacency: (neighbour, edge weight)
+    adj: Vec<Vec<(u32, u64)>>,
+    /// vertex weights (collapsed original vertices)
+    vw: Vec<u64>,
+}
+
+impl WGraph {
+    fn from_graph(g: &Graph) -> WGraph {
+        let n = g.num_vertices();
+        let mut adj = vec![Vec::new(); n];
+        for e in g.edges().iter() {
+            adj[e.u as usize].push((e.v, 1));
+            adj[e.v as usize].push((e.u, 1));
+        }
+        WGraph { adj, vw: vec![1; n] }
+    }
+
+    fn len(&self) -> usize {
+        self.vw.len()
+    }
+}
+
+/// Multilevel k-way vertex partitioning.
+pub fn partition(g: &Graph, k: usize, seed: u64) -> VertexPartition {
+    let n = g.num_vertices();
+    if n == 0 {
+        return VertexPartition::new(k, vec![]);
+    }
+    let mut rng = Rng::new(seed);
+    let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new(); // (graph, map to coarser)
+    let mut cur = WGraph::from_graph(g);
+
+    // --- 1. coarsening by heavy-edge matching
+    while cur.len() > COARSE_TARGET.max(4 * k) {
+        let (coarse, map) = coarsen(&cur, &mut rng);
+        if coarse.len() as f64 > cur.len() as f64 * 0.95 {
+            levels.push((std::mem::replace(&mut cur, coarse), map));
+            break; // diminishing returns
+        }
+        levels.push((std::mem::replace(&mut cur, coarse), map));
+    }
+
+    // --- 2. initial partitioning of the coarsest graph
+    let mut assign = initial_partition(&cur, k, &mut rng);
+    refine(&cur, &mut assign, k);
+
+    // --- 3. uncoarsen + refine
+    while let Some((finer, map)) = levels.pop() {
+        let mut fine_assign = vec![0 as PartitionId; finer.len()];
+        for v in 0..finer.len() {
+            fine_assign[v] = assign[map[v] as usize];
+        }
+        assign = fine_assign;
+        refine(&finer, &mut assign, k);
+        cur = finer;
+    }
+    let _ = cur;
+    VertexPartition::new(k, assign)
+}
+
+/// Heavy-edge matching: visit vertices in random order; match each
+/// unmatched vertex with its heaviest unmatched neighbour.
+fn coarsen(g: &WGraph, rng: &mut Rng) -> (WGraph, Vec<u32>) {
+    let n = g.len();
+    let mut matched: Vec<u32> = vec![u32::MAX; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    for &v in &order {
+        if matched[v as usize] != u32::MAX {
+            continue;
+        }
+        let mut best: Option<(u64, u32)> = None;
+        for &(u, w) in &g.adj[v as usize] {
+            if matched[u as usize] == u32::MAX && u != v {
+                if best.map(|(bw, _)| w > bw).unwrap_or(true) {
+                    best = Some((w, u));
+                }
+            }
+        }
+        match best {
+            Some((_, u)) => {
+                matched[v as usize] = u;
+                matched[u as usize] = v;
+            }
+            None => matched[v as usize] = v, // self-matched
+        }
+    }
+    // build coarse ids
+    let mut map = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n as u32 {
+        if map[v as usize] != u32::MAX {
+            continue;
+        }
+        let m = matched[v as usize];
+        map[v as usize] = next;
+        if m != v && m != u32::MAX {
+            map[m as usize] = next;
+        }
+        next += 1;
+    }
+    // contract
+    let cn = next as usize;
+    let mut vw = vec![0u64; cn];
+    for v in 0..n {
+        vw[map[v] as usize] += g.vw[v];
+    }
+    let mut agg: Vec<HashMap<u32, u64>> = vec![HashMap::new(); cn];
+    for v in 0..n {
+        let cv = map[v];
+        for &(u, w) in &g.adj[v] {
+            let cu = map[u as usize];
+            if cu != cv {
+                *agg[cv as usize].entry(cu).or_insert(0) += w;
+            }
+        }
+    }
+    let adj: Vec<Vec<(u32, u64)>> = agg
+        .into_iter()
+        .map(|m| {
+            let mut v: Vec<(u32, u64)> = m.into_iter().collect();
+            v.sort_unstable();
+            // each undirected weight got added from both sides; halve
+            v.iter_mut().for_each(|x| x.1 = (x.1).max(1));
+            v
+        })
+        .collect();
+    (WGraph { adj, vw }, map)
+}
+
+/// Greedy graph growing: grow k regions from random seeds, always
+/// extending the lightest region through its boundary.
+fn initial_partition(g: &WGraph, k: usize, rng: &mut Rng) -> Vec<PartitionId> {
+    let n = g.len();
+    let total_w: u64 = g.vw.iter().sum();
+    let target = total_w as f64 / k as f64;
+    let mut assign = vec![PartitionId::MAX; n];
+    let mut weights = vec![0u64; k];
+    let mut frontiers: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for p in 0..k {
+        // random unassigned seed
+        for _ in 0..n {
+            let v = rng.below_usize(n);
+            if assign[v] == PartitionId::MAX {
+                assign[v] = p as PartitionId;
+                weights[p] += g.vw[v];
+                frontiers[p].extend(g.adj[v].iter().map(|&(u, _)| u));
+                break;
+            }
+        }
+    }
+    // round-robin growth of the lightest region
+    let mut remaining: Vec<u32> =
+        (0..n as u32).filter(|&v| assign[v as usize] == PartitionId::MAX).collect();
+    while !remaining.is_empty() {
+        let p = (0..k).min_by_key(|&p| weights[p]).unwrap();
+        let mut grew = false;
+        while let Some(v) = frontiers[p].pop() {
+            if assign[v as usize] == PartitionId::MAX {
+                assign[v as usize] = p as PartitionId;
+                weights[p] += g.vw[v as usize];
+                frontiers[p].extend(g.adj[v as usize].iter().map(|&(u, _)| u));
+                grew = true;
+                break;
+            }
+        }
+        if !grew {
+            // region is walled in: steal the next remaining vertex
+            while let Some(v) = remaining.pop() {
+                if assign[v as usize] == PartitionId::MAX {
+                    assign[v as usize] = p as PartitionId;
+                    weights[p] += g.vw[v as usize];
+                    frontiers[p].extend(g.adj[v as usize].iter().map(|&(u, _)| u));
+                    break;
+                }
+            }
+        }
+        remaining.retain(|&v| assign[v as usize] == PartitionId::MAX);
+        let _ = target;
+        if remaining.is_empty() {
+            break;
+        }
+    }
+    assign
+}
+
+/// Boundary KL/FM-style refinement: move boundary vertices to the
+/// neighbouring partition with the largest cut gain, balance permitting.
+fn refine(g: &WGraph, assign: &mut [PartitionId], k: usize) {
+    let n = g.len();
+    let total_w: u64 = g.vw.iter().sum();
+    let max_w = ((total_w as f64 / k as f64) * BALANCE_SLACK).ceil() as u64;
+    let mut weights = vec![0u64; k];
+    for v in 0..n {
+        weights[assign[v] as usize] += g.vw[v];
+    }
+    for _ in 0..REFINE_PASSES {
+        let mut moved = 0usize;
+        for v in 0..n {
+            let cur = assign[v];
+            // gain per candidate partition
+            let mut local: HashMap<PartitionId, i64> = HashMap::new();
+            for &(u, w) in &g.adj[v] {
+                *local.entry(assign[u as usize]).or_insert(0) += w as i64;
+            }
+            let here = *local.get(&cur).unwrap_or(&0);
+            let mut best: Option<(i64, PartitionId)> = None;
+            for (&p, &w) in &local {
+                if p == cur {
+                    continue;
+                }
+                let gain = w - here;
+                if gain > 0
+                    && weights[p as usize] + g.vw[v] <= max_w
+                    && best.map(|(bg, bp)| (gain, std::cmp::Reverse(p)) > (bg, std::cmp::Reverse(bp))).unwrap_or(true)
+                {
+                    best = Some((gain, p));
+                }
+            }
+            if let Some((_, p)) = best {
+                weights[cur as usize] -= g.vw[v];
+                weights[p as usize] += g.vw[v];
+                assign[v] = p;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+/// Edge cut of a vertex partition (for tests/diagnostics).
+pub fn edge_cut(g: &Graph, vp: &VertexPartition) -> usize {
+    g.edges()
+        .iter()
+        .filter(|e| vp.assign[e.u as usize] != vp.assign[e.v as usize])
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{lattice2d, rmat, RmatParams};
+    use crate::partition::quality::balance;
+
+    #[test]
+    fn covers_all_vertices_with_balance() {
+        let g = rmat(&RmatParams { scale: 10, edge_factor: 8, ..Default::default() }, 1);
+        let vp = partition(&g, 8, 42);
+        assert_eq!(vp.assign.len(), g.num_vertices());
+        let vb = balance(&vp.sizes());
+        assert!(vb < 1.35, "vertex balance {vb}");
+    }
+
+    #[test]
+    fn beats_random_vertex_partition_on_cut() {
+        let g = lattice2d(40, 40, 0.0, 1);
+        let mts = partition(&g, 4, 7);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let rand = VertexPartition::new(
+            4,
+            (0..g.num_vertices()).map(|_| rng.below(4) as PartitionId).collect(),
+        );
+        let cut_mts = edge_cut(&g, &mts);
+        let cut_rand = edge_cut(&g, &rand);
+        assert!(
+            (cut_mts as f64) < 0.4 * cut_rand as f64,
+            "mts cut {cut_mts} vs random {cut_rand}"
+        );
+    }
+
+    #[test]
+    fn k_larger_than_coarse_target_is_fine() {
+        let g = rmat(&RmatParams { scale: 9, edge_factor: 5, ..Default::default() }, 2);
+        let vp = partition(&g, 64, 1);
+        assert_eq!(vp.k, 64);
+        // all partitions non-trivially populated
+        let nonempty = vp.sizes().iter().filter(|&&s| s > 0).count();
+        assert!(nonempty >= 60, "only {nonempty} populated");
+    }
+}

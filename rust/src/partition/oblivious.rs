@@ -1,0 +1,87 @@
+//! **Oblivious** — PowerGraph's greedy streaming heuristic (Gonzalez et
+//! al., OSDI'12), the `Oblivious` comparator of Table 6: place each edge
+//! using only the endpoint-replica sets accumulated so far.
+//!
+//! Rules (in order): (1) both endpoints share partitions → least loaded of
+//! the intersection; (2) exactly one endpoint is placed → its least-loaded
+//! partition; (3) both placed but disjoint → least-loaded partition of the
+//! endpoint with more remaining (unseen) edges; (4) neither → globally
+//! least loaded.
+
+use super::EdgePartition;
+use crate::graph::Graph;
+use crate::PartitionId;
+
+/// Streaming greedy/oblivious partitioning.
+pub fn partition(g: &Graph, k: usize) -> EdgePartition {
+    let n = g.num_vertices();
+    let words = k.div_ceil(64);
+    let mut replicas = vec![0u64; n * words];
+    let bits = |r: &[u64], v: u32| -> Vec<PartitionId> {
+        let mut out = Vec::new();
+        for w in 0..words {
+            let mut word = r[v as usize * words + w];
+            while word != 0 {
+                let b = word.trailing_zeros() as usize;
+                out.push((w * 64 + b) as PartitionId);
+                word &= word - 1;
+            }
+        }
+        out
+    };
+    let set = |r: &mut [u64], v: u32, p: usize| {
+        r[v as usize * words + p / 64] |= 1 << (p % 64);
+    };
+    let mut remaining: Vec<u32> = (0..n as u32).map(|v| g.degree(v) as u32).collect();
+    let mut sizes = vec![0u64; k];
+    let mut assign = Vec::with_capacity(g.num_edges());
+
+    let least_of = |cands: &[PartitionId], sizes: &[u64]| -> PartitionId {
+        *cands.iter().min_by_key(|&&p| (sizes[p as usize], p)).unwrap()
+    };
+
+    for e in g.edges().iter() {
+        let ru = bits(&replicas, e.u);
+        let rv = bits(&replicas, e.v);
+        let inter: Vec<PartitionId> = ru.iter().copied().filter(|p| rv.contains(p)).collect();
+        let p = if !inter.is_empty() {
+            least_of(&inter, &sizes)
+        } else if !ru.is_empty() && rv.is_empty() {
+            least_of(&ru, &sizes)
+        } else if ru.is_empty() && !rv.is_empty() {
+            least_of(&rv, &sizes)
+        } else if !ru.is_empty() && !rv.is_empty() {
+            // disjoint: side with more remaining edges keeps locality
+            if remaining[e.u as usize] >= remaining[e.v as usize] {
+                least_of(&ru, &sizes)
+            } else {
+                least_of(&rv, &sizes)
+            }
+        } else {
+            least_of(&(0..k as PartitionId).collect::<Vec<_>>(), &sizes)
+        };
+        assign.push(p);
+        sizes[p as usize] += 1;
+        set(&mut replicas, e.u, p as usize);
+        set(&mut replicas, e.v, p as usize);
+        remaining[e.u as usize] -= 1;
+        remaining[e.v as usize] -= 1;
+    }
+    EdgePartition::new(k, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{rmat, RmatParams};
+    use crate::partition::hash1d;
+    use crate::partition::quality::replication_factor;
+
+    #[test]
+    fn beats_1d_on_powerlaw() {
+        let g = rmat(&RmatParams { scale: 11, edge_factor: 12, ..Default::default() }, 5);
+        let rf = replication_factor(&g, &partition(&g, 16));
+        let rf_1d = replication_factor(&g, &hash1d::partition(&g, 16));
+        assert!(rf < rf_1d, "oblivious {rf} vs 1d {rf_1d}");
+    }
+}

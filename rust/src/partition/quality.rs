@@ -1,0 +1,166 @@
+//! Partitioning-quality metrics: replication factor (RF, Def. 1), edge
+//! balance (EB) and vertex balance (VB) as defined in §6.4.
+
+use super::cep::Cep;
+use super::EdgePartition;
+use crate::graph::Graph;
+
+/// Per-partition vertex counts `|V(E_p)|`.
+pub fn vertex_counts(g: &Graph, part: &EdgePartition) -> Vec<u64> {
+    let n = g.num_vertices();
+    let k = part.k;
+    // stamp[v] = last partition that counted v, offset by +1 epoch trick
+    // per partition would need k passes; instead use a bitset-free
+    // two-array approach: last-seen partition per vertex is wrong when a
+    // vertex appears in several partitions, so track (vertex, partition)
+    // via a per-vertex sorted small-vec — cheaper: per-partition stamping
+    // in a single pass using stamp[v] == p requires edges grouped by p.
+    // General single-pass: HashSet of (v, p) is O(cut) memory; fine.
+    let mut counts = vec![0u64; k];
+    let mut seen: std::collections::HashSet<(u32, u32)> =
+        std::collections::HashSet::with_capacity(n * 2);
+    for (eid, e) in g.edges().iter().enumerate() {
+        let p = part.assign[eid];
+        if seen.insert((e.u, p)) {
+            counts[p as usize] += 1;
+        }
+        if seen.insert((e.v, p)) {
+            counts[p as usize] += 1;
+        }
+    }
+    counts
+}
+
+/// Replication factor `RF = (1/|V|) Σ_p |V(E_p)|` (Def. 1). Best = 1.0.
+pub fn replication_factor(g: &Graph, part: &EdgePartition) -> f64 {
+    let counts = vertex_counts(g, part);
+    counts.iter().sum::<u64>() as f64 / g.num_vertices() as f64
+}
+
+/// RF computed directly from chunk metadata for an **ordered** graph —
+/// O(|E|) with epoch stamping, no per-pair hashing (the fast path used by
+/// the figure sweeps).
+pub fn replication_factor_chunked(g_ordered: &Graph, c: &Cep) -> f64 {
+    let n = g_ordered.num_vertices();
+    let mut stamp = vec![0u32; n];
+    let mut total = 0u64;
+    for p in 0..c.k() as u32 {
+        let epoch = p + 1;
+        for i in c.range(p) {
+            let e = g_ordered.edges()[i as usize];
+            if stamp[e.u as usize] != epoch {
+                stamp[e.u as usize] = epoch;
+                total += 1;
+            }
+            if stamp[e.v as usize] != epoch {
+                stamp[e.v as usize] = epoch;
+                total += 1;
+            }
+        }
+    }
+    total as f64 / n as f64
+}
+
+/// Balance factor `B({x_p}) = max(x_p) / mean(x_p)` (§6.4). Best = 1.0.
+pub fn balance(xs: &[u64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let max = *xs.iter().max().unwrap() as f64;
+    let mean = xs.iter().sum::<u64>() as f64 / xs.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+/// Edge balance `EB = B({|E_p|})` — the realized `1 + ε` of Def. 2.
+pub fn edge_balance(part: &EdgePartition) -> f64 {
+    balance(&part.sizes())
+}
+
+/// Vertex balance `VB = B({|V(E_p)|})`.
+pub fn vertex_balance(g: &Graph, part: &EdgePartition) -> f64 {
+    balance(&vertex_counts(g, part))
+}
+
+/// Bundle of the three §6.4 quality metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct Quality {
+    /// replication factor
+    pub rf: f64,
+    /// edge balance (1 + ε)
+    pub eb: f64,
+    /// vertex balance
+    pub vb: f64,
+}
+
+/// Compute RF / EB / VB in one call.
+pub fn quality(g: &Graph, part: &EdgePartition) -> Quality {
+    Quality {
+        rf: replication_factor(g, part),
+        eb: edge_balance(part),
+        vb: vertex_balance(g, part),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::erdos_renyi;
+    use crate::ordering::geo::{self, GeoConfig};
+    use crate::util::proptest::check;
+
+    #[test]
+    fn rf_of_single_partition_is_one() {
+        let g = erdos_renyi(50, 200, 1);
+        let part = EdgePartition::new(1, vec![0; g.num_edges()]);
+        // every non-isolated vertex counted once; generator compacts ids
+        assert!((replication_factor(&g, &part) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rf_worked_example() {
+        // path 0-1-2-3-4 split as {01,12},{23,34}: V(p0)={0,1,2}, V(p1)={2,3,4}
+        let g = GraphBuilder::new().edge(0, 1).edge(1, 2).edge(2, 3).edge(3, 4).build();
+        let part = EdgePartition::new(2, vec![0, 0, 1, 1]);
+        assert!((replication_factor(&g, &part) - 6.0 / 5.0).abs() < 1e-12);
+        assert!((edge_balance(&part) - 1.0).abs() < 1e-12);
+        assert!((vertex_balance(&g, &part) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunked_rf_matches_generic_rf() {
+        check(0xFAC, 16, |rng| {
+            let g = erdos_renyi(80, 400, rng.next_u64());
+            let o = geo::order(&g, &GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 1 });
+            let og = o.apply(&g);
+            let k = 2 + rng.below_usize(9);
+            let c = Cep::new(og.num_edges(), k);
+            let fast = replication_factor_chunked(&og, &c);
+            let slow = replication_factor(&og, &EdgePartition::from_cep(&c));
+            assert!((fast - slow).abs() < 1e-12, "k={k}");
+        });
+    }
+
+    #[test]
+    fn rf_lower_bound_is_one() {
+        check(0xF00, 16, |rng| {
+            let g = erdos_renyi(60, 250, rng.next_u64());
+            let k = 2 + rng.below_usize(6);
+            let assign: Vec<u32> =
+                (0..g.num_edges()).map(|_| rng.below(k as u64) as u32).collect();
+            let part = EdgePartition::new(k, assign);
+            assert!(replication_factor(&g, &part) >= 1.0 - 1e-12);
+        });
+    }
+
+    #[test]
+    fn balance_basics() {
+        assert!((balance(&[5, 5, 5]) - 1.0).abs() < 1e-12);
+        assert!((balance(&[9, 3, 3]) - 1.8).abs() < 1e-12);
+        assert_eq!(balance(&[]), 1.0);
+    }
+}

@@ -1,0 +1,52 @@
+//! Vertex-partition → edge-partition conversion (§6.2): "each edge is
+//! randomly assigned to one of its adjacent vertices' partitions"
+//! (following Bourse et al. [8]). This is how MTS and the vertex-ordering
+//! baselines enter the RF comparisons.
+
+use super::{EdgePartition, VertexPartition};
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Convert with a seeded coin per cross-partition edge.
+pub fn convert(g: &Graph, vp: &VertexPartition, seed: u64) -> EdgePartition {
+    let mut rng = Rng::new(seed);
+    let assign = g
+        .edges()
+        .iter()
+        .map(|e| {
+            let pu = vp.assign[e.u as usize];
+            let pv = vp.assign[e.v as usize];
+            if pu == pv || rng.chance(0.5) {
+                pu
+            } else {
+                pv
+            }
+        })
+        .collect();
+    EdgePartition::new(vp.k, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn internal_edges_keep_their_partition() {
+        let g = GraphBuilder::new().edge(0, 1).edge(2, 3).build();
+        let vp = VertexPartition::new(2, vec![0, 0, 1, 1]);
+        let ep = convert(&g, &vp, 1);
+        assert_eq!(ep.assign, vec![0, 1]);
+    }
+
+    #[test]
+    fn boundary_edges_pick_an_endpoint_partition() {
+        check(0x7E2E, 16, |rng| {
+            let g = GraphBuilder::new().edge(0, 1).build();
+            let vp = VertexPartition::new(2, vec![0, 1]);
+            let ep = convert(&g, &vp, rng.next_u64());
+            assert!(ep.assign[0] == 0 || ep.assign[0] == 1);
+        });
+    }
+}

@@ -1,0 +1,136 @@
+//! Artifact registry: parses `artifacts/manifest.json` (emitted by
+//! `python/compile/aot.py`) and selects the smallest compiled size variant
+//! that fits a partition.
+//!
+//! Every artifact is an HLO-text file with the uniform signature
+//! `(state f32[V], aux f32[V], src i32[E], dst i32[E], weight f32[E],
+//! mask f32[E]) -> (out f32[V],)` — fixed shapes per variant, because AOT
+//! lowering freezes shapes. The engine pads its buffers up to the chosen
+//! variant's capacities.
+
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
+
+/// One compiled size variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    /// vertex capacity (state length)
+    pub vcap: usize,
+    /// edge capacity (src/dst/weight/mask length)
+    pub ecap: usize,
+    /// app name → HLO file path
+    pub files: std::collections::BTreeMap<String, PathBuf>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// artifact directory
+    pub dir: PathBuf,
+    /// available variants sorted by (vcap, ecap)
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let version = j.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut variants = Vec::new();
+        for v in j.get("variants").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            let vcap = v.get("vcap").and_then(|x| x.as_usize()).context("vcap")?;
+            let ecap = v.get("ecap").and_then(|x| x.as_usize()).context("ecap")?;
+            let mut files = std::collections::BTreeMap::new();
+            if let Some(Json::Obj(m)) = v.get("files") {
+                for (app, f) in m {
+                    let fname = f.as_str().context("file name")?;
+                    files.insert(app.clone(), dir.join(fname));
+                }
+            }
+            variants.push(Variant { vcap, ecap, files });
+        }
+        variants.sort_by_key(|v| (v.vcap, v.ecap));
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    /// Default artifact directory: `$EGS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("EGS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest variant with `vcap ≥ nv` and `ecap ≥ ne`.
+    pub fn select(&self, nv: usize, ne: usize) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.vcap >= nv && v.ecap >= ne)
+    }
+
+    /// Index form of [`select`] (stable across clones).
+    pub fn select_index(&self, nv: usize, ne: usize) -> Option<usize> {
+        self.variants.iter().position(|v| v.vcap >= nv && v.ecap >= ne)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("egs_manifest_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn parses_and_selects() {
+        let dir = tmpdir("ok");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "variants": [
+                {"vcap": 1024, "ecap": 8192, "files": {"pagerank": "pr_s.hlo.txt"}},
+                {"vcap": 4096, "ecap": 32768, "files": {"pagerank": "pr_m.hlo.txt"}}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!(m.select(100, 100).unwrap().vcap, 1024);
+        assert_eq!(m.select(2000, 100).unwrap().vcap, 4096);
+        assert_eq!(m.select(2000, 9000).unwrap().ecap, 32768);
+        assert!(m.select(10_000, 1).is_none());
+        assert!(m.variants[0].files["pagerank"].ends_with("pr_s.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = tmpdir("bad");
+        write_manifest(&dir, r#"{"version": 2, "variants": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = tmpdir("none");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::remove_file(dir.join("manifest.json")).ok();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,67 @@
+//! The compute-backend abstraction the engine programs against.
+//!
+//! One superstep of every benchmark app reduces to the same shape: gather
+//! a per-edge message from the source endpoint's state, combine per
+//! destination (sum or min). The backends execute that primitive for a
+//! whole partition at once — [`native::NativeBackend`] in Rust,
+//! [`crate::runtime::executor::XlaBackend`] through a PJRT executable
+//! compiled from the JAX/Pallas artifact.
+
+use crate::Result;
+
+/// Which app step to run (selects the artifact / native kernel).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    /// PageRank: `contrib[dst] += rank[src]·invdeg[src]`
+    PageRank,
+    /// SSSP relax: `dist'[dst] = min(dist[dst], dist[src] + w)`
+    Sssp,
+    /// WCC label: `label'[dst] = min(label[dst], label[src])`
+    Wcc,
+}
+
+impl StepKind {
+    /// Artifact base name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepKind::PageRank => "pagerank",
+            StepKind::Sssp => "sssp",
+            StepKind::Wcc => "wcc",
+        }
+    }
+}
+
+/// One partition-local superstep request. All arrays are already padded by
+/// the caller to the backend's chosen capacity; `mask[e] = 1.0` for real
+/// edges, `0.0` for padding.
+#[derive(Clone, Debug)]
+pub struct StepRequest<'a> {
+    /// which kernel
+    pub kind: StepKind,
+    /// local vertex state (rank / dist / label), length = vertex capacity
+    pub state: &'a [f32],
+    /// auxiliary per-vertex input (PageRank: 1/degree; others: unused)
+    pub aux: &'a [f32],
+    /// edge sources (local indices)
+    pub src: &'a [i32],
+    /// edge destinations (local indices)
+    pub dst: &'a [i32],
+    /// per-edge weight (SSSP) — same length as src
+    pub weight: &'a [f32],
+    /// validity mask per edge
+    pub mask: &'a [f32],
+}
+
+/// A compute backend executes step requests.
+pub trait ComputeBackend: Send {
+    /// Backend name for logs.
+    fn name(&self) -> &'static str;
+    /// Capacities `(vcap, ecap)` the caller must pad its buffers to for a
+    /// partition of `nv` vertices and `ne` directed edges. Native compute
+    /// is shape-agnostic (identity); the XLA backend returns the smallest
+    /// compiled artifact variant that fits.
+    fn capacity_for(&self, nv: usize, ne: usize) -> Result<(usize, usize)>;
+    /// Run one superstep; returns the per-vertex output (length = vertex
+    /// capacity of the request's `state`).
+    fn step(&mut self, req: &StepRequest<'_>) -> Result<Vec<f32>>;
+}

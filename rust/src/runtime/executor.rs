@@ -1,0 +1,189 @@
+//! The XLA execution actor: a dedicated thread owns the PJRT CPU client
+//! and all compiled executables; engine workers talk to it through a
+//! cloneable [`XlaBackend`] handle over `std::sync::mpsc` (the vendored
+//! crate set has no tokio — see DESIGN.md §3).
+//!
+//! Python never runs here: artifacts are HLO **text** produced once by
+//! `make artifacts` and compiled by the PJRT client at load time
+//! (`HloModuleProto::from_text_file` reassigns 64-bit jax instruction ids,
+//! which is why text — not serialized protos — is the interchange format).
+
+use super::artifact::Manifest;
+use super::backend::{ComputeBackend, StepKind, StepRequest};
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+
+/// Owned copy of a step request that can cross the channel.
+struct OwnedRequest {
+    kind: StepKind,
+    state: Vec<f32>,
+    aux: Vec<f32>,
+    src: Vec<i32>,
+    dst: Vec<i32>,
+    weight: Vec<f32>,
+    mask: Vec<f32>,
+    variant: usize,
+    reply: Sender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Step(Box<OwnedRequest>),
+    Shutdown,
+}
+
+/// Cloneable handle to the executor actor. Each clone may be moved to a
+/// different engine worker thread; all requests serialize through the
+/// single PJRT client thread (matching one compute device).
+pub struct XlaBackend {
+    tx: Sender<Msg>,
+    manifest: Manifest,
+}
+
+impl Clone for XlaBackend {
+    fn clone(&self) -> Self {
+        XlaBackend { tx: self.tx.clone(), manifest: self.manifest.clone() }
+    }
+}
+
+impl XlaBackend {
+    /// Start the actor thread over the artifacts in `manifest`.
+    pub fn start(manifest: Manifest) -> Result<XlaBackend> {
+        let (tx, rx) = channel::<Msg>();
+        let m = manifest.clone();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("xla-executor".into())
+            .spawn(move || actor_main(m, rx, ready_tx))
+            .context("spawn xla executor")?;
+        ready_rx.recv().context("executor start")??;
+        Ok(XlaBackend { tx, manifest })
+    }
+
+    /// Start from the default artifact directory.
+    pub fn from_default_dir() -> Result<XlaBackend> {
+        let dir = Manifest::default_dir();
+        let manifest = Manifest::load(&dir)?;
+        XlaBackend::start(manifest)
+    }
+
+    /// Stop the actor (best effort; also happens on drop of all handles).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn capacity_for(&self, nv: usize, ne: usize) -> Result<(usize, usize)> {
+        self.manifest
+            .select(nv, ne)
+            .map(|v| (v.vcap, v.ecap))
+            .ok_or_else(|| anyhow!("no artifact variant fits nv={nv} ne={ne}"))
+    }
+
+    fn step(&mut self, req: &StepRequest<'_>) -> Result<Vec<f32>> {
+        let variant = self
+            .manifest
+            .select_index(req.state.len(), req.src.len())
+            .ok_or_else(|| {
+                anyhow!("no variant fits nv={} ne={}", req.state.len(), req.src.len())
+            })?;
+        let v = &self.manifest.variants[variant];
+        if v.vcap != req.state.len() || v.ecap != req.src.len() {
+            bail!(
+                "request must be padded to variant capacity (v{}/e{}), got v{}/e{}",
+                v.vcap,
+                v.ecap,
+                req.state.len(),
+                req.src.len()
+            );
+        }
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Msg::Step(Box::new(OwnedRequest {
+                kind: req.kind,
+                state: req.state.to_vec(),
+                aux: req.aux.to_vec(),
+                src: req.src.to_vec(),
+                dst: req.dst.to_vec(),
+                weight: req.weight.to_vec(),
+                mask: req.mask.to_vec(),
+                variant,
+                reply: reply_tx,
+            })))
+            .map_err(|_| anyhow!("xla executor terminated"))?;
+        reply_rx.recv().map_err(|_| anyhow!("xla executor dropped reply"))?
+    }
+}
+
+fn actor_main(
+    manifest: Manifest,
+    rx: std::sync::mpsc::Receiver<Msg>,
+    ready: Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e}")));
+            return;
+        }
+    };
+    // (kind, variant) → compiled executable, compiled lazily
+    let mut exes: HashMap<(StepKind, usize), xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Step(req) => {
+                let result = run_step(&client, &manifest, &mut exes, &req);
+                let _ = req.reply.send(result);
+            }
+        }
+    }
+}
+
+fn run_step(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    exes: &mut HashMap<(StepKind, usize), xla::PjRtLoadedExecutable>,
+    req: &OwnedRequest,
+) -> Result<Vec<f32>> {
+    let key = (req.kind, req.variant);
+    if !exes.contains_key(&key) {
+        let variant = &manifest.variants[req.variant];
+        let path = variant
+            .files
+            .get(req.kind.name())
+            .ok_or_else(|| anyhow!("no {} artifact in variant {}", req.kind.name(), req.variant))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("load {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+        exes.insert(key, exe);
+    }
+    let exe = exes.get(&key).unwrap();
+    let args = [
+        xla::Literal::vec1(&req.state),
+        xla::Literal::vec1(&req.aux),
+        xla::Literal::vec1(&req.src),
+        xla::Literal::vec1(&req.dst),
+        xla::Literal::vec1(&req.weight),
+        xla::Literal::vec1(&req.mask),
+    ];
+    let result = exe
+        .execute::<xla::Literal>(&args)
+        .map_err(|e| anyhow!("execute {:?}: {e}", req.kind))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("sync: {e}"))?;
+    // aot.py lowers with return_tuple=True → 1-tuple
+    let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+    out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+}

@@ -1,0 +1,12 @@
+//! Execution runtime for the per-partition compute: loads the AOT
+//! artifacts produced by `python/compile/aot.py` (HLO text) into a PJRT
+//! CPU client and executes them from the engine's hot path. A pure-Rust
+//! [`native`] backend implements identical semantics for artifact-free
+//! testing and differential validation.
+
+pub mod artifact;
+pub mod backend;
+pub mod executor;
+pub mod native;
+
+pub use backend::{ComputeBackend, StepKind, StepRequest};

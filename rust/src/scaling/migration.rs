@@ -1,0 +1,131 @@
+//! Migration planning: diff two assignments into per-(source, dest) edge
+//! transfer lists, verify conservation, and produce the byte volumes the
+//! network emulator prices.
+
+use crate::partition::EdgePartition;
+use crate::PartitionId;
+use std::collections::HashMap;
+
+/// A planned transfer of a contiguous batch of edges between two workers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Transfer {
+    /// sending partition
+    pub from: PartitionId,
+    /// receiving partition
+    pub to: PartitionId,
+    /// edge ids to move
+    pub edges: Vec<u64>,
+}
+
+/// A full migration plan between two partitionings of the same edge set.
+#[derive(Clone, Debug, Default)]
+pub struct MigrationPlan {
+    /// transfers grouped by (from, to)
+    pub transfers: Vec<Transfer>,
+}
+
+impl MigrationPlan {
+    /// Diff `old` → `new` (must cover the same edge ids).
+    pub fn diff(old: &EdgePartition, new: &EdgePartition) -> MigrationPlan {
+        assert_eq!(old.assign.len(), new.assign.len(), "edge sets differ");
+        let mut buckets: HashMap<(PartitionId, PartitionId), Vec<u64>> = HashMap::new();
+        for (eid, (&o, &n)) in old.assign.iter().zip(new.assign.iter()).enumerate() {
+            if o != n {
+                buckets.entry((o, n)).or_default().push(eid as u64);
+            }
+        }
+        let mut transfers: Vec<Transfer> = buckets
+            .into_iter()
+            .map(|((from, to), edges)| Transfer { from, to, edges })
+            .collect();
+        transfers.sort_by_key(|t| (t.from, t.to));
+        MigrationPlan { transfers }
+    }
+
+    /// Total migrated edges.
+    pub fn migrated_edges(&self) -> u64 {
+        self.transfers.iter().map(|t| t.edges.len() as u64).sum()
+    }
+
+    /// Bytes on the wire for a given per-edge payload: 8 B of structure
+    /// (two u32 endpoints) plus `value_bytes` of application state
+    /// (Fig 14 sweeps 0–32 B).
+    pub fn bytes(&self, value_bytes: u64) -> u64 {
+        self.migrated_edges() * (8 + value_bytes)
+    }
+
+    /// Per-sender byte volumes (the network emulator serializes per link).
+    pub fn per_sender_bytes(&self, value_bytes: u64, k: usize) -> Vec<u64> {
+        let mut out = vec![0u64; k];
+        for t in &self.transfers {
+            out[t.from as usize] += t.edges.len() as u64 * (8 + value_bytes);
+        }
+        out
+    }
+
+    /// Check conservation: every edge appears at most once as moved, and
+    /// destinations match `new`.
+    pub fn validate(&self, old: &EdgePartition, new: &EdgePartition) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        for t in &self.transfers {
+            for &e in &t.edges {
+                if !seen.insert(e) {
+                    return false;
+                }
+                if old.assign[e as usize] != t.from || new.assign[e as usize] != t.to {
+                    return false;
+                }
+            }
+        }
+        // edges not in plan must be unchanged
+        let planned = seen.len();
+        let changed = old
+            .assign
+            .iter()
+            .zip(new.assign.iter())
+            .filter(|(o, n)| o != n)
+            .count();
+        planned == changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::cep::Cep;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn diff_of_identical_is_empty() {
+        let p = EdgePartition::new(3, vec![0, 1, 2, 0, 1]);
+        let plan = MigrationPlan::diff(&p, &p);
+        assert_eq!(plan.migrated_edges(), 0);
+        assert!(plan.validate(&p, &p));
+    }
+
+    #[test]
+    fn diff_tracks_moves() {
+        let old = EdgePartition::new(2, vec![0, 0, 1, 1]);
+        let new = EdgePartition::new(2, vec![0, 1, 1, 0]);
+        let plan = MigrationPlan::diff(&old, &new);
+        assert_eq!(plan.migrated_edges(), 2);
+        assert!(plan.validate(&old, &new));
+        assert_eq!(plan.bytes(0), 16);
+        assert_eq!(plan.bytes(8), 32);
+    }
+
+    #[test]
+    fn plan_validates_for_random_cep_rescale() {
+        check(0x9147, 24, |rng| {
+            let m = 1000 + rng.below_usize(5000);
+            let k0 = 2 + rng.below_usize(20);
+            let k1 = 2 + rng.below_usize(20);
+            let old = EdgePartition::from_cep(&Cep::new(m, k0));
+            let new = EdgePartition::from_cep(&Cep::new(m, k1));
+            let plan = MigrationPlan::diff(&old, &new);
+            assert!(plan.validate(&old, &new));
+            let per = plan.per_sender_bytes(4, k0.max(k1));
+            assert_eq!(per.iter().sum::<u64>(), plan.bytes(4));
+        });
+    }
+}

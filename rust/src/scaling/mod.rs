@@ -1,0 +1,9 @@
+//! Dynamic scaling: the `sc(E_k, ±x)` operation (Def. 3), migration
+//! planning and cost accounting (Theorem 2), the network-bandwidth
+//! emulator behind Fig 14, and the ScaleOut/ScaleIn scenarios of §6.4.2.
+
+pub mod migration;
+pub mod network;
+pub mod scenario;
+pub mod scaler;
+pub mod theory;

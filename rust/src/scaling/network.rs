@@ -1,0 +1,130 @@
+//! Network bandwidth emulator (Fig 14): prices a migration plan under a
+//! given link bandwidth and per-edge value size, mirroring the paper's
+//! EC2-derived sweep (1–32 Gbps, 0–32 B/edge).
+//!
+//! Model: every worker has one full-duplex NIC at `bandwidth`; a shuffle
+//! phase takes `max_p(bytes sent or received by p)/bandwidth` plus a
+//! per-barrier latency. CEP/1D migrate in **one** shuffle; BVC adds its
+//! refinement rounds as extra barriers each with their own (smaller)
+//! shuffle — the effect the paper observes in Fig 14.
+
+use super::migration::MigrationPlan;
+use crate::partition::EdgePartition;
+
+/// Emulated cluster network.
+#[derive(Clone, Copy, Debug)]
+pub struct Network {
+    /// per-NIC bandwidth in bits/second (e.g. `1e9` = 1 Gbps)
+    pub bandwidth_bps: f64,
+    /// per-barrier synchronization latency in seconds
+    pub barrier_latency_s: f64,
+}
+
+impl Network {
+    /// EC2-style presets used by the Fig 14 sweep.
+    pub fn gbps(gbits: f64) -> Network {
+        Network { bandwidth_bps: gbits * 1e9, barrier_latency_s: 0.001 }
+    }
+
+    /// Wall-clock seconds for one shuffle phase given per-worker sent and
+    /// received byte volumes (NIC-bound: the max over workers and
+    /// directions governs).
+    pub fn shuffle_time(&self, sent: &[u64], recv: &[u64]) -> f64 {
+        let max_bytes = sent.iter().chain(recv.iter()).copied().max().unwrap_or(0);
+        (max_bytes as f64 * 8.0) / self.bandwidth_bps + self.barrier_latency_s
+    }
+
+    /// Price a migration plan executed as a single shuffle (CEP, 1D).
+    pub fn migration_time(&self, plan: &MigrationPlan, k: usize, value_bytes: u64) -> f64 {
+        let mut sent = vec![0u64; k];
+        let mut recv = vec![0u64; k];
+        for t in &plan.transfers {
+            let b = t.edges.len() as u64 * (8 + value_bytes);
+            sent[t.from as usize] += b;
+            recv[t.to as usize] += b;
+        }
+        self.shuffle_time(&sent, &recv)
+    }
+
+    /// Price a BVC migration: ring shuffle + `refine_rounds` barrier-
+    /// synchronized refinement shuffles (refined bytes spread over rounds).
+    pub fn bvc_migration_time(
+        &self,
+        ring_plan: &MigrationPlan,
+        refine_migrated: u64,
+        refine_rounds: u32,
+        k: usize,
+        value_bytes: u64,
+    ) -> f64 {
+        let mut t = self.migration_time(ring_plan, k, value_bytes);
+        if refine_rounds > 0 {
+            let per_round_bytes = refine_migrated * (8 + value_bytes) / refine_rounds as u64;
+            for _ in 0..refine_rounds {
+                // refinement rounds are pairwise sends: NIC-bound on the
+                // single largest donor, approximated by the round volume
+                t += per_round_bytes as f64 * 8.0 / self.bandwidth_bps
+                    + self.barrier_latency_s;
+            }
+        }
+        t
+    }
+}
+
+/// Convenience: price moving between two explicit assignments.
+pub fn time_to_migrate(
+    net: &Network,
+    old: &EdgePartition,
+    new: &EdgePartition,
+    value_bytes: u64,
+) -> f64 {
+    let plan = MigrationPlan::diff(old, new);
+    net.migration_time(&plan, old.k.max(new.k), value_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::cep::Cep;
+
+    #[test]
+    fn faster_links_migrate_faster() {
+        let old = EdgePartition::from_cep(&Cep::new(100_000, 8));
+        let new = EdgePartition::from_cep(&Cep::new(100_000, 9));
+        let net1 = Network::gbps(1.0);
+        let net32 = Network::gbps(32.0);
+        let slow = time_to_migrate(&net1, &old, &new, 16);
+        let fast = time_to_migrate(&net32, &old, &new, 16);
+        assert!(fast < slow, "fast {fast} vs slow {slow}");
+        // transfer component (minus the fixed barrier) scales ~32x
+        let ratio =
+            (slow - net1.barrier_latency_s) / (fast - net32.barrier_latency_s);
+        assert!((ratio - 32.0).abs() < 0.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn bigger_values_cost_more() {
+        let old = EdgePartition::from_cep(&Cep::new(100_000, 8));
+        let new = EdgePartition::from_cep(&Cep::new(100_000, 9));
+        let net = Network::gbps(4.0);
+        let small = time_to_migrate(&net, &old, &new, 0);
+        let big = time_to_migrate(&net, &old, &new, 32);
+        assert!(big > small);
+    }
+
+    #[test]
+    fn bvc_rounds_add_latency() {
+        let net = Network::gbps(8.0);
+        let plan = MigrationPlan::default();
+        let none = net.bvc_migration_time(&plan, 0, 0, 8, 8);
+        let many = net.bvc_migration_time(&plan, 10_000, 20, 8, 8);
+        assert!(many > none + 19.0 * net.barrier_latency_s);
+    }
+
+    #[test]
+    fn empty_plan_costs_one_barrier() {
+        let net = Network::gbps(1.0);
+        let plan = MigrationPlan::default();
+        let t = net.migration_time(&plan, 4, 8);
+        assert!((t - net.barrier_latency_s).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,230 @@
+//! `sc(E_k, ±x)` (Def. 3) for the three methods compared in §6.4.3:
+//! CEP (ours), BVC (consistent hashing) and 1D (plain rehash).
+
+use crate::partition::bvc::BvcState;
+use crate::partition::cep::Cep;
+use crate::partition::{hash1d, EdgePartition};
+use crate::PartitionId;
+
+/// A dynamic-scaling engine: owns whatever state lets it recompute
+/// assignments when `k` changes, and reports the edges that moved.
+pub trait DynamicScaler {
+    /// Human name for tables.
+    fn name(&self) -> &'static str;
+    /// Current partition count.
+    fn k(&self) -> usize;
+    /// Current assignment (edge id → partition).
+    fn current(&self) -> EdgePartition;
+    /// Rescale to `new_k`; returns the number of migrated edges.
+    fn scale_to(&mut self, new_k: usize) -> u64;
+}
+
+/// CEP scaler — O(1) metadata recompute; migrated edges are the chunk
+/// boundary shifts of Theorem 2.
+pub struct CepScaler {
+    cep: Cep,
+}
+
+impl CepScaler {
+    /// Start from `m` ordered edges in `k` chunks.
+    pub fn new(m: usize, k: usize) -> CepScaler {
+        CepScaler { cep: Cep::new(m, k) }
+    }
+
+    /// Access the underlying chunk metadata.
+    pub fn cep(&self) -> &Cep {
+        &self.cep
+    }
+}
+
+impl DynamicScaler for CepScaler {
+    fn name(&self) -> &'static str {
+        "cep"
+    }
+
+    fn k(&self) -> usize {
+        self.cep.k()
+    }
+
+    fn current(&self) -> EdgePartition {
+        EdgePartition::from_cep(&self.cep)
+    }
+
+    fn scale_to(&mut self, new_k: usize) -> u64 {
+        let old = self.cep;
+        self.cep = self.cep.rescaled(new_k);
+        migration_between_ceps(&old, &self.cep)
+    }
+}
+
+/// Count edges whose chunk owner differs between two CEP layouts — an
+/// O(k+k') sweep over chunk boundaries (not O(m)): between consecutive
+/// boundary points the owner pair is constant.
+pub fn migration_between_ceps(a: &Cep, b: &Cep) -> u64 {
+    assert_eq!(a.num_edges(), b.num_edges());
+    let m = a.num_edges();
+    if m == 0 {
+        return 0;
+    }
+    // merge the two boundary sets; within each segment both owners fixed
+    let mut cuts: Vec<u64> = Vec::with_capacity(a.k() + b.k() + 1);
+    for p in 0..=a.k() as u64 {
+        cuts.push(crate::partition::cep::chunk_start(m, a.k() as u64, p));
+    }
+    for p in 0..=b.k() as u64 {
+        cuts.push(crate::partition::cep::chunk_start(m, b.k() as u64, p));
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    let mut moved = 0u64;
+    for w in cuts.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        if lo >= m {
+            break;
+        }
+        if a.partition_of(lo) != b.partition_of(lo) {
+            moved += hi.min(m) - lo;
+        }
+    }
+    moved
+}
+
+/// BVC scaler — wraps [`BvcState`].
+pub struct BvcScaler {
+    state: BvcState,
+}
+
+impl BvcScaler {
+    /// Build the ring for `m` edges in `k` partitions.
+    pub fn new(m: usize, k: usize, seed: u64) -> BvcScaler {
+        BvcScaler { state: BvcState::build(m, k, seed) }
+    }
+
+    /// Access refinement statistics of the *last* scale (for Fig 14).
+    pub fn state(&self) -> &BvcState {
+        &self.state
+    }
+}
+
+impl DynamicScaler for BvcScaler {
+    fn name(&self) -> &'static str {
+        "bvc"
+    }
+
+    fn k(&self) -> usize {
+        self.state.k()
+    }
+
+    fn current(&self) -> EdgePartition {
+        self.state.to_partition()
+    }
+
+    fn scale_to(&mut self, new_k: usize) -> u64 {
+        self.state.scale_to(new_k).total_migrated()
+    }
+}
+
+/// 1D scaler — rehash everything; migrates ~`(1 − 1/k')·m` edges.
+pub struct Hash1dScaler {
+    m: usize,
+    k: usize,
+}
+
+impl Hash1dScaler {
+    /// `m` edges in `k` partitions.
+    pub fn new(m: usize, k: usize) -> Hash1dScaler {
+        Hash1dScaler { m, k }
+    }
+}
+
+impl DynamicScaler for Hash1dScaler {
+    fn name(&self) -> &'static str {
+        "1d"
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn current(&self) -> EdgePartition {
+        let assign: Vec<PartitionId> =
+            (0..self.m as u64).map(|e| assign_mod(e, self.k)).collect();
+        EdgePartition::new(self.k, assign)
+    }
+
+    fn scale_to(&mut self, new_k: usize) -> u64 {
+        let old_k = self.k;
+        self.k = new_k;
+        (0..self.m as u64).filter(|&e| assign_mod(e, old_k) != assign_mod(e, new_k)).count()
+            as u64
+    }
+}
+
+#[inline]
+fn assign_mod(eid: u64, k: usize) -> PartitionId {
+    hash1d::assign_one(eid, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    /// Differential test: the boundary-sweep migration count must equal a
+    /// naive per-edge comparison.
+    #[test]
+    fn cep_migration_matches_naive() {
+        check(0x5CA1E, 48, |rng| {
+            let m = 100 + rng.below_usize(5000);
+            let k0 = 1 + rng.below_usize(40);
+            let k1 = 1 + rng.below_usize(40);
+            let a = Cep::new(m, k0);
+            let b = Cep::new(m, k1);
+            let fast = migration_between_ceps(&a, &b);
+            let naive = (0..m as u64)
+                .filter(|&i| a.partition_of(i) != b.partition_of(i))
+                .count() as u64;
+            assert_eq!(fast, naive, "m={m} {k0}->{k1}");
+        });
+    }
+
+    #[test]
+    fn cep_scaler_noop_when_k_unchanged() {
+        let mut s = CepScaler::new(10_000, 8);
+        assert_eq!(s.scale_to(8), 0);
+    }
+
+    #[test]
+    fn one_d_moves_most_edges() {
+        let mut s = Hash1dScaler::new(100_000, 10);
+        let moved = s.scale_to(11);
+        // expectation: (1 − 1/11)·m ≈ 0.909·m
+        let frac = moved as f64 / 100_000.0;
+        assert!(frac > 0.85 && frac < 0.95, "frac={frac}");
+    }
+
+    #[test]
+    fn cep_moves_fewer_than_1d_on_increment() {
+        let m = 200_000;
+        let mut cep = CepScaler::new(m, 16);
+        let mut h1 = Hash1dScaler::new(m, 16);
+        let cep_moved = cep.scale_to(17);
+        let h1_moved = h1.scale_to(17);
+        assert!(
+            cep_moved < h1_moved,
+            "cep {cep_moved} must move fewer edges than 1d {h1_moved}"
+        );
+        // Corollary 1: ≈ m/2 for x=1
+        let frac = cep_moved as f64 / m as f64;
+        assert!(frac > 0.40 && frac < 0.60, "corollary-1 frac={frac}");
+    }
+
+    #[test]
+    fn scalers_report_consistent_current() {
+        let mut s = CepScaler::new(1000, 4);
+        s.scale_to(6);
+        let p = s.current();
+        assert_eq!(p.k, 6);
+        assert_eq!(p.assign.len(), 1000);
+    }
+}

@@ -1,0 +1,96 @@
+//! Dynamic-scaling scenarios (§6.4.2): **ScaleOut** adds one partition
+//! every `period` iterations (26 → 36 in the paper), **ScaleIn** removes
+//! one (36 → 26). Generic over the step sequence so examples can also run
+//! spot-market traces.
+
+/// One scripted scaling event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScaleEvent {
+    /// fires after this many completed application iterations
+    pub at_iteration: u32,
+    /// target partition count
+    pub target_k: usize,
+}
+
+/// A scripted scenario: initial k plus a sequence of events.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// descriptive name ("scale-out", "scale-in", ...)
+    pub name: String,
+    /// starting partition count
+    pub initial_k: usize,
+    /// events in firing order
+    pub events: Vec<ScaleEvent>,
+    /// total application iterations to run
+    pub total_iterations: u32,
+}
+
+impl Scenario {
+    /// Paper ScaleOut: k0 → k0+steps, one partition every `period` iters.
+    pub fn scale_out(k0: usize, steps: usize, period: u32) -> Scenario {
+        let events = (1..=steps)
+            .map(|s| ScaleEvent { at_iteration: s as u32 * period, target_k: k0 + s })
+            .collect();
+        Scenario {
+            name: format!("scale-out {k0}->{}", k0 + steps),
+            initial_k: k0,
+            events,
+            total_iterations: (steps as u32 + 1) * period,
+        }
+    }
+
+    /// Paper ScaleIn: k0 → k0−steps.
+    pub fn scale_in(k0: usize, steps: usize, period: u32) -> Scenario {
+        let events = (1..=steps)
+            .map(|s| ScaleEvent { at_iteration: s as u32 * period, target_k: k0 - s })
+            .collect();
+        Scenario {
+            name: format!("scale-in {k0}->{}", k0 - steps),
+            initial_k: k0,
+            events,
+            total_iterations: (steps as u32 + 1) * period,
+        }
+    }
+
+    /// The paper's exact §6.4.2 pair at reduced scale: (out, in).
+    pub fn paper_pair(k_lo: usize, k_hi: usize, period: u32) -> (Scenario, Scenario) {
+        (
+            Scenario::scale_out(k_lo, k_hi - k_lo, period),
+            Scenario::scale_in(k_hi, k_hi - k_lo, period),
+        )
+    }
+
+    /// Event scheduled at iteration `it`, if any.
+    pub fn event_at(&self, it: u32) -> Option<&ScaleEvent> {
+        self.events.iter().find(|e| e.at_iteration == it)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_out_schedule() {
+        let s = Scenario::scale_out(26, 10, 10);
+        assert_eq!(s.initial_k, 26);
+        assert_eq!(s.events.len(), 10);
+        assert_eq!(s.events[0], ScaleEvent { at_iteration: 10, target_k: 27 });
+        assert_eq!(s.events[9], ScaleEvent { at_iteration: 100, target_k: 36 });
+        assert_eq!(s.total_iterations, 110);
+    }
+
+    #[test]
+    fn scale_in_schedule() {
+        let s = Scenario::scale_in(36, 10, 10);
+        assert_eq!(s.events[0].target_k, 35);
+        assert_eq!(s.events[9].target_k, 26);
+    }
+
+    #[test]
+    fn event_lookup() {
+        let s = Scenario::scale_out(4, 2, 5);
+        assert!(s.event_at(5).is_some());
+        assert!(s.event_at(6).is_none());
+    }
+}

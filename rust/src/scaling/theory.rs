@@ -1,0 +1,93 @@
+//! Theorem 2 / Corollary 1 — closed-form migration cost of CEP scaling.
+
+/// Theorem 2: approximate number of migrated edges when scaling out from
+/// `k` to `k+x` partitions over `m` edges:
+///
+/// ```text
+///   x·m/(2k(k+x)) · ⌈k/x⌉·(⌈k/x⌉+1)  +  m/k · (k − ⌈k/x⌉)
+/// ```
+///
+/// Scaling in from `k+x` to `k` costs the same (reverse operation).
+pub fn theorem2_migrated(m: u64, k: u64, x: u64) -> f64 {
+    assert!(k >= 1 && x >= 1);
+    let m = m as f64;
+    let kf = k as f64;
+    let xf = x as f64;
+    let ratio = (kf / xf).ceil();
+    xf * m / (2.0 * kf * (kf + xf)) * ratio * (ratio + 1.0) + m / kf * (kf - ratio)
+}
+
+/// Corollary 1: for `x = 1` the cost is approximately `m/2`.
+pub fn corollary1_migrated(m: u64) -> f64 {
+    m as f64 / 2.0
+}
+
+/// Expected migration of the 1D rehash comparator: `(k/(k+x))·m` of edges
+/// move on average (§3.3's discussion).
+pub fn random_rehash_migrated(m: u64, k: u64, x: u64) -> f64 {
+    m as f64 * k as f64 / (k + x) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::cep::Cep;
+    use crate::scaling::scaler::migration_between_ceps;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn corollary1_is_theorem2_at_x1() {
+        // x=1: ⌈k/1⌉ = k ⇒ first term = m(k+1)/(2(k+1)) = m/2, second 0
+        for k in [2u64, 5, 26, 100] {
+            let t = theorem2_migrated(1_000_000, k, 1);
+            assert!((t - 500_000.0).abs() < 1.0, "k={k}: {t}");
+        }
+        assert_eq!(corollary1_migrated(1_000_000), 500_000.0);
+    }
+
+    /// The closed form must match the *measured* CEP migration within the
+    /// paper's approximation assumptions (|E| ≫ k, x).
+    #[test]
+    fn matches_measured_migration() {
+        check(0x7402, 24, |rng| {
+            let m = 500_000 + rng.below_usize(500_000);
+            let k = 4 + rng.below(60);
+            let x = 1 + rng.below(8);
+            let a = Cep::new(m, k as usize);
+            let b = Cep::new(m, (k + x) as usize);
+            let measured = migration_between_ceps(&a, &b) as f64;
+            let predicted = theorem2_migrated(m as u64, k, x);
+            let rel = (measured - predicted).abs() / m as f64;
+            assert!(
+                rel < 0.02,
+                "m={m} k={k} x={x}: measured {measured} vs predicted {predicted} (rel {rel})"
+            );
+        });
+    }
+
+    #[test]
+    fn scale_in_symmetry() {
+        // from k+x to k must equal from k to k+x (reverse op)
+        let m = 300_000;
+        for (k, x) in [(10u64, 3u64), (26, 10), (8, 1)] {
+            let a = Cep::new(m, k as usize);
+            let b = Cep::new(m, (k + x) as usize);
+            assert_eq!(
+                migration_between_ceps(&a, &b),
+                migration_between_ceps(&b, &a)
+            );
+        }
+    }
+
+    #[test]
+    fn cep_beats_random_rehash_for_incremental_scaling() {
+        // the paper's improvement claim is for the practical regime of
+        // small x (processes added/removed incrementally, §3.3); for large
+        // x (e.g. k=26, x=10) Theorem 2 itself exceeds the random rehash
+        for (k, x) in [(8u64, 1u64), (16, 1), (26, 1), (16, 2), (64, 4)] {
+            let cep = theorem2_migrated(1_000_000, k, x);
+            let rnd = random_rehash_migrated(1_000_000, k, x);
+            assert!(cep < rnd, "k={k} x={x}: cep {cep} vs random {rnd}");
+        }
+    }
+}

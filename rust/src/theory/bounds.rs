@@ -1,0 +1,196 @@
+//! Table 2 — theoretical RF upper bounds on a Clauset power-law graph
+//! (`Pr[d] ∝ d^(−α)`, `d_min = 1`, `|V| = 10⁶`, `k = 256`).
+//!
+//! * **Proposed** is Theorem 6 evaluated exactly:
+//!   `E[(|V|+|E|+k)/|V|] ≈ 1 + ζ(α−1)/(2ζ(α))` — this reproduces the
+//!   paper's row to the last digit.
+//! * **Random/Grid/DBH/BVC** use standard occupancy models over the zeta
+//!   degree distribution (documented per function). They track the paper's
+//!   magnitudes closely but are *our* derivations — the source papers'
+//!   exact bound expressions are not recoverable from the text.
+//! * **NE/HDRF** reported bounds are reproduced by log-linear calibration
+//!   to the four published values (their source analyses are not
+//!   re-derivable from this paper's text); flagged as `calibrated`.
+
+use super::zeta::ZetaDistribution;
+
+/// Degree-truncation for the numeric expectations: the natural cutoff of a
+/// power-law graph with |V| = 10⁶ vertices.
+fn d_max(alpha: f64, num_vertices: f64) -> u64 {
+    num_vertices.powf(1.0 / (alpha - 1.0)).min(5e6) as u64
+}
+
+/// Proposed method (Theorem 6): `1 + ζ(α−1)/(2ζ(α))`.
+pub fn proposed(alpha: f64) -> f64 {
+    let z = ZetaDistribution::new(alpha);
+    1.0 + z.mean() / 2.0
+}
+
+/// Random (1D hash): PowerGraph-style engines materialize each undirected
+/// edge as two directed copies, so a degree-`d` vertex participates in
+/// `2d` independent placements: `E[k(1−(1−1/k)^{2d})]`.
+pub fn random_1d(alpha: f64, k: u64, num_vertices: f64) -> f64 {
+    let z = ZetaDistribution::new(alpha);
+    let kf = k as f64;
+    z.expect(d_max(alpha, num_vertices), |d| {
+        kf * (1.0 - (1.0 - 1.0 / kf).powi(2 * d as i32))
+    })
+}
+
+/// Grid (2D hash): replicas confined to one row + one column of a
+/// `√k × √k` grid: `E[min(k-occupancy, 2√k·(1−(1−1/√k)^{2d}) − 1)]`.
+pub fn grid_2d(alpha: f64, k: u64, num_vertices: f64) -> f64 {
+    let z = ZetaDistribution::new(alpha);
+    let kf = k as f64;
+    let r = kf.sqrt();
+    z.expect(d_max(alpha, num_vertices), |d| {
+        let full = kf * (1.0 - (1.0 - 1.0 / kf).powi(2 * d as i32));
+        let grid = 2.0 * r * (1.0 - (1.0 - 1.0 / r).powi(2 * d as i32)) - 1.0;
+        full.min(grid).max(1.0)
+    })
+}
+
+/// DBH: edges anchored at their lower-degree endpoint. A degree-`d` vertex
+/// is the anchor of an edge with probability `P(neighbour degree > d)`
+/// under the size-biased neighbour distribution; anchored edges cost one
+/// shared replica, the rest spread like random hashing.
+pub fn dbh(alpha: f64, k: u64, num_vertices: f64) -> f64 {
+    let z = ZetaDistribution::new(alpha);
+    let dm = d_max(alpha, num_vertices);
+    let kf = k as f64;
+    let mean = z.mean();
+    // size-biased CDF: Q(d' ≤ d) = Σ_{d'≤d} d'·Pr[d'] / E[d]
+    let mut q_cdf = vec![0.0f64; (dm + 2) as usize];
+    let mut acc = 0.0;
+    for d in 1..=dm {
+        acc += d as f64 * z.pmf(d) / mean;
+        q_cdf[d as usize] = acc.min(1.0);
+    }
+    z.expect(dm, |d| {
+        // fraction of v's edges anchored AT v (neighbour strictly heavier)
+        let anchored = 1.0 - q_cdf[d as usize];
+        let spread = 2.0 * d as f64 * q_cdf[d as usize]; // two directed copies
+        // anchored edges: 1 partition total; spread: random occupancy
+        let occ = kf * (1.0 - (1.0 - 1.0 / kf).powf(spread));
+        let anchored_part: f64 = if anchored > 0.0 { 1.0 } else { 0.0 };
+        (anchored_part + occ).min(2.0 * d as f64).max(1.0)
+    })
+}
+
+/// BVC: consistent hashing with uneven virtual-node arcs roughly doubles
+/// the per-edge collision spread over the `2d` directed placements:
+/// `E[k(1−(1−2/k)^{2d})]`.
+pub fn bvc(alpha: f64, k: u64, num_vertices: f64) -> f64 {
+    let z = ZetaDistribution::new(alpha);
+    let kf = k as f64;
+    z.expect(d_max(alpha, num_vertices), |d| {
+        (kf * (1.0 - (1.0 - 2.0 / kf).powi(2 * d as i32))).max(1.0)
+    })
+}
+
+/// NE (calibrated): log-linear fit `1 + e^{10.25 − 4.39α}` through the four
+/// published bound values of [9] as reported in Table 2.
+pub fn ne_calibrated(alpha: f64) -> f64 {
+    1.0 + (10.25 - 4.39 * alpha).exp()
+}
+
+/// HDRF (calibrated): log-linear fit `1 + e^{3.91 − 1.11α}` through the
+/// four published bound values of [13] as reported in Table 2.
+pub fn hdrf_calibrated(alpha: f64) -> f64 {
+    1.0 + (3.91 - 1.11 * alpha).exp()
+}
+
+/// The paper's published Table 2 (k = 256, |V| = 10⁶) for side-by-side
+/// printing: `(method, [α=2.2, 2.4, 2.6, 2.8])`.
+pub const PAPER_TABLE2: &[(&str, [f64; 4])] = &[
+    ("Random (1D-hash)", [5.88, 3.46, 2.64, 2.23]),
+    ("Grid (2D-hash)", [4.82, 3.13, 2.47, 2.13]),
+    ("DBH", [5.59, 3.21, 2.43, 2.05]),
+    ("HDRF", [5.36, 4.23, 3.61, 3.24]),
+    ("NE", [2.81, 1.68, 1.31, 1.13]),
+    ("BVC", [11.10, 6.39, 4.85, 4.10]),
+    ("Proposed Method", [2.88, 2.12, 1.88, 1.75]),
+];
+
+/// The α grid of Table 2.
+pub const ALPHAS: [f64; 4] = [2.2, 2.4, 2.6, 2.8];
+
+/// Compute our model values in the same layout as [`PAPER_TABLE2`].
+pub fn computed_table2(k: u64, num_vertices: f64) -> Vec<(&'static str, [f64; 4])> {
+    let eval = |f: &dyn Fn(f64) -> f64| {
+        let mut out = [0.0; 4];
+        for (i, &a) in ALPHAS.iter().enumerate() {
+            out[i] = f(a);
+        }
+        out
+    };
+    vec![
+        ("Random (1D-hash)", eval(&|a| random_1d(a, k, num_vertices))),
+        ("Grid (2D-hash)", eval(&|a| grid_2d(a, k, num_vertices))),
+        ("DBH", eval(&|a| dbh(a, k, num_vertices))),
+        ("HDRF", eval(&hdrf_calibrated)),
+        ("NE", eval(&ne_calibrated)),
+        ("BVC", eval(&|a| bvc(a, k, num_vertices))),
+        ("Proposed Method", eval(&proposed)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposed_reproduces_paper_row_exactly() {
+        // 2.88 / 2.12 / 1.88 / 1.75 at two decimals
+        let want = [2.88, 2.12, 1.88, 1.75];
+        for (i, &a) in ALPHAS.iter().enumerate() {
+            let got = proposed(a);
+            assert!((got - want[i]).abs() < 0.005, "α={a}: {got} vs {}", want[i]);
+        }
+    }
+
+    #[test]
+    fn calibrated_rows_match_paper_within_10pct() {
+        for (i, &a) in ALPHAS.iter().enumerate() {
+            let ne = ne_calibrated(a);
+            assert!((ne - PAPER_TABLE2[4].1[i]).abs() / PAPER_TABLE2[4].1[i] < 0.10, "NE α={a}: {ne}");
+            let hd = hdrf_calibrated(a);
+            assert!((hd - PAPER_TABLE2[3].1[i]).abs() / PAPER_TABLE2[3].1[i] < 0.10, "HDRF α={a}: {hd}");
+        }
+    }
+
+    #[test]
+    fn models_track_paper_magnitudes() {
+        // our occupancy models should land within 2x of the published
+        // bounds and preserve their ordering at every α
+        let ours = computed_table2(256, 1e6);
+        for ((name, got), (pname, want)) in ours.iter().zip(PAPER_TABLE2.iter()) {
+            assert_eq!(name, pname);
+            for i in 0..4 {
+                let ratio = got[i] / want[i];
+                assert!(
+                    (0.5..2.0).contains(&ratio),
+                    "{name} α={}: ours {} vs paper {}",
+                    ALPHAS[i],
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qualitative_ranking_of_section5() {
+        // "NE best, ours second, gap to the rest significant at small α,
+        //  BVC worst" — must hold in our computed table at every α
+        let t = computed_table2(256, 1e6);
+        let by_name = |n: &str| t.iter().find(|(name, _)| *name == n).unwrap().1;
+        let (ne, prop, bvc) = (by_name("NE"), by_name("Proposed Method"), by_name("BVC"));
+        let rand = by_name("Random (1D-hash)");
+        for i in 0..4 {
+            assert!(ne[i] <= prop[i] + 0.05, "NE should lead at α={}", ALPHAS[i]);
+            assert!(prop[i] < rand[i], "proposed beats random at α={}", ALPHAS[i]);
+            assert!(bvc[i] > rand[i], "BVC is worst at α={}", ALPHAS[i]);
+        }
+    }
+}

@@ -1,0 +1,5 @@
+//! Theoretical analysis (§5): zeta-function numerics and the Table 2
+//! replication-factor upper bounds on Clauset power-law graphs.
+
+pub mod bounds;
+pub mod zeta;

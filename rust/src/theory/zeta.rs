@@ -1,0 +1,99 @@
+//! Riemann/Hurwitz zeta numerics and the zeta (discrete power-law)
+//! degree distribution used by §5's bound comparison.
+
+/// Hurwitz zeta `ζ(s, q) = Σ_{n≥0} (n+q)^(−s)` by direct summation with an
+/// Euler–Maclaurin tail correction. Accurate to ~1e-10 for `s > 1`.
+pub fn hurwitz_zeta(s: f64, q: f64) -> f64 {
+    assert!(s > 1.0, "requires s > 1");
+    assert!(q > 0.0);
+    let cutoff = 1_000u64;
+    let mut sum = 0.0f64;
+    for n in 0..cutoff {
+        sum += (n as f64 + q).powf(-s);
+    }
+    // Euler–Maclaurin tail for Σ_{j≥M} j^{-s}, M = cutoff + q:
+    //   M^{1−s}/(s−1) + M^{−s}/2 − s·M^{−s−1}/12 (next term negligible)
+    let nq = cutoff as f64 + q;
+    sum += nq.powf(1.0 - s) / (s - 1.0) + 0.5 * nq.powf(-s) - s / 12.0 * nq.powf(-s - 1.0);
+    sum
+}
+
+/// Riemann zeta `ζ(s) = ζ(s, 1)`.
+pub fn riemann_zeta(s: f64) -> f64 {
+    hurwitz_zeta(s, 1.0)
+}
+
+/// Zeta (discrete power-law) degree distribution with exponent `alpha` and
+/// minimum degree 1: `Pr[d] = d^(−α)/ζ(α)` (Eq. 11 with d_min = 1).
+#[derive(Clone, Copy, Debug)]
+pub struct ZetaDistribution {
+    /// scaling exponent α (real-world: 2 < α < 3)
+    pub alpha: f64,
+    norm: f64,
+}
+
+impl ZetaDistribution {
+    /// Construct for a given exponent.
+    pub fn new(alpha: f64) -> ZetaDistribution {
+        ZetaDistribution { alpha, norm: riemann_zeta(alpha) }
+    }
+
+    /// `Pr[degree = d]`.
+    pub fn pmf(&self, d: u64) -> f64 {
+        assert!(d >= 1);
+        (d as f64).powf(-self.alpha) / self.norm
+    }
+
+    /// Mean degree `ζ(α−1)/ζ(α)` (α > 2).
+    pub fn mean(&self) -> f64 {
+        assert!(self.alpha > 2.0, "mean diverges for α ≤ 2");
+        riemann_zeta(self.alpha - 1.0) / self.norm
+    }
+
+    /// `E[f(d)]` by truncated summation (degrees up to `d_max`).
+    pub fn expect<F: Fn(u64) -> f64>(&self, d_max: u64, f: F) -> f64 {
+        (1..=d_max).map(|d| self.pmf(d) * f(d)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn riemann_known_values() {
+        // ζ(2) = π²/6, ζ(4) = π⁴/90
+        let pi = std::f64::consts::PI;
+        assert!((riemann_zeta(2.0) - pi * pi / 6.0).abs() < 1e-8);
+        assert!((riemann_zeta(4.0) - pi.powi(4) / 90.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn hurwitz_reduces_to_riemann() {
+        assert!((hurwitz_zeta(2.5, 1.0) - riemann_zeta(2.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hurwitz_shift_identity() {
+        // ζ(s, q) = ζ(s, q+1) + q^{-s}
+        let s = 2.3;
+        let q = 1.7;
+        let lhs = hurwitz_zeta(s, q);
+        let rhs = hurwitz_zeta(s, q + 1.0) + q.powf(-s);
+        assert!((lhs - rhs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zeta_distribution_normalizes() {
+        let z = ZetaDistribution::new(2.5);
+        let total = z.expect(2_000_000, |_| 1.0);
+        assert!((total - 1.0).abs() < 1e-4, "total {total}");
+    }
+
+    #[test]
+    fn mean_degree_formula() {
+        let z = ZetaDistribution::new(2.8);
+        let emp = z.expect(5_000_000, |d| d as f64);
+        assert!((z.mean() - emp).abs() / z.mean() < 1e-3, "{} vs {emp}", z.mean());
+    }
+}

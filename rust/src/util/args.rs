@@ -1,0 +1,124 @@
+//! Minimal command-line parsing (`clap` is not in the vendored crate set).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional
+//! arguments, which covers the whole `egs` CLI surface.
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positional args, options and flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First positional token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token iterator (tests) or `std::env::args`.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a helpful message on a bad value.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => match v.parse() {
+                Ok(x) => x,
+                Err(e) => panic!("--{key}={v}: {e}"),
+            },
+        }
+    }
+
+    /// Boolean flag (present or not).
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.contains(key)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_and_flags() {
+        // note: a bare `--flag value` is ambiguous, so flags must either
+        // come last or use `--flag=...`; positionals precede trailing flags
+        let a = Args::parse(toks("order --dataset pokec-s --k=8 out.bin --verbose"));
+        assert_eq!(a.command.as_deref(), Some("order"));
+        assert_eq!(a.get("dataset"), Some("pokec-s"));
+        assert_eq!(a.get_parse::<usize>("k", 0), 8);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.bin".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(toks("bench"));
+        assert_eq!(a.get_or("dataset", "orkut-s"), "orkut-s");
+        assert_eq!(a.get_parse::<u64>("seed", 42), 42);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(toks("x --quiet"));
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = Args::parse(toks("x --ks 4,8, 16"));
+        // note: "--ks 4,8," consumed "4,8," as value; "16" is positional
+        assert_eq!(a.get_list("ks").unwrap(), vec!["4", "8", ""]);
+    }
+}

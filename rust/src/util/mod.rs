@@ -1,0 +1,8 @@
+//! Small shared utilities: deterministic RNG, CLI parsing, randomized
+//! property-test harness, JSON scanning (the vendored crate set has no
+//! `rand`, `clap`, `proptest` or `serde` — see DESIGN.md §3).
+
+pub mod args;
+pub mod json;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,50 @@
+//! Tiny randomized property-test harness (no `proptest` in the vendored
+//! crate set). Runs a property over many seeded random cases and reports
+//! the failing seed so that failures are reproducible.
+
+use super::rng::Rng;
+
+/// Number of cases run by default for each property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` for `cases` deterministic seeds derived from `base_seed`.
+/// The closure receives a fresh RNG per case; panics are augmented with the
+/// case number and seed so the exact failure replays with `Rng::new(seed)`.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(base_seed: u64, cases: usize, prop: F) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E37_79B9).wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        check(1, 16, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_seed_on_failure() {
+        check(2, 16, |rng| {
+            assert!(rng.below(10) < 5, "too big");
+        });
+    }
+}

@@ -1,0 +1,184 @@
+//! Cross-module randomized property suite: invariants that must hold for
+//! every partitioner, ordering, scaler and engine configuration,
+//! exercised over randomized graphs (seeded — failures print the seed).
+
+use egs::engine::{apps, Engine};
+use egs::graph::builder::GraphBuilder;
+use egs::graph::generators::{barabasi_albert, erdos_renyi, lattice2d, rmat, RmatParams};
+use egs::graph::Graph;
+use egs::ordering::{edge_ordering_by_name, geo, geo_parallel, vertex_ordering_by_name};
+use egs::partition::{cep::Cep, edge_partition_by_name, quality, EdgePartition, ALL_EDGE_METHODS};
+use egs::runtime::native::NativeBackend;
+use egs::scaling::migration::MigrationPlan;
+use egs::scaling::scaler::{BvcScaler, CepScaler, DynamicScaler, Hash1dScaler};
+use egs::util::proptest::check;
+use egs::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng) -> Graph {
+    match rng.below(4) {
+        0 => erdos_renyi(50 + rng.below_usize(200), 300 + rng.below_usize(1200), rng.next_u64()),
+        1 => lattice2d(8 + rng.below_usize(20), 8 + rng.below_usize(20), 0.1, rng.next_u64()),
+        2 => barabasi_albert(100 + rng.below_usize(400), 2 + rng.below_usize(4), rng.next_u64()),
+        _ => rmat(
+            &RmatParams { scale: 8 + rng.below(3) as u32, edge_factor: 4, ..Default::default() },
+            rng.next_u64(),
+        ),
+    }
+}
+
+/// Every partitioner: complete disjoint cover, valid ids, RF ≥ 1,
+/// RF ≤ min(k, max degree bound).
+#[test]
+fn partitioners_satisfy_universal_invariants() {
+    check(0xC07E, 12, |rng| {
+        let g = random_graph(rng);
+        let k = 2 + rng.below_usize(15);
+        for name in ALL_EDGE_METHODS {
+            let p = edge_partition_by_name(name, &g, k, rng.next_u64()).unwrap();
+            assert_eq!(p.assign.len(), g.num_edges(), "{name}");
+            assert!(p.assign.iter().all(|&x| (x as usize) < k), "{name}");
+            let rf = quality::replication_factor(&g, &p);
+            assert!(rf >= 1.0 - 1e-9, "{name}: rf {rf}");
+            assert!(rf <= k as f64 + 1e-9, "{name}: rf {rf} > k {k}");
+        }
+    });
+}
+
+/// Every ordering is a permutation, and orderings never change graph
+/// structure (degree multiset preserved under apply).
+#[test]
+fn orderings_are_structure_preserving_permutations() {
+    check(0x0DE5, 10, |rng| {
+        let g = random_graph(rng);
+        for name in ["geo", "random", "default"] {
+            let o = edge_ordering_by_name(name, &g, rng.next_u64()).unwrap();
+            let h = o.apply(&g);
+            assert_eq!(h.num_edges(), g.num_edges(), "{name}");
+            for v in 0..g.num_vertices() as u32 {
+                assert_eq!(g.degree(v), h.degree(v), "{name} vertex {v}");
+            }
+        }
+        for name in ["rcm", "deg", "llp", "go", "ro", "rgb", "bfs", "dfs"] {
+            let vo = vertex_ordering_by_name(name, &g, rng.next_u64()).unwrap();
+            let mut seen = vec![false; g.num_vertices()];
+            for &v in vo.as_slice() {
+                assert!(!seen[v as usize], "{name}: duplicate {v}");
+                seen[v as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{name}: missing vertices");
+        }
+    });
+}
+
+/// Migration plans between any two scaler states conserve edges.
+#[test]
+fn scaling_chains_conserve_edges() {
+    check(0x5CA1, 10, |rng| {
+        let m = 5_000 + rng.below_usize(20_000);
+        let k0 = 2 + rng.below_usize(12);
+        let mut scalers: Vec<Box<dyn DynamicScaler>> = vec![
+            Box::new(CepScaler::new(m, k0)),
+            Box::new(BvcScaler::new(m, k0, rng.next_u64())),
+            Box::new(Hash1dScaler::new(m, k0)),
+        ];
+        for s in scalers.iter_mut() {
+            let mut k = k0;
+            for _ in 0..4 {
+                let up = rng.chance(0.5) && k < 20;
+                let new_k = if up { k + 1 } else { (k - 1).max(1) };
+                let before = s.current();
+                let reported = s.scale_to(new_k);
+                let after = s.current();
+                let plan = MigrationPlan::diff(&before, &after);
+                assert!(plan.validate(&before, &after), "{}", s.name());
+                // reported count matches the plan (BVC may over-report
+                // transient ring+refine moves that cancel; allow ≥)
+                assert!(
+                    reported >= plan.migrated_edges(),
+                    "{}: reported {reported} < plan {}",
+                    s.name(),
+                    plan.migrated_edges()
+                );
+                // partition sizes still cover all edges
+                assert_eq!(after.sizes().iter().sum::<u64>(), m as u64, "{}", s.name());
+                k = new_k;
+            }
+        }
+    });
+}
+
+/// PageRank through the engine conserves probability mass for any
+/// partitioning of any graph (α teleport + damping bookkeeping).
+#[test]
+fn engine_pagerank_mass_conservation_universal() {
+    check(0x9A55, 8, |rng| {
+        let g = random_graph(rng);
+        if g.num_edges() == 0 {
+            return;
+        }
+        let k = 1 + rng.below_usize(9);
+        let mut assign = Vec::with_capacity(g.num_edges());
+        for _ in 0..g.num_edges() {
+            assign.push(rng.below(k as u64) as u32);
+        }
+        let part = EdgePartition::new(k, assign);
+        let mut e = Engine::new(&g, &part, |_| Box::new(NativeBackend::new())).unwrap();
+        let r = apps::pagerank::run(&mut e, &g, 5).unwrap();
+        let mass: f32 = r.ranks.iter().sum();
+        // isolated vertices leak teleport mass only; generators compact,
+        // so mass stays within float tolerance of 1
+        assert!((mass - 1.0).abs() < 1e-3, "mass {mass}");
+    });
+}
+
+/// WCC through the engine equals union-find for arbitrary partitionings.
+#[test]
+fn engine_wcc_matches_union_find_universal() {
+    check(0x3CC, 8, |rng| {
+        let g = random_graph(rng);
+        let k = 1 + rng.below_usize(7);
+        let part = EdgePartition::from_cep(&Cep::new(g.num_edges(), k));
+        let mut e = Engine::new(&g, &part, |_| Box::new(NativeBackend::new())).unwrap();
+        let out = apps::wcc::run(&mut e, 100_000).unwrap();
+        assert_eq!(out.labels, apps::wcc::reference(&g));
+    });
+}
+
+/// Parallel GEO agrees with the invariants of sequential GEO on any graph.
+#[test]
+fn parallel_geo_valid_on_any_graph() {
+    check(0x6E0, 6, |rng| {
+        let g = random_graph(rng);
+        let threads = 1 + rng.below_usize(4);
+        let o = geo_parallel::order(&g, &geo::GeoConfig::default(), threads);
+        assert_eq!(o.len(), g.num_edges());
+        let mut seen = vec![false; g.num_edges()];
+        for &e in o.as_slice() {
+            assert!(!seen[e as usize]);
+            seen[e as usize] = true;
+        }
+    });
+}
+
+/// Degenerate graphs never panic anywhere in the pipeline.
+#[test]
+fn degenerate_graphs_are_handled() {
+    // single edge
+    let g = GraphBuilder::new().edge(0, 1).build();
+    let o = geo::order(&g, &geo::GeoConfig::default());
+    assert_eq!(o.len(), 1);
+    let part = EdgePartition::from_cep(&Cep::new(1, 4)); // k > m
+    assert_eq!(part.sizes().iter().sum::<u64>(), 1);
+    let mut e = Engine::new(&g, &part, |_| Box::new(NativeBackend::new())).unwrap();
+    let r = apps::sssp::run(&mut e, 0, 10).unwrap();
+    assert_eq!(r.reached, 2);
+
+    // star (one hub)
+    let mut b = GraphBuilder::new();
+    for i in 1..50u32 {
+        b.push(0, i);
+    }
+    let star = b.build();
+    let o = geo::order(&star, &geo::GeoConfig::default());
+    assert_eq!(o.len(), 49);
+}

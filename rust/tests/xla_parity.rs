@@ -1,0 +1,184 @@
+//! Differential validation of the PJRT execution path: the XLA backend
+//! (AOT JAX/Pallas artifacts compiled by the CPU PJRT client) must agree
+//! with the pure-Rust native backend on every app step and on full app
+//! runs. Skipped (with a loud message) when `make artifacts` has not run.
+
+use egs::engine::{apps, Engine};
+use egs::graph::generators::{rmat, RmatParams};
+use egs::partition::{cep::Cep, EdgePartition};
+use egs::runtime::artifact::Manifest;
+use egs::runtime::executor::XlaBackend;
+use egs::runtime::native::NativeBackend;
+use egs::runtime::{ComputeBackend, StepKind, StepRequest};
+use egs::util::rng::Rng;
+
+fn xla_backend() -> Option<XlaBackend> {
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(XlaBackend::start(m).expect("start xla backend")),
+        Err(e) => {
+            eprintln!("SKIP xla parity tests: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn padded_inputs(
+    rng: &mut Rng,
+    nv: usize,
+    ne_real: usize,
+    vcap: usize,
+    ecap: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>) {
+    let mut state: Vec<f32> = (0..vcap).map(|_| rng.f64() as f32).collect();
+    let aux: Vec<f32> = (0..vcap).map(|_| rng.f64() as f32).collect();
+    let mut src = vec![0i32; ecap];
+    let mut dst = vec![0i32; ecap];
+    let mut weight = vec![0f32; ecap];
+    let mut mask = vec![0f32; ecap];
+    for e in 0..ne_real {
+        src[e] = rng.below(nv as u64) as i32;
+        dst[e] = rng.below(nv as u64) as i32;
+        weight[e] = rng.f64() as f32;
+        mask[e] = 1.0;
+    }
+    // min-kernels treat padding vertices as unreachable
+    for s in state.iter_mut().skip(nv) {
+        *s = 3.0e38;
+    }
+    (state, aux, src, dst, weight, mask)
+}
+
+/// Failure injection: a manifest referencing a missing HLO file must
+/// surface an error from `step`, not panic or wedge the actor.
+#[test]
+fn missing_artifact_file_is_a_clean_error() {
+    let dir = std::env::temp_dir().join(format!("egs_bad_manifest_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "variants": [
+            {"vcap": 64, "ecap": 2048, "files": {"pagerank": "nope.hlo.txt"}}
+        ]}"#,
+    )
+    .unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut backend = XlaBackend::start(manifest).expect("actor should still boot");
+    let state = vec![0f32; 64];
+    let aux = vec![0f32; 64];
+    let src = vec![0i32; 2048];
+    let dst = vec![0i32; 2048];
+    let weight = vec![0f32; 2048];
+    let mask = vec![0f32; 2048];
+    let req = StepRequest {
+        kind: StepKind::PageRank,
+        state: &state,
+        aux: &aux,
+        src: &src,
+        dst: &dst,
+        weight: &weight,
+        mask: &mask,
+    };
+    let err = backend.step(&req).unwrap_err();
+    assert!(err.to_string().contains("nope.hlo.txt"), "{err}");
+    // the actor survives the error and can answer capacity queries
+    assert_eq!(backend.capacity_for(10, 10).unwrap(), (64, 2048));
+    backend.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Unpadded requests are rejected with a descriptive error.
+#[test]
+fn unpadded_request_is_rejected() {
+    let Some(mut xla) = xla_backend() else { return };
+    let state = vec![0f32; 100]; // not a variant capacity
+    let aux = vec![0f32; 100];
+    let src = vec![0i32; 500];
+    let dst = vec![0i32; 500];
+    let weight = vec![0f32; 500];
+    let mask = vec![0f32; 500];
+    let req = StepRequest {
+        kind: StepKind::Wcc,
+        state: &state,
+        aux: &aux,
+        src: &src,
+        dst: &dst,
+        weight: &weight,
+        mask: &mask,
+    };
+    let err = xla.step(&req).unwrap_err();
+    assert!(err.to_string().contains("padded"), "{err}");
+}
+
+#[test]
+fn step_kinds_match_native_backend() {
+    let Some(mut xla) = xla_backend() else { return };
+    let mut native = NativeBackend::new();
+    let mut rng = Rng::new(0xA11CE);
+    for kind in [StepKind::PageRank, StepKind::Sssp, StepKind::Wcc] {
+        let (vcap, ecap) = xla.capacity_for(200, 3000).unwrap();
+        let (state, aux, src, dst, weight, mask) =
+            padded_inputs(&mut rng, 200, 3000, vcap, ecap);
+        let req = StepRequest {
+            kind,
+            state: &state,
+            aux: &aux,
+            src: &src,
+            dst: &dst,
+            weight: &weight,
+            mask: &mask,
+        };
+        let got = xla.step(&req).expect("xla step");
+        let want = native.step(&req).expect("native step");
+        assert_eq!(got.len(), want.len(), "{kind:?} length");
+        for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+            let tol = 1e-4 * (1.0 + b.abs());
+            assert!(
+                (a - b).abs() <= tol || (a > &1e37 && b > &1e37),
+                "{kind:?} [{i}]: xla {a} vs native {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn full_pagerank_run_matches_native_engine() {
+    let Some(xla) = xla_backend() else { return };
+    let g = rmat(&RmatParams { scale: 9, edge_factor: 6, ..Default::default() }, 3);
+    let part = EdgePartition::from_cep(&Cep::new(g.num_edges(), 4));
+
+    let handle = xla.clone();
+    let mut e_xla = Engine::new(&g, &part, move |_| Box::new(handle.clone())).unwrap();
+    let mut e_nat = Engine::new(&g, &part, |_| Box::new(NativeBackend::new())).unwrap();
+
+    let r_xla = apps::pagerank::run(&mut e_xla, &g, 10).unwrap();
+    let r_nat = apps::pagerank::run(&mut e_nat, &g, 10).unwrap();
+    for (a, b) in r_xla.ranks.iter().zip(r_nat.ranks.iter()) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+    // COM metering is backend-independent
+    assert_eq!(r_xla.report.com_bytes, r_nat.report.com_bytes);
+}
+
+#[test]
+fn sssp_and_wcc_runs_match_reference() {
+    let Some(xla) = xla_backend() else { return };
+    let g = rmat(&RmatParams { scale: 8, edge_factor: 4, ..Default::default() }, 5);
+    let part = EdgePartition::from_cep(&Cep::new(g.num_edges(), 3));
+    let handle = xla.clone();
+    let mut engine = Engine::new(&g, &part, move |_| Box::new(handle.clone())).unwrap();
+
+    let sssp = apps::sssp::run(&mut engine, 0, 10_000).unwrap();
+    let oracle = apps::sssp::reference(&g, 0);
+    // MASKED sentinel plays infinity in the artifact kernels
+    for (a, b) in sssp.dist.iter().zip(oracle.iter()) {
+        if b.is_finite() {
+            assert_eq!(a, b);
+        } else {
+            assert!(*a > 1e37, "unreached vertex got {a}");
+        }
+    }
+
+    let wcc = apps::wcc::run(&mut engine, 10_000).unwrap();
+    assert_eq!(wcc.labels, apps::wcc::reference(&g));
+}
