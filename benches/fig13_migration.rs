@@ -27,7 +27,7 @@ fn main() {
             let mut k = from as i64;
             while k != to as i64 {
                 k += step;
-                total += s.scale_to(k as usize);
+                total += s.scale_to(k as usize).migrated_edges();
             }
             total
         };
@@ -42,6 +42,26 @@ fn main() {
         let inn = run(mk, k_hi, k_lo);
         t.row(vec![name.to_string(), out.to_string(), inn.to_string()]);
     }
+    // plans are the *net* state transfer; BVC additionally makes transient
+    // refinement moves that cancel ring moves — report its gross physical
+    // traffic (the paper's quantity) from the scaler's stats as well
+    let bvc_gross = |from: usize, to: usize| -> u64 {
+        let mut s = BvcScaler::new(m, from, 7);
+        let mut total = 0u64;
+        let step: i64 = if to > from { 1 } else { -1 };
+        let mut k = from as i64;
+        while k != to as i64 {
+            k += step;
+            s.scale_to(k as usize);
+            total += s.last_stats().total_migrated();
+        }
+        total
+    };
+    t.row(vec![
+        "bvc (gross)".into(),
+        bvc_gross(k_lo, k_hi).to_string(),
+        bvc_gross(k_hi, k_lo).to_string(),
+    ]);
     // Theorem 2 prediction for the CEP chain (sum of x=1 hops)
     let mut pred = 0.0;
     for k in k_lo..k_hi {

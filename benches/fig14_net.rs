@@ -8,44 +8,24 @@
 
 use egs::graph::datasets;
 use egs::metrics::table::{secs, Table};
-use egs::partition::bvc::BvcState;
 use egs::partition::cep::Cep;
-use egs::partition::{hash1d, EdgePartition};
 use egs::scaling::migration::MigrationPlan;
 use egs::scaling::network::Network;
+use egs::scaling::scaler::{BvcScaler, DynamicScaler, Hash1dScaler};
 
 fn main() {
     let g = datasets::by_name("pokec-s", 42).unwrap();
     let m = g.num_edges();
     let (from_k, to_k) = (13usize, 14usize);
 
-    // precompute the three migration plans for the same scale step
-    let cep_plan = {
-        let a = EdgePartition::from_cep(&Cep::new(m, from_k));
-        let b = EdgePartition::from_cep(&Cep::new(m, to_k));
-        MigrationPlan::diff(&a, &b)
-    };
+    // the three executable migration plans for the same scale step
+    let cep_plan = MigrationPlan::between_ceps(&Cep::new(m, from_k), &Cep::new(m, to_k));
     let (bvc_plan, bvc_stats) = {
-        let mut s = BvcState::build(m, from_k, 7);
-        let before = s.to_partition();
-        let stats = s.scale_to(to_k);
-        (MigrationPlan::diff(&before, &s.to_partition()), stats)
+        let mut s = BvcScaler::new(m, from_k, 7);
+        let plan = s.scale_to(to_k);
+        (plan, s.last_stats())
     };
-    let h1_plan = {
-        let a = hash1d::partition(&g, from_k);
-        let b = hash1d::partition(&g, to_k);
-        // 1d rehash: recompute by hashing edge ids over the new k
-        let a2 = EdgePartition::new(
-            to_k,
-            (0..m as u64).map(|e| hash1d::assign_one(e, from_k)).collect(),
-        );
-        let b2 = EdgePartition::new(
-            to_k,
-            (0..m as u64).map(|e| hash1d::assign_one(e, to_k)).collect(),
-        );
-        let _ = (a, b);
-        MigrationPlan::diff(&a2, &b2)
-    };
+    let h1_plan = Hash1dScaler::new(m, from_k).scale_to(to_k);
 
     for value_bytes in [0u64, 8, 32] {
         let mut t = Table::new(
@@ -81,6 +61,12 @@ fn main() {
         bvc_plan.migrated_edges(),
         bvc_stats.refine_migrated,
         bvc_stats.refine_rounds
+    );
+    println!(
+        "plan sizes (range moves): cep={} 1d={} bvc={} — CEP stays O(k)",
+        cep_plan.num_moves(),
+        h1_plan.num_moves(),
+        bvc_plan.num_moves()
     );
     println!("paper Fig 14: CEP/1D single shuffle beat BVC's multi-barrier refinement");
 }

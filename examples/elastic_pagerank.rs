@@ -9,8 +9,10 @@
 //!   backend with a warning if `make artifacts` hasn't run),
 //! * runs PageRank while a spot-instance trace provisions/preempts
 //!   workers (k = 8 → … bounded in [6, 12]),
-//! * rescales with CEP at every event, migrating chunks through the
-//!   emulated 8 Gbps network,
+//! * rescales with CEP at every event through the plan pipeline: the O(1)
+//!   `CepView` rescale derives an O(k) range-move `MigrationPlan`, the
+//!   8 Gbps emulated network prices it, and `Engine::apply_migration`
+//!   executes it in place (touched workers only — no full rebuild),
 //! * logs per-epoch RF, repartition time, migrated edges, COM and the
 //!   rank residual; prints the Table 7-style breakdown at the end.
 //!
@@ -24,7 +26,7 @@ use egs::graph::datasets;
 use egs::metrics::table::{secs, Table};
 use egs::ordering::geo::{self, GeoConfig};
 use egs::partition::cep::Cep;
-use egs::partition::{quality, EdgePartition};
+use egs::partition::{quality, CepView};
 use egs::runtime::artifact::Manifest;
 use egs::runtime::executor::XlaBackend;
 use egs::runtime::native::NativeBackend;
@@ -73,14 +75,15 @@ fn main() -> egs::Result<()> {
     let m = ordered.num_edges();
     let k0 = 8usize;
     let t = Instant::now();
-    let mut cep = Cep::new(m, k0);
-    let mut part = EdgePartition::from_cep(&cep);
-    let mut engine = Engine::new(&ordered, &part, |_| make_backend(&xla))?;
+    // the engine consumes the O(1) chunk view directly — no per-edge
+    // assignment vector exists anywhere on this path
+    let mut view = CepView::new(Cep::new(m, k0));
+    let mut engine = Engine::new(&ordered, &view, |_| make_backend(&xla))?;
     let init_s = t.elapsed().as_secs_f64();
     println!(
         "[init]    k={k0} engine up in {} (RF={:.3})",
         secs(init_s),
-        quality::replication_factor_chunked(&ordered, &cep)
+        quality::replication_factor_chunked(&ordered, view.cep())
     );
 
     // ---------- spot-market trace ----------
@@ -112,13 +115,14 @@ fn main() -> egs::Result<()> {
     let mut ev_idx = 0usize;
     let mut log = Table::new(
         "elastic_pagerank epoch log",
-        &["iter", "event", "k", "RF", "repart", "migrated", "net-time", "residual"],
+        &["iter", "event", "k", "RF", "plan", "moves", "migrated", "net-time", "residual"],
     );
 
     for it in 0..total_iters {
         // ---- spot event?
         let mut event_str = "-".to_string();
-        let mut repart = "-".to_string();
+        let mut plan_t_str = "-".to_string();
+        let mut moves_str = "-".to_string();
         let mut migrated_str = "-".to_string();
         let mut nettime = "-".to_string();
         if ev_idx < trace.events.len() && trace.events[ev_idx].0 == it {
@@ -129,22 +133,24 @@ fn main() -> egs::Result<()> {
                 SpotEvent::Preempt => k - 1,
             };
             event_str = format!("{ev:?}");
+            // O(k) metadata: rescale the view and derive the range plan —
+            // the paper's "essentially free" repartition, now executable
             let t = Instant::now();
-            let new_cep = cep.rescaled(new_k); // O(1) — the paper's claim
-            let repart_t = t.elapsed();
-            let new_part = EdgePartition::from_cep(&new_cep);
-            let plan = MigrationPlan::diff(&part, &new_part);
+            let new_view = CepView::new(view.cep().rescaled(new_k));
+            let plan = MigrationPlan::between_ceps(view.cep(), new_view.cep());
+            let plan_t = t.elapsed();
             let moved = plan.migrated_edges();
             let net_s = net.migration_time(&plan, k.max(new_k), 8);
+            // execute the plan in place: only touched workers reload
             let t = Instant::now();
-            engine = Engine::new(&ordered, &new_part, |_| make_backend(&xla))?;
-            let rebuild_s = t.elapsed().as_secs_f64();
-            scale_s += repart_t.as_secs_f64() + net_s + rebuild_s;
+            engine.apply_migration(&ordered, &plan, &new_view, |_| make_backend(&xla))?;
+            let apply_s = t.elapsed().as_secs_f64();
+            scale_s += plan_t.as_secs_f64() + net_s + apply_s;
             total_migrated += moved;
-            cep = new_cep;
-            part = new_part;
+            view = new_view;
             k = new_k;
-            repart = format!("{repart_t:?}");
+            plan_t_str = format!("{plan_t:?}");
+            moves_str = plan.num_moves().to_string();
             migrated_str = moved.to_string();
             nettime = secs(net_s);
         }
@@ -168,8 +174,9 @@ fn main() -> egs::Result<()> {
                 it.to_string(),
                 event_str,
                 k.to_string(),
-                format!("{:.3}", quality::replication_factor_chunked(&ordered, &cep)),
-                repart,
+                format!("{:.3}", quality::replication_factor_chunked(&ordered, view.cep())),
+                plan_t_str,
+                moves_str,
                 migrated_str,
                 nettime,
                 format!("{residual:.2e}"),

@@ -1,6 +1,14 @@
 //! The elastic controller: runs an application across a scaling scenario,
 //! rescaling with the configured method at each event and accounting the
 //! Table 7 breakdown (INIT / APP / SCALE).
+//!
+//! Every scale event is executed as a **migration plan**: the method state
+//! derives an explicit list of `(src, dst, edge-id-range)` moves, the
+//! network emulator prices the plan, and the engine applies it in place
+//! ([`Engine::apply_migration`]) — touched partitions reload their local
+//! tables, untouched workers keep running. On the CEP path the active
+//! assignment is a [`CepView`], so a `k → k±x` rescale is O(k) metadata
+//! end-to-end: no `Vec<PartitionId>` is ever materialized.
 
 use super::provisioner::{LatencyModel, Provisioner};
 use super::state::ClusterState;
@@ -8,7 +16,7 @@ use crate::engine::{apps::pagerank, Combine, Engine};
 use crate::graph::Graph;
 use crate::partition::bvc::BvcState;
 use crate::partition::cep::Cep;
-use crate::partition::{ginger, hash1d, oblivious, EdgePartition};
+use crate::partition::{ginger, hash1d, oblivious, CepView, EdgePartition, PartitionAssignment};
 use crate::runtime::{ComputeBackend, StepKind};
 use crate::scaling::migration::MigrationPlan;
 use crate::scaling::network::Network;
@@ -44,6 +52,20 @@ impl Default for ControllerConfig {
     }
 }
 
+/// Audit record of one executed scale event.
+#[derive(Clone, Copy, Debug)]
+pub struct EventRecord {
+    /// partition count before the event
+    pub from_k: usize,
+    /// partition count after the event
+    pub to_k: usize,
+    /// edges the plan migrated
+    pub migrated_edges: u64,
+    /// number of range moves in the executed plan (O(k) for CEP,
+    /// up to O(m) for scattered methods)
+    pub range_moves: usize,
+}
+
 /// Table 7 row: total and component times (seconds). `SCALE` combines the
 /// measured repartitioning time, the *emulated* migration network time and
 /// the provisioning latency; `APP` and `INIT` are measured wall time.
@@ -65,14 +87,30 @@ pub struct RunBreakdown {
     pub com_bytes: u64,
     /// final partition count
     pub final_k: usize,
-    /// per-event log (k-transition, migrated edges)
-    pub events: Vec<(usize, usize, u64)>,
+    /// per-event audit log of the executed plans
+    pub events: Vec<EventRecord>,
 }
 
 enum MethodState {
     Cep(Cep),
     Bvc(Box<BvcState>),
     Stateless, // 1d / oblivious / ginger recompute from scratch
+}
+
+/// The assignment the engine currently runs on: chunk metadata for CEP
+/// (O(1), zero materialization) or an explicit vector for everything else.
+enum ActiveAssignment {
+    Chunked(CepView),
+    Materialized(EdgePartition),
+}
+
+impl ActiveAssignment {
+    fn as_assignment(&self) -> &dyn PartitionAssignment {
+        match self {
+            ActiveAssignment::Chunked(v) => v,
+            ActiveAssignment::Materialized(p) => p,
+        }
+    }
 }
 
 /// Run PageRank under `scenario`, scaling with `cfg.method`.
@@ -99,8 +137,9 @@ where
         "1d" | "oblivious" | "ginger" => MethodState::Stateless,
         other => bail!("unknown scaling method {other}"),
     };
-    let mut part = compute_partition(g, &method_state, &cfg.method, scenario.initial_k, cfg.seed);
-    let mut engine = Engine::new(g, &part, &mut backend_for)?;
+    let mut assignment =
+        initial_assignment(g, &method_state, &cfg.method, scenario.initial_k);
+    let mut engine = Engine::new(g, assignment.as_assignment(), &mut backend_for)?;
     let mut init_s = t_init.elapsed().as_secs_f64() + provisioner.accounted().as_secs_f64();
 
     // ---- application state (PageRank), survives rescales
@@ -121,17 +160,15 @@ where
     let mut app_s = 0.0f64;
     let mut scale_s = 0.0f64;
     let mut com_bytes = 0u64;
-    let mut event_log = Vec::new();
+    let mut event_log: Vec<EventRecord> = Vec::new();
 
     for it in 0..scenario.total_iterations {
-        // ---- SCALE event?
+        // ---- SCALE event? Derive a plan, price it, execute it.
         if let Some(ev) = scenario.event_at(it) {
             let from_k = cluster.k;
             let t_scale = Instant::now();
-            let old_part = part.clone();
-            rescale(&mut method_state, ev.target_k);
-            part = compute_partition(g, &method_state, &cfg.method, ev.target_k, cfg.seed);
-            let plan = MigrationPlan::diff(&old_part, &part);
+            let (plan, new_assignment) =
+                plan_rescale(g, &mut method_state, &assignment, &cfg.method, ev.target_k);
             let migrated = plan.migrated_edges();
             // emulated network time for moving edge data + values
             let net_s = match &method_state {
@@ -144,8 +181,9 @@ where
                 _ => cfg.net.migration_time(&plan, from_k.max(ev.target_k), cfg.value_bytes),
             };
             let prov = provisioner.resize_to(ev.target_k, cluster.epoch + 1);
-            // rebuild engine over the new partitioning
-            engine = Engine::new(g, &part, &mut backend_for)?;
+            // execute the plan: range-based transfer, touched workers only
+            engine.apply_migration(g, &plan, new_assignment.as_assignment(), &mut backend_for)?;
+            assignment = new_assignment;
             let wall = t_scale.elapsed().as_secs_f64();
             let total = wall + net_s + prov.as_secs_f64();
             scale_s += total;
@@ -154,7 +192,12 @@ where
                 migrated,
                 std::time::Duration::from_secs_f64(total),
             );
-            event_log.push((from_k, ev.target_k, migrated));
+            event_log.push(EventRecord {
+                from_k,
+                to_k: ev.target_k,
+                migrated_edges: migrated,
+                range_moves: plan.num_moves(),
+            });
         }
 
         // ---- APP: one PageRank iteration
@@ -186,46 +229,71 @@ where
     })
 }
 
-fn rescale(state: &mut MethodState, new_k: usize) {
-    match state {
-        MethodState::Cep(c) => *c = c.rescaled(new_k),
-        MethodState::Bvc(b) => {
-            b.scale_to(new_k);
-        }
-        MethodState::Stateless => {}
-    }
-}
-
-fn compute_partition(
+/// Initial assignment for the configured method — the CEP path yields a
+/// zero-materialization view.
+fn initial_assignment(
     g: &Graph,
     state: &MethodState,
     method: &str,
     k: usize,
-    _seed: u64,
-) -> EdgePartition {
+) -> ActiveAssignment {
     match state {
-        MethodState::Cep(c) => EdgePartition::from_cep(c),
-        MethodState::Bvc(b) => b.to_partition(),
-        MethodState::Stateless => match method {
-            "1d" => hash1d::partition(g, k),
-            "oblivious" => oblivious::partition(g, k),
-            "ginger" => ginger::partition(g, k),
-            _ => unreachable!("stateless method {method}"),
-        },
+        MethodState::Cep(c) => ActiveAssignment::Chunked(CepView::new(*c)),
+        MethodState::Bvc(b) => ActiveAssignment::Materialized(b.to_partition()),
+        MethodState::Stateless => {
+            ActiveAssignment::Materialized(stateless_partition(g, method, k))
+        }
     }
-    .clone_checked(k, g.num_edges())
 }
 
-trait CloneChecked {
-    fn clone_checked(self, k: usize, m: usize) -> EdgePartition;
+/// Advance the method state to `target_k` and derive the executable plan
+/// plus the new active assignment. For CEP this is O(k + k') chunk
+/// metadata; BVC and the stateless methods diff per edge.
+fn plan_rescale(
+    g: &Graph,
+    state: &mut MethodState,
+    current: &ActiveAssignment,
+    method: &str,
+    target_k: usize,
+) -> (MigrationPlan, ActiveAssignment) {
+    match state {
+        MethodState::Cep(c) => {
+            let old = *c;
+            *c = c.rescaled(target_k);
+            (
+                MigrationPlan::between_ceps(&old, c),
+                ActiveAssignment::Chunked(CepView::new(*c)),
+            )
+        }
+        MethodState::Bvc(b) => {
+            let before = b.to_partition();
+            b.scale_to(target_k);
+            let after = b.to_partition();
+            (
+                MigrationPlan::diff(&before, &after),
+                ActiveAssignment::Materialized(after),
+            )
+        }
+        MethodState::Stateless => {
+            let after = stateless_partition(g, method, target_k);
+            (
+                MigrationPlan::diff(current.as_assignment(), &after),
+                ActiveAssignment::Materialized(after),
+            )
+        }
+    }
 }
 
-impl CloneChecked for EdgePartition {
-    fn clone_checked(self, k: usize, m: usize) -> EdgePartition {
-        debug_assert_eq!(self.k, k);
-        debug_assert_eq!(self.assign.len(), m);
-        self
-    }
+fn stateless_partition(g: &Graph, method: &str, k: usize) -> EdgePartition {
+    let part = match method {
+        "1d" => hash1d::partition(g, k),
+        "oblivious" => oblivious::partition(g, k),
+        "ginger" => ginger::partition(g, k),
+        _ => unreachable!("stateless method {method}"),
+    };
+    debug_assert_eq!(part.k, k);
+    debug_assert_eq!(part.assign.len(), g.num_edges());
+    part
 }
 
 #[cfg(test)]
@@ -255,6 +323,29 @@ mod tests {
         assert!((out.all_s - (out.init_s + out.app_s + out.scale_s)).abs() < 1e-9);
     }
 
+    /// Acceptance: on the CEP path a coordinator-driven rescale reaches
+    /// the engine as O(k) range moves — the executed plans stay bounded by
+    /// the chunk-boundary count no matter how many edges the graph has.
+    #[test]
+    fn cep_rescale_reaches_engine_as_range_moves() {
+        let g = small_graph();
+        let scenario = Scenario::scale_out(4, 3, 2); // 4→7
+        let cfg = ControllerConfig::default();
+        let out =
+            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        assert_eq!(out.final_k, 7);
+        for ev in &out.events {
+            assert!(
+                ev.range_moves <= ev.from_k + ev.to_k + 1,
+                "{}→{}: {} range moves is not O(k)",
+                ev.from_k,
+                ev.to_k,
+                ev.range_moves
+            );
+            assert!(ev.migrated_edges > 0);
+        }
+    }
+
     #[test]
     fn cep_scales_cheaper_than_stateless_oblivious() {
         let g = small_graph();
@@ -269,8 +360,12 @@ mod tests {
             run_scenario(&g, &scenario, &obl_cfg, |_| Box::new(NativeBackend::new())).unwrap();
         // CEP's per-event migration obeys Theorem 2 (≈ m/2 per x=1 step)
         let m = g.num_edges() as f64;
-        for &(_, _, moved) in &cep.events {
-            assert!((moved as f64) < 0.6 * m, "CEP event moved {moved} of {m}");
+        for ev in &cep.events {
+            assert!(
+                (ev.migrated_edges as f64) < 0.6 * m,
+                "CEP event moved {} of {m}",
+                ev.migrated_edges
+            );
         }
         // both accounted a full breakdown
         assert!(obl.scale_s > 0.0 && cep.scale_s > 0.0);
@@ -285,6 +380,39 @@ mod tests {
         let out =
             run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
         assert_eq!(out.final_k, 3);
+    }
+
+    #[test]
+    fn bvc_and_stateless_methods_still_run() {
+        let g = small_graph();
+        let scenario = Scenario::scale_out(3, 1, 2);
+        for method in ["bvc", "1d", "ginger"] {
+            let mut cfg = ControllerConfig::default();
+            cfg.method = method.into();
+            let out = run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+                .unwrap_or_else(|e| panic!("{method}: {e:#}"));
+            assert_eq!(out.final_k, 4, "{method}");
+            assert_eq!(out.events.len(), 1, "{method}");
+            assert!(out.migrated_edges > 0, "{method}");
+        }
+    }
+
+    /// Scattered methods through the plan pipeline on **scale-in**: the
+    /// diff plan must drain the retired partitions so the engine can
+    /// truncate workers (the controller's Preempt path).
+    #[test]
+    fn scattered_methods_scale_in_through_plans() {
+        let g = small_graph();
+        let scenario = Scenario::scale_in(5, 2, 2); // 5 → 3
+        for method in ["bvc", "1d"] {
+            let mut cfg = ControllerConfig::default();
+            cfg.method = method.into();
+            let out = run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+                .unwrap_or_else(|e| panic!("{method}: {e:#}"));
+            assert_eq!(out.final_k, 3, "{method}");
+            assert_eq!(out.events.len(), 2, "{method}");
+            assert!(out.migrated_edges > 0, "{method}");
+        }
     }
 
     #[test]

@@ -8,4 +8,4 @@ pub mod events;
 pub mod provisioner;
 pub mod state;
 
-pub use controller::{run_scenario, ControllerConfig, RunBreakdown};
+pub use controller::{run_scenario, ControllerConfig, EventRecord, RunBreakdown};

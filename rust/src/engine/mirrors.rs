@@ -5,14 +5,24 @@
 //! value), the rest are mirrors. Masters are placed on the replica
 //! partition chosen by a degree-independent hash, which balances master
 //! counts across partitions (PowerGraph's strategy).
+//!
+//! The layout is built once from any [`PartitionAssignment`] and then kept
+//! current across rescales by **executing migration plans**
+//! ([`PartitionLayout::apply_plan`]): moved edge-id ranges are spliced
+//! between per-partition edge sets, only the touched partitions rebuild
+//! their local tables, and master/mirror state is re-derived only for the
+//! vertices whose replica set actually changed — never a full rebuild.
 
 use crate::graph::Graph;
-use crate::partition::EdgePartition;
+use crate::partition::PartitionAssignment;
+use crate::scaling::migration::MigrationPlan;
 use crate::util::rng::mix64;
-use crate::VertexId;
+use crate::{EdgeId, VertexId};
+use std::ops::Range;
 
-/// Immutable layout: per-partition vertex sets, local edge endpoints and
-/// the global master assignment.
+/// Layout state: per-partition vertex sets, owned edge ids, local edge
+/// endpoints and the global master assignment. Mutated in place by
+/// [`PartitionLayout::apply_plan`].
 pub struct PartitionLayout {
     k: usize,
     n: usize,
@@ -26,62 +36,183 @@ pub struct PartitionLayout {
     master: Vec<u32>,
     /// number of replicas per vertex
     replicas: Vec<u32>,
+    /// sorted global edge ids owned by each partition — the substrate the
+    /// range moves of a migration plan splice between partitions. Costs
+    /// 8 B/edge on top of the ~16 B/edge local endpoint arrays; a future
+    /// optimization is an interval-list representation so chunked layouts
+    /// pay O(k) here and range moves become O(log r) metadata edits.
+    edge_ids: Vec<Vec<EdgeId>>,
+    /// sorted replica partition list per vertex (incrementally patched)
+    replica_parts: Vec<Vec<u32>>,
 }
 
 impl PartitionLayout {
-    /// Build the layout for `(g, part)`.
-    pub fn build(g: &Graph, part: &EdgePartition) -> PartitionLayout {
-        let k = part.k;
+    /// Build the layout for `(g, part)` from any assignment view.
+    pub fn build<P: PartitionAssignment + ?Sized>(g: &Graph, part: &P) -> PartitionLayout {
+        let k = part.k();
         let n = g.num_vertices();
-        // collect vertex sets
-        let mut present: Vec<std::collections::BTreeSet<VertexId>> =
-            vec![Default::default(); k];
-        for (eid, e) in g.edges().iter().enumerate() {
-            let p = part.assign[eid] as usize;
-            present[p].insert(e.u);
-            present[p].insert(e.v);
+        debug_assert_eq!(part.num_edges() as usize, g.num_edges());
+        let mut edge_ids: Vec<Vec<EdgeId>> = vec![Vec::new(); k];
+        for eid in 0..g.num_edges() as EdgeId {
+            edge_ids[part.partition_of(eid) as usize].push(eid);
         }
-        let vertices: Vec<Vec<VertexId>> =
-            present.into_iter().map(|s| s.into_iter().collect()).collect();
+        let mut layout = PartitionLayout {
+            k,
+            n,
+            vertices: vec![Vec::new(); k],
+            local_src: vec![Vec::new(); k],
+            local_dst: vec![Vec::new(); k],
+            master: vec![u32::MAX; n],
+            replicas: vec![0u32; n],
+            edge_ids,
+            replica_parts: vec![Vec::new(); n],
+        };
+        for p in 0..k {
+            layout.rebuild_partition(p, g);
+        }
+        for p in 0..k {
+            let vs = std::mem::take(&mut layout.vertices[p]);
+            for &v in &vs {
+                layout.replica_parts[v as usize].push(p as u32);
+            }
+            layout.vertices[p] = vs;
+        }
+        for v in 0..n as VertexId {
+            layout.refresh_vertex(v);
+        }
+        layout
+    }
 
-        // master per vertex: hash-pick among its replica partitions
-        let mut replica_parts: Vec<Vec<u32>> = vec![Vec::new(); n];
-        for (p, vs) in vertices.iter().enumerate() {
-            for &v in vs {
-                replica_parts[v as usize].push(p as u32);
+    /// Execute a migration plan in place, transitioning the layout from
+    /// its current assignment to the one the plan encodes (`k` becomes
+    /// `new_k`). Work is proportional to the touched partitions and the
+    /// vertices whose replica set changed — untouched partitions keep
+    /// their tables. Returns the ids (< `new_k`) of partitions whose local
+    /// state changed, ascending.
+    ///
+    /// Panics when the plan is inconsistent with the current layout (a
+    /// moved range not wholly owned by its source, or a removed partition
+    /// still owning edges).
+    pub fn apply_plan(&mut self, g: &Graph, plan: &MigrationPlan, new_k: usize) -> Vec<usize> {
+        let old_k = self.k;
+        let grown = new_k.max(old_k);
+        if grown > old_k {
+            self.vertices.resize_with(grown, Vec::new);
+            self.local_src.resize_with(grown, Vec::new);
+            self.local_dst.resize_with(grown, Vec::new);
+            self.edge_ids.resize_with(grown, Vec::new);
+        }
+
+        // 1. splice moved edge-id ranges between partitions
+        let mut changed = vec![false; grown];
+        for mv in &plan.moves {
+            let (s, d) = (mv.src as usize, mv.dst as usize);
+            assert!(s < grown && d < grown, "plan references partition out of range");
+            move_range(&mut self.edge_ids, s, d, &mv.edges);
+            changed[s] = true;
+            changed[d] = true;
+        }
+
+        // 2. rebuild local tables of touched partitions; patch replica
+        //    sets for vertices gained/lost
+        let mut dirty: Vec<VertexId> = Vec::new();
+        for (p, &was_changed) in changed.iter().enumerate() {
+            if !was_changed {
+                continue;
+            }
+            let old_verts = std::mem::take(&mut self.vertices[p]);
+            self.rebuild_partition(p, g);
+            let (removed, added) = diff_sorted(&old_verts, &self.vertices[p]);
+            for v in removed {
+                let parts = &mut self.replica_parts[v as usize];
+                match parts.binary_search(&(p as u32)) {
+                    Ok(i) => {
+                        parts.remove(i);
+                    }
+                    Err(_) => panic!("replica set of vertex {v} lacked partition {p}"),
+                }
+                dirty.push(v);
+            }
+            for v in added {
+                let parts = &mut self.replica_parts[v as usize];
+                match parts.binary_search(&(p as u32)) {
+                    Err(i) => parts.insert(i, p as u32),
+                    Ok(_) => panic!("replica set of vertex {v} already had partition {p}"),
+                }
+                dirty.push(v);
             }
         }
-        let mut master = vec![u32::MAX; n];
-        let mut replicas = vec![0u32; n];
-        for v in 0..n {
-            let parts = &replica_parts[v];
-            replicas[v] = parts.len() as u32;
-            if !parts.is_empty() {
-                master[v] = parts[(mix64(v as u64) % parts.len() as u64) as usize];
+
+        // 3. shrink: removed partitions must have been drained by the plan
+        if new_k < old_k {
+            for (p, ids) in self.edge_ids.iter().enumerate().take(old_k).skip(new_k) {
+                assert!(
+                    ids.is_empty(),
+                    "partition {p} still owns {} edges after scale-in plan",
+                    ids.len()
+                );
             }
+            self.vertices.truncate(new_k);
+            self.local_src.truncate(new_k);
+            self.local_dst.truncate(new_k);
+            self.edge_ids.truncate(new_k);
+        }
+        self.k = new_k;
+
+        // 4. re-derive master/mirror info for affected vertices only
+        dirty.sort_unstable();
+        dirty.dedup();
+        for v in dirty {
+            self.refresh_vertex(v);
         }
 
-        // local edge arrays (both directions)
-        let mut local_src: Vec<Vec<i32>> = vec![Vec::new(); k];
-        let mut local_dst: Vec<Vec<i32>> = vec![Vec::new(); k];
-        // local index lookup per partition
-        let lindex: Vec<std::collections::HashMap<VertexId, i32>> = vertices
+        changed
             .iter()
-            .map(|vs| {
-                vs.iter().enumerate().map(|(i, &v)| (v, i as i32)).collect()
-            })
-            .collect();
-        for (eid, e) in g.edges().iter().enumerate() {
-            let p = part.assign[eid] as usize;
-            let lu = lindex[p][&e.u];
-            let lv = lindex[p][&e.v];
-            local_src[p].push(lu);
-            local_dst[p].push(lv);
-            local_src[p].push(lv);
-            local_dst[p].push(lu);
-        }
+            .enumerate()
+            .filter(|&(p, &c)| c && p < new_k)
+            .map(|(p, _)| p)
+            .collect()
+    }
 
-        PartitionLayout { k, n, vertices, local_src, local_dst, master, replicas }
+    /// Recompute partition `p`'s vertex set and local edge arrays from its
+    /// owned edge ids.
+    fn rebuild_partition(&mut self, p: usize, g: &Graph) {
+        let mut present: std::collections::BTreeSet<VertexId> = Default::default();
+        for &eid in &self.edge_ids[p] {
+            let e = g.edges()[eid as usize];
+            present.insert(e.u);
+            present.insert(e.v);
+        }
+        let verts: Vec<VertexId> = present.into_iter().collect();
+        let lindex: std::collections::HashMap<VertexId, i32> =
+            verts.iter().enumerate().map(|(i, &v)| (v, i as i32)).collect();
+        let src = &mut self.local_src[p];
+        let dst = &mut self.local_dst[p];
+        src.clear();
+        dst.clear();
+        for &eid in &self.edge_ids[p] {
+            let e = g.edges()[eid as usize];
+            let lu = lindex[&e.u];
+            let lv = lindex[&e.v];
+            src.push(lu);
+            dst.push(lv);
+            src.push(lv);
+            dst.push(lu);
+        }
+        self.vertices[p] = verts;
+    }
+
+    /// Re-derive replica count and master placement of `v` from its
+    /// (sorted) replica partition list — same hash pick as a fresh build,
+    /// so incremental updates are bit-identical to rebuilding.
+    fn refresh_vertex(&mut self, v: VertexId) {
+        let parts = &self.replica_parts[v as usize];
+        self.replicas[v as usize] = parts.len() as u32;
+        self.master[v as usize] = if parts.is_empty() {
+            u32::MAX
+        } else {
+            parts[(mix64(v as u64) % parts.len() as u64) as usize]
+        };
     }
 
     /// Number of partitions.
@@ -97,6 +228,11 @@ impl PartitionLayout {
     /// Sorted global vertices of partition `p`.
     pub fn vertices_of(&self, p: usize) -> &[VertexId] {
         &self.vertices[p]
+    }
+
+    /// Sorted global edge ids owned by partition `p`.
+    pub fn edges_of(&self, p: usize) -> &[EdgeId] {
+        &self.edge_ids[p]
     }
 
     /// Local directed source endpoints of partition `p`.
@@ -131,13 +267,68 @@ impl PartitionLayout {
     }
 }
 
+/// Drain the (contiguous, wholly owned) id range `r` out of the sorted
+/// `edge_ids[s]` and splice it into the sorted `edge_ids[d]`.
+fn move_range(edge_ids: &mut [Vec<EdgeId>], s: usize, d: usize, r: &Range<EdgeId>) {
+    if s == d || r.start >= r.end {
+        return;
+    }
+    let src_vec = &mut edge_ids[s];
+    let lo = src_vec.partition_point(|&e| e < r.start);
+    let hi = src_vec.partition_point(|&e| e < r.end);
+    assert_eq!(
+        (hi - lo) as u64,
+        r.end - r.start,
+        "plan range {}..{} not wholly owned by partition {s}",
+        r.start,
+        r.end
+    );
+    let block: Vec<EdgeId> = src_vec.drain(lo..hi).collect();
+    let dst_vec = &mut edge_ids[d];
+    let at = dst_vec.partition_point(|&e| e < r.start);
+    dst_vec.splice(at..at, block);
+}
+
+/// Diff two sorted vertex lists into `(removed, added)`.
+fn diff_sorted(old: &[VertexId], new: &[VertexId]) -> (Vec<VertexId>, Vec<VertexId>) {
+    let (mut removed, mut added) = (Vec::new(), Vec::new());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < old.len() || j < new.len() {
+        match (old.get(i), new.get(j)) {
+            (Some(&a), Some(&b)) if a == b => {
+                i += 1;
+                j += 1;
+            }
+            (Some(&a), Some(&b)) if a < b => {
+                removed.push(a);
+                i += 1;
+            }
+            (Some(_), Some(&b)) => {
+                added.push(b);
+                j += 1;
+            }
+            (Some(&a), None) => {
+                removed.push(a);
+                i += 1;
+            }
+            (None, Some(&b)) => {
+                added.push(b);
+                j += 1;
+            }
+            (None, None) => unreachable!(),
+        }
+    }
+    (removed, added)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::builder::GraphBuilder;
     use crate::graph::generators::erdos_renyi;
     use crate::partition::quality::replication_factor;
-    use crate::partition::{cep::Cep, EdgePartition};
+    use crate::partition::{cep::Cep, CepView, EdgePartition};
+    use crate::util::proptest::check;
 
     #[test]
     fn masters_are_replica_partitions() {
@@ -180,5 +371,101 @@ mod tests {
             .filter(|&v| l.master_of(v) != u32::MAX)
             .count() as u64;
         assert_eq!(l.num_mirrors(), total_replicas - masters);
+    }
+
+    #[test]
+    fn build_from_view_matches_build_from_vector() {
+        let g = erdos_renyi(90, 420, 4);
+        let c = Cep::new(g.num_edges(), 6);
+        let a = PartitionLayout::build(&g, &CepView::new(c));
+        let b = PartitionLayout::build(&g, &EdgePartition::from_cep(&c));
+        assert_layouts_equal(&a, &b);
+    }
+
+    fn assert_layouts_equal(a: &PartitionLayout, b: &PartitionLayout) {
+        assert_eq!(a.k(), b.k());
+        assert_eq!(a.num_vertices(), b.num_vertices());
+        for p in 0..a.k() {
+            assert_eq!(a.vertices_of(p), b.vertices_of(p), "vertices of {p}");
+            assert_eq!(a.edges_of(p), b.edges_of(p), "edges of {p}");
+            assert_eq!(a.src_of(p), b.src_of(p), "src of {p}");
+            assert_eq!(a.dst_of(p), b.dst_of(p), "dst of {p}");
+        }
+        for v in 0..a.num_vertices() as VertexId {
+            assert_eq!(a.master_of(v), b.master_of(v), "master of {v}");
+            assert_eq!(a.replicas_of(v), b.replicas_of(v), "replicas of {v}");
+        }
+    }
+
+    /// Core incremental-migration invariant: applying a plan yields the
+    /// exact layout a fresh build of the new assignment would produce —
+    /// across CEP chains (scale out/in) and scattered diffs.
+    #[test]
+    fn apply_plan_matches_fresh_build() {
+        check(0xA11F, 12, |rng| {
+            let g = erdos_renyi(
+                60 + rng.below_usize(120),
+                250 + rng.below_usize(900),
+                rng.next_u64(),
+            );
+            let m = g.num_edges();
+            let mut k = 2 + rng.below_usize(6);
+            let mut view = CepView::new(Cep::new(m, k));
+            let mut layout = PartitionLayout::build(&g, &view);
+            for _ in 0..4 {
+                let up = rng.chance(0.5) && k < 12;
+                let new_k = if up { k + 1 + rng.below_usize(2) } else { (k - 1).max(1) };
+                let next = CepView::new(view.cep().rescaled(new_k));
+                let plan =
+                    crate::scaling::migration::MigrationPlan::between_ceps(view.cep(), next.cep());
+                layout.apply_plan(&g, &plan, new_k);
+                let fresh = PartitionLayout::build(&g, &next);
+                assert_layouts_equal(&layout, &fresh);
+                view = next;
+                k = new_k;
+            }
+        });
+    }
+
+    /// Scattered (non-chunked) plans through both growth and scale-in:
+    /// the controller drives exactly this shape for bvc/1d/ginger, where a
+    /// Preempt event shrinks k and the diff plan must drain the removed
+    /// partitions.
+    #[test]
+    fn apply_plan_handles_scattered_diffs() {
+        check(0xA11E, 10, |rng| {
+            let g = erdos_renyi(70, 350, rng.next_u64());
+            let m = g.num_edges();
+            let k0 = 2 + rng.below_usize(6);
+            let k1 = 2 + rng.below_usize(6); // freely above or below k0
+            let old = EdgePartition::new(
+                k0,
+                (0..m).map(|_| rng.below(k0 as u64) as u32).collect(),
+            );
+            let new = EdgePartition::new(
+                k1,
+                (0..m).map(|_| rng.below(k1 as u64) as u32).collect(),
+            );
+            let plan = crate::scaling::migration::MigrationPlan::diff(&old, &new);
+            let mut layout = PartitionLayout::build(&g, &old);
+            let changed = layout.apply_plan(&g, &plan, new.k);
+            let fresh = PartitionLayout::build(&g, &new);
+            assert_layouts_equal(&layout, &fresh);
+            // every changed partition is within the new k
+            assert!(changed.iter().all(|&p| p < new.k));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "not wholly owned")]
+    fn inconsistent_plan_is_rejected() {
+        let g = erdos_renyi(40, 160, 9);
+        let m = g.num_edges();
+        let part = EdgePartition::from_cep(&Cep::new(m, 4));
+        let mut layout = PartitionLayout::build(&g, &part);
+        // claim partition 0 owns a range that actually belongs to 3
+        let mut plan = crate::scaling::migration::MigrationPlan::default();
+        plan.push_range(0, 1, (m as u64 - 5)..m as u64);
+        layout.apply_plan(&g, &plan, 4);
     }
 }

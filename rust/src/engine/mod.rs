@@ -21,8 +21,9 @@ pub mod mirrors;
 pub mod worker;
 
 use crate::graph::Graph;
-use crate::partition::EdgePartition;
+use crate::partition::PartitionAssignment;
 use crate::runtime::{ComputeBackend, StepKind};
+use crate::scaling::migration::MigrationPlan;
 use crate::Result;
 use comm::CommMeter;
 use mirrors::PartitionLayout;
@@ -46,19 +47,67 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Build from a graph and an edge partitioning. `backend_for` is
+    /// Build from a graph and any partition assignment view (materialized
+    /// vector or O(1) [`crate::partition::CepView`]). `backend_for` is
     /// invoked once per partition (clone an [`crate::runtime::executor::XlaBackend`]
     /// handle or create fresh [`crate::runtime::native::NativeBackend`]s).
-    pub fn new<F>(g: &Graph, part: &EdgePartition, mut backend_for: F) -> Result<Engine>
+    pub fn new<F, P>(g: &Graph, part: &P, mut backend_for: F) -> Result<Engine>
     where
         F: FnMut(usize) -> Box<dyn ComputeBackend>,
+        P: PartitionAssignment + ?Sized,
     {
         let layout = PartitionLayout::build(g, part);
-        let mut workers = Vec::with_capacity(part.k);
-        for p in 0..part.k {
+        let k = part.k();
+        let mut workers = Vec::with_capacity(k);
+        for p in 0..k {
             workers.push(Worker::new(&layout, p, backend_for(p))?);
         }
         Ok(Engine { layout, workers, comm: CommMeter::new() })
+    }
+
+    /// Execute a migration plan: splice the moved edge-id ranges through
+    /// the layout, rebuild local tables of exactly the touched partitions
+    /// (keeping their compute backends), and add/retire workers as `k`
+    /// changes. `new_part` must be the post-migration assignment the plan
+    /// encodes; `backend_for` is only invoked for newly added partitions.
+    ///
+    /// This is the engine half of the plan-based rescale pipeline: on the
+    /// CEP path nothing here allocates per-edge assignment vectors — the
+    /// plan is O(k) range moves and the work is proportional to the
+    /// touched partitions.
+    pub fn apply_migration<F, P>(
+        &mut self,
+        g: &Graph,
+        plan: &MigrationPlan,
+        new_part: &P,
+        mut backend_for: F,
+    ) -> Result<()>
+    where
+        F: FnMut(usize) -> Box<dyn ComputeBackend>,
+        P: PartitionAssignment + ?Sized,
+    {
+        let new_k = new_part.k();
+        let changed = self.layout.apply_plan(g, plan, new_k);
+        #[cfg(debug_assertions)]
+        for p in 0..new_k {
+            for &eid in self.layout.edges_of(p) {
+                debug_assert_eq!(
+                    new_part.partition_of(eid),
+                    p as u32,
+                    "plan diverges from target assignment at edge {eid}"
+                );
+            }
+        }
+        self.workers.truncate(new_k);
+        for &p in &changed {
+            if p < self.workers.len() {
+                self.workers[p].rebuild(&self.layout)?;
+            }
+        }
+        for p in self.workers.len()..new_k {
+            self.workers.push(Worker::new(&self.layout, p, backend_for(p))?);
+        }
+        Ok(())
     }
 
     /// Number of partitions.
@@ -175,5 +224,44 @@ mod tests {
             e.superstep(StepKind::PageRank, Combine::Sum, &state, &aux, &active).unwrap();
         let total: f32 = out.iter().sum();
         assert!((total - 1.0).abs() < 1e-6, "mass {total}");
+    }
+
+    /// Plan-based rescale end-to-end: apply_migration over a chain of CEP
+    /// rescales (via the O(1) view, growing and shrinking k) must leave
+    /// the engine indistinguishable from one built fresh on the new
+    /// layout.
+    #[test]
+    fn apply_migration_matches_fresh_engine() {
+        use crate::graph::generators::erdos_renyi;
+        use crate::partition::{cep::Cep, CepView};
+        use crate::scaling::migration::MigrationPlan;
+
+        let g = erdos_renyi(120, 500, 7);
+        let m = g.num_edges();
+        let mut view = CepView::new(Cep::new(m, 3));
+        let mut engine = Engine::new(&g, &view, |_| Box::new(NativeBackend::new())).unwrap();
+        let n = g.num_vertices();
+        let state: Vec<f32> = (0..n).map(|v| (v % 17) as f32 / 17.0).collect();
+        let aux = vec![1.0f32; n];
+        let active = vec![true; n];
+        for new_k in [5usize, 4, 8, 2] {
+            let next = CepView::new(view.cep().rescaled(new_k));
+            let plan = MigrationPlan::between_ceps(view.cep(), next.cep());
+            engine
+                .apply_migration(&g, &plan, &next, |_| Box::new(NativeBackend::new()))
+                .unwrap();
+            view = next;
+            assert_eq!(engine.k(), new_k);
+            let mut fresh =
+                Engine::new(&g, &view, |_| Box::new(NativeBackend::new())).unwrap();
+            assert!((engine.layout().rf() - fresh.layout().rf()).abs() < 1e-12);
+            let (a, _) = engine
+                .superstep(StepKind::PageRank, Combine::Sum, &state, &aux, &active)
+                .unwrap();
+            let (b, _) = fresh
+                .superstep(StepKind::PageRank, Combine::Sum, &state, &aux, &active)
+                .unwrap();
+            assert_eq!(a, b, "k={new_k}");
+        }
     }
 }

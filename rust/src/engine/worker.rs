@@ -14,7 +14,7 @@ pub struct Worker {
     nv: usize,
     /// padded capacities from the backend
     vcap: usize,
-    // padded local edge arrays (fixed for the worker's lifetime)
+    // padded local edge arrays (reloaded by `rebuild` after migrations)
     src: Vec<i32>,
     dst: Vec<i32>,
     weight: Vec<f32>,
@@ -33,31 +33,53 @@ impl Worker {
         pid: usize,
         backend: Box<dyn ComputeBackend>,
     ) -> Result<Worker> {
-        let nv = layout.vertices_of(pid).len();
-        let ne = layout.src_of(pid).len();
-        // a zero-vertex partition still needs valid (≥1) shapes
-        let (vcap, ecap) = backend.capacity_for(nv.max(1), ne.max(1))?;
-        let mut src = layout.src_of(pid).to_vec();
-        let mut dst = layout.dst_of(pid).to_vec();
-        let mut weight = vec![1.0f32; ne]; // unweighted graphs: hop = 1
-        let mut mask = vec![1.0f32; ne];
-        src.resize(ecap, 0);
-        dst.resize(ecap, 0);
-        weight.resize(ecap, 0.0);
-        mask.resize(ecap, 0.0); // padding edges masked out
-        Ok(Worker {
+        let mut w = Worker {
             pid,
             backend,
-            nv,
-            vcap,
-            src,
-            dst,
-            weight,
-            mask,
-            state_buf: vec![0.0; vcap],
-            aux_buf: vec![0.0; vcap],
-            globals: layout.vertices_of(pid).to_vec(),
-        })
+            nv: 0,
+            vcap: 0,
+            src: Vec::new(),
+            dst: Vec::new(),
+            weight: Vec::new(),
+            mask: Vec::new(),
+            state_buf: Vec::new(),
+            aux_buf: Vec::new(),
+            globals: Vec::new(),
+        };
+        w.rebuild(layout)?;
+        Ok(w)
+    }
+
+    /// Reload this worker's local tables from the (migrated) layout,
+    /// keeping the compute backend. Called by the engine for exactly the
+    /// partitions a migration plan touched; untouched workers are not
+    /// rebuilt at all.
+    pub fn rebuild(&mut self, layout: &PartitionLayout) -> Result<()> {
+        let nv = layout.vertices_of(self.pid).len();
+        let ne = layout.src_of(self.pid).len();
+        // a zero-vertex partition still needs valid (≥1) shapes
+        let (vcap, ecap) = self.backend.capacity_for(nv.max(1), ne.max(1))?;
+        self.src.clear();
+        self.src.extend_from_slice(layout.src_of(self.pid));
+        self.src.resize(ecap, 0);
+        self.dst.clear();
+        self.dst.extend_from_slice(layout.dst_of(self.pid));
+        self.dst.resize(ecap, 0);
+        self.weight.clear();
+        self.weight.resize(ne, 1.0); // unweighted graphs: hop = 1
+        self.weight.resize(ecap, 0.0);
+        self.mask.clear();
+        self.mask.resize(ne, 1.0);
+        self.mask.resize(ecap, 0.0); // padding edges masked out
+        self.state_buf.clear();
+        self.state_buf.resize(vcap, 0.0);
+        self.aux_buf.clear();
+        self.aux_buf.resize(vcap, 0.0);
+        self.globals.clear();
+        self.globals.extend_from_slice(layout.vertices_of(self.pid));
+        self.nv = nv;
+        self.vcap = vcap;
+        Ok(())
     }
 
     /// Run one compute phase: load global `state`/`aux` into the local
@@ -147,6 +169,28 @@ mod tests {
             }
             Ok(crate::runtime::native::pagerank_step(req))
         }
+    }
+
+    #[test]
+    fn rebuild_tracks_layout_changes() {
+        // 0-1-2-3 path split 2|1, then edge id 2 migrates 1 → 0
+        let g = GraphBuilder::new().edge(0, 1).edge(1, 2).edge(2, 3).build();
+        let old = EdgePartition::new(2, vec![0, 0, 1]);
+        let new = EdgePartition::new(2, vec![0, 0, 0]);
+        let mut layout = PartitionLayout::build(&g, &old);
+        let mut w = Worker::new(&layout, 0, Box::new(NativeBackend::new())).unwrap();
+        assert_eq!(w.num_local_vertices(), 3);
+        let plan = crate::scaling::migration::MigrationPlan::diff(&old, &new);
+        layout.apply_plan(&g, &plan, 2);
+        w.rebuild(&layout).unwrap();
+        assert_eq!(w.num_local_vertices(), 4);
+        // the rebuilt worker computes the same partials as a fresh one
+        let mut fresh = Worker::new(&layout, 0, Box::new(NativeBackend::new())).unwrap();
+        let state = vec![0.25; 4];
+        let aux = vec![1.0, 0.5, 0.5, 1.0];
+        let a = w.compute(StepKind::PageRank, &state, &aux).unwrap();
+        let b = fresh.compute(StepKind::PageRank, &state, &aux).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -21,12 +21,36 @@
 //! plane ([`coordinator`]), migration/network emulation ([`scaling`]), and
 //! the theoretical bounds of Table 2 ([`theory`]).
 //!
+//! ## The plan-based scaling pipeline
+//!
+//! Rescaling flows end-to-end as metadata, never as per-edge vectors:
+//!
+//! 1. **View** — [`partition::PartitionAssignment`] abstracts over
+//!    assignments; [`partition::CepView`] implements it in O(1) straight
+//!    from chunk arithmetic, so the engine and the quality metrics consume
+//!    CEP layouts with zero materialization.
+//! 2. **Plan** — a `k → k±x` rescale derives a
+//!    [`scaling::migration::MigrationPlan`]: an explicit list of
+//!    `(src, dst, edge-id-range)` moves. On the CEP path the plan is
+//!    O(k + k') range moves computed from the chunk boundaries alone
+//!    (Theorem 2's structure); every [`scaling::scaler::DynamicScaler`]
+//!    returns one.
+//! 3. **Price** — [`scaling::network::Network`] prices the plan on the
+//!    emulated cluster NICs (Fig 14).
+//! 4. **Execute** — [`engine::Engine::apply_migration`] splices the moved
+//!    ranges through the mirror layout in place: only touched partitions
+//!    rebuild their local tables and only vertices whose replica set
+//!    changed re-derive masters. Untouched workers keep running.
+//!
+//! The [`coordinator`] drives exactly this loop at every scale event.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
 //! use egs::graph::datasets;
 //! use egs::ordering::{geo::GeoConfig, EdgeOrdering};
 //! use egs::partition::{cep::Cep, quality};
+//! use egs::scaling::migration::MigrationPlan;
 //!
 //! let g = datasets::by_name("pokec-s", 42).unwrap();
 //! let order = egs::ordering::geo::order(&g, &GeoConfig::default());
@@ -36,6 +60,11 @@
 //!     let rf = quality::replication_factor_chunked(&ordered, &parts);
 //!     println!("k={k} RF={rf:.3}");
 //! }
+//! // dynamic scaling: an executable O(k) plan, straight from metadata
+//! let old = Cep::new(ordered.num_edges(), 8);
+//! let new = old.rescaled(12);
+//! let plan = MigrationPlan::between_ceps(&old, &new);
+//! println!("{} edges move in {} range moves", plan.migrated_edges(), plan.num_moves());
 //! ```
 #![warn(missing_docs)]
 

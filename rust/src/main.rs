@@ -148,10 +148,13 @@ fn cmd_scale(args: &Args) -> egs::Result<()> {
         "1d" => Box::new(Hash1dScaler::new(m, from)),
         other => bail!("unknown scaler {other} (cep|bvc|1d)"),
     };
-    let (moved, dt) = egs::metrics::timer::once(|| scaler.scale_to(to));
+    let (plan, dt) = egs::metrics::timer::once(|| scaler.scale_to(to));
+    let moved = plan.migrated_edges();
     println!(
-        "{method}: {from} -> {to} over {m} edges: migrated {moved} ({:.1}%) repartition-time {}",
+        "{method}: {from} -> {to} over {m} edges: migrated {moved} ({:.1}%) \
+         in {} range moves, repartition-time {}",
         100.0 * moved as f64 / m as f64,
+        plan.num_moves(),
         egs::metrics::timer::human_duration(dt)
     );
     Ok(())

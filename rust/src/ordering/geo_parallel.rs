@@ -25,9 +25,6 @@ pub fn order(g: &Graph, cfg: &GeoConfig, threads: usize) -> EdgeOrdering {
     let vorder = bfs::order(g);
     let rank = vorder.ranks();
     let n = g.num_vertices();
-    let region_of = |v: u32| -> usize {
-        ((rank[v as usize] as u64 * threads as u64) / n as u64) as usize
-    };
 
     // 2. bucket edges by the region of their BFS-rank *midpoint* — the
     // min-endpoint rule funnels every hub-adjacent edge into region 0
@@ -38,7 +35,6 @@ pub fn order(g: &Graph, cfg: &GeoConfig, threads: usize) -> EdgeOrdering {
         let r = ((mid * threads as u64) / n as u64) as usize;
         buckets[r.min(threads - 1)].push(eid as EdgeId);
     }
-    let _ = region_of;
 
     // 3. order each region's induced subgraph concurrently
     let sub_orders: Vec<Vec<EdgeId>> = std::thread::scope(|s| {

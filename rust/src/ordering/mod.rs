@@ -29,6 +29,7 @@ pub mod window;
 
 use crate::graph::Graph;
 use crate::{EdgeId, VertexId};
+use anyhow::bail;
 
 /// A permutation of the edge list: `perm[new_position] = old_edge_id`.
 #[derive(Clone, Debug)]
@@ -39,8 +40,26 @@ pub struct EdgeOrdering {
 impl EdgeOrdering {
     /// Wrap a permutation vector; validates it is a permutation in debug.
     pub fn new(perm: Vec<EdgeId>) -> EdgeOrdering {
-        debug_assert!(is_permutation(&perm));
+        debug_assert!(permutation_defect(&perm).is_none());
         EdgeOrdering { perm }
+    }
+
+    /// Wrap a permutation vector with **release-mode** validation: a
+    /// corrupt permutation (hole, duplicate, out-of-range id) is rejected
+    /// as an error instead of silently scrambling the edge list. Used at
+    /// the registry boundary ([`edge_ordering_by_name`]) so every
+    /// algorithm's output is checked once per call, whatever the build
+    /// profile.
+    pub fn try_new(perm: Vec<EdgeId>) -> crate::Result<EdgeOrdering> {
+        if let Some(defect) = permutation_defect(&perm) {
+            bail!("invalid edge ordering: {defect}");
+        }
+        Ok(EdgeOrdering { perm })
+    }
+
+    /// Consume into the underlying permutation vector.
+    pub fn into_perm(self) -> Vec<EdgeId> {
+        self.perm
     }
 
     /// Identity ("DEF" — the dataset's default edge order).
@@ -124,33 +143,36 @@ impl VertexOrdering {
     }
 }
 
-fn is_permutation(perm: &[EdgeId]) -> bool {
+/// First defect making `perm` a non-permutation, or `None` when valid.
+fn permutation_defect(perm: &[EdgeId]) -> Option<String> {
     let mut seen = vec![false; perm.len()];
-    for &p in perm {
-        if p as usize >= perm.len() || seen[p as usize] {
-            return false;
+    for (pos, &p) in perm.iter().enumerate() {
+        if p as usize >= perm.len() {
+            return Some(format!("id {p} at position {pos} out of range (m={})", perm.len()));
+        }
+        if seen[p as usize] {
+            return Some(format!("duplicate id {p} at position {pos}"));
         }
         seen[p as usize] = true;
     }
-    true
+    None
 }
 
-/// Registry of edge orderings by CLI name.
-pub fn edge_ordering_by_name(
-    name: &str,
-    g: &Graph,
-    seed: u64,
-) -> Option<EdgeOrdering> {
-    Some(match name {
+/// Registry of edge orderings by CLI name. Unknown names are errors, and
+/// every algorithm's output passes the release-mode permutation check of
+/// [`EdgeOrdering::try_new`] before reaching callers.
+pub fn edge_ordering_by_name(name: &str, g: &Graph, seed: u64) -> crate::Result<EdgeOrdering> {
+    let order = match name {
         "geo" => geo::order(g, &geo::GeoConfig { seed, ..Default::default() }),
         "random" => random::random_edge_order(g, seed),
         "default" | "def" => EdgeOrdering::identity(g.num_edges()),
         // induced from vertex orderings (ablations)
-        other => {
-            let vo = vertex_ordering_by_name(other, g, seed)?;
-            vo.induced_edge_order(g)
-        }
-    })
+        other => match vertex_ordering_by_name(other, g, seed) {
+            Some(vo) => vo.induced_edge_order(g),
+            None => bail!("unknown edge ordering {name}"),
+        },
+    };
+    EdgeOrdering::try_new(order.into_perm())
 }
 
 /// Registry of vertex orderings by CLI name (Table 5).
@@ -198,12 +220,41 @@ mod tests {
     fn registries_resolve_all_names() {
         let g = erdos_renyi(40, 100, 3);
         for n in ["geo", "random", "default"] {
-            assert!(edge_ordering_by_name(n, &g, 1).is_some(), "{n}");
+            assert!(edge_ordering_by_name(n, &g, 1).is_ok(), "{n}");
         }
         for n in ["go", "ro", "rgb", "llp", "rcm", "deg", "bfs", "dfs", "vdef", "vrandom"] {
             assert!(vertex_ordering_by_name(n, &g, 1).is_some(), "{n}");
         }
         assert!(vertex_ordering_by_name("nope", &g, 1).is_none());
+        assert!(edge_ordering_by_name("nope", &g, 1).is_err());
+    }
+
+    /// Every registry name — direct edge orderings and every vertex
+    /// ordering induced through the edge registry — must pass the
+    /// release-mode permutation validation at the boundary.
+    #[test]
+    fn every_registry_name_passes_boundary_validation() {
+        let g = erdos_renyi(50, 140, 5);
+        let edge_names = ["geo", "random", "default", "def"];
+        let vertex_names = [
+            "go", "gorder", "ro", "rabbit", "rgb", "llp", "rcm", "deg", "bfs", "dfs",
+            "vdef", "vdefault", "vrandom",
+        ];
+        for n in edge_names.iter().chain(vertex_names.iter()) {
+            let o = edge_ordering_by_name(n, &g, 7)
+                .unwrap_or_else(|e| panic!("{n}: {e:#}"));
+            assert_eq!(o.len(), g.num_edges(), "{n}");
+        }
+    }
+
+    #[test]
+    fn try_new_rejects_corrupt_permutations() {
+        assert!(EdgeOrdering::try_new(vec![0, 1, 2]).is_ok());
+        assert!(EdgeOrdering::try_new(Vec::new()).is_ok());
+        let dup = EdgeOrdering::try_new(vec![0, 0]).unwrap_err();
+        assert!(dup.to_string().contains("duplicate"), "{dup}");
+        let oob = EdgeOrdering::try_new(vec![2, 0]).unwrap_err();
+        assert!(oob.to_string().contains("out of range"), "{oob}");
     }
 
     #[test]

@@ -20,6 +20,9 @@ pub mod ne;
 pub mod oblivious;
 pub mod quality;
 pub mod vertex2edge;
+pub mod view;
+
+pub use view::{CepView, PartitionAssignment};
 
 use crate::graph::Graph;
 use crate::PartitionId;

@@ -1,14 +1,20 @@
 //! Partitioning-quality metrics: replication factor (RF, Def. 1), edge
 //! balance (EB) and vertex balance (VB) as defined in §6.4.
+//!
+//! All metrics are generic over [`PartitionAssignment`], so they price a
+//! materialized [`EdgePartition`] and a zero-materialization
+//! [`super::CepView`] identically — the CEP sweeps never allocate a
+//! per-edge vector.
 
 use super::cep::Cep;
+use super::view::PartitionAssignment;
 use super::EdgePartition;
 use crate::graph::Graph;
 
 /// Per-partition vertex counts `|V(E_p)|`.
-pub fn vertex_counts(g: &Graph, part: &EdgePartition) -> Vec<u64> {
+pub fn vertex_counts<P: PartitionAssignment + ?Sized>(g: &Graph, part: &P) -> Vec<u64> {
     let n = g.num_vertices();
-    let k = part.k;
+    let k = part.k();
     // stamp[v] = last partition that counted v, offset by +1 epoch trick
     // per partition would need k passes; instead use a bitset-free
     // two-array approach: last-seen partition per vertex is wrong when a
@@ -20,7 +26,7 @@ pub fn vertex_counts(g: &Graph, part: &EdgePartition) -> Vec<u64> {
     let mut seen: std::collections::HashSet<(u32, u32)> =
         std::collections::HashSet::with_capacity(n * 2);
     for (eid, e) in g.edges().iter().enumerate() {
-        let p = part.assign[eid];
+        let p = part.partition_of(eid as u64);
         if seen.insert((e.u, p)) {
             counts[p as usize] += 1;
         }
@@ -32,7 +38,7 @@ pub fn vertex_counts(g: &Graph, part: &EdgePartition) -> Vec<u64> {
 }
 
 /// Replication factor `RF = (1/|V|) Σ_p |V(E_p)|` (Def. 1). Best = 1.0.
-pub fn replication_factor(g: &Graph, part: &EdgePartition) -> f64 {
+pub fn replication_factor<P: PartitionAssignment + ?Sized>(g: &Graph, part: &P) -> f64 {
     let counts = vertex_counts(g, part);
     counts.iter().sum::<u64>() as f64 / g.num_vertices() as f64
 }
@@ -76,12 +82,12 @@ pub fn balance(xs: &[u64]) -> f64 {
 }
 
 /// Edge balance `EB = B({|E_p|})` — the realized `1 + ε` of Def. 2.
-pub fn edge_balance(part: &EdgePartition) -> f64 {
+pub fn edge_balance<P: PartitionAssignment + ?Sized>(part: &P) -> f64 {
     balance(&part.sizes())
 }
 
 /// Vertex balance `VB = B({|V(E_p)|})`.
-pub fn vertex_balance(g: &Graph, part: &EdgePartition) -> f64 {
+pub fn vertex_balance<P: PartitionAssignment + ?Sized>(g: &Graph, part: &P) -> f64 {
     balance(&vertex_counts(g, part))
 }
 
@@ -97,7 +103,7 @@ pub struct Quality {
 }
 
 /// Compute RF / EB / VB in one call.
-pub fn quality(g: &Graph, part: &EdgePartition) -> Quality {
+pub fn quality<P: PartitionAssignment + ?Sized>(g: &Graph, part: &P) -> Quality {
     Quality {
         rf: replication_factor(g, part),
         eb: edge_balance(part),
@@ -142,6 +148,9 @@ mod tests {
             let fast = replication_factor_chunked(&og, &c);
             let slow = replication_factor(&og, &EdgePartition::from_cep(&c));
             assert!((fast - slow).abs() < 1e-12, "k={k}");
+            // the zero-materialization view prices identically
+            let view = replication_factor(&og, &crate::partition::CepView::new(c));
+            assert!((view - slow).abs() < 1e-12, "k={k} (view)");
         });
     }
 

@@ -1,0 +1,189 @@
+//! Partition **views** — a common read-only interface over edge
+//! partitionings, so that quality metrics, the engine and the scaling
+//! pipeline can consume either a materialized [`EdgePartition`]
+//! (`Vec<PartitionId>`, O(m) memory) or a zero-materialization [`CepView`]
+//! (two integers, every query O(1)).
+//!
+//! The paper's headline claim — rescaling a CEP layout is pure metadata —
+//! only survives end-to-end if *consumers* of a partitioning never force a
+//! per-edge vector. [`PartitionAssignment`] is that contract: the
+//! coordinator and engine are generic over it, and the CEP scaling path
+//! flows from [`crate::partition::cep::Cep`] through [`CepView`] into the
+//! engine without a single O(m) allocation.
+
+use super::cep::Cep;
+use super::EdgePartition;
+use crate::{EdgeId, PartitionId};
+use std::ops::Range;
+
+/// Read-only interface over an edge partitioning: `k` partitions covering
+/// edge ids `0..num_edges()`.
+pub trait PartitionAssignment {
+    /// Number of partitions `k`.
+    fn k(&self) -> usize;
+
+    /// Total number of edges `m`.
+    fn num_edges(&self) -> u64;
+
+    /// Partition owning edge id `i` (`i < num_edges()`).
+    fn partition_of(&self, i: EdgeId) -> PartitionId;
+
+    /// Edges per partition. The default scans all edges; implementations
+    /// with cheaper structure (chunk widths, counting vectors) override.
+    fn sizes(&self) -> Vec<u64> {
+        let mut s = vec![0u64; self.k()];
+        for i in 0..self.num_edges() {
+            s[self.partition_of(i) as usize] += 1;
+        }
+        s
+    }
+
+    /// For chunk layouts: the contiguous edge-id range of every partition,
+    /// in O(k). `None` when the assignment is scattered.
+    fn as_chunks(&self) -> Option<Vec<Range<EdgeId>>> {
+        None
+    }
+
+    /// Materialize into an explicit per-edge vector — O(m); interop
+    /// escape hatch for Vec-based consumers, never used on the CEP
+    /// scaling path.
+    fn materialize(&self) -> EdgePartition {
+        let m = self.num_edges();
+        let mut assign = Vec::with_capacity(m as usize);
+        for i in 0..m {
+            assign.push(self.partition_of(i));
+        }
+        EdgePartition::new(self.k(), assign)
+    }
+}
+
+impl PartitionAssignment for EdgePartition {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn num_edges(&self) -> u64 {
+        self.assign.len() as u64
+    }
+
+    #[inline]
+    fn partition_of(&self, i: EdgeId) -> PartitionId {
+        self.assign[i as usize]
+    }
+
+    fn sizes(&self) -> Vec<u64> {
+        EdgePartition::sizes(self)
+    }
+
+    fn materialize(&self) -> EdgePartition {
+        self.clone()
+    }
+}
+
+/// O(1) view of a CEP layout: pure chunk metadata, `Copy`, no per-edge
+/// state. Rescaling replaces the view — nothing is recomputed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CepView {
+    cep: Cep,
+}
+
+impl CepView {
+    /// View the given chunk metadata as a partition assignment.
+    pub fn new(cep: Cep) -> CepView {
+        CepView { cep }
+    }
+
+    /// The underlying chunk metadata.
+    pub fn cep(&self) -> &Cep {
+        &self.cep
+    }
+
+    /// Edge-id range of partition `p` — O(1).
+    pub fn range(&self, p: PartitionId) -> Range<EdgeId> {
+        self.cep.range(p)
+    }
+}
+
+impl PartitionAssignment for CepView {
+    fn k(&self) -> usize {
+        self.cep.k()
+    }
+
+    fn num_edges(&self) -> u64 {
+        self.cep.num_edges()
+    }
+
+    #[inline]
+    fn partition_of(&self, i: EdgeId) -> PartitionId {
+        self.cep.partition_of(i)
+    }
+
+    fn sizes(&self) -> Vec<u64> {
+        (0..self.k() as PartitionId).map(|p| self.cep.width(p)).collect()
+    }
+
+    fn as_chunks(&self) -> Option<Vec<Range<EdgeId>>> {
+        Some((0..self.k() as PartitionId).map(|p| self.cep.range(p)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn cep_view_agrees_with_materialized_partition() {
+        check(0x11E3, 32, |rng| {
+            let m = 1 + rng.below_usize(3000);
+            let k = 1 + rng.below_usize(40);
+            let view = CepView::new(Cep::new(m, k));
+            let mat = view.materialize();
+            assert_eq!(mat.k, k);
+            assert_eq!(mat.assign.len(), m);
+            for i in 0..m as u64 {
+                assert_eq!(view.partition_of(i), mat.assign[i as usize]);
+            }
+            assert_eq!(view.sizes(), EdgePartition::sizes(&mat));
+        });
+    }
+
+    #[test]
+    fn chunks_cover_all_edges_in_order() {
+        let view = CepView::new(Cep::new(137, 10));
+        let chunks = view.as_chunks().unwrap();
+        assert_eq!(chunks.len(), 10);
+        let mut next = 0u64;
+        for r in &chunks {
+            assert_eq!(r.start, next);
+            next = r.end;
+        }
+        assert_eq!(next, 137);
+    }
+
+    #[test]
+    fn edge_partition_has_no_chunk_ranges() {
+        let p = EdgePartition::new(2, vec![0, 1, 0, 1]);
+        assert!(p.as_chunks().is_none());
+        assert_eq!(p.num_edges(), 4);
+        assert_eq!(PartitionAssignment::sizes(&p), vec![2, 2]);
+    }
+
+    #[test]
+    fn default_sizes_matches_specialized_sizes() {
+        struct Slow(Cep);
+        impl PartitionAssignment for Slow {
+            fn k(&self) -> usize {
+                self.0.k()
+            }
+            fn num_edges(&self) -> u64 {
+                self.0.num_edges()
+            }
+            fn partition_of(&self, i: EdgeId) -> PartitionId {
+                self.0.partition_of(i)
+            }
+        }
+        let c = Cep::new(997, 13);
+        assert_eq!(Slow(c).sizes(), CepView::new(c).sizes());
+    }
+}

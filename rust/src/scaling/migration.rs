@@ -1,50 +1,151 @@
-//! Migration planning: diff two assignments into per-(source, dest) edge
-//! transfer lists, verify conservation, and produce the byte volumes the
-//! network emulator prices.
+//! Executable migration plans: the diff between two partitionings of the
+//! same ordered edge list, expressed as **contiguous edge-id range moves**
+//! `(src, dst, [start, end))` rather than per-edge lists.
+//!
+//! Ranges are the native currency of chunk-based scaling: rescaling a CEP
+//! layout `k → k±x` shifts O(k + k') chunk boundaries, so the whole plan
+//! is O(k) range moves regardless of |E| ([`MigrationPlan::between_ceps`]).
+//! Scattered methods (hash/BVC) still diff per edge, with maximal runs
+//! coalesced into ranges ([`MigrationPlan::diff`]). The coordinator prices
+//! plans on the emulated network and the engine executes them as
+//! incremental state transfer ([`crate::engine::Engine::apply_migration`]).
 
-use crate::partition::EdgePartition;
-use crate::PartitionId;
-use std::collections::HashMap;
+use crate::partition::cep::Cep;
+use crate::partition::PartitionAssignment;
+use crate::{EdgeId, PartitionId};
+use std::ops::Range;
 
-/// A planned transfer of a contiguous batch of edges between two workers.
+/// One planned transfer: the contiguous block of edge ids
+/// `edges.start..edges.end` moves from partition `src` to partition `dst`.
 #[derive(Clone, Debug, PartialEq, Eq)]
-pub struct Transfer {
-    /// sending partition
-    pub from: PartitionId,
-    /// receiving partition
-    pub to: PartitionId,
-    /// edge ids to move
-    pub edges: Vec<u64>,
+pub struct RangeMove {
+    /// sending partition (owner under the old layout)
+    pub src: PartitionId,
+    /// receiving partition (owner under the new layout)
+    pub dst: PartitionId,
+    /// half-open edge-id range being moved
+    pub edges: Range<EdgeId>,
 }
 
-/// A full migration plan between two partitionings of the same edge set.
+impl RangeMove {
+    /// Number of edges in the move.
+    pub fn len(&self) -> u64 {
+        self.edges.end - self.edges.start
+    }
+
+    /// True when the range is empty (plans never contain such moves).
+    pub fn is_empty(&self) -> bool {
+        self.edges.start >= self.edges.end
+    }
+}
+
+/// A full migration plan between two partitionings of the same edge set:
+/// a list of non-overlapping [`RangeMove`]s covering exactly the edges
+/// whose owner changed.
 #[derive(Clone, Debug, Default)]
 pub struct MigrationPlan {
-    /// transfers grouped by (from, to)
-    pub transfers: Vec<Transfer>,
+    /// planned moves, ascending by `edges.start`
+    pub moves: Vec<RangeMove>,
 }
 
 impl MigrationPlan {
-    /// Diff `old` → `new` (must cover the same edge ids).
-    pub fn diff(old: &EdgePartition, new: &EdgePartition) -> MigrationPlan {
-        assert_eq!(old.assign.len(), new.assign.len(), "edge sets differ");
-        let mut buckets: HashMap<(PartitionId, PartitionId), Vec<u64>> = HashMap::new();
-        for (eid, (&o, &n)) in old.assign.iter().zip(new.assign.iter()).enumerate() {
-            if o != n {
-                buckets.entry((o, n)).or_default().push(eid as u64);
+    /// Plan a CEP rescale `old → new` from chunk metadata alone — an
+    /// O(k + k') sweep over the merged chunk-boundary set (Theorem 2's
+    /// structure): between consecutive boundaries both owners are
+    /// constant, so each differing segment is one range move. Never
+    /// touches per-edge state.
+    pub fn between_ceps(old: &Cep, new: &Cep) -> MigrationPlan {
+        assert_eq!(old.num_edges(), new.num_edges(), "edge sets differ");
+        let m = old.num_edges();
+        let mut plan = MigrationPlan::default();
+        if m == 0 {
+            return plan;
+        }
+        let mut cuts: Vec<u64> = Vec::with_capacity(old.k() + new.k() + 2);
+        for p in 0..=old.k() as u64 {
+            cuts.push(crate::partition::cep::chunk_start(m, old.k() as u64, p));
+        }
+        for p in 0..=new.k() as u64 {
+            cuts.push(crate::partition::cep::chunk_start(m, new.k() as u64, p));
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        for w in cuts.windows(2) {
+            let (lo, hi) = (w[0], w[1].min(m));
+            if lo >= m {
+                break;
+            }
+            let (src, dst) = (old.partition_of(lo), new.partition_of(lo));
+            if src != dst {
+                plan.push_range(src, dst, lo..hi);
             }
         }
-        let mut transfers: Vec<Transfer> = buckets
-            .into_iter()
-            .map(|((from, to), edges)| Transfer { from, to, edges })
-            .collect();
-        transfers.sort_by_key(|t| (t.from, t.to));
-        MigrationPlan { transfers }
+        plan
+    }
+
+    /// Diff two arbitrary assignments — O(m), coalescing maximal runs of
+    /// consecutive edge ids with the same `(src, dst)` pair into single
+    /// range moves.
+    pub fn diff<A, B>(old: &A, new: &B) -> MigrationPlan
+    where
+        A: PartitionAssignment + ?Sized,
+        B: PartitionAssignment + ?Sized,
+    {
+        assert_eq!(old.num_edges(), new.num_edges(), "edge sets differ");
+        let mut plan = MigrationPlan::default();
+        for i in 0..old.num_edges() {
+            let (src, dst) = (old.partition_of(i), new.partition_of(i));
+            if src != dst {
+                plan.push_edge(src, dst, i);
+            }
+        }
+        plan
+    }
+
+    /// Append edge `i` to the plan, extending the last move when it is the
+    /// contiguous continuation of the same `(src, dst)` pair. Edges must be
+    /// pushed in ascending id order.
+    pub fn push_edge(&mut self, src: PartitionId, dst: PartitionId, i: EdgeId) {
+        if let Some(last) = self.moves.last_mut() {
+            if last.src == src && last.dst == dst && last.edges.end == i {
+                last.edges.end = i + 1;
+                return;
+            }
+        }
+        self.moves.push(RangeMove { src, dst, edges: i..i + 1 });
+    }
+
+    /// Append a whole range move (must not be empty and must start at or
+    /// after the end of the previous move).
+    pub fn push_range(&mut self, src: PartitionId, dst: PartitionId, edges: Range<EdgeId>) {
+        debug_assert!(edges.start < edges.end, "empty range move");
+        debug_assert!(
+            self.moves.last().map(|l| l.edges.end <= edges.start).unwrap_or(true),
+            "range moves must be pushed in ascending order"
+        );
+        if let Some(last) = self.moves.last_mut() {
+            if last.src == src && last.dst == dst && last.edges.end == edges.start {
+                last.edges.end = edges.end;
+                return;
+            }
+        }
+        self.moves.push(RangeMove { src, dst, edges });
     }
 
     /// Total migrated edges.
     pub fn migrated_edges(&self) -> u64 {
-        self.transfers.iter().map(|t| t.edges.len() as u64).sum()
+        self.moves.iter().map(|t| t.len()).sum()
+    }
+
+    /// Number of range moves (the plan's *size* — O(k) for CEP rescales,
+    /// up to O(m) for scattered methods).
+    pub fn num_moves(&self) -> usize {
+        self.moves.len()
+    }
+
+    /// True when nothing moves.
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
     }
 
     /// Bytes on the wire for a given per-edge payload: 8 B of structure
@@ -57,34 +158,53 @@ impl MigrationPlan {
     /// Per-sender byte volumes (the network emulator serializes per link).
     pub fn per_sender_bytes(&self, value_bytes: u64, k: usize) -> Vec<u64> {
         let mut out = vec![0u64; k];
-        for t in &self.transfers {
-            out[t.from as usize] += t.edges.len() as u64 * (8 + value_bytes);
+        for t in &self.moves {
+            out[t.src as usize] += t.len() * (8 + value_bytes);
         }
         out
     }
 
-    /// Check conservation: every edge appears at most once as moved, and
-    /// destinations match `new`.
-    pub fn validate(&self, old: &EdgePartition, new: &EdgePartition) -> bool {
-        let mut seen = std::collections::HashSet::new();
-        for t in &self.transfers {
-            for &e in &t.edges {
-                if !seen.insert(e) {
-                    return false;
-                }
-                if old.assign[e as usize] != t.from || new.assign[e as usize] != t.to {
+    /// Partitions that send or receive edges under this plan, deduplicated
+    /// and ascending.
+    pub fn touched_partitions(&self) -> Vec<PartitionId> {
+        let mut ps: Vec<PartitionId> =
+            self.moves.iter().flat_map(|t| [t.src, t.dst]).collect();
+        ps.sort_unstable();
+        ps.dedup();
+        ps
+    }
+
+    /// Check exactness against the two assignments: moves are non-empty,
+    /// non-overlapping, in-bounds, `src ≠ dst`, every planned edge really
+    /// changes owner `src → dst`, and the union of the ranges is exactly
+    /// the set of edges whose owner differs.
+    pub fn validate<A, B>(&self, old: &A, new: &B) -> bool
+    where
+        A: PartitionAssignment + ?Sized,
+        B: PartitionAssignment + ?Sized,
+    {
+        let m = old.num_edges();
+        if new.num_edges() != m {
+            return false;
+        }
+        let mut sorted: Vec<&RangeMove> = self.moves.iter().collect();
+        sorted.sort_by_key(|t| t.edges.start);
+        let mut prev_end = 0u64;
+        let mut planned = 0u64;
+        for t in sorted {
+            if t.is_empty() || t.src == t.dst || t.edges.start < prev_end || t.edges.end > m {
+                return false;
+            }
+            prev_end = t.edges.end;
+            planned += t.len();
+            for i in t.edges.clone() {
+                if old.partition_of(i) != t.src || new.partition_of(i) != t.dst {
                     return false;
                 }
             }
         }
-        // edges not in plan must be unchanged
-        let planned = seen.len();
-        let changed = old
-            .assign
-            .iter()
-            .zip(new.assign.iter())
-            .filter(|(o, n)| o != n)
-            .count();
+        let changed =
+            (0..m).filter(|&i| old.partition_of(i) != new.partition_of(i)).count() as u64;
         planned == changed
     }
 }
@@ -92,7 +212,7 @@ impl MigrationPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::partition::cep::Cep;
+    use crate::partition::{CepView, EdgePartition};
     use crate::util::proptest::check;
 
     #[test]
@@ -100,6 +220,7 @@ mod tests {
         let p = EdgePartition::new(3, vec![0, 1, 2, 0, 1]);
         let plan = MigrationPlan::diff(&p, &p);
         assert_eq!(plan.migrated_edges(), 0);
+        assert!(plan.is_empty());
         assert!(plan.validate(&p, &p));
     }
 
@@ -109,9 +230,22 @@ mod tests {
         let new = EdgePartition::new(2, vec![0, 1, 1, 0]);
         let plan = MigrationPlan::diff(&old, &new);
         assert_eq!(plan.migrated_edges(), 2);
+        assert_eq!(plan.num_moves(), 2);
         assert!(plan.validate(&old, &new));
         assert_eq!(plan.bytes(0), 16);
         assert_eq!(plan.bytes(8), 32);
+    }
+
+    #[test]
+    fn diff_coalesces_runs_into_ranges() {
+        let old = EdgePartition::new(2, vec![0, 0, 1, 1]);
+        let new = EdgePartition::new(2, vec![1, 1, 0, 0]);
+        let plan = MigrationPlan::diff(&old, &new);
+        assert_eq!(plan.migrated_edges(), 4);
+        assert_eq!(plan.num_moves(), 2, "consecutive same-pair edges must coalesce");
+        assert_eq!(plan.moves[0], RangeMove { src: 0, dst: 1, edges: 0..2 });
+        assert_eq!(plan.moves[1], RangeMove { src: 1, dst: 0, edges: 2..4 });
+        assert_eq!(plan.touched_partitions(), vec![0, 1]);
     }
 
     #[test]
@@ -126,6 +260,60 @@ mod tests {
             assert!(plan.validate(&old, &new));
             let per = plan.per_sender_bytes(4, k0.max(k1));
             assert_eq!(per.iter().sum::<u64>(), plan.bytes(4));
+        });
+    }
+
+    /// Satellite property: the plan is **exact** — the union of its ranges
+    /// equals the set of edges whose owner differs between the old and new
+    /// `Cep` layouts (differential against the naive O(m) comparison), and
+    /// its size is O(k + k'), independent of m.
+    #[test]
+    fn between_ceps_plan_is_exact_and_range_sized() {
+        check(0xE4AC7, 48, |rng| {
+            let m = 100 + rng.below_usize(5000);
+            let k0 = 1 + rng.below_usize(40);
+            let k1 = 1 + rng.below_usize(40);
+            let a = Cep::new(m, k0);
+            let b = Cep::new(m, k1);
+            let plan = MigrationPlan::between_ceps(&a, &b);
+            assert!(
+                plan.num_moves() <= k0 + k1 + 1,
+                "m={m} {k0}->{k1}: plan has {} moves",
+                plan.num_moves()
+            );
+            let mut in_plan = vec![false; m];
+            for t in &plan.moves {
+                assert_ne!(t.src, t.dst, "m={m} {k0}->{k1}");
+                for i in t.edges.clone() {
+                    assert!(!in_plan[i as usize], "overlapping move at edge {i}");
+                    in_plan[i as usize] = true;
+                    assert_eq!(a.partition_of(i), t.src, "m={m} {k0}->{k1} i={i}");
+                    assert_eq!(b.partition_of(i), t.dst, "m={m} {k0}->{k1} i={i}");
+                }
+            }
+            for (i, planned) in in_plan.iter().enumerate() {
+                let moved = a.partition_of(i as u64) != b.partition_of(i as u64);
+                assert_eq!(*planned, moved, "m={m} {k0}->{k1} i={i}");
+            }
+            let (va, vb) = (CepView::new(a), CepView::new(b));
+            assert!(plan.validate(&va, &vb));
+        });
+    }
+
+    #[test]
+    fn between_ceps_matches_per_edge_diff() {
+        check(0xD1FF, 32, |rng| {
+            let m = 50 + rng.below_usize(3000);
+            let k0 = 1 + rng.below_usize(30);
+            let k1 = 1 + rng.below_usize(30);
+            let a = Cep::new(m, k0);
+            let b = Cep::new(m, k1);
+            let fast = MigrationPlan::between_ceps(&a, &b);
+            let slow = MigrationPlan::diff(
+                &EdgePartition::from_cep(&a),
+                &EdgePartition::from_cep(&b),
+            );
+            assert_eq!(fast.moves, slow.moves, "m={m} {k0}->{k1}");
         });
     }
 }

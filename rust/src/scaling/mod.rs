@@ -1,6 +1,12 @@
-//! Dynamic scaling: the `sc(E_k, ±x)` operation (Def. 3), migration
-//! planning and cost accounting (Theorem 2), the network-bandwidth
-//! emulator behind Fig 14, and the ScaleOut/ScaleIn scenarios of §6.4.2.
+//! Dynamic scaling: the `sc(E_k, ±x)` operation (Def. 3), executable
+//! range-based migration plans and cost accounting (Theorem 2), the
+//! network-bandwidth emulator behind Fig 14, and the ScaleOut/ScaleIn
+//! scenarios of §6.4.2.
+//!
+//! The pipeline: a [`scaler::DynamicScaler`] turns a `k → k±x` request
+//! into a [`migration::MigrationPlan`] of contiguous edge-id range moves
+//! (O(k) of them on the CEP path), [`network::Network`] prices the plan,
+//! and [`crate::engine::Engine::apply_migration`] executes it.
 
 pub mod migration;
 pub mod network;

@@ -9,7 +9,7 @@
 //! shuffle — the effect the paper observes in Fig 14.
 
 use super::migration::MigrationPlan;
-use crate::partition::EdgePartition;
+use crate::partition::PartitionAssignment;
 
 /// Emulated cluster network.
 #[derive(Clone, Copy, Debug)]
@@ -38,10 +38,10 @@ impl Network {
     pub fn migration_time(&self, plan: &MigrationPlan, k: usize, value_bytes: u64) -> f64 {
         let mut sent = vec![0u64; k];
         let mut recv = vec![0u64; k];
-        for t in &plan.transfers {
-            let b = t.edges.len() as u64 * (8 + value_bytes);
-            sent[t.from as usize] += b;
-            recv[t.to as usize] += b;
+        for t in &plan.moves {
+            let b = t.len() * (8 + value_bytes);
+            sent[t.src as usize] += b;
+            recv[t.dst as usize] += b;
         }
         self.shuffle_time(&sent, &recv)
     }
@@ -70,21 +70,21 @@ impl Network {
     }
 }
 
-/// Convenience: price moving between two explicit assignments.
-pub fn time_to_migrate(
-    net: &Network,
-    old: &EdgePartition,
-    new: &EdgePartition,
-    value_bytes: u64,
-) -> f64 {
+/// Convenience: price moving between two assignments (any views).
+pub fn time_to_migrate<A, B>(net: &Network, old: &A, new: &B, value_bytes: u64) -> f64
+where
+    A: PartitionAssignment + ?Sized,
+    B: PartitionAssignment + ?Sized,
+{
     let plan = MigrationPlan::diff(old, new);
-    net.migration_time(&plan, old.k.max(new.k), value_bytes)
+    net.migration_time(&plan, old.k().max(new.k()), value_bytes)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::partition::cep::Cep;
+    use crate::partition::EdgePartition;
 
     #[test]
     fn faster_links_migrate_faster() {

@@ -1,26 +1,33 @@
 //! `sc(E_k, ±x)` (Def. 3) for the three methods compared in §6.4.3:
 //! CEP (ours), BVC (consistent hashing) and 1D (plain rehash).
+//!
+//! Every scaler returns an executable [`MigrationPlan`] from
+//! [`DynamicScaler::scale_to`] — the coordinator prices it on the network
+//! emulator and the engine applies it as range-based state transfer. For
+//! CEP the plan is derived in O(k + k') from chunk metadata alone.
 
-use crate::partition::bvc::BvcState;
+use super::migration::MigrationPlan;
+use crate::partition::bvc::{BvcScaleStats, BvcState};
 use crate::partition::cep::Cep;
-use crate::partition::{hash1d, EdgePartition};
+use crate::partition::{hash1d, CepView, EdgePartition};
 use crate::PartitionId;
 
 /// A dynamic-scaling engine: owns whatever state lets it recompute
-/// assignments when `k` changes, and reports the edges that moved.
+/// assignments when `k` changes, and reports the edges that moved as an
+/// executable plan.
 pub trait DynamicScaler {
     /// Human name for tables.
     fn name(&self) -> &'static str;
     /// Current partition count.
     fn k(&self) -> usize;
-    /// Current assignment (edge id → partition).
+    /// Current assignment, materialized (edge id → partition).
     fn current(&self) -> EdgePartition;
-    /// Rescale to `new_k`; returns the number of migrated edges.
-    fn scale_to(&mut self, new_k: usize) -> u64;
+    /// Rescale to `new_k`; returns the exact migration plan old → new.
+    fn scale_to(&mut self, new_k: usize) -> MigrationPlan;
 }
 
-/// CEP scaler — O(1) metadata recompute; migrated edges are the chunk
-/// boundary shifts of Theorem 2.
+/// CEP scaler — O(1) metadata recompute; the plan is the chunk boundary
+/// shifts of Theorem 2, O(k + k') range moves with no per-edge work.
 pub struct CepScaler {
     cep: Cep,
 }
@@ -34,6 +41,11 @@ impl CepScaler {
     /// Access the underlying chunk metadata.
     pub fn cep(&self) -> &Cep {
         &self.cep
+    }
+
+    /// Zero-materialization view of the current layout.
+    pub fn view(&self) -> CepView {
+        CepView::new(self.cep)
     }
 }
 
@@ -50,59 +62,41 @@ impl DynamicScaler for CepScaler {
         EdgePartition::from_cep(&self.cep)
     }
 
-    fn scale_to(&mut self, new_k: usize) -> u64 {
+    fn scale_to(&mut self, new_k: usize) -> MigrationPlan {
         let old = self.cep;
         self.cep = self.cep.rescaled(new_k);
-        migration_between_ceps(&old, &self.cep)
+        MigrationPlan::between_ceps(&old, &self.cep)
     }
 }
 
 /// Count edges whose chunk owner differs between two CEP layouts — an
-/// O(k+k') sweep over chunk boundaries (not O(m)): between consecutive
-/// boundary points the owner pair is constant.
+/// O(k+k') sweep over chunk boundaries (not O(m)). Equivalent to
+/// `MigrationPlan::between_ceps(a, b).migrated_edges()`; retained as the
+/// scalar convenience the theory tests and quickstart use.
 pub fn migration_between_ceps(a: &Cep, b: &Cep) -> u64 {
-    assert_eq!(a.num_edges(), b.num_edges());
-    let m = a.num_edges();
-    if m == 0 {
-        return 0;
-    }
-    // merge the two boundary sets; within each segment both owners fixed
-    let mut cuts: Vec<u64> = Vec::with_capacity(a.k() + b.k() + 1);
-    for p in 0..=a.k() as u64 {
-        cuts.push(crate::partition::cep::chunk_start(m, a.k() as u64, p));
-    }
-    for p in 0..=b.k() as u64 {
-        cuts.push(crate::partition::cep::chunk_start(m, b.k() as u64, p));
-    }
-    cuts.sort_unstable();
-    cuts.dedup();
-    let mut moved = 0u64;
-    for w in cuts.windows(2) {
-        let (lo, hi) = (w[0], w[1]);
-        if lo >= m {
-            break;
-        }
-        if a.partition_of(lo) != b.partition_of(lo) {
-            moved += hi.min(m) - lo;
-        }
-    }
-    moved
+    MigrationPlan::between_ceps(a, b).migrated_edges()
 }
 
 /// BVC scaler — wraps [`BvcState`].
 pub struct BvcScaler {
     state: BvcState,
+    last_stats: BvcScaleStats,
 }
 
 impl BvcScaler {
     /// Build the ring for `m` edges in `k` partitions.
     pub fn new(m: usize, k: usize, seed: u64) -> BvcScaler {
-        BvcScaler { state: BvcState::build(m, k, seed) }
+        BvcScaler { state: BvcState::build(m, k, seed), last_stats: BvcScaleStats::default() }
     }
 
-    /// Access refinement statistics of the *last* scale (for Fig 14).
+    /// Access the ring state (for Fig 14's refinement accounting).
     pub fn state(&self) -> &BvcState {
         &self.state
+    }
+
+    /// Ring/refinement statistics of the *last* [`DynamicScaler::scale_to`].
+    pub fn last_stats(&self) -> BvcScaleStats {
+        self.last_stats
     }
 }
 
@@ -119,12 +113,20 @@ impl DynamicScaler for BvcScaler {
         self.state.to_partition()
     }
 
-    fn scale_to(&mut self, new_k: usize) -> u64 {
-        self.state.scale_to(new_k).total_migrated()
+    fn scale_to(&mut self, new_k: usize) -> MigrationPlan {
+        // The returned plan is the *net* before→after diff — the state
+        // transfer a coordinator must execute. BVC's refinement phase also
+        // makes transient moves that cancel ring moves; that gross traffic
+        // (what the paper's Fig 13 counts) is preserved in `last_stats()`.
+        let before = self.state.to_partition();
+        self.last_stats = self.state.scale_to(new_k);
+        MigrationPlan::diff(&before, &self.state.to_partition())
     }
 }
 
-/// 1D scaler — rehash everything; migrates ~`(1 − 1/k')·m` edges.
+/// 1D scaler — rehash everything; migrates ~`(1 − 1/k')·m` edges, and its
+/// plans fragment into O(m) single-edge moves (the anti-pattern CEP's
+/// contiguous ranges avoid).
 pub struct Hash1dScaler {
     m: usize,
     k: usize,
@@ -152,11 +154,17 @@ impl DynamicScaler for Hash1dScaler {
         EdgePartition::new(self.k, assign)
     }
 
-    fn scale_to(&mut self, new_k: usize) -> u64 {
+    fn scale_to(&mut self, new_k: usize) -> MigrationPlan {
         let old_k = self.k;
         self.k = new_k;
-        (0..self.m as u64).filter(|&e| assign_mod(e, old_k) != assign_mod(e, new_k)).count()
-            as u64
+        let mut plan = MigrationPlan::default();
+        for e in 0..self.m as u64 {
+            let (src, dst) = (assign_mod(e, old_k), assign_mod(e, new_k));
+            if src != dst {
+                plan.push_edge(src, dst, e);
+            }
+        }
+        plan
     }
 }
 
@@ -168,6 +176,7 @@ fn assign_mod(eid: u64, k: usize) -> PartitionId {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::partition::PartitionAssignment;
     use crate::util::proptest::check;
 
     /// Differential test: the boundary-sweep migration count must equal a
@@ -188,16 +197,36 @@ mod tests {
         });
     }
 
+    /// Acceptance differential: the plan returned by `scale_to` carries
+    /// exactly the old boundary-sweep count, for every scaler.
+    #[test]
+    fn scale_to_plan_count_matches_boundary_sweep() {
+        check(0x5CA1F, 32, |rng| {
+            let m = 500 + rng.below_usize(20_000);
+            let k0 = 1 + rng.below_usize(30);
+            let k1 = 1 + rng.below_usize(30);
+            let mut s = CepScaler::new(m, k0);
+            let plan = s.scale_to(k1);
+            assert_eq!(
+                plan.migrated_edges(),
+                migration_between_ceps(&Cep::new(m, k0), &Cep::new(m, k1)),
+                "m={m} {k0}->{k1}"
+            );
+        });
+    }
+
     #[test]
     fn cep_scaler_noop_when_k_unchanged() {
         let mut s = CepScaler::new(10_000, 8);
-        assert_eq!(s.scale_to(8), 0);
+        let plan = s.scale_to(8);
+        assert_eq!(plan.migrated_edges(), 0);
+        assert!(plan.is_empty());
     }
 
     #[test]
     fn one_d_moves_most_edges() {
         let mut s = Hash1dScaler::new(100_000, 10);
-        let moved = s.scale_to(11);
+        let moved = s.scale_to(11).migrated_edges();
         // expectation: (1 − 1/11)·m ≈ 0.909·m
         let frac = moved as f64 / 100_000.0;
         assert!(frac > 0.85 && frac < 0.95, "frac={frac}");
@@ -208,8 +237,9 @@ mod tests {
         let m = 200_000;
         let mut cep = CepScaler::new(m, 16);
         let mut h1 = Hash1dScaler::new(m, 16);
-        let cep_moved = cep.scale_to(17);
-        let h1_moved = h1.scale_to(17);
+        let cep_plan = cep.scale_to(17);
+        let h1_plan = h1.scale_to(17);
+        let (cep_moved, h1_moved) = (cep_plan.migrated_edges(), h1_plan.migrated_edges());
         assert!(
             cep_moved < h1_moved,
             "cep {cep_moved} must move fewer edges than 1d {h1_moved}"
@@ -217,6 +247,25 @@ mod tests {
         // Corollary 1: ≈ m/2 for x=1
         let frac = cep_moved as f64 / m as f64;
         assert!(frac > 0.40 && frac < 0.60, "corollary-1 frac={frac}");
+        // and CEP's *plan* stays O(k) while 1d fragments
+        assert!(cep_plan.num_moves() <= 16 + 17 + 1, "{}", cep_plan.num_moves());
+        assert!(h1_plan.num_moves() > cep_plan.num_moves());
+    }
+
+    #[test]
+    fn every_scaler_returns_an_exact_plan() {
+        let m = 30_000;
+        let mut scalers: Vec<Box<dyn DynamicScaler>> = vec![
+            Box::new(CepScaler::new(m, 6)),
+            Box::new(BvcScaler::new(m, 6, 9)),
+            Box::new(Hash1dScaler::new(m, 6)),
+        ];
+        for s in scalers.iter_mut() {
+            let before = s.current();
+            let plan = s.scale_to(8);
+            let after = s.current();
+            assert!(plan.validate(&before, &after), "{}", s.name());
+        }
     }
 
     #[test]
@@ -226,5 +275,6 @@ mod tests {
         let p = s.current();
         assert_eq!(p.k, 6);
         assert_eq!(p.assign.len(), 1000);
+        assert_eq!(s.view().k(), 6);
     }
 }

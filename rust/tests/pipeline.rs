@@ -6,8 +6,9 @@ use egs::coordinator::{run_scenario, ControllerConfig};
 use egs::graph::datasets;
 use egs::engine::{apps, Engine};
 use egs::ordering::{geo, random::random_edge_order};
-use egs::partition::{cep::Cep, quality, EdgePartition};
+use egs::partition::{cep::Cep, quality, CepView, EdgePartition, PartitionAssignment};
 use egs::runtime::native::NativeBackend;
+use egs::scaling::migration::MigrationPlan;
 use egs::scaling::scenario::Scenario;
 use egs::scaling::theory;
 
@@ -90,6 +91,69 @@ fn controller_preserves_pagerank_across_rescales() {
     // and scaled run produced sensible accounting
     assert!(scaled.migrated_edges > 0);
     assert!(scaled.com_bytes > 0);
+}
+
+/// Acceptance: the plan-based rescale pipeline end-to-end on the CEP
+/// path. The engine is built from a zero-materialization `CepView`, every
+/// `k → k±x` rescale reaches it as an O(k) range-move plan (never a
+/// per-edge `Vec<PartitionId>`), and after each plan application the
+/// engine computes exactly what a from-scratch engine on the new layout
+/// computes.
+#[test]
+fn plan_based_rescale_reaches_engine_without_materialization() {
+    let g = datasets::by_name("road-ca-s", 42).unwrap();
+    let ordered = geo::order(&g, &geo::GeoConfig::default()).apply(&g);
+    let m = ordered.num_edges();
+    let n = ordered.num_vertices();
+    let mut view = CepView::new(Cep::new(m, 4));
+    let mut engine =
+        Engine::new(&ordered, &view, |_| Box::new(NativeBackend::new())).unwrap();
+
+    let state: Vec<f32> = (0..n).map(|v| 1.0 / (1.0 + v as f32)).collect();
+    let aux: Vec<f32> = (0..n as u32)
+        .map(|v| {
+            let d = ordered.degree(v);
+            if d == 0 {
+                0.0
+            } else {
+                1.0 / d as f32
+            }
+        })
+        .collect();
+    let active = vec![true; n];
+
+    for new_k in [5usize, 7, 6, 3] {
+        let old_k = view.k();
+        let next = CepView::new(view.cep().rescaled(new_k));
+        let plan = MigrationPlan::between_ceps(view.cep(), next.cep());
+        // the plan is O(k) range moves, independent of |E|
+        assert!(
+            plan.num_moves() <= old_k + new_k + 1,
+            "{old_k}→{new_k}: {} moves for {m} edges",
+            plan.num_moves()
+        );
+        // and it carries exactly the boundary-sweep migration volume
+        assert_eq!(
+            plan.migrated_edges(),
+            egs::scaling::scaler::migration_between_ceps(view.cep(), next.cep())
+        );
+        engine
+            .apply_migration(&ordered, &plan, &next, |_| Box::new(NativeBackend::new()))
+            .unwrap();
+        view = next;
+        assert_eq!(engine.k(), new_k);
+
+        let mut fresh =
+            Engine::new(&ordered, &view, |_| Box::new(NativeBackend::new())).unwrap();
+        let (a, _) = engine
+            .superstep(egs::runtime::StepKind::PageRank, egs::engine::Combine::Sum, &state, &aux, &active)
+            .unwrap();
+        let (b, _) = fresh
+            .superstep(egs::runtime::StepKind::PageRank, egs::engine::Combine::Sum, &state, &aux, &active)
+            .unwrap();
+        assert_eq!(a, b, "incremental engine diverged at k={new_k}");
+        assert!((engine.layout().rf() - fresh.layout().rf()).abs() < 1e-12);
+    }
 }
 
 #[test]

@@ -1,0 +1,205 @@
+//! Offline **stub** of the PJRT/XLA binding surface consumed by
+//! `egs::runtime::executor`.
+//!
+//! The build image carries no XLA runtime, so this crate provides the same
+//! types and signatures as the real bindings but fails at *compile-of-HLO*
+//! time with a descriptive error. Everything before that point behaves
+//! honestly: clients construct, HLO text files are read from disk (so a
+//! missing artifact surfaces as a path error), and literals round-trip
+//! typed buffers. Swapping in real PJRT bindings requires no changes to
+//! the executor.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (message only).
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Sized + Clone {
+    /// Wrap a typed buffer into a literal.
+    fn make_literal(v: &[Self]) -> Literal;
+    /// Extract a typed buffer from a literal.
+    fn from_literal(l: &Literal) -> Result<Vec<Self>, Error>;
+}
+
+enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host-side typed buffer (rank-1 only; all egs artifacts are vectors).
+pub struct Literal(LiteralData);
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::make_literal(v)
+    }
+
+    /// Extract the payload as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::from_literal(self)
+    }
+
+    /// Unwrap a 1-tuple result (egs artifacts lower with
+    /// `return_tuple=True`). The stub's literals are never tuples, so this
+    /// is the identity.
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        Ok(self)
+    }
+}
+
+impl NativeType for f32 {
+    fn make_literal(v: &[Self]) -> Literal {
+        Literal(LiteralData::F32(v.to_vec()))
+    }
+
+    fn from_literal(l: &Literal) -> Result<Vec<Self>, Error> {
+        match &l.0 {
+            LiteralData::F32(v) => Ok(v.clone()),
+            LiteralData::I32(_) => Err(Error::new("literal holds i32, requested f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn make_literal(v: &[Self]) -> Literal {
+        Literal(LiteralData::I32(v.to_vec()))
+    }
+
+    fn from_literal(l: &Literal) -> Result<Vec<Self>, Error> {
+        match &l.0 {
+            LiteralData::I32(v) => Ok(v.clone()),
+            LiteralData::F32(_) => Err(Error::new("literal holds f32, requested i32")),
+        }
+    }
+}
+
+/// An HLO module in text form.
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read HLO text from disk. Fails (with the path in the message) when
+    /// the artifact file is missing — the only part of artifact loading
+    /// the stub can perform faithfully.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto, Error> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("{}: {e}", path.display())))?;
+        Ok(HloModuleProto { text })
+    }
+
+    /// The raw HLO text.
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// A computation handle wrapping an HLO module.
+pub struct XlaComputation {
+    _hlo_len: usize,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _hlo_len: proto.text().len() }
+    }
+}
+
+/// Stub PJRT client. Construction succeeds so the executor actor can boot
+/// and answer capacity queries; compiling a computation reports that the
+/// runtime is unavailable.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// "Connect" to the CPU device.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    /// Compiling always fails in the stub: there is no XLA runtime linked
+    /// into this build.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::new(
+            "XLA/PJRT runtime unavailable (vendored stub build); \
+             use the native backend, or link real PJRT bindings",
+        ))
+    }
+}
+
+/// A compiled executable (never constructed by the stub client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with device buffers (unreachable in the stub).
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::new("stub executable cannot run"))
+    }
+}
+
+/// A device buffer handle (never constructed by the stub client).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal (unreachable in the stub).
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::new("stub buffer has no device memory"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        let l = Literal::vec1(&[3i32]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn missing_hlo_file_reports_path() {
+        let err = HloModuleProto::from_text_file("definitely/missing.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("missing.hlo.txt"), "{err}");
+    }
+
+    #[test]
+    fn client_boots_but_compile_is_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("unavailable"), "{err}");
+    }
+}
