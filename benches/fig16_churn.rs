@@ -1,0 +1,101 @@
+//! Fig 16 (beyond the paper — §7 future work realized): streaming churn
+//! cost vs churn rate.
+//!
+//! For each per-batch churn rate, a batch stream is ingested into a
+//! [`egs::stream::StagedGraph`]: tombstone deletions, locality-aware
+//! staged insertions, an executable O(k + batch) delta plan per batch,
+//! and a GEO compaction whenever the 10% quality budget trips. The
+//! comparison column is the naive alternative — a **full GEO reorder
+//! after every batch** — which is what the static pipeline would have to
+//! do to stay fresh.
+//!
+//! Expected shape: per-batch streaming cost stays orders of magnitude
+//! below a full reorder, and the amortized compaction count grows
+//! linearly with the churn rate while RF drift stays within the budget.
+
+use egs::graph::datasets;
+use egs::metrics::table::{f3, secs, Table};
+use egs::ordering::geo::{self, GeoConfig};
+use egs::stream::{quality, MutationBatch, StagedGraph};
+use egs::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let g = datasets::by_name("pokec-s", 42).unwrap();
+    let m = g.num_edges();
+    let k = 16usize;
+    let cfg = GeoConfig::default();
+    let batches = 20u32;
+
+    // naive baseline: one full GEO pass over the graph — the per-batch
+    // cost of keeping a static pipeline fresh under churn
+    let t = Instant::now();
+    let _ = geo::order(&g, &cfg);
+    let naive_s = t.elapsed().as_secs_f64();
+
+    let mut table = Table::new(
+        &format!("Fig 16: churn ingest cost vs rate (|E|={m}, k={k}, {batches} batches)"),
+        &[
+            "rate/batch",
+            "stream/batch",
+            "naive/batch",
+            "speedup",
+            "plan ops avg",
+            "compactions",
+            "RF live",
+            "RF fresh",
+        ],
+    );
+
+    for rate in [0.001f64, 0.005, 0.01, 0.02, 0.05] {
+        let inserts = (m as f64 * rate) as u32;
+        let deletes = inserts / 3;
+        let mut sg = StagedGraph::new(g.clone(), cfg);
+        let mut rng = Rng::new(0xF16);
+        let mut stream_s = 0.0f64;
+        let mut plan_ops = 0usize;
+        for _ in 0..batches {
+            let mut batch = MutationBatch::new();
+            let p = sg.physical_edges() as u64;
+            for _ in 0..deletes {
+                batch.delete(rng.below(p));
+            }
+            let n = sg.num_vertices() as u64;
+            for _ in 0..inserts {
+                batch.insert(rng.below(n) as u32, rng.below(n) as u32);
+            }
+            let t = Instant::now();
+            let (_, plan) = sg.apply_batch(&batch, k);
+            plan_ops += plan.range_ops();
+            if sg.needs_compaction() {
+                sg.compact();
+            }
+            stream_s += t.elapsed().as_secs_f64();
+        }
+        let per_batch = stream_s / batches as f64;
+        let assign = sg.assignment(k);
+        let rf_live = quality::live_replication_factor(&sg, &assign);
+        // fresh repartition of the mutated graph (the quality baseline)
+        let live = sg.as_graph();
+        let fresh = geo::order(&live, &cfg).apply(&live);
+        let rf_fresh = egs::partition::quality::replication_factor_chunked(
+            &fresh,
+            &egs::partition::cep::Cep::new(fresh.num_edges(), k),
+        );
+        table.row(vec![
+            format!("{:.1}%", rate * 100.0),
+            secs(per_batch),
+            secs(naive_s),
+            format!("{:.0}x", naive_s / per_batch.max(1e-9)),
+            format!("{:.1}", plan_ops as f64 / batches as f64),
+            sg.compactions().to_string(),
+            f3(rf_live),
+            f3(rf_fresh),
+        ]);
+    }
+    table.print();
+    println!(
+        "expected: per-batch streaming cost << one full GEO reorder; \
+         RF live tracks RF fresh within the 10% compaction budget"
+    );
+}

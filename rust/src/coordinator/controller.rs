@@ -14,6 +14,7 @@ use super::provisioner::{LatencyModel, Provisioner};
 use super::state::ClusterState;
 use crate::engine::{apps::pagerank, Combine, Engine};
 use crate::graph::Graph;
+use crate::ordering::geo::GeoConfig;
 use crate::partition::bvc::BvcState;
 use crate::partition::cep::Cep;
 use crate::partition::{ginger, hash1d, oblivious, CepView, EdgePartition, PartitionAssignment};
@@ -21,6 +22,8 @@ use crate::runtime::{ComputeBackend, StepKind};
 use crate::scaling::migration::MigrationPlan;
 use crate::scaling::network::Network;
 use crate::scaling::scenario::Scenario;
+use crate::stream::{quality as stream_quality, CompactionPolicy, MutationBatch, StagedGraph};
+use crate::util::rng::Rng;
 use crate::Result;
 use anyhow::bail;
 use std::time::Instant;
@@ -284,6 +287,362 @@ fn plan_rescale(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Streaming: interleaved churn + rescale over a StagedGraph
+// ---------------------------------------------------------------------------
+
+/// Configuration of the streaming (churn-capable) controller. The
+/// streaming path is CEP-native: the assignment is chunk metadata over the
+/// staged physical id space and every plan is range operations.
+pub struct StreamingConfig {
+    /// emulated network for pricing inter-worker rebalancing moves
+    pub net: Network,
+    /// bytes of application value migrated per edge
+    pub value_bytes: u64,
+    /// worker provisioning latencies
+    pub latency: LatencyModel,
+    /// RNG seed for the generated mutation batches
+    pub seed: u64,
+    /// GEO configuration for the initial ordering and every compaction
+    pub geo: GeoConfig,
+    /// staging/tombstone quality budget
+    pub policy: CompactionPolicy,
+    /// fold the staging tail once the scenario ends (a final compaction),
+    /// so the run hands steady-state serving a fully GEO-ordered graph
+    pub flush_at_end: bool,
+    /// record the live replication factor in every [`ChurnRecord`] — an
+    /// O(|E|) audit sweep per batch, so off by default (the streaming
+    /// path itself stays O(k + batch) per batch); records hold NaN when
+    /// disabled
+    pub audit_rf: bool,
+    /// additionally price a *fresh* GEO+CEP repartition of the final
+    /// mutated graph (one extra GEO pass, different seed) and report its
+    /// RF — the quality-drift baseline the acceptance criteria compare
+    /// against; off by default
+    pub measure_fresh_baseline: bool,
+}
+
+impl Default for StreamingConfig {
+    fn default() -> Self {
+        StreamingConfig {
+            net: Network::gbps(8.0),
+            value_bytes: 8,
+            latency: LatencyModel::default(),
+            seed: 42,
+            geo: GeoConfig::default(),
+            policy: CompactionPolicy::default(),
+            flush_at_end: true,
+            audit_rf: false,
+            measure_fresh_baseline: false,
+        }
+    }
+}
+
+/// Audit record of one executed churn batch.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnRecord {
+    /// iteration the batch fired before
+    pub at_iteration: u32,
+    /// insertions staged (after dedup)
+    pub inserted: u32,
+    /// deletions applied
+    pub deleted: u32,
+    /// edges retired (tombstoned) by the plan
+    pub retired: u64,
+    /// edges rebalanced between workers by the plan
+    pub moved: u64,
+    /// edges appended to workers by the plan
+    pub appended: u64,
+    /// total range operations actually executed: the delta plan's size,
+    /// or `k` full-chunk reloads when the batch tripped a compaction
+    pub range_ops: usize,
+    /// tombstones outstanding after the batch
+    pub tombstones_after: usize,
+    /// staging fraction after the batch
+    pub staging_fraction: f64,
+    /// did this batch trip the compaction budget (full GEO fold + rebuild;
+    /// `moved` then counts every live edge and the network time prices the
+    /// full redistribution, not the discarded delta plan)
+    pub compacted: bool,
+    /// live replication factor after the batch was applied
+    /// ([`StreamingConfig::audit_rf`]; NaN when disabled)
+    pub rf: f64,
+}
+
+/// Breakdown of a streaming run: Table 7's INIT/APP/SCALE plus a CHURN
+/// component, with per-event audit logs.
+#[derive(Clone, Debug)]
+pub struct StreamingBreakdown {
+    /// scenario name
+    pub name: String,
+    /// total = init + app + scale + churn
+    pub all_s: f64,
+    /// initial GEO ordering + engine build
+    pub init_s: f64,
+    /// application compute
+    pub app_s: f64,
+    /// rescale planning + migration + provisioning
+    pub scale_s: f64,
+    /// churn ingest + delta-plan application + compactions
+    pub churn_s: f64,
+    /// communication bytes of the app phases
+    pub com_bytes: u64,
+    /// final partition count
+    pub final_k: usize,
+    /// live replication factor at the end of the run
+    pub final_rf: f64,
+    /// RF of a fresh GEO+CEP repartition of the final mutated graph
+    /// (only when `measure_fresh_baseline` is set)
+    pub fresh_rf: Option<f64>,
+    /// compactions performed (including a final flush)
+    pub compactions: u32,
+    /// live edges at the end of the run
+    pub live_edges: usize,
+    /// per-rescale audit log
+    pub events: Vec<EventRecord>,
+    /// per-batch audit log
+    pub churn_events: Vec<ChurnRecord>,
+}
+
+/// Run PageRank over an evolving graph: churn batches and rescales fire
+/// between iterations per `scenario`, every delta reaches the engine as
+/// range operations over a [`crate::stream::StagedAssignment`], and the
+/// staged state compacts through GEO when the quality budget is spent.
+/// Takes ownership of the graph — the staged base is GEO-ordered once at
+/// INIT.
+pub fn run_streaming<F>(
+    g: Graph,
+    scenario: &Scenario,
+    cfg: &StreamingConfig,
+    mut backend_for: F,
+) -> Result<StreamingBreakdown>
+where
+    F: FnMut(usize) -> Box<dyn ComputeBackend>,
+{
+    let mut k = scenario.initial_k;
+    let mut cluster = ClusterState::new(k);
+    let mut rng = Rng::new(cfg.seed);
+
+    // ---- INIT: GEO-order the base, boot engine + fleet
+    let t_init = Instant::now();
+    let mut provisioner = Provisioner::boot(k, cfg.latency);
+    let mut sg = StagedGraph::new(g, cfg.geo).with_policy(cfg.policy);
+    let mut engine = {
+        let assign = sg.assignment(k);
+        Engine::new(&sg, &assign, &mut backend_for)?
+    };
+    let init_s = t_init.elapsed().as_secs_f64() + provisioner.accounted().as_secs_f64();
+
+    // ---- application state (PageRank), survives churn and rescales
+    let mut n = sg.num_vertices();
+    let mut ranks = vec![1.0f32 / n.max(1) as f32; n];
+    let mut aux: Vec<f32> = (0..n as u32)
+        .map(|v| {
+            let d = sg.degree(v);
+            if d == 0 {
+                0.0
+            } else {
+                1.0 / d as f32
+            }
+        })
+        .collect();
+    let mut active = vec![true; n];
+
+    let mut app_s = 0.0f64;
+    let mut scale_s = 0.0f64;
+    let mut churn_s = 0.0f64;
+    let mut com_bytes = 0u64;
+    let mut event_log: Vec<EventRecord> = Vec::new();
+    let mut churn_log: Vec<ChurnRecord> = Vec::new();
+
+    for it in 0..scenario.total_iterations {
+        // ---- CHURN batch? Ingest, derive the delta plan, apply or fold.
+        if let Some(ce) = scenario.churn_at(it) {
+            let t = Instant::now();
+            let batch = random_batch(&mut rng, &sg, ce.inserts, ce.deletes);
+            let (outcome, plan) = sg.apply_batch(&batch, k);
+            let compacted = sg.needs_compaction();
+            let (net_s, moved, range_ops) = if compacted {
+                // the delta plan is discarded: the budget tripped, the
+                // whole live graph folds through GEO and every worker
+                // reloads its (new) chunk — price the full redistribution
+                sg.compact();
+                let assign = sg.assignment(k);
+                engine = Engine::new(&sg, &assign, &mut backend_for)?;
+                let live = sg.live_edges() as u64;
+                let per_worker = live / k.max(1) as u64 * (8 + cfg.value_bytes);
+                let recv = vec![per_worker; k];
+                (cfg.net.shuffle_time(&[], &recv), live, k)
+            } else {
+                // only rebalancing moves are inter-worker traffic; appends
+                // arrive from the stream and retires are metadata
+                let assign = sg.assignment(k);
+                engine.apply_churn(&sg, &plan, &assign, &mut backend_for)?;
+                (
+                    cfg.net.migration_time(&plan.moves, k, cfg.value_bytes),
+                    plan.moved_edges(),
+                    plan.range_ops(),
+                )
+            };
+            grow_state(&sg, &mut n, &mut ranks, &mut aux, &mut active);
+            churn_s += t.elapsed().as_secs_f64() + net_s;
+            let rf = if cfg.audit_rf {
+                let assign = sg.assignment(k);
+                stream_quality::live_replication_factor(&sg, &assign)
+            } else {
+                f64::NAN
+            };
+            churn_log.push(ChurnRecord {
+                at_iteration: it,
+                inserted: outcome.inserted,
+                deleted: outcome.deleted,
+                retired: plan.retired_edges(),
+                moved,
+                appended: plan.appended_edges(),
+                range_ops,
+                tombstones_after: sg.tombstone_count(),
+                staging_fraction: sg.staging_fraction(),
+                compacted,
+                rf,
+            });
+        }
+
+        // ---- SCALE event? O(k) range moves, same engine path as churn.
+        if let Some(ev) = scenario.event_at(it) {
+            let from_k = k;
+            let t_scale = Instant::now();
+            let plan = sg.rescale_plan(k, ev.target_k);
+            let migrated = plan.moved_edges();
+            let net_s =
+                cfg.net.migration_time(&plan.moves, from_k.max(ev.target_k), cfg.value_bytes);
+            let prov = provisioner.resize_to(ev.target_k, cluster.epoch + 1);
+            {
+                let assign = sg.assignment(ev.target_k);
+                engine.apply_churn(&sg, &plan, &assign, &mut backend_for)?;
+            }
+            k = ev.target_k;
+            let total = t_scale.elapsed().as_secs_f64() + net_s + prov.as_secs_f64();
+            scale_s += total;
+            cluster.record_scale(k, migrated, std::time::Duration::from_secs_f64(total));
+            event_log.push(EventRecord {
+                from_k,
+                to_k: k,
+                migrated_edges: migrated,
+                range_moves: plan.moves.num_moves(),
+            });
+        }
+
+        // ---- APP: one PageRank iteration over the live graph
+        let t_app = Instant::now();
+        engine.comm.reset();
+        let base = (1.0 - pagerank::DAMPING) / n.max(1) as f32;
+        let (contrib, _) =
+            engine.superstep(StepKind::PageRank, Combine::Sum, &ranks, &aux, &active)?;
+        for v in 0..n {
+            ranks[v] = base + pagerank::DAMPING * contrib[v];
+        }
+        com_bytes += engine.comm.total_bytes();
+        app_s += t_app.elapsed().as_secs_f64();
+    }
+
+    // ---- optional final fold: hand steady state a fully ordered graph
+    if cfg.flush_at_end && (sg.staging_len() > 0 || sg.tombstone_count() > 0) {
+        let t = Instant::now();
+        sg.compact();
+        let assign = sg.assignment(k);
+        engine = Engine::new(&sg, &assign, &mut backend_for)?;
+        churn_s += t.elapsed().as_secs_f64();
+    }
+
+    let final_rf = {
+        let assign = sg.assignment(k);
+        stream_quality::live_replication_factor(&sg, &assign)
+    };
+    let fresh_rf = if cfg.measure_fresh_baseline {
+        let live = sg.as_graph();
+        let mut fresh_cfg = cfg.geo;
+        fresh_cfg.seed = cfg.geo.seed.wrapping_add(1);
+        let ordered = crate::ordering::geo::order(&live, &fresh_cfg).apply(&live);
+        Some(crate::partition::quality::replication_factor_chunked(
+            &ordered,
+            &Cep::new(ordered.num_edges(), k),
+        ))
+    } else {
+        None
+    };
+    Ok(StreamingBreakdown {
+        name: scenario.name.clone(),
+        all_s: init_s + app_s + scale_s + churn_s,
+        init_s,
+        app_s,
+        scale_s,
+        churn_s,
+        com_bytes,
+        final_k: k,
+        final_rf,
+        fresh_rf,
+        compactions: sg.compactions(),
+        live_edges: sg.live_edges(),
+        events: event_log,
+        churn_events: churn_log,
+    })
+}
+
+/// Generate a seeded mutation batch: deletions sample live physical ids,
+/// insertions connect random vertices with a small chance of attaching a
+/// brand-new vertex (growing the id space).
+fn random_batch(rng: &mut Rng, sg: &StagedGraph, inserts: u32, deletes: u32) -> MutationBatch {
+    let mut b = MutationBatch::new();
+    let p = sg.physical_edges() as u64;
+    if p > 0 {
+        for _ in 0..deletes {
+            for _ in 0..4 {
+                let id = rng.below(p);
+                if sg.is_live(id) {
+                    b.delete(id);
+                    break;
+                }
+            }
+        }
+    }
+    let n = sg.num_vertices() as u64;
+    if n >= 2 {
+        for _ in 0..inserts {
+            let u = rng.below(n) as u32;
+            let v = if rng.chance(0.05) { n as u32 } else { rng.below(n) as u32 };
+            b.insert(u, v);
+        }
+    }
+    b
+}
+
+/// Grow the application state vectors after churn: new vertices start at
+/// the teleport share, and the PageRank `aux` (1/degree) refreshes for the
+/// whole (mutated) degree sequence.
+fn grow_state(
+    sg: &StagedGraph,
+    n: &mut usize,
+    ranks: &mut Vec<f32>,
+    aux: &mut Vec<f32>,
+    active: &mut Vec<bool>,
+) {
+    let new_n = sg.num_vertices();
+    if new_n > *n {
+        ranks.resize(new_n, 1.0 / new_n as f32);
+        active.resize(new_n, true);
+        *n = new_n;
+    }
+    aux.clear();
+    aux.extend((0..*n as u32).map(|v| {
+        let d = sg.degree(v);
+        if d == 0 {
+            0.0
+        } else {
+            1.0 / d as f32
+        }
+    }));
+}
+
 fn stateless_partition(g: &Graph, method: &str, k: usize) -> EdgePartition {
     let part = match method {
         "1d" => hash1d::partition(g, k),
@@ -412,6 +771,72 @@ mod tests {
             assert_eq!(out.final_k, 3, "{method}");
             assert_eq!(out.events.len(), 2, "{method}");
             assert!(out.migrated_edges > 0, "{method}");
+        }
+    }
+
+    #[test]
+    fn streaming_churn_scenario_runs_and_accounts() {
+        let g = small_graph();
+        let m0 = g.num_edges();
+        // churn every 2 iterations, scale 3→5 at iterations 4 and 8
+        let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
+        let cfg = StreamingConfig {
+            geo: GeoConfig { k_min: 2, k_max: 8, ..Default::default() },
+            audit_rf: true,
+            ..Default::default()
+        };
+        let out =
+            run_streaming(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        assert_eq!(out.final_k, 5);
+        assert_eq!(out.events.len(), 2);
+        assert_eq!(out.churn_events.len(), scenario.churn.len());
+        assert!(
+            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.churn_s)).abs() < 1e-9
+        );
+        assert!(out.app_s > 0.0 && out.churn_s > 0.0 && out.init_s > 0.0);
+        // the live edge count tracks the applied mutations exactly
+        let ins: u64 = out.churn_events.iter().map(|c| c.inserted as u64).sum();
+        let del: u64 = out.churn_events.iter().map(|c| c.deleted as u64).sum();
+        assert_eq!(out.live_edges as u64, m0 as u64 + ins - del);
+        assert!(ins > 0 && del > 0);
+        // flush_at_end folded the churn away
+        assert!(out.compactions >= 1);
+        assert!(out.final_rf >= 1.0);
+        for cr in &out.churn_events {
+            // delta plans: O(k + batch) range ops, rebalancing moves O(k)
+            assert!(
+                cr.range_ops <= (5 + 5 + 1) + cr.deleted as usize + (5 + 1),
+                "churn at {} used {} range ops",
+                cr.at_iteration,
+                cr.range_ops
+            );
+            assert!(cr.staging_fraction <= cfg.policy.budget + 0.05);
+            assert!(cr.rf >= 1.0);
+        }
+        for ev in &out.events {
+            assert!(
+                ev.range_moves <= ev.from_k + ev.to_k + 1,
+                "{}→{}: {} range moves is not O(k)",
+                ev.from_k,
+                ev.to_k,
+                ev.range_moves
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_without_churn_matches_plain_scale_shape() {
+        let g = small_graph();
+        let scenario = Scenario::scale_out(3, 2, 3);
+        let cfg = StreamingConfig::default();
+        let out =
+            run_streaming(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        assert_eq!(out.final_k, 5);
+        assert!(out.churn_events.is_empty());
+        assert_eq!(out.compactions, 0, "no churn, nothing to flush");
+        for ev in &out.events {
+            assert!(ev.migrated_edges > 0);
+            assert!(ev.range_moves <= ev.from_k + ev.to_k + 1);
         }
     }
 

@@ -8,4 +8,7 @@ pub mod events;
 pub mod provisioner;
 pub mod state;
 
-pub use controller::{run_scenario, ControllerConfig, EventRecord, RunBreakdown};
+pub use controller::{
+    run_scenario, run_streaming, ChurnRecord, ControllerConfig, EventRecord, RunBreakdown,
+    StreamingBreakdown, StreamingConfig,
+};

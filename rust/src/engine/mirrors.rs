@@ -12,10 +12,22 @@
 //! between per-partition edge sets, only the touched partitions rebuild
 //! their local tables, and master/mirror state is re-derived only for the
 //! vertices whose replica set actually changed — never a full rebuild.
+//!
+//! Streaming graphs extend the same machinery: the layout is generic over
+//! [`EdgeSource`] (a [`crate::graph::Graph`] or a
+//! [`crate::stream::StagedGraph`]) and executes [`ChurnPlan`]s
+//! ([`PartitionLayout::apply_churn`]). Tombstoned
+//! ids stay in their nominal owner's edge-id set — so every later move
+//! remains one contiguous range — but are skipped whenever a partition
+//! materializes its local tables: a **retirement** just marks the owner
+//! for rebuild, an **append** admits a freshly staged range, and
+//! rebalancing moves splice exactly like a rescale plan. The vertex id
+//! space may grow.
 
-use crate::graph::Graph;
+use crate::graph::EdgeSource;
 use crate::partition::PartitionAssignment;
 use crate::scaling::migration::MigrationPlan;
+use crate::stream::plan::ChurnPlan;
 use crate::util::rng::mix64;
 use crate::{EdgeId, VertexId};
 use std::ops::Range;
@@ -37,18 +49,27 @@ pub struct PartitionLayout {
     /// number of replicas per vertex
     replicas: Vec<u32>,
     /// sorted global edge ids owned by each partition — the substrate the
-    /// range moves of a migration plan splice between partitions. Costs
-    /// 8 B/edge on top of the ~16 B/edge local endpoint arrays; a future
-    /// optimization is an interval-list representation so chunked layouts
-    /// pay O(k) here and range moves become O(log r) metadata edits.
+    /// range moves of a migration/churn plan splice between partitions.
+    /// On the streaming path this includes tombstoned ids (they stay with
+    /// their nominal owner so moves remain whole ranges) but dead ids are
+    /// skipped when local tables materialize. Costs 8 B/edge on top of the
+    /// ~16 B/edge local endpoint arrays; a future optimization is an
+    /// interval-list representation so chunked layouts pay O(k) here and
+    /// range moves become O(log r) metadata edits.
     edge_ids: Vec<Vec<EdgeId>>,
     /// sorted replica partition list per vertex (incrementally patched)
     replica_parts: Vec<Vec<u32>>,
 }
 
 impl PartitionLayout {
-    /// Build the layout for `(g, part)` from any assignment view.
-    pub fn build<P: PartitionAssignment + ?Sized>(g: &Graph, part: &P) -> PartitionLayout {
+    /// Build the layout for `(g, part)` from any assignment view over any
+    /// edge source. Dead ids (tombstones of a staged assignment) stay with
+    /// their nominal owner but never reach its local tables.
+    pub fn build<E, P>(g: &E, part: &P) -> PartitionLayout
+    where
+        E: EdgeSource + ?Sized,
+        P: PartitionAssignment + ?Sized,
+    {
         let k = part.k();
         let n = g.num_vertices();
         debug_assert_eq!(part.num_edges() as usize, g.num_edges());
@@ -68,7 +89,7 @@ impl PartitionLayout {
             replica_parts: vec![Vec::new(); n],
         };
         for p in 0..k {
-            layout.rebuild_partition(p, g);
+            layout.rebuild_partition(p, g, part);
         }
         for p in 0..k {
             let vs = std::mem::take(&mut layout.vertices[p]);
@@ -93,15 +114,14 @@ impl PartitionLayout {
     /// Panics when the plan is inconsistent with the current layout (a
     /// moved range not wholly owned by its source, or a removed partition
     /// still owning edges).
-    pub fn apply_plan(&mut self, g: &Graph, plan: &MigrationPlan, new_k: usize) -> Vec<usize> {
+    pub fn apply_plan<E, P>(&mut self, g: &E, plan: &MigrationPlan, new_part: &P) -> Vec<usize>
+    where
+        E: EdgeSource + ?Sized,
+        P: PartitionAssignment + ?Sized,
+    {
+        let new_k = new_part.k();
         let old_k = self.k;
-        let grown = new_k.max(old_k);
-        if grown > old_k {
-            self.vertices.resize_with(grown, Vec::new);
-            self.local_src.resize_with(grown, Vec::new);
-            self.local_dst.resize_with(grown, Vec::new);
-            self.edge_ids.resize_with(grown, Vec::new);
-        }
+        let grown = self.grow_partitions(new_k);
 
         // 1. splice moved edge-id ranges between partitions
         let mut changed = vec![false; grown];
@@ -113,15 +133,109 @@ impl PartitionLayout {
             changed[d] = true;
         }
 
-        // 2. rebuild local tables of touched partitions; patch replica
-        //    sets for vertices gained/lost
+        self.finish_apply(g, new_part, &changed, old_k, new_k)
+    }
+
+    /// Execute a **churn plan** in place: mark retired (tombstoned) ranges
+    /// for rebuild at their owner, splice rebalancing moves, and admit
+    /// appended (freshly staged) ranges — the streaming counterpart of
+    /// [`Self::apply_plan`]. Retired ids stay in the owner's edge-id set
+    /// (they are dead under `new_part` and vanish from its local tables at
+    /// rebuild); this keeps every subsequent move a single contiguous
+    /// range. The vertex id space may have grown (`g.num_vertices()`
+    /// governs); work remains proportional to the touched partitions.
+    /// Returns the ids (< `new_part.k()`) of partitions whose local state
+    /// changed, ascending.
+    pub fn apply_churn<E, P>(&mut self, g: &E, plan: &ChurnPlan, new_part: &P) -> Vec<usize>
+    where
+        E: EdgeSource + ?Sized,
+        P: PartitionAssignment + ?Sized,
+    {
+        let new_k = new_part.k();
+        let old_k = self.k;
+        let grown = self.grow_partitions(new_k);
+        // the mutated source may have introduced new vertices
+        let new_n = g.num_vertices();
+        if new_n > self.n {
+            self.master.resize(new_n, u32::MAX);
+            self.replicas.resize(new_n, 0);
+            self.replica_parts.resize_with(new_n, Vec::new);
+            self.n = new_n;
+        }
+
+        let mut changed = vec![false; grown];
+        // 1. retire: the owner keeps the ids but must drop the edges from
+        //    its local tables — mark it for rebuild
+        for (src, r) in &plan.retires {
+            let s = *src as usize;
+            assert!(s < grown, "churn plan retires from partition out of range");
+            debug_assert!(r.start < r.end, "empty retire range");
+            changed[s] = true;
+        }
+        // 2. splice rebalancing moves (pre-existing ids, dead included)
+        for mv in &plan.moves.moves {
+            let (s, d) = (mv.src as usize, mv.dst as usize);
+            assert!(s < grown && d < grown, "churn plan references partition out of range");
+            move_range(&mut self.edge_ids, s, d, &mv.edges);
+            changed[s] = true;
+            changed[d] = true;
+        }
+        // 3. append: admit freshly staged ranges (ids beyond every
+        //    pre-existing id, so a plain extend keeps the sets sorted)
+        for (dst, r) in &plan.appends {
+            let d = *dst as usize;
+            assert!(d < grown, "churn plan appends to partition out of range");
+            let ids = &mut self.edge_ids[d];
+            if let Some(&last) = ids.last() {
+                assert!(
+                    last < r.start,
+                    "appended range {}..{} not beyond partition {d}'s ids",
+                    r.start,
+                    r.end
+                );
+            }
+            ids.extend(r.clone());
+            changed[d] = true;
+        }
+
+        self.finish_apply(g, new_part, &changed, old_k, new_k)
+    }
+
+    /// Grow the per-partition arrays to `max(new_k, k)`; returns that size.
+    fn grow_partitions(&mut self, new_k: usize) -> usize {
+        let grown = new_k.max(self.k);
+        if grown > self.k {
+            self.vertices.resize_with(grown, Vec::new);
+            self.local_src.resize_with(grown, Vec::new);
+            self.local_dst.resize_with(grown, Vec::new);
+            self.edge_ids.resize_with(grown, Vec::new);
+        }
+        grown
+    }
+
+    /// Shared tail of plan execution: rebuild local tables of touched
+    /// partitions, patch replica sets for vertices gained/lost, enforce
+    /// that a shrink drained the removed partitions, and re-derive
+    /// master/mirror info for exactly the affected vertices.
+    fn finish_apply<E, P>(
+        &mut self,
+        g: &E,
+        part: &P,
+        changed: &[bool],
+        old_k: usize,
+        new_k: usize,
+    ) -> Vec<usize>
+    where
+        E: EdgeSource + ?Sized,
+        P: PartitionAssignment + ?Sized,
+    {
         let mut dirty: Vec<VertexId> = Vec::new();
         for (p, &was_changed) in changed.iter().enumerate() {
             if !was_changed {
                 continue;
             }
             let old_verts = std::mem::take(&mut self.vertices[p]);
-            self.rebuild_partition(p, g);
+            self.rebuild_partition(p, g, part);
             let (removed, added) = diff_sorted(&old_verts, &self.vertices[p]);
             for v in removed {
                 let parts = &mut self.replica_parts[v as usize];
@@ -143,7 +257,7 @@ impl PartitionLayout {
             }
         }
 
-        // 3. shrink: removed partitions must have been drained by the plan
+        // shrink: removed partitions must have been drained by the plan
         if new_k < old_k {
             for (p, ids) in self.edge_ids.iter().enumerate().take(old_k).skip(new_k) {
                 assert!(
@@ -159,7 +273,7 @@ impl PartitionLayout {
         }
         self.k = new_k;
 
-        // 4. re-derive master/mirror info for affected vertices only
+        // re-derive master/mirror info for affected vertices only
         dirty.sort_unstable();
         dirty.dedup();
         for v in dirty {
@@ -175,11 +289,18 @@ impl PartitionLayout {
     }
 
     /// Recompute partition `p`'s vertex set and local edge arrays from its
-    /// owned edge ids.
-    fn rebuild_partition(&mut self, p: usize, g: &Graph) {
+    /// owned edge ids, skipping dead (tombstoned) ids.
+    fn rebuild_partition<E, P>(&mut self, p: usize, g: &E, part: &P)
+    where
+        E: EdgeSource + ?Sized,
+        P: PartitionAssignment + ?Sized,
+    {
         let mut present: std::collections::BTreeSet<VertexId> = Default::default();
         for &eid in &self.edge_ids[p] {
-            let e = g.edges()[eid as usize];
+            if !part.is_live(eid) {
+                continue;
+            }
+            let e = g.edge(eid);
             present.insert(e.u);
             present.insert(e.v);
         }
@@ -191,7 +312,10 @@ impl PartitionLayout {
         src.clear();
         dst.clear();
         for &eid in &self.edge_ids[p] {
-            let e = g.edges()[eid as usize];
+            if !part.is_live(eid) {
+                continue;
+            }
+            let e = g.edge(eid);
             let lu = lindex[&e.u];
             let lv = lindex[&e.v];
             src.push(lu);
@@ -230,7 +354,9 @@ impl PartitionLayout {
         &self.vertices[p]
     }
 
-    /// Sorted global edge ids owned by partition `p`.
+    /// Sorted global edge ids owned by partition `p` (on the streaming
+    /// path this includes tombstoned ids — check the assignment's
+    /// `is_live` when walking them).
     pub fn edges_of(&self, p: usize) -> &[EdgeId] {
         &self.edge_ids[p]
     }
@@ -418,7 +544,7 @@ mod tests {
                 let next = CepView::new(view.cep().rescaled(new_k));
                 let plan =
                     crate::scaling::migration::MigrationPlan::between_ceps(view.cep(), next.cep());
-                layout.apply_plan(&g, &plan, new_k);
+                layout.apply_plan(&g, &plan, &next);
                 let fresh = PartitionLayout::build(&g, &next);
                 assert_layouts_equal(&layout, &fresh);
                 view = next;
@@ -448,11 +574,69 @@ mod tests {
             );
             let plan = crate::scaling::migration::MigrationPlan::diff(&old, &new);
             let mut layout = PartitionLayout::build(&g, &old);
-            let changed = layout.apply_plan(&g, &plan, new.k);
+            let changed = layout.apply_plan(&g, &plan, &new);
             let fresh = PartitionLayout::build(&g, &new);
             assert_layouts_equal(&layout, &fresh);
             // every changed partition is within the new k
             assert!(changed.iter().all(|&p| p < new.k));
+        });
+    }
+
+    /// Streaming counterpart of `apply_plan_matches_fresh_build`: chains
+    /// of churn batches (inserts growing the id — and vertex — space,
+    /// tombstoning deletes) interleaved with rescales, applied
+    /// incrementally, must equal a fresh build of the staged assignment.
+    #[test]
+    fn apply_churn_matches_fresh_build() {
+        use crate::ordering::geo::GeoConfig;
+        use crate::stream::{MutationBatch, StagedGraph};
+
+        check(0xC19A, 8, |rng| {
+            let g = erdos_renyi(
+                50 + rng.below_usize(100),
+                200 + rng.below_usize(700),
+                rng.next_u64(),
+            );
+            let n0 = g.num_vertices() as u64;
+            let cfg = GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 3 };
+            let mut sg = StagedGraph::new(g, cfg);
+            let mut k = 2 + rng.below_usize(5);
+            let mut layout = {
+                let assign = sg.assignment(k);
+                PartitionLayout::build(&sg, &assign)
+            };
+            for _ in 0..4 {
+                let mut batch = MutationBatch::new();
+                for _ in 0..rng.below_usize(40) {
+                    // occasionally grow the vertex space
+                    let u = rng.below(n0) as u32;
+                    let v = if rng.chance(0.1) {
+                        (n0 + rng.below(8)) as u32
+                    } else {
+                        rng.below(n0) as u32
+                    };
+                    batch.insert(u, v);
+                }
+                for _ in 0..rng.below_usize(12) {
+                    batch.delete(rng.below(sg.physical_edges() as u64));
+                }
+                let (_, plan) = sg.apply_batch(&batch, k);
+                {
+                    let assign = sg.assignment(k);
+                    layout.apply_churn(&sg, &plan, &assign);
+                }
+                // every other round: rescale through the same machinery
+                if rng.chance(0.5) {
+                    let new_k = 1 + rng.below_usize(8);
+                    let plan = sg.rescale_plan(k, new_k);
+                    let assign = sg.assignment(new_k);
+                    layout.apply_churn(&sg, &plan, &assign);
+                    k = new_k;
+                }
+                let assign = sg.assignment(k);
+                let fresh = PartitionLayout::build(&sg, &assign);
+                assert_layouts_equal(&layout, &fresh);
+            }
         });
     }
 
@@ -466,6 +650,6 @@ mod tests {
         // claim partition 0 owns a range that actually belongs to 3
         let mut plan = crate::scaling::migration::MigrationPlan::default();
         plan.push_range(0, 1, (m as u64 - 5)..m as u64);
-        layout.apply_plan(&g, &plan, 4);
+        layout.apply_plan(&g, &plan, &part);
     }
 }

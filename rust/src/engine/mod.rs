@@ -20,10 +20,11 @@ pub mod comm;
 pub mod mirrors;
 pub mod worker;
 
-use crate::graph::Graph;
+use crate::graph::EdgeSource;
 use crate::partition::PartitionAssignment;
 use crate::runtime::{ComputeBackend, StepKind};
 use crate::scaling::migration::MigrationPlan;
+use crate::stream::plan::ChurnPlan;
 use crate::Result;
 use comm::CommMeter;
 use mirrors::PartitionLayout;
@@ -47,12 +48,15 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Build from a graph and any partition assignment view (materialized
-    /// vector or O(1) [`crate::partition::CepView`]). `backend_for` is
-    /// invoked once per partition (clone an [`crate::runtime::executor::XlaBackend`]
-    /// handle or create fresh [`crate::runtime::native::NativeBackend`]s).
-    pub fn new<F, P>(g: &Graph, part: &P, mut backend_for: F) -> Result<Engine>
+    /// Build from an edge source (a [`crate::graph::Graph`] or a streaming
+    /// [`crate::stream::StagedGraph`]) and any partition assignment view
+    /// (materialized vector or O(1) [`crate::partition::CepView`]).
+    /// `backend_for` is invoked once per partition (clone an
+    /// [`crate::runtime::executor::XlaBackend`] handle or create fresh
+    /// [`crate::runtime::native::NativeBackend`]s).
+    pub fn new<E, F, P>(g: &E, part: &P, mut backend_for: F) -> Result<Engine>
     where
+        E: EdgeSource + ?Sized,
         F: FnMut(usize) -> Box<dyn ComputeBackend>,
         P: PartitionAssignment + ?Sized,
     {
@@ -75,19 +79,58 @@ impl Engine {
     /// CEP path nothing here allocates per-edge assignment vectors — the
     /// plan is O(k) range moves and the work is proportional to the
     /// touched partitions.
-    pub fn apply_migration<F, P>(
+    pub fn apply_migration<E, F, P>(
         &mut self,
-        g: &Graph,
+        g: &E,
         plan: &MigrationPlan,
         new_part: &P,
         mut backend_for: F,
+    ) -> Result<()>
+    where
+        E: EdgeSource + ?Sized,
+        F: FnMut(usize) -> Box<dyn ComputeBackend>,
+        P: PartitionAssignment + ?Sized,
+    {
+        let changed = self.layout.apply_plan(g, plan, new_part);
+        self.refresh_workers(new_part, &changed, &mut backend_for)
+    }
+
+    /// Execute a churn plan: retire tombstoned edge ids, splice
+    /// rebalancing moves and admit freshly staged ranges through the
+    /// layout, then rebuild exactly the touched workers — the streaming
+    /// counterpart of [`Self::apply_migration`]. `g` must be the
+    /// *post-batch* edge source (new edges addressable) and `new_part` the
+    /// post-batch staged assignment the plan encodes.
+    pub fn apply_churn<E, F, P>(
+        &mut self,
+        g: &E,
+        plan: &ChurnPlan,
+        new_part: &P,
+        mut backend_for: F,
+    ) -> Result<()>
+    where
+        E: EdgeSource + ?Sized,
+        F: FnMut(usize) -> Box<dyn ComputeBackend>,
+        P: PartitionAssignment + ?Sized,
+    {
+        let changed = self.layout.apply_churn(g, plan, new_part);
+        self.refresh_workers(new_part, &changed, &mut backend_for)
+    }
+
+    /// Shared worker-refresh tail of plan execution: cross-check the
+    /// layout against the target assignment (debug), retire workers beyond
+    /// the new `k`, rebuild touched workers, boot new ones.
+    fn refresh_workers<F, P>(
+        &mut self,
+        new_part: &P,
+        changed: &[usize],
+        backend_for: &mut F,
     ) -> Result<()>
     where
         F: FnMut(usize) -> Box<dyn ComputeBackend>,
         P: PartitionAssignment + ?Sized,
     {
         let new_k = new_part.k();
-        let changed = self.layout.apply_plan(g, plan, new_k);
         #[cfg(debug_assertions)]
         for p in 0..new_k {
             for &eid in self.layout.edges_of(p) {
@@ -99,7 +142,7 @@ impl Engine {
             }
         }
         self.workers.truncate(new_k);
-        for &p in &changed {
+        for &p in changed {
             if p < self.workers.len() {
                 self.workers[p].rebuild(&self.layout)?;
             }

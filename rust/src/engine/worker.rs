@@ -181,7 +181,7 @@ mod tests {
         let mut w = Worker::new(&layout, 0, Box::new(NativeBackend::new())).unwrap();
         assert_eq!(w.num_local_vertices(), 3);
         let plan = crate::scaling::migration::MigrationPlan::diff(&old, &new);
-        layout.apply_plan(&g, &plan, 2);
+        layout.apply_plan(&g, &plan, &new);
         w.rebuild(&layout).unwrap();
         assert_eq!(w.num_local_vertices(), 4);
         // the rebuilt worker computes the same partials as a fresh one

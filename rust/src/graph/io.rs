@@ -5,17 +5,36 @@
 //!   for interoperability;
 //! * **binary ordered edge list** (`.egs`) — the artifact the paper's
 //!   pipeline persists after GEO so that CEP can `O(1)`-slice it straight
-//!   from storage (little-endian `u32` magic/version/|V|, `u64` |E|, then
-//!   `u32` pairs).
+//!   from storage. Version 1 is the static layout (little-endian `u32`
+//!   magic/version/|V|, `u64` |E|, then `u32` pairs); version 2 appends
+//!   the **streaming state**: the staged-tail length (`u64`) and a
+//!   tombstone bitmap (`u64` word count, then packed `u64` words over the
+//!   physical edge ids), so a [`crate::stream::StagedGraph`] round-trips
+//!   without folding its churn. Version-2 readers load version-1 files
+//!   (empty tail, no tombstones) unchanged.
 
 use super::builder::GraphBuilder;
-use super::Graph;
-use crate::Result;
+use super::edgelist::{Edge, EdgeList};
+use super::{Csr, Graph};
+use crate::{EdgeId, Result};
 use anyhow::{bail, Context};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: u32 = 0x4547_5331; // "EGS1"
+
+/// A decoded `.egs` file with its streaming state (v1 files decode with an
+/// empty tail and no tombstones).
+#[derive(Debug)]
+pub struct EgsSnapshot {
+    /// the physical edge list in stored order (for v2 this *includes*
+    /// tombstoned edges — liveness is in `tombstones`)
+    pub graph: Graph,
+    /// trailing staged-tail length (0 for v1)
+    pub staged_len: u64,
+    /// sorted physical ids of tombstoned edges (empty for v1)
+    pub tombstones: Vec<EdgeId>,
+}
 
 /// Load a SNAP-style text edge list.
 pub fn load_text(path: &Path) -> Result<Graph> {
@@ -63,8 +82,73 @@ pub fn save_binary(g: &Graph, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load a binary `.egs` file.
+/// Save a physical edge list plus streaming state in the v2 `.egs`
+/// format: v1's layout followed by the staged-tail length and the
+/// tombstone bitmap. `tombstones` must be sorted physical ids.
+pub fn save_binary_v2(
+    g: &Graph,
+    staged_len: u64,
+    tombstones: &[EdgeId],
+    path: &Path,
+) -> Result<()> {
+    let ne = g.num_edges() as u64;
+    if staged_len > ne {
+        bail!("staged tail {staged_len} longer than edge list {ne}");
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&2u32.to_le_bytes())?; // version
+    w.write_all(&(g.num_vertices() as u32).to_le_bytes())?;
+    w.write_all(&ne.to_le_bytes())?;
+    let mut buf = Vec::with_capacity(g.num_edges() * 8);
+    for e in g.edges().iter() {
+        buf.extend_from_slice(&e.u.to_le_bytes());
+        buf.extend_from_slice(&e.v.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    w.write_all(&staged_len.to_le_bytes())?;
+    let nwords = ne.div_ceil(64);
+    let mut words = vec![0u64; nwords as usize];
+    for &t in tombstones {
+        if t >= ne {
+            bail!("tombstone id {t} beyond edge list {ne}");
+        }
+        words[(t / 64) as usize] |= 1u64 << (t % 64);
+    }
+    w.write_all(&nwords.to_le_bytes())?;
+    for word in words {
+        w.write_all(&word.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a binary `.egs` file (v1 or v2), returning the **live** graph:
+/// for v2 files the tombstoned edges are dropped and the staged tail is
+/// kept in place. Like the original v1 loader, the result passes through
+/// [`GraphBuilder`], so duplicate edges and self loops in a foreign or
+/// corrupted file are sanitized away (order preserved) and the
+/// [`Graph`] invariants hold.
 pub fn load_binary(path: &Path) -> Result<Graph> {
+    let snap = load_binary_v2(path)?;
+    let mut b = GraphBuilder::new();
+    let mut t = 0usize;
+    for (id, e) in snap.graph.edges().iter().enumerate() {
+        if t < snap.tombstones.len() && snap.tombstones[t] == id as EdgeId {
+            t += 1;
+            continue;
+        }
+        b.push(e.u, e.v);
+    }
+    Ok(b.build())
+}
+
+/// Load a binary `.egs` file with full streaming fidelity. Version-1
+/// files decode with `staged_len == 0` and no tombstones; version-2 files
+/// preserve edge order *including* duplicates a tombstoned edge may have
+/// (the edge list is rebuilt without the builder's dedup pass so physical
+/// ids survive the round trip exactly).
+pub fn load_binary_v2(path: &Path) -> Result<EgsSnapshot> {
     let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut hdr = [0u8; 20];
     f.read_exact(&mut hdr)?;
@@ -73,20 +157,58 @@ pub fn load_binary(path: &Path) -> Result<Graph> {
         bail!("not an egs file: bad magic {magic:#x}");
     }
     let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
-    if version != 1 {
+    if version != 1 && version != 2 {
         bail!("unsupported egs version {version}");
     }
-    let _nv = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+    let nv = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
     let ne = u64::from_le_bytes(hdr[12..20].try_into().unwrap()) as usize;
     let mut buf = vec![0u8; ne * 8];
     f.read_exact(&mut buf)?;
-    let mut b = GraphBuilder::new();
+    let mut edges: Vec<Edge> = Vec::with_capacity(ne);
+    let mut max_v = 0usize;
     for c in buf.chunks_exact(8) {
         let u = u32::from_le_bytes(c[0..4].try_into().unwrap());
         let v = u32::from_le_bytes(c[4..8].try_into().unwrap());
-        b.push(u, v);
+        max_v = max_v.max(u.max(v) as usize + 1);
+        edges.push(Edge::new(u, v));
     }
-    Ok(b.build())
+    let n = nv.max(max_v);
+    let el = EdgeList::from_vec(edges);
+    let csr = Csr::build(n, &el);
+    let graph = Graph::from_parts(el, csr);
+
+    let (staged_len, tombstones) = if version == 1 {
+        (0u64, Vec::new())
+    } else {
+        let mut w8 = [0u8; 8];
+        f.read_exact(&mut w8)?;
+        let staged_len = u64::from_le_bytes(w8);
+        if staged_len > ne as u64 {
+            bail!("staged tail {staged_len} longer than edge list {ne}");
+        }
+        f.read_exact(&mut w8)?;
+        let nwords = u64::from_le_bytes(w8);
+        if nwords != (ne as u64).div_ceil(64) {
+            bail!("tombstone bitmap has {nwords} words for {ne} edges");
+        }
+        let mut words = vec![0u8; nwords as usize * 8];
+        f.read_exact(&mut words)?;
+        let mut tombstones = Vec::new();
+        for (wi, c) in words.chunks_exact(8).enumerate() {
+            let mut word = u64::from_le_bytes(c.try_into().unwrap());
+            while word != 0 {
+                let bit = word.trailing_zeros() as u64;
+                let id = wi as u64 * 64 + bit;
+                if id >= ne as u64 {
+                    bail!("tombstone id {id} beyond edge list {ne}");
+                }
+                tombstones.push(id);
+                word &= word - 1;
+            }
+        }
+        (staged_len, tombstones)
+    };
+    Ok(EgsSnapshot { graph, staged_len, tombstones })
 }
 
 #[cfg(test)]
@@ -127,6 +249,44 @@ mod tests {
         let p = tmp("bad.egs");
         std::fs::write(&p, b"this is not an egs file at all....").unwrap();
         assert!(load_binary(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v2_round_trip_preserves_streaming_state() {
+        let g = erdos_renyi(120, 500, 4);
+        let p = tmp("v2.egs");
+        let tombs: Vec<u64> = vec![0, 63, 64, 127, 499];
+        save_binary_v2(&g, 37, &tombs, &p).unwrap();
+        let snap = load_binary_v2(&p).unwrap();
+        assert_eq!(snap.graph.edges().as_slice(), g.edges().as_slice());
+        assert_eq!(snap.graph.num_vertices(), g.num_vertices());
+        assert_eq!(snap.staged_len, 37);
+        assert_eq!(snap.tombstones, tombs);
+        // the live loader drops exactly the tombstoned edges
+        let live = load_binary(&p).unwrap();
+        assert_eq!(live.num_edges(), g.num_edges() - tombs.len());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v2_loader_accepts_v1_files() {
+        let g = erdos_renyi(80, 250, 6);
+        let p = tmp("v1compat.egs");
+        save_binary(&g, &p).unwrap(); // writes version 1
+        let snap = load_binary_v2(&p).unwrap();
+        assert_eq!(snap.staged_len, 0);
+        assert!(snap.tombstones.is_empty());
+        assert_eq!(snap.graph.edges().as_slice(), g.edges().as_slice());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v2_rejects_inconsistent_state() {
+        let g = erdos_renyi(30, 60, 1);
+        let p = tmp("v2bad.egs");
+        assert!(save_binary_v2(&g, 61, &[], &p).is_err(), "tail > |E|");
+        assert!(save_binary_v2(&g, 0, &[60], &p).is_err(), "tombstone out of range");
         std::fs::remove_file(&p).ok();
     }
 

@@ -16,7 +16,40 @@ pub mod stats;
 pub use csr::Csr;
 pub use edgelist::{Edge, EdgeList};
 
-use crate::VertexId;
+use crate::{EdgeId, VertexId};
+
+/// Random access to an edge list by edge id — the minimal read surface the
+/// engine's mirror layout needs. [`Graph`] implements it over its canonical
+/// edge list; [`crate::stream::StagedGraph`] implements it over
+/// `base + staging tail` without ever materializing the combined list, so
+/// the streaming path can rebuild touched partitions after a churn batch
+/// with no O(m) copy.
+pub trait EdgeSource {
+    /// Number of vertices (dense id space `0..n`).
+    fn num_vertices(&self) -> usize;
+
+    /// Number of addressable edge ids (for staged sources this is the
+    /// *physical* count including tombstoned edges).
+    fn num_edges(&self) -> usize;
+
+    /// Endpoints of edge `id` (`id < num_edges()`).
+    fn edge(&self, id: EdgeId) -> Edge;
+}
+
+impl EdgeSource for Graph {
+    fn num_vertices(&self) -> usize {
+        Graph::num_vertices(self)
+    }
+
+    fn num_edges(&self) -> usize {
+        Graph::num_edges(self)
+    }
+
+    #[inline]
+    fn edge(&self, id: EdgeId) -> Edge {
+        self.edges[id as usize]
+    }
+}
 
 /// An undirected graph: canonical edge list + CSR adjacency.
 ///

@@ -44,6 +44,22 @@
 //!
 //! The [`coordinator`] drives exactly this loop at every scale event.
 //!
+//! ## The streaming churn layer
+//!
+//! [`stream`] lifts the pipeline onto *evolving* graphs. A
+//! [`stream::StagedGraph`] holds the GEO-ordered base plus a
+//! locality-aware staging tail and a tombstone set;
+//! [`stream::StagedAssignment`] exposes `base + staging − tombstones` as a
+//! [`partition::PartitionAssignment`] with O(1) owner queries; a churn
+//! batch or rescale derives a [`stream::ChurnPlan`] (retire / move /
+//! append range ops, O(k + batch) of them) that
+//! [`engine::Engine::apply_churn`] executes incrementally — the same
+//! splice-and-rebuild-touched discipline as a migration plan, now with a
+//! growing edge-id (and vertex-id) space. When the
+//! [`stream::CompactionPolicy`] budget is spent, the staged state folds
+//! back through a fresh GEO pass. [`coordinator::run_streaming`] drives
+//! interleaved churn + rescale scenarios end to end.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -76,6 +92,7 @@ pub mod ordering;
 pub mod partition;
 pub mod runtime;
 pub mod scaling;
+pub mod stream;
 pub mod theory;
 pub mod util;
 

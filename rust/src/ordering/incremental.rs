@@ -7,11 +7,15 @@
 //! signals when the decay budget is spent and `reorder` folds everything
 //! back through a fresh GEO pass — amortizing the expensive preprocessing
 //! over many cheap insertions.
+//!
+//! This is the insertion-only precursor of the full streaming substrate
+//! ([`crate::stream::StagedGraph`]), which adds deletions (tombstones),
+//! locality-aware staging and executable delta plans.
 
 use super::geo::{self, GeoConfig};
 use crate::graph::builder::GraphBuilder;
 use crate::graph::{Edge, Graph};
-use crate::VertexId;
+use crate::{EdgeId, VertexId};
 
 /// Ordered edge list under insertions.
 pub struct IncrementalOrder {
@@ -23,13 +27,28 @@ pub struct IncrementalOrder {
     pub staging_budget: f64,
     cfg: GeoConfig,
     reorders: u32,
+    /// permutation of the most recent GEO pass: `perm[new_position] =
+    /// old_edge_id` in the edge list that pass consumed
+    perm: Vec<EdgeId>,
 }
 
 impl IncrementalOrder {
-    /// Start from a graph, GEO-ordering it once.
-    pub fn new(g: &Graph, cfg: GeoConfig) -> IncrementalOrder {
-        let ordered = geo::order(g, &cfg).apply(g);
-        IncrementalOrder { ordered, staging: Vec::new(), staging_budget: 0.10, cfg, reorders: 0 }
+    /// Start from a graph, GEO-ordering it once. Takes ownership so the
+    /// caller's copy is released as soon as the ordered base is built —
+    /// only one O(m) graph is ever retained (the previous borrowed API
+    /// kept the caller's graph *and* the ordered copy alive).
+    pub fn new(g: Graph, cfg: GeoConfig) -> IncrementalOrder {
+        let perm = geo::order(&g, &cfg).into_perm();
+        let ordered = g.permute_edges(&perm);
+        drop(g);
+        IncrementalOrder {
+            ordered,
+            staging: Vec::new(),
+            staging_budget: 0.10,
+            cfg,
+            reorders: 0,
+            perm,
+        }
     }
 
     /// Total edges (base + staged).
@@ -65,6 +84,19 @@ impl IncrementalOrder {
         out
     }
 
+    /// The ordered base graph (staging excluded).
+    pub fn ordered(&self) -> &Graph {
+        &self.ordered
+    }
+
+    /// Permutation of the most recent GEO pass (`perm[new_position] =
+    /// old_edge_id` in the list that pass consumed) — what a snapshot
+    /// persists next to the ordered edge list so the ordering can be
+    /// re-derived or audited without re-running GEO.
+    pub fn permutation(&self) -> &[EdgeId] {
+        &self.perm
+    }
+
     /// Fold the staging tail back in with a fresh GEO pass.
     pub fn reorder(&mut self) {
         let mut b = GraphBuilder::new();
@@ -75,7 +107,8 @@ impl IncrementalOrder {
             b.push(e.u, e.v);
         }
         let g = b.build();
-        self.ordered = geo::order(&g, &self.cfg).apply(&g);
+        self.perm = geo::order(&g, &self.cfg).into_perm();
+        self.ordered = g.permute_edges(&self.perm);
         self.reorders += 1;
     }
 
@@ -109,7 +142,7 @@ mod tests {
     #[test]
     fn insertions_then_reorder_restores_quality() {
         let g = erdos_renyi(400, 3000, 1);
-        let mut inc = IncrementalOrder::new(&g, geo_cfg());
+        let mut inc = IncrementalOrder::new(g, geo_cfg());
         let rf_initial =
             replication_factor_chunked(&inc.as_graph(), &Cep::new(inc.num_edges(), 8));
 
@@ -135,12 +168,34 @@ mod tests {
     #[test]
     fn cep_remains_valid_over_staging() {
         let g = erdos_renyi(100, 600, 3);
-        let mut inc = IncrementalOrder::new(&g, geo_cfg());
+        let mut inc = IncrementalOrder::new(g, geo_cfg());
         inc.insert(0, 99);
         inc.insert(5, 50);
         let c = Cep::new(inc.num_edges(), 4);
         let covered: u64 = (0..4u32).map(|p| c.width(p)).sum();
         assert_eq!(covered, inc.num_edges() as u64);
         assert_eq!(inc.edges().len(), inc.num_edges());
+    }
+
+    /// The exposed permutation reproduces the ordered base from the graph
+    /// the last GEO pass consumed — exactly what a snapshot persists.
+    #[test]
+    fn permutation_reproduces_ordered_base() {
+        let g = erdos_renyi(150, 900, 5);
+        let reference = g.clone();
+        let mut inc = IncrementalOrder::new(g, geo_cfg());
+        assert_eq!(inc.permutation().len(), 900);
+        let replayed = reference.permute_edges(inc.permutation());
+        assert_eq!(replayed.edges().as_slice(), inc.ordered().edges().as_slice());
+
+        // after a reorder the permutation refers to the pre-reorder list
+        inc.insert(3, 77);
+        inc.reorder();
+        assert_eq!(inc.permutation().len(), inc.num_edges());
+        let mut seen = vec![false; inc.num_edges()];
+        for &e in inc.permutation() {
+            assert!(!seen[e as usize], "duplicate id {e}");
+            seen[e as usize] = true;
+        }
     }
 }

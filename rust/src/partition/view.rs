@@ -28,6 +28,19 @@ pub trait PartitionAssignment {
     /// Partition owning edge id `i` (`i < num_edges()`).
     fn partition_of(&self, i: EdgeId) -> PartitionId;
 
+    /// Is edge id `i` alive? Static assignments own every id; streaming
+    /// assignments ([`crate::stream::StagedAssignment`]) report tombstoned
+    /// ids as dead, and consumers building per-partition state
+    /// ([`crate::engine::mirrors::PartitionLayout`]) skip them.
+    fn is_live(&self, _i: EdgeId) -> bool {
+        true
+    }
+
+    /// Number of live edges (`num_edges()` minus tombstones).
+    fn num_live_edges(&self) -> u64 {
+        self.num_edges()
+    }
+
     /// Edges per partition. The default scans all edges; implementations
     /// with cheaper structure (chunk widths, counting vectors) override.
     fn sizes(&self) -> Vec<u64> {

@@ -2,6 +2,13 @@
 //! every `period` iterations (26 → 36 in the paper), **ScaleIn** removes
 //! one (36 → 26). Generic over the step sequence so examples can also run
 //! spot-market traces.
+//!
+//! Scenarios also carry **churn events** — batched edge
+//! insertions/deletions fired between application iterations — so the
+//! streaming coordinator ([`crate::coordinator::run_streaming`]) can
+//! script interleaved churn + rescale workloads. When a churn and a scale
+//! event share an iteration, churn applies first (the rescale sees the
+//! mutated edge-id space).
 
 /// One scripted scaling event.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -12,15 +19,30 @@ pub struct ScaleEvent {
     pub target_k: usize,
 }
 
-/// A scripted scenario: initial k plus a sequence of events.
+/// One scripted churn event: a mutation batch of the given shape is
+/// generated (seeded) and ingested before the iteration runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChurnEvent {
+    /// fires before this iteration's application step
+    pub at_iteration: u32,
+    /// edge insertions in the batch
+    pub inserts: u32,
+    /// edge deletions in the batch
+    pub deletes: u32,
+}
+
+/// A scripted scenario: initial k plus sequences of scale and churn
+/// events.
 #[derive(Clone, Debug)]
 pub struct Scenario {
-    /// descriptive name ("scale-out", "scale-in", ...)
+    /// descriptive name ("scale-out", "churn+scale-out", ...)
     pub name: String,
     /// starting partition count
     pub initial_k: usize,
-    /// events in firing order
+    /// scale events in firing order
     pub events: Vec<ScaleEvent>,
+    /// churn events in firing order (empty for the static scenarios)
+    pub churn: Vec<ChurnEvent>,
     /// total application iterations to run
     pub total_iterations: u32,
 }
@@ -35,6 +57,7 @@ impl Scenario {
             name: format!("scale-out {k0}->{}", k0 + steps),
             initial_k: k0,
             events,
+            churn: Vec::new(),
             total_iterations: (steps as u32 + 1) * period,
         }
     }
@@ -48,6 +71,7 @@ impl Scenario {
             name: format!("scale-in {k0}->{}", k0 - steps),
             initial_k: k0,
             events,
+            churn: Vec::new(),
             total_iterations: (steps as u32 + 1) * period,
         }
     }
@@ -60,9 +84,50 @@ impl Scenario {
         )
     }
 
-    /// Event scheduled at iteration `it`, if any.
+    /// Sprinkle a churn event of the given shape every `every` iterations
+    /// (starting at iteration `every`), on top of whatever scale events the
+    /// scenario already scripts.
+    pub fn with_churn(mut self, every: u32, inserts: u32, deletes: u32) -> Scenario {
+        assert!(every > 0, "churn period must be positive");
+        let mut it = every;
+        while it < self.total_iterations {
+            self.churn.push(ChurnEvent { at_iteration: it, inserts, deletes });
+            it += every;
+        }
+        self.name = format!("{} +churn(+{inserts}/-{deletes} every {every})", self.name);
+        self
+    }
+
+    /// The streaming benchmark scenario: a paper ScaleOut with churn
+    /// batches interleaved between the scale events.
+    pub fn interleaved(
+        k0: usize,
+        steps: usize,
+        period: u32,
+        inserts: u32,
+        deletes: u32,
+    ) -> Scenario {
+        Scenario::scale_out(k0, steps, period).with_churn(period.max(2) / 2, inserts, deletes)
+    }
+
+    /// Scale event scheduled at iteration `it`, if any.
     pub fn event_at(&self, it: u32) -> Option<&ScaleEvent> {
         self.events.iter().find(|e| e.at_iteration == it)
+    }
+
+    /// Churn event scheduled at iteration `it`, if any.
+    pub fn churn_at(&self, it: u32) -> Option<&ChurnEvent> {
+        self.churn.iter().find(|e| e.at_iteration == it)
+    }
+
+    /// Total scripted insertions.
+    pub fn total_inserts(&self) -> u64 {
+        self.churn.iter().map(|c| c.inserts as u64).sum()
+    }
+
+    /// Total scripted deletions.
+    pub fn total_deletes(&self) -> u64 {
+        self.churn.iter().map(|c| c.deletes as u64).sum()
     }
 }
 
@@ -78,6 +143,7 @@ mod tests {
         assert_eq!(s.events[0], ScaleEvent { at_iteration: 10, target_k: 27 });
         assert_eq!(s.events[9], ScaleEvent { at_iteration: 100, target_k: 36 });
         assert_eq!(s.total_iterations, 110);
+        assert!(s.churn.is_empty());
     }
 
     #[test]
@@ -92,5 +158,30 @@ mod tests {
         let s = Scenario::scale_out(4, 2, 5);
         assert!(s.event_at(5).is_some());
         assert!(s.event_at(6).is_none());
+    }
+
+    #[test]
+    fn churn_schedule_interleaves_with_scaling() {
+        let s = Scenario::interleaved(4, 2, 6, 50, 10);
+        // scale at 6 and 12; churn every 3 → 3, 6, 9, 12, 15
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.churn.len(), 5);
+        assert_eq!(
+            s.churn_at(3),
+            Some(&ChurnEvent { at_iteration: 3, inserts: 50, deletes: 10 })
+        );
+        // iteration 6 hosts both kinds of events
+        assert!(s.event_at(6).is_some() && s.churn_at(6).is_some());
+        assert_eq!(s.total_inserts(), 250);
+        assert_eq!(s.total_deletes(), 50);
+    }
+
+    #[test]
+    fn with_churn_composes_with_any_scenario() {
+        let s = Scenario::scale_in(6, 2, 4).with_churn(4, 7, 3);
+        assert_eq!(s.churn.len(), 2); // iterations 4 and 8 (< 12)
+        assert!(s.name.contains("churn"));
+        assert!(s.churn_at(4).is_some());
+        assert!(s.churn_at(5).is_none());
     }
 }

@@ -1,0 +1,138 @@
+//! [`StagedAssignment`] — the streaming counterpart of
+//! [`crate::partition::CepView`]: a [`PartitionAssignment`] over
+//! `base + staging − tombstones` made of two integers of chunk metadata
+//! plus a borrowed (budget-bounded) tombstone list. Every owner query is
+//! O(1), liveness is O(log t), per-partition live sizes are O(k log t) —
+//! no O(m) per-edge vector exists anywhere on the streaming path.
+
+use crate::partition::cep::Cep;
+use crate::partition::PartitionAssignment;
+use crate::{EdgeId, PartitionId};
+use std::ops::Range;
+
+/// Chunk-based assignment over a staged physical edge-id space.
+///
+/// Physical ids `0..num_edges()` are sliced by a [`Cep`]; tombstoned ids
+/// keep their *nominal* chunk owner (so plans and debug cross-checks can
+/// reason about them) but are reported dead via
+/// [`PartitionAssignment::is_live`], and every consumer that builds
+/// per-partition state skips them. Live balance therefore deviates from
+/// CEP's perfect physical balance by at most the tombstone fraction, which
+/// the compaction budget bounds.
+#[derive(Clone, Copy, Debug)]
+pub struct StagedAssignment<'a> {
+    cep: Cep,
+    tombstones: &'a [EdgeId],
+}
+
+impl<'a> StagedAssignment<'a> {
+    /// View `cep` with the given sorted tombstone list.
+    pub fn new(cep: Cep, tombstones: &'a [EdgeId]) -> StagedAssignment<'a> {
+        debug_assert!(tombstones.windows(2).all(|w| w[0] < w[1]), "tombstones unsorted");
+        if let Some(&t) = tombstones.last() {
+            debug_assert!(t < cep.num_edges(), "tombstone {t} beyond physical id space");
+        }
+        StagedAssignment { cep, tombstones }
+    }
+
+    /// The underlying chunk metadata.
+    pub fn cep(&self) -> &Cep {
+        &self.cep
+    }
+
+    /// The sorted tombstone list.
+    pub fn tombstones(&self) -> &[EdgeId] {
+        self.tombstones
+    }
+
+    /// Physical edge-id range of partition `p` — O(1). May contain dead
+    /// ids; pair with [`Self::dead_slice`] to walk only live ids.
+    pub fn range(&self, p: PartitionId) -> Range<EdgeId> {
+        self.cep.range(p)
+    }
+
+    /// The tombstones falling inside `r`, as a sub-slice — O(log t).
+    pub fn dead_slice(&self, r: Range<EdgeId>) -> &'a [EdgeId] {
+        let a = self.tombstones.partition_point(|&d| d < r.start);
+        let b = self.tombstones.partition_point(|&d| d < r.end);
+        &self.tombstones[a..b]
+    }
+
+    /// Dead ids inside `r` — O(log t).
+    pub fn dead_in(&self, r: Range<EdgeId>) -> u64 {
+        self.dead_slice(r).len() as u64
+    }
+
+    /// Live edges per partition — O(k log t).
+    pub fn live_sizes(&self) -> Vec<u64> {
+        (0..self.k() as PartitionId)
+            .map(|p| self.cep.width(p) - self.dead_in(self.cep.range(p)))
+            .collect()
+    }
+}
+
+impl PartitionAssignment for StagedAssignment<'_> {
+    fn k(&self) -> usize {
+        self.cep.k()
+    }
+
+    fn num_edges(&self) -> u64 {
+        self.cep.num_edges()
+    }
+
+    #[inline]
+    fn partition_of(&self, i: EdgeId) -> PartitionId {
+        self.cep.partition_of(i)
+    }
+
+    #[inline]
+    fn is_live(&self, i: EdgeId) -> bool {
+        self.tombstones.binary_search(&i).is_err()
+    }
+
+    fn num_live_edges(&self) -> u64 {
+        self.cep.num_edges() - self.tombstones.len() as u64
+    }
+
+    /// Live sizes — what balance metrics should price for a staged state.
+    fn sizes(&self) -> Vec<u64> {
+        self.live_sizes()
+    }
+
+    /// Physical chunk ranges (holes are dead ids; check
+    /// [`PartitionAssignment::is_live`] when walking them).
+    fn as_chunks(&self) -> Option<Vec<Range<EdgeId>>> {
+        Some((0..self.k() as PartitionId).map(|p| self.cep.range(p)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn liveness_and_sizes_respect_tombstones() {
+        let dead = vec![0u64, 5, 6, 13];
+        let a = StagedAssignment::new(Cep::new(14, 4), &dead);
+        // paper Fig 3 widths: 3,3,4,4 — dead: id0 (p0), 5 (p1), 6 (p2), 13 (p3)
+        assert_eq!(a.live_sizes(), vec![2, 2, 3, 3]);
+        assert_eq!(a.num_live_edges(), 10);
+        assert_eq!(a.num_edges(), 14);
+        assert!(!a.is_live(5));
+        assert!(a.is_live(4));
+        assert_eq!(a.dead_slice(3..7), &[5, 6]);
+        assert_eq!(a.dead_in(0..14), 4);
+    }
+
+    #[test]
+    fn no_tombstones_behaves_like_cep_view() {
+        let a = StagedAssignment::new(Cep::new(137, 10), &[]);
+        let v = crate::partition::CepView::new(Cep::new(137, 10));
+        assert_eq!(a.sizes(), v.sizes());
+        assert_eq!(a.as_chunks(), v.as_chunks());
+        for i in 0..137u64 {
+            assert_eq!(a.partition_of(i), v.partition_of(i));
+            assert!(a.is_live(i));
+        }
+    }
+}

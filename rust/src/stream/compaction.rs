@@ -1,0 +1,54 @@
+//! Compaction policy: when is the staging/tombstone quality budget spent?
+//!
+//! Staged edges carry no GEO locality guarantee and tombstones skew live
+//! balance, so quality decays as the churn fraction grows. The policy
+//! bounds that decay: once `(staged + dead) / physical` exceeds `budget`,
+//! [`crate::stream::StagedGraph::compact`] folds everything back through a
+//! fresh GEO pass — amortizing the expensive preprocessing over many cheap
+//! batches, exactly as the paper's §7 sketches for the dynamic case.
+
+/// Fold-back trigger for a staged graph.
+#[derive(Clone, Copy, Debug)]
+pub struct CompactionPolicy {
+    /// maximum `(staging + tombstones) / physical` before folding
+    /// (default 10%, mirroring `IncrementalOrder`'s staging budget)
+    pub budget: f64,
+    /// never compact below this physical size (GEO on tiny graphs is
+    /// cheaper than the bookkeeping it saves)
+    pub min_physical: usize,
+}
+
+impl Default for CompactionPolicy {
+    fn default() -> Self {
+        CompactionPolicy { budget: 0.10, min_physical: 64 }
+    }
+}
+
+impl CompactionPolicy {
+    /// Policy with the given budget and the default size floor.
+    pub fn with_budget(budget: f64) -> CompactionPolicy {
+        CompactionPolicy { budget, ..Default::default() }
+    }
+
+    /// Is the budget spent for the given staged state?
+    pub fn should_compact(&self, staged: usize, dead: usize, physical: usize) -> bool {
+        physical >= self.min_physical
+            && (staged + dead) as f64 / physical.max(1) as f64 > self.budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_gates_compaction() {
+        let p = CompactionPolicy::default();
+        assert!(!p.should_compact(5, 4, 100));
+        assert!(p.should_compact(7, 4, 100));
+        // below the floor nothing triggers
+        assert!(!p.should_compact(20, 20, 50));
+        let tight = CompactionPolicy::with_budget(0.05);
+        assert!(tight.should_compact(6, 0, 100));
+    }
+}

@@ -1,0 +1,43 @@
+//! **Streaming graph churn** — the paper's §7 future-work item as a
+//! subsystem: batched edge mutations over a running, partitioned graph.
+//!
+//! The static pipeline (GEO → CEP → plans) assumes a frozen edge list.
+//! This module makes the list *evolve* while everything downstream keeps
+//! working:
+//!
+//! * [`MutationBatch`] — the ingest unit: edge insertions by endpoint
+//!   pair, deletions by physical edge id (tombstones).
+//! * [`StagedGraph`] — a GEO-ordered base plus a **locality-aware staging
+//!   tail** (insertions are placed through the GEO δ-window machinery so
+//!   same-neighborhood edges land contiguously, not appended blind) plus a
+//!   tombstone set; physical edge ids stay stable between compactions.
+//! * [`StagedAssignment`] — [`crate::partition::PartitionAssignment`]
+//!   over `base + staging − tombstones`: O(1) owner queries from chunk
+//!   metadata, liveness from the budget-bounded tombstone list — never an
+//!   O(m) per-edge vector.
+//! * [`ChurnPlan`] — the executable delta of a batch or rescale: retire /
+//!   move / append range operations, O(k + batch) of them (tombstoned ids
+//!   ride along inside move ranges, so rescales stay ≤ k + k′ + 1 moves),
+//!   executed incrementally by [`crate::engine::Engine::apply_churn`].
+//! * [`CompactionPolicy`] — when the staging+tombstone quality budget is
+//!   spent, [`StagedGraph::compact`] folds everything back through a
+//!   fresh GEO pass, amortizing the expensive preprocessing.
+//! * [`quality`] — RF / EB / VB of the live state without materializing
+//!   anything.
+//!
+//! The [`crate::coordinator`] drives this end to end: churn batches
+//! between application iterations, delta plans into the engine, rescales
+//! interleaved with churn, compaction when the budget trips.
+
+pub mod assignment;
+pub mod compaction;
+pub mod mutation;
+pub mod plan;
+pub mod quality;
+pub mod staged;
+
+pub use assignment::StagedAssignment;
+pub use compaction::CompactionPolicy;
+pub use mutation::{BatchOutcome, EdgeMutation, MutationBatch};
+pub use plan::ChurnPlan;
+pub use staged::StagedGraph;

@@ -1,0 +1,136 @@
+//! Edge mutations and ingest batches.
+//!
+//! A [`MutationBatch`] is the unit of churn the streaming subsystem
+//! ingests: a mixed, ordered sequence of edge **insertions** (by endpoint
+//! pair) and **deletions** (by physical edge id — the id space CEP slices,
+//! so a deletion is a tombstone over an ordered-list position). Batches are
+//! applied atomically by [`crate::stream::StagedGraph::apply_batch`], which
+//! reports per-batch accounting through [`BatchOutcome`].
+
+use crate::{EdgeId, VertexId};
+
+/// One edge mutation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeMutation {
+    /// Insert the undirected edge `{u, v}` (new vertex ids are admitted —
+    /// the vertex id space grows to cover them).
+    Insert {
+        /// one endpoint
+        u: VertexId,
+        /// the other endpoint
+        v: VertexId,
+    },
+    /// Delete the edge with physical id `edge` (tombstoned in place; the
+    /// id is reclaimed at the next compaction).
+    Delete {
+        /// physical edge id in the staged ordering
+        edge: EdgeId,
+    },
+}
+
+/// An ordered batch of edge mutations.
+///
+/// Mutations are applied in push order, so a batch may delete an existing
+/// edge `{u, v}` and then re-insert it. Deletions can only reference edges
+/// that existed *before* the batch (ids of same-batch insertions are
+/// assigned during ingest and are not yet known to the producer).
+#[derive(Clone, Debug, Default)]
+pub struct MutationBatch {
+    muts: Vec<EdgeMutation>,
+    inserts: usize,
+    deletes: usize,
+}
+
+impl MutationBatch {
+    /// Empty batch.
+    pub fn new() -> MutationBatch {
+        MutationBatch::default()
+    }
+
+    /// Queue an insertion of `{u, v}`.
+    pub fn insert(&mut self, u: VertexId, v: VertexId) {
+        self.muts.push(EdgeMutation::Insert { u, v });
+        self.inserts += 1;
+    }
+
+    /// Queue a deletion of physical edge id `edge`.
+    pub fn delete(&mut self, edge: EdgeId) {
+        self.muts.push(EdgeMutation::Delete { edge });
+        self.deletes += 1;
+    }
+
+    /// Total queued mutations.
+    pub fn len(&self) -> usize {
+        self.muts.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.muts.is_empty()
+    }
+
+    /// Queued insertions.
+    pub fn num_inserts(&self) -> usize {
+        self.inserts
+    }
+
+    /// Queued deletions.
+    pub fn num_deletes(&self) -> usize {
+        self.deletes
+    }
+
+    /// Iterate mutations in application order.
+    pub fn iter(&self) -> std::slice::Iter<'_, EdgeMutation> {
+        self.muts.iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a MutationBatch {
+    type Item = &'a EdgeMutation;
+    type IntoIter = std::slice::Iter<'a, EdgeMutation>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.muts.iter()
+    }
+}
+
+/// Per-batch ingest accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchOutcome {
+    /// insertions staged (after dedup against the live edge set)
+    pub inserted: u32,
+    /// insertions skipped: self loops or edges already live
+    pub skipped_inserts: u32,
+    /// deletions applied (edge was live)
+    pub deleted: u32,
+    /// deletions skipped: id out of range, already dead, or repeated
+    pub skipped_deletes: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_counts_kinds() {
+        let mut b = MutationBatch::new();
+        b.insert(0, 1);
+        b.insert(1, 2);
+        b.delete(7);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.num_inserts(), 2);
+        assert_eq!(b.num_deletes(), 1);
+        assert!(!b.is_empty());
+        assert_eq!(
+            b.iter().next(),
+            Some(&EdgeMutation::Insert { u: 0, v: 1 })
+        );
+    }
+
+    #[test]
+    fn empty_batch() {
+        let b = MutationBatch::new();
+        assert!(b.is_empty());
+        assert_eq!(b.iter().count(), 0);
+    }
+}

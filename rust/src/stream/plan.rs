@@ -1,0 +1,301 @@
+//! **Churn plans** — the executable delta between two staged CEP states.
+//!
+//! A churn batch (and/or a rescale) transitions the streaming assignment
+//! from `(Cep over P₀ physical ids, dead₀)` to `(Cep over P₁ ≥ P₀, dead₁)`.
+//! The difference decomposes into three kinds of contiguous edge-id range
+//! operations, all derived from chunk metadata alone — never from a
+//! per-edge assignment vector:
+//!
+//! * **retires** — newly tombstoned ranges: their owner keeps the ids
+//!   (dead ids stay with their nominal chunk, so later moves remain whole
+//!   ranges) but must drop the edges from its local tables;
+//! * **moves** — pre-existing ids whose chunk owner shifted: the
+//!   O(k + k′) boundary sweep of [`MigrationPlan::between_ceps`]
+//!   generalized to a grown id space (chunk boundaries shift by at most
+//!   the appended count). Dead ids ride along inside their range — no
+//!   splitting, so the move count is ≤ k + k′ + 1 *always*;
+//! * **appends** — the freshly staged tail ids `P₀..P₁` enter their new
+//!   chunk owners (O(k) ranges).
+//!
+//! The plan size is O(k + k′ + |batch deletions|) ranges — independent of
+//! |E| and of the accumulated tombstone count.
+
+use crate::partition::cep::{chunk_start, Cep};
+use crate::scaling::migration::MigrationPlan;
+use crate::{EdgeId, PartitionId};
+use std::ops::Range;
+
+/// Executable delta plan for one churn batch or streaming rescale.
+#[derive(Clone, Debug, Default)]
+pub struct ChurnPlan {
+    /// newly tombstoned ranges and their (pre-batch) owner, ascending —
+    /// the owner keeps the ids but drops the edges from its local tables
+    pub retires: Vec<(PartitionId, Range<EdgeId>)>,
+    /// rebalancing moves among pre-existing physical ids (inter-worker
+    /// traffic — the only part a migration network prices); dead ids ride
+    /// along inside their range, so this is ≤ k + k′ + 1 moves always
+    pub moves: MigrationPlan,
+    /// freshly staged ranges and the partition admitting them, ascending
+    pub appends: Vec<(PartitionId, Range<EdgeId>)>,
+}
+
+impl ChurnPlan {
+    /// Derive the plan between staged states. `old`/`new` are the chunk
+    /// layouts before and after the batch (`new.num_edges() ≥
+    /// old.num_edges()`; the physical id space only shrinks at a
+    /// compaction, which rebuilds instead of planning). `newly_dead` are
+    /// the ids the batch tombstones, sorted ascending.
+    pub fn derive(old: &Cep, new: &Cep, newly_dead: &[EdgeId]) -> ChurnPlan {
+        let p0 = old.num_edges();
+        let p1 = new.num_edges();
+        assert!(p1 >= p0, "physical id space shrank {p0} -> {p1}: compact instead");
+        debug_assert!(newly_dead.windows(2).all(|w| w[0] < w[1]));
+
+        // --- retires: coalesce consecutive ids with a common old owner
+        let mut retires: Vec<(PartitionId, Range<EdgeId>)> = Vec::new();
+        for &id in newly_dead {
+            assert!(id < p0, "tombstoned id {id} out of range (P0={p0})");
+            let src = old.partition_of(id);
+            match retires.last_mut() {
+                Some((s, r)) if *s == src && r.end == id => r.end = id + 1,
+                _ => retires.push((src, id..id + 1)),
+            }
+        }
+
+        // --- moves: merged boundary sweep over 0..P0 (Theorem 2's
+        //     structure, generalized to P1 ≥ P0)
+        let mut moves = MigrationPlan::default();
+        if p0 > 0 {
+            let mut cuts: Vec<u64> = Vec::with_capacity(old.k() + new.k() + 2);
+            for p in 0..=old.k() as u64 {
+                cuts.push(chunk_start(p0, old.k() as u64, p));
+            }
+            for p in 0..=new.k() as u64 {
+                let s = chunk_start(p1, new.k() as u64, p);
+                if s >= p0 {
+                    break; // starts are nondecreasing in p
+                }
+                cuts.push(s);
+            }
+            cuts.push(p0);
+            cuts.sort_unstable();
+            cuts.dedup();
+            for w in cuts.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                if lo >= p0 {
+                    break;
+                }
+                let src = old.partition_of(lo);
+                let dst = new.partition_of(lo);
+                if src != dst {
+                    moves.push_range(src, dst, lo..hi);
+                }
+            }
+        }
+
+        // --- appends: the new tail by its new-chunk owner
+        let mut appends: Vec<(PartitionId, Range<EdgeId>)> = Vec::new();
+        let mut lo = p0;
+        while lo < p1 {
+            let dst = new.partition_of(lo);
+            let hi = new.range(dst).end.min(p1);
+            appends.push((dst, lo..hi));
+            lo = hi;
+        }
+
+        ChurnPlan { retires, moves, appends }
+    }
+
+    /// Edges leaving ownership (newly tombstoned).
+    pub fn retired_edges(&self) -> u64 {
+        self.retires.iter().map(|(_, r)| r.end - r.start).sum()
+    }
+
+    /// Edges changing owner among the surviving pre-existing ids.
+    pub fn moved_edges(&self) -> u64 {
+        self.moves.migrated_edges()
+    }
+
+    /// Freshly staged edges entering ownership.
+    pub fn appended_edges(&self) -> u64 {
+        self.appends.iter().map(|(_, r)| r.end - r.start).sum()
+    }
+
+    /// Total range operations — the plan's *size*. Bounded by
+    /// O(k + k′ + batch deletions), never O(|E|).
+    pub fn range_ops(&self) -> usize {
+        self.retires.len() + self.moves.num_moves() + self.appends.len()
+    }
+
+    /// True when the plan does nothing.
+    pub fn is_empty(&self) -> bool {
+        self.retires.is_empty() && self.moves.is_empty() && self.appends.is_empty()
+    }
+}
+
+/// Merge two sorted, disjoint id lists.
+pub(crate) fn merge_sorted(a: &[EdgeId], b: &[EdgeId]) -> Vec<EdgeId> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() || j < b.len() {
+        match (a.get(i), b.get(j)) {
+            (Some(&x), Some(&y)) if x < y => {
+                out.push(x);
+                i += 1;
+            }
+            (Some(_), Some(&y)) => {
+                out.push(y);
+                j += 1;
+            }
+            (Some(&x), None) => {
+                out.push(x);
+                i += 1;
+            }
+            (None, Some(&y)) => {
+                out.push(y);
+                j += 1;
+            }
+            (None, None) => unreachable!(),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    /// Apply a churn plan to a naive per-id *nominal ownership* model and
+    /// verify it transitions exactly `old → new` (the delta-plan
+    /// exactness law): moves + appends reproduce the new chunk owner of
+    /// every physical id, and retires name exactly the newly dead ids
+    /// under their pre-batch owner.
+    fn assert_plan_exact(plan: &ChurnPlan, old: &Cep, new: &Cep, newly_dead: &[EdgeId]) {
+        let p0 = old.num_edges();
+        let p1 = new.num_edges();
+        let mut model: Vec<PartitionId> = (0..p0).map(|i| old.partition_of(i)).collect();
+        model.resize(p1 as usize, PartitionId::MAX);
+        let mut retired: Vec<EdgeId> = Vec::new();
+        for (src, r) in &plan.retires {
+            for i in r.clone() {
+                assert_eq!(model[i as usize], *src, "retire of {i} names wrong owner");
+                retired.push(i);
+            }
+        }
+        retired.sort_unstable();
+        assert_eq!(retired, newly_dead, "retires must cover exactly the batch deletions");
+        for mv in &plan.moves.moves {
+            assert_ne!(mv.src, mv.dst);
+            for i in mv.edges.clone() {
+                assert_eq!(model[i as usize], mv.src, "move of {i} from wrong owner");
+                model[i as usize] = mv.dst;
+            }
+        }
+        for (dst, r) in &plan.appends {
+            for i in r.clone() {
+                assert_eq!(model[i as usize], PartitionId::MAX, "append over occupied {i}");
+                model[i as usize] = *dst;
+            }
+        }
+        for i in 0..p1 {
+            assert_eq!(model[i as usize], new.partition_of(i), "id {i} diverges after plan");
+        }
+    }
+
+    fn random_dead(rng: &mut Rng, m: u64, frac: f64) -> Vec<EdgeId> {
+        let want = (m as f64 * frac) as usize;
+        let mut out: Vec<EdgeId> = Vec::new();
+        while out.len() < want {
+            let id = rng.below(m);
+            if !out.contains(&id) {
+                out.push(id);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn plan_is_exact_for_random_batches() {
+        check(0xC4A9, 40, |rng| {
+            let p0 = 200 + rng.below(4000);
+            let appended = rng.below(p0 / 4);
+            let p1 = p0 + appended;
+            let k0 = 1 + rng.below_usize(24);
+            let k1 = if rng.chance(0.3) { 1 + rng.below_usize(24) } else { k0 };
+            let old = Cep::new(p0 as usize, k0);
+            let new = Cep::new(p1 as usize, k1);
+            let newly_dead = random_dead(rng, p0, 0.03 * rng.f64());
+            let plan = ChurnPlan::derive(&old, &new, &newly_dead);
+            assert_plan_exact(&plan, &old, &new, &newly_dead);
+            // size law: O(k + k' + batch deletions), never O(m) — and the
+            // rebalancing moves alone never exceed the chunk-boundary count
+            assert!(
+                plan.moves.num_moves() <= k0 + k1 + 1,
+                "p0={p0} p1={p1} {k0}->{k1}: {} moves not O(k)",
+                plan.moves.num_moves()
+            );
+            let bound = (k0 + k1 + 1) + newly_dead.len() + (k1 + 1);
+            assert!(
+                plan.range_ops() <= bound,
+                "p0={p0} p1={p1} {k0}->{k1}: {} range ops > bound {bound}",
+                plan.range_ops()
+            );
+        });
+    }
+
+    #[test]
+    fn pure_append_plan_for_same_k() {
+        // appending a tail shifts every chunk boundary by < the appended
+        // count, so the delta stays small
+        let old = Cep::new(1000, 4);
+        let new = Cep::new(1010, 4);
+        let plan = ChurnPlan::derive(&old, &new, &[]);
+        assert!(plan.retires.is_empty());
+        assert_eq!(plan.appended_edges(), 10);
+        assert_plan_exact(&plan, &old, &new, &[]);
+        assert!(plan.moved_edges() <= 10 * 4);
+        assert!(plan.range_ops() <= 4 + 4 + 1);
+    }
+
+    #[test]
+    fn rescale_only_plan_matches_between_ceps() {
+        let old = Cep::new(5000, 8);
+        let new = Cep::new(5000, 11);
+        let plan = ChurnPlan::derive(&old, &new, &[]);
+        assert!(plan.retires.is_empty() && plan.appends.is_empty());
+        let reference = MigrationPlan::between_ceps(&old, &new);
+        assert_eq!(plan.moves.moves, reference.moves);
+    }
+
+    #[test]
+    fn pure_deletion_plan_only_retires() {
+        let c = Cep::new(777, 6);
+        let dead = vec![3, 4, 5, 99, 500];
+        let plan = ChurnPlan::derive(&c, &c, &dead);
+        assert!(plan.moves.is_empty() && plan.appends.is_empty());
+        assert_eq!(plan.retired_edges(), 5);
+        // 3,4,5 coalesce into one retire range (same chunk owner)
+        assert_eq!(plan.retires.len(), 3);
+        assert_plan_exact(&plan, &c, &c, &dead);
+    }
+
+    #[test]
+    fn identical_states_yield_empty_plan() {
+        let c = Cep::new(777, 6);
+        let plan = ChurnPlan::derive(&c, &c, &[]);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn empty_old_space_is_pure_append() {
+        let old = Cep::new(0, 3);
+        let new = Cep::new(10, 3);
+        let plan = ChurnPlan::derive(&old, &new, &[]);
+        assert!(plan.retires.is_empty() && plan.moves.is_empty());
+        assert_eq!(plan.appended_edges(), 10);
+        assert_plan_exact(&plan, &old, &new, &[]);
+    }
+}

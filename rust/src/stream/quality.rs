@@ -1,0 +1,128 @@
+//! Quality metrics over the **live** staged state — RF / EB / VB computed
+//! from chunk metadata plus the tombstone list, mirroring
+//! [`crate::partition::quality`] but skipping dead ids. Epoch stamping
+//! keeps the sweep O(|E|) time and O(|V|) memory; no per-edge assignment
+//! vector is ever materialized.
+
+use super::assignment::StagedAssignment;
+use super::staged::StagedGraph;
+use crate::graph::EdgeSource;
+use crate::partition::quality::{balance, Quality};
+use crate::partition::PartitionAssignment;
+use crate::PartitionId;
+
+/// Distinct live vertices per partition `|V(E_p)|`.
+pub fn live_vertex_counts(sg: &StagedGraph, assign: &StagedAssignment<'_>) -> Vec<u64> {
+    let n = sg.num_vertices();
+    let k = assign.k();
+    let mut stamp = vec![0u32; n];
+    let mut counts = vec![0u64; k];
+    for p in 0..k as PartitionId {
+        let epoch = p + 1;
+        let r = assign.range(p);
+        let dead = assign.dead_slice(r.clone());
+        let mut t = 0usize;
+        for id in r {
+            if t < dead.len() && dead[t] == id {
+                t += 1;
+                continue;
+            }
+            let e = sg.edge(id);
+            if stamp[e.u as usize] != epoch {
+                stamp[e.u as usize] = epoch;
+                counts[p as usize] += 1;
+            }
+            if stamp[e.v as usize] != epoch {
+                stamp[e.v as usize] = epoch;
+                counts[p as usize] += 1;
+            }
+        }
+    }
+    counts
+}
+
+/// Replication factor of the live staged state (Def. 1; best = 1.0).
+pub fn live_replication_factor(sg: &StagedGraph, assign: &StagedAssignment<'_>) -> f64 {
+    live_vertex_counts(sg, assign).iter().sum::<u64>() as f64 / sg.num_vertices().max(1) as f64
+}
+
+/// RF / EB / VB of the live staged state in one sweep.
+pub fn live_quality(sg: &StagedGraph, assign: &StagedAssignment<'_>) -> Quality {
+    let counts = live_vertex_counts(sg, assign);
+    Quality {
+        rf: counts.iter().sum::<u64>() as f64 / sg.num_vertices().max(1) as f64,
+        eb: balance(&assign.live_sizes()),
+        vb: balance(&counts),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+    use crate::ordering::geo::GeoConfig;
+    use crate::partition::cep::Cep;
+    use crate::partition::quality::replication_factor_chunked;
+    use crate::stream::mutation::MutationBatch;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> GeoConfig {
+        GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 1 }
+    }
+
+    /// Live metrics over a churned state must agree with the generic
+    /// chunked metrics over the materialized live graph — the staged path
+    /// just never builds that graph.
+    #[test]
+    fn live_metrics_match_materialized_oracle() {
+        let g = erdos_renyi(100, 500, 11);
+        let mut sg = StagedGraph::new(g, cfg());
+        let mut rng = Rng::new(4);
+        let mut batch = MutationBatch::new();
+        for _ in 0..25 {
+            batch.insert(rng.below(100) as u32, rng.below(100) as u32);
+        }
+        for _ in 0..12 {
+            batch.delete(rng.below(500));
+        }
+        let k = 6;
+        sg.apply_batch(&batch, k);
+        let assign = sg.assignment(k);
+        let rf_live = live_replication_factor(&sg, &assign);
+
+        // oracle: RF of the live graph under the same physical chunking is
+        // NOT directly comparable (ids shift when holes close), so compare
+        // against a per-id scan of the staged state itself
+        let mut oracle = vec![std::collections::HashSet::new(); k];
+        for id in 0..sg.physical_edges() as u64 {
+            if sg.is_live(id) {
+                let e = sg.edge(id);
+                let p = crate::partition::PartitionAssignment::partition_of(&assign, id);
+                oracle[p as usize].insert(e.u);
+                oracle[p as usize].insert(e.v);
+            }
+        }
+        let oracle_counts: Vec<u64> = oracle.iter().map(|s| s.len() as u64).collect();
+        assert_eq!(live_vertex_counts(&sg, &assign), oracle_counts);
+        let oracle_rf =
+            oracle_counts.iter().sum::<u64>() as f64 / sg.num_vertices() as f64;
+        assert!((rf_live - oracle_rf).abs() < 1e-12);
+
+        let q = live_quality(&sg, &assign);
+        assert!((q.rf - oracle_rf).abs() < 1e-12);
+        assert!(q.eb >= 1.0 && q.vb >= 1.0);
+    }
+
+    /// With no churn the live metrics collapse to the plain chunked RF.
+    #[test]
+    fn pristine_state_matches_chunked_rf() {
+        let g = erdos_renyi(90, 420, 2);
+        let sg = StagedGraph::new(g, cfg());
+        let k = 5;
+        let assign = sg.assignment(k);
+        let rf_live = live_replication_factor(&sg, &assign);
+        let ordered = sg.as_graph();
+        let rf_ref = replication_factor_chunked(&ordered, &Cep::new(ordered.num_edges(), k));
+        assert!((rf_live - rf_ref).abs() < 1e-12);
+    }
+}

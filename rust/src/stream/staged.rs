@@ -1,0 +1,609 @@
+//! [`StagedGraph`] — the evolving-graph substrate: a GEO-ordered base edge
+//! list, a locality-aware staging tail for insertions, and a tombstone set
+//! for deletions.
+//!
+//! Physical edge ids are positions in `base ++ staging`; they are stable
+//! between compactions, so CEP chunk arithmetic, churn plans and the
+//! engine's per-partition edge-id sets all speak the same id language.
+//! Deletions tombstone an id in place (the hole is reclaimed at the next
+//! compaction); insertions are appended to the staging tail in an order
+//! chosen by the GEO δ-window machinery so that same-neighborhood edges
+//! land contiguously instead of interleaving at random.
+
+use super::assignment::StagedAssignment;
+use super::compaction::CompactionPolicy;
+use super::mutation::{BatchOutcome, EdgeMutation, MutationBatch};
+use super::plan::{merge_sorted, ChurnPlan};
+use crate::graph::{io, Csr, Edge, EdgeList, EdgeSource, Graph};
+use crate::ordering::geo::{self, GeoConfig};
+use crate::ordering::window::TailWindow;
+use crate::partition::cep::Cep;
+use crate::{EdgeId, Result, VertexId};
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+
+/// An ordered edge list under streaming insertions and deletions.
+pub struct StagedGraph {
+    /// GEO-ordered base (physical ids `0..base.num_edges()`)
+    base: Graph,
+    /// staged insertions since the last compaction (physical ids
+    /// `base.num_edges()..physical_edges()`)
+    staging: Vec<Edge>,
+    /// sorted physical ids of deleted edges (base or staged)
+    tombstones: Vec<EdgeId>,
+    /// vertex id space (monotone — never shrinks while the engine runs)
+    n: usize,
+    /// live degree per vertex
+    deg: Vec<u32>,
+    /// canonical endpoint pair → physical id, live staged edges only
+    staged_index: HashMap<(VertexId, VertexId), EdgeId>,
+    cfg: GeoConfig,
+    policy: CompactionPolicy,
+    compactions: u32,
+    /// permutation of the most recent GEO pass (`perm[new] = old id` in
+    /// the edge list that pass consumed) — persisted by snapshots
+    last_perm: Vec<EdgeId>,
+}
+
+impl StagedGraph {
+    /// Take ownership of a graph and GEO-order it once as the base.
+    pub fn new(g: Graph, cfg: GeoConfig) -> StagedGraph {
+        let perm = geo::order(&g, &cfg).into_perm();
+        let base = g.permute_edges(&perm);
+        drop(g);
+        let n = base.num_vertices();
+        let deg = (0..n as VertexId).map(|v| base.degree(v) as u32).collect();
+        StagedGraph {
+            base,
+            staging: Vec::new(),
+            tombstones: Vec::new(),
+            n,
+            deg,
+            staged_index: HashMap::new(),
+            cfg,
+            policy: CompactionPolicy::default(),
+            compactions: 0,
+            last_perm: perm,
+        }
+    }
+
+    /// Replace the compaction policy (builder style).
+    pub fn with_policy(mut self, policy: CompactionPolicy) -> StagedGraph {
+        self.policy = policy;
+        self
+    }
+
+    /// The GEO configuration compactions re-run.
+    pub fn geo_config(&self) -> &GeoConfig {
+        &self.cfg
+    }
+
+    /// The active compaction policy.
+    pub fn policy(&self) -> &CompactionPolicy {
+        &self.policy
+    }
+
+    /// Vertex id space (monotone — grows with inserted vertices, never
+    /// shrinks while an engine is attached).
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Physical edge-id space size (base + staging, tombstones included).
+    pub fn physical_edges(&self) -> usize {
+        self.base.num_edges() + self.staging.len()
+    }
+
+    /// Live edges (physical minus tombstones).
+    pub fn live_edges(&self) -> usize {
+        self.physical_edges() - self.tombstones.len()
+    }
+
+    /// Length of the staging tail.
+    pub fn staging_len(&self) -> usize {
+        self.staging.len()
+    }
+
+    /// Number of tombstoned ids.
+    pub fn tombstone_count(&self) -> usize {
+        self.tombstones.len()
+    }
+
+    /// The sorted tombstone list.
+    pub fn tombstones(&self) -> &[EdgeId] {
+        &self.tombstones
+    }
+
+    /// Staged fraction of the physical space.
+    pub fn staging_fraction(&self) -> f64 {
+        self.staging.len() as f64 / self.physical_edges().max(1) as f64
+    }
+
+    /// Dead fraction of the physical space.
+    pub fn dead_fraction(&self) -> f64 {
+        self.tombstones.len() as f64 / self.physical_edges().max(1) as f64
+    }
+
+    /// Completed compactions.
+    pub fn compactions(&self) -> u32 {
+        self.compactions
+    }
+
+    /// Permutation of the most recent GEO pass (init or compaction):
+    /// `perm[new_position] = old_edge_id` in the list that pass consumed —
+    /// for callers that want to audit or persist the ordering decision
+    /// next to their own artifacts. Note [`Self::save`] does not need it
+    /// (it writes the already-permuted base), so after [`Self::load`] this
+    /// is empty until the next compaction.
+    pub fn last_permutation(&self) -> &[EdgeId] {
+        &self.last_perm
+    }
+
+    /// Is physical id `id` live (in range and not tombstoned)?
+    pub fn is_live(&self, id: EdgeId) -> bool {
+        (id as usize) < self.physical_edges() && self.tombstones.binary_search(&id).is_err()
+    }
+
+    /// Live degree of `v` (0 for ids beyond the known space).
+    pub fn degree(&self, v: VertexId) -> u32 {
+        self.deg.get(v as usize).copied().unwrap_or(0)
+    }
+
+    /// Physical id of the live edge `{u, v}`, if present.
+    pub fn live_edge_of(&self, u: VertexId, v: VertexId) -> Option<EdgeId> {
+        if u == v {
+            return None;
+        }
+        let key = Edge::new(u, v).canonical();
+        if (key.0 as usize) < self.base.num_vertices() {
+            for (w, eid) in self.base.neighbors(key.0) {
+                if w == key.1 && self.tombstones.binary_search(&eid).is_err() {
+                    return Some(eid);
+                }
+            }
+        }
+        self.staged_index.get(&key).copied()
+    }
+
+    /// The chunk assignment of the current physical space at `k`
+    /// partitions — O(1) metadata plus the borrowed tombstone list.
+    pub fn assignment(&self, k: usize) -> StagedAssignment<'_> {
+        StagedAssignment::new(Cep::new(self.physical_edges(), k), &self.tombstones)
+    }
+
+    /// Ingest a mutation batch under `k` partitions: tombstone deletions,
+    /// stage insertions locality-aware, and derive the executable
+    /// [`ChurnPlan`] transitioning `assignment(k)` from its pre-batch to
+    /// its post-batch state. Mutations apply in order, so delete-then-
+    /// reinsert of the same pair works within one batch.
+    pub fn apply_batch(&mut self, batch: &MutationBatch, k: usize) -> (BatchOutcome, ChurnPlan) {
+        let p0 = self.physical_edges();
+        let cep0 = Cep::new(p0, k);
+        let mut out = BatchOutcome::default();
+        let mut newly_dead: HashSet<EdgeId> = HashSet::new();
+        let mut accepted: Vec<Edge> = Vec::new();
+        let mut accepted_keys: HashSet<(VertexId, VertexId)> = HashSet::new();
+
+        for m in batch.iter() {
+            match *m {
+                EdgeMutation::Delete { edge } => {
+                    if (edge as usize) < p0 && self.is_live(edge) && newly_dead.insert(edge) {
+                        let e = self.edge(edge);
+                        self.deg[e.u as usize] -= 1;
+                        self.deg[e.v as usize] -= 1;
+                        if edge as usize >= self.base.num_edges() {
+                            self.staged_index.remove(&e.canonical());
+                        }
+                        out.deleted += 1;
+                    } else {
+                        out.skipped_deletes += 1;
+                    }
+                }
+                EdgeMutation::Insert { u, v } => {
+                    if u == v {
+                        out.skipped_inserts += 1;
+                        continue;
+                    }
+                    let key = Edge::new(u, v).canonical();
+                    let duplicate = accepted_keys.contains(&key)
+                        || match self.live_edge_of(u, v) {
+                            // deleted earlier in this batch ⇒ re-insertable
+                            Some(eid) => !newly_dead.contains(&eid),
+                            None => false,
+                        };
+                    if duplicate {
+                        out.skipped_inserts += 1;
+                    } else {
+                        accepted_keys.insert(key);
+                        accepted.push(Edge::new(u, v));
+                        out.inserted += 1;
+                    }
+                }
+            }
+        }
+
+        let mut nd: Vec<EdgeId> = newly_dead.into_iter().collect();
+        nd.sort_unstable();
+
+        // place accepted insertions near their neighborhoods (the window
+        // seed skips the ids this very batch just tombstoned), then assign
+        // them the next physical ids
+        let placed = self.order_for_locality(&accepted, &nd);
+        for e in &placed {
+            let id = self.physical_edges() as EdgeId;
+            let grow = e.u.max(e.v) as usize + 1;
+            if grow > self.n {
+                self.n = grow;
+                self.deg.resize(self.n, 0);
+            }
+            self.deg[e.u as usize] += 1;
+            self.deg[e.v as usize] += 1;
+            self.staged_index.insert(e.canonical(), id);
+            self.staging.push(*e);
+        }
+
+        let cep1 = Cep::new(self.physical_edges(), k);
+        let plan = ChurnPlan::derive(&cep0, &cep1, &nd);
+        self.tombstones = merge_sorted(&self.tombstones, &nd);
+        (out, plan)
+    }
+
+    /// Derive the plan for a pure rescale `k → new_k` of the current
+    /// state (no mutations): at most `k + k′ + 1` contiguous range moves,
+    /// exactly as a static CEP rescale — tombstoned ids ride along inside
+    /// their range.
+    pub fn rescale_plan(&self, k: usize, new_k: usize) -> ChurnPlan {
+        let cep = Cep::new(self.physical_edges(), k);
+        ChurnPlan::derive(&cep, &cep.rescaled(new_k), &[])
+    }
+
+    /// Is the compaction budget spent?
+    pub fn needs_compaction(&self) -> bool {
+        self.policy.should_compact(
+            self.staging.len(),
+            self.tombstones.len(),
+            self.physical_edges(),
+        )
+    }
+
+    /// Fold tombstones and the staging tail back through a fresh GEO pass:
+    /// the live edges become the new base, the physical id space is
+    /// renumbered, and the staging/tombstone state resets. Engines must be
+    /// rebuilt afterwards (this is the amortized-expensive event the
+    /// policy budgets).
+    pub fn compact(&mut self) {
+        let live = self.live_edge_vec();
+        let el = EdgeList::from_vec(live);
+        let csr = Csr::build(self.n, &el);
+        let g = Graph::from_parts(el, csr);
+        let perm = geo::order(&g, &self.cfg).into_perm();
+        self.base = g.permute_edges(&perm);
+        self.last_perm = perm;
+        self.staging.clear();
+        self.staged_index.clear();
+        self.tombstones.clear();
+        self.compactions += 1;
+    }
+
+    /// Materialize the live graph (physical order, holes removed, vertex
+    /// id space preserved) — for oracle comparisons and fresh-repartition
+    /// baselines; the streaming path itself never calls this.
+    pub fn as_graph(&self) -> Graph {
+        let live = self.live_edge_vec();
+        let el = EdgeList::from_vec(live);
+        let csr = Csr::build(self.n, &el);
+        Graph::from_parts(el, csr)
+    }
+
+    /// Persist as a v2 `.egs` snapshot (physical list + staged-tail length
+    /// + tombstone bitmap).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut phys: Vec<Edge> = Vec::with_capacity(self.physical_edges());
+        phys.extend(self.base.edges().iter().copied());
+        phys.extend(self.staging.iter().copied());
+        let el = EdgeList::from_vec(phys);
+        let csr = Csr::build(self.n, &el);
+        let g = Graph::from_parts(el, csr);
+        io::save_binary_v2(&g, self.staging.len() as u64, &self.tombstones, path)
+    }
+
+    /// Load a `.egs` snapshot (v1 or v2) back into a staged graph. The
+    /// base is **not** re-ordered — the snapshot's order is trusted, so a
+    /// v1 file behaves as an already-ordered base with an empty tail.
+    pub fn load(path: &Path, cfg: GeoConfig) -> Result<StagedGraph> {
+        let snap = io::load_binary_v2(path)?;
+        let n = snap.graph.num_vertices();
+        let physical = snap.graph.num_edges();
+        let staged_len = snap.staged_len as usize;
+        if staged_len > physical {
+            anyhow::bail!("staged tail ({staged_len}) longer than edge list ({physical})");
+        }
+        let base_m = physical - staged_len;
+        let mut base_edges: Vec<Edge> = Vec::with_capacity(base_m);
+        let mut staging: Vec<Edge> = Vec::with_capacity(staged_len);
+        for (i, e) in snap.graph.edges().iter().enumerate() {
+            if i < base_m {
+                base_edges.push(*e);
+            } else {
+                staging.push(*e);
+            }
+        }
+        let el = EdgeList::from_vec(base_edges);
+        let csr = Csr::build(n, &el);
+        let base = Graph::from_parts(el, csr);
+
+        let mut sg = StagedGraph {
+            base,
+            staging,
+            tombstones: snap.tombstones,
+            n,
+            deg: vec![0; n],
+            staged_index: HashMap::new(),
+            cfg,
+            policy: CompactionPolicy::default(),
+            compactions: 0,
+            last_perm: Vec::new(),
+        };
+        for id in 0..sg.physical_edges() as EdgeId {
+            if sg.is_live(id) {
+                let e = sg.edge(id);
+                sg.deg[e.u as usize] += 1;
+                sg.deg[e.v as usize] += 1;
+                if id as usize >= sg.base.num_edges() {
+                    sg.staged_index.insert(e.canonical(), id);
+                }
+            }
+        }
+        Ok(sg)
+    }
+
+    /// Live edges in physical order.
+    fn live_edge_vec(&self) -> Vec<Edge> {
+        let mut live: Vec<Edge> = Vec::with_capacity(self.live_edges());
+        let mut t = 0usize;
+        for id in 0..self.physical_edges() as EdgeId {
+            if t < self.tombstones.len() && self.tombstones[t] == id {
+                t += 1;
+                continue;
+            }
+            live.push(self.edge(id));
+        }
+        live
+    }
+
+    /// Order a batch of accepted insertions so that edges sharing a
+    /// neighborhood land contiguously: a greedy chain over the GEO
+    /// δ-window ([`TailWindow`]), seeded with the current live tail
+    /// (excluding `extra_dead` — ids the in-flight batch just
+    /// tombstoned). Edges adjacent to the window (or to an already-placed
+    /// batch edge) are placed next; when the frontier dries up, the
+    /// earliest unplaced edge seeds a new neighborhood. O(b · d̄) for a
+    /// batch of b edges.
+    fn order_for_locality(&self, inserts: &[Edge], extra_dead: &[EdgeId]) -> Vec<Edge> {
+        let b = inserts.len();
+        if b <= 1 {
+            return inserts.to_vec();
+        }
+        let n_max = inserts
+            .iter()
+            .map(|e| e.u.max(e.v) as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(self.n);
+        let delta = self.cfg.effective_delta(self.live_edges().max(1));
+        let mut window = TailWindow::new(n_max, delta);
+        // seed with the last δ live edges of the current physical list
+        let mut seed: Vec<Edge> = Vec::with_capacity(delta);
+        let mut id = self.physical_edges() as EdgeId;
+        while id > 0 && seed.len() < delta {
+            id -= 1;
+            if self.is_live(id) && extra_dead.binary_search(&id).is_err() {
+                seed.push(self.edge(id));
+            }
+        }
+        for e in seed.iter().rev() {
+            window.push(*e);
+        }
+
+        let mut by_vertex: HashMap<VertexId, Vec<usize>> = HashMap::new();
+        for (i, e) in inserts.iter().enumerate() {
+            by_vertex.entry(e.u).or_default().push(i);
+            by_vertex.entry(e.v).or_default().push(i);
+        }
+        let mut placed = vec![false; b];
+        let mut out: Vec<Edge> = Vec::with_capacity(b);
+        let mut stack: Vec<usize> = Vec::new();
+        let mut cursor = 0usize;
+        while out.len() < b {
+            // pick the next edge: window-adjacent from the frontier stack,
+            // else the earliest unplaced edge seeds a new neighborhood
+            let idx = loop {
+                match stack.pop() {
+                    Some(i) => {
+                        let e = inserts[i];
+                        if !placed[i] && (window.contains(e.u) || window.contains(e.v)) {
+                            break i;
+                        }
+                    }
+                    None => {
+                        while placed[cursor] {
+                            cursor += 1;
+                        }
+                        break cursor;
+                    }
+                }
+            };
+            placed[idx] = true;
+            let e = inserts[idx];
+            out.push(e);
+            window.push(e);
+            for w in [e.u, e.v] {
+                if let Some(list) = by_vertex.get(&w) {
+                    stack.extend(list.iter().copied().filter(|&j| !placed[j]));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl EdgeSource for StagedGraph {
+    fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    fn num_edges(&self) -> usize {
+        self.physical_edges()
+    }
+
+    #[inline]
+    fn edge(&self, id: EdgeId) -> Edge {
+        let base_m = self.base.num_edges();
+        if (id as usize) < base_m {
+            self.base.edges()[id as usize]
+        } else {
+            self.staging[id as usize - base_m]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::erdos_renyi;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> GeoConfig {
+        GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 1 }
+    }
+
+    #[test]
+    fn insert_delete_roundtrip_preserves_live_set() {
+        let g = erdos_renyi(60, 200, 3);
+        let m0 = g.num_edges();
+        let mut sg = StagedGraph::new(g, cfg());
+        assert_eq!(sg.live_edges(), m0);
+
+        let mut batch = MutationBatch::new();
+        batch.delete(5);
+        batch.delete(5); // repeated → skipped
+        batch.insert(0, 1_000); // new vertex
+        let (out, plan) = sg.apply_batch(&batch, 4);
+        assert_eq!(out.deleted, 1);
+        assert_eq!(out.skipped_deletes, 1);
+        assert_eq!(out.inserted, 1);
+        assert_eq!(sg.live_edges(), m0);
+        assert_eq!(sg.physical_edges(), m0 + 1);
+        assert_eq!(sg.num_vertices(), 1_001);
+        assert_eq!(sg.degree(1_000), 1);
+        assert!(!sg.is_live(5));
+        assert!(sg.live_edge_of(0, 1_000).is_some());
+        assert_eq!(plan.retired_edges(), 1);
+        assert_eq!(plan.appended_edges(), 1);
+    }
+
+    #[test]
+    fn duplicate_inserts_are_skipped_but_reinsert_after_delete_works() {
+        let g = GraphBuilder::new().edge(0, 1).edge(1, 2).edge(2, 3).build();
+        let mut sg = StagedGraph::new(g, cfg());
+        let eid = sg.live_edge_of(0, 1).unwrap();
+
+        let mut b1 = MutationBatch::new();
+        b1.insert(1, 0); // duplicate of live base edge (reversed)
+        b1.insert(5, 5); // self loop
+        let (out, _) = sg.apply_batch(&b1, 2);
+        assert_eq!(out.inserted, 0);
+        assert_eq!(out.skipped_inserts, 2);
+
+        let mut b2 = MutationBatch::new();
+        b2.delete(eid);
+        b2.insert(0, 1); // same pair, deleted earlier in this batch
+        let (out, _) = sg.apply_batch(&b2, 2);
+        assert_eq!(out.deleted, 1);
+        assert_eq!(out.inserted, 1);
+        assert_eq!(sg.live_edges(), 3);
+        // the live edge now resolves to the staged copy
+        assert!(sg.live_edge_of(0, 1).unwrap() >= 3);
+
+        // a second staged duplicate is rejected too
+        let mut b3 = MutationBatch::new();
+        b3.insert(0, 1);
+        let (out, _) = sg.apply_batch(&b3, 2);
+        assert_eq!(out.skipped_inserts, 1);
+    }
+
+    #[test]
+    fn compaction_folds_and_renumbers() {
+        let g = erdos_renyi(80, 400, 7);
+        let mut sg = StagedGraph::new(g, cfg()).with_policy(CompactionPolicy::with_budget(0.05));
+        let mut rng = Rng::new(9);
+        let mut batch = MutationBatch::new();
+        for _ in 0..60 {
+            batch.insert(rng.below(80) as u32, rng.below(80) as u32);
+        }
+        for id in [0u64, 7, 13] {
+            batch.delete(id);
+        }
+        let (out, _) = sg.apply_batch(&batch, 4);
+        assert!(out.inserted > 0 && out.deleted == 3);
+        assert!(sg.needs_compaction());
+        let live_before = sg.live_edges();
+        let deg_before: Vec<u32> = (0..sg.num_vertices() as u32).map(|v| sg.degree(v)).collect();
+        sg.compact();
+        assert_eq!(sg.compactions(), 1);
+        assert_eq!(sg.live_edges(), live_before);
+        assert_eq!(sg.physical_edges(), live_before);
+        assert_eq!(sg.staging_len(), 0);
+        assert_eq!(sg.tombstone_count(), 0);
+        assert!(!sg.needs_compaction());
+        assert_eq!(sg.last_permutation().len(), live_before);
+        let deg_after: Vec<u32> = (0..sg.num_vertices() as u32).map(|v| sg.degree(v)).collect();
+        assert_eq!(deg_before, deg_after, "compaction must not change the live graph");
+    }
+
+    #[test]
+    fn locality_staging_clusters_neighborhoods() {
+        // two independent 6-edge stars interleaved in the batch: the
+        // locality placer must de-interleave them into contiguous runs
+        let g = erdos_renyi(40, 160, 1);
+        let mut sg = StagedGraph::new(g, cfg());
+        let mut batch = MutationBatch::new();
+        for i in 0..6u32 {
+            batch.insert(100, 110 + i);
+            batch.insert(200, 210 + i);
+        }
+        let p0 = sg.physical_edges();
+        let (out, _) = sg.apply_batch(&batch, 4);
+        assert_eq!(out.inserted, 12);
+        let hubs: Vec<u32> = (p0..sg.physical_edges())
+            .map(|id| {
+                let e = sg.edge(id as EdgeId);
+                e.u.min(e.v)
+            })
+            .collect();
+        // count hub switches along the tail: perfect clustering = 1
+        let switches = hubs.windows(2).filter(|w| w[0] != w[1]).count();
+        assert!(
+            switches <= 2,
+            "staging tail interleaves neighborhoods: {hubs:?}"
+        );
+    }
+
+    #[test]
+    fn as_graph_matches_live_view() {
+        let g = erdos_renyi(50, 150, 5);
+        let mut sg = StagedGraph::new(g, cfg());
+        let mut batch = MutationBatch::new();
+        batch.insert(1, 45);
+        batch.delete(0);
+        sg.apply_batch(&batch, 3);
+        let live = sg.as_graph();
+        assert_eq!(live.num_edges(), sg.live_edges());
+        assert_eq!(live.num_vertices(), sg.num_vertices());
+        // degrees agree between the incremental counters and the rebuild
+        for v in 0..live.num_vertices() as u32 {
+            assert_eq!(live.degree(v) as u32, sg.degree(v), "vertex {v}");
+        }
+    }
+}

@@ -2,15 +2,20 @@
 //! every partitioner, ordering, scaler and engine configuration,
 //! exercised over randomized graphs (seeded — failures print the seed).
 
-use egs::engine::{apps, Engine};
+use egs::engine::{apps, Combine, Engine};
 use egs::graph::builder::GraphBuilder;
 use egs::graph::generators::{barabasi_albert, erdos_renyi, lattice2d, rmat, RmatParams};
-use egs::graph::Graph;
+use egs::graph::{EdgeSource, Graph};
 use egs::ordering::{edge_ordering_by_name, geo, geo_parallel, vertex_ordering_by_name};
-use egs::partition::{cep::Cep, edge_partition_by_name, quality, EdgePartition, ALL_EDGE_METHODS};
+use egs::partition::{
+    cep::Cep, edge_partition_by_name, quality, EdgePartition, PartitionAssignment,
+    ALL_EDGE_METHODS,
+};
 use egs::runtime::native::NativeBackend;
+use egs::runtime::StepKind;
 use egs::scaling::migration::MigrationPlan;
 use egs::scaling::scaler::{BvcScaler, CepScaler, DynamicScaler, Hash1dScaler};
+use egs::stream::{MutationBatch, StagedGraph};
 use egs::util::proptest::check;
 use egs::util::rng::Rng;
 
@@ -156,6 +161,174 @@ fn parallel_geo_valid_on_any_graph() {
         for &e in o.as_slice() {
             assert!(!seen[e as usize]);
             seen[e as usize] = true;
+        }
+    });
+}
+
+/// Generate a random mutation batch against the current staged state.
+fn random_churn_batch(
+    rng: &mut Rng,
+    sg: &StagedGraph,
+    inserts: usize,
+    deletes: usize,
+) -> MutationBatch {
+    let mut batch = MutationBatch::new();
+    let n = sg.num_vertices() as u64;
+    let p = sg.physical_edges() as u64;
+    for _ in 0..deletes.min(p as usize) {
+        batch.delete(rng.below(p));
+    }
+    for _ in 0..inserts {
+        let u = rng.below(n) as u32;
+        let v = if rng.chance(0.1) { (n + rng.below(5)) as u32 } else { rng.below(n) as u32 };
+        batch.insert(u, v);
+    }
+    batch
+}
+
+/// Satellite property (the streaming extension of PR 1's plan-exactness
+/// harness): after **arbitrary insert/delete/compact sequences**, every
+/// delta plan's range union equals the naive changed-edge diff between
+/// the pre- and post-batch chunk assignments — moves and appends cover
+/// exactly the ids whose nominal owner changed, retires name exactly the
+/// batch's tombstones, and compaction preserves the live edge multiset.
+#[test]
+fn churn_plan_union_equals_naive_changed_edge_diff() {
+    check(0x57E4, 10, |rng| {
+        let g = erdos_renyi(
+            60 + rng.below_usize(120),
+            300 + rng.below_usize(1200),
+            rng.next_u64(),
+        );
+        let cfg = geo::GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 5 };
+        let mut sg = StagedGraph::new(g, cfg);
+        let mut k = 2 + rng.below_usize(8);
+        for _ in 0..5 {
+            // occasionally rescale; the same exactness law applies
+            if rng.chance(0.3) {
+                k = 1 + rng.below_usize(10);
+            }
+            let old_cep = *sg.assignment(k).cep();
+            let old_dead = sg.tombstones().to_vec();
+            let batch = random_churn_batch(rng, &sg, rng.below_usize(50), rng.below_usize(15));
+            let (outcome, plan) = sg.apply_batch(&batch, k);
+            let p0 = old_cep.num_edges();
+            let assign = sg.assignment(k);
+            let p1 = assign.num_edges();
+            assert_eq!(
+                p1,
+                p0 + outcome.inserted as u64,
+                "physical space grows by exactly the accepted inserts"
+            );
+
+            // union of the plan's move/append ranges ...
+            let mut planned = vec![false; p1 as usize];
+            for mv in &plan.moves.moves {
+                for i in mv.edges.clone() {
+                    assert!(!planned[i as usize], "overlapping plan ranges at {i}");
+                    planned[i as usize] = true;
+                    assert!(i < p0);
+                    assert_eq!(old_cep.partition_of(i), mv.src);
+                    assert_eq!(assign.partition_of(i), mv.dst);
+                }
+            }
+            for (dst, r) in &plan.appends {
+                for i in r.clone() {
+                    assert!(!planned[i as usize], "overlapping plan ranges at {i}");
+                    planned[i as usize] = true;
+                    assert!(i >= p0, "append of pre-existing id {i}");
+                    assert_eq!(assign.partition_of(i), *dst);
+                }
+            }
+            // ... equals the naive per-edge changed-owner diff
+            for i in 0..p1 {
+                let changed = if i < p0 {
+                    old_cep.partition_of(i) != assign.partition_of(i)
+                } else {
+                    true
+                };
+                assert_eq!(
+                    planned[i as usize], changed,
+                    "plan union diverges from naive diff at id {i}"
+                );
+            }
+            // retires == exactly the newly tombstoned ids
+            let mut retired: Vec<u64> =
+                plan.retires.iter().flat_map(|(_, r)| r.clone()).collect();
+            retired.sort_unstable();
+            let naive_new_dead: Vec<u64> = sg
+                .tombstones()
+                .iter()
+                .copied()
+                .filter(|t| old_dead.binary_search(t).is_err())
+                .collect();
+            assert_eq!(retired, naive_new_dead);
+
+            // compact at random points; the live multiset must survive
+            if sg.needs_compaction() || rng.chance(0.3) {
+                let mut live_before: Vec<(u32, u32)> = (0..sg.physical_edges() as u64)
+                    .filter(|&i| sg.is_live(i))
+                    .map(|i| sg.edge(i).canonical())
+                    .collect();
+                live_before.sort_unstable();
+                sg.compact();
+                let mut live_after: Vec<(u32, u32)> =
+                    (0..sg.physical_edges() as u64).map(|i| sg.edge(i).canonical()).collect();
+                live_after.sort_unstable();
+                assert_eq!(live_before, live_after, "compaction changed the live edge set");
+            }
+        }
+    });
+}
+
+/// The streaming engine path is exact: a chain of churn batches and
+/// rescales applied incrementally (`apply_churn`) leaves the engine
+/// indistinguishable — layout RF and superstep outputs — from one built
+/// fresh on the final staged assignment.
+#[test]
+fn streaming_engine_matches_fresh_engine_under_churn() {
+    check(0x57E5, 6, |rng| {
+        let g = erdos_renyi(60 + rng.below_usize(80), 250 + rng.below_usize(600), rng.next_u64());
+        let cfg = geo::GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 2 };
+        let mut sg = StagedGraph::new(g, cfg);
+        let mut k = 2 + rng.below_usize(5);
+        let mut engine = {
+            let assign = sg.assignment(k);
+            Engine::new(&sg, &assign, |_| Box::new(NativeBackend::new())).unwrap()
+        };
+        for _ in 0..3 {
+            let batch = random_churn_batch(rng, &sg, rng.below_usize(30), rng.below_usize(10));
+            let (_, plan) = sg.apply_batch(&batch, k);
+            {
+                let assign = sg.assignment(k);
+                engine
+                    .apply_churn(&sg, &plan, &assign, |_| Box::new(NativeBackend::new()))
+                    .unwrap();
+            }
+            if rng.chance(0.5) {
+                let new_k = 1 + rng.below_usize(8);
+                let plan = sg.rescale_plan(k, new_k);
+                let assign = sg.assignment(new_k);
+                engine
+                    .apply_churn(&sg, &plan, &assign, |_| Box::new(NativeBackend::new()))
+                    .unwrap();
+                k = new_k;
+            }
+            let assign = sg.assignment(k);
+            let mut fresh =
+                Engine::new(&sg, &assign, |_| Box::new(NativeBackend::new())).unwrap();
+            assert!((engine.layout().rf() - fresh.layout().rf()).abs() < 1e-12);
+            let n = sg.num_vertices();
+            let state: Vec<f32> = (0..n).map(|v| (v % 23) as f32 / 23.0).collect();
+            let aux = vec![1.0f32; n];
+            let active = vec![true; n];
+            let (a, _) = engine
+                .superstep(StepKind::PageRank, Combine::Sum, &state, &aux, &active)
+                .unwrap();
+            let (b, _) = fresh
+                .superstep(StepKind::PageRank, Combine::Sum, &state, &aux, &active)
+                .unwrap();
+            assert_eq!(a, b, "incremental churn diverged from fresh engine at k={k}");
         }
     });
 }

@@ -1,0 +1,125 @@
+//! End-to-end streaming acceptance: an interleaved churn + rescale
+//! scenario driven through the coordinator must (a) keep the live
+//! replication factor within 10% of a *fresh* GEO+CEP repartition of the
+//! mutated graph, and (b) execute every migration/delta plan as O(k)
+//! contiguous range operations — no per-edge assignment vector ever
+//! exists on the streaming path (the assignment is chunk metadata plus a
+//! budget-bounded tombstone list by construction).
+
+use egs::coordinator::{run_streaming, StreamingConfig};
+use egs::graph::generators::{rmat, RmatParams};
+use egs::ordering::geo::GeoConfig;
+use egs::runtime::native::NativeBackend;
+use egs::scaling::scenario::Scenario;
+use egs::stream::{CompactionPolicy, MutationBatch, StagedGraph};
+
+fn geo_cfg() -> GeoConfig {
+    GeoConfig { k_min: 2, k_max: 16, delta: None, seed: 11 }
+}
+
+/// The headline acceptance run: churn every 3 iterations, k 6 → 8, the
+/// compaction budget tripping along the way.
+#[test]
+fn interleaved_churn_rescale_keeps_rf_near_fresh_repartition() {
+    let g = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() }, 1);
+    let m0 = g.num_edges();
+    let scenario = Scenario::interleaved(6, 2, 6, 100, 35);
+    let cfg = StreamingConfig {
+        geo: geo_cfg(),
+        policy: CompactionPolicy::with_budget(0.08),
+        seed: 7,
+        measure_fresh_baseline: true,
+        ..Default::default()
+    };
+    let out = run_streaming(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+
+    assert_eq!(out.final_k, 8);
+    assert_eq!(out.events.len(), 2);
+    assert!(!out.churn_events.is_empty());
+    assert!(out.compactions >= 1, "the churn volume must trip the budget");
+
+    // (a) quality: live RF within 10% of a fresh GEO+CEP repartition of
+    // the mutated graph (different GEO seed — an independent baseline)
+    let fresh = out.fresh_rf.expect("baseline requested");
+    assert!(fresh >= 1.0);
+    assert!(
+        out.final_rf <= fresh * 1.10,
+        "streaming RF {:.4} drifted beyond 10% of fresh {:.4}",
+        out.final_rf,
+        fresh
+    );
+
+    // (b) plans: O(k) contiguous range operations, never O(m)
+    for ev in &out.events {
+        assert!(
+            ev.range_moves <= ev.from_k + ev.to_k + 1,
+            "rescale {}→{} used {} range moves",
+            ev.from_k,
+            ev.to_k,
+            ev.range_moves
+        );
+        assert!(ev.range_moves < m0 / 10, "rescale plan scales with m");
+    }
+    for cr in &out.churn_events {
+        let k_bound = 8 + 8 + 1; // k never exceeds 8 in this scenario
+        let bound = k_bound + cr.deleted as usize + (8 + 1);
+        assert!(
+            cr.range_ops <= bound,
+            "churn at iteration {} used {} range ops (bound {bound})",
+            cr.at_iteration,
+            cr.range_ops
+        );
+        // the decay budget holds throughout the run
+        assert!(
+            cr.staging_fraction <= 0.08 + 0.05,
+            "staging fraction {} escaped the budget",
+            cr.staging_fraction
+        );
+    }
+
+    // bookkeeping: live edges track the applied mutations exactly
+    let ins: u64 = out.churn_events.iter().map(|c| c.inserted as u64).sum();
+    let del: u64 = out.churn_events.iter().map(|c| c.deleted as u64).sum();
+    assert_eq!(out.live_edges as u64, m0 as u64 + ins - del);
+    assert!(ins > 0 && del > 0, "scenario must actually churn");
+}
+
+/// Snapshot round trip: a churned staged graph survives the v2 `.egs`
+/// format with physical ids, staging tail and tombstones intact.
+#[test]
+fn staged_graph_snapshot_round_trips() {
+    let g = rmat(&RmatParams { scale: 8, edge_factor: 6, ..Default::default() }, 3);
+    let mut sg = StagedGraph::new(g, geo_cfg());
+    let mut batch = MutationBatch::new();
+    for i in 0..40u32 {
+        batch.insert(i % 97, (i * 7 + 13) % 97);
+    }
+    for id in [2u64, 30, 31, 200] {
+        batch.delete(id);
+    }
+    sg.apply_batch(&batch, 5);
+
+    let mut path = std::env::temp_dir();
+    path.push(format!("egs_stream_snap_{}.egs", std::process::id()));
+    sg.save(&path).unwrap();
+    let mut loaded = StagedGraph::load(&path, geo_cfg()).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded.physical_edges(), sg.physical_edges());
+    assert_eq!(loaded.live_edges(), sg.live_edges());
+    assert_eq!(loaded.staging_len(), sg.staging_len());
+    assert_eq!(loaded.tombstones(), sg.tombstones());
+    assert_eq!(loaded.num_vertices(), sg.num_vertices());
+    use egs::graph::EdgeSource;
+    for id in 0..sg.physical_edges() as u64 {
+        assert_eq!(loaded.edge(id), sg.edge(id), "edge {id}");
+    }
+    for v in 0..sg.num_vertices() as u32 {
+        assert_eq!(loaded.degree(v), sg.degree(v), "degree of {v}");
+    }
+    // a loaded snapshot keeps ingesting
+    let mut more = MutationBatch::new();
+    more.insert(0, 1_000);
+    let (outcome, _) = loaded.apply_batch(&more, 5);
+    assert_eq!(outcome.inserted, 1);
+}
