@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Bench-trajectory gate: compare a fresh BENCH_ci.json against the
+committed BENCH_baseline.json.
+
+Both files are JSON lines in the shared schema emitted by
+benches/common/mod.rs:
+
+    {"bench": "fig09", "scenario": "cep/pokec-s", "wall_ms": 1.23, "rf": null}
+
+Rules:
+  * every baseline row with a numeric wall_ms must exist in the fresh run
+    and must not be more than 2x slower;
+  * baseline rows with wall_ms = null are *unseeded* — they document the
+    schema/coverage but gate nothing (refresh them from the BENCH_ci
+    artifact of a green run);
+  * rf is informational here (quality regressions are caught by the test
+    suite's acceptance bounds, not by this wall-time gate).
+
+Exit code 1 on any regression or missing row.
+"""
+
+import json
+import sys
+
+REGRESSION_FACTOR = 2.0
+
+
+def load(path):
+    rows = {}
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            r = json.loads(line)
+            rows[(r["bench"], r["scenario"])] = r
+    return rows
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(f"usage: {sys.argv[0]} BENCH_baseline.json BENCH_ci.json")
+        return 2
+    base = load(sys.argv[1])
+    cur = load(sys.argv[2])
+    failures = []
+    seeded = 0
+    for key, brow in sorted(base.items()):
+        wall = brow.get("wall_ms")
+        if wall is None:
+            continue  # unseeded schema row
+        seeded += 1
+        crow = cur.get(key)
+        if crow is None:
+            failures.append(f"{key[0]}/{key[1]}: present in baseline but missing from this run")
+            continue
+        if crow["wall_ms"] > REGRESSION_FACTOR * wall:
+            failures.append(
+                f"{key[0]}/{key[1]}: {crow['wall_ms']:.1f} ms vs baseline "
+                f"{wall:.1f} ms (>{REGRESSION_FACTOR}x regression)"
+            )
+    if failures:
+        print("bench-smoke trajectory regressions:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(
+        f"bench-smoke: {len(cur)} rows collected, {seeded} seeded baseline rows "
+        f"checked, no >{REGRESSION_FACTOR}x wall-time regressions"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

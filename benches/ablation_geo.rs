@@ -5,9 +5,13 @@
 //!    recency) — the paper credits the combined priority for its edge
 //!    over BFS-like orderings.
 //! 2. **Two-hop admission**: δ = |E|/k_max vs δ = 1 (no real window).
-//! 3. **Parallel GEO** (§7 future work): 1/2/4/8 workers — time vs RF.
+//! 3. **Parallel GEO** (§7 future work): 1/2/4/8 regions on the shared
+//!    pool — time vs RF (the region count is the quality knob; the
+//!    executor width `PALLAS_THREADS` never changes the result).
 
-use egs::graph::datasets;
+mod common;
+
+use common::BenchLog;
 use egs::metrics::table::{f3, secs, Table};
 use egs::metrics::timer::once;
 use egs::ordering::geo::{self, GeoConfig};
@@ -25,8 +29,9 @@ fn mean_rf(g: &egs::graph::Graph) -> f64 {
 }
 
 fn main() {
-    let g = datasets::by_name("pokec-s", 42).unwrap();
+    let g = common::dataset("pokec-s");
     let m = g.num_edges();
+    let mut log = BenchLog::new("ablation_geo");
 
     // --- 1+2: priority / window ablation.
     // D-only: k_min == k_max makes β = 0. M-only: a degenerate range with
@@ -51,20 +56,25 @@ fn main() {
     for (name, cfg) in variants {
         let (o, dt) = once(|| geo::order(&g, &cfg));
         let og = o.apply(&g);
-        t.row(vec![name.to_string(), f3(mean_rf(&og)), secs(dt.as_secs_f64())]);
+        let rf = mean_rf(&og);
+        t.row(vec![name.to_string(), f3(rf), secs(dt.as_secs_f64())]);
+        log.row(&format!("priority/{name}"), common::ms(dt), Some(rf));
     }
     t.print();
 
     // --- 3: parallel GEO
     let mut t = Table::new(
         "ablation: parallel GEO (§7 future work)",
-        &["workers", "mean RF (k=4,16,64)", "ordering time"],
+        &["regions", "mean RF (k=4,16,64)", "ordering time"],
     );
-    for threads in [1usize, 2, 4, 8] {
-        let (o, dt) = once(|| geo_parallel::order(&g, &GeoConfig::default(), threads));
+    for regions in [1usize, 2, 4, 8] {
+        let (o, dt) = once(|| geo_parallel::order(&g, &GeoConfig::default(), regions));
         let og = o.apply(&g);
-        t.row(vec![threads.to_string(), f3(mean_rf(&og)), secs(dt.as_secs_f64())]);
+        let rf = mean_rf(&og);
+        t.row(vec![regions.to_string(), f3(rf), secs(dt.as_secs_f64())]);
+        log.row(&format!("parallel/regions={regions}"), common::ms(dt), Some(rf));
     }
     t.print();
+    log.finish();
     println!("expected: full priority <= ablations on RF; parallel trades mild RF for speed");
 }

@@ -1,0 +1,103 @@
+//! Shared harness for the figure/table benches: quick-mode dataset
+//! substitution, wall-clock helpers and uniform `BENCH_*.json` row
+//! emission — the bench-trajectory CI consumes exactly this schema.
+//!
+//! Environment knobs:
+//!
+//! * `PALLAS_BENCH_QUICK=1` — replace every dataset with a small synthetic
+//!   stand-in (same skew class, ~100× smaller) and shrink iteration knobs
+//!   via [`scaled`], so the whole suite finishes inside a CI smoke job.
+//! * `PALLAS_BENCH_JSON=<path>` — append one JSON line per recorded row:
+//!   `{"bench": "...", "scenario": "...", "wall_ms": <f64>, "rf": <f64|null>}`.
+//!   All benches share this schema; CI points every bench at the same
+//!   `BENCH_ci.json` and diffs it against the committed
+//!   `BENCH_baseline.json` (>2× wall-time regressions fail the build).
+#![allow(dead_code)] // each bench uses a subset of the harness
+
+use egs::graph::generators::{lattice2d, rmat, RmatParams};
+use egs::graph::{datasets, Graph};
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+/// Is quick (CI smoke) mode active?
+pub fn quick() -> bool {
+    std::env::var("PALLAS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Dataset by registry name; in quick mode a small synthetic stand-in of
+/// the same skew class is substituted (deterministic seed).
+pub fn dataset(name: &str) -> Graph {
+    if quick() {
+        if name.starts_with("road") {
+            return lattice2d(60, 58, 0.28, 42);
+        }
+        return rmat(&RmatParams { scale: 10, edge_factor: 8, ..Default::default() }, 42);
+    }
+    datasets::by_name(name, 42).unwrap_or_else(|| panic!("unknown dataset {name}"))
+}
+
+/// Pick `full` normally, `quick_value` under `PALLAS_BENCH_QUICK=1`.
+pub fn scaled(full: usize, quick_value: usize) -> usize {
+    if quick() {
+        quick_value
+    } else {
+        full
+    }
+}
+
+/// Duration → milliseconds.
+pub fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Time one run; returns `(value, wall milliseconds)`.
+pub fn timed_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let v = f();
+    (v, ms(t.elapsed()))
+}
+
+/// Row collector for one bench binary. Call [`BenchLog::row`] per
+/// measured scenario and [`BenchLog::finish`] before exiting.
+pub struct BenchLog {
+    bench: String,
+    rows: Vec<(String, f64, Option<f64>)>,
+}
+
+impl BenchLog {
+    /// Start a log for `bench` (the canonical short name, e.g. `fig09`).
+    pub fn new(bench: &str) -> BenchLog {
+        BenchLog { bench: bench.to_string(), rows: Vec::new() }
+    }
+
+    /// Record one scenario: wall time in milliseconds and an optional
+    /// replication factor (`None` → `null` in the JSON row).
+    pub fn row(&mut self, scenario: &str, wall_ms: f64, rf: Option<f64>) {
+        self.rows.push((scenario.to_string(), wall_ms, rf));
+    }
+
+    /// Append the collected rows to `$PALLAS_BENCH_JSON` (JSON lines, the
+    /// shared trajectory schema). A no-op when the knob is unset.
+    pub fn finish(self) {
+        let Some(path) = std::env::var_os("PALLAS_BENCH_JSON") else {
+            return;
+        };
+        let mut fh = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .unwrap_or_else(|e| panic!("open {}: {e}", path.to_string_lossy()));
+        for (scenario, wall, rf) in &self.rows {
+            let rf_s = match rf {
+                Some(x) => format!("{x:.6}"),
+                None => "null".into(),
+            };
+            writeln!(
+                fh,
+                "{{\"bench\":\"{}\",\"scenario\":\"{}\",\"wall_ms\":{:.3},\"rf\":{}}}",
+                self.bench, scenario, wall, rf_s
+            )
+            .expect("write bench row");
+        }
+    }
+}

@@ -2,7 +2,9 @@
 //! time as a function of the two-hop window δ, confirming the paper's
 //! choice δ = |E|/k_max (factor 1.0) as the sweet spot.
 
-use egs::graph::datasets;
+mod common;
+
+use common::BenchLog;
 use egs::metrics::table::{f3, secs, Table};
 use egs::metrics::timer::once;
 use egs::ordering::geo::{self, GeoConfig};
@@ -13,9 +15,10 @@ const KS: &[usize] = &[4, 8, 16, 32, 64, 128];
 
 fn main() {
     let dataset = "pokec-s";
-    let g = datasets::by_name(dataset, 42).unwrap();
+    let g = common::dataset(dataset);
     let m = g.num_edges();
     let base_delta = m / 128; // |E|/k_max
+    let mut log = BenchLog::new("fig05");
 
     let mut t = Table::new(
         &format!("Fig 5: delta sweep on {dataset} (|E|={m})"),
@@ -37,7 +40,9 @@ fn main() {
             f3(mean_rf),
             secs(dt.as_secs_f64()),
         ]);
+        log.row(&format!("factor={factor}"), common::ms(dt), Some(mean_rf));
     }
     t.print();
+    log.finish();
     println!("paper Fig 5: RF flat-to-worse at tiny delta, best near factor 1; time grows mildly with delta");
 }

@@ -3,7 +3,9 @@
 //! The paper's headline efficiency claim: CEP is O(1) — three-plus orders
 //! of magnitude under every per-edge method, independent of graph size.
 
-use egs::graph::datasets;
+mod common;
+
+use common::BenchLog;
 use egs::metrics::table::{secs, Table};
 use egs::metrics::timer::measure;
 use egs::ordering::VertexOrdering;
@@ -14,6 +16,7 @@ const K: usize = 32;
 
 fn main() {
     let sets = ["road-ca-s", "pokec-s", "orkut-s"];
+    let mut log = BenchLog::new("fig09");
     let mut t = Table::new(
         &format!("Fig 9: partitioning elapsed time (k={K})"),
         &["method", sets[0], sets[1], sets[2]],
@@ -32,7 +35,7 @@ fn main() {
         ("mts", vec![]),
     ];
     for ds in sets {
-        let g = datasets::by_name(ds, 42).unwrap();
+        let g = common::dataset(ds);
         let m = g.num_edges();
         eprintln!("... {ds}: |E|={m}");
         for (name, cells) in rows.iter_mut() {
@@ -60,6 +63,7 @@ fn main() {
                 _ => unreachable!(),
             };
             cells.push(secs(timing.secs()));
+            log.row(&format!("{name}/{ds}"), timing.secs() * 1e3, None);
         }
     }
     for (name, cells) in rows {
@@ -68,5 +72,6 @@ fn main() {
         t.row(row);
     }
     t.print();
+    log.finish();
     println!("paper Fig 9: CEP >1000x faster than all others, flat in |E|");
 }

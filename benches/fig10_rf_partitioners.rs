@@ -3,7 +3,9 @@
 //! Expected shape (paper): NE best, GEO+CEP a close second, both far
 //! below the hash family (DBH < 2D < 1D) and BVC; MTS between.
 
-use egs::graph::datasets;
+mod common;
+
+use common::BenchLog;
 use egs::metrics::table::{f3, Table};
 use egs::ordering::geo::{self, GeoConfig};
 use egs::partition::quality::replication_factor;
@@ -13,25 +15,34 @@ const KS: &[usize] = &[4, 8, 16, 32, 64, 128];
 const METHODS: &[&str] = &["cep", "ne", "mts", "hdrf", "dbh", "2d", "1d", "bvc", "cvp"];
 
 fn main() {
+    let mut log = BenchLog::new("fig10");
     for dataset in ["pokec-s", "road-ca-s", "orkut-s"] {
-        let g = datasets::by_name(dataset, 42).unwrap();
+        let g = common::dataset(dataset);
         let ordered = geo::order(&g, &GeoConfig::default()).apply(&g);
         let mut t = Table::new(
             &format!("Fig 10: RF on {dataset} (|E|={})", g.num_edges()),
             &["method", "k=4", "k=8", "k=16", "k=32", "k=64", "k=128"],
         );
         for &method in METHODS {
-            let mut row = vec![if method == "cep" { "geo+cep".into() } else { method.to_string() }];
-            for &k in KS {
-                // CEP slices the GEO-ordered list; others see the raw graph
-                let input = if method == "cep" { &ordered } else { &g };
-                let part: EdgePartition =
-                    edge_partition_by_name(method, input, k, 42).unwrap();
-                row.push(f3(replication_factor(input, &part)));
-            }
+            let mut row =
+                vec![if method == "cep" { "geo+cep".into() } else { method.to_string() }];
+            let mut rf_sum = 0.0;
+            let (_, wall) = common::timed_ms(|| {
+                for &k in KS {
+                    // CEP slices the GEO-ordered list; others see the raw graph
+                    let input = if method == "cep" { &ordered } else { &g };
+                    let part: EdgePartition =
+                        edge_partition_by_name(method, input, k, 42).unwrap();
+                    let rf = replication_factor(input, &part);
+                    rf_sum += rf;
+                    row.push(f3(rf));
+                }
+            });
             t.row(row);
+            log.row(&format!("{method}/{dataset}"), wall, Some(rf_sum / KS.len() as f64));
         }
         t.print();
     }
+    log.finish();
     println!("paper Fig 10: NE < GEO+CEP << MTS/HDRF/DBH/2D < 1D < BVC");
 }

@@ -5,7 +5,9 @@
 //! Expected shape (paper): GEO+CEP best everywhere; RO/LLP close on
 //! community-structured graphs; DEG/DEF worst.
 
-use egs::graph::datasets;
+mod common;
+
+use common::BenchLog;
 use egs::metrics::table::{f3, Table};
 use egs::ordering::{geo, vertex_ordering_by_name};
 use egs::partition::quality::replication_factor;
@@ -15,32 +17,48 @@ const KS: &[usize] = &[4, 8, 16, 32, 64, 128];
 const VERTEX_ORDERINGS: &[&str] = &["go", "ro", "rgb", "llp", "rcm", "deg", "vdef"];
 
 fn main() {
+    let mut log = BenchLog::new("fig11");
     for dataset in ["pokec-s", "road-ca-s", "flickr-s"] {
-        let g = datasets::by_name(dataset, 42).unwrap();
+        let g = common::dataset(dataset);
         let mut t = Table::new(
             &format!("Fig 11: RF by ordering method on {dataset}"),
             &["ordering", "k=4", "k=8", "k=16", "k=32", "k=64", "k=128"],
         );
         // GEO + CEP (ours)
-        let ordered = geo::order(&g, &geo::GeoConfig::default()).apply(&g);
-        let mut row = vec!["geo+cep".to_string()];
-        for &k in KS {
-            let part = EdgePartition::from_cep(&Cep::new(ordered.num_edges(), k));
-            row.push(f3(replication_factor(&ordered, &part)));
+        {
+            let mut row = vec!["geo+cep".to_string()];
+            let mut rf_sum = 0.0;
+            let (_, wall) = common::timed_ms(|| {
+                let ordered = geo::order(&g, &geo::GeoConfig::default()).apply(&g);
+                for &k in KS {
+                    let part = EdgePartition::from_cep(&Cep::new(ordered.num_edges(), k));
+                    let rf = replication_factor(&ordered, &part);
+                    rf_sum += rf;
+                    row.push(f3(rf));
+                }
+            });
+            t.row(row);
+            log.row(&format!("geo+cep/{dataset}"), wall, Some(rf_sum / KS.len() as f64));
         }
-        t.row(row);
         // vertex orderings + CVP + random-adjacent conversion
         for &name in VERTEX_ORDERINGS {
-            let vo = vertex_ordering_by_name(name, &g, 42).unwrap();
             let mut row = vec![format!("{name}+cvp")];
-            for &k in KS {
-                let vp = cvp::partition(&vo, k);
-                let ep = vertex2edge::convert(&g, &vp, 42);
-                row.push(f3(replication_factor(&g, &ep)));
-            }
+            let mut rf_sum = 0.0;
+            let (_, wall) = common::timed_ms(|| {
+                let vo = vertex_ordering_by_name(name, &g, 42).unwrap();
+                for &k in KS {
+                    let vp = cvp::partition(&vo, k);
+                    let ep = vertex2edge::convert(&g, &vp, 42);
+                    let rf = replication_factor(&g, &ep);
+                    rf_sum += rf;
+                    row.push(f3(rf));
+                }
+            });
             t.row(row);
+            log.row(&format!("{name}+cvp/{dataset}"), wall, Some(rf_sum / KS.len() as f64));
         }
         t.print();
     }
+    log.finish();
     println!("paper Fig 11: GEO+CEP lowest at every k; RO/LLP competitive on road/flickr");
 }

@@ -1,13 +1,16 @@
 //! Fig 12 — preprocessing (ordering) time per method. GEO should sit in
 //! the same band as GO/RGB/LLP, above the trivial DEG/RCM sorts.
 
-use egs::graph::datasets;
+mod common;
+
+use common::BenchLog;
 use egs::metrics::table::{secs, Table};
 use egs::metrics::timer::once;
 use egs::ordering::{geo, vertex_ordering_by_name};
 
 fn main() {
     let sets = ["pokec-s", "orkut-s", "twitter-s"];
+    let mut log = BenchLog::new("fig12");
     let mut t = Table::new(
         "Fig 12: ordering preprocessing time",
         &["method", sets[0], sets[1], sets[2]],
@@ -15,7 +18,7 @@ fn main() {
     let methods = ["geo", "go", "ro", "rgb", "llp", "rcm", "deg"];
     let mut cells: Vec<Vec<String>> = vec![Vec::new(); methods.len()];
     for ds in sets {
-        let g = datasets::by_name(ds, 42).unwrap();
+        let g = common::dataset(ds);
         eprintln!("... {ds}: |E|={}", g.num_edges());
         for (i, name) in methods.iter().enumerate() {
             let dt = if *name == "geo" {
@@ -24,6 +27,7 @@ fn main() {
                 once(|| vertex_ordering_by_name(name, &g, 42).unwrap()).1
             };
             cells[i].push(secs(dt.as_secs_f64()));
+            log.row(&format!("{name}/{ds}"), common::ms(dt), None);
         }
     }
     for (i, name) in methods.iter().enumerate() {
@@ -32,5 +36,6 @@ fn main() {
         t.row(row);
     }
     t.print();
+    log.finish();
     println!("paper Fig 12: GEO comparable to GO/RGB/LLP; DEG/RCM cheapest");
 }

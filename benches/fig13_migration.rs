@@ -4,15 +4,18 @@
 //!
 //! Expected shape (paper): CEP ≈ BVC ≪ 1D.
 
-use egs::graph::datasets;
+mod common;
+
+use common::BenchLog;
 use egs::metrics::table::Table;
 use egs::scaling::scaler::{BvcScaler, CepScaler, DynamicScaler, Hash1dScaler};
 use egs::scaling::theory;
 
 fn main() {
-    let g = datasets::by_name("pokec-s", 42).unwrap();
+    let g = common::dataset("pokec-s");
     let m = g.num_edges();
     let (k_lo, k_hi) = (13usize, 18usize);
+    let mut log = BenchLog::new("fig13");
 
     let mut t = Table::new(
         &format!("Fig 13: total migrated edges (|E|={m})"),
@@ -38,9 +41,9 @@ fn main() {
         ("1d", Box::new(move |k| Box::new(Hash1dScaler::new(m, k)) as Box<dyn DynamicScaler>)),
     ];
     for (name, mk) in &factories {
-        let out = run(mk, k_lo, k_hi);
-        let inn = run(mk, k_hi, k_lo);
+        let ((out, inn), wall) = common::timed_ms(|| (run(mk, k_lo, k_hi), run(mk, k_hi, k_lo)));
         t.row(vec![name.to_string(), out.to_string(), inn.to_string()]);
+        log.row(&format!("{name}/out+in"), wall, None);
     }
     // plans are the *net* state transfer; BVC additionally makes transient
     // refinement moves that cancel ring moves — report its gross physical
@@ -69,5 +72,6 @@ fn main() {
     }
     t.row(vec!["cep (Thm 2)".into(), format!("{pred:.0}"), format!("{pred:.0}")]);
     t.print();
+    log.finish();
     println!("paper Fig 13: CEP ~ BVC << 1D (both chunk methods move contiguous ranges)");
 }

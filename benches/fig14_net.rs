@@ -6,7 +6,9 @@
 //! move + barrier-synchronized balance refinement), even though BVC moves
 //! no more edges than CEP — the synchronization dominates.
 
-use egs::graph::datasets;
+mod common;
+
+use common::BenchLog;
 use egs::metrics::table::{secs, Table};
 use egs::partition::cep::Cep;
 use egs::scaling::migration::MigrationPlan;
@@ -14,18 +16,24 @@ use egs::scaling::network::Network;
 use egs::scaling::scaler::{BvcScaler, DynamicScaler, Hash1dScaler};
 
 fn main() {
-    let g = datasets::by_name("pokec-s", 42).unwrap();
+    let g = common::dataset("pokec-s");
     let m = g.num_edges();
     let (from_k, to_k) = (13usize, 14usize);
+    let mut log = BenchLog::new("fig14");
 
     // the three executable migration plans for the same scale step
-    let cep_plan = MigrationPlan::between_ceps(&Cep::new(m, from_k), &Cep::new(m, to_k));
-    let (bvc_plan, bvc_stats) = {
-        let mut s = BvcScaler::new(m, from_k, 7);
-        let plan = s.scale_to(to_k);
-        (plan, s.last_stats())
-    };
-    let h1_plan = Hash1dScaler::new(m, from_k).scale_to(to_k);
+    let (plans, plan_wall) = common::timed_ms(|| {
+        let cep_plan = MigrationPlan::between_ceps(&Cep::new(m, from_k), &Cep::new(m, to_k));
+        let (bvc_plan, bvc_stats) = {
+            let mut s = BvcScaler::new(m, from_k, 7);
+            let plan = s.scale_to(to_k);
+            (plan, s.last_stats())
+        };
+        let h1_plan = Hash1dScaler::new(m, from_k).scale_to(to_k);
+        (cep_plan, bvc_plan, bvc_stats, h1_plan)
+    });
+    let (cep_plan, bvc_plan, bvc_stats, h1_plan) = plans;
+    log.row("derive-plans", plan_wall, None);
 
     for value_bytes in [0u64, 8, 32] {
         let mut t = Table::new(
@@ -51,6 +59,7 @@ fn main() {
                 secs(h1_t),
                 secs(bvc_t),
             ]);
+            log.row(&format!("cep/{gbps}gbps/v{value_bytes}"), cep_t * 1e3, None);
         }
         t.print();
     }
@@ -68,5 +77,6 @@ fn main() {
         h1_plan.num_moves(),
         bvc_plan.num_moves()
     );
+    log.finish();
     println!("paper Fig 14: CEP/1D single shuffle beat BVC's multi-barrier refinement");
 }

@@ -1,18 +1,27 @@
 //! Fig 15 — GEO scalability on RMAT graphs: ordering time vs graph size
 //! for several edge factors. Expected: near-linear growth in |E|.
 
+mod common;
+
+use common::BenchLog;
 use egs::graph::generators::{rmat, RmatParams};
 use egs::metrics::table::{secs, Table};
 use egs::metrics::timer::once;
 use egs::ordering::geo::{self, GeoConfig};
 
 fn main() {
+    let mut log = BenchLog::new("fig15");
     let mut t = Table::new(
         "Fig 15: GEO scalability on RMAT",
         &["scale", "edge factor", "|V|", "|E|", "ordering time", "Medges/s"],
     );
-    for ef in [16usize, 24, 40] {
-        for scale in [12u32, 13, 14, 15] {
+    let (efs, scales): (&[usize], &[u32]) = if common::quick() {
+        (&[8], &[10, 11, 12])
+    } else {
+        (&[16, 24, 40], &[12, 13, 14, 15])
+    };
+    for &ef in efs {
+        for &scale in scales {
             let g = rmat(&RmatParams { scale, edge_factor: ef, ..Default::default() }, 9);
             let (_, dt) = once(|| geo::order(&g, &GeoConfig::default()));
             let meps = g.num_edges() as f64 / dt.as_secs_f64() / 1e6;
@@ -24,8 +33,10 @@ fn main() {
                 secs(dt.as_secs_f64()),
                 format!("{meps:.2}"),
             ]);
+            log.row(&format!("rmat-s{scale}-ef{ef}"), common::ms(dt), None);
         }
     }
     t.print();
+    log.finish();
     println!("paper Fig 15: elapsed time grows linearly with |E| at every edge factor");
 }

@@ -13,7 +13,9 @@
 //! below a full reorder, and the amortized compaction count grows
 //! linearly with the churn rate while RF drift stays within the budget.
 
-use egs::graph::datasets;
+mod common;
+
+use common::BenchLog;
 use egs::metrics::table::{f3, secs, Table};
 use egs::ordering::geo::{self, GeoConfig};
 use egs::stream::{quality, MutationBatch, StagedGraph};
@@ -21,11 +23,12 @@ use egs::util::rng::Rng;
 use std::time::Instant;
 
 fn main() {
-    let g = datasets::by_name("pokec-s", 42).unwrap();
+    let g = common::dataset("pokec-s");
     let m = g.num_edges();
     let k = 16usize;
     let cfg = GeoConfig::default();
-    let batches = 20u32;
+    let batches = common::scaled(20, 5) as u32;
+    let mut log = BenchLog::new("fig16");
 
     // naive baseline: one full GEO pass over the graph — the per-batch
     // cost of keeping a static pipeline fresh under churn
@@ -92,8 +95,10 @@ fn main() {
             f3(rf_live),
             f3(rf_fresh),
         ]);
+        log.row(&format!("rate={:.3}", rate), per_batch * 1e3, Some(rf_live));
     }
     table.print();
+    log.finish();
     println!(
         "expected: per-batch streaming cost << one full GEO reorder; \
          RF live tracks RF fresh within the 10% compaction budget"

@@ -2,17 +2,20 @@
 //! side by side with the paper's published values. The Proposed row is
 //! Theorem 6 evaluated exactly and matches to the printed precision.
 
+mod common;
+
+use common::BenchLog;
 use egs::metrics::table::{f2, Table};
 use egs::theory::bounds;
 
 fn main() {
+    let mut log = BenchLog::new("table02");
     let mut t = Table::new(
         "Table 2: theoretical RF upper bound (k=256, |V|=1e6) — ours vs paper",
         &["method", "2.2", "2.4", "2.6", "2.8", "| paper:", "2.2", "2.4", "2.6", "2.8"],
     );
-    for ((name, ours), (_, paper)) in
-        bounds::computed_table2(256, 1e6).iter().zip(bounds::PAPER_TABLE2.iter())
-    {
+    let (rows, wall) = common::timed_ms(|| bounds::computed_table2(256, 1e6));
+    for ((name, ours), (_, paper)) in rows.iter().zip(bounds::PAPER_TABLE2.iter()) {
         t.row(vec![
             name.to_string(),
             f2(ours[0]),
@@ -27,5 +30,7 @@ fn main() {
         ]);
     }
     t.print();
+    log.row("computed_table2", wall, None);
+    log.finish();
     println!("Proposed row = Theorem 6 exactly; NE/HDRF calibrated (see theory/bounds.rs docs)");
 }

@@ -6,19 +6,22 @@
 //! Expected shape (paper): GEO+CEP lowest RF ⇒ lowest COM ⇒ fastest,
 //! with perfect EB and slightly worse VB.
 
+mod common;
+
+use common::BenchLog;
 use egs::engine::{apps, Engine};
-use egs::graph::datasets;
 use egs::metrics::table::{f2, Table};
 use egs::ordering::geo::{self, GeoConfig};
 use egs::partition::{edge_partition_by_name, quality};
 use egs::runtime::native::NativeBackend;
 
 const K: usize = 12;
-const PR_ITERS: u32 = 20;
 
 fn main() {
+    let pr_iters = common::scaled(20, 5) as u32;
+    let mut log = BenchLog::new("table06");
     for dataset in ["orkut-s", "pokec-s"] {
-        let g = datasets::by_name(dataset, 42).unwrap();
+        let g = common::dataset(dataset);
         let ordered = geo::order(&g, &GeoConfig::default()).apply(&g);
         let mut t = Table::new(
             &format!("Table 6: apps on {K} partitions, {dataset} (|E|={})", g.num_edges()),
@@ -35,7 +38,7 @@ fn main() {
                 Engine::new(input, &part, |_| Box::new(NativeBackend::new())).unwrap();
             let sssp = apps::sssp::run(&mut engine, 0, 10_000).unwrap().report;
             let wcc = apps::wcc::run(&mut engine, 10_000).unwrap().report;
-            let pr = apps::pagerank::run(&mut engine, input, PR_ITERS).unwrap().report;
+            let pr = apps::pagerank::run(&mut engine, input, pr_iters).unwrap().report;
             t.row(vec![
                 if method == "cep" { "geo+cep".into() } else { method.to_string() },
                 f2(q.rf),
@@ -48,8 +51,10 @@ fn main() {
                 format!("{:.3}", pr.time_s),
                 f2(pr.com_bytes as f64 / 1e6),
             ]);
+            log.row(&format!("{method}/{dataset}"), pr.time_s * 1e3, Some(q.rf));
         }
         t.print();
     }
+    log.finish();
     println!("paper Table 6: GEO+CEP wins TIME and COM on every app; EB=1.00; VB slightly high");
 }

@@ -6,8 +6,10 @@
 //! Expected shape (paper): GEO+CEP wins ALL through every component —
 //! INIT (no per-edge pass), APP (lowest RF), SCALE (O(1) repartitioning).
 
+mod common;
+
+use common::BenchLog;
 use egs::coordinator::{run_scenario, ControllerConfig};
-use egs::graph::datasets;
 use egs::metrics::table::{secs, Table};
 use egs::ordering::geo::{self, GeoConfig};
 use egs::runtime::native::NativeBackend;
@@ -15,9 +17,11 @@ use egs::scaling::scenario::Scenario;
 
 fn main() {
     let dataset = "pokec-s";
-    let g = datasets::by_name(dataset, 42).unwrap();
+    let g = common::dataset(dataset);
     let ordered = geo::order(&g, &GeoConfig::default()).apply(&g);
-    let (out_sc, in_sc) = Scenario::paper_pair(6, 9, 5);
+    let period = common::scaled(5, 2) as u32;
+    let (out_sc, in_sc) = Scenario::paper_pair(6, 9, period);
+    let mut log = BenchLog::new("table07");
 
     for scenario in [&out_sc, &in_sc] {
         let mut t = Table::new(
@@ -39,8 +43,10 @@ fn main() {
                 out.migrated_edges.to_string(),
                 format!("{:.2}", out.com_bytes as f64 / 1e6),
             ]);
+            log.row(&format!("{method}/{}", scenario.name), out.all_s * 1e3, None);
         }
         t.print();
     }
+    log.finish();
     println!("paper Table 7: GEO+CEP lowest in ALL and in every component");
 }

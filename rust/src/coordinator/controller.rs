@@ -15,6 +15,7 @@ use super::state::ClusterState;
 use crate::engine::{apps::pagerank, Combine, Engine};
 use crate::graph::Graph;
 use crate::ordering::geo::GeoConfig;
+use crate::par::ThreadConfig;
 use crate::partition::bvc::BvcState;
 use crate::partition::cep::Cep;
 use crate::partition::{ginger, hash1d, oblivious, CepView, EdgePartition, PartitionAssignment};
@@ -41,6 +42,9 @@ pub struct ControllerConfig {
     pub latency: LatencyModel,
     /// RNG seed for methods that need one
     pub seed: u64,
+    /// executor width for engine supersteps (pure execution knob —
+    /// results identical at any value; defaults to `PALLAS_THREADS`)
+    pub threads: ThreadConfig,
 }
 
 impl Default for ControllerConfig {
@@ -51,6 +55,7 @@ impl Default for ControllerConfig {
             value_bytes: 8,
             latency: LatencyModel::default(),
             seed: 42,
+            threads: ThreadConfig::default(),
         }
     }
 }
@@ -142,7 +147,8 @@ where
     };
     let mut assignment =
         initial_assignment(g, &method_state, &cfg.method, scenario.initial_k);
-    let mut engine = Engine::new(g, assignment.as_assignment(), &mut backend_for)?;
+    let mut engine = Engine::new(g, assignment.as_assignment(), &mut backend_for)?
+        .with_threads(cfg.threads);
     let mut init_s = t_init.elapsed().as_secs_f64() + provisioner.accounted().as_secs_f64();
 
     // ---- application state (PageRank), survives rescales
@@ -320,6 +326,9 @@ pub struct StreamingConfig {
     /// RF — the quality-drift baseline the acceptance criteria compare
     /// against; off by default
     pub measure_fresh_baseline: bool,
+    /// executor width for engine supersteps (ingest-side parallelism
+    /// follows `geo.threads`); pure execution knob — results identical
+    pub threads: ThreadConfig,
 }
 
 impl Default for StreamingConfig {
@@ -334,6 +343,7 @@ impl Default for StreamingConfig {
             flush_at_end: true,
             audit_rf: false,
             measure_fresh_baseline: false,
+            threads: ThreadConfig::default(),
         }
     }
 }
@@ -429,7 +439,7 @@ where
     let mut sg = StagedGraph::new(g, cfg.geo).with_policy(cfg.policy);
     let mut engine = {
         let assign = sg.assignment(k);
-        Engine::new(&sg, &assign, &mut backend_for)?
+        Engine::new(&sg, &assign, &mut backend_for)?.with_threads(cfg.threads)
     };
     let init_s = t_init.elapsed().as_secs_f64() + provisioner.accounted().as_secs_f64();
 
@@ -468,7 +478,7 @@ where
                 // reloads its (new) chunk — price the full redistribution
                 sg.compact();
                 let assign = sg.assignment(k);
-                engine = Engine::new(&sg, &assign, &mut backend_for)?;
+                engine = Engine::new(&sg, &assign, &mut backend_for)?.with_threads(cfg.threads);
                 let live = sg.live_edges() as u64;
                 let per_worker = live / k.max(1) as u64 * (8 + cfg.value_bytes);
                 let recv = vec![per_worker; k];
@@ -550,7 +560,7 @@ where
         let t = Instant::now();
         sg.compact();
         let assign = sg.assignment(k);
-        engine = Engine::new(&sg, &assign, &mut backend_for)?;
+        engine = Engine::new(&sg, &assign, &mut backend_for)?.with_threads(cfg.threads);
         churn_s += t.elapsed().as_secs_f64();
     }
 

@@ -30,6 +30,22 @@ impl CommMeter {
         self.messages.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record `msgs` master→mirror transfers totalling `bytes` in one
+    /// update — the bulk flavour the parallel superstep uses so that
+    /// per-shard counters land as a single atomic add instead of a
+    /// per-message cache-line storm.
+    pub fn record_scatter_n(&self, msgs: u64, bytes: u64) {
+        self.scatter_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.messages.fetch_add(msgs, Ordering::Relaxed);
+    }
+
+    /// Record `msgs` mirror→master transfers totalling `bytes` in one
+    /// update (bulk flavour of [`Self::record_gather`]).
+    pub fn record_gather_n(&self, msgs: u64, bytes: u64) {
+        self.gather_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.messages.fetch_add(msgs, Ordering::Relaxed);
+    }
+
     /// Total bytes both directions.
     pub fn total_bytes(&self) -> u64 {
         self.scatter_bytes.load(Ordering::Relaxed) + self.gather_bytes.load(Ordering::Relaxed)
@@ -73,6 +89,21 @@ mod tests {
         assert_eq!(m.messages(), 2);
         m.reset();
         assert_eq!(m.total_bytes(), 0);
+    }
+
+    #[test]
+    fn bulk_records_match_singles() {
+        let a = CommMeter::new();
+        let b = CommMeter::new();
+        for _ in 0..5 {
+            a.record_scatter(8);
+            a.record_gather(8);
+        }
+        b.record_scatter_n(5, 40);
+        b.record_gather_n(5, 40);
+        assert_eq!(a.scatter(), b.scatter());
+        assert_eq!(a.gather(), b.gather());
+        assert_eq!(a.messages(), b.messages());
     }
 
     #[test]

@@ -598,7 +598,7 @@ mod tests {
                 rng.next_u64(),
             );
             let n0 = g.num_vertices() as u64;
-            let cfg = GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 3 };
+            let cfg = GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 3, ..Default::default() };
             let mut sg = StagedGraph::new(g, cfg);
             let mut k = 2 + rng.below_usize(5);
             let mut layout = {

@@ -21,6 +21,7 @@ pub mod mirrors;
 pub mod worker;
 
 use crate::graph::EdgeSource;
+use crate::par::{self, ThreadConfig};
 use crate::partition::PartitionAssignment;
 use crate::runtime::{ComputeBackend, StepKind};
 use crate::scaling::migration::MigrationPlan;
@@ -28,6 +29,7 @@ use crate::stream::plan::ChurnPlan;
 use crate::Result;
 use comm::CommMeter;
 use mirrors::PartitionLayout;
+use std::sync::atomic::{AtomicU64, Ordering};
 use worker::Worker;
 
 /// Combine rule of the apply phase.
@@ -40,11 +42,18 @@ pub enum Combine {
 }
 
 /// The engine: layout + one worker per partition + a comm meter.
+///
+/// Supersteps run on the [`crate::par`] pool: workers compute their
+/// partitions concurrently (they own disjoint state) and the mirror
+/// aggregation is vertex-sharded with the per-vertex partition fold order
+/// fixed, so vertex state is **bit-identical at any thread count**.
 pub struct Engine {
     layout: PartitionLayout,
     workers: Vec<Worker>,
     /// byte/message meter (reset per app run)
     pub comm: CommMeter,
+    /// executor width for supersteps (pure execution knob)
+    threads: ThreadConfig,
 }
 
 impl Engine {
@@ -66,7 +75,24 @@ impl Engine {
         for p in 0..k {
             workers.push(Worker::new(&layout, p, backend_for(p))?);
         }
-        Ok(Engine { layout, workers, comm: CommMeter::new() })
+        Ok(Engine { layout, workers, comm: CommMeter::new(), threads: ThreadConfig::default() })
+    }
+
+    /// Executor width used by [`Self::superstep`].
+    pub fn threads(&self) -> ThreadConfig {
+        self.threads
+    }
+
+    /// Set the superstep executor width. Pure execution knob — vertex
+    /// state, comm totals and convergence are identical at any value.
+    pub fn set_threads(&mut self, threads: ThreadConfig) {
+        self.threads = threads;
+    }
+
+    /// Builder flavour of [`Self::set_threads`].
+    pub fn with_threads(mut self, threads: ThreadConfig) -> Engine {
+        self.threads = threads;
+        self
     }
 
     /// Execute a migration plan: splice the moved edge-id ranges through
@@ -166,6 +192,12 @@ impl Engine {
     /// Run one superstep over global state. `active[v]` gates the scatter
     /// phase; returns per-vertex combined partials (Sum) or the improved
     /// state (Min), plus the set of vertices whose value changed.
+    ///
+    /// All four phases run on the configured pool width and are
+    /// bit-identical at any value: workers own disjoint partition state,
+    /// the mirror aggregation shards the vertex space (each vertex folds
+    /// its partitions in ascending order, exactly the serial order), and
+    /// metering counts are sharded tallies of deterministic predicates.
     pub fn superstep(
         &mut self,
         kind: StepKind,
@@ -176,54 +208,91 @@ impl Engine {
     ) -> Result<(Vec<f32>, Vec<bool>)> {
         let n = state.len();
         assert_eq!(n, self.layout.num_vertices());
+        // tiny graphs (unit-test paths) skip the pool entirely; the guard
+        // depends only on n, so it cannot break width-invariance
+        let threads = if n < 64 { ThreadConfig::serial() } else { self.threads };
+        let k = self.workers.len();
 
         // --- 1. scatter: meter master→mirror broadcast of active vertices
-        for p in 0..self.workers.len() {
-            for &v in self.layout.vertices_of(p) {
-                if active[v as usize] && self.layout.master_of(v) != p as u32 {
-                    self.comm.record_scatter(8); // 4B id + 4B value
+        // (per-partition tallies, one bulk record; 4B id + 4B value each)
+        {
+            let layout = &self.layout;
+            let scatter_msgs: u64 = par::par_tasks(threads, k, |p| {
+                let mut c = 0u64;
+                for &v in layout.vertices_of(p) {
+                    if active[v as usize] && layout.master_of(v) != p as u32 {
+                        c += 1;
+                    }
                 }
-            }
+                c
+            })
+            .into_iter()
+            .sum();
+            self.comm.record_scatter_n(scatter_msgs, scatter_msgs * 8);
         }
 
-        // --- 2. compute on every worker (serially or via scoped threads;
-        // the PJRT actor serializes anyway, and determinism helps tests)
-        let mut partials: Vec<Vec<f32>> = Vec::with_capacity(self.workers.len());
-        for w in &mut self.workers {
-            partials.push(w.compute(kind, state, aux)?);
+        // --- 2. compute: every worker runs its partition concurrently
+        // (disjoint local buffers); on failure the lowest partition id's
+        // error wins, deterministically
+        let results = par::par_map_mut(threads, &mut self.workers, |_, w| {
+            w.compute(kind, state, aux)
+        });
+        let mut partials: Vec<Vec<f32>> = Vec::with_capacity(k);
+        for r in results {
+            partials.push(r?);
         }
 
-        // --- 3+4. gather + apply
+        // --- 3+4. gather + apply, vertex-sharded: each shard owns a
+        // disjoint slice of `out` and folds its vertices' partitions in
+        // ascending partition order — the exact serial fold order per
+        // vertex, so float accumulation is bit-identical at any width
+        let layout = &self.layout;
         let mut out = match combine {
             Combine::Sum => vec![0f32; n],
             Combine::Min => state.to_vec(),
         };
-        for (p, partial) in partials.iter().enumerate() {
-            for (local, &v) in self.layout.vertices_of(p).iter().enumerate() {
-                let x = partial[local];
-                match combine {
-                    Combine::Sum => {
-                        if x != 0.0 {
-                            if self.layout.master_of(v) != p as u32 {
-                                self.comm.record_gather(8);
+        let gather_msgs = AtomicU64::new(0);
+        par::par_chunks_mut(threads, &mut out, |vlo, shard| {
+            let vhi = vlo + shard.len();
+            let mut local = 0u64;
+            for (p, partial) in partials.iter().enumerate() {
+                let verts = layout.vertices_of(p);
+                let a = verts.partition_point(|&v| (v as usize) < vlo);
+                let b = verts.partition_point(|&v| (v as usize) < vhi);
+                for (off, &v) in verts[a..b].iter().enumerate() {
+                    let x = partial[a + off];
+                    let slot = &mut shard[v as usize - vlo];
+                    match combine {
+                        Combine::Sum => {
+                            if x != 0.0 {
+                                if layout.master_of(v) != p as u32 {
+                                    local += 1;
+                                }
+                                *slot += x;
                             }
-                            out[v as usize] += x;
                         }
-                    }
-                    Combine::Min => {
-                        if x < out[v as usize] {
-                            if self.layout.master_of(v) != p as u32 {
-                                self.comm.record_gather(8);
+                        Combine::Min => {
+                            if x < *slot {
+                                if layout.master_of(v) != p as u32 {
+                                    local += 1;
+                                }
+                                *slot = x;
                             }
-                            out[v as usize] = x;
                         }
                     }
                 }
             }
-        }
+            gather_msgs.fetch_add(local, Ordering::Relaxed);
+        });
+        let gm = gather_msgs.load(Ordering::Relaxed);
+        self.comm.record_gather_n(gm, gm * 8);
+
         let changed: Vec<bool> = match combine {
             Combine::Sum => vec![true; n], // PR: all vertices refresh
-            Combine::Min => out.iter().zip(state.iter()).map(|(a, b)| a < b).collect(),
+            Combine::Min => {
+                let out_ref = &out;
+                par::par_map(threads, n, |v| out_ref[v] < state[v])
+            }
         };
         Ok((out, changed))
     }
@@ -267,6 +336,52 @@ mod tests {
             e.superstep(StepKind::PageRank, Combine::Sum, &state, &aux, &active).unwrap();
         let total: f32 = out.iter().sum();
         assert!((total - 1.0).abs() < 1e-6, "mass {total}");
+    }
+
+    /// The parallel-superstep contract: vertex state (bit-level), changed
+    /// sets and comm totals are identical at widths 1, 2 and 8, for both
+    /// combine rules.
+    #[test]
+    fn superstep_is_thread_invariant() {
+        use crate::graph::generators::erdos_renyi;
+        use crate::par::ThreadConfig;
+        use crate::partition::{cep::Cep, CepView};
+
+        let g = erdos_renyi(200, 900, 3);
+        let n = g.num_vertices();
+        let view = CepView::new(Cep::new(g.num_edges(), 6));
+        let state: Vec<f32> = (0..n).map(|v| ((v * 31) % 97) as f32 / 97.0).collect();
+        let aux: Vec<f32> = (0..n as u32)
+            .map(|v| {
+                let d = g.degree(v);
+                if d == 0 {
+                    0.0
+                } else {
+                    1.0 / d as f32
+                }
+            })
+            .collect();
+        let active = vec![true; n];
+        for (kind, combine) in [(StepKind::PageRank, Combine::Sum), (StepKind::Wcc, Combine::Min)]
+        {
+            let mut reference: Option<(Vec<u32>, Vec<bool>, u64)> = None;
+            for w in [1usize, 2, 8] {
+                let mut e = Engine::new(&g, &view, |_| Box::new(NativeBackend::new()))
+                    .unwrap()
+                    .with_threads(ThreadConfig::new(w));
+                let (out, ch) = e.superstep(kind, combine, &state, &aux, &active).unwrap();
+                let bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+                let bytes = e.comm.total_bytes();
+                match &reference {
+                    None => reference = Some((bits, ch, bytes)),
+                    Some((rbits, rch, rbytes)) => {
+                        assert_eq!(&bits, rbits, "{kind:?} width {w}");
+                        assert_eq!(&ch, rch, "{kind:?} width {w}");
+                        assert_eq!(bytes, *rbytes, "{kind:?} width {w}");
+                    }
+                }
+            }
+        }
     }
 
     /// Plan-based rescale end-to-end: apply_migration over a chain of CEP

@@ -4,6 +4,7 @@
 use super::csr::Csr;
 use super::edgelist::{Edge, EdgeList};
 use super::Graph;
+use crate::par::{self, ThreadConfig};
 use crate::VertexId;
 use std::collections::HashSet;
 
@@ -39,8 +40,16 @@ impl GraphBuilder {
     }
 
     /// Finalize: dedup, drop self loops, keep vertex ids as given
-    /// (`0..=max_vertex`), build CSR.
+    /// (`0..=max_vertex`), build CSR on the process-wide thread pool.
     pub fn build(self) -> Graph {
+        self.build_with(par::global())
+    }
+
+    /// [`Self::build`] with an explicit executor width for the CSR
+    /// construction (the dedup pass stays sequential — first-occurrence
+    /// semantics make it order-dependent). Output is identical at any
+    /// width.
+    pub fn build_with(self, threads: ThreadConfig) -> Graph {
         let n = if self.raw.is_empty() { 0 } else { self.max_vertex as usize + 1 };
         let mut seen: HashSet<(VertexId, VertexId)> = HashSet::with_capacity(self.raw.len());
         let mut edges = Vec::with_capacity(self.raw.len());
@@ -54,7 +63,7 @@ impl GraphBuilder {
             }
         }
         let el = EdgeList::from_vec(edges);
-        let csr = Csr::build(n, &el);
+        let csr = Csr::build_with(n, &el, threads);
         Graph::from_parts(el, csr)
     }
 
@@ -93,6 +102,42 @@ impl GraphBuilder {
         let el = EdgeList::from_vec(mapped);
         let csr = Csr::build(next as usize, &el);
         Graph::from_parts(el, csr)
+    }
+}
+
+#[cfg(test)]
+mod par_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn build_with_matches_build_at_every_width() {
+        let mut rng = Rng::new(0xB11D);
+        let raw: Vec<(VertexId, VertexId)> =
+            (0..20_000).map(|_| (rng.below(3000) as u32, rng.below(3000) as u32)).collect();
+        let reference = {
+            let mut b = GraphBuilder::new();
+            for &(u, v) in &raw {
+                b.push(u, v);
+            }
+            b.build_with(ThreadConfig::serial())
+        };
+        for w in [2usize, 8] {
+            let mut b = GraphBuilder::new();
+            for &(u, v) in &raw {
+                b.push(u, v);
+            }
+            let g = b.build_with(ThreadConfig::new(w));
+            assert_eq!(g.num_vertices(), reference.num_vertices(), "width {w}");
+            assert_eq!(g.edges().as_slice(), reference.edges().as_slice(), "width {w}");
+            for v in 0..g.num_vertices() as VertexId {
+                assert_eq!(
+                    g.neighbors(v).collect::<Vec<_>>(),
+                    reference.neighbors(v).collect::<Vec<_>>(),
+                    "width {w} vertex {v}"
+                );
+            }
+        }
     }
 }
 

@@ -4,7 +4,19 @@
 //! with its edge id so that ordering algorithms can mark edges as assigned.
 
 use super::edgelist::EdgeList;
+use crate::par::{self, ThreadConfig};
 use crate::{EdgeId, VertexId};
+
+/// Inputs below this edge count build serially — the parallel fill cannot
+/// amortize its spawns on them.
+const PAR_BUILD_MIN_EDGES: usize = 8192;
+
+/// Cap on fill/sort shards: every vertex shard re-scans the edge list
+/// (that is what keeps the scatter writes disjoint without unsafe), so
+/// the read amplification is bounded at this factor even when the
+/// configured width is larger. Sequential re-reads are cheap next to the
+/// random scatter writes the shards parallelize, but they are not free.
+const MAX_FILL_SHARDS: usize = 16;
 
 /// CSR adjacency: `offsets[v]..offsets[v+1]` indexes into parallel arrays
 /// `nbr` (neighbour vertex) and `eid` (edge id in the edge list).
@@ -16,8 +28,98 @@ pub struct Csr {
 }
 
 impl Csr {
-    /// Build from an edge list over `n` vertices (two passes, O(|V|+|E|)).
+    /// Build from an edge list over `n` vertices on the process-wide
+    /// thread pool ([`crate::par::global`]).
     pub fn build(n: usize, edges: &EdgeList) -> Csr {
+        Csr::build_with(n, edges, par::global())
+    }
+
+    /// Build with an explicit executor width. The result is bit-identical
+    /// at any width: rows are always sorted by `(neighbour, edge id)`, so
+    /// the parallel fill order is unobservable. The parallel path derives
+    /// the offset table from **per-thread counting-sort partials** over
+    /// edge shards, then fills and sorts volume-balanced vertex shards
+    /// whose entry storage is contiguous and disjoint.
+    pub fn build_with(n: usize, edges: &EdgeList, threads: ThreadConfig) -> Csr {
+        let m = edges.len();
+        let t = threads.threads().min(n.max(1)).min(MAX_FILL_SHARDS);
+        if t <= 1 || m < PAR_BUILD_MIN_EDGES {
+            return Csr::build_serial(n, edges);
+        }
+        let el = edges.as_slice();
+
+        // 1. per-thread counting-sort partials over edge shards
+        let shard = m.div_ceil(t);
+        let nshards = m.div_ceil(shard);
+        let partials: Vec<Vec<u32>> = par::par_tasks(threads, nshards, |si| {
+            let lo = si * shard;
+            let hi = ((si + 1) * shard).min(m);
+            let mut c = vec![0u32; n];
+            for e in &el[lo..hi] {
+                c[e.u as usize] += 1;
+                c[e.v as usize] += 1;
+            }
+            c
+        });
+
+        // 2. offsets = exclusive prefix sum of the merged partials
+        let mut offsets = vec![0u64; n + 1];
+        for v in 0..n {
+            let deg: u64 = partials.iter().map(|p| p[v] as u64).sum();
+            offsets[v + 1] = offsets[v] + deg;
+        }
+        let m2 = offsets[n] as usize;
+        let mut nbr = vec![0 as VertexId; m2];
+        let mut eid = vec![0 as EdgeId; m2];
+
+        // 3. vertex shards balanced by adjacency volume; shard s owns the
+        //    contiguous entry range [offsets[vcuts[s]], offsets[vcuts[s+1]])
+        let mut vcuts: Vec<usize> = Vec::with_capacity(t + 1);
+        vcuts.push(0);
+        for s in 1..t {
+            let target = m2 as u64 * s as u64 / t as u64;
+            let v = offsets.partition_point(|&o| o < target).min(n);
+            let prev = *vcuts.last().unwrap();
+            vcuts.push(v.max(prev));
+        }
+        vcuts.push(n);
+        let entry_cuts: Vec<usize> = vcuts[1..t].iter().map(|&v| offsets[v] as usize).collect();
+
+        // 4. fill + row-sort each vertex shard (each scans the edge list;
+        //    writes stay inside the shard's own entry range)
+        par::par_split2_at_mut(threads, &mut nbr, &mut eid, &entry_cuts, |si, nbr_s, eid_s| {
+            let (vlo, vhi) = (vcuts[si], vcuts[si + 1]);
+            if vlo == vhi {
+                return;
+            }
+            let base = offsets[vlo];
+            let mut cur: Vec<u32> = vec![0u32; vhi - vlo];
+            for (id, e) in el.iter().enumerate() {
+                let (u, v) = (e.u as usize, e.v as usize);
+                if u >= vlo && u < vhi {
+                    let pos = (offsets[u] - base) as usize + cur[u - vlo] as usize;
+                    nbr_s[pos] = e.v;
+                    eid_s[pos] = id as EdgeId;
+                    cur[u - vlo] += 1;
+                }
+                if v >= vlo && v < vhi {
+                    let pos = (offsets[v] - base) as usize + cur[v - vlo] as usize;
+                    nbr_s[pos] = e.u;
+                    eid_s[pos] = id as EdgeId;
+                    cur[v - vlo] += 1;
+                }
+            }
+            for v in vlo..vhi {
+                let lo = (offsets[v] - base) as usize;
+                let hi = (offsets[v + 1] - base) as usize;
+                sort_row(&mut nbr_s[lo..hi], &mut eid_s[lo..hi]);
+            }
+        });
+        Csr { offsets, nbr, eid }
+    }
+
+    /// The original single-threaded two-pass build.
+    fn build_serial(n: usize, edges: &EdgeList) -> Csr {
         let mut counts = vec![0u64; n + 1];
         for e in edges.iter() {
             counts[e.u as usize + 1] += 1;
@@ -53,15 +155,8 @@ impl Csr {
         for v in 0..self.num_vertices() {
             let lo = self.offsets[v] as usize;
             let hi = self.offsets[v + 1] as usize;
-            // sort (nbr, eid) jointly by nbr then eid
-            let mut row: Vec<(VertexId, EdgeId)> = (lo..hi)
-                .map(|i| (self.nbr[i], self.eid[i]))
-                .collect();
-            row.sort_unstable();
-            for (off, (n, e)) in row.into_iter().enumerate() {
-                self.nbr[lo + off] = n;
-                self.eid[lo + off] = e;
-            }
+            let (nbr, eid) = (&mut self.nbr[lo..hi], &mut self.eid[lo..hi]);
+            sort_row(nbr, eid);
         }
     }
 
@@ -82,6 +177,21 @@ impl Csr {
         let lo = self.offsets[v as usize] as usize;
         let hi = self.offsets[v as usize + 1] as usize;
         (lo..hi).map(move |i| (self.nbr[i], self.eid[i]))
+    }
+}
+
+/// Jointly sort one adjacency row's parallel `(nbr, eid)` arrays by
+/// neighbour id, then edge id.
+fn sort_row(nbr: &mut [VertexId], eid: &mut [EdgeId]) {
+    if nbr.len() <= 1 {
+        return;
+    }
+    let mut row: Vec<(VertexId, EdgeId)> =
+        nbr.iter().copied().zip(eid.iter().copied()).collect();
+    row.sort_unstable();
+    for (i, (nv, ev)) in row.into_iter().enumerate() {
+        nbr[i] = nv;
+        eid[i] = ev;
     }
 }
 
@@ -135,5 +245,25 @@ mod tests {
         let csr = Csr::build(n, &el);
         let total: usize = (0..n as VertexId).map(|v| csr.degree(v)).sum();
         assert_eq!(total, 2 * el.len());
+    }
+
+    /// The parallel fill must be unobservable: offsets, neighbours and
+    /// edge ids byte-identical to the serial build at every width (the
+    /// input is made large enough to cross the parallel threshold).
+    #[test]
+    fn parallel_build_matches_serial_at_every_width() {
+        use crate::graph::generators::{rmat, RmatParams};
+        use crate::par::ThreadConfig;
+
+        let g = rmat(&RmatParams { scale: 11, edge_factor: 8, ..Default::default() }, 5);
+        let n = g.num_vertices();
+        assert!(g.num_edges() >= super::PAR_BUILD_MIN_EDGES, "input below parallel threshold");
+        let reference = Csr::build_serial(n, g.edges());
+        for w in [1usize, 2, 3, 8] {
+            let got = Csr::build_with(n, g.edges(), ThreadConfig::new(w));
+            assert_eq!(got.offsets, reference.offsets, "width {w}");
+            assert_eq!(got.nbr, reference.nbr, "width {w}");
+            assert_eq!(got.eid, reference.eid, "width {w}");
+        }
     }
 }

@@ -44,6 +44,12 @@
 //!
 //! The [`coordinator`] drives exactly this loop at every scale event.
 //!
+//! Every hot path above (CSR construction, the quality sweeps, engine
+//! supersteps and mirror aggregation, staged-batch ingest) runs on the
+//! [`par`] deterministic parallel runtime: one scoped thread pool with a
+//! fixed-fold-order reduce, so results are **bit-identical at any thread
+//! count** (knob: `PALLAS_THREADS`, see [`par::ThreadConfig`]).
+//!
 //! ## The streaming churn layer
 //!
 //! [`stream`] lifts the pipeline onto *evolving* graphs. A
@@ -89,6 +95,7 @@ pub mod engine;
 pub mod graph;
 pub mod metrics;
 pub mod ordering;
+pub mod par;
 pub mod partition;
 pub mod runtime;
 pub mod scaling;

@@ -10,6 +10,11 @@
 //! egs table2
 //! egs info      --dataset orkut-s
 //! ```
+//!
+//! `run` and `elastic` honour `--threads N` for their engine supersteps;
+//! everything else (CSR builds, orderings, quality sweeps) follows the
+//! process-wide `PALLAS_THREADS` knob (default: detected parallelism).
+//! Results are identical at any width.
 
 use anyhow::{bail, Context};
 use egs::coordinator::{run_scenario, ControllerConfig};
@@ -172,7 +177,8 @@ fn cmd_run(args: &Args) -> egs::Result<()> {
     let part = edge_partition_by_name(&args.get_or("method", "cep"), &ordered, k, seed)
         .context("partitioner")?;
     let mut factory = backend_factory(args)?;
-    let mut engine = Engine::new(&ordered, &part, &mut *factory)?;
+    let mut engine =
+        Engine::new(&ordered, &part, &mut *factory)?.with_threads(args.thread_config());
     let report = match app.as_str() {
         "pagerank" => apps::pagerank::run(&mut engine, &ordered, iters)?.report,
         "sssp" => apps::sssp::run(&mut engine, 0, 10_000)?.report,
@@ -202,7 +208,11 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
         "in" => Scenario::scale_in(k, steps, period),
         other => bail!("unknown scenario {other} (out|in)"),
     };
-    let cfg = ControllerConfig { method: args.get_or("method", "cep"), ..Default::default() };
+    let cfg = ControllerConfig {
+        method: args.get_or("method", "cep"),
+        threads: args.thread_config(),
+        ..Default::default()
+    };
     let mut factory = backend_factory(args)?;
     let out = run_scenario(&ordered, &scenario, &cfg, &mut *factory)?;
     let mut t = Table::new(

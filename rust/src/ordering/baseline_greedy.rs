@@ -155,7 +155,8 @@ mod tests {
         for seed in [1u64, 2, 3] {
             let g = erdos_renyi(40, 240, seed); // d_avg 12 < |E|/k_max = 60
             let cfg3 = BaselineConfig { k_min: 2, k_max: 4, delta: Some(30), seed: 9 };
-            let cfg4 = GeoConfig { k_min: 2, k_max: 4, delta: Some(30), seed: 9 };
+            let cfg4 =
+                GeoConfig { k_min: 2, k_max: 4, delta: Some(30), seed: 9, ..Default::default() };
             let o3 = eval_eq1(&order(&g, &cfg3).apply(&g), 2, 4);
             let o4 = eval_eq1(&geo::order(&g, &cfg4).apply(&g), 2, 4);
             let rel = (o4 - o3).abs() / o3;

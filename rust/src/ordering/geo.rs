@@ -15,6 +15,7 @@ use super::pq::IndexedPq;
 use super::window::TailWindow;
 use super::EdgeOrdering;
 use crate::graph::Graph;
+use crate::par::ThreadConfig;
 use crate::util::rng::Rng;
 use crate::{EdgeId, VertexId};
 
@@ -30,11 +31,18 @@ pub struct GeoConfig {
     pub delta: Option<usize>,
     /// seed for the random restart vertex
     pub seed: u64,
+    /// executor width for the parallel stages downstream of this config
+    /// ([`crate::ordering::geo_parallel`] region runs, staged-graph ingest
+    /// and compaction CSR builds). Pure execution knob: results are
+    /// bit-identical at any value; the greedy pass itself ([`order`]) is
+    /// inherently sequential and ignores it. Defaults to the process-wide
+    /// `PALLAS_THREADS` resolution.
+    pub threads: ThreadConfig,
 }
 
 impl Default for GeoConfig {
     fn default() -> Self {
-        GeoConfig { k_min: 4, k_max: 128, delta: None, seed: 42 }
+        GeoConfig { k_min: 4, k_max: 128, delta: None, seed: 42, threads: ThreadConfig::default() }
     }
 }
 
@@ -166,7 +174,7 @@ mod tests {
     use crate::ordering::random::random_edge_order;
 
     fn cfg_small() -> GeoConfig {
-        GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 1 }
+        GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 1, ..Default::default() }
     }
 
     #[test]
@@ -236,7 +244,7 @@ mod tests {
 
     #[test]
     fn alpha_beta_formulas() {
-        let cfg = GeoConfig { k_min: 4, k_max: 6, delta: None, seed: 0 };
+        let cfg = GeoConfig { k_min: 4, k_max: 6, delta: None, seed: 0, ..Default::default() };
         // alpha = ⌊20/4⌋+⌊20/5⌋+⌊20/6⌋ = 5+4+3 = 12
         assert_eq!(cfg.alpha(20), 12);
         assert_eq!(cfg.beta(), 2);

@@ -1,24 +1,33 @@
 //! Parallel GEO — the paper's §7 future-work item, implemented as a
-//! partition-and-conquer wrapper: split the vertex set into `threads`
+//! partition-and-conquer wrapper: split the vertex set into `regions`
 //! BFS-contiguous regions, run sequential GEO on each induced edge
-//! subgraph concurrently, and concatenate the sub-orderings.
+//! subgraph across the shared [`crate::par`] pool, and concatenate the
+//! sub-orderings.
 //!
 //! Cross-region edges are owned by the region of their BFS-earlier
 //! endpoint, so every edge is ordered exactly once. Quality degrades
 //! mildly versus sequential GEO (region boundaries cut some locality —
 //! quantified by `benches/ablation_geo.rs`); wall time drops near
-//! linearly in the thread count.
+//! linearly in the executor width.
+//!
+//! **Determinism:** the output depends only on `(g, cfg, regions)`. The
+//! region count is a *partitioning* parameter (more regions = coarser
+//! quality, more available parallelism); the executor width
+//! (`cfg.threads`) merely schedules the region jobs and is unobservable
+//! in the result — the thread-count invariance suite pins this down.
 
 use super::geo::{self, GeoConfig};
 use super::{bfs, EdgeOrdering};
 use crate::graph::Graph;
+use crate::par::{self, ThreadConfig};
 use crate::EdgeId;
 
-/// Order `g` with `threads` parallel GEO workers.
-pub fn order(g: &Graph, cfg: &GeoConfig, threads: usize) -> EdgeOrdering {
-    let threads = threads.max(1);
+/// Order `g` with `regions` parallel GEO sub-problems, executed on
+/// `cfg.threads` pool workers.
+pub fn order(g: &Graph, cfg: &GeoConfig, regions: usize) -> EdgeOrdering {
+    let regions = regions.max(1);
     let m = g.num_edges();
-    if threads == 1 || m < 4096 {
+    if regions == 1 || m < 4096 {
         return geo::order(g, cfg);
     }
     // 1. BFS vertex order gives spatially contiguous regions
@@ -29,24 +38,17 @@ pub fn order(g: &Graph, cfg: &GeoConfig, threads: usize) -> EdgeOrdering {
     // 2. bucket edges by the region of their BFS-rank *midpoint* — the
     // min-endpoint rule funnels every hub-adjacent edge into region 0
     // (the BFS core), starving the other workers (§Perf)
-    let mut buckets: Vec<Vec<EdgeId>> = vec![Vec::new(); threads];
+    let mut buckets: Vec<Vec<EdgeId>> = vec![Vec::new(); regions];
     for (eid, e) in g.edges().iter().enumerate() {
         let mid = (rank[e.u as usize] as u64 + rank[e.v as usize] as u64) / 2;
-        let r = ((mid * threads as u64) / n as u64) as usize;
-        buckets[r.min(threads - 1)].push(eid as EdgeId);
+        let r = ((mid * regions as u64) / n as u64) as usize;
+        buckets[r.min(regions - 1)].push(eid as EdgeId);
     }
 
-    // 3. order each region's induced subgraph concurrently
-    let sub_orders: Vec<Vec<EdgeId>> = std::thread::scope(|s| {
-        let handles: Vec<_> = buckets
-            .iter()
-            .enumerate()
-            .map(|(r, bucket)| {
-                let cfg = GeoConfig { seed: cfg.seed ^ r as u64, ..*cfg };
-                s.spawn(move || order_bucket(g, bucket, &cfg))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("geo worker")).collect()
+    // 3. order each region's induced subgraph across the shared pool
+    let sub_orders: Vec<Vec<EdgeId>> = par::par_tasks(cfg.threads, regions, |r| {
+        let sub_cfg = GeoConfig { seed: cfg.seed ^ r as u64, ..*cfg };
+        order_bucket(g, &buckets[r], &sub_cfg)
     });
 
     // 4. concatenate region orders (region id = coarse chunk locality)
@@ -64,7 +66,9 @@ pub fn order(g: &Graph, cfg: &GeoConfig, threads: usize) -> EdgeOrdering {
 /// §Perf: the subgraph is assembled directly (flat-array id remap, no
 /// dedup pass — bucket edges are already unique) instead of through
 /// `GraphBuilder`; the builder's HashSet dedup dominated wall time and
-/// made 4 workers *slower* than sequential on 900k-edge graphs.
+/// made 4 workers *slower* than sequential on 900k-edge graphs. The
+/// sub-CSR builds serially — the pool is already saturated with one job
+/// per region, so nesting would only oversubscribe.
 fn order_bucket(g: &Graph, bucket: &[EdgeId], cfg: &GeoConfig) -> Vec<EdgeId> {
     if bucket.is_empty() {
         return Vec::new();
@@ -84,7 +88,7 @@ fn order_bucket(g: &Graph, bucket: &[EdgeId], cfg: &GeoConfig) -> Vec<EdgeId> {
         sub_edges.push(crate::graph::Edge::new(remap[e.u as usize], remap[e.v as usize]));
     }
     let el = crate::graph::EdgeList::from_vec(sub_edges);
-    let csr = crate::graph::Csr::build(next as usize, &el);
+    let csr = crate::graph::Csr::build_with(next as usize, &el, ThreadConfig::serial());
     let sub = Graph::from_parts(el, csr);
     // sub edge order == bucket order (insertion order preserved)
     let sub_order = geo::order(&sub, cfg);
@@ -123,10 +127,26 @@ mod tests {
     }
 
     #[test]
-    fn single_thread_equals_sequential() {
+    fn single_region_equals_sequential() {
         let g = rmat(&RmatParams { scale: 9, edge_factor: 6, ..Default::default() }, 3);
         let a = order(&g, &GeoConfig::default(), 1);
         let b = geo::order(&g, &GeoConfig::default());
         assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    /// Executor width is unobservable: the same `(cfg, regions)` must give
+    /// the same permutation whether 1 or 8 pool workers ran the regions.
+    #[test]
+    fn executor_width_does_not_change_the_ordering() {
+        let g = rmat(&RmatParams { scale: 11, edge_factor: 8, ..Default::default() }, 4);
+        let reference = {
+            let cfg = GeoConfig { threads: ThreadConfig::serial(), ..Default::default() };
+            order(&g, &cfg, 4)
+        };
+        for w in [2usize, 8] {
+            let cfg = GeoConfig { threads: ThreadConfig::new(w), ..Default::default() };
+            let o = order(&g, &cfg, 4);
+            assert_eq!(o.as_slice(), reference.as_slice(), "width {w}");
+        }
     }
 }

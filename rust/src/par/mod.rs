@@ -1,0 +1,121 @@
+//! **Deterministic parallel runtime** — the crate-wide scoped thread pool
+//! (std-only; the vendored crate set has no `rayon`).
+//!
+//! The paper's headline claim is *time efficiency*, and §7 names
+//! parallelized preprocessing as the key future-work item. This module is
+//! the one audited place that parallelism comes from: CSR construction,
+//! the RF/EB/VB quality sweeps, engine supersteps and mirror aggregation,
+//! staged-batch ingest and parallel GEO all run through the primitives
+//! here instead of hand-rolling `std::thread::scope`.
+//!
+//! ## The determinism contract
+//!
+//! Every primitive is **bit-identical at any thread count**:
+//!
+//! * [`par_map`] / [`par_tasks`] return results in index order — the
+//!   thread that computed an element is unobservable.
+//! * [`par_reduce`] splits `0..n` at **fixed chunk boundaries** that
+//!   depend only on `n` (never on the thread count) and folds the
+//!   per-chunk partials in ascending chunk order. Non-associative folds
+//!   (floating-point sums, first-error selection) therefore reduce in
+//!   exactly the same order whether 1 or 64 threads ran the map phase.
+//! * [`par_chunks_mut`] / [`par_map_mut`] hand each thread a disjoint
+//!   sub-slice; callers make per-element work independent of the
+//!   sharding, so the written bytes are the same at any width.
+//!
+//! The thread count comes from a [`ThreadConfig`]: explicit
+//! (`ThreadConfig::new(8)`), or the process default
+//! ([`ThreadConfig::default`] = [`global`]) which reads the
+//! `PALLAS_THREADS` environment knob once and falls back to the detected
+//! hardware parallelism. CI runs the whole test suite under
+//! `PALLAS_THREADS=1` and `=4` to enforce the contract end to end.
+
+mod pool;
+
+pub use pool::{par_chunks_mut, par_map, par_map_mut, par_reduce, par_split2_at_mut, par_tasks};
+
+use std::sync::OnceLock;
+
+/// Maximum thread count the auto-detected default will pick (explicit
+/// `PALLAS_THREADS` / [`ThreadConfig::new`] values are not capped).
+pub const MAX_AUTO_THREADS: usize = 16;
+
+/// Executor-width configuration for the parallel runtime.
+///
+/// Carried by [`crate::ordering::geo::GeoConfig`], [`crate::engine::Engine`]
+/// and the coordinator configs; purely an *execution* knob — results are
+/// identical at any value (see the module docs for the contract).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ThreadConfig {
+    threads: usize,
+}
+
+impl ThreadConfig {
+    /// Exactly `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> ThreadConfig {
+        ThreadConfig { threads: threads.max(1) }
+    }
+
+    /// Single-threaded execution (no spawns at all).
+    pub fn serial() -> ThreadConfig {
+        ThreadConfig::new(1)
+    }
+
+    /// Resolve from the environment: `PALLAS_THREADS` if set to a positive
+    /// integer, else the detected hardware parallelism (capped at
+    /// [`MAX_AUTO_THREADS`]).
+    pub fn from_env() -> ThreadConfig {
+        match std::env::var("PALLAS_THREADS").ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+            Some(t) if t >= 1 => ThreadConfig::new(t),
+            _ => {
+                let detected =
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+                ThreadConfig::new(detected.min(MAX_AUTO_THREADS))
+            }
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when no spawning will happen.
+    pub fn is_serial(&self) -> bool {
+        self.threads == 1
+    }
+}
+
+impl Default for ThreadConfig {
+    /// The process-wide default: [`global`].
+    fn default() -> ThreadConfig {
+        global()
+    }
+}
+
+/// The process-wide thread configuration, resolved from the environment
+/// once ([`ThreadConfig::from_env`]) and cached.
+pub fn global() -> ThreadConfig {
+    static GLOBAL: OnceLock<ThreadConfig> = OnceLock::new();
+    *GLOBAL.get_or_init(ThreadConfig::from_env)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_clamps_to_one() {
+        assert_eq!(ThreadConfig::new(0).threads(), 1);
+        assert!(ThreadConfig::new(0).is_serial());
+        assert_eq!(ThreadConfig::new(5).threads(), 5);
+        assert!(!ThreadConfig::new(5).is_serial());
+    }
+
+    #[test]
+    fn global_is_stable() {
+        assert_eq!(global(), global());
+        assert_eq!(ThreadConfig::default(), global());
+        assert!(global().threads() >= 1);
+    }
+}

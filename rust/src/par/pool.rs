@@ -1,0 +1,371 @@
+//! The execution primitives behind [`crate::par`]: scoped worker threads
+//! over fixed, thread-count-independent work decompositions.
+//!
+//! Threads are spawned per invocation through `std::thread::scope` —
+//! workers share a lock-free chunk cursor, so the pool behaves like a
+//! work-stealing executor without keeping idle threads alive between
+//! calls. Spawn overhead (~10 µs/thread) amortizes over the chunk-sized
+//! work items the callers hand in; every primitive short-circuits to an
+//! inline serial loop when the configured width is 1 or the input is too
+//! small to pay for a spawn.
+
+use super::ThreadConfig;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Fixed chunk-count target for [`par_reduce`]: boundaries depend only on
+/// `n`, never on the thread count (the determinism contract).
+const REDUCE_CHUNKS: usize = 256;
+
+/// Smallest chunk worth dispatching (items).
+const MIN_CHUNK: usize = 1024;
+
+/// Chunk width for an input of `n` items — a pure function of `n`.
+fn chunk_width(n: usize) -> usize {
+    let target = n.div_ceil(REDUCE_CHUNKS);
+    target.max(MIN_CHUNK).min(n.max(1))
+}
+
+/// Map `0..n` through `map` chunk-wise and fold the per-chunk partials
+/// **in ascending chunk order**. Chunk boundaries are a pure function of
+/// `n` ([`chunk_width`]), so the fold consumes the same partial sequence
+/// at any thread count — non-associative folds stay bit-identical.
+pub fn par_reduce<A, R, M, F>(threads: ThreadConfig, n: usize, map: M, init: R, mut fold: F) -> R
+where
+    A: Send,
+    M: Fn(Range<usize>) -> A + Sync,
+    F: FnMut(R, A) -> R,
+{
+    if n == 0 {
+        return init;
+    }
+    let chunk = chunk_width(n);
+    let nchunks = n.div_ceil(chunk);
+    let t = threads.threads().min(nchunks);
+    if t <= 1 {
+        let mut acc = init;
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            acc = fold(acc, map(start..end));
+            start = end;
+        }
+        return acc;
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut tagged: Vec<(usize, A)> = std::thread::scope(|s| {
+        let map = &map;
+        let cursor = &cursor;
+        let handles: Vec<_> = (0..t)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut out: Vec<(usize, A)> = Vec::new();
+                    loop {
+                        let c = cursor.fetch_add(1, Ordering::Relaxed);
+                        if c >= nchunks {
+                            break;
+                        }
+                        let start = c * chunk;
+                        let end = (start + chunk).min(n);
+                        out.push((c, map(start..end)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("par_reduce worker panicked"))
+            .collect()
+    });
+    tagged.sort_unstable_by_key(|e| e.0);
+    tagged.into_iter().fold(init, |acc, (_, a)| fold(acc, a))
+}
+
+/// Map every index of `0..n` to a value; results in index order.
+pub fn par_map<T, F>(threads: ThreadConfig, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    par_reduce(
+        threads,
+        n,
+        |r| r.map(&f).collect::<Vec<T>>(),
+        Vec::with_capacity(n),
+        |mut acc, part| {
+            acc.extend(part);
+            acc
+        },
+    )
+}
+
+/// One task per index for a *small* number of heavy, independent jobs
+/// (per-partition sweeps, per-region GEO runs) — unlike [`par_map`] this
+/// never batches indices, so `n = 8` still uses 8 workers. Results in
+/// index order.
+pub fn par_tasks<T, F>(threads: ThreadConfig, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let t = threads.threads().min(n);
+    if t <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut tagged: Vec<(usize, T)> = std::thread::scope(|s| {
+        let f = &f;
+        let cursor = &cursor;
+        let handles: Vec<_> = (0..t)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut out: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("par_tasks worker panicked"))
+            .collect()
+    });
+    tagged.sort_unstable_by_key(|e| e.0);
+    tagged.into_iter().map(|(_, v)| v).collect()
+}
+
+/// Map every element of a mutable slice (each thread owns a disjoint
+/// shard); results in element order. The per-element closure sees the
+/// element's index and must not depend on the sharding.
+pub fn par_map_mut<T, R, F>(threads: ThreadConfig, items: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    let t = threads.threads().min(n.max(1));
+    if t <= 1 {
+        return items.iter_mut().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let shard = n.div_ceil(t);
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks_mut(shard)
+            .enumerate()
+            .map(|(si, chunk)| {
+                s.spawn(move || {
+                    chunk
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(j, x)| f(si * shard + j, x))
+                        .collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("par_map_mut worker panicked"))
+            .collect()
+    })
+}
+
+/// Split `data` into one contiguous shard per worker and run
+/// `f(shard_start_index, shard)` on each. Callers keep per-element writes
+/// independent of the sharding so the written bytes are identical at any
+/// width.
+pub fn par_chunks_mut<T, F>(threads: ThreadConfig, data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let t = threads.threads().min(n);
+    if t <= 1 {
+        f(0, data);
+        return;
+    }
+    let shard = n.div_ceil(t);
+    std::thread::scope(|s| {
+        let f = &f;
+        for (si, chunk) in data.chunks_mut(shard).enumerate() {
+            s.spawn(move || f(si * shard, chunk));
+        }
+    });
+}
+
+/// Split **two** parallel slices at the same interior `cuts` (ascending
+/// positions into both) and run `f(shard_index, a_shard, b_shard)` per
+/// shard across the pool. Used where one logical array is stored as two
+/// parallel ones (CSR's `nbr`/`eid`), so both sides of a shard stay in
+/// lock step.
+pub fn par_split2_at_mut<T, U, F>(
+    threads: ThreadConfig,
+    a: &mut [T],
+    b: &mut [U],
+    cuts: &[usize],
+    f: F,
+) where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut [T], &mut [U]) + Sync,
+{
+    assert_eq!(a.len(), b.len(), "parallel slices must have equal length");
+    debug_assert!(cuts.windows(2).all(|w| w[0] <= w[1]), "cuts must be ascending");
+    debug_assert!(cuts.iter().all(|&c| c <= a.len()), "cut beyond slice");
+    if threads.is_serial() || cuts.is_empty() {
+        let n = a.len();
+        let mut prev = 0usize;
+        for (shard_id, &c) in cuts.iter().chain(std::iter::once(&n)).enumerate() {
+            f(shard_id, &mut a[prev..c], &mut b[prev..c]);
+            prev = c;
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest_a = a;
+        let mut rest_b = b;
+        let mut prev = 0usize;
+        for (i, &c) in cuts.iter().enumerate() {
+            // mem::take detaches the tails from the loop-local borrow so
+            // the heads can live for the whole scope
+            let (head_a, tail_a) = std::mem::take(&mut rest_a).split_at_mut(c - prev);
+            let (head_b, tail_b) = std::mem::take(&mut rest_b).split_at_mut(c - prev);
+            prev = c;
+            rest_a = tail_a;
+            rest_b = tail_b;
+            s.spawn(move || f(i, head_a, head_b));
+        }
+        let last = cuts.len();
+        s.spawn(move || f(last, rest_a, rest_b));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WIDTHS: [usize; 4] = [1, 2, 3, 8];
+
+    #[test]
+    fn par_map_matches_serial_at_every_width() {
+        let n = 10_000;
+        let expect: Vec<u64> = (0..n as u64).map(|i| i.wrapping_mul(0x9E37_79B9)).collect();
+        for w in WIDTHS {
+            let got = par_map(ThreadConfig::new(w), n, |i| (i as u64).wrapping_mul(0x9E37_79B9));
+            assert_eq!(got, expect, "width {w}");
+        }
+    }
+
+    #[test]
+    fn par_reduce_float_fold_is_bit_identical() {
+        // a non-associative fold: f32 summation with wildly mixed magnitudes
+        let n = 50_000;
+        let val = |i: usize| ((i % 13) as f32 - 6.0) * (10f32).powi((i % 7) as i32 - 3);
+        let reference = par_reduce(
+            ThreadConfig::serial(),
+            n,
+            |r| r.map(val).fold(0f32, |a, x| a + x),
+            0f32,
+            |a, x| a + x,
+        );
+        for w in WIDTHS {
+            let got = par_reduce(
+                ThreadConfig::new(w),
+                n,
+                |r| r.map(val).fold(0f32, |a, x| a + x),
+                0f32,
+                |a, x| a + x,
+            );
+            assert_eq!(got.to_bits(), reference.to_bits(), "width {w}");
+        }
+    }
+
+    #[test]
+    fn par_tasks_keeps_index_order_for_few_heavy_jobs() {
+        for w in WIDTHS {
+            let got = par_tasks(ThreadConfig::new(w), 5, |i| i * i);
+            assert_eq!(got, vec![0, 1, 4, 9, 16], "width {w}");
+        }
+    }
+
+    #[test]
+    fn par_map_mut_transforms_in_place_and_returns_in_order() {
+        for w in WIDTHS {
+            let mut items: Vec<u32> = (0..4_000).collect();
+            let doubled = par_map_mut(ThreadConfig::new(w), &mut items, |i, x| {
+                *x += 1;
+                (i as u32) * 2
+            });
+            assert!(items.iter().enumerate().all(|(i, &x)| x == i as u32 + 1), "width {w}");
+            assert!(doubled.iter().enumerate().all(|(i, &d)| d == i as u32 * 2), "width {w}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_every_element_once() {
+        for w in WIDTHS {
+            let mut data = vec![0u32; 5_000];
+            par_chunks_mut(ThreadConfig::new(w), &mut data, |start, shard| {
+                for (j, x) in shard.iter_mut().enumerate() {
+                    *x = (start + j) as u32 + 7;
+                }
+            });
+            assert!(data.iter().enumerate().all(|(i, &x)| x == i as u32 + 7), "width {w}");
+        }
+    }
+
+    #[test]
+    fn par_split2_keeps_parallel_slices_in_lock_step() {
+        let cuts = vec![100usize, 1_000, 1_001, 2_500];
+        for w in WIDTHS {
+            let mut a: Vec<u32> = (0..4_000).collect();
+            let mut b = vec![0u32; 4_000];
+            par_split2_at_mut(ThreadConfig::new(w), &mut a, &mut b, &cuts, |si, sa, sb| {
+                for (x, y) in sa.iter().zip(sb.iter_mut()) {
+                    *y = x + si as u32;
+                }
+            });
+            // shard index recoverable from the cuts → deterministic pattern
+            let shard_of = |i: usize| cuts.iter().filter(|&&c| c <= i).count() as u32;
+            assert!(
+                b.iter().enumerate().all(|(i, &y)| y == i as u32 + shard_of(i)),
+                "width {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        assert!(par_map(ThreadConfig::new(4), 0, |i| i).is_empty());
+        assert!(par_tasks(ThreadConfig::new(4), 0, |i| i).is_empty());
+        assert_eq!(par_reduce(ThreadConfig::new(4), 0, |_| 1u32, 5u32, |a, x| a + x), 5);
+        let mut empty: [u8; 0] = [];
+        par_chunks_mut(ThreadConfig::new(4), &mut empty, |_, _| {});
+        let got: Vec<u8> = par_map_mut(ThreadConfig::new(4), &mut empty, |_, x| *x);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn chunk_width_is_a_pure_function_of_n() {
+        assert_eq!(chunk_width(10), 10);
+        assert_eq!(chunk_width(MIN_CHUNK * 2), MIN_CHUNK);
+        let big = MIN_CHUNK * REDUCE_CHUNKS * 4;
+        assert_eq!(chunk_width(big), big / REDUCE_CHUNKS);
+    }
+}

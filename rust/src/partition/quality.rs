@@ -5,66 +5,118 @@
 //! materialized [`EdgePartition`] and a zero-materialization
 //! [`super::CepView`] identically — the CEP sweeps never allocate a
 //! per-edge vector.
+//!
+//! The sweeps run on the [`crate::par`] pool. Chunked assignments shard
+//! the partition space (each worker carries one epoch-stamp scratch array
+//! — the per-thread replica-set partials); scattered assignments shard
+//! the edge list into per-thread `(vertex, partition)` replica sets that
+//! merge into one deduplicating union. Both decompositions count each
+//! replica exactly once, so the results are identical at any thread
+//! count.
 
 use super::cep::Cep;
-use super::view::PartitionAssignment;
+use super::view::{CepView, PartitionAssignment};
 use super::EdgePartition;
 use crate::graph::Graph;
+use crate::par::{self, ThreadConfig};
+use std::collections::HashSet;
 
-/// Per-partition vertex counts `|V(E_p)|`.
-pub fn vertex_counts<P: PartitionAssignment + ?Sized>(g: &Graph, part: &P) -> Vec<u64> {
+/// Per-partition vertex counts `|V(E_p)|` on the process-wide pool.
+pub fn vertex_counts<P: PartitionAssignment + Sync + ?Sized>(g: &Graph, part: &P) -> Vec<u64> {
+    vertex_counts_with(g, part, par::global())
+}
+
+/// Per-partition vertex counts `|V(E_p)|` with an explicit executor
+/// width; results are identical at any width.
+pub fn vertex_counts_with<P: PartitionAssignment + Sync + ?Sized>(
+    g: &Graph,
+    part: &P,
+    threads: ThreadConfig,
+) -> Vec<u64> {
     let n = g.num_vertices();
     let k = part.k();
-    // stamp[v] = last partition that counted v, offset by +1 epoch trick
-    // per partition would need k passes; instead use a bitset-free
-    // two-array approach: last-seen partition per vertex is wrong when a
-    // vertex appears in several partitions, so track (vertex, partition)
-    // via a per-vertex sorted small-vec — cheaper: per-partition stamping
-    // in a single pass using stamp[v] == p requires edges grouped by p.
-    // General single-pass: HashSet of (v, p) is O(cut) memory; fine.
-    let mut counts = vec![0u64; k];
-    let mut seen: std::collections::HashSet<(u32, u32)> =
-        std::collections::HashSet::with_capacity(n * 2);
-    for (eid, e) in g.edges().iter().enumerate() {
-        let p = part.partition_of(eid as u64);
-        if seen.insert((e.u, p)) {
+    if let Some(chunks) = part.as_chunks() {
+        // Chunked fast path: partitions are contiguous edge-id ranges, so
+        // shard the partition space; each shard reuses one epoch-stamp
+        // array across its partitions. Per-partition counts are
+        // independent of the sharding.
+        let t = threads.threads().min(k.max(1));
+        let shard = k.div_ceil(t.max(1)).max(1);
+        let nshards = k.div_ceil(shard);
+        let per_shard: Vec<Vec<u64>> = par::par_tasks(threads, nshards, |si| {
+            let plo = si * shard;
+            let phi = ((si + 1) * shard).min(k);
+            let mut stamp = vec![0u32; n];
+            let mut counts = vec![0u64; phi - plo];
+            for p in plo..phi {
+                let epoch = (p - plo) as u32 + 1;
+                for i in chunks[p].clone() {
+                    if !part.is_live(i) {
+                        continue;
+                    }
+                    let e = g.edges()[i as usize];
+                    if stamp[e.u as usize] != epoch {
+                        stamp[e.u as usize] = epoch;
+                        counts[p - plo] += 1;
+                    }
+                    if stamp[e.v as usize] != epoch {
+                        stamp[e.v as usize] = epoch;
+                        counts[p - plo] += 1;
+                    }
+                }
+            }
+            counts
+        });
+        per_shard.concat()
+    } else {
+        // Scattered path: per-thread (vertex, partition) replica-set
+        // partials over edge shards, merged into one deduplicating union —
+        // a set cardinality, independent of the sharding.
+        let m = g.num_edges();
+        let el = g.edges().as_slice();
+        let seen: HashSet<(u32, u32)> = par::par_reduce(
+            threads,
+            m,
+            |r| {
+                let mut s: HashSet<(u32, u32)> = HashSet::with_capacity(2 * r.len());
+                for i in r {
+                    if !part.is_live(i as u64) {
+                        continue;
+                    }
+                    let e = el[i];
+                    let p = part.partition_of(i as u64);
+                    s.insert((e.u, p));
+                    s.insert((e.v, p));
+                }
+                s
+            },
+            HashSet::with_capacity(n * 2),
+            |mut acc: HashSet<(u32, u32)>, s| {
+                acc.extend(s);
+                acc
+            },
+        );
+        let mut counts = vec![0u64; k];
+        for &(_, p) in &seen {
             counts[p as usize] += 1;
         }
-        if seen.insert((e.v, p)) {
-            counts[p as usize] += 1;
-        }
+        counts
     }
-    counts
 }
 
 /// Replication factor `RF = (1/|V|) Σ_p |V(E_p)|` (Def. 1). Best = 1.0.
-pub fn replication_factor<P: PartitionAssignment + ?Sized>(g: &Graph, part: &P) -> f64 {
+pub fn replication_factor<P: PartitionAssignment + Sync + ?Sized>(g: &Graph, part: &P) -> f64 {
     let counts = vertex_counts(g, part);
     counts.iter().sum::<u64>() as f64 / g.num_vertices() as f64
 }
 
 /// RF computed directly from chunk metadata for an **ordered** graph —
 /// O(|E|) with epoch stamping, no per-pair hashing (the fast path used by
-/// the figure sweeps).
+/// the figure sweeps; runs the chunked path of [`vertex_counts_with`]
+/// across the pool).
 pub fn replication_factor_chunked(g_ordered: &Graph, c: &Cep) -> f64 {
-    let n = g_ordered.num_vertices();
-    let mut stamp = vec![0u32; n];
-    let mut total = 0u64;
-    for p in 0..c.k() as u32 {
-        let epoch = p + 1;
-        for i in c.range(p) {
-            let e = g_ordered.edges()[i as usize];
-            if stamp[e.u as usize] != epoch {
-                stamp[e.u as usize] = epoch;
-                total += 1;
-            }
-            if stamp[e.v as usize] != epoch {
-                stamp[e.v as usize] = epoch;
-                total += 1;
-            }
-        }
-    }
-    total as f64 / n as f64
+    let counts = vertex_counts_with(g_ordered, &CepView::new(*c), par::global());
+    counts.iter().sum::<u64>() as f64 / g_ordered.num_vertices() as f64
 }
 
 /// Balance factor `B({x_p}) = max(x_p) / mean(x_p)` (§6.4). Best = 1.0.
@@ -87,7 +139,7 @@ pub fn edge_balance<P: PartitionAssignment + ?Sized>(part: &P) -> f64 {
 }
 
 /// Vertex balance `VB = B({|V(E_p)|})`.
-pub fn vertex_balance<P: PartitionAssignment + ?Sized>(g: &Graph, part: &P) -> f64 {
+pub fn vertex_balance<P: PartitionAssignment + Sync + ?Sized>(g: &Graph, part: &P) -> f64 {
     balance(&vertex_counts(g, part))
 }
 
@@ -102,12 +154,14 @@ pub struct Quality {
     pub vb: f64,
 }
 
-/// Compute RF / EB / VB in one call.
-pub fn quality<P: PartitionAssignment + ?Sized>(g: &Graph, part: &P) -> Quality {
+/// Compute RF / EB / VB in one call (one vertex-count sweep serves both
+/// RF and VB).
+pub fn quality<P: PartitionAssignment + Sync + ?Sized>(g: &Graph, part: &P) -> Quality {
+    let counts = vertex_counts(g, part);
     Quality {
-        rf: replication_factor(g, part),
+        rf: counts.iter().sum::<u64>() as f64 / g.num_vertices() as f64,
         eb: edge_balance(part),
-        vb: vertex_balance(g, part),
+        vb: balance(&counts),
     }
 }
 
@@ -141,7 +195,10 @@ mod tests {
     fn chunked_rf_matches_generic_rf() {
         check(0xFAC, 16, |rng| {
             let g = erdos_renyi(80, 400, rng.next_u64());
-            let o = geo::order(&g, &GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 1 });
+            let o = geo::order(
+                &g,
+                &GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 1, ..Default::default() },
+            );
             let og = o.apply(&g);
             let k = 2 + rng.below_usize(9);
             let c = Cep::new(og.num_edges(), k);
@@ -171,5 +228,30 @@ mod tests {
         assert!((balance(&[5, 5, 5]) - 1.0).abs() < 1e-12);
         assert!((balance(&[9, 3, 3]) - 1.8).abs() < 1e-12);
         assert_eq!(balance(&[]), 1.0);
+    }
+
+    /// Both sweep decompositions (chunked partition shards, scattered
+    /// edge-shard replica sets) must be invariant in the executor width.
+    #[test]
+    fn vertex_counts_are_thread_invariant() {
+        use crate::par::ThreadConfig;
+
+        let g = erdos_renyi(150, 900, 21);
+        let m = g.num_edges();
+        let chunked = crate::partition::CepView::new(Cep::new(m, 7));
+        let mut rng = crate::util::rng::Rng::new(0x7C);
+        let scattered =
+            EdgePartition::new(5, (0..m).map(|_| rng.below(5) as u32).collect());
+        let ref_chunked = vertex_counts_with(&g, &chunked, ThreadConfig::serial());
+        let ref_scattered = vertex_counts_with(&g, &scattered, ThreadConfig::serial());
+        for w in [2usize, 3, 8] {
+            let t = ThreadConfig::new(w);
+            assert_eq!(vertex_counts_with(&g, &chunked, t), ref_chunked, "chunked width {w}");
+            assert_eq!(
+                vertex_counts_with(&g, &scattered, t),
+                ref_scattered,
+                "scattered width {w}"
+            );
+        }
     }
 }

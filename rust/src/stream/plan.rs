@@ -20,6 +20,7 @@
 //! The plan size is O(k + k′ + |batch deletions|) ranges — independent of
 //! |E| and of the accumulated tombstone count.
 
+use crate::par::{self, ThreadConfig};
 use crate::partition::cep::{chunk_start, Cep};
 use crate::scaling::migration::MigrationPlan;
 use crate::{EdgeId, PartitionId};
@@ -131,6 +132,37 @@ impl ChurnPlan {
     pub fn is_empty(&self) -> bool {
         self.retires.is_empty() && self.moves.is_empty() && self.appends.is_empty()
     }
+}
+
+/// Inputs below this combined length merge serially.
+const MIN_PAR_MERGE: usize = 16_384;
+
+/// Merge two sorted, disjoint id lists across the pool: `a` is cut into
+/// even chunks, each cut is aligned in `b` by value, and the chunk merges
+/// concatenate. The merged sequence is unique, so the result is identical
+/// to [`merge_sorted`] at any width — this is the tombstone-merge fast
+/// path of [`crate::stream::StagedGraph::apply_batch`].
+pub(crate) fn merge_sorted_par(a: &[EdgeId], b: &[EdgeId], threads: ThreadConfig) -> Vec<EdgeId> {
+    let total = a.len() + b.len();
+    if threads.is_serial() || total < MIN_PAR_MERGE {
+        return merge_sorted(a, b);
+    }
+    let t = threads.threads();
+    let mut bounds: Vec<(usize, usize)> = Vec::with_capacity(t + 1);
+    bounds.push((0, 0));
+    for s in 1..t {
+        let ai = a.len() * s / t;
+        let bi = if ai < a.len() { b.partition_point(|&x| x < a[ai]) } else { b.len() };
+        let &(pa, pb) = bounds.last().unwrap();
+        bounds.push((ai.max(pa), bi.max(pb)));
+    }
+    bounds.push((a.len(), b.len()));
+    let parts: Vec<Vec<EdgeId>> = par::par_tasks(threads, t, |i| {
+        let (alo, blo) = bounds[i];
+        let (ahi, bhi) = bounds[i + 1];
+        merge_sorted(&a[alo..ahi], &b[blo..bhi])
+    });
+    parts.concat()
 }
 
 /// Merge two sorted, disjoint id lists.
@@ -280,6 +312,28 @@ mod tests {
         // 3,4,5 coalesce into one retire range (same chunk owner)
         assert_eq!(plan.retires.len(), 3);
         assert_plan_exact(&plan, &c, &c, &dead);
+    }
+
+    #[test]
+    fn parallel_merge_matches_serial_at_every_width() {
+        let mut rng = Rng::new(0x5E6);
+        // disjoint sorted lists: evens in `a`, odds in `b`, thinned randomly
+        let mut a: Vec<u64> = Vec::new();
+        let mut b: Vec<u64> = Vec::new();
+        for i in 0..60_000u64 {
+            if rng.chance(0.4) {
+                if i % 2 == 0 {
+                    a.push(i);
+                } else {
+                    b.push(i);
+                }
+            }
+        }
+        let reference = merge_sorted(&a, &b);
+        for w in [1usize, 2, 3, 8] {
+            let got = merge_sorted_par(&a, &b, crate::par::ThreadConfig::new(w));
+            assert_eq!(got, reference, "width {w}");
+        }
     }
 
     #[test]

@@ -1,44 +1,66 @@
 //! Quality metrics over the **live** staged state — RF / EB / VB computed
 //! from chunk metadata plus the tombstone list, mirroring
 //! [`crate::partition::quality`] but skipping dead ids. Epoch stamping
-//! keeps the sweep O(|E|) time and O(|V|) memory; no per-edge assignment
-//! vector is ever materialized.
+//! keeps the sweep O(|E|) time and O(|V|·threads) memory; no per-edge
+//! assignment vector is ever materialized. The partition space is sharded
+//! across the [`crate::par`] pool (per-thread replica-set partials, one
+//! stamp scratch per shard); counts are independent of the sharding, so
+//! results are identical at any width.
 
 use super::assignment::StagedAssignment;
 use super::staged::StagedGraph;
 use crate::graph::EdgeSource;
+use crate::par::{self, ThreadConfig};
 use crate::partition::quality::{balance, Quality};
 use crate::partition::PartitionAssignment;
-use crate::PartitionId;
 
-/// Distinct live vertices per partition `|V(E_p)|`.
+/// Distinct live vertices per partition `|V(E_p)|`, on the staged graph's
+/// configured executor width.
 pub fn live_vertex_counts(sg: &StagedGraph, assign: &StagedAssignment<'_>) -> Vec<u64> {
+    live_vertex_counts_with(sg, assign, sg.geo_config().threads)
+}
+
+/// [`live_vertex_counts`] with an explicit executor width; results are
+/// identical at any width.
+pub fn live_vertex_counts_with(
+    sg: &StagedGraph,
+    assign: &StagedAssignment<'_>,
+    threads: ThreadConfig,
+) -> Vec<u64> {
     let n = sg.num_vertices();
     let k = assign.k();
-    let mut stamp = vec![0u32; n];
-    let mut counts = vec![0u64; k];
-    for p in 0..k as PartitionId {
-        let epoch = p + 1;
-        let r = assign.range(p);
-        let dead = assign.dead_slice(r.clone());
-        let mut t = 0usize;
-        for id in r {
-            if t < dead.len() && dead[t] == id {
-                t += 1;
-                continue;
-            }
-            let e = sg.edge(id);
-            if stamp[e.u as usize] != epoch {
-                stamp[e.u as usize] = epoch;
-                counts[p as usize] += 1;
-            }
-            if stamp[e.v as usize] != epoch {
-                stamp[e.v as usize] = epoch;
-                counts[p as usize] += 1;
+    let t = threads.threads().min(k.max(1));
+    let shard = k.div_ceil(t.max(1)).max(1);
+    let nshards = k.div_ceil(shard);
+    let per_shard: Vec<Vec<u64>> = par::par_tasks(threads, nshards, |si| {
+        let plo = si * shard;
+        let phi = ((si + 1) * shard).min(k);
+        let mut stamp = vec![0u32; n];
+        let mut counts = vec![0u64; phi - plo];
+        for p in plo..phi {
+            let epoch = (p - plo) as u32 + 1;
+            let r = assign.range(p as u32);
+            let dead = assign.dead_slice(r.clone());
+            let mut d = 0usize;
+            for id in r {
+                if d < dead.len() && dead[d] == id {
+                    d += 1;
+                    continue;
+                }
+                let e = sg.edge(id);
+                if stamp[e.u as usize] != epoch {
+                    stamp[e.u as usize] = epoch;
+                    counts[p - plo] += 1;
+                }
+                if stamp[e.v as usize] != epoch {
+                    stamp[e.v as usize] = epoch;
+                    counts[p - plo] += 1;
+                }
             }
         }
-    }
-    counts
+        counts
+    });
+    per_shard.concat()
 }
 
 /// Replication factor of the live staged state (Def. 1; best = 1.0).
@@ -67,7 +89,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn cfg() -> GeoConfig {
-        GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 1 }
+        GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 1, ..Default::default() }
     }
 
     /// Live metrics over a churned state must agree with the generic
@@ -111,6 +133,34 @@ mod tests {
         let q = live_quality(&sg, &assign);
         assert!((q.rf - oracle_rf).abs() < 1e-12);
         assert!(q.eb >= 1.0 && q.vb >= 1.0);
+    }
+
+    /// The sharded live sweep is invariant in the executor width.
+    #[test]
+    fn live_counts_are_thread_invariant() {
+        use crate::par::ThreadConfig;
+
+        let g = erdos_renyi(120, 600, 17);
+        let mut sg = StagedGraph::new(g, cfg());
+        let mut rng = Rng::new(6);
+        let mut batch = MutationBatch::new();
+        for _ in 0..30 {
+            batch.insert(rng.below(120) as u32, rng.below(120) as u32);
+        }
+        for _ in 0..15 {
+            batch.delete(rng.below(600));
+        }
+        let k = 7;
+        sg.apply_batch(&batch, k);
+        let assign = sg.assignment(k);
+        let reference = live_vertex_counts_with(&sg, &assign, ThreadConfig::serial());
+        for w in [2usize, 3, 8] {
+            assert_eq!(
+                live_vertex_counts_with(&sg, &assign, ThreadConfig::new(w)),
+                reference,
+                "width {w}"
+            );
+        }
     }
 
     /// With no churn the live metrics collapse to the plain chunked RF.

@@ -13,10 +13,11 @@
 use super::assignment::StagedAssignment;
 use super::compaction::CompactionPolicy;
 use super::mutation::{BatchOutcome, EdgeMutation, MutationBatch};
-use super::plan::{merge_sorted, ChurnPlan};
+use super::plan::{merge_sorted_par, ChurnPlan};
 use crate::graph::{io, Csr, Edge, EdgeList, EdgeSource, Graph};
 use crate::ordering::geo::{self, GeoConfig};
 use crate::ordering::window::TailWindow;
+use crate::par;
 use crate::partition::cep::Cep;
 use crate::{EdgeId, Result, VertexId};
 use std::collections::{HashMap, HashSet};
@@ -176,6 +177,13 @@ impl StagedGraph {
     /// [`ChurnPlan`] transitioning `assignment(k)` from its pre-batch to
     /// its post-batch state. Mutations apply in order, so delete-then-
     /// reinsert of the same pair works within one batch.
+    ///
+    /// The expensive per-mutation work — duplicate lookups against the
+    /// live edge set — runs as a read-only parallel pass over the
+    /// pre-batch state (`cfg.threads`); the cheap sequential pass then
+    /// reconciles in-batch ordering (same-batch deletes re-enable a pair
+    /// via `newly_dead`), so the outcome is identical to a fully
+    /// interleaved scan at any thread count.
     pub fn apply_batch(&mut self, batch: &MutationBatch, k: usize) -> (BatchOutcome, ChurnPlan) {
         let p0 = self.physical_edges();
         let cep0 = Cep::new(p0, k);
@@ -184,8 +192,17 @@ impl StagedGraph {
         let mut accepted: Vec<Edge> = Vec::new();
         let mut accepted_keys: HashSet<(VertexId, VertexId)> = HashSet::new();
 
-        for m in batch.iter() {
-            match *m {
+        let muts: Vec<&EdgeMutation> = batch.iter().collect();
+        let lookups: Vec<Option<EdgeId>> = {
+            let this: &StagedGraph = self;
+            par::par_map(this.cfg.threads, muts.len(), |i| match *muts[i] {
+                EdgeMutation::Insert { u, v } if u != v => this.live_edge_of(u, v),
+                _ => None,
+            })
+        };
+
+        for (mi, m) in muts.iter().enumerate() {
+            match **m {
                 EdgeMutation::Delete { edge } => {
                     if (edge as usize) < p0 && self.is_live(edge) && newly_dead.insert(edge) {
                         let e = self.edge(edge);
@@ -206,7 +223,7 @@ impl StagedGraph {
                     }
                     let key = Edge::new(u, v).canonical();
                     let duplicate = accepted_keys.contains(&key)
-                        || match self.live_edge_of(u, v) {
+                        || match lookups[mi] {
                             // deleted earlier in this batch ⇒ re-insertable
                             Some(eid) => !newly_dead.contains(&eid),
                             None => false,
@@ -244,7 +261,7 @@ impl StagedGraph {
 
         let cep1 = Cep::new(self.physical_edges(), k);
         let plan = ChurnPlan::derive(&cep0, &cep1, &nd);
-        self.tombstones = merge_sorted(&self.tombstones, &nd);
+        self.tombstones = merge_sorted_par(&self.tombstones, &nd, self.cfg.threads);
         (out, plan)
     }
 
@@ -274,7 +291,7 @@ impl StagedGraph {
     pub fn compact(&mut self) {
         let live = self.live_edge_vec();
         let el = EdgeList::from_vec(live);
-        let csr = Csr::build(self.n, &el);
+        let csr = Csr::build_with(self.n, &el, self.cfg.threads);
         let g = Graph::from_parts(el, csr);
         let perm = geo::order(&g, &self.cfg).into_perm();
         self.base = g.permute_edges(&perm);
@@ -291,7 +308,7 @@ impl StagedGraph {
     pub fn as_graph(&self) -> Graph {
         let live = self.live_edge_vec();
         let el = EdgeList::from_vec(live);
-        let csr = Csr::build(self.n, &el);
+        let csr = Csr::build_with(self.n, &el, self.cfg.threads);
         Graph::from_parts(el, csr)
     }
 
@@ -302,7 +319,7 @@ impl StagedGraph {
         phys.extend(self.base.edges().iter().copied());
         phys.extend(self.staging.iter().copied());
         let el = EdgeList::from_vec(phys);
-        let csr = Csr::build(self.n, &el);
+        let csr = Csr::build_with(self.n, &el, self.cfg.threads);
         let g = Graph::from_parts(el, csr);
         io::save_binary_v2(&g, self.staging.len() as u64, &self.tombstones, path)
     }
@@ -329,7 +346,7 @@ impl StagedGraph {
             }
         }
         let el = EdgeList::from_vec(base_edges);
-        let csr = Csr::build(n, &el);
+        let csr = Csr::build_with(n, &el, cfg.threads);
         let base = Graph::from_parts(el, csr);
 
         let mut sg = StagedGraph {
@@ -357,18 +374,32 @@ impl StagedGraph {
         Ok(sg)
     }
 
-    /// Live edges in physical order.
+    /// Live edges in physical order (chunked across the pool; chunk
+    /// boundaries are fixed, so the concatenation is order-identical to a
+    /// serial sweep).
     fn live_edge_vec(&self) -> Vec<Edge> {
-        let mut live: Vec<Edge> = Vec::with_capacity(self.live_edges());
-        let mut t = 0usize;
-        for id in 0..self.physical_edges() as EdgeId {
-            if t < self.tombstones.len() && self.tombstones[t] == id {
-                t += 1;
-                continue;
-            }
-            live.push(self.edge(id));
-        }
-        live
+        let p = self.physical_edges();
+        par::par_reduce(
+            self.cfg.threads,
+            p,
+            |r| {
+                let mut chunk: Vec<Edge> = Vec::with_capacity(r.len());
+                let mut t = self.tombstones.partition_point(|&d| (d as usize) < r.start);
+                for id in r {
+                    if t < self.tombstones.len() && self.tombstones[t] == id as EdgeId {
+                        t += 1;
+                        continue;
+                    }
+                    chunk.push(self.edge(id as EdgeId));
+                }
+                chunk
+            },
+            Vec::with_capacity(self.live_edges()),
+            |mut acc, chunk| {
+                acc.extend(chunk);
+                acc
+            },
+        )
     }
 
     /// Order a batch of accepted insertions so that edges sharing a
@@ -392,13 +423,25 @@ impl StagedGraph {
             .max(self.n);
         let delta = self.cfg.effective_delta(self.live_edges().max(1));
         let mut window = TailWindow::new(n_max, delta);
-        // seed with the last δ live edges of the current physical list
+        // seed with the last δ live edges of the current physical list:
+        // liveness over the bounded candidate tail (δ plus every
+        // possibly-dead id caps how far back the last δ live ids reach)
+        // is checked across the pool, then collected serially — same seed
+        // as a backward scan, at any thread count
+        let p = self.physical_edges();
+        let dead_ub = self.tombstones.len() + extra_dead.len();
+        let lo = p.saturating_sub(delta + dead_ub);
+        let live_tail: Vec<bool> = par::par_map(self.cfg.threads, p - lo, |j| {
+            let id = (lo + j) as EdgeId;
+            self.is_live(id) && extra_dead.binary_search(&id).is_err()
+        });
         let mut seed: Vec<Edge> = Vec::with_capacity(delta);
-        let mut id = self.physical_edges() as EdgeId;
-        while id > 0 && seed.len() < delta {
-            id -= 1;
-            if self.is_live(id) && extra_dead.binary_search(&id).is_err() {
-                seed.push(self.edge(id));
+        for j in (0..p - lo).rev() {
+            if seed.len() >= delta {
+                break;
+            }
+            if live_tail[j] {
+                seed.push(self.edge((lo + j) as EdgeId));
             }
         }
         for e in seed.iter().rev() {
@@ -475,7 +518,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn cfg() -> GeoConfig {
-        GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 1 }
+        GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 1, ..Default::default() }
     }
 
     #[test]

@@ -79,6 +79,20 @@ impl Args {
         self.get(key)
             .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
     }
+
+    /// Executor width: `--threads N` when given, otherwise the process
+    /// default (the `PALLAS_THREADS` environment knob, then detected
+    /// hardware parallelism). A pure execution knob — every parallelized
+    /// path yields identical results at any value.
+    pub fn thread_config(&self) -> crate::par::ThreadConfig {
+        match self.get("threads") {
+            None => crate::par::ThreadConfig::default(),
+            Some(v) => match v.parse::<usize>() {
+                Ok(t) if t >= 1 => crate::par::ThreadConfig::new(t),
+                _ => panic!("--threads={v}: expected a positive integer"),
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -113,6 +127,14 @@ mod tests {
     fn trailing_flag_without_value() {
         let a = Args::parse(toks("x --quiet"));
         assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn thread_config_option() {
+        let a = Args::parse(toks("run --threads 6"));
+        assert_eq!(a.thread_config().threads(), 6);
+        let b = Args::parse(toks("run"));
+        assert_eq!(b.thread_config(), crate::par::ThreadConfig::default());
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Thread-count invariance — the acceptance suite of the deterministic
+//! parallel runtime (`egs::par`).
+//!
+//! Every parallelized path must produce **byte-identical** results for
+//! 1, 2 and 8 executor threads: the GEO permutation (parallel GEO at a
+//! fixed region count), CSR construction, the RF/EB/VB quality sweeps,
+//! engine vertex state across a run + rescale + churn sequence, and
+//! staged-batch ingest. CI additionally runs the whole test suite under
+//! `PALLAS_THREADS={1,4}`, so any accidental width-dependence anywhere
+//! fails twice.
+
+use egs::engine::{Combine, Engine};
+use egs::graph::generators::{erdos_renyi, rmat, RmatParams};
+use egs::graph::EdgeSource;
+use egs::ordering::geo::GeoConfig;
+use egs::ordering::geo_parallel;
+use egs::par::ThreadConfig;
+use egs::partition::quality::vertex_counts_with;
+use egs::partition::{cep::Cep, CepView, EdgePartition};
+use egs::runtime::native::NativeBackend;
+use egs::runtime::StepKind;
+use egs::stream::{quality as stream_quality, MutationBatch, StagedGraph};
+use egs::util::rng::Rng;
+
+const WIDTHS: [usize; 3] = [1, 2, 8];
+
+fn geo_cfg(threads: usize) -> GeoConfig {
+    GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 7, threads: ThreadConfig::new(threads) }
+}
+
+/// Parallel GEO: for a fixed region count the permutation depends only on
+/// the config, never on the executor width.
+#[test]
+fn geo_permutation_is_thread_invariant() {
+    let g = rmat(&RmatParams { scale: 11, edge_factor: 8, ..Default::default() }, 2);
+    let reference = geo_parallel::order(&g, &geo_cfg(1), 4);
+    for w in WIDTHS {
+        let o = geo_parallel::order(&g, &geo_cfg(w), 4);
+        assert_eq!(o.as_slice(), reference.as_slice(), "width {w}");
+    }
+}
+
+/// CSR construction: adjacency rows (neighbour and edge-id order) are
+/// identical at every width.
+#[test]
+fn csr_is_thread_invariant() {
+    use egs::graph::Csr;
+
+    let g = rmat(&RmatParams { scale: 11, edge_factor: 8, ..Default::default() }, 9);
+    let n = g.num_vertices();
+    let reference = Csr::build_with(n, g.edges(), ThreadConfig::serial());
+    for w in WIDTHS {
+        let csr = Csr::build_with(n, g.edges(), ThreadConfig::new(w));
+        for v in 0..n as u32 {
+            assert_eq!(csr.degree(v), reference.degree(v), "width {w} vertex {v}");
+            assert!(
+                csr.neighbors(v).eq(reference.neighbors(v)),
+                "width {w} vertex {v}: adjacency rows diverge"
+            );
+        }
+    }
+}
+
+/// RF/EB/VB sweeps: chunked (CEP view), scattered (random vector) and
+/// live-staged counts are identical at every width.
+#[test]
+fn quality_metrics_are_thread_invariant() {
+    let g = erdos_renyi(200, 1200, 5);
+    let m = g.num_edges();
+    let chunked = CepView::new(Cep::new(m, 9));
+    let mut rng = Rng::new(0xD3);
+    let scattered = EdgePartition::new(6, (0..m).map(|_| rng.below(6) as u32).collect());
+    let ref_chunked = vertex_counts_with(&g, &chunked, ThreadConfig::serial());
+    let ref_scattered = vertex_counts_with(&g, &scattered, ThreadConfig::serial());
+    for w in WIDTHS {
+        let t = ThreadConfig::new(w);
+        assert_eq!(vertex_counts_with(&g, &chunked, t), ref_chunked, "chunked width {w}");
+        assert_eq!(vertex_counts_with(&g, &scattered, t), ref_scattered, "scattered width {w}");
+    }
+
+    // live staged counts after churn
+    let mut sg = StagedGraph::new(erdos_renyi(150, 700, 8), geo_cfg(1));
+    let mut batch = MutationBatch::new();
+    let mut rng = Rng::new(0xD4);
+    for _ in 0..40 {
+        batch.insert(rng.below(150) as u32, rng.below(150) as u32);
+    }
+    for _ in 0..20 {
+        batch.delete(rng.below(700));
+    }
+    let k = 7;
+    sg.apply_batch(&batch, k);
+    let assign = sg.assignment(k);
+    let reference = stream_quality::live_vertex_counts_with(&sg, &assign, ThreadConfig::serial());
+    for w in WIDTHS {
+        assert_eq!(
+            stream_quality::live_vertex_counts_with(&sg, &assign, ThreadConfig::new(w)),
+            reference,
+            "live width {w}"
+        );
+    }
+}
+
+/// Staged-batch ingest: physical edge list, tombstones, outcome and plan
+/// shape after a batch sequence are identical at every width (the ingest
+/// parallelism — dedup lookups, window seeding, tombstone merge — runs at
+/// `GeoConfig::threads`).
+#[test]
+fn staged_ingest_is_thread_invariant() {
+    // one flat u64 fingerprint: physical edge list ++ tombstones ++
+    // per-batch audit numbers, with sentinels between sections
+    let run = |w: usize| -> Vec<u64> {
+        let g = erdos_renyi(120, 600, 3);
+        let mut sg = StagedGraph::new(g, geo_cfg(w));
+        let mut rng = Rng::new(0x516);
+        let mut audit: Vec<u64> = Vec::new();
+        for round in 0..4 {
+            let mut batch = MutationBatch::new();
+            for _ in 0..50 {
+                let u = rng.below(140) as u32;
+                let v = rng.below(140) as u32;
+                batch.insert(u, v);
+            }
+            for _ in 0..15 {
+                batch.delete(rng.below(sg.physical_edges() as u64));
+            }
+            let (out, plan) = sg.apply_batch(&batch, 5);
+            audit.extend([
+                out.inserted as u64,
+                out.deleted as u64,
+                plan.moved_edges(),
+                plan.range_ops() as u64,
+            ]);
+            if round == 2 {
+                sg.compact();
+            }
+        }
+        let mut print: Vec<u64> = Vec::new();
+        for id in 0..sg.physical_edges() as u64 {
+            let e = sg.edge(id);
+            print.push(((e.u as u64) << 32) | e.v as u64);
+        }
+        print.push(u64::MAX);
+        print.extend_from_slice(sg.tombstones());
+        print.push(u64::MAX);
+        print.extend(audit);
+        print
+    };
+    let reference = run(1);
+    for w in WIDTHS {
+        assert_eq!(run(w), reference, "width {w}");
+    }
+}
+
+/// Engine vertex state after a run + churn + rescale + run sequence is
+/// bit-identical at every width (f32 bit patterns compared).
+#[test]
+fn engine_state_is_thread_invariant_across_run_rescale_churn() {
+    let run = |w: usize| -> (Vec<u32>, u64, f64) {
+        let t = ThreadConfig::new(w);
+        let g = erdos_renyi(180, 900, 11);
+        let mut sg = StagedGraph::new(g, geo_cfg(w));
+        let mut k = 4usize;
+        let mut engine = {
+            let assign = sg.assignment(k);
+            Engine::new(&sg, &assign, |_| Box::new(NativeBackend::new()))
+                .unwrap()
+                .with_threads(t)
+        };
+        let mut n = sg.num_vertices();
+        let mut ranks = vec![1.0f32 / n as f32; n];
+        let supersteps = |engine: &mut Engine, sg: &StagedGraph, ranks: &mut Vec<f32>| {
+            let nn = sg.num_vertices();
+            if ranks.len() < nn {
+                ranks.resize(nn, 1.0 / nn as f32);
+            }
+            let aux: Vec<f32> = (0..nn as u32)
+                .map(|v| {
+                    let d = sg.degree(v);
+                    if d == 0 {
+                        0.0
+                    } else {
+                        1.0 / d as f32
+                    }
+                })
+                .collect();
+            let active = vec![true; nn];
+            for _ in 0..3 {
+                let (contrib, _) = engine
+                    .superstep(StepKind::PageRank, Combine::Sum, ranks, &aux, &active)
+                    .unwrap();
+                for v in 0..nn {
+                    ranks[v] = 0.15 / nn as f32 + 0.85 * contrib[v];
+                }
+            }
+        };
+        supersteps(&mut engine, &sg, &mut ranks);
+
+        // churn batch through the delta-plan path
+        let mut rng = Rng::new(0xE5);
+        let mut batch = MutationBatch::new();
+        for _ in 0..40 {
+            batch.insert(rng.below(200) as u32, rng.below(200) as u32);
+        }
+        for _ in 0..10 {
+            batch.delete(rng.below(sg.physical_edges() as u64));
+        }
+        let (_, plan) = sg.apply_batch(&batch, k);
+        {
+            let assign = sg.assignment(k);
+            engine
+                .apply_churn(&sg, &plan, &assign, |_| Box::new(NativeBackend::new()))
+                .unwrap();
+        }
+        n = sg.num_vertices();
+        supersteps(&mut engine, &sg, &mut ranks);
+
+        // rescale through the same machinery
+        let new_k = 7usize;
+        let plan = sg.rescale_plan(k, new_k);
+        {
+            let assign = sg.assignment(new_k);
+            engine
+                .apply_churn(&sg, &plan, &assign, |_| Box::new(NativeBackend::new()))
+                .unwrap();
+        }
+        k = new_k;
+        supersteps(&mut engine, &sg, &mut ranks);
+
+        engine.comm.reset();
+        let aux = vec![0.0f32; n];
+        let active = vec![true; n];
+        let (out, _) = engine
+            .superstep(StepKind::Wcc, Combine::Min, &ranks, &aux, &active)
+            .unwrap();
+        let bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(engine.k(), k);
+        (bits, engine.comm.total_bytes(), engine.layout().rf())
+    };
+    let (ref_bits, ref_bytes, ref_rf) = run(1);
+    for w in WIDTHS {
+        let (bits, bytes, rf) = run(w);
+        assert_eq!(bits, ref_bits, "width {w}: vertex state diverges");
+        assert_eq!(bytes, ref_bytes, "width {w}: comm bytes diverge");
+        assert!((rf - ref_rf).abs() < 1e-15, "width {w}: layout RF diverges");
+    }
+}

@@ -200,7 +200,7 @@ fn churn_plan_union_equals_naive_changed_edge_diff() {
             300 + rng.below_usize(1200),
             rng.next_u64(),
         );
-        let cfg = geo::GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 5 };
+        let cfg = geo::GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 5, ..Default::default() };
         let mut sg = StagedGraph::new(g, cfg);
         let mut k = 2 + rng.below_usize(8);
         for _ in 0..5 {
@@ -289,7 +289,7 @@ fn churn_plan_union_equals_naive_changed_edge_diff() {
 fn streaming_engine_matches_fresh_engine_under_churn() {
     check(0x57E5, 6, |rng| {
         let g = erdos_renyi(60 + rng.below_usize(80), 250 + rng.below_usize(600), rng.next_u64());
-        let cfg = geo::GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 2 };
+        let cfg = geo::GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 2, ..Default::default() };
         let mut sg = StagedGraph::new(g, cfg);
         let mut k = 2 + rng.below_usize(5);
         let mut engine = {

@@ -14,7 +14,7 @@ use egs::scaling::scenario::Scenario;
 use egs::stream::{CompactionPolicy, MutationBatch, StagedGraph};
 
 fn geo_cfg() -> GeoConfig {
-    GeoConfig { k_min: 2, k_max: 16, delta: None, seed: 11 }
+    GeoConfig { k_min: 2, k_max: 16, delta: None, seed: 11, ..Default::default() }
 }
 
 /// The headline acceptance run: churn every 3 iterations, k 6 → 8, the
