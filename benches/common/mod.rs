@@ -8,7 +8,11 @@
 //!   stand-in (same skew class, ~100× smaller) and shrink iteration knobs
 //!   via [`scaled`], so the whole suite finishes inside a CI smoke job.
 //! * `PALLAS_BENCH_JSON=<path>` — append one JSON line per recorded row:
-//!   `{"bench": "...", "scenario": "...", "wall_ms": <f64>, "rf": <f64|null>}`.
+//!   `{"bench": "...", "scenario": "...", "wall_ms": <f64>, "rf": <f64|null>,
+//!   "layout_ranges": <u64|null>, "layout_bytes": <u64|null>}`.
+//!   `layout_ranges`/`layout_bytes` report the interval-set ownership
+//!   metadata resident in a `PartitionLayout` after the measured run
+//!   ([`BenchLog::row_layout`]; `null` for benches without a layout).
 //!   All benches share this schema; CI points every bench at the same
 //!   `BENCH_ci.json` and diffs it against the committed
 //!   `BENCH_baseline.json` (>2× wall-time regressions fail the build).
@@ -57,11 +61,12 @@ pub fn timed_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (v, ms(t.elapsed()))
 }
 
-/// Row collector for one bench binary. Call [`BenchLog::row`] per
+/// Row collector for one bench binary. Call [`BenchLog::row`] (or
+/// [`BenchLog::row_layout`] when a `PartitionLayout` is in play) per
 /// measured scenario and [`BenchLog::finish`] before exiting.
 pub struct BenchLog {
     bench: String,
-    rows: Vec<(String, f64, Option<f64>)>,
+    rows: Vec<(String, f64, Option<f64>, Option<(u64, u64)>)>,
 }
 
 impl BenchLog {
@@ -73,7 +78,26 @@ impl BenchLog {
     /// Record one scenario: wall time in milliseconds and an optional
     /// replication factor (`None` → `null` in the JSON row).
     pub fn row(&mut self, scenario: &str, wall_ms: f64, rf: Option<f64>) {
-        self.rows.push((scenario.to_string(), wall_ms, rf));
+        self.rows.push((scenario.to_string(), wall_ms, rf, None));
+    }
+
+    /// [`Self::row`] plus the interval-set ownership telemetry of the
+    /// measured layout: resident interval count and metadata bytes
+    /// (`PartitionLayout::total_ranges` / `metadata_bytes`).
+    pub fn row_layout(
+        &mut self,
+        scenario: &str,
+        wall_ms: f64,
+        rf: Option<f64>,
+        layout_ranges: u64,
+        layout_bytes: u64,
+    ) {
+        self.rows.push((
+            scenario.to_string(),
+            wall_ms,
+            rf,
+            Some((layout_ranges, layout_bytes)),
+        ));
     }
 
     /// Append the collected rows to `$PALLAS_BENCH_JSON` (JSON lines, the
@@ -87,15 +111,20 @@ impl BenchLog {
             .append(true)
             .open(&path)
             .unwrap_or_else(|e| panic!("open {}: {e}", path.to_string_lossy()));
-        for (scenario, wall, rf) in &self.rows {
+        for (scenario, wall, rf, layout) in &self.rows {
             let rf_s = match rf {
                 Some(x) => format!("{x:.6}"),
                 None => "null".into(),
             };
+            let (ranges_s, bytes_s) = match layout {
+                Some((r, b)) => (r.to_string(), b.to_string()),
+                None => ("null".into(), "null".into()),
+            };
             writeln!(
                 fh,
-                "{{\"bench\":\"{}\",\"scenario\":\"{}\",\"wall_ms\":{:.3},\"rf\":{}}}",
-                self.bench, scenario, wall, rf_s
+                "{{\"bench\":\"{}\",\"scenario\":\"{}\",\"wall_ms\":{:.3},\"rf\":{},\
+                 \"layout_ranges\":{},\"layout_bytes\":{}}}",
+                self.bench, scenario, wall, rf_s, ranges_s, bytes_s
             )
             .expect("write bench row");
         }

@@ -16,6 +16,7 @@
 mod common;
 
 use common::BenchLog;
+use egs::engine::mirrors::PartitionLayout;
 use egs::metrics::table::{f3, secs, Table};
 use egs::ordering::geo::{self, GeoConfig};
 use egs::stream::{quality, MutationBatch, StagedGraph};
@@ -57,6 +58,13 @@ fn main() {
         let mut rng = Rng::new(0xF16);
         let mut stream_s = 0.0f64;
         let mut plan_ops = 0usize;
+        // interval-set layout maintained *incrementally* across every
+        // batch (the engine's path), so the reported telemetry would
+        // expose any fragmentation bug in apply_churn
+        let mut layout = {
+            let assign = sg.assignment(k);
+            PartitionLayout::build(&sg, &assign)
+        };
         for _ in 0..batches {
             let mut batch = MutationBatch::new();
             let p = sg.physical_edges() as u64;
@@ -70,14 +78,24 @@ fn main() {
             let t = Instant::now();
             let (_, plan) = sg.apply_batch(&batch, k);
             plan_ops += plan.range_ops();
-            if sg.needs_compaction() {
+            let compacted = sg.needs_compaction();
+            if compacted {
                 sg.compact();
             }
             stream_s += t.elapsed().as_secs_f64();
+            // outside the timed ingest path: keep the layout current
+            let assign = sg.assignment(k);
+            if compacted {
+                layout = PartitionLayout::build(&sg, &assign);
+            } else {
+                layout.apply_churn(&sg, &plan, &assign);
+            }
         }
         let per_batch = stream_s / batches as f64;
         let assign = sg.assignment(k);
         let rf_live = quality::live_replication_factor(&sg, &assign);
+        let (layout_ranges, layout_bytes) =
+            (layout.total_ranges() as u64, layout.metadata_bytes() as u64);
         // fresh repartition of the mutated graph (the quality baseline)
         let live = sg.as_graph();
         let fresh = geo::order(&live, &cfg).apply(&live);
@@ -95,7 +113,13 @@ fn main() {
             f3(rf_live),
             f3(rf_fresh),
         ]);
-        log.row(&format!("rate={:.3}", rate), per_batch * 1e3, Some(rf_live));
+        log.row_layout(
+            &format!("rate={:.3}", rate),
+            per_batch * 1e3,
+            Some(rf_live),
+            layout_ranges,
+            layout_bytes,
+        );
     }
     table.print();
     log.finish();

@@ -43,7 +43,13 @@ fn main() {
                 out.migrated_edges.to_string(),
                 format!("{:.2}", out.com_bytes as f64 / 1e6),
             ]);
-            log.row(&format!("{method}/{}", scenario.name), out.all_s * 1e3, None);
+            log.row_layout(
+                &format!("{method}/{}", scenario.name),
+                out.all_s * 1e3,
+                None,
+                out.layout_ranges as u64,
+                out.layout_bytes as u64,
+            );
         }
         t.print();
     }

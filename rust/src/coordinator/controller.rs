@@ -72,6 +72,10 @@ pub struct EventRecord {
     /// number of range moves in the executed plan (O(k) for CEP,
     /// up to O(m) for scattered methods)
     pub range_moves: usize,
+    /// ownership intervals resident in the layout after the event —
+    /// ≤ `to_k` on chunk-contiguous (CEP/streaming) paths, the audit
+    /// signal that rescaling stayed pure metadata
+    pub layout_ranges: usize,
 }
 
 /// Table 7 row: total and component times (seconds). `SCALE` combines the
@@ -95,6 +99,11 @@ pub struct RunBreakdown {
     pub com_bytes: u64,
     /// final partition count
     pub final_k: usize,
+    /// ownership intervals resident in the final layout (O(k + moved
+    /// ranges), never per-edge)
+    pub layout_ranges: usize,
+    /// resident bytes of the final layout's ownership metadata
+    pub layout_bytes: usize,
     /// per-event audit log of the executed plans
     pub events: Vec<EventRecord>,
 }
@@ -206,6 +215,7 @@ where
                 to_k: ev.target_k,
                 migrated_edges: migrated,
                 range_moves: plan.num_moves(),
+                layout_ranges: engine.layout().total_ranges(),
             });
         }
 
@@ -234,6 +244,8 @@ where
         migrated_edges: cluster.total_migrated(),
         com_bytes,
         final_k: cluster.k,
+        layout_ranges: engine.layout().total_ranges(),
+        layout_bytes: engine.layout().metadata_bytes(),
         events: event_log,
     })
 }
@@ -366,6 +378,9 @@ pub struct ChurnRecord {
     /// total range operations actually executed: the delta plan's size,
     /// or `k` full-chunk reloads when the batch tripped a compaction
     pub range_ops: usize,
+    /// ownership intervals resident in the layout after the batch — ≤ k
+    /// always on the streaming path (staged chunks are contiguous)
+    pub layout_ranges: usize,
     /// tombstones outstanding after the batch
     pub tombstones_after: usize,
     /// staging fraction after the batch
@@ -404,6 +419,10 @@ pub struct StreamingBreakdown {
     /// RF of a fresh GEO+CEP repartition of the final mutated graph
     /// (only when `measure_fresh_baseline` is set)
     pub fresh_rf: Option<f64>,
+    /// ownership intervals resident in the final layout
+    pub layout_ranges: usize,
+    /// resident bytes of the final layout's ownership metadata
+    pub layout_bytes: usize,
     /// compactions performed (including a final flush)
     pub compactions: u32,
     /// live edges at the end of the run
@@ -510,6 +529,7 @@ where
                 moved,
                 appended: plan.appended_edges(),
                 range_ops,
+                layout_ranges: engine.layout().total_ranges(),
                 tombstones_after: sg.tombstone_count(),
                 staging_fraction: sg.staging_fraction(),
                 compacted,
@@ -539,6 +559,7 @@ where
                 to_k: k,
                 migrated_edges: migrated,
                 range_moves: plan.moves.num_moves(),
+                layout_ranges: engine.layout().total_ranges(),
             });
         }
 
@@ -591,6 +612,8 @@ where
         final_k: k,
         final_rf,
         fresh_rf,
+        layout_ranges: engine.layout().total_ranges(),
+        layout_bytes: engine.layout().metadata_bytes(),
         compactions: sg.compactions(),
         live_edges: sg.live_edges(),
         events: event_log,
@@ -712,7 +735,17 @@ mod tests {
                 ev.range_moves
             );
             assert!(ev.migrated_edges > 0);
+            // chunk-contiguous target: ownership metadata stays ≤ k
+            // intervals after every executed plan
+            assert!(
+                ev.layout_ranges <= ev.to_k,
+                "{}→{}: {} ownership intervals resident",
+                ev.from_k,
+                ev.to_k,
+                ev.layout_ranges
+            );
         }
+        assert!(out.layout_ranges <= out.final_k);
     }
 
     #[test]
@@ -822,6 +855,14 @@ mod tests {
             );
             assert!(cr.staging_fraction <= cfg.policy.budget + 0.05);
             assert!(cr.rf >= 1.0);
+            // staged chunks are contiguous: the layout never fragments
+            // beyond one interval per partition
+            assert!(
+                cr.layout_ranges <= 5,
+                "churn at {} left {} ownership intervals",
+                cr.at_iteration,
+                cr.layout_ranges
+            );
         }
         for ev in &out.events {
             assert!(
@@ -831,7 +872,9 @@ mod tests {
                 ev.to_k,
                 ev.range_moves
             );
+            assert!(ev.layout_ranges <= ev.to_k);
         }
+        assert!(out.layout_ranges <= out.final_k);
     }
 
     #[test]

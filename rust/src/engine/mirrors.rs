@@ -13,11 +13,21 @@
 //! their local tables, and master/mirror state is re-derived only for the
 //! vertices whose replica set actually changed — never a full rebuild.
 //!
+//! Ownership itself is **interval-set metadata**
+//! ([`crate::partition::intervals::IdRangeSet`]): each partition's edge-id
+//! set is a sorted, coalesced list of contiguous ranges, so a
+//! chunk-contiguous layout (CEP, streaming staged chunks) carries O(k)
+//! resident metadata — one interval per partition — instead of 8 B/edge,
+//! and a plan's range move executes as two interval splices with **no
+//! per-edge work**. Building from a chunked assignment is O(k) via
+//! [`PartitionAssignment::as_chunks`]; scattered assignments coalesce
+//! maximal runs (O(m) build time, O(runs) memory).
+//!
 //! Streaming graphs extend the same machinery: the layout is generic over
 //! [`EdgeSource`] (a [`crate::graph::Graph`] or a
 //! [`crate::stream::StagedGraph`]) and executes [`ChurnPlan`]s
 //! ([`PartitionLayout::apply_churn`]). Tombstoned
-//! ids stay in their nominal owner's edge-id set — so every later move
+//! ids stay in their nominal owner's interval — so every later move
 //! remains one contiguous range — but are skipped whenever a partition
 //! materializes its local tables: a **retirement** just marks the owner
 //! for rebuild, an **append** admits a freshly staged range, and
@@ -25,6 +35,7 @@
 //! space may grow.
 
 use crate::graph::EdgeSource;
+use crate::partition::intervals::IdRangeSet;
 use crate::partition::PartitionAssignment;
 use crate::scaling::migration::MigrationPlan;
 use crate::stream::plan::ChurnPlan;
@@ -32,8 +43,8 @@ use crate::util::rng::mix64;
 use crate::{EdgeId, VertexId};
 use std::ops::Range;
 
-/// Layout state: per-partition vertex sets, owned edge ids, local edge
-/// endpoints and the global master assignment. Mutated in place by
+/// Layout state: per-partition vertex sets, owned edge-id intervals, local
+/// edge endpoints and the global master assignment. Mutated in place by
 /// [`PartitionLayout::apply_plan`].
 pub struct PartitionLayout {
     k: usize,
@@ -48,23 +59,24 @@ pub struct PartitionLayout {
     master: Vec<u32>,
     /// number of replicas per vertex
     replicas: Vec<u32>,
-    /// sorted global edge ids owned by each partition — the substrate the
-    /// range moves of a migration/churn plan splice between partitions.
-    /// On the streaming path this includes tombstoned ids (they stay with
-    /// their nominal owner so moves remain whole ranges) but dead ids are
-    /// skipped when local tables materialize. Costs 8 B/edge on top of the
-    /// ~16 B/edge local endpoint arrays; a future optimization is an
-    /// interval-list representation so chunked layouts pay O(k) here and
-    /// range moves become O(log r) metadata edits.
-    edge_ids: Vec<Vec<EdgeId>>,
+    /// global edge ids owned by each partition as interval sets — the
+    /// substrate the range moves of a migration/churn plan splice between
+    /// partitions. On the streaming path the intervals include tombstoned
+    /// ids (they stay with their nominal owner so moves remain whole
+    /// ranges) but dead ids are skipped when local tables materialize.
+    /// O(k + ranges) resident metadata: one interval per partition on
+    /// chunk-contiguous layouts.
+    edge_ids: Vec<IdRangeSet>,
     /// sorted replica partition list per vertex (incrementally patched)
     replica_parts: Vec<Vec<u32>>,
 }
 
 impl PartitionLayout {
     /// Build the layout for `(g, part)` from any assignment view over any
-    /// edge source. Dead ids (tombstones of a staged assignment) stay with
-    /// their nominal owner but never reach its local tables.
+    /// edge source. Chunked assignments ([`PartitionAssignment::as_chunks`])
+    /// seed the ownership intervals in O(k); scattered assignments
+    /// coalesce maximal runs. Dead ids (tombstones of a staged assignment)
+    /// stay with their nominal owner but never reach its local tables.
     pub fn build<E, P>(g: &E, part: &P) -> PartitionLayout
     where
         E: EdgeSource + ?Sized,
@@ -73,10 +85,19 @@ impl PartitionLayout {
         let k = part.k();
         let n = g.num_vertices();
         debug_assert_eq!(part.num_edges() as usize, g.num_edges());
-        let mut edge_ids: Vec<Vec<EdgeId>> = vec![Vec::new(); k];
-        for eid in 0..g.num_edges() as EdgeId {
-            edge_ids[part.partition_of(eid) as usize].push(eid);
-        }
+        let edge_ids: Vec<IdRangeSet> = match part.as_chunks() {
+            Some(chunks) => {
+                debug_assert_eq!(chunks.len(), k);
+                chunks.into_iter().map(IdRangeSet::from_range).collect()
+            }
+            None => {
+                let mut sets = vec![IdRangeSet::new(); k];
+                for eid in 0..g.num_edges() as EdgeId {
+                    sets[part.partition_of(eid) as usize].push_back(eid);
+                }
+                sets
+            }
+        };
         let mut layout = PartitionLayout {
             k,
             n,
@@ -106,10 +127,12 @@ impl PartitionLayout {
 
     /// Execute a migration plan in place, transitioning the layout from
     /// its current assignment to the one the plan encodes (`k` becomes
-    /// `new_k`). Work is proportional to the touched partitions and the
-    /// vertices whose replica set changed — untouched partitions keep
-    /// their tables. Returns the ids (< `new_k`) of partitions whose local
-    /// state changed, ascending.
+    /// `new_k`). The ownership edit is pure interval splicing — an
+    /// O(log r) locate plus an O(r) interval edit per range op, no
+    /// per-edge work — and the rest is proportional to
+    /// the touched partitions and the vertices whose replica set changed;
+    /// untouched partitions keep their tables. Returns the ids (< `new_k`)
+    /// of partitions whose local state changed, ascending.
     ///
     /// Panics when the plan is inconsistent with the current layout (a
     /// moved range not wholly owned by its source, or a removed partition
@@ -123,14 +146,22 @@ impl PartitionLayout {
         let old_k = self.k;
         let grown = self.grow_partitions(new_k);
 
-        // 1. splice moved edge-id ranges between partitions
+        // 1. splice moved ranges out of their source intervals
         let mut changed = vec![false; grown];
         for mv in &plan.moves {
             let (s, d) = (mv.src as usize, mv.dst as usize);
             assert!(s < grown && d < grown, "plan references partition out of range");
-            move_range(&mut self.edge_ids, s, d, &mv.edges);
+            if s == d || mv.is_empty() {
+                continue;
+            }
+            self.edge_ids[s].splice_out(mv.edges.clone());
             changed[s] = true;
             changed[d] = true;
+        }
+        // 2. admit them at their destinations; adjacent moves landing on
+        //    the same destination are coalesced into single splices
+        for (d, span) in plan.dst_spans() {
+            self.edge_ids[d as usize].splice_in(span);
         }
 
         self.finish_apply(g, new_part, &changed, old_k, new_k)
@@ -139,7 +170,7 @@ impl PartitionLayout {
     /// Execute a **churn plan** in place: mark retired (tombstoned) ranges
     /// for rebuild at their owner, splice rebalancing moves, and admit
     /// appended (freshly staged) ranges — the streaming counterpart of
-    /// [`Self::apply_plan`]. Retired ids stay in the owner's edge-id set
+    /// [`Self::apply_plan`]. Retired ids stay in the owner's intervals
     /// (they are dead under `new_part` and vanish from its local tables at
     /// rebuild); this keeps every subsequent move a single contiguous
     /// range. The vertex id space may have grown (`g.num_vertices()`
@@ -172,29 +203,38 @@ impl PartitionLayout {
             debug_assert!(r.start < r.end, "empty retire range");
             changed[s] = true;
         }
-        // 2. splice rebalancing moves (pre-existing ids, dead included)
+        // 2. splice rebalancing moves (pre-existing ids, dead included):
+        //    interval edits out of every source, coalesced same-destination
+        //    spans back in
         for mv in &plan.moves.moves {
             let (s, d) = (mv.src as usize, mv.dst as usize);
             assert!(s < grown && d < grown, "churn plan references partition out of range");
-            move_range(&mut self.edge_ids, s, d, &mv.edges);
+            if s == d || mv.is_empty() {
+                continue;
+            }
+            self.edge_ids[s].splice_out(mv.edges.clone());
             changed[s] = true;
             changed[d] = true;
         }
+        for (d, span) in plan.moves.dst_spans() {
+            self.edge_ids[d as usize].splice_in(span);
+        }
         // 3. append: admit freshly staged ranges (ids beyond every
-        //    pre-existing id, so a plain extend keeps the sets sorted)
+        //    pre-existing id, so each lands as the owner's last interval —
+        //    coalescing with its chunk when adjacent)
         for (dst, r) in &plan.appends {
             let d = *dst as usize;
             assert!(d < grown, "churn plan appends to partition out of range");
-            let ids = &mut self.edge_ids[d];
-            if let Some(&last) = ids.last() {
+            let set = &mut self.edge_ids[d];
+            if let Some(last) = set.ranges().last() {
                 assert!(
-                    last < r.start,
+                    last.end <= r.start,
                     "appended range {}..{} not beyond partition {d}'s ids",
                     r.start,
                     r.end
                 );
             }
-            ids.extend(r.clone());
+            set.splice_in(r.clone());
             changed[d] = true;
         }
 
@@ -208,7 +248,7 @@ impl PartitionLayout {
             self.vertices.resize_with(grown, Vec::new);
             self.local_src.resize_with(grown, Vec::new);
             self.local_dst.resize_with(grown, Vec::new);
-            self.edge_ids.resize_with(grown, Vec::new);
+            self.edge_ids.resize_with(grown, IdRangeSet::new);
         }
         grown
     }
@@ -259,11 +299,11 @@ impl PartitionLayout {
 
         // shrink: removed partitions must have been drained by the plan
         if new_k < old_k {
-            for (p, ids) in self.edge_ids.iter().enumerate().take(old_k).skip(new_k) {
+            for (p, set) in self.edge_ids.iter().enumerate().take(old_k).skip(new_k) {
                 assert!(
-                    ids.is_empty(),
+                    set.is_empty(),
                     "partition {p} still owns {} edges after scale-in plan",
-                    ids.len()
+                    set.len()
                 );
             }
             self.vertices.truncate(new_k);
@@ -289,20 +329,23 @@ impl PartitionLayout {
     }
 
     /// Recompute partition `p`'s vertex set and local edge arrays from its
-    /// owned edge ids, skipping dead (tombstoned) ids.
+    /// owned intervals, walking ranges and indexing the edge source by id
+    /// within each range; dead (tombstoned) ids are skipped.
     fn rebuild_partition<E, P>(&mut self, p: usize, g: &E, part: &P)
     where
         E: EdgeSource + ?Sized,
         P: PartitionAssignment + ?Sized,
     {
         let mut present: std::collections::BTreeSet<VertexId> = Default::default();
-        for &eid in &self.edge_ids[p] {
-            if !part.is_live(eid) {
-                continue;
+        for r in self.edge_ids[p].ranges() {
+            for eid in r.clone() {
+                if !part.is_live(eid) {
+                    continue;
+                }
+                let e = g.edge(eid);
+                present.insert(e.u);
+                present.insert(e.v);
             }
-            let e = g.edge(eid);
-            present.insert(e.u);
-            present.insert(e.v);
         }
         let verts: Vec<VertexId> = present.into_iter().collect();
         let lindex: std::collections::HashMap<VertexId, i32> =
@@ -311,17 +354,19 @@ impl PartitionLayout {
         let dst = &mut self.local_dst[p];
         src.clear();
         dst.clear();
-        for &eid in &self.edge_ids[p] {
-            if !part.is_live(eid) {
-                continue;
+        for r in self.edge_ids[p].ranges() {
+            for eid in r.clone() {
+                if !part.is_live(eid) {
+                    continue;
+                }
+                let e = g.edge(eid);
+                let lu = lindex[&e.u];
+                let lv = lindex[&e.v];
+                src.push(lu);
+                dst.push(lv);
+                src.push(lv);
+                dst.push(lu);
             }
-            let e = g.edge(eid);
-            let lu = lindex[&e.u];
-            let lv = lindex[&e.v];
-            src.push(lu);
-            dst.push(lv);
-            src.push(lv);
-            dst.push(lu);
         }
         self.vertices[p] = verts;
     }
@@ -354,11 +399,44 @@ impl PartitionLayout {
         &self.vertices[p]
     }
 
-    /// Sorted global edge ids owned by partition `p` (on the streaming
-    /// path this includes tombstoned ids — check the assignment's
-    /// `is_live` when walking them).
-    pub fn edges_of(&self, p: usize) -> &[EdgeId] {
-        &self.edge_ids[p]
+    /// Owned edge-id intervals of partition `p`: sorted, coalesced,
+    /// non-overlapping ranges. On the streaming path the intervals include
+    /// tombstoned ids — check the assignment's `is_live` when walking
+    /// them. Exactly one interval per partition on chunk-contiguous
+    /// layouts.
+    pub fn owned_ranges(&self, p: usize) -> &[Range<EdgeId>] {
+        self.edge_ids[p].ranges()
+    }
+
+    /// Flattened iterator over the owned edge ids of partition `p`
+    /// (ascending) — debug/test convenience; hot paths walk
+    /// [`Self::owned_ranges`].
+    pub fn owned_edge_ids(&self, p: usize) -> impl Iterator<Item = EdgeId> + '_ {
+        self.edge_ids[p].iter()
+    }
+
+    /// Number of owned edge ids of partition `p` (tombstoned ids included
+    /// on the streaming path) — O(1).
+    pub fn num_owned_edges(&self, p: usize) -> u64 {
+        self.edge_ids[p].len()
+    }
+
+    /// Ownership intervals of partition `p` — the per-partition metadata
+    /// footprint the coordinator audits as `range_count`.
+    pub fn range_count(&self, p: usize) -> usize {
+        self.edge_ids[p].num_ranges()
+    }
+
+    /// Total ownership intervals across all partitions; ≤ k on
+    /// chunk-contiguous layouts and ≤ k + applied range ops after any plan.
+    pub fn total_ranges(&self) -> usize {
+        self.edge_ids.iter().map(|s| s.num_ranges()).sum()
+    }
+
+    /// Resident bytes of the ownership metadata across all partitions
+    /// (what a `Vec<Vec<EdgeId>>` substrate would charge 8 B/edge for).
+    pub fn metadata_bytes(&self) -> usize {
+        self.edge_ids.iter().map(|s| s.metadata_bytes()).sum()
     }
 
     /// Local directed source endpoints of partition `p`.
@@ -391,28 +469,6 @@ impl PartitionLayout {
     pub fn num_mirrors(&self) -> u64 {
         self.replicas.iter().map(|&r| (r.max(1) - 1) as u64).sum()
     }
-}
-
-/// Drain the (contiguous, wholly owned) id range `r` out of the sorted
-/// `edge_ids[s]` and splice it into the sorted `edge_ids[d]`.
-fn move_range(edge_ids: &mut [Vec<EdgeId>], s: usize, d: usize, r: &Range<EdgeId>) {
-    if s == d || r.start >= r.end {
-        return;
-    }
-    let src_vec = &mut edge_ids[s];
-    let lo = src_vec.partition_point(|&e| e < r.start);
-    let hi = src_vec.partition_point(|&e| e < r.end);
-    assert_eq!(
-        (hi - lo) as u64,
-        r.end - r.start,
-        "plan range {}..{} not wholly owned by partition {s}",
-        r.start,
-        r.end
-    );
-    let block: Vec<EdgeId> = src_vec.drain(lo..hi).collect();
-    let dst_vec = &mut edge_ids[d];
-    let at = dst_vec.partition_point(|&e| e < r.start);
-    dst_vec.splice(at..at, block);
 }
 
 /// Diff two sorted vertex lists into `(removed, added)`.
@@ -508,12 +564,27 @@ mod tests {
         assert_layouts_equal(&a, &b);
     }
 
+    /// A chunked build costs one interval per partition, never per-edge
+    /// metadata.
+    #[test]
+    fn chunked_build_is_one_interval_per_partition() {
+        let g = erdos_renyi(100, 500, 6);
+        let k = 8;
+        let l = PartitionLayout::build(&g, &CepView::new(Cep::new(g.num_edges(), k)));
+        for p in 0..k {
+            assert!(l.range_count(p) <= 1, "partition {p}");
+        }
+        assert!(l.total_ranges() <= k);
+        // interval metadata is orders of magnitude below 8 B/edge
+        assert!(l.metadata_bytes() < 8 * g.num_edges());
+    }
+
     fn assert_layouts_equal(a: &PartitionLayout, b: &PartitionLayout) {
         assert_eq!(a.k(), b.k());
         assert_eq!(a.num_vertices(), b.num_vertices());
         for p in 0..a.k() {
             assert_eq!(a.vertices_of(p), b.vertices_of(p), "vertices of {p}");
-            assert_eq!(a.edges_of(p), b.edges_of(p), "edges of {p}");
+            assert_eq!(a.owned_ranges(p), b.owned_ranges(p), "ranges of {p}");
             assert_eq!(a.src_of(p), b.src_of(p), "src of {p}");
             assert_eq!(a.dst_of(p), b.dst_of(p), "dst of {p}");
         }
@@ -547,6 +618,13 @@ mod tests {
                 layout.apply_plan(&g, &plan, &next);
                 let fresh = PartitionLayout::build(&g, &next);
                 assert_layouts_equal(&layout, &fresh);
+                // chunk-contiguous target: intervals coalesce back to one
+                // per partition, so metadata stays O(k) across the chain
+                assert!(
+                    layout.total_ranges() <= new_k,
+                    "k={new_k}: {} intervals resident",
+                    layout.total_ranges()
+                );
                 view = next;
                 k = new_k;
             }
@@ -579,6 +657,53 @@ mod tests {
             assert_layouts_equal(&layout, &fresh);
             // every changed partition is within the new k
             assert!(changed.iter().all(|&p| p < new.k));
+        });
+    }
+
+    /// Satellite acceptance: starting from a chunk-contiguous layout
+    /// (≤ k intervals), every executed splice grows the resident interval
+    /// count by at most one, so after any rescale sequence
+    /// `total_ranges ≤ k_max + applied range ops` — the metadata never
+    /// silently degrades to per-edge scale.
+    #[test]
+    fn range_count_bounded_by_k_plus_applied_ops() {
+        check(0x1D5E, 10, |rng| {
+            let g = erdos_renyi(80, 400, rng.next_u64());
+            let m = g.num_edges();
+            let k0 = 2 + rng.below_usize(6);
+            let mut cur = EdgePartition::from_cep(&Cep::new(m, k0));
+            let mut layout = PartitionLayout::build(&g, &cur);
+            let mut k_max = k0;
+            let mut applied_ops = 0usize;
+            for _ in 0..3 {
+                let k1 = 2 + rng.below_usize(8);
+                k_max = k_max.max(k1);
+                // scatter a fraction of edges to random owners so the plan
+                // fragments intervals instead of rebuilding chunks
+                let mut assign: Vec<u32> =
+                    (0..m as u64).map(|i| cur.partition_of(i)).collect();
+                for _ in 0..rng.below_usize(40) {
+                    let i = rng.below_usize(m);
+                    assign[i] = rng.below(k1 as u64) as u32;
+                }
+                for a in assign.iter_mut() {
+                    if (*a as usize) >= k1 {
+                        *a = (k1 - 1) as u32;
+                    }
+                }
+                let next = EdgePartition::new(k1, assign);
+                let plan = crate::scaling::migration::MigrationPlan::diff(&cur, &next);
+                // one splice_out per move, one splice_in per coalesced
+                // destination span
+                applied_ops += plan.num_moves() + plan.dst_spans().len();
+                layout.apply_plan(&g, &plan, &next);
+                cur = next;
+                assert!(
+                    layout.total_ranges() <= k_max + applied_ops,
+                    "{} intervals > k_max {k_max} + ops {applied_ops}",
+                    layout.total_ranges()
+                );
+            }
         });
     }
 
@@ -636,6 +761,13 @@ mod tests {
                 let assign = sg.assignment(k);
                 let fresh = PartitionLayout::build(&sg, &assign);
                 assert_layouts_equal(&layout, &fresh);
+                // the staged target is chunk-contiguous over the physical
+                // id space, so ownership stays at ≤ k intervals
+                assert!(
+                    layout.total_ranges() <= k,
+                    "k={k}: {} intervals resident after churn",
+                    layout.total_ranges()
+                );
             }
         });
     }

@@ -159,12 +159,14 @@ impl Engine {
         let new_k = new_part.k();
         #[cfg(debug_assertions)]
         for p in 0..new_k {
-            for &eid in self.layout.edges_of(p) {
-                debug_assert_eq!(
-                    new_part.partition_of(eid),
-                    p as u32,
-                    "plan diverges from target assignment at edge {eid}"
-                );
+            for r in self.layout.owned_ranges(p) {
+                for eid in r.clone() {
+                    debug_assert_eq!(
+                        new_part.partition_of(eid),
+                        p as u32,
+                        "plan diverges from target assignment at edge {eid}"
+                    );
+                }
             }
         }
         self.workers.truncate(new_k);

@@ -42,6 +42,16 @@
 //!    rebuild their local tables and only vertices whose replica set
 //!    changed re-derive masters. Untouched workers keep running.
 //!
+//! Ownership inside the layout is **interval-set metadata**
+//! ([`partition::intervals::IdRangeSet`]): each partition's edge-id set
+//! is a sorted, coalesced range list, so a chunk-contiguous layout holds
+//! O(k) resident metadata — one interval per partition — instead of
+//! 8 B/edge, and every plan range op is an interval splice (O(log r)
+//! locate + O(r) edit) with no per-edge work. The coordinator audits the
+//! resident interval count
+//! per event (`layout_ranges`), pinned at ≤ k on the CEP and streaming
+//! paths.
+//!
 //! The [`coordinator`] drives exactly this loop at every scale event.
 //!
 //! Every hot path above (CSR construction, the quality sweeps, engine

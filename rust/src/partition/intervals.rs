@@ -1,0 +1,430 @@
+//! **Interval-set ownership metadata** — the O(ranges) substrate under
+//! every per-partition edge-id set in the pipeline.
+//!
+//! Chunk-based edge partitioning makes each partition a union of a *few*
+//! contiguous ranges of the ordered edge list, so materializing ownership
+//! as a sorted `Vec<EdgeId>` (8 B/edge) wastes both memory and rescale
+//! time: a range move would drain and re-splice O(m) ids. An
+//! [`IdRangeSet`] stores the same set as a sorted, coalesced,
+//! non-overlapping list of half-open ranges plus a cumulative-count index:
+//!
+//! * membership and rank are O(log r) binary searches,
+//! * [`IdRangeSet::splice_out`] / [`IdRangeSet::splice_in`] execute a
+//!   plan's range move as pure interval edits — an O(log r) search plus an
+//!   O(r) `Vec` splice, never per-edge work,
+//! * [`IdRangeSet::len`] is O(1) off the index; [`IdRangeSet::live_len`]
+//!   masks a sorted tombstone list in O(r log t),
+//! * consumers walk [`IdRangeSet::ranges`] (or the tombstone-masked
+//!   [`IdRangeSet::live_ranges`]) and index the CSR / [`crate::graph::EdgeSource`]
+//!   by range instead of touching individual ids.
+//!
+//! On a chunk-contiguous layout (CEP, streaming staged chunks) every
+//! partition owns exactly one interval, so the whole
+//! [`crate::engine::mirrors::PartitionLayout`] carries O(k) ownership
+//! metadata instead of O(m) — the representation change that keeps
+//! billion-edge rescales at O(k + moved ranges).
+//!
+//! Invariants (checked by `debug_assert` and the unit suite): ranges are
+//! non-empty, strictly ascending, and *coalesced* — adjacent ranges merge,
+//! so `ranges[i].end < ranges[i+1].start` always.
+
+use crate::EdgeId;
+use std::ops::Range;
+
+/// A set of edge ids stored as sorted, coalesced, non-overlapping
+/// half-open ranges with a cumulative-count index for O(log r) rank
+/// queries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IdRangeSet {
+    /// sorted, coalesced, non-empty, non-overlapping intervals
+    ranges: Vec<Range<EdgeId>>,
+    /// `prefix[i]` = ids contained in `ranges[..i]`; `prefix[ranges.len()]`
+    /// is the total cardinality, so `len()` is O(1)
+    prefix: Vec<u64>,
+}
+
+impl Default for IdRangeSet {
+    fn default() -> Self {
+        IdRangeSet::new()
+    }
+}
+
+impl IdRangeSet {
+    /// The empty set.
+    pub fn new() -> IdRangeSet {
+        IdRangeSet { ranges: Vec::new(), prefix: vec![0] }
+    }
+
+    /// A set owning exactly `r` (the chunk-contiguous fast path: one
+    /// interval per partition, O(1)). An empty `r` yields the empty set.
+    pub fn from_range(r: Range<EdgeId>) -> IdRangeSet {
+        if r.start >= r.end {
+            return IdRangeSet::new();
+        }
+        IdRangeSet { prefix: vec![0, r.end - r.start], ranges: vec![r] }
+    }
+
+    /// Build from strictly ascending ids, coalescing consecutive runs —
+    /// O(n) time, O(runs) memory ([`Self::push_back`] per id; scattered
+    /// assignments feed `push_back` directly during layout construction).
+    pub fn from_sorted_ids<I: IntoIterator<Item = EdgeId>>(ids: I) -> IdRangeSet {
+        let mut s = IdRangeSet::new();
+        for id in ids {
+            s.push_back(id);
+        }
+        s
+    }
+
+    /// Append `id`, which must lie beyond every contained id — O(1),
+    /// coalescing with the last range when contiguous.
+    pub fn push_back(&mut self, id: EdgeId) {
+        if let Some(last) = self.ranges.last_mut() {
+            assert!(id >= last.end, "push_back id {id} not beyond existing ranges");
+            if id == last.end {
+                last.end += 1;
+                *self.prefix.last_mut().unwrap() += 1;
+                return;
+            }
+        }
+        let total = *self.prefix.last().unwrap();
+        self.ranges.push(id..id + 1);
+        self.prefix.push(total + 1);
+    }
+
+    /// Number of contained ids — O(1).
+    pub fn len(&self) -> u64 {
+        *self.prefix.last().unwrap()
+    }
+
+    /// True when no ids are contained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of intervals `r` — the metadata footprint.
+    pub fn num_ranges(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The intervals, sorted ascending and coalesced. Consumers should
+    /// walk these and index edge storage by range rather than flattening.
+    pub fn ranges(&self) -> &[Range<EdgeId>] {
+        &self.ranges
+    }
+
+    /// Flattened id iterator (ascending) — for tests and debug
+    /// cross-checks; hot paths walk [`Self::ranges`] instead.
+    pub fn iter(&self) -> impl Iterator<Item = EdgeId> + '_ {
+        self.ranges.iter().flat_map(|r| r.clone())
+    }
+
+    /// Is `id` contained? O(log r).
+    pub fn contains(&self, id: EdgeId) -> bool {
+        let i = self.ranges.partition_point(|rg| rg.end <= id);
+        i < self.ranges.len() && self.ranges[i].start <= id
+    }
+
+    /// Number of contained ids strictly below `id` — O(log r) off the
+    /// cumulative index.
+    pub fn rank(&self, id: EdgeId) -> u64 {
+        let i = self.ranges.partition_point(|rg| rg.end <= id);
+        let mut r = self.prefix[i];
+        if i < self.ranges.len() && self.ranges[i].start < id {
+            r += id - self.ranges[i].start;
+        }
+        r
+    }
+
+    /// Splice the contiguous range `r` in: an O(log r) locate plus one
+    /// `Vec` splice, coalescing with a touching left/right neighbour.
+    /// Panics when any id of `r` is already contained — ownership sets are
+    /// disjoint, so an overlapping insert is a plan-execution bug.
+    pub fn splice_in(&mut self, r: Range<EdgeId>) {
+        assert!(r.start < r.end, "splice_in of empty range {}..{}", r.start, r.end);
+        let i = self.ranges.partition_point(|rg| rg.end < r.start);
+        let j = self.ranges.partition_point(|rg| rg.start <= r.end);
+        let mut merged = r.clone();
+        for rg in &self.ranges[i..j] {
+            assert!(
+                rg.end == r.start || rg.start == r.end,
+                "splice_in range {}..{} overlaps owned range {}..{}",
+                r.start,
+                r.end,
+                rg.start,
+                rg.end
+            );
+            merged.start = merged.start.min(rg.start);
+            merged.end = merged.end.max(rg.end);
+        }
+        self.ranges.splice(i..j, [merged]);
+        self.reindex();
+    }
+
+    /// Splice the contiguous range `r` out: O(log r) locate plus one
+    /// `Vec` edit, splitting the containing interval when `r` is interior.
+    /// Panics when `r` is not wholly contained — the "plan range not
+    /// wholly owned" guard of migration execution.
+    pub fn splice_out(&mut self, r: Range<EdgeId>) {
+        assert!(r.start < r.end, "splice_out of empty range {}..{}", r.start, r.end);
+        let i = self.ranges.partition_point(|rg| rg.end <= r.start);
+        assert!(
+            i < self.ranges.len()
+                && self.ranges[i].start <= r.start
+                && r.end <= self.ranges[i].end,
+            "range {}..{} not wholly owned by this set",
+            r.start,
+            r.end
+        );
+        let owned = self.ranges[i].clone();
+        match (owned.start < r.start, r.end < owned.end) {
+            (true, true) => {
+                self.ranges[i].end = r.start;
+                self.ranges.insert(i + 1, r.end..owned.end);
+            }
+            (true, false) => self.ranges[i].end = r.start,
+            (false, true) => self.ranges[i].start = r.end,
+            (false, false) => {
+                self.ranges.remove(i);
+            }
+        }
+        self.reindex();
+    }
+
+    /// Contained ids that are **not** in the sorted tombstone list `dead`
+    /// — O(r log t), two binary searches per interval.
+    pub fn live_len(&self, dead: &[EdgeId]) -> u64 {
+        let mut live = self.len();
+        for r in &self.ranges {
+            let a = dead.partition_point(|&d| d < r.start);
+            let b = dead.partition_point(|&d| d < r.end);
+            live -= (b - a) as u64;
+        }
+        live
+    }
+
+    /// Tombstone-masked iteration: maximal live sub-ranges of every
+    /// interval, skipping the ids in the sorted list `dead`.
+    pub fn live_ranges<'a>(
+        &'a self,
+        dead: &'a [EdgeId],
+    ) -> impl Iterator<Item = Range<EdgeId>> + 'a {
+        self.ranges.iter().flat_map(move |r| live_subranges(r.clone(), dead))
+    }
+
+    /// Resident bytes of the interval metadata (the quantity the bench
+    /// rows report as `layout_bytes`).
+    pub fn metadata_bytes(&self) -> usize {
+        self.ranges.capacity() * std::mem::size_of::<Range<EdgeId>>()
+            + self.prefix.capacity() * std::mem::size_of::<u64>()
+    }
+
+    /// Remove every id.
+    pub fn clear(&mut self) {
+        self.ranges.clear();
+        self.prefix.clear();
+        self.prefix.push(0);
+    }
+
+    /// Rebuild the cumulative-count index — O(r), called after every
+    /// structural edit (the edits themselves are already O(r) `Vec`
+    /// splices, so this does not change the asymptotics).
+    fn reindex(&mut self) {
+        self.prefix.clear();
+        self.prefix.push(0);
+        let mut total = 0u64;
+        for r in &self.ranges {
+            debug_assert!(r.start < r.end, "empty interval survived an edit");
+            total += r.end - r.start;
+            self.prefix.push(total);
+        }
+        debug_assert!(
+            self.ranges.windows(2).all(|w| w[0].end < w[1].start),
+            "intervals not sorted/coalesced"
+        );
+    }
+}
+
+/// Maximal live sub-ranges of `r` after masking the sorted tombstone ids
+/// in `dead` (ids outside `r` are ignored). Shared by the layout's local
+/// table rebuilds and the streaming quality sweeps.
+pub fn live_subranges(r: Range<EdgeId>, dead: &[EdgeId]) -> LiveSubranges<'_> {
+    let di = dead.partition_point(|&d| d < r.start);
+    LiveSubranges { cur: r.start, end: r.end, dead, di }
+}
+
+/// Iterator of [`live_subranges`].
+pub struct LiveSubranges<'a> {
+    cur: EdgeId,
+    end: EdgeId,
+    dead: &'a [EdgeId],
+    di: usize,
+}
+
+impl Iterator for LiveSubranges<'_> {
+    type Item = Range<EdgeId>;
+
+    fn next(&mut self) -> Option<Range<EdgeId>> {
+        // skip the (strictly ascending) dead ids at the cursor
+        while self.cur < self.end
+            && self.di < self.dead.len()
+            && self.dead[self.di] == self.cur
+        {
+            self.di += 1;
+            self.cur += 1;
+        }
+        if self.cur >= self.end {
+            return None;
+        }
+        let stop = match self.dead.get(self.di) {
+            Some(&d) if d < self.end => d,
+            _ => self.end,
+        };
+        let out = self.cur..stop;
+        self.cur = stop;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(s: &IdRangeSet) -> Vec<EdgeId> {
+        s.iter().collect()
+    }
+
+    #[test]
+    fn from_sorted_ids_coalesces_runs() {
+        let s = IdRangeSet::from_sorted_ids([0, 1, 2, 5, 6, 9]);
+        assert_eq!(s.ranges(), &[0..3, 5..7, 9..10]);
+        assert_eq!(s.num_ranges(), 3);
+        assert_eq!(s.len(), 6);
+        assert_eq!(ids(&s), vec![0, 1, 2, 5, 6, 9]);
+    }
+
+    #[test]
+    fn membership_and_rank() {
+        let s = IdRangeSet::from_sorted_ids([2, 3, 4, 10, 11, 20]);
+        for id in [2u64, 3, 4, 10, 11, 20] {
+            assert!(s.contains(id), "{id}");
+        }
+        for id in [0u64, 1, 5, 9, 12, 19, 21, 100] {
+            assert!(!s.contains(id), "{id}");
+        }
+        assert_eq!(s.rank(0), 0);
+        assert_eq!(s.rank(2), 0);
+        assert_eq!(s.rank(3), 1);
+        assert_eq!(s.rank(5), 3);
+        assert_eq!(s.rank(10), 3);
+        assert_eq!(s.rank(11), 4);
+        assert_eq!(s.rank(15), 5);
+        assert_eq!(s.rank(21), 6);
+        assert_eq!(s.rank(u64::MAX), s.len());
+    }
+
+    #[test]
+    fn splice_in_merges_touching_neighbours() {
+        let mut s = IdRangeSet::from_range(0..5);
+        s.splice_in(10..15);
+        assert_eq!(s.ranges(), &[0..5, 10..15]);
+        // bridge the gap exactly: all three coalesce into one interval
+        s.splice_in(5..10);
+        assert_eq!(s.ranges(), &[0..15]);
+        assert_eq!(s.len(), 15);
+        // left-touching only
+        s.splice_in(20..22);
+        s.splice_in(15..18);
+        assert_eq!(s.ranges(), &[0..18, 20..22]);
+    }
+
+    #[test]
+    fn splice_out_splits_interior_ranges() {
+        let mut s = IdRangeSet::from_range(0..20);
+        s.splice_out(5..8);
+        assert_eq!(s.ranges(), &[0..5, 8..20]);
+        assert_eq!(s.len(), 17);
+        s.splice_out(0..5); // exact prefix range
+        assert_eq!(s.ranges(), &[8..20]);
+        s.splice_out(8..10); // prefix of an interval
+        assert_eq!(s.ranges(), &[10..20]);
+        s.splice_out(15..20); // suffix of an interval
+        assert_eq!(s.ranges(), &[10..15]);
+        s.splice_out(10..15);
+        assert!(s.is_empty());
+        assert_eq!(s.num_ranges(), 0);
+    }
+
+    #[test]
+    fn splice_round_trip_preserves_set() {
+        let mut s = IdRangeSet::from_range(0..100);
+        s.splice_out(30..60);
+        s.splice_in(30..60);
+        assert_eq!(s.ranges(), &[0..100]);
+        assert_eq!(s.len(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "not wholly owned")]
+    fn splice_out_rejects_unowned_ranges() {
+        let mut s = IdRangeSet::from_range(0..10);
+        s.splice_out(5..15);
+    }
+
+    #[test]
+    #[should_panic(expected = "not wholly owned")]
+    fn splice_out_rejects_ranges_spanning_gaps() {
+        let mut s = IdRangeSet::from_sorted_ids([0, 1, 5, 6]);
+        s.splice_out(0..7); // spans the hole 2..5
+    }
+
+    #[test]
+    #[should_panic(expected = "overlaps")]
+    fn splice_in_rejects_overlap() {
+        let mut s = IdRangeSet::from_range(0..10);
+        s.splice_in(8..12);
+    }
+
+    #[test]
+    fn live_masking() {
+        let s = IdRangeSet::from_sorted_ids([0, 1, 2, 3, 10, 11, 12]);
+        let dead = vec![1u64, 2, 10, 12];
+        assert_eq!(s.live_len(&dead), 3);
+        let live: Vec<Range<EdgeId>> = s.live_ranges(&dead).collect();
+        assert_eq!(live, vec![0..1, 3..4, 11..12]);
+        // dead ids outside the set are ignored
+        assert_eq!(s.live_len(&[5, 6, 100]), s.len());
+        assert_eq!(s.live_len(&[]), s.len());
+    }
+
+    #[test]
+    fn live_subranges_of_fully_dead_range() {
+        let dead = vec![3u64, 4, 5];
+        assert_eq!(live_subranges(3..6, &dead).count(), 0);
+        let out: Vec<Range<EdgeId>> = live_subranges(2..7, &dead).collect();
+        assert_eq!(out, vec![2..3, 6..7]);
+    }
+
+    #[test]
+    fn push_back_matches_splice_in() {
+        let mut a = IdRangeSet::new();
+        let mut b = IdRangeSet::new();
+        for id in [3u64, 4, 7, 8, 9, 20] {
+            a.push_back(id);
+            b.splice_in(id..id + 1);
+        }
+        assert_eq!(a, b);
+        assert_eq!(a.ranges(), &[3..5, 7..10, 20..21]);
+    }
+
+    #[test]
+    fn empty_and_clear() {
+        let mut s = IdRangeSet::from_range(7..7);
+        assert!(s.is_empty());
+        assert_eq!(s.rank(100), 0);
+        assert!(!s.contains(0));
+        s.splice_in(1..4);
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.num_ranges(), 0);
+    }
+}

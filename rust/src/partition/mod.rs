@@ -15,6 +15,7 @@ pub mod ginger;
 pub mod hash1d;
 pub mod hash2d;
 pub mod hdrf;
+pub mod intervals;
 pub mod metis_like;
 pub mod ne;
 pub mod oblivious;
@@ -22,6 +23,7 @@ pub mod quality;
 pub mod vertex2edge;
 pub mod view;
 
+pub use intervals::IdRangeSet;
 pub use view::{CepView, PartitionAssignment};
 
 use crate::graph::Graph;

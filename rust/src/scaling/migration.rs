@@ -164,6 +164,30 @@ impl MigrationPlan {
         out
     }
 
+    /// Coalesce adjacent same-destination moves into single contiguous
+    /// **destination spans** `(dst, range)` — the insert side of plan
+    /// execution. [`Self::diff`] (and [`crate::stream::plan::ChurnPlan::derive`])
+    /// already merge consecutive edges with an identical `(src, dst)`
+    /// pair; this second pass additionally merges neighbouring moves that
+    /// share only the destination (e.g. `0→2, 5..8` followed by
+    /// `1→2, 8..11` lands at partition 2 as one `5..11` splice), so the
+    /// layout executes one interval edit per destination span instead of
+    /// one per move. Moves are walked in plan order (ascending by
+    /// `edges.start`); degenerate `src == dst` or empty moves are skipped.
+    pub fn dst_spans(&self) -> Vec<(PartitionId, Range<EdgeId>)> {
+        let mut out: Vec<(PartitionId, Range<EdgeId>)> = Vec::new();
+        for mv in &self.moves {
+            if mv.src == mv.dst || mv.is_empty() {
+                continue;
+            }
+            match out.last_mut() {
+                Some((d, r)) if *d == mv.dst && r.end == mv.edges.start => r.end = mv.edges.end,
+                _ => out.push((mv.dst, mv.edges.clone())),
+            }
+        }
+        out
+    }
+
     /// Partitions that send or receive edges under this plan, deduplicated
     /// and ascending.
     pub fn touched_partitions(&self) -> Vec<PartitionId> {
@@ -246,6 +270,24 @@ mod tests {
         assert_eq!(plan.moves[0], RangeMove { src: 0, dst: 1, edges: 0..2 });
         assert_eq!(plan.moves[1], RangeMove { src: 1, dst: 0, edges: 2..4 });
         assert_eq!(plan.touched_partitions(), vec![0, 1]);
+    }
+
+    /// Adjacent moves that share only the destination coalesce into one
+    /// span on the insert side, while distinct destinations stay apart.
+    #[test]
+    fn dst_spans_coalesce_adjacent_same_destination_moves() {
+        // ids 0..2 move 0→2, ids 2..4 move 1→2 (adjacent, same dst),
+        // ids 4..5 move 1→0 (different dst)
+        let old = EdgePartition::new(3, vec![0, 0, 1, 1, 1]);
+        let new = EdgePartition::new(3, vec![2, 2, 2, 2, 0]);
+        let plan = MigrationPlan::diff(&old, &new);
+        assert_eq!(plan.num_moves(), 3, "diff keeps per-source moves");
+        let spans = plan.dst_spans();
+        assert_eq!(spans, vec![(2, 0..4), (0, 4..5)]);
+        assert_eq!(
+            spans.iter().map(|(_, r)| r.end - r.start).sum::<u64>(),
+            plan.migrated_edges()
+        );
     }
 
     #[test]

@@ -34,7 +34,9 @@ pub struct ChurnPlan {
     pub retires: Vec<(PartitionId, Range<EdgeId>)>,
     /// rebalancing moves among pre-existing physical ids (inter-worker
     /// traffic — the only part a migration network prices); dead ids ride
-    /// along inside their range, so this is ≤ k + k′ + 1 moves always
+    /// along inside their range, so this is ≤ k + k′ + 1 moves always.
+    /// At execution time adjacent same-destination moves additionally
+    /// coalesce into single interval splices ([`MigrationPlan::dst_spans`])
     pub moves: MigrationPlan,
     /// freshly staged ranges and the partition admitting them, ascending
     pub appends: Vec<(PartitionId, Range<EdgeId>)>,
@@ -94,7 +96,9 @@ impl ChurnPlan {
             }
         }
 
-        // --- appends: the new tail by its new-chunk owner
+        // --- appends: the new tail by its new-chunk owner — each chunk is
+        //     one contiguous range, so destinations are strictly ascending
+        //     and every entry is already a maximal (coalesced) span
         let mut appends: Vec<(PartitionId, Range<EdgeId>)> = Vec::new();
         let mut lo = p0;
         while lo < p1 {

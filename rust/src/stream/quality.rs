@@ -2,15 +2,18 @@
 //! from chunk metadata plus the tombstone list, mirroring
 //! [`crate::partition::quality`] but skipping dead ids. Epoch stamping
 //! keeps the sweep O(|E|) time and O(|V|·threads) memory; no per-edge
-//! assignment vector is ever materialized. The partition space is sharded
-//! across the [`crate::par`] pool (per-thread replica-set partials, one
-//! stamp scratch per shard); counts are independent of the sharding, so
-//! results are identical at any width.
+//! assignment vector is ever materialized. Each partition's sweep walks
+//! its **live sub-ranges** ([`live_subranges`]) — the owned chunk masked
+//! by the tombstone slice — and indexes the staged edge source by range.
+//! The partition space is sharded across the [`crate::par`] pool
+//! (per-thread replica-set partials, one stamp scratch per shard); counts
+//! are independent of the sharding, so results are identical at any width.
 
 use super::assignment::StagedAssignment;
 use super::staged::StagedGraph;
 use crate::graph::EdgeSource;
 use crate::par::{self, ThreadConfig};
+use crate::partition::intervals::live_subranges;
 use crate::partition::quality::{balance, Quality};
 use crate::partition::PartitionAssignment;
 
@@ -41,20 +44,17 @@ pub fn live_vertex_counts_with(
             let epoch = (p - plo) as u32 + 1;
             let r = assign.range(p as u32);
             let dead = assign.dead_slice(r.clone());
-            let mut d = 0usize;
-            for id in r {
-                if d < dead.len() && dead[d] == id {
-                    d += 1;
-                    continue;
-                }
-                let e = sg.edge(id);
-                if stamp[e.u as usize] != epoch {
-                    stamp[e.u as usize] = epoch;
-                    counts[p - plo] += 1;
-                }
-                if stamp[e.v as usize] != epoch {
-                    stamp[e.v as usize] = epoch;
-                    counts[p - plo] += 1;
+            for sub in live_subranges(r, dead) {
+                for id in sub {
+                    let e = sg.edge(id);
+                    if stamp[e.u as usize] != epoch {
+                        stamp[e.u as usize] = epoch;
+                        counts[p - plo] += 1;
+                    }
+                    if stamp[e.v as usize] != epoch {
+                        stamp[e.v as usize] = epoch;
+                        counts[p - plo] += 1;
+                    }
                 }
             }
         }

@@ -153,10 +153,13 @@ fn staged_ingest_is_thread_invariant() {
 }
 
 /// Engine vertex state after a run + churn + rescale + run sequence is
-/// bit-identical at every width (f32 bit patterns compared).
+/// bit-identical at every width (f32 bit patterns compared), and the
+/// interval-set ownership metadata of the layout (per-partition range
+/// counts) is identical too — the O(ranges) substrate is as
+/// width-invariant as the state it carries.
 #[test]
 fn engine_state_is_thread_invariant_across_run_rescale_churn() {
-    let run = |w: usize| -> (Vec<u32>, u64, f64) {
+    let run = |w: usize| -> (Vec<u32>, u64, f64, Vec<usize>) {
         let t = ThreadConfig::new(w);
         let g = erdos_renyi(180, 900, 11);
         let mut sg = StagedGraph::new(g, geo_cfg(w));
@@ -235,13 +238,18 @@ fn engine_state_is_thread_invariant_across_run_rescale_churn() {
             .unwrap();
         let bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
         assert_eq!(engine.k(), k);
-        (bits, engine.comm.total_bytes(), engine.layout().rf())
+        let ranges: Vec<usize> = (0..k).map(|p| engine.layout().range_count(p)).collect();
+        // chunk-contiguous streaming target: ≤ 1 ownership interval per
+        // partition no matter the executor width
+        assert!(engine.layout().total_ranges() <= k, "ownership metadata fragmented");
+        (bits, engine.comm.total_bytes(), engine.layout().rf(), ranges)
     };
-    let (ref_bits, ref_bytes, ref_rf) = run(1);
+    let (ref_bits, ref_bytes, ref_rf, ref_ranges) = run(1);
     for w in WIDTHS {
-        let (bits, bytes, rf) = run(w);
+        let (bits, bytes, rf, ranges) = run(w);
         assert_eq!(bits, ref_bits, "width {w}: vertex state diverges");
         assert_eq!(bytes, ref_bytes, "width {w}: comm bytes diverge");
         assert!((rf - ref_rf).abs() < 1e-15, "width {w}: layout RF diverges");
+        assert_eq!(ranges, ref_ranges, "width {w}: ownership intervals diverge");
     }
 }

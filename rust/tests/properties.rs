@@ -333,6 +333,155 @@ fn streaming_engine_matches_fresh_engine_under_churn() {
     });
 }
 
+/// Naive reference model of the ownership substrate: one sorted
+/// `Vec<EdgeId>` per partition, plan moves executed as per-edge drain +
+/// splice — exactly the representation the interval-set layout replaced.
+fn naive_apply_moves(model: &mut [Vec<u64>], moves: &MigrationPlan) {
+    for mv in &moves.moves {
+        let (s, d) = (mv.src as usize, mv.dst as usize);
+        if s == d || mv.is_empty() {
+            continue;
+        }
+        let src = &mut model[s];
+        let lo = src.partition_point(|&e| e < mv.edges.start);
+        let hi = src.partition_point(|&e| e < mv.edges.end);
+        assert_eq!(
+            (hi - lo) as u64,
+            mv.edges.end - mv.edges.start,
+            "naive model: moved range not wholly owned"
+        );
+        let block: Vec<u64> = src.drain(lo..hi).collect();
+        let dst = &mut model[d];
+        let at = dst.partition_point(|&e| e < mv.edges.start);
+        dst.splice(at..at, block);
+    }
+}
+
+/// Materialize the naive per-partition id vectors of an assignment.
+fn naive_model_of<P: PartitionAssignment>(assign: &P) -> Vec<Vec<u64>> {
+    let mut m = vec![Vec::new(); assign.k()];
+    for i in 0..assign.num_edges() {
+        m[assign.partition_of(i) as usize].push(i);
+    }
+    m
+}
+
+/// Satellite property (interval-layout equivalence): identical
+/// run → rescale → churn → compact sequences driven through the
+/// interval-set `PartitionLayout` and a naive `Vec<EdgeId>`-per-partition
+/// reference model must agree on every owned id set, on masters/mirrors
+/// (vs a fresh build), and on engine state bits — the O(ranges)
+/// representation is observationally identical to the O(m) one it
+/// replaced.
+#[test]
+fn interval_layout_matches_naive_vec_model() {
+    use egs::engine::mirrors::PartitionLayout;
+
+    check(0x1A7E, 6, |rng| {
+        let g = erdos_renyi(
+            60 + rng.below_usize(80),
+            250 + rng.below_usize(600),
+            rng.next_u64(),
+        );
+        let cfg =
+            geo::GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 9, ..Default::default() };
+        let mut sg = StagedGraph::new(g, cfg);
+        let mut k = 2 + rng.below_usize(5);
+        let mut engine = {
+            let assign = sg.assignment(k);
+            Engine::new(&sg, &assign, |_| Box::new(NativeBackend::new())).unwrap()
+        };
+        let mut model = naive_model_of(&sg.assignment(k));
+        for _ in 0..3 {
+            // churn batch through both substrates: retires keep ownership,
+            // moves splice, appends extend
+            let batch = random_churn_batch(rng, &sg, rng.below_usize(40), rng.below_usize(12));
+            let (_, plan) = sg.apply_batch(&batch, k);
+            {
+                let assign = sg.assignment(k);
+                engine
+                    .apply_churn(&sg, &plan, &assign, |_| Box::new(NativeBackend::new()))
+                    .unwrap();
+            }
+            naive_apply_moves(&mut model, &plan.moves);
+            for (dst, r) in &plan.appends {
+                model[*dst as usize].extend(r.clone());
+            }
+            // rescale every other round through the same machinery
+            if rng.chance(0.5) {
+                let new_k = 1 + rng.below_usize(8);
+                let plan = sg.rescale_plan(k, new_k);
+                if new_k > model.len() {
+                    model.resize_with(new_k, Vec::new);
+                }
+                {
+                    let assign = sg.assignment(new_k);
+                    engine
+                        .apply_churn(&sg, &plan, &assign, |_| Box::new(NativeBackend::new()))
+                        .unwrap();
+                }
+                naive_apply_moves(&mut model, &plan.moves);
+                for (p, part) in model.iter().enumerate().skip(new_k) {
+                    assert!(part.is_empty(), "scale-in left edges in partition {p}");
+                }
+                model.truncate(new_k);
+                k = new_k;
+            }
+            // occasional compaction: both substrates rebuild from scratch
+            if sg.needs_compaction() || rng.chance(0.25) {
+                sg.compact();
+                let assign = sg.assignment(k);
+                engine =
+                    Engine::new(&sg, &assign, |_| Box::new(NativeBackend::new())).unwrap();
+                model = naive_model_of(&assign);
+            }
+            // 1. owned id sets agree exactly, and the interval metadata
+            //    stays at ≤ k resident ranges (chunk-contiguous target)
+            {
+                let layout = engine.layout();
+                assert_eq!(layout.k(), k);
+                for (p, model_p) in model.iter().enumerate() {
+                    let owned: Vec<u64> = layout.owned_edge_ids(p).collect();
+                    assert_eq!(&owned, model_p, "owned set of partition {p} diverges");
+                    assert_eq!(layout.num_owned_edges(p), model_p.len() as u64);
+                }
+                assert!(layout.total_ranges() <= k, "{} intervals", layout.total_ranges());
+            }
+            // 2. masters/mirrors agree with a fresh build of the target
+            let assign = sg.assignment(k);
+            let fresh_layout = PartitionLayout::build(&sg, &assign);
+            for v in 0..sg.num_vertices() as u32 {
+                assert_eq!(
+                    engine.layout().master_of(v),
+                    fresh_layout.master_of(v),
+                    "master of {v}"
+                );
+                assert_eq!(
+                    engine.layout().replicas_of(v),
+                    fresh_layout.replicas_of(v),
+                    "replicas of {v}"
+                );
+            }
+            // 3. engine state bits agree with a fresh engine
+            let mut fresh =
+                Engine::new(&sg, &assign, |_| Box::new(NativeBackend::new())).unwrap();
+            let n = sg.num_vertices();
+            let state: Vec<f32> = (0..n).map(|v| (v % 19) as f32 / 19.0).collect();
+            let aux = vec![1.0f32; n];
+            let active = vec![true; n];
+            let (a, _) = engine
+                .superstep(StepKind::PageRank, Combine::Sum, &state, &aux, &active)
+                .unwrap();
+            let (b, _) = fresh
+                .superstep(StepKind::PageRank, Combine::Sum, &state, &aux, &active)
+                .unwrap();
+            let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb, "engine state bits diverge at k={k}");
+        }
+    });
+}
+
 /// Degenerate graphs never panic anywhere in the pipeline.
 #[test]
 fn degenerate_graphs_are_handled() {

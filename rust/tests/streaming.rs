@@ -59,6 +59,13 @@ fn interleaved_churn_rescale_keeps_rf_near_fresh_repartition() {
             ev.range_moves
         );
         assert!(ev.range_moves < m0 / 10, "rescale plan scales with m");
+        assert!(
+            ev.layout_ranges <= ev.to_k,
+            "rescale {}→{} left {} ownership intervals",
+            ev.from_k,
+            ev.to_k,
+            ev.layout_ranges
+        );
     }
     for cr in &out.churn_events {
         let k_bound = 8 + 8 + 1; // k never exceeds 8 in this scenario
@@ -75,7 +82,21 @@ fn interleaved_churn_rescale_keeps_rf_near_fresh_repartition() {
             "staging fraction {} escaped the budget",
             cr.staging_fraction
         );
+        // interval-set ownership: staged chunks are contiguous, so the
+        // layout never fragments beyond one interval per partition
+        assert!(
+            cr.layout_ranges <= 8,
+            "churn at {} left {} ownership intervals resident",
+            cr.at_iteration,
+            cr.layout_ranges
+        );
     }
+    assert!(
+        out.layout_ranges <= out.final_k,
+        "final layout holds {} ownership intervals for k={}",
+        out.layout_ranges,
+        out.final_k
+    );
 
     // bookkeeping: live edges track the applied mutations exactly
     let ins: u64 = out.churn_events.iter().map(|c| c.inserted as u64).sum();
