@@ -6,7 +6,8 @@ Both files are JSON lines in the shared schema emitted by
 benches/common/mod.rs:
 
     {"bench": "fig09", "scenario": "cep/pokec-s", "wall_ms": 1.23, "rf": null,
-     "layout_ranges": null, "layout_bytes": null}
+     "layout_ranges": null, "layout_bytes": null,
+     "net_model": null, "net_ms": null}
 
 Rules:
   * every baseline row with a numeric wall_ms must exist in the fresh run
@@ -20,7 +21,11 @@ Rules:
     suite's acceptance bounds, not by this wall-time gate);
   * layout_ranges / layout_bytes (interval-set ownership metadata of the
     measured PartitionLayout) are surfaced in the output for trajectory
-    eyeballs but do not gate.
+    eyeballs but do not gate;
+  * net_model / net_ms (which network-cost model priced the scenario —
+    "closed" or "emulated" — and the priced network milliseconds) are
+    likewise surfaced but do not gate: model agreement is enforced by the
+    test suite's parity bounds, not by this wall-time gate.
 
 Exit code 1 on any regression or missing row.
 """
@@ -95,6 +100,15 @@ def main():
                 f"  {key[0]}/{key[1]}: ranges={r['layout_ranges']} "
                 f"bytes={r.get('layout_bytes')}"
             )
+    # surface network-model pricing telemetry (no gating: model parity is
+    # enforced by the test suite's 1% bounds)
+    net_rows = [
+        (key, r) for key, r in sorted(cur.items()) if r.get("net_model") is not None
+    ]
+    if net_rows:
+        print("network-model pricing (model / priced ms):")
+        for key, r in net_rows:
+            print(f"  {key[0]}/{key[1]}: model={r['net_model']} net_ms={r.get('net_ms')}")
     return 0
 
 

@@ -9,13 +9,17 @@
 //!   via [`scaled`], so the whole suite finishes inside a CI smoke job.
 //! * `PALLAS_BENCH_JSON=<path>` — append one JSON line per recorded row:
 //!   `{"bench": "...", "scenario": "...", "wall_ms": <f64>, "rf": <f64|null>,
-//!   "layout_ranges": <u64|null>, "layout_bytes": <u64|null>}`.
+//!   "layout_ranges": <u64|null>, "layout_bytes": <u64|null>,
+//!   "net_model": <"closed"|"emulated"|null>, "net_ms": <f64|null>}`.
 //!   `layout_ranges`/`layout_bytes` report the interval-set ownership
 //!   metadata resident in a `PartitionLayout` after the measured run
 //!   ([`BenchLog::row_layout`]; `null` for benches without a layout).
-//!   All benches share this schema; CI points every bench at the same
-//!   `BENCH_ci.json` and diffs it against the committed
-//!   `BENCH_baseline.json` (>2× wall-time regressions fail the build).
+//!   `net_model`/`net_ms` report which network-cost model priced the
+//!   scenario and the priced network milliseconds ([`BenchLog::row_net`];
+//!   `null` for rows without network pricing). All benches share this
+//!   schema; CI points every bench at the same `BENCH_ci.json` and diffs
+//!   it against the committed `BENCH_baseline.json` (>2× wall-time
+//!   regressions fail the build).
 #![allow(dead_code)] // each bench uses a subset of the harness
 
 use egs::graph::generators::{lattice2d, rmat, RmatParams};
@@ -61,12 +65,23 @@ pub fn timed_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (v, ms(t.elapsed()))
 }
 
+/// One recorded bench scenario (the JSON-lines row).
+struct Row {
+    scenario: String,
+    wall_ms: f64,
+    rf: Option<f64>,
+    layout: Option<(u64, u64)>,
+    net: Option<(&'static str, f64)>,
+}
+
 /// Row collector for one bench binary. Call [`BenchLog::row`] (or
-/// [`BenchLog::row_layout`] when a `PartitionLayout` is in play) per
-/// measured scenario and [`BenchLog::finish`] before exiting.
+/// [`BenchLog::row_layout`] / [`BenchLog::row_net`] /
+/// [`BenchLog::row_layout_net`] when a `PartitionLayout` or a network
+/// model is in play) per measured scenario and [`BenchLog::finish`]
+/// before exiting.
 pub struct BenchLog {
     bench: String,
-    rows: Vec<(String, f64, Option<f64>, Option<(u64, u64)>)>,
+    rows: Vec<Row>,
 }
 
 impl BenchLog {
@@ -78,7 +93,13 @@ impl BenchLog {
     /// Record one scenario: wall time in milliseconds and an optional
     /// replication factor (`None` → `null` in the JSON row).
     pub fn row(&mut self, scenario: &str, wall_ms: f64, rf: Option<f64>) {
-        self.rows.push((scenario.to_string(), wall_ms, rf, None));
+        self.rows.push(Row {
+            scenario: scenario.to_string(),
+            wall_ms,
+            rf,
+            layout: None,
+            net: None,
+        });
     }
 
     /// [`Self::row`] plus the interval-set ownership telemetry of the
@@ -92,12 +113,55 @@ impl BenchLog {
         layout_ranges: u64,
         layout_bytes: u64,
     ) {
-        self.rows.push((
-            scenario.to_string(),
+        self.rows.push(Row {
+            scenario: scenario.to_string(),
             wall_ms,
             rf,
-            Some((layout_ranges, layout_bytes)),
-        ));
+            layout: Some((layout_ranges, layout_bytes)),
+            net: None,
+        });
+    }
+
+    /// [`Self::row`] plus the network-pricing telemetry: which model
+    /// (`"closed"` / `"emulated"`, see `NetworkModel::name`) priced the
+    /// scenario and the priced network milliseconds.
+    pub fn row_net(
+        &mut self,
+        scenario: &str,
+        wall_ms: f64,
+        rf: Option<f64>,
+        net_model: &'static str,
+        net_ms: f64,
+    ) {
+        self.rows.push(Row {
+            scenario: scenario.to_string(),
+            wall_ms,
+            rf,
+            layout: None,
+            net: Some((net_model, net_ms)),
+        });
+    }
+
+    /// Layout and network telemetry together (the end-to-end controller
+    /// benches report both).
+    #[allow(clippy::too_many_arguments)]
+    pub fn row_layout_net(
+        &mut self,
+        scenario: &str,
+        wall_ms: f64,
+        rf: Option<f64>,
+        layout_ranges: u64,
+        layout_bytes: u64,
+        net_model: &'static str,
+        net_ms: f64,
+    ) {
+        self.rows.push(Row {
+            scenario: scenario.to_string(),
+            wall_ms,
+            rf,
+            layout: Some((layout_ranges, layout_bytes)),
+            net: Some((net_model, net_ms)),
+        });
     }
 
     /// Append the collected rows to `$PALLAS_BENCH_JSON` (JSON lines, the
@@ -111,20 +175,25 @@ impl BenchLog {
             .append(true)
             .open(&path)
             .unwrap_or_else(|e| panic!("open {}: {e}", path.to_string_lossy()));
-        for (scenario, wall, rf, layout) in &self.rows {
-            let rf_s = match rf {
+        for row in &self.rows {
+            let rf_s = match row.rf {
                 Some(x) => format!("{x:.6}"),
                 None => "null".into(),
             };
-            let (ranges_s, bytes_s) = match layout {
+            let (ranges_s, bytes_s) = match row.layout {
                 Some((r, b)) => (r.to_string(), b.to_string()),
+                None => ("null".into(), "null".into()),
+            };
+            let (model_s, net_ms_s) = match row.net {
+                Some((m, ms)) => (format!("\"{m}\""), format!("{ms:.3}")),
                 None => ("null".into(), "null".into()),
             };
             writeln!(
                 fh,
                 "{{\"bench\":\"{}\",\"scenario\":\"{}\",\"wall_ms\":{:.3},\"rf\":{},\
-                 \"layout_ranges\":{},\"layout_bytes\":{}}}",
-                self.bench, scenario, wall, rf_s, ranges_s, bytes_s
+                 \"layout_ranges\":{},\"layout_bytes\":{},\
+                 \"net_model\":{},\"net_ms\":{}}}",
+                self.bench, row.scenario, row.wall_ms, rf_s, ranges_s, bytes_s, model_s, net_ms_s
             )
             .expect("write bench row");
         }

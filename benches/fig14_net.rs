@@ -1,10 +1,15 @@
-//! Fig 14 — emulated migration wall time for one ScaleOut step under
-//! varying network bandwidth (1–32 Gbps) and per-edge value size
-//! (0–32 B), for CEP, BVC and 1D.
+//! Fig 14 — migration wall time for one ScaleOut step under varying
+//! network bandwidth (1–32 Gbps) and per-edge value size (0–32 B), for
+//! CEP, BVC and 1D — priced under **both** network models: the
+//! closed-form max-NIC pricer and the deterministic discrete-event
+//! emulator (`--net-model` in the CLI; `NetworkModel` in the API).
 //!
 //! Expected shape (paper): CEP and 1D (single shuffle) beat BVC (ring
 //! move + barrier-synchronized balance refinement), even though BVC moves
-//! no more edges than CEP — the synchronization dominates.
+//! no more edges than CEP — the synchronization dominates. The emulator
+//! must agree with the closed form on CEP's single-shuffle plan (a
+//! `k → k+1` rescale is a perfect matching of flows, one per NIC) while
+//! additionally exposing the queuing of 1D's scattered flows.
 
 mod common;
 
@@ -12,6 +17,7 @@ use common::BenchLog;
 use egs::metrics::table::{secs, Table};
 use egs::partition::cep::Cep;
 use egs::scaling::migration::MigrationPlan;
+use egs::scaling::netsim::{NetSim, NetSimConfig, NetworkModel};
 use egs::scaling::network::Network;
 use egs::scaling::scaler::{BvcScaler, DynamicScaler, Hash1dScaler};
 
@@ -40,12 +46,19 @@ fn main() {
             &format!(
                 "Fig 14: migration time, {from_k}->{to_k}, value={value_bytes} B/edge (|E|={m})"
             ),
-            &["bandwidth", "cep", "1d", "bvc"],
+            &["bandwidth", "cep", "cep (emu)", "1d", "1d (emu)", "bvc"],
         );
+        // flow aggregation depends only on value_bytes — hoist it out of
+        // the bandwidth sweep (the 1D plan has O(|E|) moves to fold)
+        let cep_flows = NetSim::flows_of_plan(&cep_plan, value_bytes);
+        let h1_flows = NetSim::flows_of_plan(&h1_plan, value_bytes);
         for gbps in [1.0f64, 2.0, 4.0, 8.0, 16.0, 32.0] {
             let net = Network::gbps(gbps);
+            let sim = NetSim::new(NetSimConfig::from_network(&net, 0.0));
             let cep_t = net.migration_time(&cep_plan, to_k, value_bytes);
+            let cep_emu = sim.simulate(to_k, &cep_flows, None);
             let h1_t = net.migration_time(&h1_plan, to_k, value_bytes);
+            let h1_emu = sim.simulate(to_k, &h1_flows, None);
             let bvc_t = net.bvc_migration_time(
                 &bvc_plan,
                 bvc_stats.refine_migrated,
@@ -56,10 +69,32 @@ fn main() {
             t.row(vec![
                 format!("{gbps} Gbps"),
                 secs(cep_t),
+                secs(cep_emu.total_s),
                 secs(h1_t),
+                secs(h1_emu.total_s),
                 secs(bvc_t),
             ]);
-            log.row(&format!("cep/{gbps}gbps/v{value_bytes}"), cep_t * 1e3, None);
+            log.row_net(
+                &format!("cep/{gbps}gbps/v{value_bytes}"),
+                cep_t * 1e3,
+                None,
+                NetworkModel::ClosedForm.name(),
+                cep_t * 1e3,
+            );
+            log.row_net(
+                &format!("cep-emulated/{gbps}gbps/v{value_bytes}"),
+                cep_emu.total_s * 1e3,
+                None,
+                NetworkModel::Emulated.name(),
+                cep_emu.total_s * 1e3,
+            );
+            log.row_net(
+                &format!("1d-emulated/{gbps}gbps/v{value_bytes}"),
+                h1_emu.total_s * 1e3,
+                None,
+                NetworkModel::Emulated.name(),
+                h1_emu.total_s * 1e3,
+            );
         }
         t.print();
     }
@@ -78,5 +113,8 @@ fn main() {
         bvc_plan.num_moves()
     );
     log.finish();
-    println!("paper Fig 14: CEP/1D single shuffle beat BVC's multi-barrier refinement");
+    println!(
+        "paper Fig 14: CEP/1D single shuffle beat BVC's multi-barrier refinement;\n\
+         emulated CEP == closed form (matching flows), emulated 1D pays NIC queuing"
+    );
 }

@@ -1,7 +1,11 @@
 //! Long spot-market simulation: CEP vs BVC vs 1D under hundreds of
 //! provision/preempt events — the §1 motivation quantified. Reports
-//! per-method total migrated edges, cumulative repartition time, and the
-//! emulated migration wall-time at several network speeds.
+//! per-method total migrated edges, cumulative repartition time, the
+//! priced migration wall-time at several network speeds (closed-form
+//! model through the `NetworkModel` API), and an emulated deep-dive of
+//! one representative provision event: how much of each method's
+//! migration traffic hides behind the application's superstep window
+//! (discrete-event emulator, overlap mode) versus blocking it.
 //!
 //! ```bash
 //! cargo run --release --example spot_market
@@ -10,6 +14,7 @@
 use egs::coordinator::events::{SpotEvent, SpotTrace};
 use egs::graph::datasets;
 use egs::metrics::table::{secs, Table};
+use egs::scaling::netsim::{self, AppTraffic, NetModelConfig, NetworkModel};
 use egs::scaling::network::Network;
 use egs::scaling::scaler::{BvcScaler, CepScaler, DynamicScaler, Hash1dScaler};
 use std::time::Instant;
@@ -36,6 +41,19 @@ fn main() -> egs::Result<()> {
             "net@32Gbps",
         ],
     );
+    // closed form for the 3000-event cumulative sweep (the fast path of
+    // the NetworkModel API)...
+    let closed = NetModelConfig::default();
+    // ...and the emulator, overlap mode, for one representative event:
+    // migration flows share the per-worker NICs with a superstep's
+    // scatter/gather traffic and hide behind its compute window
+    let emulated = NetModelConfig::emulated();
+    let app = AppTraffic {
+        tx_bytes: vec![2_000_000; k0 + 1],
+        rx_bytes: vec![2_000_000; k0 + 1],
+        compute_s: 0.050,
+    };
+    let mut overlap_rows: Vec<(String, f64, f64)> = Vec::new();
 
     for method in ["cep", "bvc", "1d"] {
         let mut scaler: Box<dyn DynamicScaler> = match method {
@@ -50,6 +68,7 @@ fn main() -> egs::Result<()> {
         let mut net1 = 0.0f64;
         let mut net32 = 0.0f64;
         let mut k = k0;
+        let mut first_provision_priced = false;
         for &(_, ev) in &trace.events {
             let new_k = match ev {
                 SpotEvent::Provision => k + 1,
@@ -61,8 +80,27 @@ fn main() -> egs::Result<()> {
             plan_time += t.elapsed();
             migrated += plan.migrated_edges();
             range_moves += plan.num_moves() as u64;
-            net1 += Network::gbps(1.0).migration_time(&plan, k.max(new_k), 8);
-            net32 += Network::gbps(32.0).migration_time(&plan, k.max(new_k), 8);
+            let kk = k.max(new_k);
+            net1 += netsim::price_plan(&Network::gbps(1.0), &closed, &plan, kk, 8, None)
+                .total_s;
+            net32 += netsim::price_plan(&Network::gbps(32.0), &closed, &plan, kk, 8, None)
+                .total_s;
+            if !first_provision_priced && matches!(ev, SpotEvent::Provision) {
+                first_provision_priced = true;
+                let cost = netsim::price_plan(
+                    &Network::gbps(8.0),
+                    &emulated,
+                    &plan,
+                    kk,
+                    8,
+                    Some(&app),
+                );
+                overlap_rows.push((
+                    method.to_string(),
+                    cost.blocking_s,
+                    cost.overlapped_s,
+                ));
+            }
             k = new_k;
         }
         table.row(vec![
@@ -76,11 +114,25 @@ fn main() -> egs::Result<()> {
         ]);
     }
     table.print();
+
+    let mut overlap_table = Table::new(
+        &format!(
+            "one provision event, 8 Gbps, model={} (overlap with a superstep window)",
+            NetworkModel::Emulated.name()
+        ),
+        &["method", "blocking", "overlapped"],
+    );
+    for (method, blocking, overlapped) in &overlap_rows {
+        overlap_table.row(vec![method.clone(), secs(*blocking), secs(*overlapped)]);
+    }
+    overlap_table.print();
     println!(
         "note: CEP's plans are O(k) range moves from pure metadata (Theorem 1's O(1));\n\
          BVC pays ring maintenance + balance refinement (plans count its *net* moves;\n\
          see BvcScaler::last_stats for gross traffic); 1D rehashes everything into\n\
-         O(|E|) fragmented single-edge moves."
+         O(|E|) fragmented single-edge moves. Under the emulator, CEP's one contiguous\n\
+         shuffle hides almost entirely behind the app window, while 1D's full rehash\n\
+         sticks far out of it — the xDGP/Spinner overlap argument, quantified."
     );
     Ok(())
 }

@@ -4,11 +4,17 @@
 //!
 //! Every scale event is executed as a **migration plan**: the method state
 //! derives an explicit list of `(src, dst, edge-id-range)` moves, the
-//! network emulator prices the plan, and the engine applies it in place
-//! ([`Engine::apply_migration`]) — touched partitions reload their local
-//! tables, untouched workers keep running. On the CEP path the active
-//! assignment is a [`CepView`], so a `k → k±x` rescale is O(k) metadata
-//! end-to-end: no `Vec<PartitionId>` is ever materialized.
+//! configured network model prices the plan — the closed-form
+//! [`Network`] fast path, or the deterministic discrete-event emulator
+//! ([`crate::scaling::netsim`]) which additionally separates the
+//! migration seconds *hidden behind* the application's superstep window
+//! (`net_overlapped_ms`) from the seconds that stall it
+//! (`net_blocking_ms`; only the latter is charged to SCALE) — and the
+//! engine applies it in place ([`Engine::apply_migration`]): touched
+//! partitions reload their local tables, untouched workers keep running.
+//! On the CEP path the active assignment is a [`CepView`], so a
+//! `k → k±x` rescale is O(k) metadata end-to-end: no `Vec<PartitionId>`
+//! is ever materialized.
 
 use super::provisioner::{LatencyModel, Provisioner};
 use super::state::ClusterState;
@@ -21,6 +27,7 @@ use crate::partition::cep::Cep;
 use crate::partition::{ginger, hash1d, oblivious, CepView, EdgePartition, PartitionAssignment};
 use crate::runtime::{ComputeBackend, StepKind};
 use crate::scaling::migration::MigrationPlan;
+use crate::scaling::netsim::{self, NetModelConfig, NetSim};
 use crate::scaling::network::Network;
 use crate::scaling::scenario::Scenario;
 use crate::stream::{quality as stream_quality, CompactionPolicy, MutationBatch, StagedGraph};
@@ -34,8 +41,12 @@ pub struct ControllerConfig {
     /// partitioning/scaling method: `cep` (graph must be GEO-ordered for
     /// the paper's quality), `1d`, `bvc`, `oblivious`, `ginger`
     pub method: String,
-    /// emulated network for migration pricing
+    /// physical network for migration pricing (bandwidth + barrier)
     pub net: Network,
+    /// which pricing model runs on `net`: the closed form or the
+    /// discrete-event emulator (CLI: `--net-model`), plus the emulator's
+    /// skew/overlap knobs
+    pub net_model: NetModelConfig,
     /// bytes of application value migrated per edge
     pub value_bytes: u64,
     /// worker provisioning latencies
@@ -52,6 +63,7 @@ impl Default for ControllerConfig {
         ControllerConfig {
             method: "cep".into(),
             net: Network::gbps(8.0),
+            net_model: NetModelConfig::default(),
             value_bytes: 8,
             latency: LatencyModel::default(),
             seed: 42,
@@ -76,6 +88,13 @@ pub struct EventRecord {
     /// ≤ `to_k` on chunk-contiguous (CEP/streaming) paths, the audit
     /// signal that rescaling stayed pure metadata
     pub layout_ranges: usize,
+    /// migration network milliseconds the application stalled for (the
+    /// share SCALE accounting charges)
+    pub net_blocking_ms: f64,
+    /// migration network milliseconds hidden behind the app's superstep
+    /// window (emulated overlap mode; 0 under the closed form, which
+    /// cannot express overlap)
+    pub net_overlapped_ms: f64,
 }
 
 /// Table 7 row: total and component times (seconds). `SCALE` combines the
@@ -93,6 +112,10 @@ pub struct RunBreakdown {
     pub app_s: f64,
     /// repartition + migration + provisioning
     pub scale_s: f64,
+    /// total network seconds the migration traffic was priced at across
+    /// all events (blocking + overlapped; only the blocking share is
+    /// inside `scale_s`)
+    pub net_s: f64,
     /// total migrated edges over all events
     pub migrated_edges: u64,
     /// communication bytes of the app phases
@@ -177,6 +200,7 @@ where
 
     let mut app_s = 0.0f64;
     let mut scale_s = 0.0f64;
+    let mut net_s = 0.0f64;
     let mut com_bytes = 0u64;
     let mut event_log: Vec<EventRecord> = Vec::new();
 
@@ -188,23 +212,36 @@ where
             let (plan, new_assignment) =
                 plan_rescale(g, &mut method_state, &assignment, &cfg.method, ev.target_k);
             let migrated = plan.migrated_edges();
-            // emulated network time for moving edge data + values
-            let net_s = match &method_state {
-                MethodState::Bvc(_) => {
-                    // BVC pays extra refinement barriers; approximated by
-                    // pricing the plan + the rounds recorded by the state
-                    cfg.net.migration_time(&plan, from_k.max(ev.target_k), cfg.value_bytes)
-                        + 3.0 * cfg.net.barrier_latency_s
-                }
-                _ => cfg.net.migration_time(&plan, from_k.max(ev.target_k), cfg.value_bytes),
-            };
+            // network time for moving edge data + values, under the
+            // configured model; in emulated overlap mode the migration
+            // flows share NICs with the *last* superstep's metered
+            // scatter/gather traffic (still in the comm lanes — the meter
+            // resets at the top of every APP phase)
+            let app = app_snapshot(&engine, &cfg.net_model);
+            let mut cost = netsim::price_plan(
+                &cfg.net,
+                &cfg.net_model,
+                &plan,
+                from_k.max(ev.target_k),
+                cfg.value_bytes,
+                app.as_ref(),
+            );
+            if let MethodState::Bvc(_) = &method_state {
+                // BVC pays extra refinement barriers; approximated by the
+                // rounds recorded by the state — barriers are sync points,
+                // so they cannot overlap compute under either model
+                cost.add_blocking(3.0 * cfg.net.barrier_latency_s);
+            }
             let prov = provisioner.resize_to(ev.target_k, cluster.epoch + 1);
             // execute the plan: range-based transfer, touched workers only
             engine.apply_migration(g, &plan, new_assignment.as_assignment(), &mut backend_for)?;
             assignment = new_assignment;
             let wall = t_scale.elapsed().as_secs_f64();
-            let total = wall + net_s + prov.as_secs_f64();
+            // only the blocking share stalls the app; overlapped seconds
+            // ride inside the APP window
+            let total = wall + cost.blocking_s + prov.as_secs_f64();
             scale_s += total;
+            net_s += cost.total_s;
             cluster.record_scale(
                 ev.target_k,
                 migrated,
@@ -216,6 +253,8 @@ where
                 migrated_edges: migrated,
                 range_moves: plan.num_moves(),
                 layout_ranges: engine.layout().total_ranges(),
+                net_blocking_ms: cost.blocking_s * 1e3,
+                net_overlapped_ms: cost.overlapped_s * 1e3,
             });
         }
 
@@ -241,6 +280,7 @@ where
         init_s,
         app_s,
         scale_s,
+        net_s,
         migrated_edges: cluster.total_migrated(),
         com_bytes,
         final_k: cluster.k,
@@ -313,8 +353,11 @@ fn plan_rescale(
 /// streaming path is CEP-native: the assignment is chunk metadata over the
 /// staged physical id space and every plan is range operations.
 pub struct StreamingConfig {
-    /// emulated network for pricing inter-worker rebalancing moves
+    /// physical network for pricing inter-worker rebalancing moves
     pub net: Network,
+    /// which pricing model runs on `net` (closed form or emulator, with
+    /// the emulator's skew/overlap knobs)
+    pub net_model: NetModelConfig,
     /// bytes of application value migrated per edge
     pub value_bytes: u64,
     /// worker provisioning latencies
@@ -347,6 +390,7 @@ impl Default for StreamingConfig {
     fn default() -> Self {
         StreamingConfig {
             net: Network::gbps(8.0),
+            net_model: NetModelConfig::default(),
             value_bytes: 8,
             latency: LatencyModel::default(),
             seed: 42,
@@ -389,6 +433,12 @@ pub struct ChurnRecord {
     /// `moved` then counts every live edge and the network time prices the
     /// full redistribution, not the discarded delta plan)
     pub compacted: bool,
+    /// rebalancing network milliseconds the application stalled for
+    pub net_blocking_ms: f64,
+    /// rebalancing network milliseconds hidden behind the app's superstep
+    /// window (emulated overlap mode; 0 under the closed form, and 0 for
+    /// compactions — a full rebuild cannot overlap)
+    pub net_overlapped_ms: f64,
     /// live replication factor after the batch was applied
     /// ([`StreamingConfig::audit_rf`]; NaN when disabled)
     pub rf: f64,
@@ -410,6 +460,9 @@ pub struct StreamingBreakdown {
     pub scale_s: f64,
     /// churn ingest + delta-plan application + compactions
     pub churn_s: f64,
+    /// total network seconds priced across rescales, delta plans and
+    /// compaction redistributions (blocking + overlapped)
+    pub net_s: f64,
     /// communication bytes of the app phases
     pub com_bytes: u64,
     /// final partition count
@@ -480,41 +533,61 @@ where
     let mut app_s = 0.0f64;
     let mut scale_s = 0.0f64;
     let mut churn_s = 0.0f64;
+    let mut net_s = 0.0f64;
     let mut com_bytes = 0u64;
     let mut event_log: Vec<EventRecord> = Vec::new();
     let mut churn_log: Vec<ChurnRecord> = Vec::new();
 
     for it in 0..scenario.total_iterations {
+        // one superstep window per iteration: when a churn batch AND a
+        // scale event fire before the same APP phase, only the first
+        // priced event may hide its transfers behind the (single) app
+        // window — the second prices standalone, else the window's NIC
+        // capacity would be spent twice and blocking time understated
+        let mut window_free = true;
+
         // ---- CHURN batch? Ingest, derive the delta plan, apply or fold.
         if let Some(ce) = scenario.churn_at(it) {
             let t = Instant::now();
             let batch = random_batch(&mut rng, &sg, ce.inserts, ce.deletes);
             let (outcome, plan) = sg.apply_batch(&batch, k);
             let compacted = sg.needs_compaction();
-            let (net_s, moved, range_ops) = if compacted {
+            let (cost, moved, range_ops) = if compacted {
                 // the delta plan is discarded: the budget tripped, the
                 // whole live graph folds through GEO and every worker
                 // reloads its (new) chunk — price the full redistribution
+                // as a ring of per-worker chunk loads; a full rebuild is a
+                // sync point, so it never overlaps the app
                 sg.compact();
                 let assign = sg.assignment(k);
                 engine = Engine::new(&sg, &assign, &mut backend_for)?.with_threads(cfg.threads);
                 let live = sg.live_edges() as u64;
-                let per_worker = live / k.max(1) as u64 * (8 + cfg.value_bytes);
-                let recv = vec![per_worker; k];
-                (cfg.net.shuffle_time(&[], &recv), live, k)
+                let flows = NetSim::redistribution_flows(k, live * (8 + cfg.value_bytes));
+                (netsim::price_flows(&cfg.net, &cfg.net_model, &flows, k), live, k)
             } else {
                 // only rebalancing moves are inter-worker traffic; appends
-                // arrive from the stream and retires are metadata
+                // arrive from the stream and retires are metadata. In
+                // emulated overlap mode the moves share NICs with the last
+                // superstep's metered traffic
+                let app = if window_free { app_snapshot(&engine, &cfg.net_model) } else { None };
+                if app.is_some() {
+                    window_free = false;
+                }
+                let cost = netsim::price_plan(
+                    &cfg.net,
+                    &cfg.net_model,
+                    &plan.moves,
+                    k,
+                    cfg.value_bytes,
+                    app.as_ref(),
+                );
                 let assign = sg.assignment(k);
                 engine.apply_churn(&sg, &plan, &assign, &mut backend_for)?;
-                (
-                    cfg.net.migration_time(&plan.moves, k, cfg.value_bytes),
-                    plan.moved_edges(),
-                    plan.range_ops(),
-                )
+                (cost, plan.moved_edges(), plan.range_ops())
             };
             grow_state(&sg, &mut n, &mut ranks, &mut aux, &mut active);
-            churn_s += t.elapsed().as_secs_f64() + net_s;
+            churn_s += t.elapsed().as_secs_f64() + cost.blocking_s;
+            net_s += cost.total_s;
             let rf = if cfg.audit_rf {
                 let assign = sg.assignment(k);
                 stream_quality::live_replication_factor(&sg, &assign)
@@ -533,6 +606,8 @@ where
                 tombstones_after: sg.tombstone_count(),
                 staging_fraction: sg.staging_fraction(),
                 compacted,
+                net_blocking_ms: cost.blocking_s * 1e3,
+                net_overlapped_ms: cost.overlapped_s * 1e3,
                 rf,
             });
         }
@@ -543,16 +618,25 @@ where
             let t_scale = Instant::now();
             let plan = sg.rescale_plan(k, ev.target_k);
             let migrated = plan.moved_edges();
-            let net_s =
-                cfg.net.migration_time(&plan.moves, from_k.max(ev.target_k), cfg.value_bytes);
+            // last window consumer of the iteration — no need to mark it
+            let app = if window_free { app_snapshot(&engine, &cfg.net_model) } else { None };
+            let cost = netsim::price_plan(
+                &cfg.net,
+                &cfg.net_model,
+                &plan.moves,
+                from_k.max(ev.target_k),
+                cfg.value_bytes,
+                app.as_ref(),
+            );
             let prov = provisioner.resize_to(ev.target_k, cluster.epoch + 1);
             {
                 let assign = sg.assignment(ev.target_k);
                 engine.apply_churn(&sg, &plan, &assign, &mut backend_for)?;
             }
             k = ev.target_k;
-            let total = t_scale.elapsed().as_secs_f64() + net_s + prov.as_secs_f64();
+            let total = t_scale.elapsed().as_secs_f64() + cost.blocking_s + prov.as_secs_f64();
             scale_s += total;
+            net_s += cost.total_s;
             cluster.record_scale(k, migrated, std::time::Duration::from_secs_f64(total));
             event_log.push(EventRecord {
                 from_k,
@@ -560,6 +644,8 @@ where
                 migrated_edges: migrated,
                 range_moves: plan.moves.num_moves(),
                 layout_ranges: engine.layout().total_ranges(),
+                net_blocking_ms: cost.blocking_s * 1e3,
+                net_overlapped_ms: cost.overlapped_s * 1e3,
             });
         }
 
@@ -608,6 +694,7 @@ where
         app_s,
         scale_s,
         churn_s,
+        net_s,
         com_bytes,
         final_k: k,
         final_rf,
@@ -674,6 +761,17 @@ fn grow_state(
             1.0 / d as f32
         }
     }));
+}
+
+/// Snapshot the engine's metered superstep traffic for overlap pricing —
+/// `None` unless the configured model wants it (emulated + overlap), so
+/// the closed-form path never touches the lanes.
+fn app_snapshot(engine: &Engine, mc: &NetModelConfig) -> Option<netsim::AppTraffic> {
+    if mc.wants_app_traffic() {
+        Some(engine.app_traffic(mc.compute_ns_per_edge))
+    } else {
+        None
+    }
 }
 
 fn stateless_partition(g: &Graph, method: &str, k: usize) -> EdgePartition {
@@ -890,6 +988,100 @@ mod tests {
         for ev in &out.events {
             assert!(ev.migrated_edges > 0);
             assert!(ev.range_moves <= ev.from_k + ev.to_k + 1);
+        }
+    }
+
+    /// Acceptance: on single-shuffle CEP plans the emulator (overlap off,
+    /// so both models see the same standalone shuffle) agrees with the
+    /// closed form well within 1%, and the closed form reports every
+    /// priced second as blocking.
+    #[test]
+    fn emulated_and_closed_form_agree_on_cep_run() {
+        use crate::scaling::netsim::{NetModelConfig, NetworkModel};
+        let g = small_graph();
+        let scenario = Scenario::scale_out(3, 2, 3);
+        let closed_cfg = ControllerConfig::default();
+        let emu_cfg = ControllerConfig {
+            net_model: NetModelConfig {
+                model: NetworkModel::Emulated,
+                overlap: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let closed =
+            run_scenario(&g, &scenario, &closed_cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        let emu =
+            run_scenario(&g, &scenario, &emu_cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        assert_eq!(closed.events.len(), emu.events.len());
+        assert!(closed.net_s > 0.0 && emu.net_s > 0.0);
+        assert!(
+            (closed.net_s - emu.net_s).abs() <= 0.01 * closed.net_s.max(emu.net_s),
+            "closed {} vs emulated {}",
+            closed.net_s,
+            emu.net_s
+        );
+        for (c, e) in closed.events.iter().zip(&emu.events) {
+            assert_eq!(c.net_overlapped_ms, 0.0, "closed form cannot express overlap");
+            assert!(c.net_blocking_ms > 0.0);
+            let (ct, et) = (c.net_blocking_ms, e.net_blocking_ms + e.net_overlapped_ms);
+            assert!((ct - et).abs() <= 0.01 * ct.max(et), "event {ct} vs {et}");
+        }
+    }
+
+    /// Emulated overlap mode on the `run` path: every event's audit
+    /// record splits network time into a blocking and an overlapped
+    /// share, and some migration traffic really hides behind the app
+    /// window.
+    #[test]
+    fn emulated_overlap_splits_net_time_on_run() {
+        use crate::scaling::netsim::NetModelConfig;
+        let g = small_graph();
+        let scenario = Scenario::scale_out(3, 2, 3);
+        let cfg = ControllerConfig {
+            net_model: NetModelConfig::emulated(),
+            ..Default::default()
+        };
+        let out =
+            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        assert_eq!(out.events.len(), 2);
+        assert!(out.net_s > 0.0);
+        for ev in &out.events {
+            assert!(ev.net_blocking_ms >= 0.0 && ev.net_overlapped_ms >= 0.0);
+            assert!(ev.net_blocking_ms + ev.net_overlapped_ms > 0.0);
+            // the modeled compute window is always positive, so a nonzero
+            // plan always hides at least some traffic
+            assert!(ev.net_overlapped_ms > 0.0, "no overlap on {}→{}", ev.from_k, ev.to_k);
+        }
+        assert!((out.all_s - (out.init_s + out.app_s + out.scale_s)).abs() < 1e-9);
+    }
+
+    /// Emulated model on the streaming path: churn and rescale records
+    /// expose the blocking/overlapped split, and compactions never
+    /// overlap (full rebuilds are sync points).
+    #[test]
+    fn streaming_emulated_model_exposes_net_split() {
+        use crate::scaling::netsim::NetModelConfig;
+        let g = small_graph();
+        let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
+        let cfg = StreamingConfig {
+            geo: GeoConfig { k_min: 2, k_max: 8, ..Default::default() },
+            net_model: NetModelConfig::emulated(),
+            ..Default::default()
+        };
+        let out =
+            run_streaming(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        assert!((out.all_s - (out.init_s + out.app_s + out.scale_s + out.churn_s)).abs() < 1e-9);
+        assert!(out.net_s > 0.0);
+        for ev in &out.events {
+            assert!(ev.net_blocking_ms >= 0.0 && ev.net_overlapped_ms >= 0.0);
+            assert!(ev.net_blocking_ms + ev.net_overlapped_ms > 0.0, "rescale not priced");
+        }
+        for cr in &out.churn_events {
+            assert!(cr.net_blocking_ms >= 0.0 && cr.net_overlapped_ms >= 0.0);
+            if cr.compacted {
+                assert_eq!(cr.net_overlapped_ms, 0.0, "a compaction cannot overlap the app");
+            }
         }
     }
 

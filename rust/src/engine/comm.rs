@@ -1,6 +1,15 @@
 //! Communication metering — the COM column of Table 6: every byte that
 //! would cross the network in a real deployment (master→mirror scatter,
 //! mirror→master gather) is recorded here.
+//!
+//! Besides the global totals, the meter keeps **per-worker directional
+//! lanes**: for each phase (scatter/gather) and each worker, the bytes
+//! that worker sent (TX) and received (RX). The lanes are what the
+//! discrete-event network emulator ([`crate::scaling::netsim`]) consumes
+//! as background app traffic in overlap mode — migration flows share the
+//! per-worker NICs with exactly this superstep load. Lane counts are
+//! exact integer tallies of deterministic predicates, so they are
+//! identical at any `PALLAS_THREADS`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -10,12 +19,60 @@ pub struct CommMeter {
     scatter_bytes: AtomicU64,
     gather_bytes: AtomicU64,
     messages: AtomicU64,
+    /// per-worker bytes sent during the scatter phase (masters push)
+    scatter_tx: Vec<AtomicU64>,
+    /// per-worker bytes received during the scatter phase (mirrors pull)
+    scatter_rx: Vec<AtomicU64>,
+    /// per-worker bytes sent during the gather phase (mirrors reply)
+    gather_tx: Vec<AtomicU64>,
+    /// per-worker bytes received during the gather phase (masters fold)
+    gather_rx: Vec<AtomicU64>,
+}
+
+fn zeroed(k: usize) -> Vec<AtomicU64> {
+    (0..k).map(|_| AtomicU64::new(0)).collect()
+}
+
+fn snapshot(lane: &[AtomicU64]) -> Vec<u64> {
+    lane.iter().map(|a| a.load(Ordering::Relaxed)).collect()
 }
 
 impl CommMeter {
-    /// Fresh meter.
+    /// Fresh meter with no per-worker lanes (global counters only).
     pub fn new() -> CommMeter {
         CommMeter::default()
+    }
+
+    /// Fresh meter with `k` per-worker lanes.
+    pub fn with_workers(k: usize) -> CommMeter {
+        CommMeter {
+            scatter_tx: zeroed(k),
+            scatter_rx: zeroed(k),
+            gather_tx: zeroed(k),
+            gather_rx: zeroed(k),
+            ..CommMeter::default()
+        }
+    }
+
+    /// Number of per-worker lanes.
+    pub fn workers(&self) -> usize {
+        self.scatter_tx.len()
+    }
+
+    /// Resize the per-worker lanes to `k` workers (rescale), zeroing new
+    /// lanes and keeping surviving counts.
+    pub fn resize_workers(&mut self, k: usize) {
+        for lane in [
+            &mut self.scatter_tx,
+            &mut self.scatter_rx,
+            &mut self.gather_tx,
+            &mut self.gather_rx,
+        ] {
+            lane.truncate(k);
+            while lane.len() < k {
+                lane.push(AtomicU64::new(0));
+            }
+        }
     }
 
     /// Record a master→mirror transfer.
@@ -46,6 +103,28 @@ impl CommMeter {
         self.messages.fetch_add(msgs, Ordering::Relaxed);
     }
 
+    /// Record one scatter phase with per-worker direction: `tx[p]` bytes
+    /// sent and `rx[p]` bytes received by worker `p`, `msgs` messages in
+    /// total. Updates the global totals (by `tx`'s sum) and the lanes in
+    /// one bulk pass.
+    pub fn record_scatter_lanes(&self, msgs: u64, tx: &[u64], rx: &[u64]) {
+        debug_assert!(tx.len() <= self.scatter_tx.len() && rx.len() <= self.scatter_rx.len());
+        debug_assert_eq!(tx.iter().sum::<u64>(), rx.iter().sum::<u64>());
+        self.record_scatter_n(msgs, tx.iter().sum());
+        add_lanes(&self.scatter_tx, tx);
+        add_lanes(&self.scatter_rx, rx);
+    }
+
+    /// Record one gather phase with per-worker direction (the gather
+    /// flavour of [`Self::record_scatter_lanes`]).
+    pub fn record_gather_lanes(&self, msgs: u64, tx: &[u64], rx: &[u64]) {
+        debug_assert!(tx.len() <= self.gather_tx.len() && rx.len() <= self.gather_rx.len());
+        debug_assert_eq!(tx.iter().sum::<u64>(), rx.iter().sum::<u64>());
+        self.record_gather_n(msgs, tx.iter().sum());
+        add_lanes(&self.gather_tx, tx);
+        add_lanes(&self.gather_rx, rx);
+    }
+
     /// Total bytes both directions.
     pub fn total_bytes(&self) -> u64 {
         self.scatter_bytes.load(Ordering::Relaxed) + self.gather_bytes.load(Ordering::Relaxed)
@@ -66,11 +145,54 @@ impl CommMeter {
         self.messages.load(Ordering::Relaxed)
     }
 
-    /// Reset all counters (between app runs).
+    /// Per-worker `(tx, rx)` byte vectors of the scatter phase.
+    pub fn scatter_lanes(&self) -> (Vec<u64>, Vec<u64>) {
+        (snapshot(&self.scatter_tx), snapshot(&self.scatter_rx))
+    }
+
+    /// Per-worker `(tx, rx)` byte vectors of the gather phase.
+    pub fn gather_lanes(&self) -> (Vec<u64>, Vec<u64>) {
+        (snapshot(&self.gather_tx), snapshot(&self.gather_rx))
+    }
+
+    /// Bytes each worker sent across both phases — the TX side the
+    /// network emulator loads onto the per-worker NICs.
+    pub fn per_worker_tx(&self) -> Vec<u64> {
+        self.scatter_tx
+            .iter()
+            .zip(&self.gather_tx)
+            .map(|(s, g)| s.load(Ordering::Relaxed) + g.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Bytes each worker received across both phases (RX flavour of
+    /// [`Self::per_worker_tx`]).
+    pub fn per_worker_rx(&self) -> Vec<u64> {
+        self.scatter_rx
+            .iter()
+            .zip(&self.gather_rx)
+            .map(|(s, g)| s.load(Ordering::Relaxed) + g.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Reset all counters and lanes (between app runs).
     pub fn reset(&self) {
         self.scatter_bytes.store(0, Ordering::Relaxed);
         self.gather_bytes.store(0, Ordering::Relaxed);
         self.messages.store(0, Ordering::Relaxed);
+        for lane in [&self.scatter_tx, &self.scatter_rx, &self.gather_tx, &self.gather_rx] {
+            for a in lane.iter() {
+                a.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+fn add_lanes(lanes: &[AtomicU64], add: &[u64]) {
+    for (lane, &b) in lanes.iter().zip(add) {
+        if b != 0 {
+            lane.fetch_add(b, Ordering::Relaxed);
+        }
     }
 }
 
@@ -120,5 +242,38 @@ mod tests {
             }
         });
         assert_eq!(m.scatter(), 4000);
+    }
+
+    /// Lane records keep the global totals in sync and expose per-worker
+    /// direction; reset clears lanes too.
+    #[test]
+    fn lanes_track_direction_and_feed_globals() {
+        let m = CommMeter::with_workers(3);
+        assert_eq!(m.workers(), 3);
+        m.record_scatter_lanes(5, &[40, 0, 0], &[0, 24, 16]);
+        m.record_gather_lanes(3, &[0, 16, 8], &[24, 0, 0]);
+        assert_eq!(m.scatter(), 40);
+        assert_eq!(m.gather(), 24);
+        assert_eq!(m.messages(), 8);
+        assert_eq!(m.scatter_lanes(), (vec![40, 0, 0], vec![0, 24, 16]));
+        assert_eq!(m.gather_lanes(), (vec![0, 16, 8], vec![24, 0, 0]));
+        assert_eq!(m.per_worker_tx(), vec![40, 16, 8]);
+        assert_eq!(m.per_worker_rx(), vec![24, 24, 16]);
+        m.reset();
+        assert_eq!(m.per_worker_tx(), vec![0, 0, 0]);
+        assert_eq!(m.total_bytes(), 0);
+    }
+
+    /// Rescaling the lane count keeps surviving counts and zeroes new
+    /// workers.
+    #[test]
+    fn resize_workers_preserves_and_grows() {
+        let mut m = CommMeter::with_workers(2);
+        m.record_scatter_lanes(1, &[8, 0], &[0, 8]);
+        m.resize_workers(4);
+        assert_eq!(m.workers(), 4);
+        assert_eq!(m.per_worker_tx(), vec![8, 0, 0, 0]);
+        m.resize_workers(1);
+        assert_eq!(m.per_worker_tx(), vec![8]);
     }
 }

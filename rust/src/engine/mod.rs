@@ -75,7 +75,12 @@ impl Engine {
         for p in 0..k {
             workers.push(Worker::new(&layout, p, backend_for(p))?);
         }
-        Ok(Engine { layout, workers, comm: CommMeter::new(), threads: ThreadConfig::default() })
+        Ok(Engine {
+            layout,
+            workers,
+            comm: CommMeter::with_workers(k),
+            threads: ThreadConfig::default(),
+        })
     }
 
     /// Executor width used by [`Self::superstep`].
@@ -178,6 +183,7 @@ impl Engine {
         for p in self.workers.len()..new_k {
             self.workers.push(Worker::new(&self.layout, p, backend_for(p))?);
         }
+        self.comm.resize_workers(new_k);
         Ok(())
     }
 
@@ -189,6 +195,24 @@ impl Engine {
     /// The partition layout (mirror placement etc.).
     pub fn layout(&self) -> &PartitionLayout {
         &self.layout
+    }
+
+    /// Snapshot the currently metered superstep traffic as emulator
+    /// background load ([`crate::scaling::netsim::AppTraffic`]): the
+    /// per-worker TX/RX lanes plus a **modeled** compute window —
+    /// `compute_ns_per_edge` per edge direction on the heaviest worker.
+    /// The window is derived from the layout, never from measured wall
+    /// time, so overlap pricing stays bit-identical at any thread count.
+    pub fn app_traffic(&self, compute_ns_per_edge: f64) -> crate::scaling::netsim::AppTraffic {
+        let max_edges = (0..self.workers.len())
+            .map(|p| self.layout.num_owned_edges(p))
+            .max()
+            .unwrap_or(0);
+        crate::scaling::netsim::AppTraffic {
+            tx_bytes: self.comm.per_worker_tx(),
+            rx_bytes: self.comm.per_worker_rx(),
+            compute_s: max_edges as f64 * 2.0 * compute_ns_per_edge * 1e-9,
+        }
     }
 
     /// Run one superstep over global state. `active[v]` gates the scatter
@@ -216,21 +240,36 @@ impl Engine {
         let k = self.workers.len();
 
         // --- 1. scatter: meter master→mirror broadcast of active vertices
-        // (per-partition tallies, one bulk record; 4B id + 4B value each)
+        // (per-partition tallies with per-master breakdown, one bulk lane
+        // record; 4B id + 4B value each). The per-worker TX/RX lanes are
+        // what the network emulator overlaps migration flows with.
         {
             let layout = &self.layout;
-            let scatter_msgs: u64 = par::par_tasks(threads, k, |p| {
+            let per_part: Vec<(u64, Vec<u64>)> = par::par_tasks(threads, k, |p| {
+                let mut per_master = vec![0u64; k];
                 let mut c = 0u64;
                 for &v in layout.vertices_of(p) {
-                    if active[v as usize] && layout.master_of(v) != p as u32 {
-                        c += 1;
+                    if active[v as usize] {
+                        let m = layout.master_of(v);
+                        if m != p as u32 {
+                            c += 1;
+                            per_master[m as usize] += 1;
+                        }
                     }
                 }
-                c
-            })
-            .into_iter()
-            .sum();
-            self.comm.record_scatter_n(scatter_msgs, scatter_msgs * 8);
+                (c, per_master)
+            });
+            let mut msgs = 0u64;
+            let mut tx = vec![0u64; k];
+            let mut rx = vec![0u64; k];
+            for (p, (c, per_master)) in per_part.iter().enumerate() {
+                msgs += c;
+                rx[p] = c * 8;
+                for (m, &cnt) in per_master.iter().enumerate() {
+                    tx[m] += cnt * 8;
+                }
+            }
+            self.comm.record_scatter_lanes(msgs, &tx, &rx);
         }
 
         // --- 2. compute: every worker runs its partition concurrently
@@ -253,10 +292,16 @@ impl Engine {
             Combine::Sum => vec![0f32; n],
             Combine::Min => state.to_vec(),
         };
-        let gather_msgs = AtomicU64::new(0);
+        // per-worker gather tallies: a mirror partial from partition p for
+        // a vertex mastered at m is one p→m message (TX at p, RX at m);
+        // shards fold into local vectors and merge with one bulk atomic
+        // add per worker
+        let gather_tx: Vec<AtomicU64> = (0..k).map(|_| AtomicU64::new(0)).collect();
+        let gather_rx: Vec<AtomicU64> = (0..k).map(|_| AtomicU64::new(0)).collect();
         par::par_chunks_mut(threads, &mut out, |vlo, shard| {
             let vhi = vlo + shard.len();
-            let mut local = 0u64;
+            let mut ltx = vec![0u64; k];
+            let mut lrx = vec![0u64; k];
             for (p, partial) in partials.iter().enumerate() {
                 let verts = layout.vertices_of(p);
                 let a = verts.partition_point(|&v| (v as usize) < vlo);
@@ -267,16 +312,20 @@ impl Engine {
                     match combine {
                         Combine::Sum => {
                             if x != 0.0 {
-                                if layout.master_of(v) != p as u32 {
-                                    local += 1;
+                                let m = layout.master_of(v);
+                                if m != p as u32 {
+                                    ltx[p] += 1;
+                                    lrx[m as usize] += 1;
                                 }
                                 *slot += x;
                             }
                         }
                         Combine::Min => {
                             if x < *slot {
-                                if layout.master_of(v) != p as u32 {
-                                    local += 1;
+                                let m = layout.master_of(v);
+                                if m != p as u32 {
+                                    ltx[p] += 1;
+                                    lrx[m as usize] += 1;
                                 }
                                 *slot = x;
                             }
@@ -284,10 +333,25 @@ impl Engine {
                     }
                 }
             }
-            gather_msgs.fetch_add(local, Ordering::Relaxed);
+            for p in 0..k {
+                if ltx[p] != 0 {
+                    gather_tx[p].fetch_add(ltx[p], Ordering::Relaxed);
+                }
+                if lrx[p] != 0 {
+                    gather_rx[p].fetch_add(lrx[p], Ordering::Relaxed);
+                }
+            }
         });
-        let gm = gather_msgs.load(Ordering::Relaxed);
-        self.comm.record_gather_n(gm, gm * 8);
+        let mut msgs = 0u64;
+        let mut tx = vec![0u64; k];
+        let mut rx = vec![0u64; k];
+        for p in 0..k {
+            let c = gather_tx[p].load(Ordering::Relaxed);
+            msgs += c;
+            tx[p] = c * 8;
+            rx[p] = gather_rx[p].load(Ordering::Relaxed) * 8;
+        }
+        self.comm.record_gather_lanes(msgs, &tx, &rx);
 
         let changed: Vec<bool> = match combine {
             Combine::Sum => vec![true; n], // PR: all vertices refresh
@@ -366,7 +430,7 @@ mod tests {
         let active = vec![true; n];
         for (kind, combine) in [(StepKind::PageRank, Combine::Sum), (StepKind::Wcc, Combine::Min)]
         {
-            let mut reference: Option<(Vec<u32>, Vec<bool>, u64)> = None;
+            let mut reference: Option<(Vec<u32>, Vec<bool>, u64, Vec<u64>, Vec<u64>)> = None;
             for w in [1usize, 2, 8] {
                 let mut e = Engine::new(&g, &view, |_| Box::new(NativeBackend::new()))
                     .unwrap()
@@ -374,12 +438,18 @@ mod tests {
                 let (out, ch) = e.superstep(kind, combine, &state, &aux, &active).unwrap();
                 let bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
                 let bytes = e.comm.total_bytes();
+                let (tx, rx) = (e.comm.per_worker_tx(), e.comm.per_worker_rx());
+                // the lanes are a partition of the global totals
+                assert_eq!(tx.iter().sum::<u64>(), bytes, "{kind:?} width {w}");
+                assert_eq!(rx.iter().sum::<u64>(), bytes, "{kind:?} width {w}");
                 match &reference {
-                    None => reference = Some((bits, ch, bytes)),
-                    Some((rbits, rch, rbytes)) => {
+                    None => reference = Some((bits, ch, bytes, tx, rx)),
+                    Some((rbits, rch, rbytes, rtx, rrx)) => {
                         assert_eq!(&bits, rbits, "{kind:?} width {w}");
                         assert_eq!(&ch, rch, "{kind:?} width {w}");
                         assert_eq!(bytes, *rbytes, "{kind:?} width {w}");
+                        assert_eq!(&tx, rtx, "{kind:?} width {w}: TX lanes diverge");
+                        assert_eq!(&rx, rrx, "{kind:?} width {w}: RX lanes diverge");
                     }
                 }
             }

@@ -35,8 +35,16 @@
 //!    O(k + k') range moves computed from the chunk boundaries alone
 //!    (Theorem 2's structure); every [`scaling::scaler::DynamicScaler`]
 //!    returns one.
-//! 3. **Price** — [`scaling::network::Network`] prices the plan on the
-//!    emulated cluster NICs (Fig 14).
+//! 3. **Price** — a network-cost model prices the plan (Fig 14),
+//!    selected by [`scaling::netsim::NetworkModel`]: the closed-form
+//!    max-NIC pricer [`scaling::network::Network`] (fast path), or the
+//!    deterministic discrete-event emulator [`scaling::netsim::NetSim`]
+//!    — per-worker full-duplex NIC queues, barrier skew, and an overlap
+//!    mode where migration flows share NICs with the superstep's metered
+//!    scatter/gather traffic ([`engine::comm::CommMeter`] per-worker
+//!    lanes) so audit records separate `net_blocking_ms` from
+//!    `net_overlapped_ms`. Emulated prices are a pure function of plan
+//!    and config: bit-identical at any thread count.
 //! 4. **Execute** — [`engine::Engine::apply_migration`] splices the moved
 //!    ranges through the mirror layout in place: only touched partitions
 //!    rebuild their local tables and only vertices whose replica set

@@ -7,6 +7,7 @@
 //! egs scale     --dataset orkut-s --method cep --from 8 --to 12
 //! egs run       --dataset orkut-s --app pagerank --k 8 [--backend xla]
 //! egs elastic   --dataset orkut-s --method cep --scenario out --k 8 --steps 4
+//!               [--net-model closed|emulated] [--net-gbps 8] [--net-skew-us 0]
 //! egs table2
 //! egs info      --dataset orkut-s
 //! ```
@@ -15,6 +16,14 @@
 //! everything else (CSR builds, orderings, quality sweeps) follows the
 //! process-wide `PALLAS_THREADS` knob (default: detected parallelism).
 //! Results are identical at any width.
+//!
+//! `elastic` prices migrations under `--net-model`: `closed` (the
+//! closed-form max-NIC pricer, default) or `emulated` (the deterministic
+//! discrete-event emulator — NIC queuing, barrier skew via
+//! `--net-skew-us`, and compute/communication overlap; pass
+//! `--no-overlap` to emulate standalone shuffles). The emulator's event
+//! ordering is a pure function of plan and config, so its prices are
+//! bit-identical at any `--threads`.
 
 use anyhow::{bail, Context};
 use egs::coordinator::{run_scenario, ControllerConfig};
@@ -26,6 +35,8 @@ use egs::partition::{edge_partition_by_name, quality};
 use egs::runtime::executor::XlaBackend;
 use egs::runtime::native::NativeBackend;
 use egs::runtime::ComputeBackend;
+use egs::scaling::netsim::{NetModelConfig, NetworkModel};
+use egs::scaling::network::Network;
 use egs::scaling::scaler::{BvcScaler, CepScaler, DynamicScaler, Hash1dScaler};
 use egs::scaling::scenario::Scenario;
 use egs::theory::bounds;
@@ -208,16 +219,34 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
         "in" => Scenario::scale_in(k, steps, period),
         other => bail!("unknown scenario {other} (out|in)"),
     };
+    let mut net_model = NetModelConfig::default();
+    if let Some(nm) = args.get("net-model") {
+        net_model.model = match NetworkModel::parse(nm) {
+            Some(m) => m,
+            None => bail!("unknown net model {nm} (closed|emulated)"),
+        };
+    }
+    net_model.barrier_skew_s = args.get_parse::<f64>("net-skew-us", 0.0) * 1e-6;
+    if args.flag("no-overlap") {
+        net_model.overlap = false;
+    }
     let cfg = ControllerConfig {
         method: args.get_or("method", "cep"),
+        net: Network::gbps(args.get_parse::<f64>("net-gbps", 8.0)),
+        net_model,
         threads: args.thread_config(),
         ..Default::default()
     };
     let mut factory = backend_factory(args)?;
     let out = run_scenario(&ordered, &scenario, &cfg, &mut *factory)?;
     let mut t = Table::new(
-        &format!("{} on {}", scenario.name, args.get_or("dataset", "pokec-s")),
-        &["method", "ALL", "INIT", "APP", "SCALE", "migrated", "COM MB"],
+        &format!(
+            "{} on {} (net: {})",
+            scenario.name,
+            args.get_or("dataset", "pokec-s"),
+            net_model.model.name()
+        ),
+        &["method", "ALL", "INIT", "APP", "SCALE", "NET", "migrated", "COM MB"],
     );
     t.row(vec![
         out.method.clone(),
@@ -225,10 +254,19 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
         secs(out.init_s),
         secs(out.app_s),
         secs(out.scale_s),
+        secs(out.net_s),
         out.migrated_edges.to_string(),
         format!("{:.2}", out.com_bytes as f64 / 1e6),
     ]);
     t.print();
+    if net_model.model == NetworkModel::Emulated {
+        for ev in &out.events {
+            println!(
+                "  {}→{}: net blocking {:.3} ms, overlapped {:.3} ms",
+                ev.from_k, ev.to_k, ev.net_blocking_ms, ev.net_overlapped_ms
+            );
+        }
+    }
     Ok(())
 }
 

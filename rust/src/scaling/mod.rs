@@ -5,10 +5,14 @@
 //!
 //! The pipeline: a [`scaler::DynamicScaler`] turns a `k → k±x` request
 //! into a [`migration::MigrationPlan`] of contiguous edge-id range moves
-//! (O(k) of them on the CEP path), [`network::Network`] prices the plan,
+//! (O(k) of them on the CEP path), a network model prices the plan —
+//! the closed-form [`network::Network`] fast path or the deterministic
+//! discrete-event emulator [`netsim::NetSim`] (queuing, barrier skew,
+//! compute/communication overlap), selected by [`netsim::NetworkModel`] —
 //! and [`crate::engine::Engine::apply_migration`] executes it.
 
 pub mod migration;
+pub mod netsim;
 pub mod network;
 pub mod scenario;
 pub mod scaler;

@@ -1,0 +1,774 @@
+//! **Deterministic discrete-event network emulator** — the successor to the
+//! closed-form [`Network`] pricer for the Fig 14 / §6.4 argument.
+//!
+//! The closed form (`max-NIC bytes / bandwidth + barrier`) cannot express
+//! queuing between transfers, barrier skew, or compute/communication
+//! overlap — exactly the effects that decide elasticity in the cloud (the
+//! xDGP and Spinner observation: what matters is migration cost *overlapped
+//! with ongoing computation*, not standalone shuffle time). This module
+//! emulates them:
+//!
+//! * **Per-worker full-duplex NICs** — every worker owns two independent
+//!   serialization resources (TX and RX) at the configured bandwidth.
+//! * **Per-transfer serialization** — a flow `(src → dst, bytes)` must
+//!   serialize through `src`'s TX NIC and `dst`'s RX NIC. Concurrent flows
+//!   on one NIC share it max-min fairly (progressive filling); the event
+//!   loop advances from flow completion to flow completion.
+//! * **Barrier events with configurable skew** — the migration ends with a
+//!   cluster barrier: worker `p` arrives when its last flow finishes and
+//!   straggles by `barrier_skew_s · p / (k−1)` (a deterministic positional
+//!   skew model), and the barrier exits `barrier_latency_s` after the last
+//!   arrival.
+//! * **Overlap mode** — migration flows share NICs with one superstep's
+//!   scatter/gather traffic ([`AppTraffic`], fed from the engine's
+//!   [`crate::engine::comm::CommMeter`] per-worker lanes): app bytes drain
+//!   first (app traffic has priority), and transfer time that fits inside
+//!   the app window (`app comm + compute`) is *overlapped* — the tail that
+//!   sticks out and the exit barrier (a sync point, like every barrier in
+//!   the accounting) *block* the application.
+//!
+//! Event ordering is a pure function of the flow set and the config — no
+//! wall clock, no RNG, no thread pool — so every output is **bit-identical
+//! at any `PALLAS_THREADS`**.
+//!
+//! The controllers select between the two pricers via [`NetworkModel`]
+//! (CLI: `--net-model closed|emulated`); [`price_plan`] dispatches. The
+//! closed form stays the validated fast path: on single-shuffle CEP plans
+//! (`k → k±1`, a perfect matching of flows — one per NIC) the emulator's
+//! makespan equals the closed-form max-NIC bound exactly, which the parity
+//! test pins.
+
+use super::migration::MigrationPlan;
+use super::network::Network;
+use crate::PartitionId;
+
+/// Which network-cost model the controller prices migrations with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetworkModel {
+    /// the closed-form max-NIC pricer ([`Network`]) — fast, no queuing,
+    /// no skew, no overlap (every priced second blocks the app)
+    ClosedForm,
+    /// the discrete-event emulator ([`NetSim`]) — queuing, barrier skew
+    /// and compute/communication overlap
+    Emulated,
+}
+
+impl NetworkModel {
+    /// Parse a CLI spelling (`closed` / `closed-form` / `emulated`).
+    pub fn parse(s: &str) -> Option<NetworkModel> {
+        match s {
+            "closed" | "closed-form" | "closedform" => Some(NetworkModel::ClosedForm),
+            "emulated" | "emu" | "sim" => Some(NetworkModel::Emulated),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (bench JSON rows, tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetworkModel::ClosedForm => "closed",
+            NetworkModel::Emulated => "emulated",
+        }
+    }
+}
+
+/// One aggregated transfer: `bytes` flowing from worker `src` to worker
+/// `dst` (serialized through `src`'s TX NIC and `dst`'s RX NIC).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Flow {
+    /// sending worker
+    pub src: PartitionId,
+    /// receiving worker
+    pub dst: PartitionId,
+    /// payload bytes
+    pub bytes: u64,
+}
+
+/// One superstep's application traffic, the background load migration
+/// flows share NICs with in overlap mode. Fed from the engine's
+/// [`crate::engine::comm::CommMeter`] per-worker directional lanes plus a
+/// modeled compute window.
+#[derive(Clone, Debug, Default)]
+pub struct AppTraffic {
+    /// bytes worker `p` sends during the superstep (scatter + gather TX)
+    pub tx_bytes: Vec<u64>,
+    /// bytes worker `p` receives during the superstep
+    pub rx_bytes: Vec<u64>,
+    /// modeled compute time of the superstep (seconds) — the window the
+    /// migration can hide behind on top of the app's own NIC time
+    pub compute_s: f64,
+}
+
+/// Emulator configuration (the physical-cluster knobs).
+#[derive(Clone, Copy, Debug)]
+pub struct NetSimConfig {
+    /// per-NIC bandwidth in bits/second, each direction of the full duplex
+    pub bandwidth_bps: f64,
+    /// barrier latency once every worker has arrived, seconds
+    pub barrier_latency_s: f64,
+    /// maximum positional straggler delay at a barrier: worker `p` arrives
+    /// `barrier_skew_s · p / (k−1)` late (0 disables skew)
+    pub barrier_skew_s: f64,
+}
+
+impl NetSimConfig {
+    /// Adopt the closed-form pricer's bandwidth/latency so the two models
+    /// price the same physical cluster.
+    pub fn from_network(net: &Network, barrier_skew_s: f64) -> NetSimConfig {
+        NetSimConfig {
+            bandwidth_bps: net.bandwidth_bps,
+            barrier_latency_s: net.barrier_latency_s,
+            barrier_skew_s,
+        }
+    }
+
+    /// EC2-style preset mirroring [`Network::gbps`], skew disabled.
+    pub fn gbps(gbits: f64) -> NetSimConfig {
+        NetSimConfig::from_network(&Network::gbps(gbits), 0.0)
+    }
+}
+
+/// Result of emulating one migration event.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimOutcome {
+    /// wall-clock seconds from event start to barrier exit
+    pub total_s: f64,
+    /// makespan of the flows alone (no exit barrier)
+    pub transfer_s: f64,
+    /// transfer seconds hidden inside the app window (overlap mode; the
+    /// exit barrier never overlaps — it is a sync point)
+    pub overlapped_s: f64,
+    /// seconds of `total_s` the application stalls for (the transfer tail
+    /// beyond the app window plus the exit barrier)
+    pub blocking_s: f64,
+    /// aggregated flows simulated
+    pub flows: usize,
+    /// total payload bytes moved
+    pub bytes: u64,
+    /// the max-NIC serialization lower bound (no emulated schedule can
+    /// finish its transfers faster) — the property tests pin
+    /// `transfer_s ≥ lower_bound_s`
+    pub lower_bound_s: f64,
+}
+
+/// The emulator. Stateless between calls: [`NetSim::simulate`] is a pure
+/// function of `(config, k, flows, app)`.
+#[derive(Clone, Copy, Debug)]
+pub struct NetSim {
+    /// physical-cluster knobs
+    pub cfg: NetSimConfig,
+}
+
+/// Sub-bit slack under which a flow's residual volume counts as drained
+/// (absorbs f64 rounding in `rate · dt` updates).
+const DRAIN_EPS_BITS: f64 = 1e-6;
+
+impl NetSim {
+    /// Emulator over `cfg`.
+    pub fn new(cfg: NetSimConfig) -> NetSim {
+        NetSim { cfg }
+    }
+
+    /// Aggregate a migration plan into per-`(src, dst)` flows (ascending,
+    /// degenerate `src == dst` and empty moves dropped), pricing each edge
+    /// at `8 + value_bytes` wire bytes.
+    pub fn flows_of_plan(plan: &MigrationPlan, value_bytes: u64) -> Vec<Flow> {
+        let mut pairs: Vec<(PartitionId, PartitionId, u64)> = plan
+            .moves
+            .iter()
+            .filter(|t| t.src != t.dst && !t.is_empty())
+            .map(|t| (t.src, t.dst, t.len() * (8 + value_bytes)))
+            .collect();
+        pairs.sort_unstable_by_key(|&(s, d, _)| (s, d));
+        let mut out: Vec<Flow> = Vec::new();
+        for (src, dst, bytes) in pairs {
+            match out.last_mut() {
+                Some(f) if f.src == src && f.dst == dst => f.bytes += bytes,
+                _ => out.push(Flow { src, dst, bytes }),
+            }
+        }
+        out
+    }
+
+    /// The ring flows of a full redistribution (every worker reloads its
+    /// chunk from its neighbour) — the streaming compaction's traffic
+    /// shape. `total_bytes` is split like CEP chunk widths
+    /// (`⌊(total + p)/k⌋`), so the flow volumes sum to `total_bytes`
+    /// **exactly** — no integer-truncation loss, the bug class this
+    /// module's accounting fixes eliminate.
+    pub fn redistribution_flows(k: usize, total_bytes: u64) -> Vec<Flow> {
+        if k < 2 || total_bytes == 0 {
+            return Vec::new();
+        }
+        (0..k)
+            .filter_map(|p| {
+                let bytes = (total_bytes + p as u64) / k as u64;
+                (bytes > 0).then_some(Flow {
+                    src: ((p + 1) % k) as PartitionId,
+                    dst: p as PartitionId,
+                    bytes,
+                })
+            })
+            .collect()
+    }
+
+    /// Price a migration plan (see [`NetSim::simulate`]).
+    pub fn price_plan(
+        &self,
+        plan: &MigrationPlan,
+        k: usize,
+        value_bytes: u64,
+        app: Option<&AppTraffic>,
+    ) -> SimOutcome {
+        self.simulate(k, &NetSim::flows_of_plan(plan, value_bytes), app)
+    }
+
+    /// Emulate the flow set on a `k`-worker cluster (workers named by the
+    /// flows or `app` beyond `k` grow the cluster — out-of-range ids never
+    /// panic). With `app`, its traffic drains each NIC first and the app
+    /// window caps the overlapped share. An empty flow set prices to all
+    /// zeros: a no-op migration costs nothing, barrier included.
+    pub fn simulate(&self, k: usize, flows: &[Flow], app: Option<&AppTraffic>) -> SimOutcome {
+        let mut live: Vec<Flow> =
+            flows.iter().filter(|f| f.src != f.dst && f.bytes > 0).copied().collect();
+        live.sort_unstable_by_key(|f| (f.src, f.dst));
+        if live.is_empty() {
+            return SimOutcome::default();
+        }
+        let (mut kk, sent, recv) = per_worker_volumes(k, &live);
+        if let Some(a) = app {
+            kk = kk.max(a.tx_bytes.len()).max(a.rx_bytes.len());
+        }
+        let bw = self.cfg.bandwidth_bps;
+        assert!(bw > 0.0, "non-positive bandwidth");
+
+        // resource open times: app traffic (priority) drains each NIC
+        // first; TX of worker p is resource 2p, RX is 2p+1
+        let mut open = vec![0f64; 2 * kk];
+        let mut window_s = 0f64;
+        if let Some(a) = app {
+            let mut comm_s = 0f64;
+            for p in 0..kk {
+                let tx = a.tx_bytes.get(p).copied().unwrap_or(0) as f64 * 8.0 / bw;
+                let rx = a.rx_bytes.get(p).copied().unwrap_or(0) as f64 * 8.0 / bw;
+                open[2 * p] = tx;
+                open[2 * p + 1] = rx;
+                comm_s = comm_s.max(tx).max(rx);
+            }
+            window_s = comm_s + a.compute_s.max(0.0);
+        }
+
+        // max-NIC serialization lower bound (app load excluded: it bounds
+        // the migration flows' own schedule)
+        let total_bytes: u64 = sent.iter().sum();
+        let lower_bound_s =
+            sent.iter().chain(recv.iter()).copied().max().unwrap_or(0) as f64 * 8.0 / bw;
+
+        // ---- event loop: advance from completion to completion, sharing
+        // each NIC max-min fairly among the flows that are ready on it
+        let nflows = live.len();
+        let mut rem_bits: Vec<f64> = live.iter().map(|f| f.bytes as f64 * 8.0).collect();
+        let mut done_at = vec![0f64; nflows];
+        let mut alive: Vec<usize> = (0..nflows).collect();
+        let mut t = 0f64;
+        while !alive.is_empty() {
+            // ready = both resources open; dormant flows wake at their
+            // later open time
+            let mut ready: Vec<usize> = Vec::with_capacity(alive.len());
+            let mut next_open = f64::INFINITY;
+            for &i in &alive {
+                let f = &live[i];
+                let at = open[2 * f.src as usize].max(open[2 * f.dst as usize + 1]);
+                if at <= t {
+                    ready.push(i);
+                } else {
+                    next_open = next_open.min(at);
+                }
+            }
+            if ready.is_empty() {
+                debug_assert!(next_open.is_finite(), "stalled with dormant flows");
+                t = next_open;
+                continue;
+            }
+            let rates = max_min_rates(&live, &ready, kk, bw);
+            // time to the earliest completion, clipped at the next NIC
+            // opening so waking flows claim their fair share immediately
+            let mut dt = f64::INFINITY;
+            for (j, &i) in ready.iter().enumerate() {
+                debug_assert!(rates[j] > 0.0, "ready flow with zero rate");
+                dt = dt.min(rem_bits[i] / rates[j]);
+            }
+            if next_open.is_finite() {
+                dt = dt.min(next_open - t);
+            }
+            t += dt;
+            for (j, &i) in ready.iter().enumerate() {
+                rem_bits[i] -= rates[j] * dt;
+                if rem_bits[i] <= DRAIN_EPS_BITS {
+                    rem_bits[i] = 0.0;
+                    done_at[i] = t;
+                }
+            }
+            alive.retain(|&i| rem_bits[i] > 0.0);
+        }
+        let transfer_s = t;
+
+        // ---- exit barrier with positional skew: worker p arrives at its
+        // last flow completion (0 if idle), straggling by skew·p/(k−1)
+        let mut arrive = vec![0f64; kk];
+        for (i, f) in live.iter().enumerate() {
+            let d = done_at[i];
+            let (s, r) = (f.src as usize, f.dst as usize);
+            arrive[s] = arrive[s].max(d);
+            arrive[r] = arrive[r].max(d);
+        }
+        let skew_unit =
+            if kk > 1 { self.cfg.barrier_skew_s / (kk - 1) as f64 } else { 0.0 };
+        let mut last_arrival = 0f64;
+        for (p, &a) in arrive.iter().enumerate() {
+            last_arrival = last_arrival.max(a + skew_unit * p as f64);
+        }
+        let total_s = last_arrival + self.cfg.barrier_latency_s;
+        // only the transfers can hide behind the app window — the exit
+        // barrier (latency + straggler skew) is a sync point and always
+        // blocks, exactly like the BVC refinement barriers the
+        // controller classifies as blocking
+        let overlapped_s = transfer_s.min(window_s);
+        SimOutcome {
+            total_s,
+            transfer_s,
+            overlapped_s,
+            blocking_s: total_s - overlapped_s,
+            flows: nflows,
+            bytes: total_bytes,
+            lower_bound_s,
+        }
+    }
+}
+
+/// Grow `k` to cover every worker named by the flows and accumulate the
+/// per-worker sent/recv payload bytes — the one sizing-and-accumulation
+/// rule both pricers share, so the closed-form and emulated models cannot
+/// silently diverge on it.
+fn per_worker_volumes(k: usize, flows: &[Flow]) -> (usize, Vec<u64>, Vec<u64>) {
+    let mut kk = k.max(1);
+    for f in flows {
+        kk = kk.max(f.src as usize + 1).max(f.dst as usize + 1);
+    }
+    let mut sent = vec![0u64; kk];
+    let mut recv = vec![0u64; kk];
+    for f in flows {
+        sent[f.src as usize] += f.bytes;
+        recv[f.dst as usize] += f.bytes;
+    }
+    (kk, sent, recv)
+}
+
+/// Max-min fair rates (progressive filling) for the `ready` flows: every
+/// NIC's capacity splits evenly among its unfixed flows, the globally
+/// tightest NIC saturates first, and its flows' rates propagate as reduced
+/// capacity to the NICs they also cross. Pure f64 over fixed iteration
+/// order — deterministic.
+fn max_min_rates(flows: &[Flow], ready: &[usize], kk: usize, bw: f64) -> Vec<f64> {
+    let mut cap = vec![bw; 2 * kk];
+    let mut load = vec![0usize; 2 * kk];
+    for &i in ready {
+        load[2 * flows[i].src as usize] += 1;
+        load[2 * flows[i].dst as usize + 1] += 1;
+    }
+    let mut rates = vec![0f64; ready.len()];
+    let mut fixed = vec![false; ready.len()];
+    let mut unfixed = ready.len();
+    while unfixed > 0 {
+        // tightest resource (ties: lowest id, TX before RX)
+        let mut best_r = usize::MAX;
+        let mut best = f64::INFINITY;
+        for (r, (&c, &l)) in cap.iter().zip(load.iter()).enumerate() {
+            if l > 0 {
+                let share = c.max(0.0) / l as f64;
+                if share < best {
+                    best = share;
+                    best_r = r;
+                }
+            }
+        }
+        debug_assert!(best_r != usize::MAX, "unfixed flows but no loaded resource");
+        for (j, &i) in ready.iter().enumerate() {
+            if fixed[j] {
+                continue;
+            }
+            let rtx = 2 * flows[i].src as usize;
+            let rrx = 2 * flows[i].dst as usize + 1;
+            if rtx == best_r || rrx == best_r {
+                rates[j] = best;
+                fixed[j] = true;
+                unfixed -= 1;
+                let other = if rtx == best_r { rrx } else { rtx };
+                cap[other] -= best;
+                load[other] -= 1;
+            }
+        }
+        cap[best_r] = 0.0;
+        load[best_r] = 0;
+    }
+    // every max-min rate is mathematically ≥ bw / #flows; the floor only
+    // defends against float-degenerate ties driving a residual capacity
+    // to exactly 0, which would stall the event loop
+    let floor = bw * 1e-12;
+    for r in &mut rates {
+        if *r < floor {
+            *r = floor;
+        }
+    }
+    rates
+}
+
+// ---------------------------------------------------------------------------
+// Model dispatch: the controllers price through here
+// ---------------------------------------------------------------------------
+
+/// Controller-level pricing options: which model, and the emulator-only
+/// knobs (skew, overlap, modeled compute rate).
+#[derive(Clone, Copy, Debug)]
+pub struct NetModelConfig {
+    /// closed form or emulated
+    pub model: NetworkModel,
+    /// barrier straggler skew fed to the emulator (ignored by closed form)
+    pub barrier_skew_s: f64,
+    /// share NICs with the last superstep's scatter/gather traffic and
+    /// hide migration time inside the app window (emulated model only)
+    pub overlap: bool,
+    /// modeled per-edge compute cost (nanoseconds per edge direction) used
+    /// to derive the deterministic app compute window from the layout —
+    /// never measured wall time, so pricing stays bit-identical at any
+    /// thread count
+    pub compute_ns_per_edge: f64,
+}
+
+impl Default for NetModelConfig {
+    fn default() -> Self {
+        NetModelConfig {
+            model: NetworkModel::ClosedForm,
+            barrier_skew_s: 0.0,
+            overlap: true,
+            compute_ns_per_edge: 2.0,
+        }
+    }
+}
+
+impl NetModelConfig {
+    /// Emulated model with default knobs.
+    pub fn emulated() -> NetModelConfig {
+        NetModelConfig { model: NetworkModel::Emulated, ..Default::default() }
+    }
+
+    /// Does pricing want the engine's metered superstep traffic? (Only
+    /// the emulator in overlap mode consumes it.)
+    pub fn wants_app_traffic(&self) -> bool {
+        self.model == NetworkModel::Emulated && self.overlap
+    }
+}
+
+/// What one migration event costs the application.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetCost {
+    /// wall seconds the migration traffic occupies the network
+    pub total_s: f64,
+    /// seconds the application stalls (what SCALE accounting charges)
+    pub blocking_s: f64,
+    /// seconds hidden behind the app window (emulated overlap mode only;
+    /// closed form cannot express overlap and always reports 0)
+    pub overlapped_s: f64,
+}
+
+impl NetCost {
+    /// A cost that fully blocks (closed-form semantics).
+    pub fn blocking(total_s: f64) -> NetCost {
+        NetCost { total_s, blocking_s: total_s, overlapped_s: 0.0 }
+    }
+
+    /// Add barrier-synchronized extra cost that cannot overlap compute
+    /// (BVC refinement rounds, provisioning sync points).
+    pub fn add_blocking(&mut self, s: f64) {
+        self.total_s += s;
+        self.blocking_s += s;
+    }
+}
+
+impl From<SimOutcome> for NetCost {
+    fn from(o: SimOutcome) -> NetCost {
+        NetCost { total_s: o.total_s, blocking_s: o.blocking_s, overlapped_s: o.overlapped_s }
+    }
+}
+
+/// Price a migration plan under the selected model. `app` is only
+/// consulted by the emulator in overlap mode.
+pub fn price_plan(
+    net: &Network,
+    mc: &NetModelConfig,
+    plan: &MigrationPlan,
+    k: usize,
+    value_bytes: u64,
+    app: Option<&AppTraffic>,
+) -> NetCost {
+    match mc.model {
+        NetworkModel::ClosedForm => {
+            NetCost::blocking(net.migration_time(plan, k, value_bytes))
+        }
+        NetworkModel::Emulated => {
+            let sim = NetSim::new(NetSimConfig::from_network(net, mc.barrier_skew_s));
+            let app = if mc.overlap { app } else { None };
+            sim.price_plan(plan, k, value_bytes, app).into()
+        }
+    }
+}
+
+/// Price an explicit flow set (the streaming compaction's redistribution
+/// ring) under the selected model. Compactions are full rebuilds, so they
+/// never overlap the app regardless of `mc.overlap`.
+pub fn price_flows(net: &Network, mc: &NetModelConfig, flows: &[Flow], k: usize) -> NetCost {
+    match mc.model {
+        NetworkModel::ClosedForm => {
+            let (_, sent, recv) = per_worker_volumes(k, flows);
+            NetCost::blocking(net.shuffle_time(&sent, &recv))
+        }
+        NetworkModel::Emulated => {
+            let sim = NetSim::new(NetSimConfig::from_network(net, mc.barrier_skew_s));
+            sim.simulate(k, flows, None).into()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::cep::Cep;
+    use crate::util::proptest::check;
+
+    fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * a.abs().max(b.abs()).max(f64::MIN_POSITIVE)
+    }
+
+    /// Closed-form parity: a single-shuffle CEP plan (`k → k±1` moves are
+    /// a perfect matching — one flow per NIC) prices identically under
+    /// both models, well inside the 1% acceptance bound.
+    #[test]
+    fn emulated_matches_closed_form_on_single_shuffle_cep_plans() {
+        for (m, k) in [(100_000usize, 13usize), (250_000, 8), (77_777, 20)] {
+            for delta in [1i64, -1] {
+                let to = (k as i64 + delta) as usize;
+                let plan = MigrationPlan::between_ceps(&Cep::new(m, k), &Cep::new(m, to));
+                assert!(!plan.is_empty());
+                for gbps in [1.0, 8.0, 32.0] {
+                    let net = Network::gbps(gbps);
+                    let closed = net.migration_time(&plan, k.max(to), 8);
+                    let sim = NetSim::new(NetSimConfig::from_network(&net, 0.0));
+                    let out = sim.price_plan(&plan, k.max(to), 8, None);
+                    assert!(
+                        rel_close(out.total_s, closed, 1e-9),
+                        "m={m} {k}->{to} @{gbps}Gbps: emulated {} vs closed {closed}",
+                        out.total_s
+                    );
+                    assert!(rel_close(out.transfer_s, out.lower_bound_s, 1e-9));
+                }
+            }
+        }
+    }
+
+    /// Dispatch parity: [`price_plan`] under both models agrees on
+    /// single-shuffle plans, and the closed form reports zero overlap.
+    #[test]
+    fn price_plan_dispatch_agrees_across_models() {
+        let net = Network::gbps(8.0);
+        let plan = MigrationPlan::between_ceps(&Cep::new(90_000, 11), &Cep::new(90_000, 12));
+        let closed = price_plan(&net, &NetModelConfig::default(), &plan, 12, 8, None);
+        let emu = price_plan(&net, &NetModelConfig::emulated(), &plan, 12, 8, None);
+        assert!(rel_close(closed.total_s, emu.total_s, 1e-6));
+        assert_eq!(closed.overlapped_s, 0.0);
+        assert_eq!(closed.blocking_s, closed.total_s);
+    }
+
+    /// Property: no emulated schedule beats the max-NIC serialization
+    /// bound, for random flow sets with queuing collisions.
+    #[test]
+    fn emulated_transfer_dominates_max_nic_lower_bound() {
+        check(0xBEEF0, 48, |rng| {
+            let k = 2 + rng.below_usize(10);
+            let nflows = 1 + rng.below_usize(30);
+            let flows: Vec<Flow> = (0..nflows)
+                .map(|_| {
+                    let src = rng.below(k as u64) as PartitionId;
+                    let mut dst = rng.below(k as u64) as PartitionId;
+                    if dst == src {
+                        dst = (dst + 1) % k as PartitionId;
+                    }
+                    Flow { src, dst, bytes: 1 + rng.below(1_000_000) }
+                })
+                .collect();
+            let sim = NetSim::new(NetSimConfig::gbps(4.0));
+            let out = sim.simulate(k, &flows, None);
+            assert!(
+                out.transfer_s >= out.lower_bound_s * (1.0 - 1e-9),
+                "k={k} flows={nflows}: makespan {} beat the NIC bound {}",
+                out.transfer_s,
+                out.lower_bound_s
+            );
+            assert_eq!(out.bytes, flows.iter().map(|f| f.bytes).sum::<u64>());
+            // and the run is reproducible call-over-call (pure function)
+            let again = sim.simulate(k, &flows, None);
+            assert_eq!(out.total_s.to_bits(), again.total_s.to_bits());
+            assert_eq!(out.blocking_s.to_bits(), again.blocking_s.to_bits());
+        });
+    }
+
+    /// Random plans through the plan-pricing path: emulation respects the
+    /// lower bound and moves exactly the plan's bytes.
+    #[test]
+    fn emulated_plan_pricing_respects_bound_for_random_rescales() {
+        check(0xBEEF1, 24, |rng| {
+            let m = 1_000 + rng.below_usize(50_000);
+            let k0 = 2 + rng.below_usize(20);
+            let k1 = 2 + rng.below_usize(20);
+            let plan = MigrationPlan::between_ceps(&Cep::new(m, k0), &Cep::new(m, k1));
+            let sim = NetSim::new(NetSimConfig::gbps(8.0));
+            let out = sim.price_plan(&plan, k0.max(k1), 16, None);
+            assert!(out.transfer_s >= out.lower_bound_s * (1.0 - 1e-9));
+            assert_eq!(out.bytes, plan.bytes(16));
+        });
+    }
+
+    /// A no-op migration prices to zero under the emulator too — barrier
+    /// included (the empty-plan accounting fix, emulated flavour).
+    #[test]
+    fn empty_flow_set_prices_zero() {
+        let sim = NetSim::new(NetSimConfig::gbps(8.0));
+        let out = sim.simulate(6, &[], None);
+        assert_eq!(out.total_s, 0.0);
+        assert_eq!(out.blocking_s, 0.0);
+        assert_eq!(out.flows, 0);
+        let plan = MigrationPlan::default();
+        let cost = price_plan(
+            &Network::gbps(8.0),
+            &NetModelConfig::emulated(),
+            &plan,
+            4,
+            8,
+            None,
+        );
+        assert_eq!(cost.total_s, 0.0);
+    }
+
+    /// Barrier skew is charged: the same flows cost more on a skewed
+    /// cluster, and when the skew dwarfs the transfer the idle straggler
+    /// (worker k−1, the full `barrier_skew_s` late) sets the exit time.
+    #[test]
+    fn barrier_skew_delays_exit() {
+        let flows = [Flow { src: 0, dst: 1, bytes: 1_000_000 }];
+        let base = NetSim::new(NetSimConfig::gbps(8.0)).simulate(4, &flows, None);
+        let mut cfg = NetSimConfig::gbps(8.0);
+        cfg.barrier_skew_s = 0.03;
+        let skewed = NetSim::new(cfg).simulate(4, &flows, None);
+        assert!(skewed.total_s > base.total_s);
+        // transfer is 1 ms << 30 ms of skew: worker 3's idle arrival wins
+        assert!(rel_close(skewed.total_s, 0.03 + cfg.barrier_latency_s, 1e-9));
+    }
+
+    /// Queuing is expressible: two transfers fighting over one TX NIC
+    /// serialize (sum), while a matching runs in parallel (max) — the
+    /// distinction the closed form collapses.
+    #[test]
+    fn shared_nic_serializes_disjoint_nics_parallelize() {
+        let sim = NetSim::new(NetSimConfig::gbps(1.0));
+        let b = 1_000_000u64;
+        let contended =
+            sim.simulate(3, &[Flow { src: 0, dst: 1, bytes: b }, Flow { src: 0, dst: 2, bytes: b }], None);
+        let matched =
+            sim.simulate(3, &[Flow { src: 0, dst: 1, bytes: b }, Flow { src: 2, dst: 0, bytes: b }], None);
+        let one = b as f64 * 8.0 / 1e9;
+        assert!(rel_close(contended.transfer_s, 2.0 * one, 1e-9), "{}", contended.transfer_s);
+        // full duplex: 2→0 RX does not contend with 0→1 TX
+        assert!(rel_close(matched.transfer_s, one, 1e-9), "{}", matched.transfer_s);
+    }
+
+    /// Overlap mode: app traffic delays the flows (priority) but grants a
+    /// window; blocking + overlapped always reassembles the total, and a
+    /// long compute window hides a small migration entirely.
+    #[test]
+    fn overlap_splits_blocking_and_overlapped() {
+        let sim = NetSim::new(NetSimConfig::gbps(8.0));
+        let flows = [Flow { src: 0, dst: 1, bytes: 500_000 }];
+        let app = AppTraffic {
+            tx_bytes: vec![200_000, 0, 0],
+            rx_bytes: vec![0, 200_000, 0],
+            compute_s: 1.0,
+        };
+        let out = sim.simulate(3, &flows, Some(&app));
+        assert!(rel_close(out.blocking_s + out.overlapped_s, out.total_s, 1e-12));
+        // the 1 s compute window dwarfs the ~0.7 ms of traffic: the whole
+        // transfer hides, and only the exit barrier (a sync point) blocks
+        assert!(rel_close(out.overlapped_s, out.transfer_s, 1e-12));
+        assert!(rel_close(out.blocking_s, sim.cfg.barrier_latency_s, 1e-9));
+        // app priority: flows start only after the app bytes drain
+        let solo = sim.simulate(3, &flows, None);
+        assert!(out.total_s > solo.total_s);
+
+        // a tiny window leaves a blocking tail
+        let tight = AppTraffic { tx_bytes: vec![0; 3], rx_bytes: vec![0; 3], compute_s: 1e-5 };
+        let tail = sim.simulate(3, &flows, Some(&tight));
+        assert!(tail.blocking_s > 0.0 && tail.overlapped_s > 0.0);
+        assert!(rel_close(tail.overlapped_s, 1e-5, 1e-9));
+    }
+
+    /// Out-of-range worker ids in flows grow the cluster instead of
+    /// panicking (the hardening the closed form also gained).
+    #[test]
+    fn flows_beyond_k_grow_the_cluster() {
+        let sim = NetSim::new(NetSimConfig::gbps(8.0));
+        let out = sim.simulate(2, &[Flow { src: 0, dst: 7, bytes: 1000 }], None);
+        assert!(out.total_s > 0.0);
+    }
+
+    /// The redistribution ring: one flow per NIC, so the makespan is the
+    /// per-worker chunk serialization exactly — and the split loses no
+    /// bytes to integer truncation, divisible or not.
+    #[test]
+    fn redistribution_ring_is_a_matching_and_splits_exactly() {
+        let flows = NetSim::redistribution_flows(6, 6_000_000);
+        assert_eq!(flows.len(), 6);
+        assert!(flows.iter().all(|f| f.bytes == 1_000_000));
+        let sim = NetSim::new(NetSimConfig::gbps(8.0));
+        let out = sim.simulate(6, &flows, None);
+        assert!(rel_close(out.transfer_s, 1_000_000.0 * 8.0 / 8e9, 1e-9));
+        assert!(NetSim::redistribution_flows(1, 1_000_000).is_empty());
+        // non-divisible volume: per-flow shares differ by ≤ 1 byte and
+        // reassemble the total exactly (160 = 10 edges · 16 B on k=3,
+        // which the old truncating per-worker arithmetic priced as 144)
+        let odd = NetSim::redistribution_flows(3, 160);
+        assert_eq!(odd.iter().map(|f| f.bytes).sum::<u64>(), 160);
+        assert!(odd.iter().all(|f| f.bytes == 53 || f.bytes == 54));
+    }
+
+    /// Aggregation folds a fragmented plan (many moves, one pair) into a
+    /// single flow.
+    #[test]
+    fn flows_of_plan_aggregates_pairs() {
+        let mut plan = MigrationPlan::default();
+        plan.push_range(0, 1, 0..10);
+        plan.push_range(2, 1, 10..20);
+        plan.push_range(0, 1, 30..40);
+        let flows = NetSim::flows_of_plan(&plan, 0);
+        assert_eq!(
+            flows,
+            vec![Flow { src: 0, dst: 1, bytes: 160 }, Flow { src: 2, dst: 1, bytes: 80 }]
+        );
+    }
+
+    #[test]
+    fn network_model_parses_cli_spellings() {
+        assert_eq!(NetworkModel::parse("closed"), Some(NetworkModel::ClosedForm));
+        assert_eq!(NetworkModel::parse("closed-form"), Some(NetworkModel::ClosedForm));
+        assert_eq!(NetworkModel::parse("emulated"), Some(NetworkModel::Emulated));
+        assert_eq!(NetworkModel::parse("nope"), None);
+        assert_eq!(NetworkModel::Emulated.name(), "emulated");
+    }
+}

@@ -28,17 +28,36 @@ impl Network {
 
     /// Wall-clock seconds for one shuffle phase given per-worker sent and
     /// received byte volumes (NIC-bound: the max over workers and
-    /// directions governs).
+    /// directions governs). A shuffle that moves nothing is a no-op and
+    /// prices to 0.0 — no barrier is charged, so skipped rescale events
+    /// cannot skew Fig 14 rows.
     pub fn shuffle_time(&self, sent: &[u64], recv: &[u64]) -> f64 {
         let max_bytes = sent.iter().chain(recv.iter()).copied().max().unwrap_or(0);
+        if max_bytes == 0 {
+            return 0.0;
+        }
         (max_bytes as f64 * 8.0) / self.bandwidth_bps + self.barrier_latency_s
     }
 
-    /// Price a migration plan executed as a single shuffle (CEP, 1D).
+    /// Price a migration plan executed as a single shuffle (CEP, 1D). An
+    /// empty plan prices to 0.0. The per-worker volumes are sized from
+    /// `max(k, highest partition id named by the plan + 1)`, so callers
+    /// passing the *old* `k` of a scale-out plan get correct pricing
+    /// instead of an index panic. Degenerate moves (`src == dst`, empty
+    /// ranges) carry no traffic — the same filter
+    /// [`crate::scaling::netsim::NetSim::flows_of_plan`] applies, so the
+    /// two models stay byte-aligned on any plan.
     pub fn migration_time(&self, plan: &MigrationPlan, k: usize, value_bytes: u64) -> f64 {
-        let mut sent = vec![0u64; k];
-        let mut recv = vec![0u64; k];
+        let kk = plan
+            .moves
+            .iter()
+            .fold(k, |kk, t| kk.max(t.src as usize + 1).max(t.dst as usize + 1));
+        let mut sent = vec![0u64; kk];
+        let mut recv = vec![0u64; kk];
         for t in &plan.moves {
+            if t.src == t.dst || t.is_empty() {
+                continue;
+            }
             let b = t.len() * (8 + value_bytes);
             sent[t.src as usize] += b;
             recv[t.dst as usize] += b;
@@ -48,6 +67,10 @@ impl Network {
 
     /// Price a BVC migration: ring shuffle + `refine_rounds` barrier-
     /// synchronized refinement shuffles (refined bytes spread over rounds).
+    /// The per-round volume is computed in `f64`, so the total priced
+    /// refinement bytes equal `refine_migrated * (8 + value_bytes)`
+    /// exactly — integer division used to truncate up to `rounds − 1`
+    /// bytes per round.
     pub fn bvc_migration_time(
         &self,
         ring_plan: &MigrationPlan,
@@ -57,14 +80,14 @@ impl Network {
         value_bytes: u64,
     ) -> f64 {
         let mut t = self.migration_time(ring_plan, k, value_bytes);
-        if refine_rounds > 0 {
-            let per_round_bytes = refine_migrated * (8 + value_bytes) / refine_rounds as u64;
-            for _ in 0..refine_rounds {
-                // refinement rounds are pairwise sends: NIC-bound on the
-                // single largest donor, approximated by the round volume
-                t += per_round_bytes as f64 * 8.0 / self.bandwidth_bps
-                    + self.barrier_latency_s;
-            }
+        if refine_rounds > 0 && refine_migrated > 0 {
+            // refinement rounds are pairwise sends: NIC-bound on the
+            // single largest donor, approximated by the round volume;
+            // summed over rounds the transfer term telescopes to the
+            // exact total volume, plus one barrier per round
+            let total_bits = refine_migrated as f64 * (8 + value_bytes) as f64 * 8.0;
+            t += total_bits / self.bandwidth_bps
+                + refine_rounds as f64 * self.barrier_latency_s;
         }
         t
     }
@@ -120,11 +143,58 @@ mod tests {
         assert!(many > none + 19.0 * net.barrier_latency_s);
     }
 
+    /// Regression: a no-op rescale must price to 0.0 — previously both
+    /// `migration_time` and `shuffle_time` charged a barrier for plans
+    /// that move nothing.
     #[test]
-    fn empty_plan_costs_one_barrier() {
+    fn empty_plan_prices_to_zero() {
         let net = Network::gbps(1.0);
         let plan = MigrationPlan::default();
-        let t = net.migration_time(&plan, 4, 8);
-        assert!((t - net.barrier_latency_s).abs() < 1e-12);
+        assert_eq!(net.migration_time(&plan, 4, 8), 0.0);
+        assert_eq!(net.shuffle_time(&[], &[]), 0.0);
+        assert_eq!(net.shuffle_time(&[0, 0, 0], &[0, 0]), 0.0);
+        // zero refinement volume adds nothing either, whatever the rounds
+        assert_eq!(net.bvc_migration_time(&plan, 0, 20, 4, 8), 0.0);
+        // while any real volume still pays the barrier
+        let mut real = MigrationPlan::default();
+        real.push_range(0, 1, 0..10);
+        assert!(net.migration_time(&real, 4, 8) > net.barrier_latency_s);
+    }
+
+    /// Regression: the per-round refinement volume is computed in `f64`,
+    /// so the priced transfer equals the exact byte total even when the
+    /// volume does not divide by the round count (integer division used
+    /// to drop up to `rounds − 1` bytes per round).
+    #[test]
+    fn bvc_refinement_prices_exact_bytes_on_non_divisible_volume() {
+        let net = Network::gbps(8.0);
+        let plan = MigrationPlan::default();
+        let (migrated, rounds, value_bytes) = (10_001u64, 7u32, 3u64);
+        let t = net.bvc_migration_time(&plan, migrated, rounds, 4, value_bytes);
+        let exact_transfer =
+            migrated as f64 * (8 + value_bytes) as f64 * 8.0 / net.bandwidth_bps;
+        let expect = exact_transfer + rounds as f64 * net.barrier_latency_s;
+        assert!(
+            (t - expect).abs() <= 1e-12 * expect,
+            "priced {t}, exact {expect}"
+        );
+        // the old truncating arithmetic would have lost 10_001*11 % 7 != 0
+        assert_ne!(migrated * (8 + value_bytes) % rounds as u64, 0);
+    }
+
+    /// Regression: plans that name partitions beyond the caller's `k`
+    /// (a scale-out plan priced with `old.k()`) must size the per-worker
+    /// volumes from the plan itself instead of panicking.
+    #[test]
+    fn migration_time_tolerates_out_of_range_partition_ids() {
+        let net = Network::gbps(8.0);
+        let old = Cep::new(10_000, 4);
+        let new = old.rescaled(6);
+        let plan = MigrationPlan::between_ceps(&old, &new);
+        // old.k() = 4, but the plan moves edges into partitions 4 and 5
+        let with_old_k = net.migration_time(&plan, old.k(), 8);
+        let with_new_k = net.migration_time(&plan, new.k(), 8);
+        assert!(with_old_k > 0.0);
+        assert_eq!(with_old_k, with_new_k, "sizing must come from the plan");
     }
 }

@@ -152,6 +152,70 @@ fn staged_ingest_is_thread_invariant() {
     }
 }
 
+/// Emulated network pricing through both controller paths is
+/// bit-identical at widths 1/2/8: the emulator consumes only the plan,
+/// the config, the layout's modeled compute window and the comm meter's
+/// integer lanes — never wall clock, RNG or thread scheduling.
+#[test]
+fn emulated_net_pricing_is_thread_invariant() {
+    use egs::coordinator::{run_scenario, run_streaming, ControllerConfig, StreamingConfig};
+    use egs::scaling::netsim::NetModelConfig;
+    use egs::scaling::scenario::Scenario;
+
+    let raw = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() }, 4);
+    let g = egs::ordering::geo::order(&raw, &geo_cfg(1)).apply(&raw);
+
+    // batch controller (`run`)
+    let scenario = Scenario::scale_out(3, 2, 3);
+    let run = |w: usize| -> Vec<u64> {
+        let mut mc = NetModelConfig::emulated();
+        mc.barrier_skew_s = 2e-4;
+        let cfg = ControllerConfig {
+            net_model: mc,
+            threads: ThreadConfig::new(w),
+            ..Default::default()
+        };
+        let out =
+            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        out.events
+            .iter()
+            .flat_map(|e| {
+                [e.net_blocking_ms.to_bits(), e.net_overlapped_ms.to_bits(), e.migrated_edges]
+            })
+            .collect()
+    };
+    let reference = run(1);
+    assert!(!reference.is_empty());
+    for w in WIDTHS {
+        assert_eq!(run(w), reference, "run width {w}: emulated pricing diverges");
+    }
+
+    // streaming controller (`run_streaming`)
+    let srun = |w: usize| -> Vec<u64> {
+        let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
+        let cfg = StreamingConfig {
+            geo: geo_cfg(w),
+            net_model: NetModelConfig::emulated(),
+            threads: ThreadConfig::new(w),
+            ..Default::default()
+        };
+        let out = run_streaming(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+            .unwrap();
+        out.events
+            .iter()
+            .flat_map(|e| [e.net_blocking_ms.to_bits(), e.net_overlapped_ms.to_bits()])
+            .chain(out.churn_events.iter().flat_map(|c| {
+                [c.net_blocking_ms.to_bits(), c.net_overlapped_ms.to_bits(), c.moved]
+            }))
+            .collect()
+    };
+    let sreference = srun(1);
+    assert!(!sreference.is_empty());
+    for w in WIDTHS {
+        assert_eq!(srun(w), sreference, "streaming width {w}: emulated pricing diverges");
+    }
+}
+
 /// Engine vertex state after a run + churn + rescale + run sequence is
 /// bit-identical at every width (f32 bit patterns compared), and the
 /// interval-set ownership metadata of the layout (per-partition range
