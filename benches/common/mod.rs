@@ -16,10 +16,13 @@
 //!   ([`BenchLog::row_layout`]; `null` for benches without a layout).
 //!   `net_model`/`net_ms` report which network-cost model priced the
 //!   scenario and the priced network milliseconds ([`BenchLog::row_net`];
-//!   `null` for rows without network pricing). All benches share this
-//!   schema; CI points every bench at the same `BENCH_ci.json` and diffs
-//!   it against the committed `BENCH_baseline.json` (>2× wall-time
-//!   regressions fail the build).
+//!   `null` for rows without network pricing). `imbalance`/`rebalance_ms`
+//!   report the metered max/mean per-partition cost imbalance after the
+//!   run and the cost of skew-aware boundary rebalancing
+//!   ([`BenchLog::row_rebalance`]; `null` for benches without the
+//!   policy). All benches share this schema; CI points every bench at the
+//!   same `BENCH_ci.json` and diffs it against the committed
+//!   `BENCH_baseline.json` (>2× wall-time regressions fail the build).
 #![allow(dead_code)] // each bench uses a subset of the harness
 
 use egs::graph::generators::{lattice2d, rmat, RmatParams};
@@ -72,6 +75,8 @@ struct Row {
     rf: Option<f64>,
     layout: Option<(u64, u64)>,
     net: Option<(&'static str, f64)>,
+    imbalance: Option<f64>,
+    rebalance_ms: Option<f64>,
 }
 
 /// Row collector for one bench binary. Call [`BenchLog::row`] (or
@@ -99,6 +104,8 @@ impl BenchLog {
             rf,
             layout: None,
             net: None,
+            imbalance: None,
+            rebalance_ms: None,
         });
     }
 
@@ -119,6 +126,8 @@ impl BenchLog {
             rf,
             layout: Some((layout_ranges, layout_bytes)),
             net: None,
+            imbalance: None,
+            rebalance_ms: None,
         });
     }
 
@@ -139,6 +148,8 @@ impl BenchLog {
             rf,
             layout: None,
             net: Some((net_model, net_ms)),
+            imbalance: None,
+            rebalance_ms: None,
         });
     }
 
@@ -161,6 +172,37 @@ impl BenchLog {
             rf,
             layout: Some((layout_ranges, layout_bytes)),
             net: Some((net_model, net_ms)),
+            imbalance: None,
+            rebalance_ms: None,
+        });
+    }
+
+    /// Full telemetry for skew-aware rebalancing benches: layout and
+    /// network columns plus the metered max/mean cost imbalance after the
+    /// run and the total rebalance milliseconds (solver + migration wall
+    /// + blocking net; 0.0 when the policy never fired, `None` when it
+    /// was off).
+    #[allow(clippy::too_many_arguments)]
+    pub fn row_rebalance(
+        &mut self,
+        scenario: &str,
+        wall_ms: f64,
+        rf: Option<f64>,
+        layout_ranges: u64,
+        layout_bytes: u64,
+        net_model: &'static str,
+        net_ms: f64,
+        imbalance: f64,
+        rebalance_ms: Option<f64>,
+    ) {
+        self.rows.push(Row {
+            scenario: scenario.to_string(),
+            wall_ms,
+            rf,
+            layout: Some((layout_ranges, layout_bytes)),
+            net: Some((net_model, net_ms)),
+            imbalance: Some(imbalance),
+            rebalance_ms,
         });
     }
 
@@ -188,12 +230,30 @@ impl BenchLog {
                 Some((m, ms)) => (format!("\"{m}\""), format!("{ms:.3}")),
                 None => ("null".into(), "null".into()),
             };
+            let imb_s = match row.imbalance {
+                Some(x) => format!("{x:.4}"),
+                None => "null".into(),
+            };
+            let reb_s = match row.rebalance_ms {
+                Some(x) => format!("{x:.3}"),
+                None => "null".into(),
+            };
             writeln!(
                 fh,
                 "{{\"bench\":\"{}\",\"scenario\":\"{}\",\"wall_ms\":{:.3},\"rf\":{},\
                  \"layout_ranges\":{},\"layout_bytes\":{},\
-                 \"net_model\":{},\"net_ms\":{}}}",
-                self.bench, row.scenario, row.wall_ms, rf_s, ranges_s, bytes_s, model_s, net_ms_s
+                 \"net_model\":{},\"net_ms\":{},\
+                 \"imbalance\":{},\"rebalance_ms\":{}}}",
+                self.bench,
+                row.scenario,
+                row.wall_ms,
+                rf_s,
+                ranges_s,
+                bytes_s,
+                model_s,
+                net_ms_s,
+                imb_s,
+                reb_s
             )
             .expect("write bench row");
         }

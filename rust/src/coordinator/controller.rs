@@ -24,17 +24,100 @@ use crate::ordering::geo::GeoConfig;
 use crate::par::ThreadConfig;
 use crate::partition::bvc::BvcState;
 use crate::partition::cep::Cep;
-use crate::partition::{ginger, hash1d, oblivious, CepView, EdgePartition, PartitionAssignment};
+use crate::partition::weighted::{balanced_boundaries, imbalance, predicted_costs, uniform_bounds};
+use crate::partition::{
+    ginger, hash1d, oblivious, CepView, EdgePartition, PartitionAssignment, WeightedCepView,
+};
 use crate::runtime::{ComputeBackend, StepKind};
 use crate::scaling::migration::MigrationPlan;
 use crate::scaling::netsim::{self, NetModelConfig, NetSim};
 use crate::scaling::network::Network;
 use crate::scaling::scenario::Scenario;
-use crate::stream::{quality as stream_quality, CompactionPolicy, MutationBatch, StagedGraph};
+use crate::stream::{
+    quality as stream_quality, ChurnPlan, CompactionPolicy, MutationBatch, StagedGraph,
+};
 use crate::util::rng::Rng;
 use crate::Result;
 use anyhow::bail;
 use std::time::Instant;
+
+/// When the coordinator nudges chunk boundaries toward the metered
+/// per-partition cost profile (CLI: `--rebalance`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RebalanceMode {
+    /// never rebalance — boundaries stay the method's own (the default)
+    Off,
+    /// between supersteps, whenever the metered max/mean cost imbalance
+    /// exceeds [`RebalanceConfig::threshold`], re-solve the chunk
+    /// boundaries against the metered profile and execute the O(k)
+    /// boundary-shift plan
+    Threshold,
+}
+
+/// Skew-aware rebalancing policy: watches the engine's metered
+/// per-partition costs ([`Engine::partition_costs`]) and, past the
+/// trigger, nudges the weighted chunk boundaries
+/// ([`crate::partition::weighted::balanced_boundaries`]) with a
+/// ≤ 2(k−1)-move interval-splice plan. Only chunk-contiguous assignments
+/// (the CEP paths) can be nudged; scattered methods ignore the policy.
+#[derive(Clone, Copy, Debug)]
+pub struct RebalanceConfig {
+    /// the policy
+    pub mode: RebalanceMode,
+    /// max/mean metered cost imbalance that triggers a boundary nudge in
+    /// [`RebalanceMode::Threshold`] (1.0 = perfectly balanced)
+    pub threshold: f64,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig { mode: RebalanceMode::Off, threshold: 1.15 }
+    }
+}
+
+impl RebalanceConfig {
+    /// Rebalancing disabled (the default).
+    pub fn off() -> RebalanceConfig {
+        RebalanceConfig::default()
+    }
+
+    /// Threshold policy with the given max/mean trigger.
+    pub fn threshold(threshold: f64) -> RebalanceConfig {
+        assert!(threshold >= 1.0, "imbalance threshold below 1.0 can never be satisfied");
+        RebalanceConfig { mode: RebalanceMode::Threshold, threshold }
+    }
+
+    /// Is the threshold policy active?
+    pub fn is_threshold(&self) -> bool {
+        self.mode == RebalanceMode::Threshold
+    }
+}
+
+/// Audit record of one executed boundary rebalance.
+#[derive(Clone, Copy, Debug)]
+pub struct RebalanceRecord {
+    /// iteration whose superstep metering triggered the nudge
+    pub at_iteration: u32,
+    /// partition count at the time of the nudge
+    pub k: usize,
+    /// metered max/mean cost imbalance that tripped the threshold
+    pub imbalance_before: f64,
+    /// solver-modeled imbalance of the installed boundaries (predicted
+    /// from the metered per-chunk cost profile, re-measured by the next
+    /// superstep)
+    pub imbalance_after: f64,
+    /// edges the boundary-shift plan migrated
+    pub moved_edges: u64,
+    /// contiguous range moves executed — ≤ 2(k−1) by construction
+    pub range_moves: usize,
+    /// ownership intervals resident in the layout after the nudge
+    pub layout_ranges: usize,
+    /// rebalance network milliseconds the application stalled for
+    pub net_blocking_ms: f64,
+    /// rebalance network milliseconds hidden behind the app's superstep
+    /// window (emulated overlap mode; 0 under the closed form)
+    pub net_overlapped_ms: f64,
+}
 
 /// Controller configuration.
 pub struct ControllerConfig {
@@ -56,6 +139,8 @@ pub struct ControllerConfig {
     /// executor width for engine supersteps (pure execution knob —
     /// results identical at any value; defaults to `PALLAS_THREADS`)
     pub threads: ThreadConfig,
+    /// skew-aware boundary rebalancing policy (CLI: `--rebalance`)
+    pub rebalance: RebalanceConfig,
 }
 
 impl Default for ControllerConfig {
@@ -68,6 +153,7 @@ impl Default for ControllerConfig {
             latency: LatencyModel::default(),
             seed: 42,
             threads: ThreadConfig::default(),
+            rebalance: RebalanceConfig::default(),
         }
     }
 }
@@ -104,7 +190,7 @@ pub struct EventRecord {
 pub struct RunBreakdown {
     /// method name
     pub method: String,
-    /// total = init + app + scale
+    /// total = init + app + scale + rebalance
     pub all_s: f64,
     /// initialization: initial partitioning + engine build
     pub init_s: f64,
@@ -127,8 +213,16 @@ pub struct RunBreakdown {
     pub layout_ranges: usize,
     /// resident bytes of the final layout's ownership metadata
     pub layout_bytes: usize,
+    /// skew-aware rebalancing: solver + migration wall plus blocking
+    /// network seconds across all boundary nudges (0 when the policy is
+    /// [`RebalanceMode::Off`])
+    pub rebalance_s: f64,
+    /// metered max/mean cost imbalance after the final superstep
+    pub final_imbalance: f64,
     /// per-event audit log of the executed plans
     pub events: Vec<EventRecord>,
+    /// per-nudge audit log of the rebalance policy
+    pub rebalances: Vec<RebalanceRecord>,
 }
 
 enum MethodState {
@@ -138,9 +232,11 @@ enum MethodState {
 }
 
 /// The assignment the engine currently runs on: chunk metadata for CEP
-/// (O(1), zero materialization) or an explicit vector for everything else.
+/// (O(1), zero materialization), weighted boundaries once the rebalancer
+/// has nudged a CEP run, or an explicit vector for everything else.
 enum ActiveAssignment {
     Chunked(CepView),
+    Weighted(WeightedCepView),
     Materialized(EdgePartition),
 }
 
@@ -148,7 +244,19 @@ impl ActiveAssignment {
     fn as_assignment(&self) -> &dyn PartitionAssignment {
         match self {
             ActiveAssignment::Chunked(v) => v,
+            ActiveAssignment::Weighted(v) => v,
             ActiveAssignment::Materialized(p) => p,
+        }
+    }
+
+    /// Boundary array of a chunk-contiguous assignment — `None` for
+    /// materialized per-edge methods, which the boundary solver cannot
+    /// nudge.
+    fn chunk_bounds(&self) -> Option<Vec<u64>> {
+        match self {
+            ActiveAssignment::Chunked(v) => Some(v.cep().boundaries()),
+            ActiveAssignment::Weighted(v) => Some(v.bounds().to_vec()),
+            ActiveAssignment::Materialized(_) => None,
         }
     }
 }
@@ -201,8 +309,14 @@ where
     let mut app_s = 0.0f64;
     let mut scale_s = 0.0f64;
     let mut net_s = 0.0f64;
+    let mut rebalance_s = 0.0f64;
     let mut com_bytes = 0u64;
     let mut event_log: Vec<EventRecord> = Vec::new();
+    let mut rebalance_log: Vec<RebalanceRecord> = Vec::new();
+    // each superstep window may hide at most one priced transfer behind
+    // it; a rebalance at the end of iteration `it` spends the window the
+    // scale event of iteration `it+1` would otherwise claim
+    let mut window_free = true;
 
     for it in 0..scenario.total_iterations {
         // ---- SCALE event? Derive a plan, price it, execute it.
@@ -217,7 +331,7 @@ where
             // flows share NICs with the *last* superstep's metered
             // scatter/gather traffic (still in the comm lanes — the meter
             // resets at the top of every APP phase)
-            let app = app_snapshot(&engine, &cfg.net_model);
+            let app = if window_free { app_snapshot(&engine, &cfg.net_model) } else { None };
             let mut cost = netsim::price_plan(
                 &cfg.net,
                 &cfg.net_model,
@@ -268,15 +382,69 @@ where
         }
         com_bytes += engine.comm.total_bytes();
         app_s += t_app.elapsed().as_secs_f64();
+        window_free = true; // fresh superstep window metered in the lanes
+
+        // ---- REBALANCE: past the threshold, nudge the chunk boundaries
+        // toward the superstep's metered cost profile (CEP paths only —
+        // scattered methods have no boundaries to move)
+        if cfg.rebalance.is_threshold() {
+            if let Some(old_bounds) = assignment.chunk_bounds() {
+                let costs = engine
+                    .partition_costs(cfg.net_model.compute_ns_per_edge, cfg.net.bandwidth_bps);
+                let imb_before = imbalance(&costs);
+                if imb_before > cfg.rebalance.threshold {
+                    let t_reb = Instant::now();
+                    let new_bounds = balanced_boundaries(&old_bounds, &costs);
+                    let plan = MigrationPlan::between_boundaries(&old_bounds, &new_bounds);
+                    if plan.num_moves() > 0 {
+                        let imb_after =
+                            imbalance(&predicted_costs(&old_bounds, &costs, &new_bounds));
+                        // the shift may hide behind the window it was
+                        // metered from — the same overlap rule as rescales
+                        let app = app_snapshot(&engine, &cfg.net_model);
+                        if app.is_some() {
+                            window_free = false;
+                        }
+                        let cost = netsim::price_plan(
+                            &cfg.net,
+                            &cfg.net_model,
+                            &plan,
+                            cluster.k,
+                            cfg.value_bytes,
+                            app.as_ref(),
+                        );
+                        let view = WeightedCepView::from_bounds(new_bounds);
+                        engine.apply_migration(g, &plan, &view, &mut backend_for)?;
+                        rebalance_log.push(RebalanceRecord {
+                            at_iteration: it,
+                            k: cluster.k,
+                            imbalance_before: imb_before,
+                            imbalance_after: imb_after,
+                            moved_edges: plan.migrated_edges(),
+                            range_moves: plan.num_moves(),
+                            layout_ranges: engine.layout().total_ranges(),
+                            net_blocking_ms: cost.blocking_s * 1e3,
+                            net_overlapped_ms: cost.overlapped_s * 1e3,
+                        });
+                        assignment = ActiveAssignment::Weighted(view);
+                        rebalance_s += t_reb.elapsed().as_secs_f64() + cost.blocking_s;
+                        net_s += cost.total_s;
+                    }
+                }
+            }
+        }
     }
 
+    let final_imbalance = imbalance(
+        &engine.partition_costs(cfg.net_model.compute_ns_per_edge, cfg.net.bandwidth_bps),
+    );
     // stateless methods pay their full partitioning cost inside INIT too
     if init_s == 0.0 {
         init_s = f64::MIN_POSITIVE;
     }
     Ok(RunBreakdown {
         method: cfg.method.clone(),
-        all_s: init_s + app_s + scale_s,
+        all_s: init_s + app_s + scale_s + rebalance_s,
         init_s,
         app_s,
         scale_s,
@@ -286,7 +454,10 @@ where
         final_k: cluster.k,
         layout_ranges: engine.layout().total_ranges(),
         layout_bytes: engine.layout().metadata_bytes(),
+        rebalance_s,
+        final_imbalance,
         events: event_log,
+        rebalances: rebalance_log,
     })
 }
 
@@ -309,7 +480,8 @@ fn initial_assignment(
 
 /// Advance the method state to `target_k` and derive the executable plan
 /// plus the new active assignment. For CEP this is O(k + k') chunk
-/// metadata; BVC and the stateless methods diff per edge.
+/// metadata (a rescale resets any skew-nudged boundaries to the uniform
+/// grid of the new k); BVC and the stateless methods diff per edge.
 fn plan_rescale(
     g: &Graph,
     state: &mut MethodState,
@@ -321,10 +493,15 @@ fn plan_rescale(
         MethodState::Cep(c) => {
             let old = *c;
             *c = c.rescaled(target_k);
-            (
-                MigrationPlan::between_ceps(&old, c),
-                ActiveAssignment::Chunked(CepView::new(*c)),
-            )
+            let plan = match current {
+                // skew-nudged boundaries → the uniform target grid, still
+                // O(k + k') contiguous moves
+                ActiveAssignment::Weighted(v) => {
+                    MigrationPlan::between_boundaries(v.bounds(), &c.boundaries())
+                }
+                _ => MigrationPlan::between_ceps(&old, c),
+            };
+            (plan, ActiveAssignment::Chunked(CepView::new(*c)))
         }
         MethodState::Bvc(b) => {
             let before = b.to_partition();
@@ -384,6 +561,10 @@ pub struct StreamingConfig {
     /// executor width for engine supersteps (ingest-side parallelism
     /// follows `geo.threads`); pure execution knob — results identical
     pub threads: ThreadConfig,
+    /// skew-aware boundary rebalancing policy (CLI: `--rebalance`); when
+    /// active the streaming assignment carries weighted chunk boundaries
+    /// over the staged physical id space
+    pub rebalance: RebalanceConfig,
 }
 
 impl Default for StreamingConfig {
@@ -400,6 +581,7 @@ impl Default for StreamingConfig {
             audit_rf: false,
             measure_fresh_baseline: false,
             threads: ThreadConfig::default(),
+            rebalance: RebalanceConfig::default(),
         }
     }
 }
@@ -450,7 +632,7 @@ pub struct ChurnRecord {
 pub struct StreamingBreakdown {
     /// scenario name
     pub name: String,
-    /// total = init + app + scale + churn
+    /// total = init + app + scale + churn + rebalance
     pub all_s: f64,
     /// initial GEO ordering + engine build
     pub init_s: f64,
@@ -480,10 +662,20 @@ pub struct StreamingBreakdown {
     pub compactions: u32,
     /// live edges at the end of the run
     pub live_edges: usize,
+    /// skew-aware rebalancing: solver + migration wall plus blocking
+    /// network seconds across all boundary nudges (0 when the policy is
+    /// [`RebalanceMode::Off`])
+    pub rebalance_s: f64,
+    /// metered max/mean cost imbalance after the final superstep (before
+    /// any end-of-run flush, which rebuilds the engine and clears the
+    /// comm lanes)
+    pub final_imbalance: f64,
     /// per-rescale audit log
     pub events: Vec<EventRecord>,
     /// per-batch audit log
     pub churn_events: Vec<ChurnRecord>,
+    /// per-nudge audit log of the rebalance policy
+    pub rebalances: Vec<RebalanceRecord>,
 }
 
 /// Run PageRank over an evolving graph: churn batches and rescales fire
@@ -534,33 +726,49 @@ where
     let mut scale_s = 0.0f64;
     let mut churn_s = 0.0f64;
     let mut net_s = 0.0f64;
+    let mut rebalance_s = 0.0f64;
     let mut com_bytes = 0u64;
     let mut event_log: Vec<EventRecord> = Vec::new();
     let mut churn_log: Vec<ChurnRecord> = Vec::new();
+    let mut rebalance_log: Vec<RebalanceRecord> = Vec::new();
+    // weighted chunk boundaries over the staged physical id space — only
+    // carried when the rebalance policy is active; `None` keeps the
+    // uniform-CEP streaming path bit-identical to the policy-off build
+    let mut wbounds: Option<Vec<u64>> = if cfg.rebalance.is_threshold() {
+        Some(uniform_bounds(sg.physical_edges() as u64, k))
+    } else {
+        None
+    };
+    // one superstep window per priced transfer: when several events fire
+    // around the same APP phase (churn, rescale, rebalance), only the
+    // first may hide its flows behind the window — the rest price
+    // standalone, else the window's NIC capacity would be spent twice and
+    // blocking time understated
+    let mut window_free = true;
 
     for it in 0..scenario.total_iterations {
-        // one superstep window per iteration: when a churn batch AND a
-        // scale event fire before the same APP phase, only the first
-        // priced event may hide its transfers behind the (single) app
-        // window — the second prices standalone, else the window's NIC
-        // capacity would be spent twice and blocking time understated
-        let mut window_free = true;
-
         // ---- CHURN batch? Ingest, derive the delta plan, apply or fold.
         if let Some(ce) = scenario.churn_at(it) {
             let t = Instant::now();
             let batch = random_batch(&mut rng, &sg, ce.inserts, ce.deletes);
-            let (outcome, plan) = sg.apply_batch(&batch, k);
+            let (outcome, plan) = match wbounds.as_mut() {
+                Some(b) => sg.apply_batch_weighted(&batch, b),
+                None => sg.apply_batch(&batch, k),
+            };
             let compacted = sg.needs_compaction();
             let (cost, moved, range_ops) = if compacted {
                 // the delta plan is discarded: the budget tripped, the
                 // whole live graph folds through GEO and every worker
                 // reloads its (new) chunk — price the full redistribution
                 // as a ring of per-worker chunk loads; a full rebuild is a
-                // sync point, so it never overlaps the app
+                // sync point, so it never overlaps the app. Any nudged
+                // boundaries reset to the uniform grid of the new id space
                 sg.compact();
                 let assign = sg.assignment(k);
                 engine = Engine::new(&sg, &assign, &mut backend_for)?.with_threads(cfg.threads);
+                if let Some(b) = wbounds.as_mut() {
+                    *b = uniform_bounds(sg.physical_edges() as u64, k);
+                }
                 let live = sg.live_edges() as u64;
                 let flows = NetSim::redistribution_flows(k, live * (8 + cfg.value_bytes));
                 (netsim::price_flows(&cfg.net, &cfg.net_model, &flows, k), live, k)
@@ -581,16 +789,34 @@ where
                     cfg.value_bytes,
                     app.as_ref(),
                 );
-                let assign = sg.assignment(k);
-                engine.apply_churn(&sg, &plan, &assign, &mut backend_for)?;
+                match wbounds.as_ref() {
+                    Some(b) => {
+                        let view = WeightedCepView::from_bounds(b.clone());
+                        let assign = sg.weighted_assignment(&view);
+                        engine.apply_churn(&sg, &plan, &assign, &mut backend_for)?;
+                    }
+                    None => {
+                        let assign = sg.assignment(k);
+                        engine.apply_churn(&sg, &plan, &assign, &mut backend_for)?;
+                    }
+                }
                 (cost, plan.moved_edges(), plan.range_ops())
             };
             grow_state(&sg, &mut n, &mut ranks, &mut aux, &mut active);
             churn_s += t.elapsed().as_secs_f64() + cost.blocking_s;
             net_s += cost.total_s;
             let rf = if cfg.audit_rf {
-                let assign = sg.assignment(k);
-                stream_quality::live_replication_factor(&sg, &assign)
+                match wbounds.as_ref() {
+                    Some(b) => {
+                        let view = WeightedCepView::from_bounds(b.clone());
+                        let assign = sg.weighted_assignment(&view);
+                        stream_quality::live_replication_factor(&sg, &assign)
+                    }
+                    None => {
+                        let assign = sg.assignment(k);
+                        stream_quality::live_replication_factor(&sg, &assign)
+                    }
+                }
             } else {
                 f64::NAN
             };
@@ -616,7 +842,19 @@ where
         if let Some(ev) = scenario.event_at(it) {
             let from_k = k;
             let t_scale = Instant::now();
-            let plan = sg.rescale_plan(k, ev.target_k);
+            let plan = match wbounds.as_mut() {
+                // nudged boundaries → the uniform grid of the new k (the
+                // same reset-on-rescale rule as the non-streaming path)
+                Some(b) => {
+                    let old = WeightedCepView::from_bounds(b.clone());
+                    let target =
+                        WeightedCepView::uniform(Cep::new(sg.physical_edges(), ev.target_k));
+                    let plan = ChurnPlan::derive_weighted(&old, &target, &[]);
+                    *b = target.bounds().to_vec();
+                    plan
+                }
+                None => sg.rescale_plan(k, ev.target_k),
+            };
             let migrated = plan.moved_edges();
             // last window consumer of the iteration — no need to mark it
             let app = if window_free { app_snapshot(&engine, &cfg.net_model) } else { None };
@@ -660,7 +898,61 @@ where
         }
         com_bytes += engine.comm.total_bytes();
         app_s += t_app.elapsed().as_secs_f64();
+        window_free = true; // fresh superstep window metered in the lanes
+
+        // ---- REBALANCE: past the threshold, nudge the weighted chunk
+        // boundaries toward the superstep's metered cost profile
+        if let Some(b) = wbounds.as_mut() {
+            let costs =
+                engine.partition_costs(cfg.net_model.compute_ns_per_edge, cfg.net.bandwidth_bps);
+            let imb_before = imbalance(&costs);
+            if imb_before > cfg.rebalance.threshold {
+                let t_reb = Instant::now();
+                let new_bounds = balanced_boundaries(b, &costs);
+                let plan = MigrationPlan::between_boundaries(b, &new_bounds);
+                if plan.num_moves() > 0 {
+                    let imb_after = imbalance(&predicted_costs(b, &costs, &new_bounds));
+                    let app = app_snapshot(&engine, &cfg.net_model);
+                    if app.is_some() {
+                        window_free = false;
+                    }
+                    let cost = netsim::price_plan(
+                        &cfg.net,
+                        &cfg.net_model,
+                        &plan,
+                        k,
+                        cfg.value_bytes,
+                        app.as_ref(),
+                    );
+                    let view = WeightedCepView::from_bounds(new_bounds.clone());
+                    {
+                        let assign = sg.weighted_assignment(&view);
+                        engine.apply_migration(&sg, &plan, &assign, &mut backend_for)?;
+                    }
+                    rebalance_log.push(RebalanceRecord {
+                        at_iteration: it,
+                        k,
+                        imbalance_before: imb_before,
+                        imbalance_after: imb_after,
+                        moved_edges: plan.migrated_edges(),
+                        range_moves: plan.num_moves(),
+                        layout_ranges: engine.layout().total_ranges(),
+                        net_blocking_ms: cost.blocking_s * 1e3,
+                        net_overlapped_ms: cost.overlapped_s * 1e3,
+                    });
+                    *b = new_bounds;
+                    rebalance_s += t_reb.elapsed().as_secs_f64() + cost.blocking_s;
+                    net_s += cost.total_s;
+                }
+            }
+        }
     }
+
+    // metered imbalance of the last superstep — read before any flush
+    // rebuilds the engine and clears the comm lanes
+    let final_imbalance = imbalance(
+        &engine.partition_costs(cfg.net_model.compute_ns_per_edge, cfg.net.bandwidth_bps),
+    );
 
     // ---- optional final fold: hand steady state a fully ordered graph
     if cfg.flush_at_end && (sg.staging_len() > 0 || sg.tombstone_count() > 0) {
@@ -668,12 +960,22 @@ where
         sg.compact();
         let assign = sg.assignment(k);
         engine = Engine::new(&sg, &assign, &mut backend_for)?.with_threads(cfg.threads);
+        if let Some(b) = wbounds.as_mut() {
+            *b = uniform_bounds(sg.physical_edges() as u64, k);
+        }
         churn_s += t.elapsed().as_secs_f64();
     }
 
-    let final_rf = {
-        let assign = sg.assignment(k);
-        stream_quality::live_replication_factor(&sg, &assign)
+    let final_rf = match wbounds.as_ref() {
+        Some(b) => {
+            let view = WeightedCepView::from_bounds(b.clone());
+            let assign = sg.weighted_assignment(&view);
+            stream_quality::live_replication_factor(&sg, &assign)
+        }
+        None => {
+            let assign = sg.assignment(k);
+            stream_quality::live_replication_factor(&sg, &assign)
+        }
     };
     let fresh_rf = if cfg.measure_fresh_baseline {
         let live = sg.as_graph();
@@ -689,7 +991,7 @@ where
     };
     Ok(StreamingBreakdown {
         name: scenario.name.clone(),
-        all_s: init_s + app_s + scale_s + churn_s,
+        all_s: init_s + app_s + scale_s + churn_s + rebalance_s,
         init_s,
         app_s,
         scale_s,
@@ -703,8 +1005,11 @@ where
         layout_bytes: engine.layout().metadata_bytes(),
         compactions: sg.compactions(),
         live_edges: sg.live_edges(),
+        rebalance_s,
+        final_imbalance,
         events: event_log,
         churn_events: churn_log,
+        rebalances: rebalance_log,
     })
 }
 
@@ -810,7 +1115,12 @@ mod tests {
         assert_eq!(out.events.len(), 2);
         assert!(out.migrated_edges > 0);
         assert!(out.app_s > 0.0 && out.scale_s > 0.0 && out.init_s > 0.0);
-        assert!((out.all_s - (out.init_s + out.app_s + out.scale_s)).abs() < 1e-9);
+        assert!(
+            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.rebalance_s)).abs() < 1e-9
+        );
+        // the default policy is Off: no nudges, no rebalance seconds
+        assert!(out.rebalances.is_empty());
+        assert_eq!(out.rebalance_s, 0.0);
     }
 
     /// Acceptance: on the CEP path a coordinator-driven rescale reaches
@@ -932,9 +1242,14 @@ mod tests {
         assert_eq!(out.events.len(), 2);
         assert_eq!(out.churn_events.len(), scenario.churn.len());
         assert!(
-            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.churn_s)).abs() < 1e-9
+            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
+                .abs()
+                < 1e-9
         );
         assert!(out.app_s > 0.0 && out.churn_s > 0.0 && out.init_s > 0.0);
+        // the default policy is Off: no nudges, no rebalance seconds
+        assert!(out.rebalances.is_empty());
+        assert_eq!(out.rebalance_s, 0.0);
         // the live edge count tracks the applied mutations exactly
         let ins: u64 = out.churn_events.iter().map(|c| c.inserted as u64).sum();
         let del: u64 = out.churn_events.iter().map(|c| c.deleted as u64).sum();
@@ -1053,7 +1368,9 @@ mod tests {
             // plan always hides at least some traffic
             assert!(ev.net_overlapped_ms > 0.0, "no overlap on {}→{}", ev.from_k, ev.to_k);
         }
-        assert!((out.all_s - (out.init_s + out.app_s + out.scale_s)).abs() < 1e-9);
+        assert!(
+            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.rebalance_s)).abs() < 1e-9
+        );
     }
 
     /// Emulated model on the streaming path: churn and rescale records
@@ -1071,7 +1388,11 @@ mod tests {
         };
         let out =
             run_streaming(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
-        assert!((out.all_s - (out.init_s + out.app_s + out.scale_s + out.churn_s)).abs() < 1e-9);
+        assert!(
+            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
+                .abs()
+                < 1e-9
+        );
         assert!(out.net_s > 0.0);
         for ev in &out.events {
             assert!(ev.net_blocking_ms >= 0.0 && ev.net_overlapped_ms >= 0.0);
@@ -1083,6 +1404,149 @@ mod tests {
                 assert_eq!(cr.net_overlapped_ms, 0.0, "a compaction cannot overlap the app");
             }
         }
+    }
+
+    /// Threshold rebalancing on the run path: metered skew trips the
+    /// policy, every nudge is ≤ 2(k−1) contiguous interval splices that
+    /// keep the layout O(k), the solver-modeled imbalance drops, and the
+    /// closed form prices every nudge as pure blocking time.
+    #[test]
+    fn threshold_rebalance_fires_and_reduces_imbalance() {
+        use crate::scaling::netsim::NetModelConfig;
+        let g = small_graph();
+        let scenario = Scenario::steady(4, 6);
+        let cfg = ControllerConfig {
+            // zero modeled compute: the cost profile is the metered comm
+            // lanes alone, which a power-law graph skews hard
+            net_model: NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() },
+            rebalance: RebalanceConfig::threshold(1.01),
+            ..Default::default()
+        };
+        let out =
+            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        assert_eq!(out.final_k, 4);
+        assert!(out.events.is_empty());
+        assert!(!out.rebalances.is_empty(), "comm skew never tripped the 1.01 threshold");
+        assert!(out.rebalance_s > 0.0);
+        assert!(
+            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.rebalance_s)).abs() < 1e-9
+        );
+        for r in &out.rebalances {
+            assert!(r.imbalance_before > cfg.rebalance.threshold);
+            assert!(
+                r.imbalance_after <= r.imbalance_before,
+                "nudge at {}: {} -> {}",
+                r.at_iteration,
+                r.imbalance_before,
+                r.imbalance_after
+            );
+            assert!(r.moved_edges > 0);
+            assert!(
+                r.range_moves <= 2 * (r.k - 1),
+                "nudge at {} used {} moves for k={}",
+                r.at_iteration,
+                r.range_moves,
+                r.k
+            );
+            assert!(
+                r.layout_ranges <= r.k + r.range_moves,
+                "nudge at {} left {} ownership intervals",
+                r.at_iteration,
+                r.layout_ranges
+            );
+            // closed form: every priced second blocks, none overlaps
+            assert!(r.net_blocking_ms > 0.0);
+            assert_eq!(r.net_overlapped_ms, 0.0);
+        }
+        assert!(out.final_imbalance >= 1.0);
+        assert!(out.layout_ranges <= out.final_k + 2 * (out.final_k - 1));
+    }
+
+    /// Rebalanced (weighted) boundaries survive rescales: the next scale
+    /// event plans weighted → uniform in O(k + k') contiguous moves, and
+    /// under the emulator every nudge splits into blocking + overlapped
+    /// shares like any other migration.
+    #[test]
+    fn rebalance_composes_with_rescales_under_emulation() {
+        use crate::scaling::netsim::NetModelConfig;
+        let g = small_graph();
+        let scenario = Scenario::scale_out(3, 2, 4); // 3→5 over 12 iters
+        let cfg = ControllerConfig {
+            // small but positive modeled compute: costs stay comm-driven
+            // while the emulator keeps a positive overlap window
+            net_model: NetModelConfig { compute_ns_per_edge: 0.1, ..NetModelConfig::emulated() },
+            rebalance: RebalanceConfig::threshold(1.01),
+            ..Default::default()
+        };
+        let out =
+            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        assert_eq!(out.final_k, 5);
+        assert_eq!(out.events.len(), 2);
+        assert!(!out.rebalances.is_empty(), "comm skew never tripped the 1.01 threshold");
+        // rescales from nudged boundaries are still O(k + k') moves
+        for ev in &out.events {
+            assert!(
+                ev.range_moves <= ev.from_k + ev.to_k + 1,
+                "{}→{}: {} range moves is not O(k)",
+                ev.from_k,
+                ev.to_k,
+                ev.range_moves
+            );
+            assert!(ev.layout_ranges <= ev.to_k);
+        }
+        for r in &out.rebalances {
+            assert!(r.range_moves <= 2 * (r.k - 1));
+            assert!(r.net_blocking_ms >= 0.0 && r.net_overlapped_ms >= 0.0);
+            assert!(r.net_blocking_ms + r.net_overlapped_ms > 0.0, "nudge not priced");
+            // fired right after a metered superstep: some traffic hides
+            assert!(r.net_overlapped_ms > 0.0, "no overlap at {}", r.at_iteration);
+        }
+    }
+
+    /// Threshold rebalancing on the streaming path: nudges ride the
+    /// weighted staged assignment (tombstones and all), mutation
+    /// accounting is untouched, and the breakdown stays consistent.
+    #[test]
+    fn streaming_threshold_rebalance_nudges_boundaries() {
+        use crate::scaling::netsim::NetModelConfig;
+        let g = small_graph();
+        let m0 = g.num_edges();
+        let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
+        let cfg = StreamingConfig {
+            geo: GeoConfig { k_min: 2, k_max: 8, ..Default::default() },
+            net_model: NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() },
+            rebalance: RebalanceConfig::threshold(1.01),
+            audit_rf: true,
+            ..Default::default()
+        };
+        let out =
+            run_streaming(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        assert_eq!(out.final_k, 5);
+        assert!(
+            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
+                .abs()
+                < 1e-9
+        );
+        assert!(!out.rebalances.is_empty(), "comm skew never tripped the 1.01 threshold");
+        assert!(out.rebalance_s > 0.0);
+        for r in &out.rebalances {
+            assert!(r.imbalance_before > cfg.rebalance.threshold);
+            assert!(r.imbalance_after <= r.imbalance_before);
+            assert!(r.moved_edges > 0);
+            assert!(r.range_moves <= 2 * (r.k - 1));
+            assert!(r.layout_ranges <= r.k + r.range_moves);
+            assert!(r.net_blocking_ms > 0.0);
+        }
+        // rebalancing never perturbs the mutation accounting
+        let ins: u64 = out.churn_events.iter().map(|c| c.inserted as u64).sum();
+        let del: u64 = out.churn_events.iter().map(|c| c.deleted as u64).sum();
+        assert_eq!(out.live_edges as u64, m0 as u64 + ins - del);
+        for cr in &out.churn_events {
+            assert!(cr.rf >= 1.0);
+        }
+        assert!(out.final_rf >= 1.0);
+        assert!(out.final_imbalance >= 1.0);
+        assert!(out.layout_ranges <= out.final_k);
     }
 
     #[test]

@@ -9,6 +9,6 @@ pub mod provisioner;
 pub mod state;
 
 pub use controller::{
-    run_scenario, run_streaming, ChurnRecord, ControllerConfig, EventRecord, RunBreakdown,
-    StreamingBreakdown, StreamingConfig,
+    run_scenario, run_streaming, ChurnRecord, ControllerConfig, EventRecord, RebalanceConfig,
+    RebalanceMode, RebalanceRecord, RunBreakdown, StreamingBreakdown, StreamingConfig,
 };

@@ -215,6 +215,28 @@ impl Engine {
         }
     }
 
+    /// Per-partition modeled cost of the *currently metered* superstep
+    /// traffic — the input of the skew-aware rebalance policy. Cost of
+    /// partition `p` is a modeled compute window (`compute_ns_per_edge`
+    /// per edge direction over its owned edges) plus its serialized comm
+    /// window (TX + RX lane bytes over `bandwidth_bps`). Both terms are
+    /// derived from deterministic tallies (layout sizes, `CommMeter`
+    /// lanes), never wall time, so the vector — and every rebalance
+    /// decision taken from it — is bit-identical at any thread count.
+    pub fn partition_costs(&self, compute_ns_per_edge: f64, bandwidth_bps: f64) -> Vec<f64> {
+        let k = self.workers.len();
+        let tx = self.comm.per_worker_tx();
+        let rx = self.comm.per_worker_rx();
+        (0..k)
+            .map(|p| {
+                let compute =
+                    self.layout.num_owned_edges(p) as f64 * 2.0 * compute_ns_per_edge * 1e-9;
+                let comm = (tx[p] + rx[p]) as f64 * 8.0 / bandwidth_bps;
+                compute + comm
+            })
+            .collect()
+    }
+
     /// Run one superstep over global state. `active[v]` gates the scatter
     /// phase; returns per-vertex combined partials (Sum) or the improved
     /// state (Min), plus the set of vertices whose value changed.
@@ -493,5 +515,55 @@ mod tests {
                 .unwrap();
             assert_eq!(a, b, "k={new_k}");
         }
+    }
+
+    /// Boundary-shift plans (the skew-aware rebalance path) execute as
+    /// interval splices and leave the engine indistinguishable from one
+    /// built fresh on the shifted weighted view; the per-partition cost
+    /// meter tracks the new chunk sizes.
+    #[test]
+    fn boundary_shift_matches_fresh_engine() {
+        use crate::graph::generators::erdos_renyi;
+        use crate::partition::{cep::Cep, WeightedCepView};
+        use crate::scaling::migration::MigrationPlan;
+
+        let g = erdos_renyi(120, 500, 9);
+        let m = g.num_edges() as u64;
+        let uni = WeightedCepView::uniform(Cep::new(m as usize, 4));
+        let mut engine = Engine::new(&g, &uni, |_| Box::new(NativeBackend::new())).unwrap();
+
+        let shifted =
+            WeightedCepView::from_bounds(vec![0, m / 8, m / 2, 3 * m / 4, m]);
+        let plan = MigrationPlan::between_boundaries(uni.bounds(), shifted.bounds());
+        assert!(plan.num_moves() <= 2 * 3, "{} moves", plan.num_moves());
+        engine
+            .apply_migration(&g, &plan, &shifted, |_| Box::new(NativeBackend::new()))
+            .unwrap();
+        // layout stays range-compact: k chunks → at most k resident ranges
+        assert!(engine.layout().total_ranges() <= 4 + plan.num_moves());
+
+        let n = g.num_vertices();
+        let state: Vec<f32> = (0..n).map(|v| (v % 13) as f32 / 13.0).collect();
+        let aux = vec![1.0f32; n];
+        let active = vec![true; n];
+        let mut fresh = Engine::new(&g, &shifted, |_| Box::new(NativeBackend::new())).unwrap();
+        let (a, _) = engine
+            .superstep(StepKind::PageRank, Combine::Sum, &state, &aux, &active)
+            .unwrap();
+        let (b, _) = fresh
+            .superstep(StepKind::PageRank, Combine::Sum, &state, &aux, &active)
+            .unwrap();
+        assert_eq!(a, b);
+
+        // cost meter: compute term is proportional to owned edges, and the
+        // comm term only appears once lanes are metered
+        let costs = engine.partition_costs(2.0, 8e9);
+        assert_eq!(costs.len(), 4);
+        for (p, c) in costs.iter().enumerate() {
+            assert!(*c > 0.0, "partition {p} metered zero cost");
+        }
+        let sizes: Vec<u64> = (0..4).map(|p| engine.layout().num_owned_edges(p)).collect();
+        assert_eq!(sizes.iter().sum::<u64>(), m);
+        assert_eq!(sizes, vec![m / 8, m / 2 - m / 8, 3 * m / 4 - m / 2, m - 3 * m / 4]);
     }
 }

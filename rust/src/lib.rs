@@ -60,7 +60,18 @@
 //! per event (`layout_ranges`), pinned at ≤ k on the CEP and streaming
 //! paths.
 //!
-//! The [`coordinator`] drives exactly this loop at every scale event.
+//! The [`coordinator`] drives exactly this loop at every scale event. It
+//! also closes a **skew-aware rebalancing** loop between supersteps: the
+//! chunk layer generalizes to monotone non-uniform boundaries
+//! ([`partition::weighted::WeightedCepView`] — O(log k) owner queries,
+//! O(1) on the uniform fast path), [`engine::Engine::partition_costs`]
+//! meters per-partition cost (modeled ns/edge compute + `CommMeter` lane
+//! bytes), [`partition::weighted::balanced_boundaries`] re-solves split
+//! points by prefix-sum when the metered max/mean imbalance trips the
+//! configured threshold ([`coordinator::RebalanceConfig`]), and
+//! [`scaling::migration::MigrationPlan::between_boundaries`] turns the
+//! boundary shift into ≤ 2(k−1) contiguous moves — priced, executed and
+//! audited exactly like a rescale plan.
 //!
 //! Every hot path above (CSR construction, the quality sweeps, engine
 //! supersteps and mirror aggregation, staged-batch ingest) runs on the

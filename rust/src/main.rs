@@ -8,6 +8,7 @@
 //! egs run       --dataset orkut-s --app pagerank --k 8 [--backend xla]
 //! egs elastic   --dataset orkut-s --method cep --scenario out --k 8 --steps 4
 //!               [--net-model closed|emulated] [--net-gbps 8] [--net-skew-us 0]
+//!               [--rebalance off|threshold] [--rebalance-threshold 1.15]
 //! egs table2
 //! egs info      --dataset orkut-s
 //! ```
@@ -24,9 +25,17 @@
 //! `--no-overlap` to emulate standalone shuffles). The emulator's event
 //! ordering is a pure function of plan and config, so its prices are
 //! bit-identical at any `--threads`.
+//!
+//! `--rebalance threshold` arms the skew-aware boundary rebalancer on the
+//! CEP path: after each superstep whose metered max/mean cost imbalance
+//! exceeds `--rebalance-threshold` (default 1.15), the coordinator
+//! re-solves the chunk boundaries against the metered profile and
+//! executes the ≤ 2(k−1)-move boundary-shift plan, priced like any other
+//! migration. `--scenario steady` runs a fixed-k scenario for isolating
+//! the rebalancer.
 
 use anyhow::{bail, Context};
-use egs::coordinator::{run_scenario, ControllerConfig};
+use egs::coordinator::{run_scenario, ControllerConfig, RebalanceConfig};
 use egs::engine::{apps, Engine};
 use egs::graph::{datasets, io, stats};
 use egs::metrics::table::{f2, secs, Table};
@@ -217,7 +226,8 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
     let scenario = match args.get_or("scenario", "out").as_str() {
         "out" => Scenario::scale_out(k, steps, period),
         "in" => Scenario::scale_in(k, steps, period),
-        other => bail!("unknown scenario {other} (out|in)"),
+        "steady" => Scenario::steady(k, (steps as u32 + 1) * period),
+        other => bail!("unknown scenario {other} (out|in|steady)"),
     };
     let mut net_model = NetModelConfig::default();
     if let Some(nm) = args.get("net-model") {
@@ -230,11 +240,19 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
     if args.flag("no-overlap") {
         net_model.overlap = false;
     }
+    let rebalance = match args.get_or("rebalance", "off").as_str() {
+        "off" => RebalanceConfig::off(),
+        "threshold" => {
+            RebalanceConfig::threshold(args.get_parse::<f64>("rebalance-threshold", 1.15))
+        }
+        other => bail!("unknown rebalance policy {other} (off|threshold)"),
+    };
     let cfg = ControllerConfig {
         method: args.get_or("method", "cep"),
         net: Network::gbps(args.get_parse::<f64>("net-gbps", 8.0)),
         net_model,
         threads: args.thread_config(),
+        rebalance,
         ..Default::default()
     };
     let mut factory = backend_factory(args)?;
@@ -246,7 +264,7 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
             args.get_or("dataset", "pokec-s"),
             net_model.model.name()
         ),
-        &["method", "ALL", "INIT", "APP", "SCALE", "NET", "migrated", "COM MB"],
+        &["method", "ALL", "INIT", "APP", "SCALE", "REBAL", "NET", "migrated", "COM MB"],
     );
     t.row(vec![
         out.method.clone(),
@@ -254,6 +272,7 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
         secs(out.init_s),
         secs(out.app_s),
         secs(out.scale_s),
+        secs(out.rebalance_s),
         secs(out.net_s),
         out.migrated_edges.to_string(),
         format!("{:.2}", out.com_bytes as f64 / 1e6),
@@ -266,6 +285,23 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
                 ev.from_k, ev.to_k, ev.net_blocking_ms, ev.net_overlapped_ms
             );
         }
+    }
+    if cfg.rebalance.is_threshold() {
+        for r in &out.rebalances {
+            println!(
+                "  rebalance @it{} k={}: imbalance {:.3} -> {:.3}, {} moves ({} edges), \
+                 net blocking {:.3} ms, overlapped {:.3} ms",
+                r.at_iteration,
+                r.k,
+                r.imbalance_before,
+                r.imbalance_after,
+                r.range_moves,
+                r.moved_edges,
+                r.net_blocking_ms,
+                r.net_overlapped_ms
+            );
+        }
+        println!("  final metered imbalance: {:.3}", out.final_imbalance);
     }
     Ok(())
 }

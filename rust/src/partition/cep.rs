@@ -130,6 +130,14 @@ impl Cep {
     pub fn rescaled(&self, new_k: usize) -> Cep {
         Cep::new(self.m as usize, new_k)
     }
+
+    /// The `k+1` uniform chunk boundaries `[start(0), …, start(k−1), m]` —
+    /// the boundary-array representation consumed by
+    /// [`crate::partition::WeightedCepView`] and the skew-aware
+    /// rebalance planner.
+    pub fn boundaries(&self) -> Vec<u64> {
+        (0..=self.k).map(|p| chunk_start(self.m, self.k, p)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -203,6 +211,20 @@ mod tests {
             }
             assert!(hi - lo <= 1, "m={m} k={k}: widths {lo}..{hi}");
         });
+    }
+
+    #[test]
+    fn boundaries_bracket_every_range() {
+        let c = Cep::new(137, 10);
+        let b = c.boundaries();
+        assert_eq!(b.len(), 11);
+        assert_eq!(b[0], 0);
+        assert_eq!(b[10], 137);
+        for p in 0..10u32 {
+            let r = c.range(p);
+            assert_eq!(b[p as usize], r.start);
+            assert_eq!(b[p as usize + 1], r.end);
+        }
     }
 
     #[test]

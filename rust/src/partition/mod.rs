@@ -22,9 +22,11 @@ pub mod oblivious;
 pub mod quality;
 pub mod vertex2edge;
 pub mod view;
+pub mod weighted;
 
 pub use intervals::IdRangeSet;
 pub use view::{CepView, PartitionAssignment};
+pub use weighted::WeightedCepView;
 
 use crate::graph::Graph;
 use crate::PartitionId;

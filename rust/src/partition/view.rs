@@ -41,11 +41,15 @@ pub trait PartitionAssignment {
         self.num_edges()
     }
 
-    /// Edges per partition. The default scans all edges; implementations
-    /// with cheaper structure (chunk widths, counting vectors) override.
+    /// *Live* edges per partition — tombstoned ids do not count. The
+    /// default scans all edges; implementations with cheaper structure
+    /// (chunk widths, counting vectors) override.
     fn sizes(&self) -> Vec<u64> {
         let mut s = vec![0u64; self.k()];
         for i in 0..self.num_edges() {
+            if !self.is_live(i) {
+                continue;
+            }
             s[self.partition_of(i) as usize] += 1;
         }
         s
@@ -198,5 +202,41 @@ mod tests {
         }
         let c = Cep::new(997, 13);
         assert_eq!(Slow(c).sizes(), CepView::new(c).sizes());
+    }
+
+    #[test]
+    fn default_sizes_skips_dead_ids() {
+        // regression: the default scan must agree with the tombstone-aware
+        // StagedAssignment::sizes() override, not count dead ids
+        use crate::stream::StagedAssignment;
+        struct Slow<'a>(Cep, &'a [EdgeId]);
+        impl PartitionAssignment for Slow<'_> {
+            fn k(&self) -> usize {
+                self.0.k()
+            }
+            fn num_edges(&self) -> u64 {
+                self.0.num_edges()
+            }
+            fn partition_of(&self, i: EdgeId) -> PartitionId {
+                self.0.partition_of(i)
+            }
+            fn is_live(&self, i: EdgeId) -> bool {
+                self.1.binary_search(&i).is_err()
+            }
+        }
+        check(0xDEAD, 24, |rng| {
+            let m = 1 + rng.below_usize(2_000);
+            let k = 1 + rng.below_usize(16);
+            let c = Cep::new(m, k);
+            let mut dead: Vec<EdgeId> =
+                (0..rng.below_usize(m / 2 + 1)).map(|_| rng.below(m as u64)).collect();
+            dead.sort_unstable();
+            dead.dedup();
+            let staged = StagedAssignment::new(c, &dead);
+            let slow = Slow(c, &dead);
+            assert_eq!(slow.sizes(), staged.sizes(), "m={m} k={k} dead={}", dead.len());
+            let live: u64 = slow.sizes().iter().sum();
+            assert_eq!(live, m as u64 - dead.len() as u64);
+        });
     }
 }

@@ -1,0 +1,461 @@
+//! **Weighted CEP** — monotone non-uniform chunk boundaries over the
+//! ordered edge list, the substrate for skew-aware rebalancing.
+//!
+//! A [`crate::partition::cep::Cep`] fixes chunk widths arithmetically
+//! (`⌊(m+p)/k⌋`), which balances *edge counts* perfectly but cannot react
+//! to per-partition cost skew (dense communities, Zipf-skewed access): the
+//! superstep barrier runs at the speed of the hottest chunk. A
+//! [`WeightedCepView`] keeps everything that makes CEP cheap — contiguous
+//! chunks, pure metadata, O(k) total state — but lets the k−1 interior
+//! boundaries sit anywhere:
+//!
+//! ```text
+//! b[0] = 0 ≤ b[1] ≤ … ≤ b[k−1] ≤ b[k] = m,   partition p owns [b[p], b[p+1])
+//! ```
+//!
+//! Queries: [`WeightedCepView::partition_of`] is an O(log k)
+//! branchless-style binary search with an O(1) fast path when the
+//! boundaries coincide with the uniform CEP grid; `sizes`/`as_chunks` are
+//! O(k) boundary diffs.
+//!
+//! The module also hosts the **weighted boundary solver**
+//! ([`balanced_boundaries`]): given metered per-chunk costs it prefix-sums
+//! the piecewise-constant cost density and places the new boundaries at
+//! the k-quantiles of cumulative cost, so every chunk carries ≈ total/k.
+//! Moving from the old boundaries to the solved ones is a
+//! [`crate::scaling::MigrationPlan::between_boundaries`] boundary-shift
+//! plan of at most 2(k−1) contiguous range moves — zero per-edge work.
+
+use super::cep::{chunk_start, Cep};
+use super::view::PartitionAssignment;
+use crate::{EdgeId, PartitionId};
+use std::ops::Range;
+
+/// The uniform CEP boundary array `[chunk_start(m,k,0), …, m]` (length
+/// k+1) — the grid a fresh [`WeightedCepView::uniform`] starts from and
+/// the shape a rescale resets to.
+pub fn uniform_bounds(m: u64, k: usize) -> Vec<u64> {
+    (0..=k as u64).map(|p| chunk_start(m, k as u64, p)).collect()
+}
+
+/// A chunk partitioning with arbitrary monotone boundaries: partition `p`
+/// owns the contiguous edge-id range `[b[p], b[p+1])`. Pure metadata —
+/// O(k) state, no per-edge storage; rebalancing replaces the boundary
+/// array and derives an O(k) range-move plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WeightedCepView {
+    /// `k+1` non-decreasing boundaries, `bounds[0] == 0`,
+    /// `bounds[k] == m`.
+    bounds: Vec<u64>,
+    /// When the boundaries sit exactly on the uniform CEP grid, the O(1)
+    /// closed-form `id2p` answers `partition_of` without the search.
+    uniform: Option<Cep>,
+}
+
+impl WeightedCepView {
+    /// A weighted view sitting exactly on the uniform CEP grid —
+    /// `partition_of` stays O(1) until the first boundary nudge.
+    pub fn uniform(cep: Cep) -> WeightedCepView {
+        let bounds = uniform_bounds(cep.num_edges(), cep.k());
+        WeightedCepView { bounds, uniform: Some(cep) }
+    }
+
+    /// Adopt an explicit boundary array (`k+1` entries, non-decreasing,
+    /// `bounds[0] == 0`). Detects in O(k) whether the array coincides
+    /// with the uniform grid and installs the O(1) fast path if so.
+    ///
+    /// # Panics
+    /// If the array is empty, does not start at 0, or decreases.
+    pub fn from_bounds(bounds: Vec<u64>) -> WeightedCepView {
+        assert!(bounds.len() >= 2, "bounds need k+1 >= 2 entries");
+        assert_eq!(bounds[0], 0, "bounds must start at 0");
+        assert!(
+            bounds.windows(2).all(|w| w[0] <= w[1]),
+            "bounds must be non-decreasing"
+        );
+        let k = bounds.len() - 1;
+        let m = bounds[k];
+        let cep = Cep::new(m as usize, k);
+        let is_uniform =
+            (0..=k as u64).all(|p| bounds[p as usize] == chunk_start(m, k as u64, p));
+        WeightedCepView {
+            bounds,
+            uniform: if is_uniform { Some(cep) } else { None },
+        }
+    }
+
+    /// Number of partitions `k`.
+    pub fn k(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Total number of edges `m`.
+    pub fn num_edges(&self) -> u64 {
+        *self.bounds.last().unwrap()
+    }
+
+    /// The boundary array (`k+1` entries).
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    /// Is the view currently on the uniform CEP grid (O(1) fast path
+    /// active)?
+    pub fn is_uniform(&self) -> bool {
+        self.uniform.is_some()
+    }
+
+    /// Edge-id range of partition `p` — O(1).
+    pub fn range(&self, p: PartitionId) -> Range<EdgeId> {
+        self.bounds[p as usize]..self.bounds[p as usize + 1]
+    }
+
+    /// Partition owning edge id `i`: O(1) on the uniform grid, otherwise
+    /// an O(log k) branchless-style binary search (the compare folds to a
+    /// conditional move — no data-dependent branch in the loop body) for
+    /// the largest `p` with `bounds[p] <= i`. Empty partitions are
+    /// skipped naturally: ties resolve to the *last* boundary equal to
+    /// `i`, whose chunk is the non-empty one containing `i`.
+    #[inline]
+    pub fn partition_of(&self, i: EdgeId) -> PartitionId {
+        if let Some(c) = self.uniform {
+            return c.partition_of(i);
+        }
+        debug_assert!(i < self.num_edges(), "edge id {i} out of range");
+        let b = &self.bounds;
+        let mut lo = 0usize;
+        let mut len = b.len() - 1; // k candidate partitions
+        while len > 1 {
+            let half = len / 2;
+            let mid = lo + half;
+            lo = if b[mid] <= i { mid } else { lo };
+            len -= half;
+        }
+        lo as PartitionId
+    }
+}
+
+impl PartitionAssignment for WeightedCepView {
+    fn k(&self) -> usize {
+        WeightedCepView::k(self)
+    }
+
+    fn num_edges(&self) -> u64 {
+        WeightedCepView::num_edges(self)
+    }
+
+    #[inline]
+    fn partition_of(&self, i: EdgeId) -> PartitionId {
+        WeightedCepView::partition_of(self, i)
+    }
+
+    fn sizes(&self) -> Vec<u64> {
+        self.bounds.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    fn as_chunks(&self) -> Option<Vec<Range<EdgeId>>> {
+        Some(self.bounds.windows(2).map(|w| w[0]..w[1]).collect())
+    }
+}
+
+/// Cumulative metered cost at edge offset `x`, interpolated linearly
+/// inside each old chunk (cost density is modeled as uniform within a
+/// chunk — the meter only resolves per-chunk totals).
+fn cum_cost(bounds: &[u64], prefix: &[f64], x: u64) -> f64 {
+    let k = bounds.len() - 1;
+    if x >= bounds[k] {
+        return prefix[k];
+    }
+    let q = bounds.partition_point(|&b| b <= x);
+    let p = q.saturating_sub(1);
+    let w = bounds[p + 1] - bounds[p];
+    if w == 0 {
+        return prefix[p];
+    }
+    prefix[p] + (prefix[p + 1] - prefix[p]) * ((x - bounds[p]) as f64 / w as f64)
+}
+
+/// The weighted boundary solver: place k−1 new interior boundaries so
+/// every chunk carries ≈ `total_cost / k`, where `cost[p]` is the metered
+/// cost of old chunk `[bounds[p], bounds[p+1])` and density is uniform
+/// within a chunk. New boundary `j` sits at the `j/k` quantile of the
+/// piecewise-linear cumulative cost — a sequential O(k) prefix-sum walk,
+/// bit-identical at any thread count. Degenerate inputs (zero edges or
+/// zero total cost) fall back to the uniform grid.
+pub fn balanced_boundaries(bounds: &[u64], cost: &[f64]) -> Vec<u64> {
+    let k = bounds.len() - 1;
+    assert_eq!(cost.len(), k, "one cost per chunk");
+    let m = bounds[k];
+    if m == 0 {
+        return bounds.to_vec();
+    }
+    let mut prefix = vec![0.0f64; k + 1];
+    for p in 0..k {
+        prefix[p + 1] = prefix[p] + cost[p].max(0.0);
+    }
+    let total = prefix[k];
+    if total <= 0.0 {
+        return uniform_bounds(m, k);
+    }
+    let mut out = vec![0u64; k + 1];
+    out[k] = m;
+    let mut p = 0usize;
+    for j in 1..k {
+        let t = total * j as f64 / k as f64;
+        while p + 1 < k && prefix[p + 1] < t {
+            p += 1;
+        }
+        let w = bounds[p + 1] - bounds[p];
+        let span = prefix[p + 1] - prefix[p];
+        let b = if span <= 0.0 || w == 0 {
+            bounds[p + 1]
+        } else {
+            let frac = ((t - prefix[p]) / span).clamp(0.0, 1.0);
+            bounds[p] + (frac * w as f64).round() as u64
+        };
+        out[j] = b.max(out[j - 1]).min(m);
+    }
+    out
+}
+
+/// Predicted per-chunk costs of `new_bounds` under the cost model metered
+/// on `old_bounds` (uniform density within each old chunk) — the
+/// `imbalance_after` the solver is optimizing, evaluated without running
+/// another superstep.
+pub fn predicted_costs(old_bounds: &[u64], cost: &[f64], new_bounds: &[u64]) -> Vec<f64> {
+    let k_old = old_bounds.len() - 1;
+    assert_eq!(cost.len(), k_old, "one cost per old chunk");
+    let mut prefix = vec![0.0f64; k_old + 1];
+    for p in 0..k_old {
+        prefix[p + 1] = prefix[p] + cost[p].max(0.0);
+    }
+    new_bounds
+        .windows(2)
+        .map(|w| cum_cost(old_bounds, &prefix, w[1]) - cum_cost(old_bounds, &prefix, w[0]))
+        .collect()
+}
+
+/// Max/mean cost imbalance — the quantity the rebalance policy watches.
+/// `1.0` is perfect balance; empty or all-zero cost vectors report `1.0`
+/// (nothing to balance).
+pub fn imbalance(costs: &[f64]) -> f64 {
+    if costs.is_empty() {
+        return 1.0;
+    }
+    let total: f64 = costs.iter().sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let mean = total / costs.len() as f64;
+    let max = costs.iter().cloned().fold(0.0f64, f64::max);
+    max / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn uniform_view_matches_cep_everywhere() {
+        check(0x7E16, 32, |rng| {
+            let m = 1 + rng.below_usize(5_000);
+            let k = 1 + rng.below_usize(64);
+            let c = Cep::new(m, k);
+            let v = WeightedCepView::uniform(c);
+            assert!(v.is_uniform());
+            assert_eq!(v.k(), k);
+            assert_eq!(v.num_edges(), m as u64);
+            for _ in 0..64 {
+                let i = rng.below(m as u64);
+                assert_eq!(v.partition_of(i), c.partition_of(i), "m={m} k={k} i={i}");
+            }
+            let sizes = PartitionAssignment::sizes(&v);
+            let widths: Vec<u64> =
+                (0..k as PartitionId).map(|p| c.width(p)).collect();
+            assert_eq!(sizes, widths);
+        });
+    }
+
+    #[test]
+    fn from_bounds_detects_the_uniform_grid() {
+        let v = WeightedCepView::from_bounds(uniform_bounds(137, 10));
+        assert!(v.is_uniform());
+        let w = WeightedCepView::from_bounds(vec![0, 5, 137]);
+        assert!(!w.is_uniform());
+    }
+
+    #[test]
+    fn search_matches_linear_scan_on_random_bounds() {
+        check(0xB1A5, 48, |rng| {
+            let k = 1 + rng.below_usize(32);
+            let m = rng.below(2_000);
+            let mut cuts: Vec<u64> = (0..k - 1).map(|_| rng.below(m + 1)).collect();
+            cuts.sort_unstable();
+            let mut bounds = vec![0u64];
+            bounds.extend(cuts);
+            bounds.push(m);
+            let v = WeightedCepView::from_bounds(bounds.clone());
+            for _ in 0..64 {
+                if m == 0 {
+                    break;
+                }
+                let i = rng.below(m);
+                // linear-scan oracle: last p with bounds[p] <= i
+                let mut expect = 0;
+                for p in 0..k {
+                    if bounds[p] <= i {
+                        expect = p;
+                    }
+                }
+                assert_eq!(
+                    v.partition_of(i),
+                    expect as PartitionId,
+                    "bounds={bounds:?} i={i}"
+                );
+                let r = v.range(v.partition_of(i));
+                assert!(r.contains(&i), "range {r:?} must contain {i}");
+            }
+            let total: u64 = PartitionAssignment::sizes(&v).iter().sum();
+            assert_eq!(total, m);
+        });
+    }
+
+    #[test]
+    fn empty_partitions_resolve_to_the_owning_chunk() {
+        let v = WeightedCepView::from_bounds(vec![0, 5, 5, 10]);
+        assert_eq!(v.partition_of(4), 0);
+        assert_eq!(v.partition_of(5), 2); // partition 1 is empty
+        assert_eq!(v.range(1), 5..5);
+        assert_eq!(PartitionAssignment::sizes(&v), vec![5, 0, 5]);
+    }
+
+    #[test]
+    fn chunks_cover_all_edges_in_order() {
+        let v = WeightedCepView::from_bounds(vec![0, 3, 3, 9, 20]);
+        let chunks = v.as_chunks().unwrap();
+        assert_eq!(chunks.len(), 4);
+        let mut next = 0u64;
+        for r in &chunks {
+            assert_eq!(r.start, next);
+            next = r.end;
+        }
+        assert_eq!(next, 20);
+    }
+
+    #[test]
+    fn solver_equalizes_cost_quantiles() {
+        // chunk 0 carries 9× the cost of the others → its share shrinks
+        let bounds = uniform_bounds(1_000, 4);
+        let cost = vec![9.0, 1.0, 1.0, 1.0];
+        let out = balanced_boundaries(&bounds, &cost);
+        assert_eq!(out[0], 0);
+        assert_eq!(out[4], 1_000);
+        assert!(out.windows(2).all(|w| w[0] <= w[1]));
+        let after = predicted_costs(&bounds, &cost, &out);
+        // each new chunk carries ≈ total/4 = 3.0 of modeled cost
+        for c in &after {
+            assert!((c - 3.0).abs() < 0.2, "predicted {after:?}");
+        }
+        assert!(imbalance(&after) < imbalance(&cost));
+    }
+
+    #[test]
+    fn solver_on_balanced_cost_is_a_fixed_point_of_imbalance() {
+        let bounds = uniform_bounds(997, 7);
+        let cost = vec![1.0; 7];
+        let out = balanced_boundaries(&bounds, &cost);
+        let after = predicted_costs(&bounds, &cost, &out);
+        assert!(imbalance(&after) <= imbalance(&cost) + 1e-9);
+    }
+
+    #[test]
+    fn solver_degenerate_inputs_fall_back_to_uniform() {
+        let bounds = vec![0u64, 4, 9, 12];
+        assert_eq!(
+            balanced_boundaries(&bounds, &[0.0, 0.0, 0.0]),
+            uniform_bounds(12, 3)
+        );
+        let empty = vec![0u64, 0, 0];
+        assert_eq!(balanced_boundaries(&empty, &[1.0, 2.0]), empty);
+    }
+
+    /// Max predicted chunk cost of a candidate boundary array under the
+    /// solver's own piecewise-linear cost model.
+    fn max_cost(bounds: &[u64], cost: &[f64], cand: &[u64]) -> f64 {
+        predicted_costs(bounds, cost, cand)
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Worst per-edge cost density over the old chunks — the granularity
+    /// the integer-rounded solver can lose versus a continuous optimum.
+    fn max_density(bounds: &[u64], cost: &[f64]) -> f64 {
+        bounds
+            .windows(2)
+            .zip(cost)
+            .filter(|(w, _)| w[1] > w[0])
+            .map(|(w, c)| c / (w[1] - w[0]) as f64)
+            .fold(0.0f64, f64::max)
+    }
+
+    #[test]
+    fn solver_matches_naive_argmin_sweep_k2() {
+        // exhaustive single-boundary sweep: the solver's max chunk cost
+        // is within one edge's density of the true argmin
+        check(0x50F7, 48, |rng| {
+            let m = 2 + rng.below(80);
+            let bounds = vec![0, m / 2, m];
+            let cost = vec![rng.f64() * 10.0, rng.f64() * 10.0];
+            if cost.iter().sum::<f64>() <= 0.0 {
+                return;
+            }
+            let solved = balanced_boundaries(&bounds, &cost);
+            let naive = (0..=m)
+                .map(|b| max_cost(&bounds, &cost, &[0, b, m]))
+                .fold(f64::INFINITY, f64::min);
+            let got = max_cost(&bounds, &cost, &solved);
+            let dens = max_density(&bounds, &cost);
+            assert!(
+                got <= naive + dens + 1e-9,
+                "m={m} cost={cost:?} solved={solved:?} got={got} naive={naive}"
+            );
+        });
+    }
+
+    #[test]
+    fn solver_matches_naive_argmin_sweep_k3() {
+        // exhaustive two-boundary sweep on small m
+        check(0xA4B2, 24, |rng| {
+            let m = 3 + rng.below(30);
+            let bounds = vec![0, m / 3, 2 * m / 3, m];
+            let cost = vec![rng.f64() * 5.0, rng.f64() * 5.0, rng.f64() * 5.0];
+            if cost.iter().sum::<f64>() <= 0.0 {
+                return;
+            }
+            let solved = balanced_boundaries(&bounds, &cost);
+            let mut naive = f64::INFINITY;
+            for b1 in 0..=m {
+                for b2 in b1..=m {
+                    naive = naive.min(max_cost(&bounds, &cost, &[0, b1, b2, m]));
+                }
+            }
+            let got = max_cost(&bounds, &cost, &solved);
+            // two rounded boundaries → up to two edges of density slack
+            let dens = max_density(&bounds, &cost);
+            assert!(
+                got <= naive + 2.0 * dens + 1e-9,
+                "m={m} cost={cost:?} solved={solved:?} got={got} naive={naive}"
+            );
+        });
+    }
+
+    #[test]
+    fn imbalance_basics() {
+        assert_eq!(imbalance(&[]), 1.0);
+        assert_eq!(imbalance(&[0.0, 0.0]), 1.0);
+        assert!((imbalance(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((imbalance(&[3.0, 1.0]) - 1.5).abs() < 1e-12);
+    }
+}

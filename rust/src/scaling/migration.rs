@@ -83,6 +83,49 @@ impl MigrationPlan {
         plan
     }
 
+    /// Plan a **boundary shift** between two monotone boundary arrays
+    /// over the same edge list (`bounds[0] == 0`, `bounds[k] == m`,
+    /// non-decreasing — the [`crate::partition::WeightedCepView`]
+    /// representation). Same merged-cut sweep as [`Self::between_ceps`]:
+    /// between consecutive cuts both owners are constant, so the plan is
+    /// O(k + k') range moves with zero per-edge work. For equal `k` the
+    /// plan has at most `2(k−1)` moves: the cut set holds ≤ 2k distinct
+    /// values, and when it is maximal the first window is owned by
+    /// partition 0 on both sides.
+    pub fn between_boundaries(old_bounds: &[u64], new_bounds: &[u64]) -> MigrationPlan {
+        assert!(
+            old_bounds.len() >= 2 && new_bounds.len() >= 2,
+            "bounds need k+1 >= 2 entries"
+        );
+        let m = *old_bounds.last().unwrap();
+        assert_eq!(m, *new_bounds.last().unwrap(), "edge sets differ");
+        let mut plan = MigrationPlan::default();
+        if m == 0 {
+            return plan;
+        }
+        // owner = largest p with bounds[p] <= i (ties resolve past empty
+        // partitions, matching WeightedCepView::partition_of)
+        let owner = |bounds: &[u64], i: u64| -> PartitionId {
+            (bounds.partition_point(|&b| b <= i) - 1) as PartitionId
+        };
+        let mut cuts: Vec<u64> = Vec::with_capacity(old_bounds.len() + new_bounds.len());
+        cuts.extend_from_slice(old_bounds);
+        cuts.extend_from_slice(new_bounds);
+        cuts.sort_unstable();
+        cuts.dedup();
+        for w in cuts.windows(2) {
+            let (lo, hi) = (w[0], w[1].min(m));
+            if lo >= m {
+                break;
+            }
+            let (src, dst) = (owner(old_bounds, lo), owner(new_bounds, lo));
+            if src != dst {
+                plan.push_range(src, dst, lo..hi);
+            }
+        }
+        plan
+    }
+
     /// Diff two arbitrary assignments — O(m), coalescing maximal runs of
     /// consecutive edge ids with the same `(src, dst)` pair into single
     /// range moves.
@@ -339,6 +382,57 @@ mod tests {
             }
             let (va, vb) = (CepView::new(a), CepView::new(b));
             assert!(plan.validate(&va, &vb));
+        });
+    }
+
+    /// Random monotone boundary arrays (same m): the boundary-shift plan's
+    /// move-range union equals the naive per-edge changed-owner diff, and
+    /// same-k shifts stay within the 2(k−1) move bound.
+    #[test]
+    fn between_boundaries_matches_per_edge_diff() {
+        use crate::partition::WeightedCepView;
+        check(0xB0B5, 48, |rng| {
+            let m = 1 + rng.below(3000);
+            let k = 2 + rng.below_usize(24);
+            let mk_bounds = |rng: &mut crate::util::rng::Rng| {
+                let mut cuts: Vec<u64> = (0..k - 1).map(|_| rng.below(m + 1)).collect();
+                cuts.sort_unstable();
+                let mut b = vec![0u64];
+                b.extend(cuts);
+                b.push(m);
+                b
+            };
+            let old_b = mk_bounds(rng);
+            let new_b = mk_bounds(rng);
+            let plan = MigrationPlan::between_boundaries(&old_b, &new_b);
+            assert!(
+                plan.num_moves() <= 2 * (k - 1),
+                "k={k} plan has {} moves\nold={old_b:?}\nnew={new_b:?}",
+                plan.num_moves()
+            );
+            let old_v = WeightedCepView::from_bounds(old_b.clone());
+            let new_v = WeightedCepView::from_bounds(new_b.clone());
+            assert!(plan.validate(&old_v, &new_v), "old={old_b:?} new={new_b:?}");
+            let slow = MigrationPlan::diff(&old_v, &new_v);
+            assert_eq!(slow.moves, plan.moves, "old={old_b:?} new={new_b:?}");
+        });
+    }
+
+    #[test]
+    fn between_boundaries_agrees_with_between_ceps_on_uniform_grids() {
+        use crate::partition::weighted::uniform_bounds;
+        check(0xB0C2, 32, |rng| {
+            let m = 1 + rng.below(4000);
+            let k0 = 1 + rng.below_usize(30);
+            let k1 = 1 + rng.below_usize(30);
+            let a = Cep::new(m as usize, k0);
+            let b = Cep::new(m as usize, k1);
+            let via_cep = MigrationPlan::between_ceps(&a, &b);
+            let via_bounds = MigrationPlan::between_boundaries(
+                &uniform_bounds(m, k0),
+                &uniform_bounds(m, k1),
+            );
+            assert_eq!(via_cep.moves, via_bounds.moves, "m={m} {k0}->{k1}");
         });
     }
 

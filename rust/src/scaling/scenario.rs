@@ -76,6 +76,19 @@ impl Scenario {
         }
     }
 
+    /// A steady scenario: `k` partitions, no scale or churn events — the
+    /// harness for workloads that only exercise superstep-time policies
+    /// (e.g. the skew-aware boundary rebalancer).
+    pub fn steady(k: usize, iterations: u32) -> Scenario {
+        Scenario {
+            name: format!("steady k={k}"),
+            initial_k: k,
+            events: Vec::new(),
+            churn: Vec::new(),
+            total_iterations: iterations,
+        }
+    }
+
     /// The paper's exact §6.4.2 pair at reduced scale: (out, in).
     pub fn paper_pair(k_lo: usize, k_hi: usize, period: u32) -> (Scenario, Scenario) {
         (
@@ -151,6 +164,15 @@ mod tests {
         let s = Scenario::scale_in(36, 10, 10);
         assert_eq!(s.events[0].target_k, 35);
         assert_eq!(s.events[9].target_k, 26);
+    }
+
+    #[test]
+    fn steady_has_no_events() {
+        let s = Scenario::steady(6, 12);
+        assert_eq!(s.initial_k, 6);
+        assert_eq!(s.total_iterations, 12);
+        assert!(s.events.is_empty() && s.churn.is_empty());
+        assert!((0..12).all(|it| s.event_at(it).is_none() && s.churn_at(it).is_none()));
     }
 
     #[test]

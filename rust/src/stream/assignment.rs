@@ -6,7 +6,7 @@
 //! no O(m) per-edge vector exists anywhere on the streaming path.
 
 use crate::partition::cep::Cep;
-use crate::partition::PartitionAssignment;
+use crate::partition::{PartitionAssignment, WeightedCepView};
 use crate::{EdgeId, PartitionId};
 use std::ops::Range;
 
@@ -106,6 +106,148 @@ impl PartitionAssignment for StagedAssignment<'_> {
     }
 }
 
+/// Weighted streaming assignment: a borrowed
+/// [`crate::partition::WeightedCepView`] (non-uniform chunk boundaries,
+/// the skew-aware rebalance substrate) plus the borrowed tombstone list —
+/// the [`StagedAssignment`] shape with the uniform closed forms replaced
+/// by the O(log k) boundary search. Tombstoned ids keep their nominal
+/// chunk owner and are reported dead via
+/// [`PartitionAssignment::is_live`].
+#[derive(Clone, Copy, Debug)]
+pub struct WeightedStagedAssignment<'a> {
+    view: &'a WeightedCepView,
+    tombstones: &'a [EdgeId],
+}
+
+impl<'a> WeightedStagedAssignment<'a> {
+    /// View the weighted boundaries with the given sorted tombstone list.
+    pub fn new(
+        view: &'a WeightedCepView,
+        tombstones: &'a [EdgeId],
+    ) -> WeightedStagedAssignment<'a> {
+        debug_assert!(tombstones.windows(2).all(|w| w[0] < w[1]), "tombstones unsorted");
+        if let Some(&t) = tombstones.last() {
+            debug_assert!(t < view.num_edges(), "tombstone {t} beyond physical id space");
+        }
+        WeightedStagedAssignment { view, tombstones }
+    }
+
+    /// The underlying weighted boundary view.
+    pub fn view(&self) -> &WeightedCepView {
+        self.view
+    }
+
+    /// The sorted tombstone list.
+    pub fn tombstones(&self) -> &[EdgeId] {
+        self.tombstones
+    }
+
+    /// The tombstones falling inside `r`, as a sub-slice — O(log t).
+    pub fn dead_slice(&self, r: Range<EdgeId>) -> &'a [EdgeId] {
+        let a = self.tombstones.partition_point(|&d| d < r.start);
+        let b = self.tombstones.partition_point(|&d| d < r.end);
+        &self.tombstones[a..b]
+    }
+
+    /// Dead ids inside `r` — O(log t).
+    pub fn dead_in(&self, r: Range<EdgeId>) -> u64 {
+        self.dead_slice(r).len() as u64
+    }
+
+    /// Live edges per partition — O(k log t).
+    pub fn live_sizes(&self) -> Vec<u64> {
+        (0..self.view.k() as PartitionId)
+            .map(|p| {
+                let r = self.view.range(p);
+                (r.end - r.start) - self.dead_in(r)
+            })
+            .collect()
+    }
+}
+
+impl PartitionAssignment for WeightedStagedAssignment<'_> {
+    fn k(&self) -> usize {
+        self.view.k()
+    }
+
+    fn num_edges(&self) -> u64 {
+        self.view.num_edges()
+    }
+
+    #[inline]
+    fn partition_of(&self, i: EdgeId) -> PartitionId {
+        self.view.partition_of(i)
+    }
+
+    #[inline]
+    fn is_live(&self, i: EdgeId) -> bool {
+        self.tombstones.binary_search(&i).is_err()
+    }
+
+    fn num_live_edges(&self) -> u64 {
+        self.view.num_edges() - self.tombstones.len() as u64
+    }
+
+    /// Live sizes — what balance metrics should price for a staged state.
+    fn sizes(&self) -> Vec<u64> {
+        self.live_sizes()
+    }
+
+    /// Physical chunk ranges (holes are dead ids; check
+    /// [`PartitionAssignment::is_live`] when walking them).
+    fn as_chunks(&self) -> Option<Vec<Range<EdgeId>>> {
+        Some((0..self.view.k() as PartitionId).map(|p| self.view.range(p)).collect())
+    }
+}
+
+/// A chunk-contiguous assignment over the staged physical id space that
+/// the live quality sweeps ([`crate::stream::quality`]) can walk without
+/// materializing per-edge state: an owned physical range per partition,
+/// the sorted tombstone sub-slice inside any range, and live per-partition
+/// sizes. Implemented by [`StagedAssignment`] (uniform chunks) and
+/// [`WeightedStagedAssignment`] (skew-aware boundaries).
+pub trait LiveChunks: PartitionAssignment {
+    /// Physical edge-id range owned by partition `p` (may contain dead
+    /// ids; mask with [`Self::dead_slice_in`]).
+    fn owned_range(&self, p: PartitionId) -> Range<EdgeId>;
+
+    /// The tombstones falling inside `r`, as a sorted sub-slice.
+    fn dead_slice_in(&self, r: Range<EdgeId>) -> &[EdgeId];
+
+    /// Live edges per partition — O(k log t).
+    fn live_counts(&self) -> Vec<u64>;
+}
+
+impl LiveChunks for StagedAssignment<'_> {
+    fn owned_range(&self, p: PartitionId) -> Range<EdgeId> {
+        self.range(p)
+    }
+
+    fn dead_slice_in(&self, r: Range<EdgeId>) -> &[EdgeId] {
+        self.dead_slice(r)
+    }
+
+    fn live_counts(&self) -> Vec<u64> {
+        self.live_sizes()
+    }
+}
+
+impl LiveChunks for WeightedStagedAssignment<'_> {
+    fn owned_range(&self, p: PartitionId) -> Range<EdgeId> {
+        self.view.range(p)
+    }
+
+    fn dead_slice_in(&self, r: Range<EdgeId>) -> &[EdgeId] {
+        let a = self.tombstones.partition_point(|&d| d < r.start);
+        let b = self.tombstones.partition_point(|&d| d < r.end);
+        &self.tombstones[a..b]
+    }
+
+    fn live_counts(&self) -> Vec<u64> {
+        self.live_sizes()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +275,47 @@ mod tests {
         for i in 0..137u64 {
             assert_eq!(a.partition_of(i), v.partition_of(i));
             assert!(a.is_live(i));
+        }
+    }
+
+    #[test]
+    fn weighted_staged_assignment_respects_tombstones() {
+        let view = WeightedCepView::from_bounds(vec![0, 3, 6, 10, 14]);
+        let dead = vec![0u64, 5, 6, 13];
+        let a = WeightedStagedAssignment::new(&view, &dead);
+        assert_eq!(a.live_sizes(), vec![2, 2, 3, 3]);
+        assert_eq!(a.num_live_edges(), 10);
+        assert_eq!(a.num_edges(), 14);
+        assert!(!a.is_live(5));
+        assert!(a.is_live(4));
+        assert_eq!(a.partition_of(6), 2);
+        assert_eq!(a.sizes(), a.live_sizes());
+        let chunks = a.as_chunks().unwrap();
+        assert_eq!(chunks, vec![0..3, 3..6, 6..10, 10..14]);
+    }
+
+    #[test]
+    fn weighted_on_uniform_grid_matches_staged_assignment() {
+        let dead = vec![2u64, 40, 41, 99];
+        let cep = Cep::new(137, 10);
+        let staged = StagedAssignment::new(cep, &dead);
+        let view = WeightedCepView::uniform(cep);
+        let weighted = WeightedStagedAssignment::new(&view, &dead);
+        assert_eq!(staged.sizes(), weighted.sizes());
+        assert_eq!(staged.as_chunks(), weighted.as_chunks());
+        assert_eq!(staged.num_live_edges(), weighted.num_live_edges());
+        for i in 0..137u64 {
+            assert_eq!(staged.partition_of(i), weighted.partition_of(i));
+            assert_eq!(staged.is_live(i), weighted.is_live(i));
+        }
+        // the LiveChunks walk (quality sweeps) agrees too
+        assert_eq!(staged.live_counts(), weighted.live_counts());
+        for p in 0..10u32 {
+            assert_eq!(staged.owned_range(p), weighted.owned_range(p));
+            assert_eq!(
+                staged.dead_slice_in(staged.owned_range(p)),
+                weighted.dead_slice_in(weighted.owned_range(p))
+            );
         }
     }
 }

@@ -36,7 +36,7 @@ pub mod plan;
 pub mod quality;
 pub mod staged;
 
-pub use assignment::StagedAssignment;
+pub use assignment::{LiveChunks, StagedAssignment, WeightedStagedAssignment};
 pub use compaction::CompactionPolicy;
 pub use mutation::{BatchOutcome, EdgeMutation, MutationBatch};
 pub use plan::ChurnPlan;

@@ -22,6 +22,7 @@
 
 use crate::par::{self, ThreadConfig};
 use crate::partition::cep::{chunk_start, Cep};
+use crate::partition::WeightedCepView;
 use crate::scaling::migration::MigrationPlan;
 use crate::{EdgeId, PartitionId};
 use std::ops::Range;
@@ -99,6 +100,71 @@ impl ChurnPlan {
         // --- appends: the new tail by its new-chunk owner — each chunk is
         //     one contiguous range, so destinations are strictly ascending
         //     and every entry is already a maximal (coalesced) span
+        let mut appends: Vec<(PartitionId, Range<EdgeId>)> = Vec::new();
+        let mut lo = p0;
+        while lo < p1 {
+            let dst = new.partition_of(lo);
+            let hi = new.range(dst).end.min(p1);
+            appends.push((dst, lo..hi));
+            lo = hi;
+        }
+
+        ChurnPlan { retires, moves, appends }
+    }
+
+    /// [`Self::derive`] generalized to **weighted** (non-uniform) chunk
+    /// boundaries — the streaming half of skew-aware rebalancing. Same
+    /// three-way decomposition and the same merged-boundary sweep, with
+    /// owners read from the boundary arrays instead of the closed forms;
+    /// the move count stays ≤ k + k′ + 1 and retires/appends are
+    /// unchanged in shape. `new.num_edges() ≥ old.num_edges()` as in the
+    /// uniform derivation (shrinking happens at compaction only).
+    pub fn derive_weighted(
+        old: &WeightedCepView,
+        new: &WeightedCepView,
+        newly_dead: &[EdgeId],
+    ) -> ChurnPlan {
+        let p0 = old.num_edges();
+        let p1 = new.num_edges();
+        assert!(p1 >= p0, "physical id space shrank {p0} -> {p1}: compact instead");
+        debug_assert!(newly_dead.windows(2).all(|w| w[0] < w[1]));
+
+        let mut retires: Vec<(PartitionId, Range<EdgeId>)> = Vec::new();
+        for &id in newly_dead {
+            assert!(id < p0, "tombstoned id {id} out of range (P0={p0})");
+            let src = old.partition_of(id);
+            match retires.last_mut() {
+                Some((s, r)) if *s == src && r.end == id => r.end = id + 1,
+                _ => retires.push((src, id..id + 1)),
+            }
+        }
+
+        let mut moves = MigrationPlan::default();
+        if p0 > 0 {
+            let mut cuts: Vec<u64> = Vec::with_capacity(old.k() + new.k() + 3);
+            cuts.extend_from_slice(old.bounds());
+            for &s in new.bounds() {
+                if s >= p0 {
+                    break; // bounds are nondecreasing
+                }
+                cuts.push(s);
+            }
+            cuts.push(p0);
+            cuts.sort_unstable();
+            cuts.dedup();
+            for w in cuts.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                if lo >= p0 {
+                    break;
+                }
+                let src = old.partition_of(lo);
+                let dst = new.partition_of(lo);
+                if src != dst {
+                    moves.push_range(src, dst, lo..hi);
+                }
+            }
+        }
+
         let mut appends: Vec<(PartitionId, Range<EdgeId>)> = Vec::new();
         let mut lo = p0;
         while lo < p1 {
@@ -316,6 +382,105 @@ mod tests {
         // 3,4,5 coalesce into one retire range (same chunk owner)
         assert_eq!(plan.retires.len(), 3);
         assert_plan_exact(&plan, &c, &c, &dead);
+    }
+
+    /// Weighted analog of [`assert_plan_exact`]: the plan transitions the
+    /// naive per-id ownership model exactly `old → new`.
+    fn assert_weighted_plan_exact(
+        plan: &ChurnPlan,
+        old: &WeightedCepView,
+        new: &WeightedCepView,
+        newly_dead: &[EdgeId],
+    ) {
+        let p0 = old.num_edges();
+        let p1 = new.num_edges();
+        let mut model: Vec<PartitionId> = (0..p0).map(|i| old.partition_of(i)).collect();
+        model.resize(p1 as usize, PartitionId::MAX);
+        let mut retired: Vec<EdgeId> = Vec::new();
+        for (src, r) in &plan.retires {
+            for i in r.clone() {
+                assert_eq!(model[i as usize], *src, "retire of {i} names wrong owner");
+                retired.push(i);
+            }
+        }
+        retired.sort_unstable();
+        assert_eq!(retired, newly_dead, "retires must cover exactly the batch deletions");
+        for mv in &plan.moves.moves {
+            assert_ne!(mv.src, mv.dst);
+            for i in mv.edges.clone() {
+                assert_eq!(model[i as usize], mv.src, "move of {i} from wrong owner");
+                model[i as usize] = mv.dst;
+            }
+        }
+        for (dst, r) in &plan.appends {
+            for i in r.clone() {
+                assert_eq!(model[i as usize], PartitionId::MAX, "append over occupied {i}");
+                model[i as usize] = *dst;
+            }
+        }
+        for i in 0..p1 {
+            assert_eq!(model[i as usize], new.partition_of(i), "id {i} diverges after plan");
+        }
+    }
+
+    fn random_bounds(rng: &mut Rng, m: u64, k: usize) -> Vec<u64> {
+        let mut cuts: Vec<u64> = (0..k - 1).map(|_| rng.below(m + 1)).collect();
+        cuts.sort_unstable();
+        let mut b = vec![0u64];
+        b.extend(cuts);
+        b.push(m);
+        b
+    }
+
+    #[test]
+    fn weighted_plan_is_exact_for_random_batches() {
+        check(0x5EED, 40, |rng| {
+            let p0 = 100 + rng.below(3000);
+            let p1 = p0 + rng.below(p0 / 4 + 1);
+            let k = 2 + rng.below_usize(16);
+            let old = WeightedCepView::from_bounds(random_bounds(rng, p0, k));
+            let new = WeightedCepView::from_bounds(random_bounds(rng, p1, k));
+            let newly_dead = random_dead(rng, p0, 0.02 * rng.f64());
+            let plan = ChurnPlan::derive_weighted(&old, &new, &newly_dead);
+            assert_weighted_plan_exact(&plan, &old, &new, &newly_dead);
+            assert!(
+                plan.moves.num_moves() <= 2 * k + 1,
+                "p0={p0} p1={p1} k={k}: {} moves not O(k)",
+                plan.moves.num_moves()
+            );
+        });
+    }
+
+    #[test]
+    fn weighted_derive_matches_uniform_derive_on_the_grid() {
+        check(0x9A1D, 32, |rng| {
+            let p0 = 100 + rng.below(2000);
+            let p1 = p0 + rng.below(200);
+            let k0 = 1 + rng.below_usize(12);
+            let k1 = if rng.chance(0.3) { 1 + rng.below_usize(12) } else { k0 };
+            let old = Cep::new(p0 as usize, k0);
+            let new = Cep::new(p1 as usize, k1);
+            let newly_dead = random_dead(rng, p0, 0.02 * rng.f64());
+            let uniform = ChurnPlan::derive(&old, &new, &newly_dead);
+            let weighted = ChurnPlan::derive_weighted(
+                &WeightedCepView::uniform(old),
+                &WeightedCepView::uniform(new),
+                &newly_dead,
+            );
+            assert_eq!(uniform.retires, weighted.retires);
+            assert_eq!(uniform.moves.moves, weighted.moves.moves);
+            assert_eq!(uniform.appends, weighted.appends);
+        });
+    }
+
+    #[test]
+    fn weighted_boundary_shift_only_matches_between_boundaries() {
+        let old = WeightedCepView::from_bounds(vec![0, 250, 500, 750, 1000]);
+        let new = WeightedCepView::from_bounds(vec![0, 100, 500, 900, 1000]);
+        let plan = ChurnPlan::derive_weighted(&old, &new, &[]);
+        assert!(plan.retires.is_empty() && plan.appends.is_empty());
+        let reference = MigrationPlan::between_boundaries(old.bounds(), new.bounds());
+        assert_eq!(plan.moves.moves, reference.moves);
     }
 
     #[test]

@@ -9,27 +9,34 @@
 //! (per-thread replica-set partials, one stamp scratch per shard); counts
 //! are independent of the sharding, so results are identical at any width.
 
-use super::assignment::StagedAssignment;
+use super::assignment::LiveChunks;
 use super::staged::StagedGraph;
 use crate::graph::EdgeSource;
 use crate::par::{self, ThreadConfig};
 use crate::partition::intervals::live_subranges;
 use crate::partition::quality::{balance, Quality};
-use crate::partition::PartitionAssignment;
 
 /// Distinct live vertices per partition `|V(E_p)|`, on the staged graph's
-/// configured executor width.
-pub fn live_vertex_counts(sg: &StagedGraph, assign: &StagedAssignment<'_>) -> Vec<u64> {
+/// configured executor width. Generic over [`LiveChunks`], so it prices
+/// uniform ([`super::StagedAssignment`]) and skew-rebalanced
+/// ([`super::WeightedStagedAssignment`]) chunk boundaries alike.
+pub fn live_vertex_counts<A>(sg: &StagedGraph, assign: &A) -> Vec<u64>
+where
+    A: LiveChunks + Sync + ?Sized,
+{
     live_vertex_counts_with(sg, assign, sg.geo_config().threads)
 }
 
 /// [`live_vertex_counts`] with an explicit executor width; results are
 /// identical at any width.
-pub fn live_vertex_counts_with(
+pub fn live_vertex_counts_with<A>(
     sg: &StagedGraph,
-    assign: &StagedAssignment<'_>,
+    assign: &A,
     threads: ThreadConfig,
-) -> Vec<u64> {
+) -> Vec<u64>
+where
+    A: LiveChunks + Sync + ?Sized,
+{
     let n = sg.num_vertices();
     let k = assign.k();
     let t = threads.threads().min(k.max(1));
@@ -42,8 +49,8 @@ pub fn live_vertex_counts_with(
         let mut counts = vec![0u64; phi - plo];
         for p in plo..phi {
             let epoch = (p - plo) as u32 + 1;
-            let r = assign.range(p as u32);
-            let dead = assign.dead_slice(r.clone());
+            let r = assign.owned_range(p as u32);
+            let dead = assign.dead_slice_in(r.clone());
             for sub in live_subranges(r, dead) {
                 for id in sub {
                     let e = sg.edge(id);
@@ -64,16 +71,22 @@ pub fn live_vertex_counts_with(
 }
 
 /// Replication factor of the live staged state (Def. 1; best = 1.0).
-pub fn live_replication_factor(sg: &StagedGraph, assign: &StagedAssignment<'_>) -> f64 {
+pub fn live_replication_factor<A>(sg: &StagedGraph, assign: &A) -> f64
+where
+    A: LiveChunks + Sync + ?Sized,
+{
     live_vertex_counts(sg, assign).iter().sum::<u64>() as f64 / sg.num_vertices().max(1) as f64
 }
 
 /// RF / EB / VB of the live staged state in one sweep.
-pub fn live_quality(sg: &StagedGraph, assign: &StagedAssignment<'_>) -> Quality {
+pub fn live_quality<A>(sg: &StagedGraph, assign: &A) -> Quality
+where
+    A: LiveChunks + Sync + ?Sized,
+{
     let counts = live_vertex_counts(sg, assign);
     Quality {
         rf: counts.iter().sum::<u64>() as f64 / sg.num_vertices().max(1) as f64,
-        eb: balance(&assign.live_sizes()),
+        eb: balance(&assign.live_counts()),
         vb: balance(&counts),
     }
 }

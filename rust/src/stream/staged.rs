@@ -10,7 +10,7 @@
 //! chosen by the GEO δ-window machinery so that same-neighborhood edges
 //! land contiguously instead of interleaving at random.
 
-use super::assignment::StagedAssignment;
+use super::assignment::{StagedAssignment, WeightedStagedAssignment};
 use super::compaction::CompactionPolicy;
 use super::mutation::{BatchOutcome, EdgeMutation, MutationBatch};
 use super::plan::{merge_sorted_par, ChurnPlan};
@@ -172,6 +172,17 @@ impl StagedGraph {
         StagedAssignment::new(Cep::new(self.physical_edges(), k), &self.tombstones)
     }
 
+    /// The weighted (non-uniform boundary) assignment of the current
+    /// physical space — the skew-aware counterpart of
+    /// [`Self::assignment`]: the borrowed view plus the borrowed
+    /// tombstone list.
+    pub fn weighted_assignment<'a>(
+        &'a self,
+        view: &'a crate::partition::WeightedCepView,
+    ) -> WeightedStagedAssignment<'a> {
+        WeightedStagedAssignment::new(view, &self.tombstones)
+    }
+
     /// Ingest a mutation batch under `k` partitions: tombstone deletions,
     /// stage insertions locality-aware, and derive the executable
     /// [`ChurnPlan`] transitioning `assignment(k)` from its pre-batch to
@@ -185,8 +196,48 @@ impl StagedGraph {
     /// via `newly_dead`), so the outcome is identical to a fully
     /// interleaved scan at any thread count.
     pub fn apply_batch(&mut self, batch: &MutationBatch, k: usize) -> (BatchOutcome, ChurnPlan) {
+        let cep0 = Cep::new(self.physical_edges(), k);
+        let (out, nd) = self.ingest(batch);
+        let cep1 = Cep::new(self.physical_edges(), k);
+        let plan = ChurnPlan::derive(&cep0, &cep1, &nd);
+        self.tombstones = merge_sorted_par(&self.tombstones, &nd, self.cfg.threads);
+        (out, plan)
+    }
+
+    /// [`Self::apply_batch`] against **weighted** (non-uniform) chunk
+    /// boundaries — the streaming half of skew-aware rebalancing.
+    /// `bounds` is the live boundary array (`bounds[0] == 0`, last entry
+    /// == [`Self::physical_edges`]); the batch's appended tail extends the
+    /// last chunk in place (owners of pre-existing ids never shift), and
+    /// the returned plan is derived by
+    /// [`ChurnPlan::derive_weighted`]. The array is updated to cover the
+    /// post-batch physical space.
+    pub fn apply_batch_weighted(
+        &mut self,
+        batch: &MutationBatch,
+        bounds: &mut Vec<u64>,
+    ) -> (BatchOutcome, ChurnPlan) {
+        assert_eq!(
+            *bounds.last().expect("bounds non-empty") as usize,
+            self.physical_edges(),
+            "boundary array out of sync with the physical id space"
+        );
+        let old = crate::partition::WeightedCepView::from_bounds(bounds.clone());
+        let (out, nd) = self.ingest(batch);
+        *bounds.last_mut().unwrap() = self.physical_edges() as u64;
+        let new = crate::partition::WeightedCepView::from_bounds(bounds.clone());
+        let plan = ChurnPlan::derive_weighted(&old, &new, &nd);
+        self.tombstones = merge_sorted_par(&self.tombstones, &nd, self.cfg.threads);
+        (out, plan)
+    }
+
+    /// The mutation core shared by [`Self::apply_batch`] and
+    /// [`Self::apply_batch_weighted`]: tombstone deletions, stage accepted
+    /// insertions locality-aware, and return the batch outcome plus the
+    /// sorted newly-dead ids. Does **not** merge the tombstone list —
+    /// callers derive their churn plan against the pre-merge state first.
+    fn ingest(&mut self, batch: &MutationBatch) -> (BatchOutcome, Vec<EdgeId>) {
         let p0 = self.physical_edges();
-        let cep0 = Cep::new(p0, k);
         let mut out = BatchOutcome::default();
         let mut newly_dead: HashSet<EdgeId> = HashSet::new();
         let mut accepted: Vec<Edge> = Vec::new();
@@ -259,10 +310,7 @@ impl StagedGraph {
             self.staging.push(*e);
         }
 
-        let cep1 = Cep::new(self.physical_edges(), k);
-        let plan = ChurnPlan::derive(&cep0, &cep1, &nd);
-        self.tombstones = merge_sorted_par(&self.tombstones, &nd, self.cfg.threads);
-        (out, plan)
+        (out, nd)
     }
 
     /// Derive the plan for a pure rescale `k → new_k` of the current
@@ -630,6 +678,46 @@ mod tests {
         assert!(
             switches <= 2,
             "staging tail interleaves neighborhoods: {hubs:?}"
+        );
+    }
+
+    #[test]
+    fn weighted_batch_keeps_interior_boundaries_and_stays_exact() {
+        use crate::partition::{PartitionAssignment, WeightedCepView};
+
+        let g = erdos_renyi(60, 300, 11);
+        let m0 = g.num_edges() as u64;
+        let mut sg = StagedGraph::new(g, cfg());
+        // a deliberately skewed boundary array over the initial space
+        let mut bounds = vec![0, m0 / 10, m0 / 2, m0];
+        let before = bounds.clone();
+
+        let mut batch = MutationBatch::new();
+        let mut rng = Rng::new(4);
+        for _ in 0..25 {
+            batch.insert(rng.below(60) as u32, rng.below(60) as u32);
+        }
+        batch.delete(3);
+        batch.delete(4);
+        let (out, plan) = sg.apply_batch_weighted(&batch, &mut bounds);
+        assert_eq!(out.deleted, 2);
+        assert!(out.inserted > 0);
+
+        // interior boundaries are untouched; only the tail grew
+        assert_eq!(&bounds[..bounds.len() - 1], &before[..before.len() - 1]);
+        assert_eq!(*bounds.last().unwrap() as usize, sg.physical_edges());
+        // appended ids all land in the last chunk, no moves among old ids
+        assert!(plan.moves.is_empty(), "tail append must not shift owners");
+        assert_eq!(plan.appended_edges(), out.inserted as u64);
+        assert!(plan.appends.iter().all(|(p, _)| *p == 2));
+
+        // the weighted staged assignment sees the post-batch state
+        let view = WeightedCepView::from_bounds(bounds.clone());
+        let wa = sg.weighted_assignment(&view);
+        assert_eq!(wa.num_live_edges(), sg.live_edges() as u64);
+        assert_eq!(
+            wa.sizes().iter().sum::<u64>(),
+            sg.live_edges() as u64
         );
     }
 

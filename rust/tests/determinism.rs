@@ -216,6 +216,82 @@ fn emulated_net_pricing_is_thread_invariant() {
     }
 }
 
+/// Skew-aware rebalancing decisions are bit-identical at widths 1/2/8
+/// through both controller paths: the cost meter reads only the
+/// deterministic comm-lane tallies and the modeled compute window, the
+/// boundary solver is a pure prefix-sum over them, and the priced nudges
+/// go through the same width-invariant network models — so every nudge
+/// (where it fired, what it measured, what it moved, what it cost) must
+/// fingerprint identically no matter the executor width.
+#[test]
+fn weighted_rebalancing_is_thread_invariant() {
+    use egs::coordinator::{
+        run_scenario, run_streaming, ControllerConfig, RebalanceConfig, StreamingConfig,
+    };
+    use egs::scaling::netsim::NetModelConfig;
+    use egs::scaling::scenario::Scenario;
+
+    let raw = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() }, 4);
+    let g = egs::ordering::geo::order(&raw, &geo_cfg(1)).apply(&raw);
+    let fingerprint = |rs: &[egs::coordinator::RebalanceRecord], final_imb: f64| -> Vec<u64> {
+        rs.iter()
+            .flat_map(|r| {
+                [
+                    r.at_iteration as u64,
+                    r.k as u64,
+                    r.imbalance_before.to_bits(),
+                    r.imbalance_after.to_bits(),
+                    r.moved_edges,
+                    r.range_moves as u64,
+                    r.layout_ranges as u64,
+                    r.net_blocking_ms.to_bits(),
+                    r.net_overlapped_ms.to_bits(),
+                ]
+            })
+            .chain([final_imb.to_bits()])
+            .collect()
+    };
+
+    // batch controller: pure comm-lane skew (zero modeled compute) so the
+    // threshold policy fires on the power-law graph
+    let scenario = Scenario::steady(4, 6);
+    let run = |w: usize| -> Vec<u64> {
+        let cfg = ControllerConfig {
+            net_model: NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() },
+            rebalance: RebalanceConfig::threshold(1.01),
+            threads: ThreadConfig::new(w),
+            ..Default::default()
+        };
+        let out = run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        fingerprint(&out.rebalances, out.final_imbalance)
+    };
+    let reference = run(1);
+    assert!(reference.len() > 1, "rebalance policy never fired");
+    for w in WIDTHS {
+        assert_eq!(run(w), reference, "run width {w}: rebalance decisions diverge");
+    }
+
+    // streaming controller: churn + rescale interleaved with the nudges
+    let srun = |w: usize| -> Vec<u64> {
+        let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
+        let cfg = StreamingConfig {
+            geo: geo_cfg(w),
+            net_model: NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() },
+            rebalance: RebalanceConfig::threshold(1.01),
+            threads: ThreadConfig::new(w),
+            ..Default::default()
+        };
+        let out = run_streaming(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+            .unwrap();
+        fingerprint(&out.rebalances, out.final_imbalance)
+    };
+    let sreference = srun(1);
+    assert!(sreference.len() > 1, "streaming rebalance policy never fired");
+    for w in WIDTHS {
+        assert_eq!(srun(w), sreference, "streaming width {w}: rebalance decisions diverge");
+    }
+}
+
 /// Engine vertex state after a run + churn + rescale + run sequence is
 /// bit-identical at every width (f32 bit patterns compared), and the
 /// interval-set ownership metadata of the layout (per-partition range
