@@ -3,12 +3,16 @@
 committed BENCH_baseline.json.
 
 Both files are JSON lines in the shared schema emitted by
-benches/common/mod.rs:
+benches/common/mod.rs (v2 rows carry a {v, threads, quick} envelope;
+v1 rows without it remain readable):
 
-    {"bench": "fig09", "scenario": "cep/pokec-s", "wall_ms": 1.23, "rf": null,
+    {"v": 2, "bench": "fig09", "scenario": "cep/pokec-s",
+     "threads": 4, "quick": true,
+     "wall_ms": 1.23, "rf": null,
      "layout_ranges": null, "layout_bytes": null,
      "net_model": null, "net_ms": null,
-     "imbalance": null, "rebalance_ms": null}
+     "imbalance": null, "rebalance_ms": null,
+     "p50_ms": null, "p99_ms": null}
 
 Rules:
   * every baseline row with a numeric wall_ms must exist in the fresh run
@@ -32,7 +36,11 @@ Rules:
   * imbalance / rebalance_ms (metered max/mean per-partition cost
     imbalance after the run, and the skew-aware rebalancing cost) are
     surfaced but do not gate: the imbalance-reduction property is
-    enforced by the test suite.
+    enforced by the test suite;
+  * p50_ms / p99_ms (histogram-backed per-superstep or per-repetition
+    latency quantiles from the egs::obs subsystem) are surfaced but do
+    not gate: their cross-thread determinism is checked by
+    trace_check.py and the determinism test suite.
 
 Reseed mode — regenerate the committed baseline from a downloaded
 artifact of a green run:
@@ -162,6 +170,17 @@ def main():
             print(
                 f"  {key[0]}/{key[1]}: imbalance={r['imbalance']} "
                 f"rebalance_ms={r.get('rebalance_ms')}"
+            )
+    # surface histogram-backed latency quantiles (no gating: their
+    # determinism is checked by trace_check.py and the test suite)
+    latency_rows = [
+        (key, r) for key, r in sorted(cur.items()) if r.get("p50_ms") is not None
+    ]
+    if latency_rows:
+        print("latency quantiles (histogram-backed, ms):")
+        for key, r in latency_rows:
+            print(
+                f"  {key[0]}/{key[1]}: p50={r['p50_ms']} p99={r.get('p99_ms')}"
             )
     return 0
 

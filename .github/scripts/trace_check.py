@@ -1,0 +1,180 @@
+#!/usr/bin/env python3
+"""Trace gate: validate `egs elastic --trace-out` JSON-lines files and
+check cross-thread logical equality.
+
+Usage:
+
+    trace_check.py trace_t1.jsonl [trace_t2.jsonl ...]
+
+Each file is the schema-v1 stream written by rust/src/obs/trace.rs: a
+`meta` line (tool, threads, span count, fingerprint over the logical
+span projection), one `span` line per closed span (close order: children
+before parents), then the session's `counter`/`gauge`/`hist` lines.
+
+Per-file structural checks:
+  * every line parses as JSON with "v" == 1 and a known "type";
+  * exactly one meta line, and it is the first line;
+  * span ids are unique; parents precede nothing (a parent id always
+    names another span in the file) and child depth == parent depth + 1;
+    parentless spans have depth 0;
+  * span counters are non-negative integers;
+  * the meta line's span count matches the number of span lines.
+
+Cross-file checks (the determinism contract — the files are the same
+scenario run at different PALLAS_THREADS widths):
+  * the logical projection of the span stream — (id, parent, depth,
+    name, sorted counters) in emission order — is identical across all
+    files;
+  * the meta fingerprints agree (the Rust-side FNV over the same
+    projection), so a projection match with a fingerprint mismatch
+    flags a writer bug rather than a determinism bug.
+
+Exit code 1 on any violation.
+"""
+
+import json
+import sys
+
+SCHEMA = 1
+KNOWN_TYPES = {"meta", "span", "counter", "gauge", "hist"}
+
+
+def fail(msg):
+    print(f"trace_check: FAIL: {msg}")
+    sys.exit(1)
+
+
+def load(path):
+    """Parse one trace file; return (meta, spans, metric_lines)."""
+    meta = None
+    spans = []
+    metrics = 0
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            where = f"{path}:{lineno}"
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(f"{where}: not JSON ({e})")
+            if obj.get("v") != SCHEMA:
+                fail(f"{where}: schema version {obj.get('v')!r}, want {SCHEMA}")
+            t = obj.get("type")
+            if t not in KNOWN_TYPES:
+                fail(f"{where}: unknown line type {t!r}")
+            if t == "meta":
+                if meta is not None:
+                    fail(f"{where}: second meta line")
+                if lineno != 1:
+                    fail(f"{where}: meta line must come first")
+                meta = obj
+            elif t == "span":
+                for field in ("id", "depth", "name", "wall_ns", "counters"):
+                    if field not in obj:
+                        fail(f"{where}: span missing field {field!r}")
+                if not isinstance(obj["counters"], dict):
+                    fail(f"{where}: span counters must be an object")
+                for name, v in obj["counters"].items():
+                    if not isinstance(v, int) or v < 0:
+                        fail(
+                            f"{where}: counter {name!r} = {v!r} "
+                            "(want non-negative integer)"
+                        )
+                spans.append((obj, where))
+            else:
+                metrics += 1
+    if meta is None:
+        fail(f"{path}: no meta line")
+    return meta, spans, metrics
+
+
+def check_structure(path, meta, spans):
+    if meta.get("spans") != len(spans):
+        fail(
+            f"{path}: meta says {meta.get('spans')} spans, "
+            f"file has {len(spans)}"
+        )
+    by_id = {}
+    for obj, where in spans:
+        sid = obj["id"]
+        if sid in by_id:
+            fail(f"{where}: duplicate span id {sid}")
+        by_id[sid] = obj
+    for obj, where in spans:
+        parent = obj.get("parent")
+        if parent is None:
+            if obj["depth"] != 0:
+                fail(f"{where}: root span with depth {obj['depth']}")
+            continue
+        pobj = by_id.get(parent)
+        if pobj is None:
+            fail(f"{where}: parent id {parent} names no span in the file")
+        if obj["depth"] != pobj["depth"] + 1:
+            fail(
+                f"{where}: depth {obj['depth']} but parent "
+                f"depth {pobj['depth']}"
+            )
+
+
+def projection(spans):
+    """The logical (width-invariant) view of the span stream."""
+    return [
+        (
+            obj["id"],
+            obj.get("parent"),
+            obj["depth"],
+            obj["name"],
+            tuple(sorted(obj["counters"].items())),
+        )
+        for obj, _ in spans
+    ]
+
+
+def main():
+    paths = sys.argv[1:]
+    if not paths:
+        print(f"usage: {sys.argv[0]} trace.jsonl [trace2.jsonl ...]")
+        return 2
+    loaded = []
+    for path in paths:
+        meta, spans, metrics = load(path)
+        check_structure(path, meta, spans)
+        loaded.append((path, meta, spans))
+        print(
+            f"trace_check: {path}: ok — threads={meta.get('threads')} "
+            f"spans={len(spans)} metric-lines={metrics} "
+            f"fingerprint={meta.get('fingerprint')}"
+        )
+    ref_path, ref_meta, ref_spans = loaded[0]
+    ref_proj = projection(ref_spans)
+    for path, meta, spans in loaded[1:]:
+        proj = projection(spans)
+        if proj != ref_proj:
+            for i, (a, b) in enumerate(zip(ref_proj, proj)):
+                if a != b:
+                    fail(
+                        f"{path}: logical span stream diverges from "
+                        f"{ref_path} at span index {i}: {a} vs {b}"
+                    )
+            fail(
+                f"{path}: span count {len(proj)} vs {ref_path} "
+                f"count {len(ref_proj)}"
+            )
+        if meta.get("fingerprint") != ref_meta.get("fingerprint"):
+            fail(
+                f"{path}: projection matches {ref_path} but fingerprints "
+                f"differ ({meta.get('fingerprint')} vs "
+                f"{ref_meta.get('fingerprint')}) — writer bug"
+            )
+    if len(loaded) > 1:
+        print(
+            f"trace_check: {len(loaded)} traces logically identical "
+            f"(fingerprint {ref_meta.get('fingerprint')})"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,22 +7,33 @@
 //! * `PALLAS_BENCH_QUICK=1` — replace every dataset with a small synthetic
 //!   stand-in (same skew class, ~100× smaller) and shrink iteration knobs
 //!   via [`scaled`], so the whole suite finishes inside a CI smoke job.
-//! * `PALLAS_BENCH_JSON=<path>` — append one JSON line per recorded row:
-//!   `{"bench": "...", "scenario": "...", "wall_ms": <f64>, "rf": <f64|null>,
+//! * `PALLAS_BENCH_JSON=<path>` — append one JSON line per recorded row.
+//!   Every row flows through the single writer in [`BenchLog::finish`],
+//!   which stamps the shared envelope — `"v": 2` (row schema version),
+//!   `"threads"` (the resolved `PALLAS_THREADS` width) and `"quick"`
+//!   (smoke mode) — so trajectory tooling never has to guess the run
+//!   configuration. Row fields:
+//!   `{"v": 2, "bench": "...", "scenario": "...", "threads": <u64>,
+//!   "quick": <bool>, "wall_ms": <f64>, "rf": <f64|null>,
 //!   "layout_ranges": <u64|null>, "layout_bytes": <u64|null>,
-//!   "net_model": <"closed"|"emulated"|null>, "net_ms": <f64|null>}`.
+//!   "net_model": <"closed"|"emulated"|null>, "net_ms": <f64|null>,
+//!   "imbalance": <f64|null>, "rebalance_ms": <f64|null>,
+//!   "p50_ms": <f64|null>, "p99_ms": <f64|null>}`.
 //!   `layout_ranges`/`layout_bytes` report the interval-set ownership
 //!   metadata resident in a `PartitionLayout` after the measured run
-//!   ([`BenchLog::row_layout`]; `null` for benches without a layout).
-//!   `net_model`/`net_ms` report which network-cost model priced the
-//!   scenario and the priced network milliseconds ([`BenchLog::row_net`];
-//!   `null` for rows without network pricing). `imbalance`/`rebalance_ms`
-//!   report the metered max/mean per-partition cost imbalance after the
-//!   run and the cost of skew-aware boundary rebalancing
-//!   ([`BenchLog::row_rebalance`]; `null` for benches without the
-//!   policy). All benches share this schema; CI points every bench at the
-//!   same `BENCH_ci.json` and diffs it against the committed
-//!   `BENCH_baseline.json` (>2× wall-time regressions fail the build).
+//!   (`null` for benches without a layout). `net_model`/`net_ms` report
+//!   which network-cost model priced the scenario and the priced network
+//!   milliseconds. `imbalance`/`rebalance_ms` report the metered max/mean
+//!   per-partition cost imbalance after the run and the cost of
+//!   skew-aware boundary rebalancing (`null` for benches without the
+//!   policy). `p50_ms`/`p99_ms` report histogram-backed per-superstep (or
+//!   per-repetition) latency quantiles from the [`egs::obs`] subsystem
+//!   (`null` for benches that measure a single aggregate wall time).
+//!   Rows are recorded with the fluent [`BenchLog::record`] builder; the
+//!   legacy `row_*` helpers delegate to it. All benches share this
+//!   schema; CI points every bench at the same `BENCH_ci.json` and diffs
+//!   it against the committed `BENCH_baseline.json` (>2× wall-time
+//!   regressions fail the build).
 #![allow(dead_code)] // each bench uses a subset of the harness
 
 use egs::graph::generators::{lattice2d, rmat, RmatParams};
@@ -68,6 +79,9 @@ pub fn timed_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (v, ms(t.elapsed()))
 }
 
+/// Bench row schema version stamped into every emitted JSON line.
+pub const ROW_SCHEMA: u32 = 2;
+
 /// One recorded bench scenario (the JSON-lines row).
 struct Row {
     scenario: String,
@@ -77,16 +91,63 @@ struct Row {
     net: Option<(&'static str, f64)>,
     imbalance: Option<f64>,
     rebalance_ms: Option<f64>,
+    latency: Option<(f64, f64)>,
 }
 
-/// Row collector for one bench binary. Call [`BenchLog::row`] (or
-/// [`BenchLog::row_layout`] / [`BenchLog::row_net`] /
-/// [`BenchLog::row_layout_net`] when a `PartitionLayout` or a network
-/// model is in play) per measured scenario and [`BenchLog::finish`]
+/// Row collector for one bench binary. Call [`BenchLog::record`] per
+/// measured scenario (chaining the telemetry the bench has — layout,
+/// network, rebalance, latency quantiles) and [`BenchLog::finish`]
 /// before exiting.
 pub struct BenchLog {
     bench: String,
     rows: Vec<Row>,
+}
+
+/// Fluent handle to a just-recorded row; each method attaches one
+/// telemetry group and returns the handle for chaining.
+pub struct RowMut<'a> {
+    row: &'a mut Row,
+}
+
+impl RowMut<'_> {
+    /// Attach the replication factor of the measured partition.
+    pub fn rf(self, rf: f64) -> Self {
+        self.row.rf = Some(rf);
+        self
+    }
+
+    /// Attach the interval-set ownership telemetry of the measured
+    /// layout: resident interval count and metadata bytes
+    /// (`PartitionLayout::total_ranges` / `metadata_bytes`).
+    pub fn layout(self, ranges: u64, bytes: u64) -> Self {
+        self.row.layout = Some((ranges, bytes));
+        self
+    }
+
+    /// Attach network-pricing telemetry: which model (`"closed"` /
+    /// `"emulated"`, see `NetworkModel::name`) priced the scenario and
+    /// the priced network milliseconds.
+    pub fn net(self, model: &'static str, net_ms: f64) -> Self {
+        self.row.net = Some((model, net_ms));
+        self
+    }
+
+    /// Attach the metered max/mean per-partition cost imbalance after
+    /// the run and the total rebalance milliseconds (solver + migration
+    /// wall + blocking net; `None` when the policy was off).
+    pub fn rebalance(self, imbalance: f64, rebalance_ms: Option<f64>) -> Self {
+        self.row.imbalance = Some(imbalance);
+        self.row.rebalance_ms = rebalance_ms;
+        self
+    }
+
+    /// Attach histogram-backed latency quantiles in milliseconds
+    /// (per-superstep for the controller benches, per-repetition for
+    /// timer-driven ones; log-bucketed, ≤ 12.5% resolution error).
+    pub fn latency(self, p50_ms: f64, p99_ms: f64) -> Self {
+        self.row.latency = Some((p50_ms, p99_ms));
+        self
+    }
 }
 
 impl BenchLog {
@@ -95,23 +156,32 @@ impl BenchLog {
         BenchLog { bench: bench.to_string(), rows: Vec::new() }
     }
 
-    /// Record one scenario: wall time in milliseconds and an optional
-    /// replication factor (`None` → `null` in the JSON row).
-    pub fn row(&mut self, scenario: &str, wall_ms: f64, rf: Option<f64>) {
+    /// Record one scenario (wall time in milliseconds); chain the
+    /// returned [`RowMut`] to attach optional telemetry.
+    pub fn record(&mut self, scenario: &str, wall_ms: f64) -> RowMut<'_> {
         self.rows.push(Row {
             scenario: scenario.to_string(),
             wall_ms,
-            rf,
+            rf: None,
             layout: None,
             net: None,
             imbalance: None,
             rebalance_ms: None,
+            latency: None,
         });
+        RowMut { row: self.rows.last_mut().expect("just pushed") }
     }
 
-    /// [`Self::row`] plus the interval-set ownership telemetry of the
-    /// measured layout: resident interval count and metadata bytes
-    /// (`PartitionLayout::total_ranges` / `metadata_bytes`).
+    /// Record one scenario with an optional replication factor
+    /// (legacy wrapper around [`Self::record`]).
+    pub fn row(&mut self, scenario: &str, wall_ms: f64, rf: Option<f64>) {
+        let r = self.record(scenario, wall_ms);
+        if let Some(rf) = rf {
+            r.rf(rf);
+        }
+    }
+
+    /// [`Self::row`] plus layout telemetry (legacy wrapper).
     pub fn row_layout(
         &mut self,
         scenario: &str,
@@ -120,20 +190,13 @@ impl BenchLog {
         layout_ranges: u64,
         layout_bytes: u64,
     ) {
-        self.rows.push(Row {
-            scenario: scenario.to_string(),
-            wall_ms,
-            rf,
-            layout: Some((layout_ranges, layout_bytes)),
-            net: None,
-            imbalance: None,
-            rebalance_ms: None,
-        });
+        let r = self.record(scenario, wall_ms).layout(layout_ranges, layout_bytes);
+        if let Some(rf) = rf {
+            r.rf(rf);
+        }
     }
 
-    /// [`Self::row`] plus the network-pricing telemetry: which model
-    /// (`"closed"` / `"emulated"`, see `NetworkModel::name`) priced the
-    /// scenario and the priced network milliseconds.
+    /// [`Self::row`] plus network-pricing telemetry (legacy wrapper).
     pub fn row_net(
         &mut self,
         scenario: &str,
@@ -142,19 +205,13 @@ impl BenchLog {
         net_model: &'static str,
         net_ms: f64,
     ) {
-        self.rows.push(Row {
-            scenario: scenario.to_string(),
-            wall_ms,
-            rf,
-            layout: None,
-            net: Some((net_model, net_ms)),
-            imbalance: None,
-            rebalance_ms: None,
-        });
+        let r = self.record(scenario, wall_ms).net(net_model, net_ms);
+        if let Some(rf) = rf {
+            r.rf(rf);
+        }
     }
 
-    /// Layout and network telemetry together (the end-to-end controller
-    /// benches report both).
+    /// Layout and network telemetry together (legacy wrapper).
     #[allow(clippy::too_many_arguments)]
     pub fn row_layout_net(
         &mut self,
@@ -166,22 +223,16 @@ impl BenchLog {
         net_model: &'static str,
         net_ms: f64,
     ) {
-        self.rows.push(Row {
-            scenario: scenario.to_string(),
-            wall_ms,
-            rf,
-            layout: Some((layout_ranges, layout_bytes)),
-            net: Some((net_model, net_ms)),
-            imbalance: None,
-            rebalance_ms: None,
-        });
+        let r = self
+            .record(scenario, wall_ms)
+            .layout(layout_ranges, layout_bytes)
+            .net(net_model, net_ms);
+        if let Some(rf) = rf {
+            r.rf(rf);
+        }
     }
 
-    /// Full telemetry for skew-aware rebalancing benches: layout and
-    /// network columns plus the metered max/mean cost imbalance after the
-    /// run and the total rebalance milliseconds (solver + migration wall
-    /// + blocking net; 0.0 when the policy never fired, `None` when it
-    /// was off).
+    /// Full rebalancing telemetry (legacy wrapper).
     #[allow(clippy::too_many_arguments)]
     pub fn row_rebalance(
         &mut self,
@@ -195,19 +246,20 @@ impl BenchLog {
         imbalance: f64,
         rebalance_ms: Option<f64>,
     ) {
-        self.rows.push(Row {
-            scenario: scenario.to_string(),
-            wall_ms,
-            rf,
-            layout: Some((layout_ranges, layout_bytes)),
-            net: Some((net_model, net_ms)),
-            imbalance: Some(imbalance),
-            rebalance_ms,
-        });
+        let r = self
+            .record(scenario, wall_ms)
+            .layout(layout_ranges, layout_bytes)
+            .net(net_model, net_ms)
+            .rebalance(imbalance, rebalance_ms);
+        if let Some(rf) = rf {
+            r.rf(rf);
+        }
     }
 
     /// Append the collected rows to `$PALLAS_BENCH_JSON` (JSON lines, the
-    /// shared trajectory schema). A no-op when the knob is unset.
+    /// shared trajectory schema). This is the single writer: every row
+    /// gets the `v`/`threads`/`quick` envelope stamped here and nowhere
+    /// else. A no-op when the knob is unset.
     pub fn finish(self) {
         let Some(path) = std::env::var_os("PALLAS_BENCH_JSON") else {
             return;
@@ -217,6 +269,8 @@ impl BenchLog {
             .append(true)
             .open(&path)
             .unwrap_or_else(|e| panic!("open {}: {e}", path.to_string_lossy()));
+        let threads = egs::par::ThreadConfig::from_env().threads();
+        let quick_mode = quick();
         for row in &self.rows {
             let rf_s = match row.rf {
                 Some(x) => format!("{x:.6}"),
@@ -238,12 +292,19 @@ impl BenchLog {
                 Some(x) => format!("{x:.3}"),
                 None => "null".into(),
             };
+            let (p50_s, p99_s) = match row.latency {
+                Some((p50, p99)) => (format!("{p50:.3}"), format!("{p99:.3}")),
+                None => ("null".into(), "null".into()),
+            };
             writeln!(
                 fh,
-                "{{\"bench\":\"{}\",\"scenario\":\"{}\",\"wall_ms\":{:.3},\"rf\":{},\
+                "{{\"v\":{ROW_SCHEMA},\"bench\":\"{}\",\"scenario\":\"{}\",\
+                 \"threads\":{threads},\"quick\":{quick_mode},\
+                 \"wall_ms\":{:.3},\"rf\":{},\
                  \"layout_ranges\":{},\"layout_bytes\":{},\
                  \"net_model\":{},\"net_ms\":{},\
-                 \"imbalance\":{},\"rebalance_ms\":{}}}",
+                 \"imbalance\":{},\"rebalance_ms\":{},\
+                 \"p50_ms\":{},\"p99_ms\":{}}}",
                 self.bench,
                 row.scenario,
                 row.wall_ms,
@@ -253,7 +314,9 @@ impl BenchLog {
                 model_s,
                 net_ms_s,
                 imb_s,
-                reb_s
+                reb_s,
+                p50_s,
+                p99_s
             )
             .expect("write bench row");
         }

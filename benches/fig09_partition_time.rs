@@ -63,7 +63,12 @@ fn main() {
                 _ => unreachable!(),
             };
             cells.push(secs(timing.secs()));
-            log.row(&format!("{name}/{ds}"), timing.secs() * 1e3, None);
+            // p50 = the exact median; p99 = the histogram-backed tail
+            // over the timed repetitions (single-rep methods: both equal)
+            log.record(&format!("{name}/{ds}"), timing.secs() * 1e3).latency(
+                timing.median.as_secs_f64() * 1e3,
+                timing.p99.as_secs_f64() * 1e3,
+            );
         }
     }
     for (name, cells) in rows {

@@ -73,17 +73,11 @@ fn main() {
         } else {
             None
         };
-        log.row_rebalance(
-            scenario_key,
-            out.all_s * 1e3,
-            None,
-            out.layout_ranges as u64,
-            out.layout_bytes as u64,
-            net_model.model.name(),
-            out.net_s * 1e3,
-            out.final_imbalance,
-            rebalance_ms,
-        );
+        log.record(scenario_key, out.all_s * 1e3)
+            .layout(out.layout_ranges as u64, out.layout_bytes as u64)
+            .net(net_model.model.name(), out.net_s * 1e3)
+            .rebalance(out.final_imbalance, rebalance_ms)
+            .latency(out.superstep_p50_ms, out.superstep_p99_ms);
     }
     t.print();
     log.finish();

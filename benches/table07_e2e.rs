@@ -65,15 +65,10 @@ fn main() {
                 }
                 _ => format!("{method}/{}", scenario.name),
             };
-            log.row_layout_net(
-                &scenario_key,
-                out.all_s * 1e3,
-                None,
-                out.layout_ranges as u64,
-                out.layout_bytes as u64,
-                net_model.model.name(),
-                out.net_s * 1e3,
-            );
+            log.record(&scenario_key, out.all_s * 1e3)
+                .layout(out.layout_ranges as u64, out.layout_bytes as u64)
+                .net(net_model.model.name(), out.net_s * 1e3)
+                .latency(out.superstep_p50_ms, out.superstep_p99_ms);
         }
         t.print();
     }

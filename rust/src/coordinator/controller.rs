@@ -20,6 +20,7 @@ use super::provisioner::{LatencyModel, Provisioner};
 use super::state::ClusterState;
 use crate::engine::{apps::pagerank, Combine, Engine};
 use crate::graph::Graph;
+use crate::obs;
 use crate::ordering::geo::GeoConfig;
 use crate::par::ThreadConfig;
 use crate::partition::bvc::BvcState;
@@ -219,6 +220,12 @@ pub struct RunBreakdown {
     pub rebalance_s: f64,
     /// metered max/mean cost imbalance after the final superstep
     pub final_imbalance: f64,
+    /// histogram-backed p50 superstep wall latency across all APP
+    /// iterations, in milliseconds (log-bucketed, ≤ 12.5% bucket error;
+    /// 0 when the scenario ran no supersteps)
+    pub superstep_p50_ms: f64,
+    /// histogram-backed p99 superstep wall latency, in milliseconds
+    pub superstep_p99_ms: f64,
     /// per-event audit log of the executed plans
     pub events: Vec<EventRecord>,
     /// per-nudge audit log of the rebalance policy
@@ -275,6 +282,12 @@ where
     let m = g.num_edges();
     let n = g.num_vertices();
     let mut cluster = ClusterState::new(scenario.initial_k);
+    let scn = obs::span("scenario");
+    scn.add("iterations", scenario.total_iterations as u64);
+    scn.add("initial_k", scenario.initial_k as u64);
+    // superstep wall-latency distribution for the breakdown's p50/p99
+    // columns — works with or without an active obs session
+    let superstep_hist = obs::Histogram::new();
 
     // ---- INIT: initial partition + engine + fleet boot
     let t_init = Instant::now();
@@ -321,10 +334,15 @@ where
     for it in 0..scenario.total_iterations {
         // ---- SCALE event? Derive a plan, price it, execute it.
         if let Some(ev) = scenario.event_at(it) {
+            let ev_sp = obs::span("event:scale");
             let from_k = cluster.k;
             let t_scale = Instant::now();
-            let (plan, new_assignment) =
-                plan_rescale(g, &mut method_state, &assignment, &cfg.method, ev.target_k);
+            let (plan, new_assignment) = {
+                let psp = obs::span("phase:plan-derive");
+                let r = plan_rescale(g, &mut method_state, &assignment, &cfg.method, ev.target_k);
+                psp.add("range_moves", r.0.num_moves() as u64);
+                r
+            };
             let migrated = plan.migrated_edges();
             // network time for moving edge data + values, under the
             // configured model; in emulated overlap mode the migration
@@ -361,7 +379,7 @@ where
                 migrated,
                 std::time::Duration::from_secs_f64(total),
             );
-            event_log.push(EventRecord {
+            let rec = EventRecord {
                 from_k,
                 to_k: ev.target_k,
                 migrated_edges: migrated,
@@ -369,7 +387,9 @@ where
                 layout_ranges: engine.layout().total_ranges(),
                 net_blocking_ms: cost.blocking_s * 1e3,
                 net_overlapped_ms: cost.overlapped_s * 1e3,
-            });
+            };
+            emit_event_span(&ev_sp, &rec);
+            event_log.push(rec);
         }
 
         // ---- APP: one PageRank iteration
@@ -377,6 +397,9 @@ where
         engine.comm.reset();
         let (contrib, _) =
             engine.superstep(StepKind::PageRank, Combine::Sum, &ranks, &aux, &active)?;
+        let ss_ns = t_app.elapsed().as_nanos() as u64;
+        superstep_hist.record(ss_ns);
+        obs::hist_record("superstep_wall_ns", ss_ns);
         for v in 0..n {
             ranks[v] = base + pagerank::DAMPING * contrib[v];
         }
@@ -397,6 +420,7 @@ where
                     let new_bounds = balanced_boundaries(&old_bounds, &costs);
                     let plan = MigrationPlan::between_boundaries(&old_bounds, &new_bounds);
                     if plan.num_moves() > 0 {
+                        let rb_sp = obs::span("event:rebalance");
                         let imb_after =
                             imbalance(&predicted_costs(&old_bounds, &costs, &new_bounds));
                         // the shift may hide behind the window it was
@@ -415,7 +439,7 @@ where
                         );
                         let view = WeightedCepView::from_bounds(new_bounds);
                         engine.apply_migration(g, &plan, &view, &mut backend_for)?;
-                        rebalance_log.push(RebalanceRecord {
+                        let rec = RebalanceRecord {
                             at_iteration: it,
                             k: cluster.k,
                             imbalance_before: imb_before,
@@ -425,7 +449,9 @@ where
                             layout_ranges: engine.layout().total_ranges(),
                             net_blocking_ms: cost.blocking_s * 1e3,
                             net_overlapped_ms: cost.overlapped_s * 1e3,
-                        });
+                        };
+                        emit_rebalance_span(&rb_sp, &rec);
+                        rebalance_log.push(rec);
                         assignment = ActiveAssignment::Weighted(view);
                         rebalance_s += t_reb.elapsed().as_secs_f64() + cost.blocking_s;
                         net_s += cost.total_s;
@@ -442,6 +468,11 @@ where
     if init_s == 0.0 {
         init_s = f64::MIN_POSITIVE;
     }
+    let ss = superstep_hist.snapshot();
+    scn.add("supersteps", ss.count);
+    scn.add("events", event_log.len() as u64);
+    scn.add("rebalances", rebalance_log.len() as u64);
+    scn.add("final_k", cluster.k as u64);
     Ok(RunBreakdown {
         method: cfg.method.clone(),
         all_s: init_s + app_s + scale_s + rebalance_s,
@@ -456,6 +487,8 @@ where
         layout_bytes: engine.layout().metadata_bytes(),
         rebalance_s,
         final_imbalance,
+        superstep_p50_ms: ss.quantile(0.50) as f64 / 1e6,
+        superstep_p99_ms: ss.quantile(0.99) as f64 / 1e6,
         events: event_log,
         rebalances: rebalance_log,
     })
@@ -670,6 +703,12 @@ pub struct StreamingBreakdown {
     /// any end-of-run flush, which rebuilds the engine and clears the
     /// comm lanes)
     pub final_imbalance: f64,
+    /// histogram-backed p50 superstep wall latency across all APP
+    /// iterations, in milliseconds (log-bucketed, ≤ 12.5% bucket error;
+    /// 0 when the scenario ran no supersteps)
+    pub superstep_p50_ms: f64,
+    /// histogram-backed p99 superstep wall latency, in milliseconds
+    pub superstep_p99_ms: f64,
     /// per-rescale audit log
     pub events: Vec<EventRecord>,
     /// per-batch audit log
@@ -696,6 +735,10 @@ where
     let mut k = scenario.initial_k;
     let mut cluster = ClusterState::new(k);
     let mut rng = Rng::new(cfg.seed);
+    let scn = obs::span("scenario");
+    scn.add("iterations", scenario.total_iterations as u64);
+    scn.add("initial_k", k as u64);
+    let superstep_hist = obs::Histogram::new();
 
     // ---- INIT: GEO-order the base, boot engine + fleet
     let t_init = Instant::now();
@@ -749,6 +792,7 @@ where
     for it in 0..scenario.total_iterations {
         // ---- CHURN batch? Ingest, derive the delta plan, apply or fold.
         if let Some(ce) = scenario.churn_at(it) {
+            let ev_sp = obs::span("event:churn");
             let t = Instant::now();
             let batch = random_batch(&mut rng, &sg, ce.inserts, ce.deletes);
             let (outcome, plan) = match wbounds.as_mut() {
@@ -820,7 +864,7 @@ where
             } else {
                 f64::NAN
             };
-            churn_log.push(ChurnRecord {
+            let rec = ChurnRecord {
                 at_iteration: it,
                 inserted: outcome.inserted,
                 deleted: outcome.deleted,
@@ -835,25 +879,36 @@ where
                 net_blocking_ms: cost.blocking_s * 1e3,
                 net_overlapped_ms: cost.overlapped_s * 1e3,
                 rf,
-            });
+            };
+            emit_churn_span(&ev_sp, &rec);
+            churn_log.push(rec);
         }
 
         // ---- SCALE event? O(k) range moves, same engine path as churn.
         if let Some(ev) = scenario.event_at(it) {
+            let ev_sp = obs::span("event:scale");
             let from_k = k;
             let t_scale = Instant::now();
-            let plan = match wbounds.as_mut() {
-                // nudged boundaries → the uniform grid of the new k (the
-                // same reset-on-rescale rule as the non-streaming path)
-                Some(b) => {
-                    let old = WeightedCepView::from_bounds(b.clone());
-                    let target =
-                        WeightedCepView::uniform(Cep::new(sg.physical_edges(), ev.target_k));
-                    let plan = ChurnPlan::derive_weighted(&old, &target, &[]);
-                    *b = target.bounds().to_vec();
-                    plan
-                }
-                None => sg.rescale_plan(k, ev.target_k),
+            let plan = {
+                let psp = obs::span("phase:plan-derive");
+                let plan = match wbounds.as_mut() {
+                    // nudged boundaries → the uniform grid of the new k
+                    // (the same reset-on-rescale rule as the non-streaming
+                    // path)
+                    Some(b) => {
+                        let old = WeightedCepView::from_bounds(b.clone());
+                        let target = WeightedCepView::uniform(Cep::new(
+                            sg.physical_edges(),
+                            ev.target_k,
+                        ));
+                        let plan = ChurnPlan::derive_weighted(&old, &target, &[]);
+                        *b = target.bounds().to_vec();
+                        plan
+                    }
+                    None => sg.rescale_plan(k, ev.target_k),
+                };
+                psp.add("range_ops", plan.range_ops() as u64);
+                plan
             };
             let migrated = plan.moved_edges();
             // last window consumer of the iteration — no need to mark it
@@ -876,7 +931,7 @@ where
             scale_s += total;
             net_s += cost.total_s;
             cluster.record_scale(k, migrated, std::time::Duration::from_secs_f64(total));
-            event_log.push(EventRecord {
+            let rec = EventRecord {
                 from_k,
                 to_k: k,
                 migrated_edges: migrated,
@@ -884,7 +939,9 @@ where
                 layout_ranges: engine.layout().total_ranges(),
                 net_blocking_ms: cost.blocking_s * 1e3,
                 net_overlapped_ms: cost.overlapped_s * 1e3,
-            });
+            };
+            emit_event_span(&ev_sp, &rec);
+            event_log.push(rec);
         }
 
         // ---- APP: one PageRank iteration over the live graph
@@ -893,6 +950,9 @@ where
         let base = (1.0 - pagerank::DAMPING) / n.max(1) as f32;
         let (contrib, _) =
             engine.superstep(StepKind::PageRank, Combine::Sum, &ranks, &aux, &active)?;
+        let ss_ns = t_app.elapsed().as_nanos() as u64;
+        superstep_hist.record(ss_ns);
+        obs::hist_record("superstep_wall_ns", ss_ns);
         for v in 0..n {
             ranks[v] = base + pagerank::DAMPING * contrib[v];
         }
@@ -911,6 +971,7 @@ where
                 let new_bounds = balanced_boundaries(b, &costs);
                 let plan = MigrationPlan::between_boundaries(b, &new_bounds);
                 if plan.num_moves() > 0 {
+                    let rb_sp = obs::span("event:rebalance");
                     let imb_after = imbalance(&predicted_costs(b, &costs, &new_bounds));
                     let app = app_snapshot(&engine, &cfg.net_model);
                     if app.is_some() {
@@ -929,7 +990,7 @@ where
                         let assign = sg.weighted_assignment(&view);
                         engine.apply_migration(&sg, &plan, &assign, &mut backend_for)?;
                     }
-                    rebalance_log.push(RebalanceRecord {
+                    let rec = RebalanceRecord {
                         at_iteration: it,
                         k,
                         imbalance_before: imb_before,
@@ -939,7 +1000,9 @@ where
                         layout_ranges: engine.layout().total_ranges(),
                         net_blocking_ms: cost.blocking_s * 1e3,
                         net_overlapped_ms: cost.overlapped_s * 1e3,
-                    });
+                    };
+                    emit_rebalance_span(&rb_sp, &rec);
+                    rebalance_log.push(rec);
                     *b = new_bounds;
                     rebalance_s += t_reb.elapsed().as_secs_f64() + cost.blocking_s;
                     net_s += cost.total_s;
@@ -989,6 +1052,13 @@ where
     } else {
         None
     };
+    let ss = superstep_hist.snapshot();
+    scn.add("supersteps", ss.count);
+    scn.add("events", event_log.len() as u64);
+    scn.add("churn_batches", churn_log.len() as u64);
+    scn.add("rebalances", rebalance_log.len() as u64);
+    scn.add("compactions", sg.compactions() as u64);
+    scn.add("final_k", k as u64);
     Ok(StreamingBreakdown {
         name: scenario.name.clone(),
         all_s: init_s + app_s + scale_s + churn_s + rebalance_s,
@@ -1007,6 +1077,8 @@ where
         live_edges: sg.live_edges(),
         rebalance_s,
         final_imbalance,
+        superstep_p50_ms: ss.quantile(0.50) as f64 / 1e6,
+        superstep_p99_ms: ss.quantile(0.99) as f64 / 1e6,
         events: event_log,
         churn_events: churn_log,
         rebalances: rebalance_log,
@@ -1066,6 +1138,50 @@ fn grow_state(
             1.0 / d as f32
         }
     }));
+}
+
+/// Mirror a scale event's audit record into its span. The record structs
+/// stay the single source of logical tallies — spans are views over
+/// them, never parallel bookkeeping. Millisecond fields are stored as
+/// integer nanoseconds ([`obs::span::secs_to_ns`]), deterministic
+/// because the priced costs are bit-identical at any thread width.
+fn emit_event_span(sp: &obs::SpanGuard, r: &EventRecord) {
+    sp.add("from_k", r.from_k as u64);
+    sp.add("to_k", r.to_k as u64);
+    sp.add("migrated_edges", r.migrated_edges);
+    sp.add("range_moves", r.range_moves as u64);
+    sp.add("layout_ranges", r.layout_ranges as u64);
+    sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
+    sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
+}
+
+/// Mirror a churn batch's audit record into its span (see
+/// [`emit_event_span`]). The `rf` audit field is skipped — it is NaN
+/// unless `audit_rf` is set and is a quality gauge, not a tally.
+fn emit_churn_span(sp: &obs::SpanGuard, r: &ChurnRecord) {
+    sp.add("inserted", r.inserted as u64);
+    sp.add("deleted", r.deleted as u64);
+    sp.add("retired", r.retired);
+    sp.add("moved", r.moved);
+    sp.add("appended", r.appended);
+    sp.add("range_ops", r.range_ops as u64);
+    sp.add("layout_ranges", r.layout_ranges as u64);
+    sp.add("tombstones_after", r.tombstones_after as u64);
+    sp.add("compacted", r.compacted as u64);
+    sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
+    sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
+}
+
+/// Mirror a boundary nudge's audit record into its span (see
+/// [`emit_event_span`]). The imbalance ratios stay record-only — they
+/// are float gauges, not logical tallies.
+fn emit_rebalance_span(sp: &obs::SpanGuard, r: &RebalanceRecord) {
+    sp.add("k", r.k as u64);
+    sp.add("moved_edges", r.moved_edges);
+    sp.add("range_moves", r.range_moves as u64);
+    sp.add("layout_ranges", r.layout_ranges as u64);
+    sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
+    sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
 }
 
 /// Snapshot the engine's metered superstep traffic for overlap pricing —

@@ -21,6 +21,7 @@ pub mod mirrors;
 pub mod worker;
 
 use crate::graph::EdgeSource;
+use crate::obs;
 use crate::par::{self, ThreadConfig};
 use crate::partition::PartitionAssignment;
 use crate::runtime::{ComputeBackend, StepKind};
@@ -122,7 +123,11 @@ impl Engine {
         F: FnMut(usize) -> Box<dyn ComputeBackend>,
         P: PartitionAssignment + ?Sized,
     {
+        let sp = obs::span("phase:splice");
+        sp.add("range_moves", plan.num_moves() as u64);
+        sp.add("migrated_edges", plan.migrated_edges());
         let changed = self.layout.apply_plan(g, plan, new_part);
+        sp.add("touched_partitions", changed.len() as u64);
         self.refresh_workers(new_part, &changed, &mut backend_for)
     }
 
@@ -144,7 +149,13 @@ impl Engine {
         F: FnMut(usize) -> Box<dyn ComputeBackend>,
         P: PartitionAssignment + ?Sized,
     {
+        let sp = obs::span("phase:splice");
+        sp.add("range_ops", plan.range_ops() as u64);
+        sp.add("retired_edges", plan.retired_edges());
+        sp.add("moved_edges", plan.moved_edges());
+        sp.add("appended_edges", plan.appended_edges());
         let changed = self.layout.apply_churn(g, plan, new_part);
+        sp.add("touched_partitions", changed.len() as u64);
         self.refresh_workers(new_part, &changed, &mut backend_for)
     }
 
@@ -260,12 +271,16 @@ impl Engine {
         // depends only on n, so it cannot break width-invariance
         let threads = if n < 64 { ThreadConfig::serial() } else { self.threads };
         let k = self.workers.len();
+        let sstep = obs::span("superstep");
+        sstep.add("partitions", k as u64);
+        sstep.add("vertices", n as u64);
 
         // --- 1. scatter: meter master→mirror broadcast of active vertices
         // (per-partition tallies with per-master breakdown, one bulk lane
         // record; 4B id + 4B value each). The per-worker TX/RX lanes are
         // what the network emulator overlaps migration flows with.
         {
+            let ph = obs::span("phase:scatter");
             let layout = &self.layout;
             let per_part: Vec<(u64, Vec<u64>)> = par::par_tasks(threads, k, |p| {
                 let mut per_master = vec![0u64; k];
@@ -292,11 +307,15 @@ impl Engine {
                 }
             }
             self.comm.record_scatter_lanes(msgs, &tx, &rx);
+            ph.add("messages", msgs);
+            ph.add("bytes", msgs * 8);
         }
 
         // --- 2. compute: every worker runs its partition concurrently
         // (disjoint local buffers); on failure the lowest partition id's
         // error wins, deterministically
+        let ph_compute = obs::span("phase:compute");
+        ph_compute.add("workers", k as u64);
         let results = par::par_map_mut(threads, &mut self.workers, |_, w| {
             w.compute(kind, state, aux)
         });
@@ -304,11 +323,13 @@ impl Engine {
         for r in results {
             partials.push(r?);
         }
+        drop(ph_compute);
 
         // --- 3+4. gather + apply, vertex-sharded: each shard owns a
         // disjoint slice of `out` and folds its vertices' partitions in
         // ascending partition order — the exact serial fold order per
         // vertex, so float accumulation is bit-identical at any width
+        let ph_gather = obs::span("phase:gather");
         let layout = &self.layout;
         let mut out = match combine {
             Combine::Sum => vec![0f32; n],
@@ -374,7 +395,14 @@ impl Engine {
             rx[p] = gather_rx[p].load(Ordering::Relaxed) * 8;
         }
         self.comm.record_gather_lanes(msgs, &tx, &rx);
+        ph_gather.add("messages", msgs);
+        ph_gather.add("bytes", msgs * 8);
+        drop(ph_gather);
 
+        // --- barrier: the synchronization tail — derive next round's
+        // changed set from the applied state
+        let ph_barrier = obs::span("phase:barrier");
+        ph_barrier.add("vertices", n as u64);
         let changed: Vec<bool> = match combine {
             Combine::Sum => vec![true; n], // PR: all vertices refresh
             Combine::Min => {
@@ -382,6 +410,7 @@ impl Engine {
                 par::par_map(threads, n, |v| out_ref[v] < state[v])
             }
         };
+        drop(ph_barrier);
         Ok((out, changed))
     }
 }

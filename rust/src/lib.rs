@@ -79,6 +79,14 @@
 //! fixed-fold-order reduce, so results are **bit-identical at any thread
 //! count** (knob: `PALLAS_THREADS`, see [`par::ThreadConfig`]).
 //!
+//! The whole pipeline is instrumented by the [`obs`] observability
+//! layer: hierarchical spans (`scenario → event → superstep → phase`)
+//! carrying wall time plus deterministic logical counters, a registry of
+//! named counters/gauges/log-bucketed histograms, and a JSON-lines trace
+//! sink (`egs elastic --trace-out`, summarized by `egs report`). The
+//! logical span stream is itself bit-identical at any thread width and
+//! fingerprinted alongside the numeric results in the determinism suite.
+//!
 //! ## The streaming churn layer
 //!
 //! [`stream`] lifts the pipeline onto *evolving* graphs. A
@@ -123,6 +131,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod graph;
 pub mod metrics;
+pub mod obs;
 pub mod ordering;
 pub mod par;
 pub mod partition;

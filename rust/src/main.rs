@@ -9,6 +9,8 @@
 //! egs elastic   --dataset orkut-s --method cep --scenario out --k 8 --steps 4
 //!               [--net-model closed|emulated] [--net-gbps 8] [--net-skew-us 0]
 //!               [--rebalance off|threshold] [--rebalance-threshold 1.15]
+//!               [--trace-out trace.jsonl]
+//! egs report    --in trace.jsonl
 //! egs table2
 //! egs info      --dataset orkut-s
 //! ```
@@ -25,6 +27,14 @@
 //! `--no-overlap` to emulate standalone shuffles). The emulator's event
 //! ordering is a pure function of plan and config, so its prices are
 //! bit-identical at any `--threads`.
+//!
+//! `--trace-out` arms the [`egs::obs`] session around the elastic run and
+//! writes the hierarchical span tree plus the metrics registry as schema-v1
+//! JSON lines. Wall times vary run to run, but the logical projection —
+//! span ids, nesting, names, and tally-derived counters — is bit-identical
+//! at any `--threads`, and the meta line carries its fingerprint. `egs
+//! report --in trace.jsonl` folds a trace back into a human summary table
+//! (per-span-name counts and log-bucketed wall-time quantiles).
 //!
 //! `--rebalance threshold` arms the skew-aware boundary rebalancer on the
 //! CEP path: after each superstep whose metered max/mean cost imbalance
@@ -95,11 +105,12 @@ fn dispatch(args: &Args) -> egs::Result<()> {
         Some("scale") => cmd_scale(args),
         Some("run") => cmd_run(args),
         Some("elastic") => cmd_elastic(args),
+        Some("report") => cmd_report(args),
         Some("table2") => cmd_table2(),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown command {other}"),
         None => {
-            eprintln!("usage: egs <generate|order|partition|scale|run|elastic|table2|info> [--options]");
+            eprintln!("usage: egs <generate|order|partition|scale|run|elastic|report|table2|info> [--options]");
             Ok(())
         }
     }
@@ -255,8 +266,13 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
         rebalance,
         ..Default::default()
     };
+    let trace_out = args.get("trace-out");
     let mut factory = backend_factory(args)?;
+    if trace_out.is_some() {
+        egs::obs::begin();
+    }
     let out = run_scenario(&ordered, &scenario, &cfg, &mut *factory)?;
+    let trace = if trace_out.is_some() { egs::obs::end() } else { None };
     let mut t = Table::new(
         &format!(
             "{} on {} (net: {})",
@@ -302,6 +318,109 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
             );
         }
         println!("  final metered imbalance: {:.3}", out.final_imbalance);
+    }
+    println!(
+        "  superstep latency: p50 {:.3} ms, p99 {:.3} ms over {} supersteps",
+        out.superstep_p50_ms,
+        out.superstep_p99_ms,
+        scenario.total_iterations
+    );
+    if let (Some(path), Some(data)) = (trace_out, trace.as_ref()) {
+        egs::obs::write_jsonl(std::path::Path::new(path), data, cfg.threads.threads())
+            .with_context(|| format!("writing trace to {path}"))?;
+        println!(
+            "wrote {} spans to {} (logical fingerprint 0x{:016x})",
+            data.spans.len(),
+            path,
+            egs::obs::fingerprint(&data.spans)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> egs::Result<()> {
+    use egs::util::json::Json;
+    let Some(path) = args.get("in") else {
+        bail!("usage: egs report --in trace.jsonl");
+    };
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    // aggregate wall time per span name; the log-bucketed histogram gives
+    // the same ≤ 12.5%-error quantiles the rest of the pipeline reports
+    let mut per_name: std::collections::BTreeMap<String, egs::obs::Histogram> =
+        std::collections::BTreeMap::new();
+    let mut meta_line = None;
+    let mut metrics = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => bail!("{path}:{}: {e}", idx + 1),
+        };
+        match j.get("type").and_then(Json::as_str) {
+            Some("meta") => {
+                let threads = j.get("threads").and_then(Json::as_usize).unwrap_or(0);
+                let spans = j.get("spans").and_then(Json::as_usize).unwrap_or(0);
+                let fp = j.get("fingerprint").and_then(Json::as_str).unwrap_or("?");
+                meta_line = Some(format!("threads={threads} spans={spans} fingerprint={fp}"));
+            }
+            Some("span") => {
+                let name = j
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("{path}:{}: span without name", idx + 1))?;
+                let wall = j.get("wall_ns").and_then(Json::as_usize).unwrap_or(0);
+                per_name.entry(name.to_string()).or_default().record(wall as u64);
+            }
+            Some("counter") | Some("gauge") => {
+                let name = j.get("name").and_then(Json::as_str).unwrap_or("?");
+                let value = match j.get("value") {
+                    Some(Json::Num(x)) => format!("{x}"),
+                    _ => "null".to_string(),
+                };
+                metrics.push(format!("  {name} = {value}"));
+            }
+            Some("hist") => {
+                let name = j.get("name").and_then(Json::as_str).unwrap_or("?");
+                let get = |k| j.get(k).and_then(Json::as_usize).unwrap_or(0);
+                metrics.push(format!(
+                    "  {name}: count={} p50={} p99={} max={}",
+                    get("count"),
+                    get("p50"),
+                    get("p99"),
+                    get("max")
+                ));
+            }
+            other => bail!("{path}:{}: unknown line type {other:?}", idx + 1),
+        }
+    }
+    if let Some(m) = &meta_line {
+        println!("{m}");
+    }
+    let mut t = Table::new(
+        &format!("trace report: {path}"),
+        &["span", "count", "total ms", "mean ms", "p50 ms", "p99 ms", "max ms"],
+    );
+    let ms = |ns: u64| format!("{:.3}", ns as f64 / 1e6);
+    for (name, h) in &per_name {
+        let s = h.snapshot();
+        t.row(vec![
+            name.clone(),
+            s.count.to_string(),
+            ms(s.sum),
+            format!("{:.3}", s.mean() / 1e6),
+            ms(s.quantile(0.50)),
+            ms(s.quantile(0.99)),
+            ms(s.max),
+        ]);
+    }
+    t.print();
+    if !metrics.is_empty() {
+        println!("session metrics:");
+        for m in &metrics {
+            println!("{m}");
+        }
     }
     Ok(())
 }

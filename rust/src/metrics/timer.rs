@@ -1,16 +1,27 @@
 //! Wall-clock measurement (no `criterion` in the vendored crate set): a
 //! small best-practice harness — warm-up runs, N timed repetitions, and
-//! median/min reporting so the figure benches are stable.
+//! median/min/mean/tail reporting so the figure benches are stable.
+//!
+//! `median` and `min` are exact order statistics over the repetitions;
+//! `p90`/`p99` come from the shared [`crate::obs::hist`] log-bucketed
+//! histogram, so they carry its ≤ 12.5% bucket-resolution error and
+//! match the quantiles the tracing subsystem reports elsewhere.
 
 use std::time::{Duration, Instant};
 
 /// Timing summary over repetitions.
 #[derive(Clone, Copy, Debug)]
 pub struct Timing {
-    /// median wall time
+    /// median wall time (exact order statistic)
     pub median: Duration,
-    /// fastest observed run
+    /// fastest observed run (exact)
     pub min: Duration,
+    /// arithmetic mean over the repetitions (exact)
+    pub mean: Duration,
+    /// 90th-percentile run (log-bucketed, ≤ 12.5% resolution error)
+    pub p90: Duration,
+    /// 99th-percentile run (log-bucketed, ≤ 12.5% resolution error)
+    pub p99: Duration,
     /// repetitions measured
     pub reps: usize,
 }
@@ -49,13 +60,25 @@ pub fn measure<T, F: FnMut() -> T>(warmup: usize, reps: usize, mut f: F) -> Timi
         black_box(f());
     }
     let mut times: Vec<Duration> = Vec::with_capacity(reps);
+    let hist = crate::obs::Histogram::new();
     for _ in 0..reps {
         let t0 = Instant::now();
         black_box(f());
-        times.push(t0.elapsed());
+        let dt = t0.elapsed();
+        hist.record(dt.as_nanos() as u64);
+        times.push(dt);
     }
     times.sort_unstable();
-    Timing { median: times[times.len() / 2], min: times[0], reps }
+    let total: Duration = times.iter().sum();
+    let snap = hist.snapshot();
+    Timing {
+        median: times[times.len() / 2],
+        min: times[0],
+        mean: total / reps as u32,
+        p90: Duration::from_nanos(snap.quantile(0.90)),
+        p99: Duration::from_nanos(snap.quantile(0.99)),
+        reps,
+    }
 }
 
 /// Time a single run (for long jobs where repetitions are impractical).
@@ -85,6 +108,18 @@ mod tests {
         let t_large = measure(1, 5, || work(large));
         assert!(t_large.median > t_small.median);
         assert!(t_small.min <= t_small.median);
+    }
+
+    #[test]
+    fn mean_and_tail_quantiles_are_consistent() {
+        let n = black_box(100_000u64);
+        let t = measure(1, 7, || (0..n).fold(0u64, |a, x| a ^ x.wrapping_mul(0x9E37)));
+        // mean lies within the observed range
+        assert!(t.mean >= t.min);
+        // log-bucketed quantiles are monotone, and the histogram's bucket
+        // upper bound is never below the true order statistic
+        assert!(t.p99 >= t.p90);
+        assert!(t.p90.as_nanos() >= t.median.as_nanos() * 7 / 8);
     }
 
     #[test]

@@ -1,0 +1,46 @@
+//! Observability: hierarchical spans, a named-metrics registry, and
+//! trace sinks — std-only, zero-cost when disarmed.
+//!
+//! The paper's claim is a *time* claim, so the repo carries a
+//! first-class telemetry layer instead of ad-hoc timers. Three pieces:
+//!
+//! * **Spans** ([`span`], [`SpanGuard`]) — scoped guards forming the
+//!   hierarchy `scenario → event:{scale,churn,rebalance} → superstep →
+//!   phase:{scatter,compute,gather,barrier,plan-derive,splice,geo-pass,
+//!   netsim-price,ingest,compact}`. Each records wall time plus
+//!   *deterministic logical counters* (edges moved, bytes metered,
+//!   ranges spliced). The logical projection — everything but the wall
+//!   times — is bit-identical at any `PALLAS_THREADS` width and is
+//!   hashed by [`fingerprint`]; `rust/tests/determinism.rs` pins it at
+//!   widths 1/2/8 through both controller paths.
+//! * **Registry** ([`Registry`]) — named counters, gauges, and
+//!   log-bucketed [`Histogram`]s (528 buckets, ≤ 12.5% quantile error,
+//!   O(1) lock-free recording) with an owned snapshot API. The same
+//!   histogram backs `metrics::timer::Timing` quantiles, the
+//!   controller's superstep p50/p99 breakdown fields, and `egs report`.
+//! * **Sinks** ([`trace`]) — a self-describing JSON-lines stream
+//!   (`egs elastic --trace-out trace.jsonl`, schema v1) and the human
+//!   `egs report` summary table built from it.
+//!
+//! Sessions are thread-local and explicit: nothing records until
+//! [`begin`] (or [`capture`]) installs a session on the **control
+//! thread**, and every probe is a single TLS load when disarmed.
+//! Spans are never opened inside `par` pool closures — the pool runs
+//! them inline at width 1 and on pool threads otherwise, which would
+//! make the stream width-dependent (see [`span`'s module docs](span)
+//! for the full invariants). The controller's audit records
+//! (`EventRecord` & co.) remain the single source of logical tallies;
+//! span counters are emitted *from* those records, never recomputed.
+
+pub mod hist;
+pub mod registry;
+pub mod span;
+pub mod trace;
+
+pub use hist::{HistSnapshot, Histogram};
+pub use registry::{Registry, RegistrySnapshot};
+pub use span::{
+    active, begin, capture, counter_add, end, gauge_set, hist_record, secs_to_ns, span,
+    SessionData, SpanGuard, SpanRecord,
+};
+pub use trace::{fingerprint, render_jsonl, write_jsonl, TRACE_SCHEMA};

@@ -1,0 +1,107 @@
+//! Named metrics registry: monotonically increasing counters, last-write
+//! gauges, and log-bucketed histograms (see [`crate::obs::hist`]).
+//!
+//! The registry is deliberately simple — `BTreeMap<&'static str, _>` keyed
+//! by static names so snapshots iterate in a deterministic order. It is
+//! owned by the per-thread observability session ([`crate::obs::span`]) and
+//! therefore needs no interior synchronization beyond the histograms' own
+//! atomics (which allow recording through a shared `&Histogram`).
+
+use std::collections::BTreeMap;
+
+use super::hist::{HistSnapshot, Histogram};
+
+/// A named-metrics store: counters (u64, add-only), gauges (f64,
+/// last-write-wins), histograms (log-bucketed).
+#[derive(Default)]
+pub struct Registry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, Histogram>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add `v` to the named counter (created at 0 on first use).
+    pub fn counter_add(&mut self, name: &'static str, v: u64) {
+        *self.counters.entry(name).or_insert(0) += v;
+    }
+
+    /// Set the named gauge to `v` (last write wins).
+    pub fn gauge_set(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    /// Record `v` into the named histogram (created empty on first use).
+    pub fn hist_record(&mut self, name: &'static str, v: u64) {
+        self.hists.entry(name).or_insert_with(Histogram::new).record(v);
+    }
+
+    /// Owned, name-sorted copy of every metric.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            counters: self.counters.iter().map(|(&k, &v)| (k, v)).collect(),
+            gauges: self.gauges.iter().map(|(&k, &v)| (k, v)).collect(),
+            hists: self.hists.iter().map(|(&k, h)| (k, h.snapshot())).collect(),
+        }
+    }
+}
+
+/// An owned point-in-time copy of a [`Registry`], name-sorted.
+#[derive(Clone, Debug, Default)]
+pub struct RegistrySnapshot {
+    /// `(name, value)` counter pairs, sorted by name.
+    pub counters: Vec<(&'static str, u64)>,
+    /// `(name, value)` gauge pairs, sorted by name.
+    pub gauges: Vec<(&'static str, f64)>,
+    /// `(name, snapshot)` histogram pairs, sorted by name.
+    pub hists: Vec<(&'static str, HistSnapshot)>,
+}
+
+impl RegistrySnapshot {
+    /// Is every store empty?
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_gauges_overwrite() {
+        let mut r = Registry::new();
+        r.counter_add("edges", 3);
+        r.counter_add("edges", 4);
+        r.counter_add("apples", 1);
+        r.gauge_set("imbalance", 1.5);
+        r.gauge_set("imbalance", 1.2);
+        let s = r.snapshot();
+        // BTreeMap ⇒ name-sorted snapshot order
+        assert_eq!(s.counters, vec![("apples", 1), ("edges", 7)]);
+        assert_eq!(s.gauges, vec![("imbalance", 1.2)]);
+    }
+
+    #[test]
+    fn hists_record_and_snapshot() {
+        let mut r = Registry::new();
+        for v in [10u64, 20, 30] {
+            r.hist_record("lat", v);
+        }
+        let s = r.snapshot();
+        assert_eq!(s.hists.len(), 1);
+        let (name, h) = &s.hists[0];
+        assert_eq!(*name, "lat");
+        assert_eq!(h.count, 3);
+        assert_eq!(h.min, 10);
+        assert_eq!(h.max, 30);
+        assert_eq!(h.quantile(1.0), 30);
+        assert!(!s.is_empty());
+        assert!(RegistrySnapshot::default().is_empty());
+    }
+}

@@ -1,0 +1,315 @@
+//! Hierarchical span sessions: scoped guards that record wall time plus
+//! deterministic logical counters into a thread-local session.
+//!
+//! A session lives in thread-local storage on the **control thread** —
+//! [`begin`]/[`end`] install and drain it, [`capture`] wraps a closure
+//! with both. While no session is active every probe is a no-op costing
+//! one TLS load, so instrumented library code pays nothing in normal
+//! test/bench runs.
+//!
+//! Two invariants make traces comparable across `PALLAS_THREADS` widths:
+//!
+//! * **Spans open only on the control thread.** The `par` pool runs
+//!   closures *inline on the caller* at width 1 but on pool threads at
+//!   width > 1; a span opened inside a pool closure would appear at one
+//!   width and vanish at another. Instrumented call sites therefore sit
+//!   strictly outside `par_*` closures.
+//! * **Counters carry logical tallies only** (edges moved, bytes
+//!   metered, ranges spliced) — quantities the deterministic runtime
+//!   pins bit-identically at any width. Wall times are recorded per span
+//!   but excluded from the fingerprint ([`crate::obs::trace`]).
+//!
+//! Records are emitted in **close order** (children before parents),
+//! which is itself deterministic because spans close on one thread in
+//! LIFO scope order.
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use super::registry::{Registry, RegistrySnapshot};
+
+/// A closed span: identity, position in the hierarchy, wall time, and
+/// the logical counters accumulated while it was open.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Session-unique id, assigned in open order starting at 0.
+    pub id: u64,
+    /// Id of the enclosing span, if any.
+    pub parent: Option<u64>,
+    /// Nesting depth: 0 for roots, parent depth + 1 otherwise.
+    pub depth: u32,
+    /// Static span name (e.g. `"superstep"`, `"phase:scatter"`).
+    pub name: &'static str,
+    /// Wall time between open and close, in nanoseconds. Excluded from
+    /// logical fingerprints.
+    pub wall_ns: u64,
+    /// `(name, value)` logical counters in first-touch order.
+    pub counters: Vec<(&'static str, u64)>,
+}
+
+/// Everything a drained session captured: closed spans (in close order)
+/// plus a snapshot of the session's metrics registry.
+#[derive(Debug, Default)]
+pub struct SessionData {
+    /// Closed spans in close order (children precede parents).
+    pub spans: Vec<SpanRecord>,
+    /// Final state of the session's named metrics.
+    pub registry: RegistrySnapshot,
+}
+
+struct OpenSpan {
+    id: u64,
+    parent: Option<u64>,
+    depth: u32,
+    name: &'static str,
+    start: Instant,
+    counters: Vec<(&'static str, u64)>,
+}
+
+impl OpenSpan {
+    fn close(self) -> SpanRecord {
+        SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            depth: self.depth,
+            name: self.name,
+            wall_ns: self.start.elapsed().as_nanos() as u64,
+            counters: self.counters,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Session {
+    next_id: u64,
+    stack: Vec<OpenSpan>,
+    done: Vec<SpanRecord>,
+    registry: Registry,
+}
+
+thread_local! {
+    static SESSION: RefCell<Option<Session>> = const { RefCell::new(None) };
+}
+
+/// Start an observability session on the current thread. Any session
+/// already active on this thread is discarded.
+pub fn begin() {
+    SESSION.with(|s| *s.borrow_mut() = Some(Session::default()));
+}
+
+/// Is a session active on the current thread?
+pub fn active() -> bool {
+    SESSION.with(|s| s.borrow().is_some())
+}
+
+/// Stop the current thread's session and return what it captured
+/// (`None` if none was active). Spans still open are force-closed,
+/// innermost first.
+pub fn end() -> Option<SessionData> {
+    SESSION.with(|s| s.borrow_mut().take()).map(|mut sess| {
+        while let Some(open) = sess.stack.pop() {
+            sess.done.push(open.close());
+        }
+        SessionData { spans: sess.done, registry: sess.registry.snapshot() }
+    })
+}
+
+/// Run `f` under a fresh session and return its result together with the
+/// captured [`SessionData`].
+pub fn capture<R>(f: impl FnOnce() -> R) -> (R, SessionData) {
+    begin();
+    let r = f();
+    let data = end().expect("obs session vanished during capture");
+    (r, data)
+}
+
+/// Open a span. The span closes (and its record is emitted) when the
+/// returned guard drops. A no-op guard is returned when no session is
+/// active on this thread — which is also why spans must only be opened
+/// on the control thread (see the module docs).
+pub fn span(name: &'static str) -> SpanGuard {
+    let id = SESSION.with(|s| {
+        let mut b = s.borrow_mut();
+        let sess = b.as_mut()?;
+        let id = sess.next_id;
+        sess.next_id += 1;
+        let (parent, depth) = match sess.stack.last() {
+            Some(top) => (Some(top.id), top.depth + 1),
+            None => (None, 0),
+        };
+        sess.stack.push(OpenSpan {
+            id,
+            parent,
+            depth,
+            name,
+            start: Instant::now(),
+            counters: Vec::new(),
+        });
+        Some(id)
+    });
+    SpanGuard { id }
+}
+
+/// Scoped handle to an open span; dropping it closes the span.
+pub struct SpanGuard {
+    /// `None` when the guard is a no-op (no active session).
+    id: Option<u64>,
+}
+
+impl SpanGuard {
+    /// Add `v` to this span's named logical counter (values accumulate
+    /// across repeated `add` calls with the same name). Only feed it
+    /// tallies that are deterministic across thread widths.
+    pub fn add(&self, name: &'static str, v: u64) {
+        let Some(id) = self.id else { return };
+        SESSION.with(|s| {
+            if let Some(sess) = s.borrow_mut().as_mut() {
+                if let Some(open) = sess.stack.iter_mut().rev().find(|o| o.id == id) {
+                    match open.counters.iter_mut().find(|c| c.0 == name) {
+                        Some(c) => c.1 += v,
+                        None => open.counters.push((name, v)),
+                    }
+                }
+            }
+        });
+    }
+
+    /// [`add`](SpanGuard::add) a duration given in seconds, stored as
+    /// integer nanoseconds (see [`secs_to_ns`]).
+    pub fn add_secs(&self, name: &'static str, secs: f64) {
+        self.add(name, secs_to_ns(secs));
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(id) = self.id else { return };
+        SESSION.with(|s| {
+            if let Some(sess) = s.borrow_mut().as_mut() {
+                if let Some(pos) = sess.stack.iter().rposition(|o| o.id == id) {
+                    // LIFO discipline means this pops exactly one span;
+                    // if a child guard somehow outlived scope order,
+                    // close it too, innermost first.
+                    while sess.stack.len() > pos {
+                        let open = sess.stack.pop().expect("non-empty by rposition");
+                        sess.done.push(open.close());
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// Convert seconds to integer nanoseconds (`round`, clamped at 0).
+/// Deterministic for the bit-identical `f64`s the runtime produces.
+pub fn secs_to_ns(secs: f64) -> u64 {
+    (secs * 1e9).round().max(0.0) as u64
+}
+
+/// Add `v` to a session-level named counter (no-op without a session).
+pub fn counter_add(name: &'static str, v: u64) {
+    SESSION.with(|s| {
+        if let Some(sess) = s.borrow_mut().as_mut() {
+            sess.registry.counter_add(name, v);
+        }
+    });
+}
+
+/// Set a session-level named gauge (no-op without a session).
+pub fn gauge_set(name: &'static str, v: f64) {
+    SESSION.with(|s| {
+        if let Some(sess) = s.borrow_mut().as_mut() {
+            sess.registry.gauge_set(name, v);
+        }
+    });
+}
+
+/// Record into a session-level named histogram (no-op without a session).
+pub fn hist_record(name: &'static str, v: u64) {
+    SESSION.with(|s| {
+        if let Some(sess) = s.borrow_mut().as_mut() {
+            sess.registry.hist_record(name, v);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_emit_in_close_order() {
+        let ((), data) = capture(|| {
+            let a = span("a");
+            a.add("x", 1);
+            {
+                let b = span("b");
+                b.add("y", 2);
+                b.add("y", 3); // accumulates
+                b.add("z", 7);
+            }
+            let c = span("c");
+            drop(c);
+        });
+        let names: Vec<_> = data.spans.iter().map(|s| s.name).collect();
+        assert_eq!(names, ["b", "c", "a"]);
+        let b = &data.spans[0];
+        assert_eq!((b.id, b.parent, b.depth), (1, Some(0), 1));
+        assert_eq!(b.counters, vec![("y", 5), ("z", 7)]);
+        let c = &data.spans[1];
+        assert_eq!((c.id, c.parent, c.depth), (2, Some(0), 1));
+        let a = &data.spans[2];
+        assert_eq!((a.id, a.parent, a.depth), (0, None, 0));
+        assert_eq!(a.counters, vec![("x", 1)]);
+    }
+
+    #[test]
+    fn registry_free_functions_feed_the_session() {
+        let ((), data) = capture(|| {
+            counter_add("splices", 2);
+            counter_add("splices", 1);
+            gauge_set("imbalance", 1.25);
+            hist_record("lat", 100);
+            hist_record("lat", 200);
+        });
+        assert_eq!(data.registry.counters, vec![("splices", 3)]);
+        assert_eq!(data.registry.gauges, vec![("imbalance", 1.25)]);
+        assert_eq!(data.registry.hists.len(), 1);
+        assert_eq!(data.registry.hists[0].1.count, 2);
+    }
+
+    #[test]
+    fn everything_is_a_noop_without_a_session() {
+        assert!(!active());
+        let g = span("orphan");
+        g.add("x", 1);
+        drop(g);
+        counter_add("c", 1);
+        gauge_set("g", 1.0);
+        hist_record("h", 1);
+        assert!(end().is_none());
+    }
+
+    #[test]
+    fn end_force_closes_open_spans() {
+        begin();
+        let outer = span("outer");
+        let inner = span("inner");
+        let data = end().expect("session active");
+        // innermost first
+        assert_eq!(data.spans[0].name, "inner");
+        assert_eq!(data.spans[1].name, "outer");
+        // guards from the drained session are inert afterwards
+        drop(inner);
+        drop(outer);
+        assert!(!active());
+    }
+
+    #[test]
+    fn secs_to_ns_rounds_and_clamps() {
+        assert_eq!(secs_to_ns(0.0), 0);
+        assert_eq!(secs_to_ns(1.5e-9), 2);
+        assert_eq!(secs_to_ns(2.0), 2_000_000_000);
+        assert_eq!(secs_to_ns(-1.0), 0);
+    }
+}

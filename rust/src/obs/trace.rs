@@ -1,0 +1,243 @@
+//! Trace sinks: the logical-stream fingerprint and the JSON-lines
+//! writer behind `egs elastic --trace-out`.
+//!
+//! ## Schema (v1)
+//!
+//! One self-describing JSON object per line; every line carries
+//! `"v": 1` and a `"type"`:
+//!
+//! | type      | fields                                                          |
+//! |-----------|-----------------------------------------------------------------|
+//! | `meta`    | `tool`, `threads`, `spans`, `fingerprint` (`"0x…"` over spans)  |
+//! | `span`    | `id`, `parent` (null for roots), `depth`, `name`, `wall_ns`, `counters` (object) |
+//! | `counter` | `name`, `value`                                                 |
+//! | `gauge`   | `name`, `value`                                                 |
+//! | `hist`    | `name`, `count`, `min`, `max`, `mean`, `p50`, `p90`, `p99`      |
+//!
+//! Span lines appear in close order (children before parents). The
+//! **logical projection** of a span — `(id, parent, depth, name,
+//! counters)`, i.e. everything except `wall_ns` — is deterministic at
+//! any `PALLAS_THREADS` width; [`fingerprint`] hashes exactly that
+//! projection, and `.github/scripts/trace_check.py` re-checks it across
+//! the CI thread matrix.
+
+use std::io::Write;
+use std::path::Path;
+
+use super::span::{SessionData, SpanRecord};
+
+/// Trace schema version stamped into every emitted line.
+pub const TRACE_SCHEMA: u32 = 1;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+#[inline]
+fn fnv_bytes(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[inline]
+fn fnv_u64(h: u64, v: u64) -> u64 {
+    fnv_bytes(h, &v.to_le_bytes())
+}
+
+/// FNV-1a hash of the spans' logical projection: `(id, parent, depth,
+/// name, counters)` in record order — wall times excluded, so the value
+/// is bit-identical across thread widths for a deterministic run.
+pub fn fingerprint(spans: &[SpanRecord]) -> u64 {
+    let mut h = FNV_OFFSET;
+    h = fnv_u64(h, spans.len() as u64);
+    for s in spans {
+        h = fnv_u64(h, s.id);
+        h = fnv_u64(h, s.parent.map_or(0, |p| p + 1));
+        h = fnv_u64(h, s.depth as u64);
+        h = fnv_u64(h, s.name.len() as u64);
+        h = fnv_bytes(h, s.name.as_bytes());
+        h = fnv_u64(h, s.counters.len() as u64);
+        for (name, v) in &s.counters {
+            h = fnv_u64(h, name.len() as u64);
+            h = fnv_bytes(h, name.as_bytes());
+            h = fnv_u64(h, *v);
+        }
+    }
+    h
+}
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+fn push_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Render a drained session as schema-v1 JSON lines (see module docs).
+pub fn render_jsonl(data: &SessionData, threads: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"v\":{TRACE_SCHEMA},\"type\":\"meta\",\"tool\":\"egs\",\"threads\":{threads},\
+         \"spans\":{},\"fingerprint\":\"0x{:016x}\"}}\n",
+        data.spans.len(),
+        fingerprint(&data.spans),
+    ));
+    for s in &data.spans {
+        out.push_str(&format!(
+            "{{\"v\":{TRACE_SCHEMA},\"type\":\"span\",\"id\":{},\"parent\":",
+            s.id
+        ));
+        match s.parent {
+            Some(p) => out.push_str(&format!("{p}")),
+            None => out.push_str("null"),
+        }
+        out.push_str(&format!(",\"depth\":{},\"name\":\"", s.depth));
+        escape_into(&mut out, s.name);
+        out.push_str(&format!("\",\"wall_ns\":{},\"counters\":{{", s.wall_ns));
+        for (i, (name, v)) in s.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            escape_into(&mut out, name);
+            out.push_str(&format!("\":{v}"));
+        }
+        out.push_str("}}\n");
+    }
+    for (name, v) in &data.registry.counters {
+        out.push_str(&format!("{{\"v\":{TRACE_SCHEMA},\"type\":\"counter\",\"name\":\""));
+        escape_into(&mut out, name);
+        out.push_str(&format!("\",\"value\":{v}}}\n"));
+    }
+    for (name, v) in &data.registry.gauges {
+        out.push_str(&format!("{{\"v\":{TRACE_SCHEMA},\"type\":\"gauge\",\"name\":\""));
+        escape_into(&mut out, name);
+        out.push_str("\",\"value\":");
+        push_f64(&mut out, *v);
+        out.push_str("}\n");
+    }
+    for (name, h) in &data.registry.hists {
+        out.push_str(&format!("{{\"v\":{TRACE_SCHEMA},\"type\":\"hist\",\"name\":\""));
+        escape_into(&mut out, name);
+        out.push_str(&format!(
+            "\",\"count\":{},\"min\":{},\"max\":{},\"mean\":",
+            h.count,
+            if h.is_empty() { 0 } else { h.min },
+            h.max,
+        ));
+        push_f64(&mut out, h.mean());
+        out.push_str(&format!(
+            ",\"p50\":{},\"p90\":{},\"p99\":{}}}\n",
+            h.quantile(0.50),
+            h.quantile(0.90),
+            h.quantile(0.99),
+        ));
+    }
+    out
+}
+
+/// Write [`render_jsonl`] output to `path`.
+pub fn write_jsonl(path: &Path, data: &SessionData, threads: usize) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(render_jsonl(data, threads).as_bytes())?;
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::capture;
+    use super::super::{counter_add, gauge_set, hist_record, span};
+    use super::*;
+    use crate::util::json::Json;
+
+    fn sample() -> SessionData {
+        let ((), data) = capture(|| {
+            let root = span("scenario");
+            root.add("iterations", 4);
+            {
+                let ss = span("superstep");
+                ss.add("partitions", 3);
+                let ph = span("phase:scatter");
+                ph.add("messages", 12);
+                ph.add("bytes", 96);
+            }
+            counter_add("splices", 5);
+            gauge_set("imbalance", 1.25);
+            hist_record("superstep_wall_ns", 1000);
+            hist_record("superstep_wall_ns", 2000);
+        });
+        data
+    }
+
+    #[test]
+    fn fingerprint_ignores_wall_time_only() {
+        let mut a = sample().spans;
+        let mut b = a.clone();
+        for s in &mut b {
+            s.wall_ns = s.wall_ns.wrapping_add(12345);
+        }
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        // ...but any logical change moves it
+        b[0].counters[0].1 += 1;
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        a[0].depth += 1;
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        assert_ne!(fingerprint(&a), fingerprint(&[]));
+    }
+
+    #[test]
+    fn rendered_lines_parse_as_json() {
+        let data = sample();
+        let text = render_jsonl(&data, 4);
+        let lines: Vec<&str> = text.lines().collect();
+        // meta + 3 spans + 1 counter + 1 gauge + 1 hist
+        assert_eq!(lines.len(), 7);
+        for line in &lines {
+            let j = Json::parse(line).expect("line parses");
+            assert_eq!(j.get("v").and_then(Json::as_usize), Some(1));
+            assert!(j.get("type").and_then(Json::as_str).is_some(), "{line}");
+        }
+        let meta = Json::parse(lines[0]).unwrap();
+        assert_eq!(meta.get("type").and_then(Json::as_str), Some("meta"));
+        assert_eq!(meta.get("threads").and_then(Json::as_usize), Some(4));
+        assert_eq!(meta.get("spans").and_then(Json::as_usize), Some(3));
+        let fp = meta.get("fingerprint").and_then(Json::as_str).unwrap();
+        assert_eq!(fp, format!("0x{:016x}", fingerprint(&data.spans)));
+        // spans are in close order: phase before superstep before scenario
+        let first = Json::parse(lines[1]).unwrap();
+        assert_eq!(first.get("name").and_then(Json::as_str), Some("phase:scatter"));
+        assert_eq!(first.get("depth").and_then(Json::as_usize), Some(2));
+        assert_eq!(
+            first.get("counters").and_then(|c| c.get("messages")).and_then(Json::as_usize),
+            Some(12)
+        );
+        let hist = Json::parse(lines[6]).unwrap();
+        assert_eq!(hist.get("type").and_then(Json::as_str), Some("hist"));
+        assert_eq!(hist.get("count").and_then(Json::as_usize), Some(2));
+    }
+
+    #[test]
+    fn strings_are_escaped() {
+        let mut s = String::new();
+        escape_into(&mut s, "a\"b\\c\nd");
+        assert_eq!(s, "a\\\"b\\\\c\\nd");
+    }
+}

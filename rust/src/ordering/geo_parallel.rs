@@ -27,7 +27,15 @@ use crate::EdgeId;
 pub fn order(g: &Graph, cfg: &GeoConfig, regions: usize) -> EdgeOrdering {
     let regions = regions.max(1);
     let m = g.num_edges();
-    if regions == 1 || m < 4096 {
+    let sequential = regions == 1 || m < 4096;
+    // span opened here (the control-thread call site), never inside
+    // `order_bucket` — the pool runs region jobs inline at width 1 and on
+    // pool threads otherwise, so a span there would be width-dependent
+    let sp = crate::obs::span("phase:geo-pass");
+    sp.add("edges", m as u64);
+    sp.add("vertices", g.num_vertices() as u64);
+    sp.add("regions", if sequential { 1 } else { regions as u64 });
+    if sequential {
         return geo::order(g, cfg);
     }
     // 1. BFS vertex order gives spatially contiguous regions

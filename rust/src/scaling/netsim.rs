@@ -511,7 +511,10 @@ pub fn price_plan(
     value_bytes: u64,
     app: Option<&AppTraffic>,
 ) -> NetCost {
-    match mc.model {
+    let sp = crate::obs::span("phase:netsim-price");
+    sp.add("range_moves", plan.num_moves() as u64);
+    sp.add("migrated_edges", plan.migrated_edges());
+    let cost = match mc.model {
         NetworkModel::ClosedForm => {
             NetCost::blocking(net.migration_time(plan, k, value_bytes))
         }
@@ -520,14 +523,20 @@ pub fn price_plan(
             let app = if mc.overlap { app } else { None };
             sim.price_plan(plan, k, value_bytes, app).into()
         }
-    }
+    };
+    sp.add_secs("total_ns", cost.total_s);
+    sp.add_secs("blocking_ns", cost.blocking_s);
+    sp.add_secs("overlapped_ns", cost.overlapped_s);
+    cost
 }
 
 /// Price an explicit flow set (the streaming compaction's redistribution
 /// ring) under the selected model. Compactions are full rebuilds, so they
 /// never overlap the app regardless of `mc.overlap`.
 pub fn price_flows(net: &Network, mc: &NetModelConfig, flows: &[Flow], k: usize) -> NetCost {
-    match mc.model {
+    let sp = crate::obs::span("phase:netsim-price");
+    sp.add("flows", flows.len() as u64);
+    let cost = match mc.model {
         NetworkModel::ClosedForm => {
             let (_, sent, recv) = per_worker_volumes(k, flows);
             NetCost::blocking(net.shuffle_time(&sent, &recv))
@@ -536,7 +545,11 @@ pub fn price_flows(net: &Network, mc: &NetModelConfig, flows: &[Flow], k: usize)
             let sim = NetSim::new(NetSimConfig::from_network(net, mc.barrier_skew_s));
             sim.simulate(k, flows, None).into()
         }
-    }
+    };
+    sp.add_secs("total_ns", cost.total_s);
+    sp.add_secs("blocking_ns", cost.blocking_s);
+    sp.add_secs("overlapped_ns", cost.overlapped_s);
+    cost
 }
 
 #[cfg(test)]

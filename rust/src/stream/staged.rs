@@ -49,9 +49,13 @@ pub struct StagedGraph {
 impl StagedGraph {
     /// Take ownership of a graph and GEO-order it once as the base.
     pub fn new(g: Graph, cfg: GeoConfig) -> StagedGraph {
+        let sp = crate::obs::span("phase:geo-pass");
+        sp.add("edges", g.num_edges() as u64);
+        sp.add("vertices", g.num_vertices() as u64);
         let perm = geo::order(&g, &cfg).into_perm();
         let base = g.permute_edges(&perm);
         drop(g);
+        drop(sp);
         let n = base.num_vertices();
         let deg = (0..n as VertexId).map(|v| base.degree(v) as u32).collect();
         StagedGraph {
@@ -196,11 +200,15 @@ impl StagedGraph {
     /// via `newly_dead`), so the outcome is identical to a fully
     /// interleaved scan at any thread count.
     pub fn apply_batch(&mut self, batch: &MutationBatch, k: usize) -> (BatchOutcome, ChurnPlan) {
+        let sp = crate::obs::span("phase:ingest");
         let cep0 = Cep::new(self.physical_edges(), k);
         let (out, nd) = self.ingest(batch);
         let cep1 = Cep::new(self.physical_edges(), k);
         let plan = ChurnPlan::derive(&cep0, &cep1, &nd);
         self.tombstones = merge_sorted_par(&self.tombstones, &nd, self.cfg.threads);
+        sp.add("inserted", out.inserted as u64);
+        sp.add("deleted", out.deleted as u64);
+        sp.add("range_ops", plan.range_ops() as u64);
         (out, plan)
     }
 
@@ -222,12 +230,16 @@ impl StagedGraph {
             self.physical_edges(),
             "boundary array out of sync with the physical id space"
         );
+        let sp = crate::obs::span("phase:ingest");
         let old = crate::partition::WeightedCepView::from_bounds(bounds.clone());
         let (out, nd) = self.ingest(batch);
         *bounds.last_mut().unwrap() = self.physical_edges() as u64;
         let new = crate::partition::WeightedCepView::from_bounds(bounds.clone());
         let plan = ChurnPlan::derive_weighted(&old, &new, &nd);
         self.tombstones = merge_sorted_par(&self.tombstones, &nd, self.cfg.threads);
+        sp.add("inserted", out.inserted as u64);
+        sp.add("deleted", out.deleted as u64);
+        sp.add("range_ops", plan.range_ops() as u64);
         (out, plan)
     }
 
@@ -337,11 +349,20 @@ impl StagedGraph {
     /// rebuilt afterwards (this is the amortized-expensive event the
     /// policy budgets).
     pub fn compact(&mut self) {
+        let sp = crate::obs::span("phase:compact");
+        sp.add("live_edges", self.live_edges() as u64);
+        sp.add("reclaimed", self.tombstones.len() as u64);
+        sp.add("folded_staged", self.staging.len() as u64);
         let live = self.live_edge_vec();
         let el = EdgeList::from_vec(live);
         let csr = Csr::build_with(self.n, &el, self.cfg.threads);
         let g = Graph::from_parts(el, csr);
-        let perm = geo::order(&g, &self.cfg).into_perm();
+        let perm = {
+            let gsp = crate::obs::span("phase:geo-pass");
+            gsp.add("edges", g.num_edges() as u64);
+            gsp.add("vertices", g.num_vertices() as u64);
+            geo::order(&g, &self.cfg).into_perm()
+        };
         self.base = g.permute_edges(&perm);
         self.last_perm = perm;
         self.staging.clear();

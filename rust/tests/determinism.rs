@@ -393,3 +393,74 @@ fn engine_state_is_thread_invariant_across_run_rescale_churn() {
         assert_eq!(ranges, ref_ranges, "width {w}: ownership intervals diverge");
     }
 }
+
+/// The observability span stream's *logical projection* — ids, nesting,
+/// names, tally counters — is bit-identical at widths 1/2/8 through both
+/// controller paths. Wall times differ run to run, but
+/// [`egs::obs::fingerprint`] excludes them; the span count and FNV
+/// fingerprint must therefore match exactly. This is the in-process twin
+/// of CI's `trace_check.py`, which re-checks the same property on the
+/// `--trace-out` files of the thread matrix.
+#[test]
+fn trace_fingerprint_is_thread_invariant() {
+    use egs::coordinator::{run_scenario, run_streaming, ControllerConfig, StreamingConfig};
+    use egs::scaling::netsim::NetModelConfig;
+    use egs::scaling::scenario::Scenario;
+
+    let raw = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() }, 4);
+    let g = egs::ordering::geo::order(&raw, &geo_cfg(1)).apply(&raw);
+
+    // batch controller (`run_scenario`)
+    let scenario = Scenario::scale_out(3, 2, 3);
+    let run = |w: usize| -> (u64, usize) {
+        let cfg = ControllerConfig {
+            net_model: NetModelConfig::emulated(),
+            threads: ThreadConfig::new(w),
+            ..Default::default()
+        };
+        let (out, data) = egs::obs::capture(|| {
+            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+        });
+        out.unwrap();
+        for name in
+            ["scenario", "event:scale", "superstep", "phase:plan-derive", "phase:netsim-price"]
+        {
+            assert!(
+                data.spans.iter().any(|s| s.name == name),
+                "width {w}: span {name} missing from the trace"
+            );
+        }
+        (egs::obs::fingerprint(&data.spans), data.spans.len())
+    };
+    let reference = run(1);
+    assert!(reference.1 > 0, "capture produced no spans");
+    for w in WIDTHS {
+        assert_eq!(run(w), reference, "run width {w}: span stream diverges");
+    }
+
+    // streaming controller (`run_streaming`)
+    let srun = |w: usize| -> (u64, usize) {
+        let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
+        let cfg = StreamingConfig {
+            geo: geo_cfg(w),
+            net_model: NetModelConfig::emulated(),
+            threads: ThreadConfig::new(w),
+            ..Default::default()
+        };
+        let (out, data) = egs::obs::capture(|| {
+            run_streaming(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+        });
+        out.unwrap();
+        for name in ["scenario", "event:churn", "event:scale", "phase:ingest", "phase:geo-pass"] {
+            assert!(
+                data.spans.iter().any(|s| s.name == name),
+                "streaming width {w}: span {name} missing from the trace"
+            );
+        }
+        (egs::obs::fingerprint(&data.spans), data.spans.len())
+    };
+    let sreference = srun(1);
+    for w in WIDTHS {
+        assert_eq!(srun(w), sreference, "streaming width {w}: span stream diverges");
+    }
+}
