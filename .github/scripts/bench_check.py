@@ -40,7 +40,11 @@ Rules:
   * p50_ms / p99_ms (histogram-backed per-superstep or per-repetition
     latency quantiles from the egs::obs subsystem) are surfaced but do
     not gate: their cross-thread determinism is checked by
-    trace_check.py and the determinism test suite.
+    trace_check.py and the determinism test suite;
+  * slo_violations / decisions (autoscaling runs: modeled supersteps
+    over the run's SLO reference, and policy decision audit records)
+    are surfaced but do not gate: the SLO/oracle acceptance bounds are
+    enforced by the autoscale test suite.
 
 Reseed mode — regenerate the committed baseline from a downloaded
 artifact of a green run:
@@ -181,6 +185,20 @@ def main():
         for key, r in latency_rows:
             print(
                 f"  {key[0]}/{key[1]}: p50={r['p50_ms']} p99={r.get('p99_ms')}"
+            )
+    # surface autoscaling telemetry (no gating: SLO acceptance bounds
+    # live in the autoscale test suite)
+    slo_rows = [
+        (key, r)
+        for key, r in sorted(cur.items())
+        if r.get("slo_violations") is not None
+    ]
+    if slo_rows:
+        print("autoscaling (SLO violations / policy decisions):")
+        for key, r in slo_rows:
+            print(
+                f"  {key[0]}/{key[1]}: slo_violations={r['slo_violations']} "
+                f"decisions={r.get('decisions')}"
             )
     return 0
 

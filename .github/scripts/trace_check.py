@@ -4,7 +4,7 @@ check cross-thread logical equality.
 
 Usage:
 
-    trace_check.py trace_t1.jsonl [trace_t2.jsonl ...]
+    trace_check.py [--expect-decisions] trace_t1.jsonl [trace_t2.jsonl ...]
 
 Each file is the schema-v1 stream written by rust/src/obs/trace.rs: a
 `meta` line (tool, threads, span count, fingerprint over the logical
@@ -28,6 +28,16 @@ scenario run at different PALLAS_THREADS widths):
   * the meta fingerprints agree (the Rust-side FNV over the same
     projection), so a projection match with a fingerprint mismatch
     flags a writer bug rather than a determinism bug.
+
+Policy audit checks (`event:decision` spans, emitted by the autoscaling
+policy loop in rust/src/coordinator/driver.rs):
+  * every decision span carries the full counter set (k, chosen_k,
+    trigger, action, candidates, predicted_step_ns, predicted_cost_ns,
+    realized_cost_ns) with a known action code;
+  * with --expect-decisions, every file must contain at least one
+    decision span (the run was policy-driven), and — through the
+    cross-file projection check above — the decision sequence is
+    bit-identical across the thread matrix.
 
 Exit code 1 on any violation.
 """
@@ -118,6 +128,39 @@ def check_structure(path, meta, spans):
             )
 
 
+DECISION_COUNTERS = (
+    "k",
+    "chosen_k",
+    "trigger",
+    "action",
+    "candidates",
+    "predicted_step_ns",
+    "predicted_cost_ns",
+    "realized_cost_ns",
+)
+ACTION_CODES = {0, 1, 2}  # NoOp, Nudge, ScaleTo
+
+
+def check_decisions(path, spans, expect):
+    """Validate the policy audit spans; return how many the file holds."""
+    n = 0
+    for obj, where in spans:
+        if obj["name"] != "event:decision":
+            continue
+        n += 1
+        for c in DECISION_COUNTERS:
+            if c not in obj["counters"]:
+                fail(f"{where}: decision span missing counter {c!r}")
+        if obj["counters"]["action"] not in ACTION_CODES:
+            fail(
+                f"{where}: unknown decision action code "
+                f"{obj['counters']['action']!r}"
+            )
+    if expect and n == 0:
+        fail(f"{path}: --expect-decisions but no event:decision span")
+    return n
+
+
 def projection(spans):
     """The logical (width-invariant) view of the span stream."""
     return [
@@ -133,18 +176,25 @@ def projection(spans):
 
 
 def main():
-    paths = sys.argv[1:]
+    args = sys.argv[1:]
+    expect_decisions = "--expect-decisions" in args
+    paths = [a for a in args if a != "--expect-decisions"]
     if not paths:
-        print(f"usage: {sys.argv[0]} trace.jsonl [trace2.jsonl ...]")
+        print(
+            f"usage: {sys.argv[0]} [--expect-decisions] "
+            "trace.jsonl [trace2.jsonl ...]"
+        )
         return 2
     loaded = []
     for path in paths:
         meta, spans, metrics = load(path)
         check_structure(path, meta, spans)
+        decisions = check_decisions(path, spans, expect_decisions)
         loaded.append((path, meta, spans))
         print(
             f"trace_check: {path}: ok — threads={meta.get('threads')} "
             f"spans={len(spans)} metric-lines={metrics} "
+            f"decisions={decisions} "
             f"fingerprint={meta.get('fingerprint')}"
         )
     ref_path, ref_meta, ref_spans = loaded[0]

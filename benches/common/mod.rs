@@ -18,7 +18,8 @@
 //!   "layout_ranges": <u64|null>, "layout_bytes": <u64|null>,
 //!   "net_model": <"closed"|"emulated"|null>, "net_ms": <f64|null>,
 //!   "imbalance": <f64|null>, "rebalance_ms": <f64|null>,
-//!   "p50_ms": <f64|null>, "p99_ms": <f64|null>}`.
+//!   "p50_ms": <f64|null>, "p99_ms": <f64|null>,
+//!   "slo_violations": <u64|null>, "decisions": <u64|null>}`.
 //!   `layout_ranges`/`layout_bytes` report the interval-set ownership
 //!   metadata resident in a `PartitionLayout` after the measured run
 //!   (`null` for benches without a layout). `net_model`/`net_ms` report
@@ -29,6 +30,9 @@
 //!   policy). `p50_ms`/`p99_ms` report histogram-backed per-superstep (or
 //!   per-repetition) latency quantiles from the [`egs::obs`] subsystem
 //!   (`null` for benches that measure a single aggregate wall time).
+//!   `slo_violations`/`decisions` report autoscaling-policy telemetry:
+//!   modeled steps over the SLO reference and policy decisions taken
+//!   (`null` for benches without an SLO audit).
 //!   Rows are recorded with the fluent [`BenchLog::record`] builder; the
 //!   legacy `row_*` helpers delegate to it. All benches share this
 //!   schema; CI points every bench at the same `BENCH_ci.json` and diffs
@@ -92,6 +96,7 @@ struct Row {
     imbalance: Option<f64>,
     rebalance_ms: Option<f64>,
     latency: Option<(f64, f64)>,
+    slo: Option<(u64, u64)>,
 }
 
 /// Row collector for one bench binary. Call [`BenchLog::record`] per
@@ -148,6 +153,13 @@ impl RowMut<'_> {
         self.row.latency = Some((p50_ms, p99_ms));
         self
     }
+
+    /// Attach autoscaling telemetry: modeled steps whose latency exceeded
+    /// the SLO reference, and policy decisions taken over the run.
+    pub fn slo(self, violations: u64, decisions: u64) -> Self {
+        self.row.slo = Some((violations, decisions));
+        self
+    }
 }
 
 impl BenchLog {
@@ -168,6 +180,7 @@ impl BenchLog {
             imbalance: None,
             rebalance_ms: None,
             latency: None,
+            slo: None,
         });
         RowMut { row: self.rows.last_mut().expect("just pushed") }
     }
@@ -296,6 +309,10 @@ impl BenchLog {
                 Some((p50, p99)) => (format!("{p50:.3}"), format!("{p99:.3}")),
                 None => ("null".into(), "null".into()),
             };
+            let (slo_s, dec_s) = match row.slo {
+                Some((v, d)) => (v.to_string(), d.to_string()),
+                None => ("null".into(), "null".into()),
+            };
             writeln!(
                 fh,
                 "{{\"v\":{ROW_SCHEMA},\"bench\":\"{}\",\"scenario\":\"{}\",\
@@ -304,7 +321,8 @@ impl BenchLog {
                  \"layout_ranges\":{},\"layout_bytes\":{},\
                  \"net_model\":{},\"net_ms\":{},\
                  \"imbalance\":{},\"rebalance_ms\":{},\
-                 \"p50_ms\":{},\"p99_ms\":{}}}",
+                 \"p50_ms\":{},\"p99_ms\":{},\
+                 \"slo_violations\":{},\"decisions\":{}}}",
                 self.bench,
                 row.scenario,
                 row.wall_ms,
@@ -316,7 +334,9 @@ impl BenchLog {
                 imb_s,
                 reb_s,
                 p50_s,
-                p99_s
+                p99_s,
+                slo_s,
+                dec_s
             )
             .expect("write bench row");
         }

@@ -1,0 +1,300 @@
+//! The unified run configuration: one config type, one builder, for
+//! both controller substrates.
+//!
+//! `ControllerConfig` and `StreamingConfig` grew as near-duplicates
+//! (net, net_model, value_bytes, latency, seed, threads, rebalance all
+//! repeated); [`RunConfig`] merges them behind a fluent builder —
+//! `RunConfig::new().net(...).policy(...)` — and
+//! [`crate::coordinator::Controller::drive`] consumes it on either
+//! substrate. The legacy types remain as thin deprecated shims for one
+//! release (see the migration note in the README's Autoscaling
+//! section).
+
+use super::policy::{ScalingPolicy, SloConfig, SloPolicy, ThresholdPolicy};
+use super::provisioner::LatencyModel;
+use crate::ordering::geo::GeoConfig;
+use crate::par::ThreadConfig;
+use crate::scaling::netsim::NetModelConfig;
+use crate::scaling::network::Network;
+use crate::stream::CompactionPolicy;
+
+/// Which substrate [`crate::coordinator::Controller::drive`] runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DriveMode {
+    /// streaming iff the scenario carries churn events (the default)
+    #[default]
+    Auto,
+    /// always the batch substrate: the graph is immutable, churn events
+    /// in the scenario are ignored (the legacy `run_scenario` contract)
+    Batch,
+    /// always the streaming substrate (staged graph, churn-capable) —
+    /// even for churn-free scenarios
+    Streaming,
+}
+
+/// The scaling policy a run drives its rescales with (beyond the
+/// scenario's scripted events, which always execute).
+#[derive(Clone, Copy, Debug, Default)]
+pub enum PolicyConfig {
+    /// scripted events only — no reactive decisions (the default)
+    #[default]
+    Off,
+    /// the legacy skew threshold: nudge chunk boundaries whenever the
+    /// metered max/mean cost imbalance exceeds the ratio (CLI:
+    /// `--rebalance threshold` / `--policy threshold`)
+    Threshold {
+        /// max/mean imbalance trigger ratio (≥ 1.0)
+        threshold: f64,
+    },
+    /// the SLO-driven autoscaler (CLI: `--policy slo --slo-p99-ms <t>`)
+    Slo(SloConfig),
+}
+
+impl PolicyConfig {
+    /// Instantiate the policy object; `None` when the policy is off.
+    pub fn build(&self) -> Option<Box<dyn ScalingPolicy>> {
+        match self {
+            PolicyConfig::Off => None,
+            PolicyConfig::Threshold { threshold } => {
+                Some(Box::new(ThresholdPolicy::new(*threshold)))
+            }
+            PolicyConfig::Slo(cfg) => Some(Box::new(SloPolicy::new(*cfg))),
+        }
+    }
+
+    /// May the configured policy commit boundary nudges? Drives whether
+    /// the streaming substrate carries weighted chunk boundaries.
+    pub fn may_nudge(&self) -> bool {
+        !matches!(self, PolicyConfig::Off)
+    }
+
+    /// The SLO target the policy enforces, if any — the default
+    /// reference for counting SLO violations.
+    pub fn slo_target_ms(&self) -> Option<f64> {
+        match self {
+            PolicyConfig::Slo(cfg) => Some(cfg.p99_ms),
+            _ => None,
+        }
+    }
+}
+
+/// Unified configuration for [`crate::coordinator::Controller::drive`]:
+/// the superset of the legacy `ControllerConfig` and `StreamingConfig`
+/// fields plus the scaling policy. Build fluently:
+///
+/// ```ignore
+/// let cfg = RunConfig::new()
+///     .net(Network::gbps(8.0))
+///     .net_model(NetModelConfig::emulated())
+///     .policy(PolicyConfig::Slo(SloConfig::new(5.0)));
+/// ```
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// partitioning/scaling method: `cep` (graph must be GEO-ordered for
+    /// the paper's quality), `1d`, `bvc`, `oblivious`, `ginger`. The
+    /// streaming substrate is CEP-native and rejects anything else.
+    pub method: String,
+    /// physical network for migration pricing (bandwidth + barrier)
+    pub net: Network,
+    /// which pricing model runs on `net` (closed form or emulator, with
+    /// the emulator's skew/overlap knobs)
+    pub net_model: NetModelConfig,
+    /// bytes of application value migrated per edge
+    pub value_bytes: u64,
+    /// worker provisioning latencies
+    pub latency: LatencyModel,
+    /// RNG seed (stateless methods, generated mutation batches)
+    pub seed: u64,
+    /// executor width for engine supersteps (pure execution knob —
+    /// results identical at any value; defaults to `PALLAS_THREADS`)
+    pub threads: ThreadConfig,
+    /// the scaling policy driving reactive decisions between supersteps
+    pub policy: PolicyConfig,
+    /// count an SLO violation whenever the modeled step latency exceeds
+    /// this many milliseconds — defaults to the SLO policy's target, so
+    /// set it explicitly to audit a fixed-script baseline against the
+    /// same SLO
+    pub slo_ref_ms: Option<f64>,
+    /// substrate selection (default: streaming iff the scenario churns)
+    pub mode: DriveMode,
+    /// GEO configuration for the streaming substrate's initial ordering
+    /// and every compaction
+    pub geo: GeoConfig,
+    /// staging/tombstone quality budget (streaming substrate)
+    pub compaction: CompactionPolicy,
+    /// fold the staging tail once the scenario ends (streaming)
+    pub flush_at_end: bool,
+    /// record the live replication factor in every churn record — an
+    /// O(|E|) audit sweep per batch, off by default (streaming)
+    pub audit_rf: bool,
+    /// additionally price a fresh GEO+CEP repartition of the final
+    /// mutated graph and report its RF (streaming)
+    pub measure_fresh_baseline: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            method: "cep".into(),
+            net: Network::gbps(8.0),
+            net_model: NetModelConfig::default(),
+            value_bytes: 8,
+            latency: LatencyModel::default(),
+            seed: 42,
+            threads: ThreadConfig::default(),
+            policy: PolicyConfig::default(),
+            slo_ref_ms: None,
+            mode: DriveMode::default(),
+            geo: GeoConfig::default(),
+            compaction: CompactionPolicy::default(),
+            flush_at_end: true,
+            audit_rf: false,
+            measure_fresh_baseline: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Defaults: CEP at 8 Gbps under the closed form, policy off.
+    pub fn new() -> RunConfig {
+        RunConfig::default()
+    }
+
+    /// Set the partitioning/scaling method.
+    pub fn method(mut self, method: &str) -> RunConfig {
+        self.method = method.into();
+        self
+    }
+
+    /// Set the physical network migrations are priced on.
+    pub fn net(mut self, net: Network) -> RunConfig {
+        self.net = net;
+        self
+    }
+
+    /// Select the network pricing model and its knobs.
+    pub fn net_model(mut self, net_model: NetModelConfig) -> RunConfig {
+        self.net_model = net_model;
+        self
+    }
+
+    /// Set the bytes of application value migrated per edge.
+    pub fn value_bytes(mut self, value_bytes: u64) -> RunConfig {
+        self.value_bytes = value_bytes;
+        self
+    }
+
+    /// Set the worker provisioning latencies.
+    pub fn latency(mut self, latency: LatencyModel) -> RunConfig {
+        self.latency = latency;
+        self
+    }
+
+    /// Set the RNG seed.
+    pub fn seed(mut self, seed: u64) -> RunConfig {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the executor width.
+    pub fn threads(mut self, threads: ThreadConfig) -> RunConfig {
+        self.threads = threads;
+        self
+    }
+
+    /// Select the scaling policy.
+    pub fn policy(mut self, policy: PolicyConfig) -> RunConfig {
+        self.policy = policy;
+        self
+    }
+
+    /// Audit SLO violations against this target (milliseconds) even
+    /// when no policy runs.
+    pub fn slo_ref_ms(mut self, target_ms: f64) -> RunConfig {
+        self.slo_ref_ms = Some(target_ms);
+        self
+    }
+
+    /// Force the substrate instead of auto-detecting from churn.
+    pub fn mode(mut self, mode: DriveMode) -> RunConfig {
+        self.mode = mode;
+        self
+    }
+
+    /// Set the streaming substrate's GEO configuration.
+    pub fn geo(mut self, geo: GeoConfig) -> RunConfig {
+        self.geo = geo;
+        self
+    }
+
+    /// Set the streaming compaction budget.
+    pub fn compaction(mut self, compaction: CompactionPolicy) -> RunConfig {
+        self.compaction = compaction;
+        self
+    }
+
+    /// Toggle the end-of-run staging flush (streaming).
+    pub fn flush_at_end(mut self, flush: bool) -> RunConfig {
+        self.flush_at_end = flush;
+        self
+    }
+
+    /// Toggle the per-batch RF audit sweep (streaming).
+    pub fn audit_rf(mut self, audit: bool) -> RunConfig {
+        self.audit_rf = audit;
+        self
+    }
+
+    /// Toggle the fresh-repartition quality baseline (streaming).
+    pub fn measure_fresh_baseline(mut self, measure: bool) -> RunConfig {
+        self.measure_fresh_baseline = measure;
+        self
+    }
+
+    /// The SLO reference (milliseconds) violations are counted against:
+    /// the explicit `slo_ref_ms` if set, else the policy's own target.
+    pub fn slo_reference_ms(&self) -> Option<f64> {
+        self.slo_ref_ms.or_else(|| self.policy.slo_target_ms())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains_and_defaults_hold() {
+        let cfg = RunConfig::new()
+            .method("cep")
+            .value_bytes(16)
+            .seed(7)
+            .policy(PolicyConfig::Threshold { threshold: 1.2 })
+            .mode(DriveMode::Streaming)
+            .audit_rf(true);
+        assert_eq!(cfg.method, "cep");
+        assert_eq!(cfg.value_bytes, 16);
+        assert_eq!(cfg.seed, 7);
+        assert!(cfg.audit_rf);
+        assert_eq!(cfg.mode, DriveMode::Streaming);
+        assert!(cfg.policy.may_nudge());
+        assert!(cfg.slo_reference_ms().is_none());
+    }
+
+    #[test]
+    fn slo_reference_prefers_explicit_target() {
+        let cfg = RunConfig::new().policy(PolicyConfig::Slo(SloConfig::new(5.0)));
+        assert_eq!(cfg.slo_reference_ms(), Some(5.0));
+        let cfg = cfg.slo_ref_ms(9.0);
+        assert_eq!(cfg.slo_reference_ms(), Some(9.0));
+    }
+
+    #[test]
+    fn policy_build_matches_variant() {
+        assert!(PolicyConfig::Off.build().is_none());
+        let t = PolicyConfig::Threshold { threshold: 1.1 }.build().unwrap();
+        assert_eq!(t.name(), "threshold");
+        let s = PolicyConfig::Slo(SloConfig::new(10.0)).build().unwrap();
+        assert_eq!(s.name(), "slo");
+        assert!(s.may_nudge());
+    }
+}

@@ -1,46 +1,28 @@
-//! The elastic controller: runs an application across a scaling scenario,
-//! rescaling with the configured method at each event and accounting the
-//! Table 7 breakdown (INIT / APP / SCALE).
+//! Legacy controller surface: the audit records and breakdown rows both
+//! run paths report, plus the deprecated `ControllerConfig` /
+//! `StreamingConfig` + `run_scenario` / `run_streaming` shims.
 //!
-//! Every scale event is executed as a **migration plan**: the method state
-//! derives an explicit list of `(src, dst, edge-id-range)` moves, the
-//! configured network model prices the plan — the closed-form
-//! [`Network`] fast path, or the deterministic discrete-event emulator
-//! ([`crate::scaling::netsim`]) which additionally separates the
-//! migration seconds *hidden behind* the application's superstep window
-//! (`net_overlapped_ms`) from the seconds that stall it
-//! (`net_blocking_ms`; only the latter is charged to SCALE) — and the
-//! engine applies it in place ([`Engine::apply_migration`]): touched
-//! partitions reload their local tables, untouched workers keep running.
-//! On the CEP path the active assignment is a [`CepView`], so a
-//! `k → k±x` rescale is O(k) metadata end-to-end: no `Vec<PartitionId>`
-//! is ever materialized.
+//! The run loops themselves live in [`super::driver`] behind the unified
+//! [`Controller::drive`] entry point — one loop, one policy hook, one
+//! pricing/audit pipeline for both substrates. The shims here translate
+//! the legacy config shapes into a [`RunConfig`] (the threshold
+//! rebalance folds into [`PolicyConfig::Threshold`]) and convert the
+//! unified [`super::driver::RunReport`] back into the legacy breakdown
+//! rows, so existing callers keep compiling — and keep their outputs —
+//! for one release.
 
-use super::provisioner::{LatencyModel, Provisioner};
-use super::state::ClusterState;
-use crate::engine::{apps::pagerank, Combine, Engine};
+use super::config::{DriveMode, PolicyConfig, RunConfig};
+use super::driver::Controller;
+use super::provisioner::LatencyModel;
 use crate::graph::Graph;
-use crate::obs;
 use crate::ordering::geo::GeoConfig;
 use crate::par::ThreadConfig;
-use crate::partition::bvc::BvcState;
-use crate::partition::cep::Cep;
-use crate::partition::weighted::{balanced_boundaries, imbalance, predicted_costs, uniform_bounds};
-use crate::partition::{
-    ginger, hash1d, oblivious, CepView, EdgePartition, PartitionAssignment, WeightedCepView,
-};
-use crate::runtime::{ComputeBackend, StepKind};
-use crate::scaling::migration::MigrationPlan;
-use crate::scaling::netsim::{self, NetModelConfig, NetSim};
+use crate::runtime::ComputeBackend;
+use crate::scaling::netsim::NetModelConfig;
 use crate::scaling::network::Network;
 use crate::scaling::scenario::Scenario;
-use crate::stream::{
-    quality as stream_quality, ChurnPlan, CompactionPolicy, MutationBatch, StagedGraph,
-};
-use crate::util::rng::Rng;
+use crate::stream::CompactionPolicy;
 use crate::Result;
-use anyhow::bail;
-use std::time::Instant;
 
 /// When the coordinator nudges chunk boundaries toward the metered
 /// per-partition cost profile (CLI: `--rebalance`).
@@ -61,6 +43,13 @@ pub enum RebalanceMode {
 /// ([`crate::partition::weighted::balanced_boundaries`]) with a
 /// ≤ 2(k−1)-move interval-splice plan. Only chunk-contiguous assignments
 /// (the CEP paths) can be nudged; scattered methods ignore the policy.
+///
+/// This is the config-level surface of
+/// [`super::policy::ThresholdPolicy`]: the unified driver runs it as a
+/// degenerate scaling policy, and [`PolicyConfig::Threshold`] is the
+/// unified way to ask for it.
+///
+/// [`Engine::partition_costs`]: crate::engine::Engine::partition_costs
 #[derive(Clone, Copy, Debug)]
 pub struct RebalanceConfig {
     /// the policy
@@ -92,6 +81,15 @@ impl RebalanceConfig {
     pub fn is_threshold(&self) -> bool {
         self.mode == RebalanceMode::Threshold
     }
+
+    /// The equivalent unified policy selection.
+    pub fn as_policy(&self) -> PolicyConfig {
+        if self.is_threshold() {
+            PolicyConfig::Threshold { threshold: self.threshold }
+        } else {
+            PolicyConfig::Off
+        }
+    }
 }
 
 /// Audit record of one executed boundary rebalance.
@@ -120,7 +118,9 @@ pub struct RebalanceRecord {
     pub net_overlapped_ms: f64,
 }
 
-/// Controller configuration.
+/// Legacy batch-path configuration. Superseded by [`RunConfig`]: the
+/// same fields, one builder, plus the policy layer.
+#[deprecated(note = "use RunConfig + Controller::drive")]
 pub struct ControllerConfig {
     /// partitioning/scaling method: `cep` (graph must be GEO-ordered for
     /// the paper's quality), `1d`, `bvc`, `oblivious`, `ginger`
@@ -144,6 +144,7 @@ pub struct ControllerConfig {
     pub rebalance: RebalanceConfig,
 }
 
+#[allow(deprecated)]
 impl Default for ControllerConfig {
     fn default() -> Self {
         ControllerConfig {
@@ -155,6 +156,24 @@ impl Default for ControllerConfig {
             seed: 42,
             threads: ThreadConfig::default(),
             rebalance: RebalanceConfig::default(),
+        }
+    }
+}
+
+#[allow(deprecated)]
+impl From<&ControllerConfig> for RunConfig {
+    fn from(c: &ControllerConfig) -> RunConfig {
+        RunConfig {
+            method: c.method.clone(),
+            net: c.net,
+            net_model: c.net_model,
+            value_bytes: c.value_bytes,
+            latency: c.latency,
+            seed: c.seed,
+            threads: c.threads,
+            policy: c.rebalance.as_policy(),
+            mode: DriveMode::Batch,
+            ..RunConfig::default()
         }
     }
 }
@@ -232,336 +251,35 @@ pub struct RunBreakdown {
     pub rebalances: Vec<RebalanceRecord>,
 }
 
-enum MethodState {
-    Cep(Cep),
-    Bvc(Box<BvcState>),
-    Stateless, // 1d / oblivious / ginger recompute from scratch
-}
-
-/// The assignment the engine currently runs on: chunk metadata for CEP
-/// (O(1), zero materialization), weighted boundaries once the rebalancer
-/// has nudged a CEP run, or an explicit vector for everything else.
-enum ActiveAssignment {
-    Chunked(CepView),
-    Weighted(WeightedCepView),
-    Materialized(EdgePartition),
-}
-
-impl ActiveAssignment {
-    fn as_assignment(&self) -> &dyn PartitionAssignment {
-        match self {
-            ActiveAssignment::Chunked(v) => v,
-            ActiveAssignment::Weighted(v) => v,
-            ActiveAssignment::Materialized(p) => p,
-        }
-    }
-
-    /// Boundary array of a chunk-contiguous assignment — `None` for
-    /// materialized per-edge methods, which the boundary solver cannot
-    /// nudge.
-    fn chunk_bounds(&self) -> Option<Vec<u64>> {
-        match self {
-            ActiveAssignment::Chunked(v) => Some(v.cep().boundaries()),
-            ActiveAssignment::Weighted(v) => Some(v.bounds().to_vec()),
-            ActiveAssignment::Materialized(_) => None,
-        }
-    }
-}
-
 /// Run PageRank under `scenario`, scaling with `cfg.method`.
 /// `backend_for` supplies a compute backend per partition at every epoch.
+///
+/// Thin shim over [`Controller::drive`] pinned to the batch substrate
+/// (churn events in the scenario are ignored, the legacy contract).
+/// Clones the graph — `drive` takes it by value.
+#[deprecated(note = "use Controller::drive with a RunConfig")]
+#[allow(deprecated)]
 pub fn run_scenario<F>(
     g: &Graph,
     scenario: &Scenario,
     cfg: &ControllerConfig,
-    mut backend_for: F,
+    backend_for: F,
 ) -> Result<RunBreakdown>
 where
     F: FnMut(usize) -> Box<dyn ComputeBackend>,
 {
-    let m = g.num_edges();
-    let n = g.num_vertices();
-    let mut cluster = ClusterState::new(scenario.initial_k);
-    let scn = obs::span("scenario");
-    scn.add("iterations", scenario.total_iterations as u64);
-    scn.add("initial_k", scenario.initial_k as u64);
-    // superstep wall-latency distribution for the breakdown's p50/p99
-    // columns — works with or without an active obs session
-    let superstep_hist = obs::Histogram::new();
-
-    // ---- INIT: initial partition + engine + fleet boot
-    let t_init = Instant::now();
-    let mut provisioner = Provisioner::boot(scenario.initial_k, cfg.latency);
-    let mut method_state = match cfg.method.as_str() {
-        "cep" => MethodState::Cep(Cep::new(m, scenario.initial_k)),
-        "bvc" => MethodState::Bvc(Box::new(BvcState::build(m, scenario.initial_k, cfg.seed))),
-        "1d" | "oblivious" | "ginger" => MethodState::Stateless,
-        other => bail!("unknown scaling method {other}"),
-    };
-    let mut assignment =
-        initial_assignment(g, &method_state, &cfg.method, scenario.initial_k);
-    let mut engine = Engine::new(g, assignment.as_assignment(), &mut backend_for)?
-        .with_threads(cfg.threads);
-    let mut init_s = t_init.elapsed().as_secs_f64() + provisioner.accounted().as_secs_f64();
-
-    // ---- application state (PageRank), survives rescales
-    let aux: Vec<f32> = (0..n as u32)
-        .map(|v| {
-            let d = g.degree(v);
-            if d == 0 {
-                0.0
-            } else {
-                1.0 / d as f32
-            }
-        })
-        .collect();
-    let mut ranks = vec![1.0f32 / n as f32; n];
-    let active = vec![true; n];
-    let base = (1.0 - pagerank::DAMPING) / n as f32;
-
-    let mut app_s = 0.0f64;
-    let mut scale_s = 0.0f64;
-    let mut net_s = 0.0f64;
-    let mut rebalance_s = 0.0f64;
-    let mut com_bytes = 0u64;
-    let mut event_log: Vec<EventRecord> = Vec::new();
-    let mut rebalance_log: Vec<RebalanceRecord> = Vec::new();
-    // each superstep window may hide at most one priced transfer behind
-    // it; a rebalance at the end of iteration `it` spends the window the
-    // scale event of iteration `it+1` would otherwise claim
-    let mut window_free = true;
-
-    for it in 0..scenario.total_iterations {
-        // ---- SCALE event? Derive a plan, price it, execute it.
-        if let Some(ev) = scenario.event_at(it) {
-            let ev_sp = obs::span("event:scale");
-            let from_k = cluster.k;
-            let t_scale = Instant::now();
-            let (plan, new_assignment) = {
-                let psp = obs::span("phase:plan-derive");
-                let r = plan_rescale(g, &mut method_state, &assignment, &cfg.method, ev.target_k);
-                psp.add("range_moves", r.0.num_moves() as u64);
-                r
-            };
-            let migrated = plan.migrated_edges();
-            // network time for moving edge data + values, under the
-            // configured model; in emulated overlap mode the migration
-            // flows share NICs with the *last* superstep's metered
-            // scatter/gather traffic (still in the comm lanes — the meter
-            // resets at the top of every APP phase)
-            let app = if window_free { app_snapshot(&engine, &cfg.net_model) } else { None };
-            let mut cost = netsim::price_plan(
-                &cfg.net,
-                &cfg.net_model,
-                &plan,
-                from_k.max(ev.target_k),
-                cfg.value_bytes,
-                app.as_ref(),
-            );
-            if let MethodState::Bvc(_) = &method_state {
-                // BVC pays extra refinement barriers; approximated by the
-                // rounds recorded by the state — barriers are sync points,
-                // so they cannot overlap compute under either model
-                cost.add_blocking(3.0 * cfg.net.barrier_latency_s);
-            }
-            let prov = provisioner.resize_to(ev.target_k, cluster.epoch + 1);
-            // execute the plan: range-based transfer, touched workers only
-            engine.apply_migration(g, &plan, new_assignment.as_assignment(), &mut backend_for)?;
-            assignment = new_assignment;
-            let wall = t_scale.elapsed().as_secs_f64();
-            // only the blocking share stalls the app; overlapped seconds
-            // ride inside the APP window
-            let total = wall + cost.blocking_s + prov.as_secs_f64();
-            scale_s += total;
-            net_s += cost.total_s;
-            cluster.record_scale(
-                ev.target_k,
-                migrated,
-                std::time::Duration::from_secs_f64(total),
-            );
-            let rec = EventRecord {
-                from_k,
-                to_k: ev.target_k,
-                migrated_edges: migrated,
-                range_moves: plan.num_moves(),
-                layout_ranges: engine.layout().total_ranges(),
-                net_blocking_ms: cost.blocking_s * 1e3,
-                net_overlapped_ms: cost.overlapped_s * 1e3,
-            };
-            emit_event_span(&ev_sp, &rec);
-            event_log.push(rec);
-        }
-
-        // ---- APP: one PageRank iteration
-        let t_app = Instant::now();
-        engine.comm.reset();
-        let (contrib, _) =
-            engine.superstep(StepKind::PageRank, Combine::Sum, &ranks, &aux, &active)?;
-        let ss_ns = t_app.elapsed().as_nanos() as u64;
-        superstep_hist.record(ss_ns);
-        obs::hist_record("superstep_wall_ns", ss_ns);
-        for v in 0..n {
-            ranks[v] = base + pagerank::DAMPING * contrib[v];
-        }
-        com_bytes += engine.comm.total_bytes();
-        app_s += t_app.elapsed().as_secs_f64();
-        window_free = true; // fresh superstep window metered in the lanes
-
-        // ---- REBALANCE: past the threshold, nudge the chunk boundaries
-        // toward the superstep's metered cost profile (CEP paths only —
-        // scattered methods have no boundaries to move)
-        if cfg.rebalance.is_threshold() {
-            if let Some(old_bounds) = assignment.chunk_bounds() {
-                let costs = engine
-                    .partition_costs(cfg.net_model.compute_ns_per_edge, cfg.net.bandwidth_bps);
-                let imb_before = imbalance(&costs);
-                if imb_before > cfg.rebalance.threshold {
-                    let t_reb = Instant::now();
-                    let new_bounds = balanced_boundaries(&old_bounds, &costs);
-                    let plan = MigrationPlan::between_boundaries(&old_bounds, &new_bounds);
-                    if plan.num_moves() > 0 {
-                        let rb_sp = obs::span("event:rebalance");
-                        let imb_after =
-                            imbalance(&predicted_costs(&old_bounds, &costs, &new_bounds));
-                        // the shift may hide behind the window it was
-                        // metered from — the same overlap rule as rescales
-                        let app = app_snapshot(&engine, &cfg.net_model);
-                        if app.is_some() {
-                            window_free = false;
-                        }
-                        let cost = netsim::price_plan(
-                            &cfg.net,
-                            &cfg.net_model,
-                            &plan,
-                            cluster.k,
-                            cfg.value_bytes,
-                            app.as_ref(),
-                        );
-                        let view = WeightedCepView::from_bounds(new_bounds);
-                        engine.apply_migration(g, &plan, &view, &mut backend_for)?;
-                        let rec = RebalanceRecord {
-                            at_iteration: it,
-                            k: cluster.k,
-                            imbalance_before: imb_before,
-                            imbalance_after: imb_after,
-                            moved_edges: plan.migrated_edges(),
-                            range_moves: plan.num_moves(),
-                            layout_ranges: engine.layout().total_ranges(),
-                            net_blocking_ms: cost.blocking_s * 1e3,
-                            net_overlapped_ms: cost.overlapped_s * 1e3,
-                        };
-                        emit_rebalance_span(&rb_sp, &rec);
-                        rebalance_log.push(rec);
-                        assignment = ActiveAssignment::Weighted(view);
-                        rebalance_s += t_reb.elapsed().as_secs_f64() + cost.blocking_s;
-                        net_s += cost.total_s;
-                    }
-                }
-            }
-        }
-    }
-
-    let final_imbalance = imbalance(
-        &engine.partition_costs(cfg.net_model.compute_ns_per_edge, cfg.net.bandwidth_bps),
-    );
-    // stateless methods pay their full partitioning cost inside INIT too
-    if init_s == 0.0 {
-        init_s = f64::MIN_POSITIVE;
-    }
-    let ss = superstep_hist.snapshot();
-    scn.add("supersteps", ss.count);
-    scn.add("events", event_log.len() as u64);
-    scn.add("rebalances", rebalance_log.len() as u64);
-    scn.add("final_k", cluster.k as u64);
-    Ok(RunBreakdown {
-        method: cfg.method.clone(),
-        all_s: init_s + app_s + scale_s + rebalance_s,
-        init_s,
-        app_s,
-        scale_s,
-        net_s,
-        migrated_edges: cluster.total_migrated(),
-        com_bytes,
-        final_k: cluster.k,
-        layout_ranges: engine.layout().total_ranges(),
-        layout_bytes: engine.layout().metadata_bytes(),
-        rebalance_s,
-        final_imbalance,
-        superstep_p50_ms: ss.quantile(0.50) as f64 / 1e6,
-        superstep_p99_ms: ss.quantile(0.99) as f64 / 1e6,
-        events: event_log,
-        rebalances: rebalance_log,
-    })
-}
-
-/// Initial assignment for the configured method — the CEP path yields a
-/// zero-materialization view.
-fn initial_assignment(
-    g: &Graph,
-    state: &MethodState,
-    method: &str,
-    k: usize,
-) -> ActiveAssignment {
-    match state {
-        MethodState::Cep(c) => ActiveAssignment::Chunked(CepView::new(*c)),
-        MethodState::Bvc(b) => ActiveAssignment::Materialized(b.to_partition()),
-        MethodState::Stateless => {
-            ActiveAssignment::Materialized(stateless_partition(g, method, k))
-        }
-    }
-}
-
-/// Advance the method state to `target_k` and derive the executable plan
-/// plus the new active assignment. For CEP this is O(k + k') chunk
-/// metadata (a rescale resets any skew-nudged boundaries to the uniform
-/// grid of the new k); BVC and the stateless methods diff per edge.
-fn plan_rescale(
-    g: &Graph,
-    state: &mut MethodState,
-    current: &ActiveAssignment,
-    method: &str,
-    target_k: usize,
-) -> (MigrationPlan, ActiveAssignment) {
-    match state {
-        MethodState::Cep(c) => {
-            let old = *c;
-            *c = c.rescaled(target_k);
-            let plan = match current {
-                // skew-nudged boundaries → the uniform target grid, still
-                // O(k + k') contiguous moves
-                ActiveAssignment::Weighted(v) => {
-                    MigrationPlan::between_boundaries(v.bounds(), &c.boundaries())
-                }
-                _ => MigrationPlan::between_ceps(&old, c),
-            };
-            (plan, ActiveAssignment::Chunked(CepView::new(*c)))
-        }
-        MethodState::Bvc(b) => {
-            let before = b.to_partition();
-            b.scale_to(target_k);
-            let after = b.to_partition();
-            (
-                MigrationPlan::diff(&before, &after),
-                ActiveAssignment::Materialized(after),
-            )
-        }
-        MethodState::Stateless => {
-            let after = stateless_partition(g, method, target_k);
-            (
-                MigrationPlan::diff(current.as_assignment(), &after),
-                ActiveAssignment::Materialized(after),
-            )
-        }
-    }
+    let run_cfg = RunConfig::from(cfg);
+    Ok(Controller::drive(g.clone(), scenario, &run_cfg, backend_for)?.into())
 }
 
 // ---------------------------------------------------------------------------
 // Streaming: interleaved churn + rescale over a StagedGraph
 // ---------------------------------------------------------------------------
 
-/// Configuration of the streaming (churn-capable) controller. The
-/// streaming path is CEP-native: the assignment is chunk metadata over the
-/// staged physical id space and every plan is range operations.
+/// Legacy streaming-path configuration. Superseded by [`RunConfig`]
+/// (with [`DriveMode::Streaming`] or a churn-carrying scenario under
+/// [`DriveMode::Auto`]).
+#[deprecated(note = "use RunConfig + Controller::drive")]
 pub struct StreamingConfig {
     /// physical network for pricing inter-worker rebalancing moves
     pub net: Network,
@@ -600,6 +318,7 @@ pub struct StreamingConfig {
     pub rebalance: RebalanceConfig,
 }
 
+#[allow(deprecated)]
 impl Default for StreamingConfig {
     fn default() -> Self {
         StreamingConfig {
@@ -615,6 +334,29 @@ impl Default for StreamingConfig {
             measure_fresh_baseline: false,
             threads: ThreadConfig::default(),
             rebalance: RebalanceConfig::default(),
+        }
+    }
+}
+
+#[allow(deprecated)]
+impl From<&StreamingConfig> for RunConfig {
+    fn from(c: &StreamingConfig) -> RunConfig {
+        RunConfig {
+            method: "cep".into(),
+            net: c.net,
+            net_model: c.net_model,
+            value_bytes: c.value_bytes,
+            latency: c.latency,
+            seed: c.seed,
+            threads: c.threads,
+            policy: c.rebalance.as_policy(),
+            slo_ref_ms: None,
+            mode: DriveMode::Streaming,
+            geo: c.geo,
+            compaction: c.policy,
+            flush_at_end: c.flush_at_end,
+            audit_rf: c.audit_rf,
+            measure_fresh_baseline: c.measure_fresh_baseline,
         }
     }
 }
@@ -655,7 +397,7 @@ pub struct ChurnRecord {
     /// compactions — a full rebuild cannot overlap)
     pub net_overlapped_ms: f64,
     /// live replication factor after the batch was applied
-    /// ([`StreamingConfig::audit_rf`]; NaN when disabled)
+    /// ([`RunConfig::audit_rf`]; NaN when disabled)
     pub rf: f64,
 }
 
@@ -723,492 +465,28 @@ pub struct StreamingBreakdown {
 /// staged state compacts through GEO when the quality budget is spent.
 /// Takes ownership of the graph — the staged base is GEO-ordered once at
 /// INIT.
+///
+/// Thin shim over [`Controller::drive`] pinned to the streaming
+/// substrate.
+#[deprecated(note = "use Controller::drive with a RunConfig")]
+#[allow(deprecated)]
 pub fn run_streaming<F>(
     g: Graph,
     scenario: &Scenario,
     cfg: &StreamingConfig,
-    mut backend_for: F,
+    backend_for: F,
 ) -> Result<StreamingBreakdown>
 where
     F: FnMut(usize) -> Box<dyn ComputeBackend>,
 {
-    let mut k = scenario.initial_k;
-    let mut cluster = ClusterState::new(k);
-    let mut rng = Rng::new(cfg.seed);
-    let scn = obs::span("scenario");
-    scn.add("iterations", scenario.total_iterations as u64);
-    scn.add("initial_k", k as u64);
-    let superstep_hist = obs::Histogram::new();
-
-    // ---- INIT: GEO-order the base, boot engine + fleet
-    let t_init = Instant::now();
-    let mut provisioner = Provisioner::boot(k, cfg.latency);
-    let mut sg = StagedGraph::new(g, cfg.geo).with_policy(cfg.policy);
-    let mut engine = {
-        let assign = sg.assignment(k);
-        Engine::new(&sg, &assign, &mut backend_for)?.with_threads(cfg.threads)
-    };
-    let init_s = t_init.elapsed().as_secs_f64() + provisioner.accounted().as_secs_f64();
-
-    // ---- application state (PageRank), survives churn and rescales
-    let mut n = sg.num_vertices();
-    let mut ranks = vec![1.0f32 / n.max(1) as f32; n];
-    let mut aux: Vec<f32> = (0..n as u32)
-        .map(|v| {
-            let d = sg.degree(v);
-            if d == 0 {
-                0.0
-            } else {
-                1.0 / d as f32
-            }
-        })
-        .collect();
-    let mut active = vec![true; n];
-
-    let mut app_s = 0.0f64;
-    let mut scale_s = 0.0f64;
-    let mut churn_s = 0.0f64;
-    let mut net_s = 0.0f64;
-    let mut rebalance_s = 0.0f64;
-    let mut com_bytes = 0u64;
-    let mut event_log: Vec<EventRecord> = Vec::new();
-    let mut churn_log: Vec<ChurnRecord> = Vec::new();
-    let mut rebalance_log: Vec<RebalanceRecord> = Vec::new();
-    // weighted chunk boundaries over the staged physical id space — only
-    // carried when the rebalance policy is active; `None` keeps the
-    // uniform-CEP streaming path bit-identical to the policy-off build
-    let mut wbounds: Option<Vec<u64>> = if cfg.rebalance.is_threshold() {
-        Some(uniform_bounds(sg.physical_edges() as u64, k))
-    } else {
-        None
-    };
-    // one superstep window per priced transfer: when several events fire
-    // around the same APP phase (churn, rescale, rebalance), only the
-    // first may hide its flows behind the window — the rest price
-    // standalone, else the window's NIC capacity would be spent twice and
-    // blocking time understated
-    let mut window_free = true;
-
-    for it in 0..scenario.total_iterations {
-        // ---- CHURN batch? Ingest, derive the delta plan, apply or fold.
-        if let Some(ce) = scenario.churn_at(it) {
-            let ev_sp = obs::span("event:churn");
-            let t = Instant::now();
-            let batch = random_batch(&mut rng, &sg, ce.inserts, ce.deletes);
-            let (outcome, plan) = match wbounds.as_mut() {
-                Some(b) => sg.apply_batch_weighted(&batch, b),
-                None => sg.apply_batch(&batch, k),
-            };
-            let compacted = sg.needs_compaction();
-            let (cost, moved, range_ops) = if compacted {
-                // the delta plan is discarded: the budget tripped, the
-                // whole live graph folds through GEO and every worker
-                // reloads its (new) chunk — price the full redistribution
-                // as a ring of per-worker chunk loads; a full rebuild is a
-                // sync point, so it never overlaps the app. Any nudged
-                // boundaries reset to the uniform grid of the new id space
-                sg.compact();
-                let assign = sg.assignment(k);
-                engine = Engine::new(&sg, &assign, &mut backend_for)?.with_threads(cfg.threads);
-                if let Some(b) = wbounds.as_mut() {
-                    *b = uniform_bounds(sg.physical_edges() as u64, k);
-                }
-                let live = sg.live_edges() as u64;
-                let flows = NetSim::redistribution_flows(k, live * (8 + cfg.value_bytes));
-                (netsim::price_flows(&cfg.net, &cfg.net_model, &flows, k), live, k)
-            } else {
-                // only rebalancing moves are inter-worker traffic; appends
-                // arrive from the stream and retires are metadata. In
-                // emulated overlap mode the moves share NICs with the last
-                // superstep's metered traffic
-                let app = if window_free { app_snapshot(&engine, &cfg.net_model) } else { None };
-                if app.is_some() {
-                    window_free = false;
-                }
-                let cost = netsim::price_plan(
-                    &cfg.net,
-                    &cfg.net_model,
-                    &plan.moves,
-                    k,
-                    cfg.value_bytes,
-                    app.as_ref(),
-                );
-                match wbounds.as_ref() {
-                    Some(b) => {
-                        let view = WeightedCepView::from_bounds(b.clone());
-                        let assign = sg.weighted_assignment(&view);
-                        engine.apply_churn(&sg, &plan, &assign, &mut backend_for)?;
-                    }
-                    None => {
-                        let assign = sg.assignment(k);
-                        engine.apply_churn(&sg, &plan, &assign, &mut backend_for)?;
-                    }
-                }
-                (cost, plan.moved_edges(), plan.range_ops())
-            };
-            grow_state(&sg, &mut n, &mut ranks, &mut aux, &mut active);
-            churn_s += t.elapsed().as_secs_f64() + cost.blocking_s;
-            net_s += cost.total_s;
-            let rf = if cfg.audit_rf {
-                match wbounds.as_ref() {
-                    Some(b) => {
-                        let view = WeightedCepView::from_bounds(b.clone());
-                        let assign = sg.weighted_assignment(&view);
-                        stream_quality::live_replication_factor(&sg, &assign)
-                    }
-                    None => {
-                        let assign = sg.assignment(k);
-                        stream_quality::live_replication_factor(&sg, &assign)
-                    }
-                }
-            } else {
-                f64::NAN
-            };
-            let rec = ChurnRecord {
-                at_iteration: it,
-                inserted: outcome.inserted,
-                deleted: outcome.deleted,
-                retired: plan.retired_edges(),
-                moved,
-                appended: plan.appended_edges(),
-                range_ops,
-                layout_ranges: engine.layout().total_ranges(),
-                tombstones_after: sg.tombstone_count(),
-                staging_fraction: sg.staging_fraction(),
-                compacted,
-                net_blocking_ms: cost.blocking_s * 1e3,
-                net_overlapped_ms: cost.overlapped_s * 1e3,
-                rf,
-            };
-            emit_churn_span(&ev_sp, &rec);
-            churn_log.push(rec);
-        }
-
-        // ---- SCALE event? O(k) range moves, same engine path as churn.
-        if let Some(ev) = scenario.event_at(it) {
-            let ev_sp = obs::span("event:scale");
-            let from_k = k;
-            let t_scale = Instant::now();
-            let plan = {
-                let psp = obs::span("phase:plan-derive");
-                let plan = match wbounds.as_mut() {
-                    // nudged boundaries → the uniform grid of the new k
-                    // (the same reset-on-rescale rule as the non-streaming
-                    // path)
-                    Some(b) => {
-                        let old = WeightedCepView::from_bounds(b.clone());
-                        let target = WeightedCepView::uniform(Cep::new(
-                            sg.physical_edges(),
-                            ev.target_k,
-                        ));
-                        let plan = ChurnPlan::derive_weighted(&old, &target, &[]);
-                        *b = target.bounds().to_vec();
-                        plan
-                    }
-                    None => sg.rescale_plan(k, ev.target_k),
-                };
-                psp.add("range_ops", plan.range_ops() as u64);
-                plan
-            };
-            let migrated = plan.moved_edges();
-            // last window consumer of the iteration — no need to mark it
-            let app = if window_free { app_snapshot(&engine, &cfg.net_model) } else { None };
-            let cost = netsim::price_plan(
-                &cfg.net,
-                &cfg.net_model,
-                &plan.moves,
-                from_k.max(ev.target_k),
-                cfg.value_bytes,
-                app.as_ref(),
-            );
-            let prov = provisioner.resize_to(ev.target_k, cluster.epoch + 1);
-            {
-                let assign = sg.assignment(ev.target_k);
-                engine.apply_churn(&sg, &plan, &assign, &mut backend_for)?;
-            }
-            k = ev.target_k;
-            let total = t_scale.elapsed().as_secs_f64() + cost.blocking_s + prov.as_secs_f64();
-            scale_s += total;
-            net_s += cost.total_s;
-            cluster.record_scale(k, migrated, std::time::Duration::from_secs_f64(total));
-            let rec = EventRecord {
-                from_k,
-                to_k: k,
-                migrated_edges: migrated,
-                range_moves: plan.moves.num_moves(),
-                layout_ranges: engine.layout().total_ranges(),
-                net_blocking_ms: cost.blocking_s * 1e3,
-                net_overlapped_ms: cost.overlapped_s * 1e3,
-            };
-            emit_event_span(&ev_sp, &rec);
-            event_log.push(rec);
-        }
-
-        // ---- APP: one PageRank iteration over the live graph
-        let t_app = Instant::now();
-        engine.comm.reset();
-        let base = (1.0 - pagerank::DAMPING) / n.max(1) as f32;
-        let (contrib, _) =
-            engine.superstep(StepKind::PageRank, Combine::Sum, &ranks, &aux, &active)?;
-        let ss_ns = t_app.elapsed().as_nanos() as u64;
-        superstep_hist.record(ss_ns);
-        obs::hist_record("superstep_wall_ns", ss_ns);
-        for v in 0..n {
-            ranks[v] = base + pagerank::DAMPING * contrib[v];
-        }
-        com_bytes += engine.comm.total_bytes();
-        app_s += t_app.elapsed().as_secs_f64();
-        window_free = true; // fresh superstep window metered in the lanes
-
-        // ---- REBALANCE: past the threshold, nudge the weighted chunk
-        // boundaries toward the superstep's metered cost profile
-        if let Some(b) = wbounds.as_mut() {
-            let costs =
-                engine.partition_costs(cfg.net_model.compute_ns_per_edge, cfg.net.bandwidth_bps);
-            let imb_before = imbalance(&costs);
-            if imb_before > cfg.rebalance.threshold {
-                let t_reb = Instant::now();
-                let new_bounds = balanced_boundaries(b, &costs);
-                let plan = MigrationPlan::between_boundaries(b, &new_bounds);
-                if plan.num_moves() > 0 {
-                    let rb_sp = obs::span("event:rebalance");
-                    let imb_after = imbalance(&predicted_costs(b, &costs, &new_bounds));
-                    let app = app_snapshot(&engine, &cfg.net_model);
-                    if app.is_some() {
-                        window_free = false;
-                    }
-                    let cost = netsim::price_plan(
-                        &cfg.net,
-                        &cfg.net_model,
-                        &plan,
-                        k,
-                        cfg.value_bytes,
-                        app.as_ref(),
-                    );
-                    let view = WeightedCepView::from_bounds(new_bounds.clone());
-                    {
-                        let assign = sg.weighted_assignment(&view);
-                        engine.apply_migration(&sg, &plan, &assign, &mut backend_for)?;
-                    }
-                    let rec = RebalanceRecord {
-                        at_iteration: it,
-                        k,
-                        imbalance_before: imb_before,
-                        imbalance_after: imb_after,
-                        moved_edges: plan.migrated_edges(),
-                        range_moves: plan.num_moves(),
-                        layout_ranges: engine.layout().total_ranges(),
-                        net_blocking_ms: cost.blocking_s * 1e3,
-                        net_overlapped_ms: cost.overlapped_s * 1e3,
-                    };
-                    emit_rebalance_span(&rb_sp, &rec);
-                    rebalance_log.push(rec);
-                    *b = new_bounds;
-                    rebalance_s += t_reb.elapsed().as_secs_f64() + cost.blocking_s;
-                    net_s += cost.total_s;
-                }
-            }
-        }
-    }
-
-    // metered imbalance of the last superstep — read before any flush
-    // rebuilds the engine and clears the comm lanes
-    let final_imbalance = imbalance(
-        &engine.partition_costs(cfg.net_model.compute_ns_per_edge, cfg.net.bandwidth_bps),
-    );
-
-    // ---- optional final fold: hand steady state a fully ordered graph
-    if cfg.flush_at_end && (sg.staging_len() > 0 || sg.tombstone_count() > 0) {
-        let t = Instant::now();
-        sg.compact();
-        let assign = sg.assignment(k);
-        engine = Engine::new(&sg, &assign, &mut backend_for)?.with_threads(cfg.threads);
-        if let Some(b) = wbounds.as_mut() {
-            *b = uniform_bounds(sg.physical_edges() as u64, k);
-        }
-        churn_s += t.elapsed().as_secs_f64();
-    }
-
-    let final_rf = match wbounds.as_ref() {
-        Some(b) => {
-            let view = WeightedCepView::from_bounds(b.clone());
-            let assign = sg.weighted_assignment(&view);
-            stream_quality::live_replication_factor(&sg, &assign)
-        }
-        None => {
-            let assign = sg.assignment(k);
-            stream_quality::live_replication_factor(&sg, &assign)
-        }
-    };
-    let fresh_rf = if cfg.measure_fresh_baseline {
-        let live = sg.as_graph();
-        let mut fresh_cfg = cfg.geo;
-        fresh_cfg.seed = cfg.geo.seed.wrapping_add(1);
-        let ordered = crate::ordering::geo::order(&live, &fresh_cfg).apply(&live);
-        Some(crate::partition::quality::replication_factor_chunked(
-            &ordered,
-            &Cep::new(ordered.num_edges(), k),
-        ))
-    } else {
-        None
-    };
-    let ss = superstep_hist.snapshot();
-    scn.add("supersteps", ss.count);
-    scn.add("events", event_log.len() as u64);
-    scn.add("churn_batches", churn_log.len() as u64);
-    scn.add("rebalances", rebalance_log.len() as u64);
-    scn.add("compactions", sg.compactions() as u64);
-    scn.add("final_k", k as u64);
-    Ok(StreamingBreakdown {
-        name: scenario.name.clone(),
-        all_s: init_s + app_s + scale_s + churn_s + rebalance_s,
-        init_s,
-        app_s,
-        scale_s,
-        churn_s,
-        net_s,
-        com_bytes,
-        final_k: k,
-        final_rf,
-        fresh_rf,
-        layout_ranges: engine.layout().total_ranges(),
-        layout_bytes: engine.layout().metadata_bytes(),
-        compactions: sg.compactions(),
-        live_edges: sg.live_edges(),
-        rebalance_s,
-        final_imbalance,
-        superstep_p50_ms: ss.quantile(0.50) as f64 / 1e6,
-        superstep_p99_ms: ss.quantile(0.99) as f64 / 1e6,
-        events: event_log,
-        churn_events: churn_log,
-        rebalances: rebalance_log,
-    })
-}
-
-/// Generate a seeded mutation batch: deletions sample live physical ids,
-/// insertions connect random vertices with a small chance of attaching a
-/// brand-new vertex (growing the id space).
-fn random_batch(rng: &mut Rng, sg: &StagedGraph, inserts: u32, deletes: u32) -> MutationBatch {
-    let mut b = MutationBatch::new();
-    let p = sg.physical_edges() as u64;
-    if p > 0 {
-        for _ in 0..deletes {
-            for _ in 0..4 {
-                let id = rng.below(p);
-                if sg.is_live(id) {
-                    b.delete(id);
-                    break;
-                }
-            }
-        }
-    }
-    let n = sg.num_vertices() as u64;
-    if n >= 2 {
-        for _ in 0..inserts {
-            let u = rng.below(n) as u32;
-            let v = if rng.chance(0.05) { n as u32 } else { rng.below(n) as u32 };
-            b.insert(u, v);
-        }
-    }
-    b
-}
-
-/// Grow the application state vectors after churn: new vertices start at
-/// the teleport share, and the PageRank `aux` (1/degree) refreshes for the
-/// whole (mutated) degree sequence.
-fn grow_state(
-    sg: &StagedGraph,
-    n: &mut usize,
-    ranks: &mut Vec<f32>,
-    aux: &mut Vec<f32>,
-    active: &mut Vec<bool>,
-) {
-    let new_n = sg.num_vertices();
-    if new_n > *n {
-        ranks.resize(new_n, 1.0 / new_n as f32);
-        active.resize(new_n, true);
-        *n = new_n;
-    }
-    aux.clear();
-    aux.extend((0..*n as u32).map(|v| {
-        let d = sg.degree(v);
-        if d == 0 {
-            0.0
-        } else {
-            1.0 / d as f32
-        }
-    }));
-}
-
-/// Mirror a scale event's audit record into its span. The record structs
-/// stay the single source of logical tallies — spans are views over
-/// them, never parallel bookkeeping. Millisecond fields are stored as
-/// integer nanoseconds ([`obs::span::secs_to_ns`]), deterministic
-/// because the priced costs are bit-identical at any thread width.
-fn emit_event_span(sp: &obs::SpanGuard, r: &EventRecord) {
-    sp.add("from_k", r.from_k as u64);
-    sp.add("to_k", r.to_k as u64);
-    sp.add("migrated_edges", r.migrated_edges);
-    sp.add("range_moves", r.range_moves as u64);
-    sp.add("layout_ranges", r.layout_ranges as u64);
-    sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
-    sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
-}
-
-/// Mirror a churn batch's audit record into its span (see
-/// [`emit_event_span`]). The `rf` audit field is skipped — it is NaN
-/// unless `audit_rf` is set and is a quality gauge, not a tally.
-fn emit_churn_span(sp: &obs::SpanGuard, r: &ChurnRecord) {
-    sp.add("inserted", r.inserted as u64);
-    sp.add("deleted", r.deleted as u64);
-    sp.add("retired", r.retired);
-    sp.add("moved", r.moved);
-    sp.add("appended", r.appended);
-    sp.add("range_ops", r.range_ops as u64);
-    sp.add("layout_ranges", r.layout_ranges as u64);
-    sp.add("tombstones_after", r.tombstones_after as u64);
-    sp.add("compacted", r.compacted as u64);
-    sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
-    sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
-}
-
-/// Mirror a boundary nudge's audit record into its span (see
-/// [`emit_event_span`]). The imbalance ratios stay record-only — they
-/// are float gauges, not logical tallies.
-fn emit_rebalance_span(sp: &obs::SpanGuard, r: &RebalanceRecord) {
-    sp.add("k", r.k as u64);
-    sp.add("moved_edges", r.moved_edges);
-    sp.add("range_moves", r.range_moves as u64);
-    sp.add("layout_ranges", r.layout_ranges as u64);
-    sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
-    sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
-}
-
-/// Snapshot the engine's metered superstep traffic for overlap pricing —
-/// `None` unless the configured model wants it (emulated + overlap), so
-/// the closed-form path never touches the lanes.
-fn app_snapshot(engine: &Engine, mc: &NetModelConfig) -> Option<netsim::AppTraffic> {
-    if mc.wants_app_traffic() {
-        Some(engine.app_traffic(mc.compute_ns_per_edge))
-    } else {
-        None
-    }
-}
-
-fn stateless_partition(g: &Graph, method: &str, k: usize) -> EdgePartition {
-    let part = match method {
-        "1d" => hash1d::partition(g, k),
-        "oblivious" => oblivious::partition(g, k),
-        "ginger" => ginger::partition(g, k),
-        _ => unreachable!("stateless method {method}"),
-    };
-    debug_assert_eq!(part.k, k);
-    debug_assert_eq!(part.assign.len(), g.num_edges());
-    part
+    let run_cfg = RunConfig::from(cfg);
+    Ok(Controller::drive(g, scenario, &run_cfg, backend_for)?.into())
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
+
     use super::*;
     use crate::graph::generators::{rmat, RmatParams};
     use crate::ordering::geo::{self, GeoConfig};

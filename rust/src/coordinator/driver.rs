@@ -1,0 +1,1187 @@
+//! The unified run driver: one [`Controller::drive`] entry point for
+//! both controller substrates, with the scaling-policy hook wired in
+//! exactly once.
+//!
+//! The legacy `run_scenario` / `run_streaming` split meant every new
+//! feature (network pricing, skew rebalancing, observability) was wired
+//! into both paths by hand. `drive` dispatches on [`DriveMode`] (by
+//! default: streaming iff the scenario carries churn) into a single
+//! loop — CHURN → scripted SCALE → APP superstep → SENSE → POLICY —
+//! over a [`Substrate`] enum that owns either the immutable batch graph
+//! plus method state, or the staged streaming graph plus its weighted
+//! chunk boundaries.
+//!
+//! After every superstep the driver meters the *modeled* step latency
+//! (max per-partition cost from [`Engine::partition_costs`]: modeled
+//! compute + metered comm bytes over the configured bandwidth — logical
+//! quantities, never wall clock) and, when a
+//! [`ScalingPolicy`](super::policy::ScalingPolicy) is configured, hands
+//! it a [`SensorSnapshot`] plus a [`PlanPricer`] that derives and prices
+//! candidate boundary plans through the configured network model
+//! without executing them. Committed actions run through the same
+//! execution helpers the scripted events use, so every rescale and
+//! nudge — scripted or policy-driven — is priced, audited and
+//! span-emitted identically. Decisions are bit-identical at any
+//! `PALLAS_THREADS` width.
+
+use super::config::{DriveMode, RunConfig};
+use super::controller::{
+    ChurnRecord, EventRecord, RebalanceRecord, RunBreakdown, StreamingBreakdown,
+};
+use super::policy::{
+    CandidatePricer, DecisionRecord, PricedAction, ScalingAction, SensorSnapshot,
+};
+use super::provisioner::{LatencyModel, Provisioner};
+use super::state::ClusterState;
+use crate::engine::{apps::pagerank, Combine, Engine};
+use crate::graph::Graph;
+use crate::obs;
+use crate::partition::bvc::BvcState;
+use crate::partition::cep::Cep;
+use crate::partition::weighted::{balanced_boundaries, imbalance, predicted_costs, uniform_bounds};
+use crate::partition::{
+    ginger, hash1d, oblivious, CepView, EdgePartition, PartitionAssignment, WeightedCepView,
+};
+use crate::runtime::{ComputeBackend, StepKind};
+use crate::scaling::migration::MigrationPlan;
+use crate::scaling::netsim::{self, NetModelConfig, NetSim};
+use crate::scaling::network::Network;
+use crate::scaling::scenario::Scenario;
+use crate::stream::{quality as stream_quality, ChurnPlan, MutationBatch, StagedGraph};
+use crate::util::rng::Rng;
+use crate::Result;
+use anyhow::bail;
+use std::time::{Duration, Instant};
+
+/// The unified controller: [`Controller::drive`] replaces the
+/// `run_scenario` / `run_streaming` pair (both survive as thin
+/// deprecated shims over it).
+pub struct Controller;
+
+/// Full audit of one driven run: the union of the legacy
+/// [`RunBreakdown`] and [`StreamingBreakdown`] columns plus the policy
+/// decision stream and SLO accounting. Convert with `Into` when a
+/// legacy breakdown shape is needed.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// scenario name
+    pub name: String,
+    /// partitioning/scaling method
+    pub method: String,
+    /// total = init + app + scale + churn + rebalance
+    pub all_s: f64,
+    /// initialization: initial partitioning/ordering + engine build
+    pub init_s: f64,
+    /// application compute
+    pub app_s: f64,
+    /// repartition + migration + provisioning
+    pub scale_s: f64,
+    /// churn ingest + delta-plan application + compactions (0 on the
+    /// batch substrate)
+    pub churn_s: f64,
+    /// skew-aware rebalancing: solver + migration wall plus blocking
+    /// network seconds across all boundary nudges
+    pub rebalance_s: f64,
+    /// total network seconds priced across all migrations (blocking +
+    /// overlapped; only the blocking share is inside `scale_s`)
+    pub net_s: f64,
+    /// total migrated edges over all rescales
+    pub migrated_edges: u64,
+    /// communication bytes of the app phases
+    pub com_bytes: u64,
+    /// final partition count
+    pub final_k: usize,
+    /// ownership intervals resident in the final layout
+    pub layout_ranges: usize,
+    /// resident bytes of the final layout's ownership metadata
+    pub layout_bytes: usize,
+    /// metered max/mean cost imbalance after the final superstep
+    pub final_imbalance: f64,
+    /// histogram-backed p50 superstep wall latency, milliseconds
+    pub superstep_p50_ms: f64,
+    /// histogram-backed p99 superstep wall latency, milliseconds
+    pub superstep_p99_ms: f64,
+    /// histogram-backed p50 *modeled* step latency, milliseconds — the
+    /// deterministic sensor stream policies and SLO audits run on
+    pub modeled_p50_ms: f64,
+    /// histogram-backed p99 *modeled* step latency, milliseconds
+    pub modeled_p99_ms: f64,
+    /// modeled step latency of every iteration, milliseconds, in order —
+    /// the per-step SLO audit trail (deterministic at any thread width)
+    pub modeled_steps_ms: Vec<f64>,
+    /// SLO reference the violations were counted against, if any
+    pub slo_ref_ms: Option<f64>,
+    /// iterations whose modeled step latency exceeded `slo_ref_ms`
+    pub slo_violations: u64,
+    /// live replication factor at the end of the run (streaming only)
+    pub final_rf: Option<f64>,
+    /// RF of a fresh GEO+CEP repartition of the final mutated graph
+    /// (streaming, only when `measure_fresh_baseline` is set)
+    pub fresh_rf: Option<f64>,
+    /// compactions performed, including a final flush (streaming)
+    pub compactions: u32,
+    /// live edges at the end of the run (streaming; 0 on batch)
+    pub live_edges: usize,
+    /// per-rescale audit log (scripted and policy-driven)
+    pub events: Vec<EventRecord>,
+    /// per-batch churn audit log
+    pub churn_events: Vec<ChurnRecord>,
+    /// per-nudge audit log
+    pub rebalances: Vec<RebalanceRecord>,
+    /// per-iteration policy decision audit (empty when the policy is
+    /// off)
+    pub decisions: Vec<DecisionRecord>,
+}
+
+impl From<RunReport> for RunBreakdown {
+    fn from(r: RunReport) -> RunBreakdown {
+        RunBreakdown {
+            method: r.method,
+            all_s: r.all_s,
+            init_s: r.init_s,
+            app_s: r.app_s,
+            scale_s: r.scale_s,
+            net_s: r.net_s,
+            migrated_edges: r.migrated_edges,
+            com_bytes: r.com_bytes,
+            final_k: r.final_k,
+            layout_ranges: r.layout_ranges,
+            layout_bytes: r.layout_bytes,
+            rebalance_s: r.rebalance_s,
+            final_imbalance: r.final_imbalance,
+            superstep_p50_ms: r.superstep_p50_ms,
+            superstep_p99_ms: r.superstep_p99_ms,
+            events: r.events,
+            rebalances: r.rebalances,
+        }
+    }
+}
+
+impl From<RunReport> for StreamingBreakdown {
+    fn from(r: RunReport) -> StreamingBreakdown {
+        StreamingBreakdown {
+            name: r.name,
+            all_s: r.all_s,
+            init_s: r.init_s,
+            app_s: r.app_s,
+            scale_s: r.scale_s,
+            churn_s: r.churn_s,
+            net_s: r.net_s,
+            com_bytes: r.com_bytes,
+            final_k: r.final_k,
+            final_rf: r.final_rf.unwrap_or(f64::NAN),
+            fresh_rf: r.fresh_rf,
+            layout_ranges: r.layout_ranges,
+            layout_bytes: r.layout_bytes,
+            compactions: r.compactions,
+            live_edges: r.live_edges,
+            rebalance_s: r.rebalance_s,
+            final_imbalance: r.final_imbalance,
+            superstep_p50_ms: r.superstep_p50_ms,
+            superstep_p99_ms: r.superstep_p99_ms,
+            events: r.events,
+            churn_events: r.churn_events,
+            rebalances: r.rebalances,
+        }
+    }
+}
+
+pub(crate) enum MethodState {
+    Cep(Cep),
+    Bvc(Box<BvcState>),
+    Stateless, // 1d / oblivious / ginger recompute from scratch
+}
+
+/// The assignment the engine currently runs on: chunk metadata for CEP
+/// (O(1), zero materialization), weighted boundaries once a nudge has
+/// moved a CEP run off the uniform grid, or an explicit vector for
+/// everything else.
+pub(crate) enum ActiveAssignment {
+    Chunked(CepView),
+    Weighted(WeightedCepView),
+    Materialized(EdgePartition),
+}
+
+impl ActiveAssignment {
+    fn as_assignment(&self) -> &dyn PartitionAssignment {
+        match self {
+            ActiveAssignment::Chunked(v) => v,
+            ActiveAssignment::Weighted(v) => v,
+            ActiveAssignment::Materialized(p) => p,
+        }
+    }
+
+    /// Boundary array of a chunk-contiguous assignment — `None` for
+    /// materialized per-edge methods, which boundary plans cannot touch.
+    fn chunk_bounds(&self) -> Option<Vec<u64>> {
+        match self {
+            ActiveAssignment::Chunked(v) => Some(v.cep().boundaries()),
+            ActiveAssignment::Weighted(v) => Some(v.bounds().to_vec()),
+            ActiveAssignment::Materialized(_) => None,
+        }
+    }
+}
+
+/// What the driver runs over: the immutable batch graph with its method
+/// state, or the staged streaming graph (CEP-native) with its optional
+/// weighted chunk boundaries.
+enum Substrate {
+    Batch {
+        g: Graph,
+        method: MethodState,
+        assignment: ActiveAssignment,
+    },
+    Stream {
+        sg: StagedGraph,
+        /// weighted chunk boundaries over the staged physical id space —
+        /// carried only when the policy may nudge; `None` keeps the
+        /// uniform-CEP streaming path bit-identical to the policy-off
+        /// build
+        wbounds: Option<Vec<u64>>,
+    },
+}
+
+impl Controller {
+    /// Run PageRank under `scenario` with the unified configuration.
+    /// Dispatches on [`RunConfig::mode`]: by default the streaming
+    /// substrate runs iff the scenario carries churn events (the batch
+    /// substrate ignores them, preserving the legacy `run_scenario`
+    /// contract under [`DriveMode::Batch`]). `backend_for` supplies a
+    /// compute backend per partition at every epoch.
+    pub fn drive<F>(
+        g: Graph,
+        scenario: &Scenario,
+        cfg: &RunConfig,
+        mut backend_for: F,
+    ) -> Result<RunReport>
+    where
+        F: FnMut(usize) -> Box<dyn ComputeBackend>,
+    {
+        let streaming = match cfg.mode {
+            DriveMode::Auto => !scenario.churn.is_empty(),
+            DriveMode::Batch => false,
+            DriveMode::Streaming => true,
+        };
+        if streaming && cfg.method != "cep" {
+            bail!("streaming substrate is CEP-native; method {} unsupported", cfg.method);
+        }
+        let mut k = scenario.initial_k;
+        let mut cluster = ClusterState::new(k);
+        let mut rng = Rng::new(cfg.seed);
+        let scn = obs::span("scenario");
+        scn.add("iterations", scenario.total_iterations as u64);
+        scn.add("initial_k", k as u64);
+        // superstep wall-latency distribution for the p50/p99 columns,
+        // plus the *modeled* latency distribution the policy senses —
+        // both work with or without an active obs session
+        let superstep_hist = obs::Histogram::new();
+        let modeled_hist = obs::Histogram::new();
+
+        // ---- INIT: partition/order the graph, boot engine + fleet
+        let t_init = Instant::now();
+        let mut provisioner = Provisioner::boot(k, cfg.latency);
+        let (mut substrate, mut engine) = if streaming {
+            let sg = StagedGraph::new(g, cfg.geo).with_policy(cfg.compaction);
+            let engine = {
+                let assign = sg.assignment(k);
+                Engine::new(&sg, &assign, &mut backend_for)?.with_threads(cfg.threads)
+            };
+            let wbounds = if cfg.policy.may_nudge() {
+                Some(uniform_bounds(sg.physical_edges() as u64, k))
+            } else {
+                None
+            };
+            (Substrate::Stream { sg, wbounds }, engine)
+        } else {
+            let m = g.num_edges();
+            let method = match cfg.method.as_str() {
+                "cep" => MethodState::Cep(Cep::new(m, k)),
+                "bvc" => MethodState::Bvc(Box::new(BvcState::build(m, k, cfg.seed))),
+                "1d" | "oblivious" | "ginger" => MethodState::Stateless,
+                other => bail!("unknown scaling method {other}"),
+            };
+            let assignment = initial_assignment(&g, &method, &cfg.method, k);
+            let engine = Engine::new(&g, assignment.as_assignment(), &mut backend_for)?
+                .with_threads(cfg.threads);
+            (Substrate::Batch { g, method, assignment }, engine)
+        };
+        let mut init_s = t_init.elapsed().as_secs_f64() + provisioner.accounted().as_secs_f64();
+
+        // ---- application state (PageRank), survives churn and rescales
+        let mut n = match &substrate {
+            Substrate::Batch { g, .. } => g.num_vertices(),
+            Substrate::Stream { sg, .. } => sg.num_vertices(),
+        };
+        let mut ranks = vec![1.0f32 / n.max(1) as f32; n];
+        let mut aux: Vec<f32> = match &substrate {
+            Substrate::Batch { g, .. } => (0..n as u32)
+                .map(|v| {
+                    let d = g.degree(v);
+                    if d == 0 {
+                        0.0
+                    } else {
+                        1.0 / d as f32
+                    }
+                })
+                .collect(),
+            Substrate::Stream { sg, .. } => (0..n as u32)
+                .map(|v| {
+                    let d = sg.degree(v);
+                    if d == 0 {
+                        0.0
+                    } else {
+                        1.0 / d as f32
+                    }
+                })
+                .collect(),
+        };
+        let mut active = vec![true; n];
+
+        let mut app_s = 0.0f64;
+        let mut scale_s = 0.0f64;
+        let mut churn_s = 0.0f64;
+        let mut net_s = 0.0f64;
+        let mut rebalance_s = 0.0f64;
+        let mut com_bytes = 0u64;
+        let mut event_log: Vec<EventRecord> = Vec::new();
+        let mut churn_log: Vec<ChurnRecord> = Vec::new();
+        let mut rebalance_log: Vec<RebalanceRecord> = Vec::new();
+        let mut decisions: Vec<DecisionRecord> = Vec::new();
+        let mut modeled_steps_ms: Vec<f64> = Vec::new();
+        let mut slo_violations = 0u64;
+        let mut policy = cfg.policy.build();
+        let slo_ref = cfg.slo_reference_ms();
+        // one superstep window per priced transfer: when several events
+        // fire around the same APP phase (churn, rescale, rebalance),
+        // only the first may hide its flows behind the window — the rest
+        // price standalone, else the window's NIC capacity would be
+        // spent twice and blocking time understated
+        let mut window_free = true;
+
+        for it in 0..scenario.total_iterations {
+            // ---- CHURN batch? Ingest, derive the delta plan, apply or
+            // fold (streaming substrate only).
+            if let Substrate::Stream { sg, wbounds } = &mut substrate {
+                if let Some(ce) = scenario.churn_at(it) {
+                    let ev_sp = obs::span("event:churn");
+                    let t = Instant::now();
+                    let batch = random_batch(&mut rng, sg, ce.inserts, ce.deletes);
+                    let (outcome, plan) = match wbounds.as_mut() {
+                        Some(b) => sg.apply_batch_weighted(&batch, b),
+                        None => sg.apply_batch(&batch, k),
+                    };
+                    let compacted = sg.needs_compaction();
+                    let (cost, moved, range_ops) = if compacted {
+                        // the delta plan is discarded: the budget
+                        // tripped, the whole live graph folds through
+                        // GEO and every worker reloads its (new) chunk —
+                        // price the full redistribution as a ring of
+                        // per-worker chunk loads; a full rebuild is a
+                        // sync point, so it never overlaps the app. Any
+                        // nudged boundaries reset to the uniform grid of
+                        // the new id space
+                        sg.compact();
+                        let assign = sg.assignment(k);
+                        engine = Engine::new(&*sg, &assign, &mut backend_for)?
+                            .with_threads(cfg.threads);
+                        if let Some(b) = wbounds.as_mut() {
+                            *b = uniform_bounds(sg.physical_edges() as u64, k);
+                        }
+                        let live = sg.live_edges() as u64;
+                        let flows =
+                            NetSim::redistribution_flows(k, live * (8 + cfg.value_bytes));
+                        (netsim::price_flows(&cfg.net, &cfg.net_model, &flows, k), live, k)
+                    } else {
+                        // only rebalancing moves are inter-worker
+                        // traffic; appends arrive from the stream and
+                        // retires are metadata. In emulated overlap mode
+                        // the moves share NICs with the last superstep's
+                        // metered traffic
+                        let app = if window_free {
+                            app_snapshot(&engine, &cfg.net_model)
+                        } else {
+                            None
+                        };
+                        if app.is_some() {
+                            window_free = false;
+                        }
+                        let cost = netsim::price_plan(
+                            &cfg.net,
+                            &cfg.net_model,
+                            &plan.moves,
+                            k,
+                            cfg.value_bytes,
+                            app.as_ref(),
+                        );
+                        match wbounds.as_ref() {
+                            Some(b) => {
+                                let view = WeightedCepView::from_bounds(b.clone());
+                                let assign = sg.weighted_assignment(&view);
+                                engine.apply_churn(&*sg, &plan, &assign, &mut backend_for)?;
+                            }
+                            None => {
+                                let assign = sg.assignment(k);
+                                engine.apply_churn(&*sg, &plan, &assign, &mut backend_for)?;
+                            }
+                        }
+                        (cost, plan.moved_edges(), plan.range_ops())
+                    };
+                    grow_state(sg, &mut n, &mut ranks, &mut aux, &mut active);
+                    churn_s += t.elapsed().as_secs_f64() + cost.blocking_s;
+                    net_s += cost.total_s;
+                    let rf = if cfg.audit_rf {
+                        match wbounds.as_ref() {
+                            Some(b) => {
+                                let view = WeightedCepView::from_bounds(b.clone());
+                                let assign = sg.weighted_assignment(&view);
+                                stream_quality::live_replication_factor(sg, &assign)
+                            }
+                            None => {
+                                let assign = sg.assignment(k);
+                                stream_quality::live_replication_factor(sg, &assign)
+                            }
+                        }
+                    } else {
+                        f64::NAN
+                    };
+                    let rec = ChurnRecord {
+                        at_iteration: it,
+                        inserted: outcome.inserted,
+                        deleted: outcome.deleted,
+                        retired: plan.retired_edges(),
+                        moved,
+                        appended: plan.appended_edges(),
+                        range_ops,
+                        layout_ranges: engine.layout().total_ranges(),
+                        tombstones_after: sg.tombstone_count(),
+                        staging_fraction: sg.staging_fraction(),
+                        compacted,
+                        net_blocking_ms: cost.blocking_s * 1e3,
+                        net_overlapped_ms: cost.overlapped_s * 1e3,
+                        rf,
+                    };
+                    emit_churn_span(&ev_sp, &rec);
+                    churn_log.push(rec);
+                }
+            }
+
+            // ---- scripted SCALE event? Same execution path as
+            // policy-driven rescales.
+            if let Some(ev) = scenario.event_at(it) {
+                exec_scale(
+                    cfg,
+                    &mut substrate,
+                    &mut engine,
+                    &mut backend_for,
+                    &mut provisioner,
+                    &mut cluster,
+                    &mut k,
+                    ev.target_k,
+                    &mut window_free,
+                    false,
+                    &mut scale_s,
+                    &mut net_s,
+                    &mut event_log,
+                )?;
+            }
+
+            // ---- APP: one PageRank iteration
+            let t_app = Instant::now();
+            engine.comm.reset();
+            let base = (1.0 - pagerank::DAMPING) / n.max(1) as f32;
+            let (contrib, _) =
+                engine.superstep(StepKind::PageRank, Combine::Sum, &ranks, &aux, &active)?;
+            let ss_ns = t_app.elapsed().as_nanos() as u64;
+            superstep_hist.record(ss_ns);
+            obs::hist_record("superstep_wall_ns", ss_ns);
+            for v in 0..n {
+                ranks[v] = base + pagerank::DAMPING * contrib[v];
+            }
+            com_bytes += engine.comm.total_bytes();
+            app_s += t_app.elapsed().as_secs_f64();
+            window_free = true; // fresh superstep window metered in the lanes
+
+            // ---- SENSE: meter the modeled step latency (logical, not
+            // wall clock) and audit it against the SLO reference.
+            let costs = engine
+                .partition_costs(cfg.net_model.compute_ns_per_edge, cfg.net.bandwidth_bps);
+            let step_s = costs.iter().cloned().fold(0.0f64, f64::max);
+            let step_ms = step_s * 1e3;
+            let modeled_ns = obs::secs_to_ns(step_s);
+            modeled_hist.record(modeled_ns);
+            obs::hist_record("superstep_modeled_ns", modeled_ns);
+            modeled_steps_ms.push(step_ms);
+            if let Some(slo) = slo_ref {
+                if step_ms > slo {
+                    slo_violations += 1;
+                }
+            }
+            // the previous decision predicted this superstep — patch its
+            // realized latency in for the predicted-vs-realized audit
+            if let Some(d) = decisions.last_mut() {
+                if d.realized_step_ms.is_nan() {
+                    d.realized_step_ms = step_ms;
+                }
+            }
+
+            // ---- POLICY: one decision per superstep, priced before
+            // commit, executed through the scripted-event helpers.
+            if let Some(pol) = policy.as_deref_mut() {
+                let bounds = current_bounds(&substrate, k);
+                let ms = modeled_hist.snapshot();
+                let snap = SensorSnapshot {
+                    iteration: it,
+                    k,
+                    step_ms,
+                    p50_ms: ms.quantile(0.50) as f64 / 1e6,
+                    p99_ms: ms.quantile(0.99) as f64 / 1e6,
+                    costs: costs.clone(),
+                    imbalance: imbalance(&costs),
+                    comm_bytes: engine.comm.total_bytes(),
+                    backlog: match &substrate {
+                        Substrate::Stream { sg, .. } => sg.staging_fraction(),
+                        Substrate::Batch { .. } => 0.0,
+                    },
+                    price: scenario.price_at(it),
+                    has_bounds: bounds.is_some(),
+                };
+                let mut d = {
+                    let mut pricer = PlanPricer {
+                        net: cfg.net,
+                        net_model: cfg.net_model,
+                        value_bytes: cfg.value_bytes,
+                        latency: cfg.latency,
+                        k,
+                        bounds,
+                        costs: costs.clone(),
+                        app: app_snapshot(&engine, &cfg.net_model),
+                    };
+                    pol.decide(&snap, &mut pricer)
+                };
+                match d.action {
+                    ScalingAction::NoOp => {}
+                    ScalingAction::ScaleTo(k2) => {
+                        d.realized_cost_ms = exec_scale(
+                            cfg,
+                            &mut substrate,
+                            &mut engine,
+                            &mut backend_for,
+                            &mut provisioner,
+                            &mut cluster,
+                            &mut k,
+                            k2,
+                            &mut window_free,
+                            true,
+                            &mut scale_s,
+                            &mut net_s,
+                            &mut event_log,
+                        )?;
+                    }
+                    ScalingAction::Nudge => {
+                        d.realized_cost_ms = exec_nudge(
+                            cfg,
+                            &mut substrate,
+                            &mut engine,
+                            &mut backend_for,
+                            k,
+                            it,
+                            &costs,
+                            &mut window_free,
+                            &mut rebalance_s,
+                            &mut net_s,
+                            &mut rebalance_log,
+                        )?
+                        .unwrap_or(0.0);
+                    }
+                }
+                emit_decision_span(&d);
+                decisions.push(d);
+            }
+        }
+
+        // metered imbalance of the last superstep — read before any
+        // flush rebuilds the engine and clears the comm lanes
+        let final_imbalance = imbalance(
+            &engine.partition_costs(cfg.net_model.compute_ns_per_edge, cfg.net.bandwidth_bps),
+        );
+        if init_s == 0.0 {
+            init_s = f64::MIN_POSITIVE;
+        }
+
+        // ---- streaming tail: optional final fold + quality audits
+        let (final_rf, fresh_rf, compactions, live_edges) = match &mut substrate {
+            Substrate::Stream { sg, wbounds } => {
+                if cfg.flush_at_end && (sg.staging_len() > 0 || sg.tombstone_count() > 0) {
+                    let t = Instant::now();
+                    sg.compact();
+                    let assign = sg.assignment(k);
+                    engine =
+                        Engine::new(&*sg, &assign, &mut backend_for)?.with_threads(cfg.threads);
+                    if let Some(b) = wbounds.as_mut() {
+                        *b = uniform_bounds(sg.physical_edges() as u64, k);
+                    }
+                    churn_s += t.elapsed().as_secs_f64();
+                }
+                let final_rf = match wbounds.as_ref() {
+                    Some(b) => {
+                        let view = WeightedCepView::from_bounds(b.clone());
+                        let assign = sg.weighted_assignment(&view);
+                        stream_quality::live_replication_factor(sg, &assign)
+                    }
+                    None => {
+                        let assign = sg.assignment(k);
+                        stream_quality::live_replication_factor(sg, &assign)
+                    }
+                };
+                let fresh_rf = if cfg.measure_fresh_baseline {
+                    let live = sg.as_graph();
+                    let mut fresh_cfg = cfg.geo;
+                    fresh_cfg.seed = cfg.geo.seed.wrapping_add(1);
+                    let ordered = crate::ordering::geo::order(&live, &fresh_cfg).apply(&live);
+                    Some(crate::partition::quality::replication_factor_chunked(
+                        &ordered,
+                        &Cep::new(ordered.num_edges(), k),
+                    ))
+                } else {
+                    None
+                };
+                (Some(final_rf), fresh_rf, sg.compactions(), sg.live_edges())
+            }
+            Substrate::Batch { .. } => (None, None, 0, 0),
+        };
+
+        let ss = superstep_hist.snapshot();
+        let mss = modeled_hist.snapshot();
+        scn.add("supersteps", ss.count);
+        scn.add("events", event_log.len() as u64);
+        if streaming {
+            scn.add("churn_batches", churn_log.len() as u64);
+        }
+        scn.add("rebalances", rebalance_log.len() as u64);
+        if streaming {
+            scn.add("compactions", compactions as u64);
+        }
+        scn.add("final_k", k as u64);
+        if policy.is_some() {
+            scn.add("decisions", decisions.len() as u64);
+        }
+        Ok(RunReport {
+            name: scenario.name.clone(),
+            method: cfg.method.clone(),
+            all_s: init_s + app_s + scale_s + churn_s + rebalance_s,
+            init_s,
+            app_s,
+            scale_s,
+            churn_s,
+            rebalance_s,
+            net_s,
+            migrated_edges: cluster.total_migrated(),
+            com_bytes,
+            final_k: k,
+            layout_ranges: engine.layout().total_ranges(),
+            layout_bytes: engine.layout().metadata_bytes(),
+            final_imbalance,
+            superstep_p50_ms: ss.quantile(0.50) as f64 / 1e6,
+            superstep_p99_ms: ss.quantile(0.99) as f64 / 1e6,
+            modeled_p50_ms: mss.quantile(0.50) as f64 / 1e6,
+            modeled_p99_ms: mss.quantile(0.99) as f64 / 1e6,
+            modeled_steps_ms,
+            slo_ref_ms: slo_ref,
+            slo_violations,
+            final_rf,
+            fresh_rf,
+            compactions,
+            live_edges,
+            events: event_log,
+            churn_events: churn_log,
+            rebalances: rebalance_log,
+            decisions,
+        })
+    }
+}
+
+/// Execute one rescale to `target_k` on either substrate: derive the
+/// plan, price it under the configured model, provision, splice through
+/// the engine, and audit. Scripted events pass `consume_window = false`
+/// (the legacy accounting rule); policy-driven rescales consume the
+/// superstep window they overlap with. Returns the realized cost in
+/// milliseconds (blocking network + provisioning).
+#[allow(clippy::too_many_arguments)]
+fn exec_scale<F>(
+    cfg: &RunConfig,
+    substrate: &mut Substrate,
+    engine: &mut Engine,
+    backend_for: &mut F,
+    provisioner: &mut Provisioner,
+    cluster: &mut ClusterState,
+    k: &mut usize,
+    target_k: usize,
+    window_free: &mut bool,
+    consume_window: bool,
+    scale_s: &mut f64,
+    net_s: &mut f64,
+    event_log: &mut Vec<EventRecord>,
+) -> Result<f64>
+where
+    F: FnMut(usize) -> Box<dyn ComputeBackend>,
+{
+    let ev_sp = obs::span("event:scale");
+    let from_k = *k;
+    let t_scale = Instant::now();
+    let (migrated, range_moves, cost, prov) = match substrate {
+        Substrate::Batch { g, method, assignment } => {
+            let (plan, new_assignment) = {
+                let psp = obs::span("phase:plan-derive");
+                let r = plan_rescale(g, method, assignment, &cfg.method, target_k);
+                psp.add("range_moves", r.0.num_moves() as u64);
+                r
+            };
+            let migrated = plan.migrated_edges();
+            // network time for moving edge data + values, under the
+            // configured model; in emulated overlap mode the migration
+            // flows share NICs with the *last* superstep's metered
+            // scatter/gather traffic (still in the comm lanes — the
+            // meter resets at the top of every APP phase)
+            let app = if *window_free { app_snapshot(engine, &cfg.net_model) } else { None };
+            if consume_window && app.is_some() {
+                *window_free = false;
+            }
+            let mut cost = netsim::price_plan(
+                &cfg.net,
+                &cfg.net_model,
+                &plan,
+                from_k.max(target_k),
+                cfg.value_bytes,
+                app.as_ref(),
+            );
+            if let MethodState::Bvc(_) = method {
+                // BVC pays extra refinement barriers; approximated by the
+                // rounds recorded by the state — barriers are sync
+                // points, so they cannot overlap compute under either
+                // model
+                cost.add_blocking(3.0 * cfg.net.barrier_latency_s);
+            }
+            let prov = provisioner.resize_to(target_k, cluster.epoch + 1);
+            // execute the plan: range-based transfer, touched workers only
+            engine.apply_migration(&*g, &plan, new_assignment.as_assignment(), &mut *backend_for)?;
+            *assignment = new_assignment;
+            (migrated, plan.num_moves(), cost, prov)
+        }
+        Substrate::Stream { sg, wbounds } => {
+            let plan = {
+                let psp = obs::span("phase:plan-derive");
+                let plan = match wbounds.as_mut() {
+                    // nudged boundaries → the uniform grid of the new k
+                    // (the same reset-on-rescale rule as the batch path)
+                    Some(b) => {
+                        let old = WeightedCepView::from_bounds(b.clone());
+                        let target = WeightedCepView::uniform(Cep::new(
+                            sg.physical_edges(),
+                            target_k,
+                        ));
+                        let plan = ChurnPlan::derive_weighted(&old, &target, &[]);
+                        *b = target.bounds().to_vec();
+                        plan
+                    }
+                    None => sg.rescale_plan(*k, target_k),
+                };
+                psp.add("range_ops", plan.range_ops() as u64);
+                plan
+            };
+            let migrated = plan.moved_edges();
+            let app = if *window_free { app_snapshot(engine, &cfg.net_model) } else { None };
+            if consume_window && app.is_some() {
+                *window_free = false;
+            }
+            let cost = netsim::price_plan(
+                &cfg.net,
+                &cfg.net_model,
+                &plan.moves,
+                from_k.max(target_k),
+                cfg.value_bytes,
+                app.as_ref(),
+            );
+            let prov = provisioner.resize_to(target_k, cluster.epoch + 1);
+            {
+                let assign = sg.assignment(target_k);
+                engine.apply_churn(&*sg, &plan, &assign, &mut *backend_for)?;
+            }
+            (migrated, plan.moves.num_moves(), cost, prov)
+        }
+    };
+    *k = target_k;
+    // only the blocking share stalls the app; overlapped seconds ride
+    // inside the APP window
+    let total = t_scale.elapsed().as_secs_f64() + cost.blocking_s + prov.as_secs_f64();
+    *scale_s += total;
+    *net_s += cost.total_s;
+    cluster.record_scale(target_k, migrated, Duration::from_secs_f64(total));
+    let rec = EventRecord {
+        from_k,
+        to_k: target_k,
+        migrated_edges: migrated,
+        range_moves,
+        layout_ranges: engine.layout().total_ranges(),
+        net_blocking_ms: cost.blocking_s * 1e3,
+        net_overlapped_ms: cost.overlapped_s * 1e3,
+    };
+    emit_event_span(&ev_sp, &rec);
+    event_log.push(rec);
+    Ok(cost.blocking_s * 1e3 + prov.as_secs_f64() * 1e3)
+}
+
+/// Execute one boundary nudge against the metered cost profile `costs`:
+/// re-solve the boundaries, splice the ≤ 2(k−1)-move plan, audit. The
+/// exact code path the legacy threshold rebalance block used. Returns
+/// the blocking network milliseconds, or `None` when the substrate has
+/// no chunk boundaries or the solver moved nothing.
+#[allow(clippy::too_many_arguments)]
+fn exec_nudge<F>(
+    cfg: &RunConfig,
+    substrate: &mut Substrate,
+    engine: &mut Engine,
+    backend_for: &mut F,
+    k: usize,
+    it: u32,
+    costs: &[f64],
+    window_free: &mut bool,
+    rebalance_s: &mut f64,
+    net_s: &mut f64,
+    rebalance_log: &mut Vec<RebalanceRecord>,
+) -> Result<Option<f64>>
+where
+    F: FnMut(usize) -> Box<dyn ComputeBackend>,
+{
+    let old_bounds = match &*substrate {
+        Substrate::Batch { assignment, .. } => assignment.chunk_bounds(),
+        Substrate::Stream { wbounds, .. } => wbounds.clone(),
+    };
+    let Some(old_bounds) = old_bounds else {
+        return Ok(None);
+    };
+    let t_reb = Instant::now();
+    let new_bounds = balanced_boundaries(&old_bounds, costs);
+    let plan = MigrationPlan::between_boundaries(&old_bounds, &new_bounds);
+    if plan.num_moves() == 0 {
+        return Ok(None);
+    }
+    let rb_sp = obs::span("event:rebalance");
+    let imb_before = imbalance(costs);
+    let imb_after = imbalance(&predicted_costs(&old_bounds, costs, &new_bounds));
+    // the shift may hide behind the window it was metered from — the
+    // same overlap rule as rescales
+    let app = app_snapshot(engine, &cfg.net_model);
+    if app.is_some() {
+        *window_free = false;
+    }
+    let cost = netsim::price_plan(&cfg.net, &cfg.net_model, &plan, k, cfg.value_bytes, app.as_ref());
+    let view = WeightedCepView::from_bounds(new_bounds.clone());
+    match substrate {
+        Substrate::Batch { g, assignment, .. } => {
+            engine.apply_migration(&*g, &plan, &view, &mut *backend_for)?;
+            *assignment = ActiveAssignment::Weighted(view);
+        }
+        Substrate::Stream { sg, wbounds } => {
+            {
+                let assign = sg.weighted_assignment(&view);
+                engine.apply_migration(&*sg, &plan, &assign, &mut *backend_for)?;
+            }
+            *wbounds = Some(new_bounds);
+        }
+    }
+    let rec = RebalanceRecord {
+        at_iteration: it,
+        k,
+        imbalance_before: imb_before,
+        imbalance_after: imb_after,
+        moved_edges: plan.migrated_edges(),
+        range_moves: plan.num_moves(),
+        layout_ranges: engine.layout().total_ranges(),
+        net_blocking_ms: cost.blocking_s * 1e3,
+        net_overlapped_ms: cost.overlapped_s * 1e3,
+    };
+    emit_rebalance_span(&rb_sp, &rec);
+    rebalance_log.push(rec);
+    *rebalance_s += t_reb.elapsed().as_secs_f64() + cost.blocking_s;
+    *net_s += cost.total_s;
+    Ok(Some(cost.blocking_s * 1e3))
+}
+
+/// The chunk boundaries a policy's candidate plans are derived against:
+/// the active assignment's bounds on the batch substrate, the weighted
+/// (or uniform) bounds over the staged physical id space on streaming.
+fn current_bounds(substrate: &Substrate, k: usize) -> Option<Vec<u64>> {
+    match substrate {
+        Substrate::Batch { assignment, .. } => assignment.chunk_bounds(),
+        Substrate::Stream { sg, wbounds } => Some(match wbounds {
+            Some(b) => b.clone(),
+            None => uniform_bounds(sg.physical_edges() as u64, k),
+        }),
+    }
+}
+
+/// Prices candidate actions for the policy layer without executing
+/// them: derives the candidate boundary plan, prices it through the
+/// configured network model (sharing the superstep window snapshot the
+/// execution path would use), adds the provisioning latency, and
+/// projects the per-partition costs with the piecewise-linear re-slice.
+struct PlanPricer {
+    net: Network,
+    net_model: NetModelConfig,
+    value_bytes: u64,
+    latency: LatencyModel,
+    k: usize,
+    bounds: Option<Vec<u64>>,
+    costs: Vec<f64>,
+    app: Option<netsim::AppTraffic>,
+}
+
+impl CandidatePricer for PlanPricer {
+    fn price(&mut self, action: ScalingAction) -> Option<PricedAction> {
+        let bounds = self.bounds.as_ref()?;
+        let (new_bounds, provision_ms) = match action {
+            ScalingAction::NoOp => {
+                return Some(PricedAction {
+                    action,
+                    blocking_ms: 0.0,
+                    overlapped_ms: 0.0,
+                    provision_ms: 0.0,
+                    migrated_edges: 0,
+                    range_moves: 0,
+                    predicted_costs: self.costs.clone(),
+                });
+            }
+            ScalingAction::ScaleTo(k2) => {
+                if k2 == 0 || k2 == self.k {
+                    return None;
+                }
+                let m = *bounds.last()?;
+                let prov =
+                    if k2 > self.k { self.latency.startup } else { self.latency.teardown };
+                (uniform_bounds(m, k2), prov.as_secs_f64() * 1e3)
+            }
+            ScalingAction::Nudge => (balanced_boundaries(bounds, &self.costs), 0.0),
+        };
+        let plan = MigrationPlan::between_boundaries(bounds, &new_bounds);
+        let k_after = match action {
+            ScalingAction::ScaleTo(k2) => k2,
+            _ => self.k,
+        };
+        let cost = netsim::price_plan(
+            &self.net,
+            &self.net_model,
+            &plan,
+            self.k.max(k_after),
+            self.value_bytes,
+            self.app.as_ref(),
+        );
+        Some(PricedAction {
+            action,
+            blocking_ms: cost.blocking_s * 1e3,
+            overlapped_ms: cost.overlapped_s * 1e3,
+            provision_ms,
+            migrated_edges: plan.migrated_edges(),
+            range_moves: plan.num_moves(),
+            predicted_costs: predicted_costs(bounds, &self.costs, &new_bounds),
+        })
+    }
+}
+
+/// Initial assignment for the configured method — the CEP path yields a
+/// zero-materialization view.
+fn initial_assignment(
+    g: &Graph,
+    state: &MethodState,
+    method: &str,
+    k: usize,
+) -> ActiveAssignment {
+    match state {
+        MethodState::Cep(c) => ActiveAssignment::Chunked(CepView::new(*c)),
+        MethodState::Bvc(b) => ActiveAssignment::Materialized(b.to_partition()),
+        MethodState::Stateless => {
+            ActiveAssignment::Materialized(stateless_partition(g, method, k))
+        }
+    }
+}
+
+/// Advance the method state to `target_k` and derive the executable plan
+/// plus the new active assignment. For CEP this is O(k + k') chunk
+/// metadata (a rescale resets any skew-nudged boundaries to the uniform
+/// grid of the new k); BVC and the stateless methods diff per edge.
+fn plan_rescale(
+    g: &Graph,
+    state: &mut MethodState,
+    current: &ActiveAssignment,
+    method: &str,
+    target_k: usize,
+) -> (MigrationPlan, ActiveAssignment) {
+    match state {
+        MethodState::Cep(c) => {
+            let old = *c;
+            *c = c.rescaled(target_k);
+            let plan = match current {
+                // skew-nudged boundaries → the uniform target grid, still
+                // O(k + k') contiguous moves
+                ActiveAssignment::Weighted(v) => {
+                    MigrationPlan::between_boundaries(v.bounds(), &c.boundaries())
+                }
+                _ => MigrationPlan::between_ceps(&old, c),
+            };
+            (plan, ActiveAssignment::Chunked(CepView::new(*c)))
+        }
+        MethodState::Bvc(b) => {
+            let before = b.to_partition();
+            b.scale_to(target_k);
+            let after = b.to_partition();
+            (
+                MigrationPlan::diff(&before, &after),
+                ActiveAssignment::Materialized(after),
+            )
+        }
+        MethodState::Stateless => {
+            let after = stateless_partition(g, method, target_k);
+            (
+                MigrationPlan::diff(current.as_assignment(), &after),
+                ActiveAssignment::Materialized(after),
+            )
+        }
+    }
+}
+
+fn stateless_partition(g: &Graph, method: &str, k: usize) -> EdgePartition {
+    let part = match method {
+        "1d" => hash1d::partition(g, k),
+        "oblivious" => oblivious::partition(g, k),
+        "ginger" => ginger::partition(g, k),
+        _ => unreachable!("stateless method {method}"),
+    };
+    debug_assert_eq!(part.k, k);
+    debug_assert_eq!(part.assign.len(), g.num_edges());
+    part
+}
+
+/// Generate a seeded mutation batch: deletions sample live physical ids,
+/// insertions connect random vertices with a small chance of attaching a
+/// brand-new vertex (growing the id space).
+fn random_batch(rng: &mut Rng, sg: &StagedGraph, inserts: u32, deletes: u32) -> MutationBatch {
+    let mut b = MutationBatch::new();
+    let p = sg.physical_edges() as u64;
+    if p > 0 {
+        for _ in 0..deletes {
+            for _ in 0..4 {
+                let id = rng.below(p);
+                if sg.is_live(id) {
+                    b.delete(id);
+                    break;
+                }
+            }
+        }
+    }
+    let n = sg.num_vertices() as u64;
+    if n >= 2 {
+        for _ in 0..inserts {
+            let u = rng.below(n) as u32;
+            let v = if rng.chance(0.05) { n as u32 } else { rng.below(n) as u32 };
+            b.insert(u, v);
+        }
+    }
+    b
+}
+
+/// Grow the application state vectors after churn: new vertices start at
+/// the teleport share, and the PageRank `aux` (1/degree) refreshes for the
+/// whole (mutated) degree sequence.
+fn grow_state(
+    sg: &StagedGraph,
+    n: &mut usize,
+    ranks: &mut Vec<f32>,
+    aux: &mut Vec<f32>,
+    active: &mut Vec<bool>,
+) {
+    let new_n = sg.num_vertices();
+    if new_n > *n {
+        ranks.resize(new_n, 1.0 / new_n as f32);
+        active.resize(new_n, true);
+        *n = new_n;
+    }
+    aux.clear();
+    aux.extend((0..*n as u32).map(|v| {
+        let d = sg.degree(v);
+        if d == 0 {
+            0.0
+        } else {
+            1.0 / d as f32
+        }
+    }));
+}
+
+/// Mirror a scale event's audit record into its span. The record structs
+/// stay the single source of logical tallies — spans are views over
+/// them, never parallel bookkeeping. Millisecond fields are stored as
+/// integer nanoseconds ([`obs::span::secs_to_ns`]), deterministic
+/// because the priced costs are bit-identical at any thread width.
+fn emit_event_span(sp: &obs::SpanGuard, r: &EventRecord) {
+    sp.add("from_k", r.from_k as u64);
+    sp.add("to_k", r.to_k as u64);
+    sp.add("migrated_edges", r.migrated_edges);
+    sp.add("range_moves", r.range_moves as u64);
+    sp.add("layout_ranges", r.layout_ranges as u64);
+    sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
+    sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
+}
+
+/// Mirror a churn batch's audit record into its span (see
+/// [`emit_event_span`]). The `rf` audit field is skipped — it is NaN
+/// unless `audit_rf` is set and is a quality gauge, not a tally.
+fn emit_churn_span(sp: &obs::SpanGuard, r: &ChurnRecord) {
+    sp.add("inserted", r.inserted as u64);
+    sp.add("deleted", r.deleted as u64);
+    sp.add("retired", r.retired);
+    sp.add("moved", r.moved);
+    sp.add("appended", r.appended);
+    sp.add("range_ops", r.range_ops as u64);
+    sp.add("layout_ranges", r.layout_ranges as u64);
+    sp.add("tombstones_after", r.tombstones_after as u64);
+    sp.add("compacted", r.compacted as u64);
+    sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
+    sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
+}
+
+/// Mirror a boundary nudge's audit record into its span (see
+/// [`emit_event_span`]). The imbalance ratios stay record-only — they
+/// are float gauges, not logical tallies.
+fn emit_rebalance_span(sp: &obs::SpanGuard, r: &RebalanceRecord) {
+    sp.add("k", r.k as u64);
+    sp.add("moved_edges", r.moved_edges);
+    sp.add("range_moves", r.range_moves as u64);
+    sp.add("layout_ranges", r.layout_ranges as u64);
+    sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
+    sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
+}
+
+/// Mirror a policy decision's audit record into a span. Trigger bits,
+/// action codes and candidate counts are logical; the priced
+/// milliseconds are modeled, so every counter is deterministic at any
+/// thread width.
+fn emit_decision_span(d: &DecisionRecord) {
+    let sp = obs::span("event:decision");
+    sp.add("k", d.k as u64);
+    sp.add("chosen_k", d.chosen_k as u64);
+    sp.add("trigger", d.trigger as u64);
+    sp.add("action", d.action.code());
+    sp.add("candidates", d.candidates.len() as u64);
+    sp.add_secs("predicted_step_ns", d.predicted_step_ms * 1e-3);
+    sp.add_secs("predicted_cost_ns", d.predicted_cost_ms * 1e-3);
+    sp.add_secs("realized_cost_ns", d.realized_cost_ms * 1e-3);
+}
+
+/// Snapshot the engine's metered superstep traffic for overlap pricing —
+/// `None` unless the configured model wants it (emulated + overlap), so
+/// the closed-form path never touches the lanes.
+fn app_snapshot(engine: &Engine, mc: &NetModelConfig) -> Option<netsim::AppTraffic> {
+    if mc.wants_app_traffic() {
+        Some(engine.app_traffic(mc.compute_ns_per_edge))
+    } else {
+        None
+    }
+}

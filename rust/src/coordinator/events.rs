@@ -3,6 +3,7 @@
 //! Generated as a seeded Markov chain over capacity so experiments are
 //! reproducible.
 
+use crate::scaling::scenario::{ScaleEvent, Scenario};
 use crate::util::rng::Rng;
 
 /// One infrastructure event.
@@ -59,6 +60,47 @@ impl SpotTrace {
         SpotTrace { events, k_min, k_max }
     }
 
+    /// Script the trace as a [`Scenario`]: one scale event per market
+    /// flip, plus a per-iteration price trace derived from the same walk
+    /// (scarcer capacity → higher price), so price-aware policies sense
+    /// the market the script reacts to. Named `"spot-market"`.
+    pub fn to_scenario(&self, k_start: usize, total_iterations: u32) -> Scenario {
+        let mut k = k_start;
+        let mut events = Vec::new();
+        for (it, e) in &self.events {
+            match e {
+                SpotEvent::Provision => k += 1,
+                SpotEvent::Preempt => k -= 1,
+            }
+            events.push(ScaleEvent { at_iteration: *it, target_k: k });
+        }
+        // price ∝ scarcity: map capacity k ∈ [k_min, k_max] onto
+        // [1.0, 2.0], higher when the market holds fewer VMs
+        let span = (self.k_max - self.k_min).max(1) as f64;
+        let price_of = |k: usize| 1.0 + (self.k_max - k) as f64 / span;
+        let mut prices = Vec::with_capacity(total_iterations as usize);
+        let mut cur = k_start;
+        let mut next = 0;
+        for it in 0..total_iterations {
+            while next < self.events.len() && self.events[next].0 == it {
+                match self.events[next].1 {
+                    SpotEvent::Provision => cur += 1,
+                    SpotEvent::Preempt => cur -= 1,
+                }
+                next += 1;
+            }
+            prices.push(price_of(cur));
+        }
+        Scenario {
+            name: "spot-market".into(),
+            initial_k: k_start,
+            events,
+            churn: Vec::new(),
+            prices,
+            total_iterations,
+        }
+    }
+
     /// Resulting k sequence starting from `k_start` (for tests/plots).
     pub fn k_sequence(&self, k_start: usize) -> Vec<usize> {
         let mut k = k_start;
@@ -94,6 +136,23 @@ mod tests {
         assert_eq!(a.events, b.events);
         let c = SpotTrace::generate(8, 4, 16, 1000, 10, 2);
         assert_ne!(a.events, c.events);
+    }
+
+    #[test]
+    fn to_scenario_scripts_the_walk_and_prices_scarcity() {
+        let t = SpotTrace::generate(8, 4, 16, 500, 10, 7);
+        let s = t.to_scenario(8, 500);
+        assert_eq!(s.initial_k, 8);
+        assert_eq!(s.events.len(), t.events.len());
+        assert_eq!(s.total_iterations, 500);
+        assert_eq!(s.prices.len(), 500);
+        // the scripted targets replay the k walk exactly
+        let ks: Vec<usize> = s.events.iter().map(|e| e.target_k).collect();
+        assert_eq!(ks, t.k_sequence(8)[1..].to_vec());
+        // prices track scarcity within [1, 2] and move when k moves
+        assert!(s.prices.iter().all(|p| (1.0..=2.0).contains(p)));
+        let first_flip = t.events[0].0 as usize;
+        assert_ne!(s.prices[first_flip], s.prices[first_flip.saturating_sub(1)]);
     }
 
     #[test]

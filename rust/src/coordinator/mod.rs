@@ -2,13 +2,36 @@
 //! infrastructure events (spot-instance provisioning/preemption), rescales
 //! the partitioning with the configured method, migrates data through the
 //! emulated network, and keeps the application running across epochs.
+//!
+//! One entry point: [`Controller::drive`] runs a [`Scenario`] under a
+//! [`RunConfig`] on either substrate (batch or streaming/churn-capable)
+//! and reports a [`RunReport`]. Between supersteps a configured
+//! [`ScalingPolicy`] — the SLO-driven [`SloPolicy`] or the degenerate
+//! [`ThresholdPolicy`] — senses the engine's logical meters
+//! ([`SensorSnapshot`]), prices candidate actions through the selected
+//! network model, and commits the winner; every decision is audited as a
+//! [`DecisionRecord`] and is bit-identical at any `PALLAS_THREADS`.
+//!
+//! [`Scenario`]: crate::scaling::scenario::Scenario
 
+pub mod config;
 pub mod controller;
+pub mod driver;
 pub mod events;
+pub mod policy;
 pub mod provisioner;
 pub mod state;
 
+pub use config::{DriveMode, PolicyConfig, RunConfig};
 pub use controller::{
-    run_scenario, run_streaming, ChurnRecord, ControllerConfig, EventRecord, RebalanceConfig,
-    RebalanceMode, RebalanceRecord, RunBreakdown, StreamingBreakdown, StreamingConfig,
+    ChurnRecord, EventRecord, RebalanceConfig, RebalanceMode, RebalanceRecord, RunBreakdown,
+    StreamingBreakdown,
 };
+pub use driver::{Controller, RunReport};
+pub use policy::{
+    trigger, CandidatePricer, CandidateRecord, DecisionRecord, PricedAction, ScalingAction,
+    ScalingPolicy, SensorSnapshot, SloConfig, SloPolicy, ThresholdPolicy,
+};
+
+#[allow(deprecated)]
+pub use controller::{run_scenario, run_streaming, ControllerConfig, StreamingConfig};

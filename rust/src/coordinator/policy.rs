@@ -1,0 +1,961 @@
+//! SLO-driven autoscaling policies: the decision layer of the elastic
+//! controller.
+//!
+//! Scenarios used to replay fixed event scripts; this module closes the
+//! loop (ROADMAP direction 3, in the spirit of Spinner's elastic
+//! adaptation and xDGP's adaptive repartitioning). Between supersteps
+//! the unified driver ([`crate::coordinator::Controller::drive`]) hands
+//! every active [`ScalingPolicy`] a [`SensorSnapshot`] — *modeled*
+//! superstep latency and its histogram quantiles, metered per-partition
+//! costs and max/mean imbalance, comm bytes, staging backlog, and the
+//! scenario's spot-price trace — plus a [`CandidatePricer`] that prices
+//! candidate actions (scale to k′ in a bounded neighborhood, a boundary
+//! nudge, no-op) through the configured network model before anything
+//! is committed.
+//!
+//! The cost/benefit rule is piecewise linear: a candidate's projected
+//! per-partition costs come from re-slicing the metered cost profile at
+//! the candidate boundaries ([`crate::partition::weighted::predicted_costs`]
+//! assumes uniform cost density within each current chunk), its price is
+//! the plan's blocking network time plus provisioning latency, and its
+//! benefit is the projected superstep saving amortized over
+//! [`SloConfig::horizon`] future supersteps. [`SloPolicy`] commits the
+//! best-scoring feasible candidate subject to hysteresis (a minimum
+//! relative gain) and a cooldown that blocks any further commit for
+//! [`SloConfig::cooldown`] decisions — so an adversarial sawtooth load
+//! cannot thrash the fleet (see the property test below).
+//!
+//! Every decision — committed or held — is audited as a
+//! [`DecisionRecord`]: the trigger bits that fired, every candidate
+//! considered with its projected cost and score, and predicted vs
+//! realized cost (the driver patches `realized_step_ms` after the next
+//! superstep). All sensor inputs are logical counters or modeled
+//! quantities, never wall clock, so decisions are bit-identical at any
+//! `PALLAS_THREADS` width (`rust/tests/determinism.rs` pins the
+//! flattened decision stream at widths 1/2/8).
+//!
+//! The legacy `--rebalance threshold` mode survives as
+//! [`ThresholdPolicy`], a degenerate policy that unconditionally
+//! commits a boundary nudge past a fixed imbalance ratio — the driver
+//! executes it through the exact code path the old rebalance block
+//! used, keeping its output unchanged.
+
+/// Trigger-signal bits recorded in [`DecisionRecord::trigger`]. A set
+/// bit names a condition that held when the decision was taken; the
+/// bits are part of the deterministic fingerprint.
+pub mod trigger {
+    /// modeled step latency of the last superstep exceeded the SLO target
+    pub const STEP_HIGH: u32 = 1 << 0;
+    /// histogram p99 of modeled step latency exceeded the SLO target
+    pub const P99_HIGH: u32 = 1 << 1;
+    /// modeled step latency was below the scale-in watermark
+    pub const UNDER_WATERMARK: u32 = 1 << 2;
+    /// metered max/mean cost imbalance exceeded the nudge threshold
+    pub const IMBALANCE: u32 = 1 << 3;
+    /// the scenario's spot price exceeded the configured ceiling
+    pub const PRICE: u32 = 1 << 4;
+    /// a recent commit's cooldown window blocked this decision
+    pub const COOLDOWN_HELD: u32 = 1 << 5;
+    /// the active assignment has no chunk boundaries (scattered method) —
+    /// nothing can be priced or nudged
+    pub const NO_SUBSTRATE: u32 = 1 << 6;
+    /// a trigger fired and candidates were priced, but none cleared the
+    /// hysteresis margin / cost-benefit rule
+    pub const HYSTERESIS_HELD: u32 = 1 << 7;
+}
+
+/// An action a policy may commit between supersteps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalingAction {
+    /// keep the current partitioning
+    NoOp,
+    /// rescale to the given partition count (uniform target boundaries)
+    ScaleTo(usize),
+    /// re-solve the chunk boundaries against the metered cost profile
+    /// (the skew-aware rebalance move)
+    Nudge,
+}
+
+impl ScalingAction {
+    /// Stable numeric code for fingerprints and trace counters:
+    /// 0 = no-op, 1 = nudge, 2 = scale.
+    pub fn code(&self) -> u64 {
+        match self {
+            ScalingAction::NoOp => 0,
+            ScalingAction::Nudge => 1,
+            ScalingAction::ScaleTo(_) => 2,
+        }
+    }
+}
+
+/// Deterministic sensor inputs for one decision, assembled by the
+/// driver after every superstep. Every field is a logical counter or a
+/// modeled quantity — never measured wall time — so the decision stream
+/// is bit-identical at any thread width.
+#[derive(Clone, Debug)]
+pub struct SensorSnapshot {
+    /// scenario iteration whose superstep was just metered
+    pub iteration: u32,
+    /// current partition count
+    pub k: usize,
+    /// modeled latency of the last superstep in milliseconds: the max
+    /// per-partition cost from [`crate::engine::Engine::partition_costs`]
+    /// (modeled compute + metered comm bytes over the configured
+    /// bandwidth)
+    pub step_ms: f64,
+    /// p50 of the modeled step latency histogram over the run so far
+    pub p50_ms: f64,
+    /// p99 of the modeled step latency histogram over the run so far
+    pub p99_ms: f64,
+    /// metered per-partition cost profile of the last superstep, seconds
+    pub costs: Vec<f64>,
+    /// max/mean of `costs` (1.0 = perfectly balanced)
+    pub imbalance: f64,
+    /// communication bytes the last superstep metered
+    pub comm_bytes: u64,
+    /// churn backlog: the staged graph's staging fraction (0 on the
+    /// batch substrate)
+    pub backlog: f64,
+    /// the scenario's spot-price trace value at this iteration (0 when
+    /// the scenario carries no prices)
+    pub price: f64,
+    /// does the active assignment expose chunk boundaries? Scattered
+    /// methods (BVC, hash) cannot be priced or nudged by boundary plans.
+    pub has_bounds: bool,
+}
+
+/// A candidate action priced by the driver through the configured
+/// network model.
+#[derive(Clone, Debug)]
+pub struct PricedAction {
+    /// the action that was priced
+    pub action: ScalingAction,
+    /// network milliseconds the migration would stall the application
+    pub blocking_ms: f64,
+    /// network milliseconds hidden behind the superstep window
+    /// (emulated overlap mode; 0 under the closed form)
+    pub overlapped_ms: f64,
+    /// provisioning latency in milliseconds (worker startup on scale
+    /// out, teardown on scale in, 0 for a nudge)
+    pub provision_ms: f64,
+    /// edges the candidate plan would migrate
+    pub migrated_edges: u64,
+    /// contiguous range moves in the candidate plan
+    pub range_moves: usize,
+    /// projected per-partition costs (seconds) under the candidate
+    /// boundaries — the piecewise-linear re-slice of the metered profile
+    pub predicted_costs: Vec<f64>,
+}
+
+impl PricedAction {
+    /// Projected step latency under this candidate, in milliseconds
+    /// (max of the projected per-partition costs).
+    pub fn predicted_step_ms(&self) -> f64 {
+        self.predicted_costs.iter().cloned().fold(0.0, f64::max) * 1e3
+    }
+}
+
+/// Prices candidate actions for a policy. Implemented by the driver
+/// over the live engine state (plan derivation + network model +
+/// provisioner latencies); tests substitute synthetic pricers.
+/// Returns `None` when the action cannot be planned (no chunk
+/// boundaries, k′ out of range, k′ == k).
+pub trait CandidatePricer {
+    /// Price one candidate action without executing it.
+    fn price(&mut self, action: ScalingAction) -> Option<PricedAction>;
+}
+
+/// One candidate considered by a decision, with its score under the
+/// cost/benefit rule.
+#[derive(Clone, Debug)]
+pub struct CandidateRecord {
+    /// the candidate action
+    pub action: ScalingAction,
+    /// projected step latency under the candidate, milliseconds
+    pub predicted_step_ms: f64,
+    /// projected superstep saving amortized over the policy horizon,
+    /// milliseconds
+    pub gain_ms: f64,
+    /// the candidate's price: blocking network + provisioning
+    /// milliseconds
+    pub cost_ms: f64,
+    /// `gain_ms - cost_ms` for scale-out and nudges; headroom below the
+    /// feasibility ceiling for scale-in
+    pub score: f64,
+    /// did the candidate clear the hysteresis margin / budget rule?
+    pub feasible: bool,
+}
+
+/// Audit record of one policy decision (committed or held).
+#[derive(Clone, Debug)]
+pub struct DecisionRecord {
+    /// iteration whose superstep metering fed the decision
+    pub at_iteration: u32,
+    /// partition count when the decision was taken
+    pub k: usize,
+    /// [`trigger`] bits that held
+    pub trigger: u32,
+    /// the committed action ([`ScalingAction::NoOp`] when held)
+    pub action: ScalingAction,
+    /// partition count after the action (== `k` for no-op and nudge)
+    pub chosen_k: usize,
+    /// projected step latency of the committed action, milliseconds
+    /// (the current `step_ms` when nothing was committed)
+    pub predicted_step_ms: f64,
+    /// predicted price of the committed action: blocking + provisioning
+    /// milliseconds (0 when nothing was committed)
+    pub predicted_cost_ms: f64,
+    /// modeled step latency of the *next* superstep, patched in by the
+    /// driver — NaN until that superstep runs (or forever, for the last
+    /// iteration)
+    pub realized_step_ms: f64,
+    /// realized blocking milliseconds of the executed action (0 when
+    /// nothing was committed)
+    pub realized_cost_ms: f64,
+    /// modeled step latency that fed the decision, milliseconds
+    pub step_ms: f64,
+    /// histogram p99 that fed the decision, milliseconds
+    pub p99_ms: f64,
+    /// every candidate considered, in enumeration order
+    pub candidates: Vec<CandidateRecord>,
+}
+
+impl DecisionRecord {
+    fn held(s: &SensorSnapshot, trigger: u32) -> DecisionRecord {
+        DecisionRecord {
+            at_iteration: s.iteration,
+            k: s.k,
+            trigger,
+            action: ScalingAction::NoOp,
+            chosen_k: s.k,
+            predicted_step_ms: s.step_ms,
+            predicted_cost_ms: 0.0,
+            realized_step_ms: f64::NAN,
+            realized_cost_ms: 0.0,
+            step_ms: s.step_ms,
+            p99_ms: s.p99_ms,
+            candidates: Vec::new(),
+        }
+    }
+
+    /// Flatten the deterministic content of the record into words for
+    /// cross-width fingerprinting (floats via `to_bits`; the
+    /// wall-clock-free `realized_*` fields are modeled, so they are
+    /// included except the NaN sentinel, which is canonicalized).
+    pub fn fingerprint_words(&self) -> Vec<u64> {
+        let canon = |v: f64| if v.is_nan() { u64::MAX } else { v.to_bits() };
+        let mut w = vec![
+            self.at_iteration as u64,
+            self.k as u64,
+            self.trigger as u64,
+            self.action.code(),
+            self.chosen_k as u64,
+            canon(self.predicted_step_ms),
+            canon(self.predicted_cost_ms),
+            canon(self.realized_step_ms),
+            canon(self.realized_cost_ms),
+            canon(self.step_ms),
+            canon(self.p99_ms),
+            self.candidates.len() as u64,
+        ];
+        for c in &self.candidates {
+            w.push(c.action.code());
+            if let ScalingAction::ScaleTo(k2) = c.action {
+                w.push(k2 as u64);
+            }
+            w.push(canon(c.predicted_step_ms));
+            w.push(canon(c.gain_ms));
+            w.push(canon(c.cost_ms));
+            w.push(canon(c.score));
+            w.push(c.feasible as u64);
+        }
+        w
+    }
+}
+
+/// A scaling policy: consumes sensor snapshots between supersteps and
+/// decides whether to rescale, nudge boundaries, or hold.
+pub trait ScalingPolicy {
+    /// Short stable name for audits and traces.
+    fn name(&self) -> &'static str;
+
+    /// May this policy ever commit a boundary nudge? Drives whether the
+    /// streaming substrate carries weighted chunk boundaries.
+    fn may_nudge(&self) -> bool {
+        false
+    }
+
+    /// Take one decision. Implementations must be deterministic
+    /// functions of the snapshot, the pricer's answers, and their own
+    /// state — no clocks, no randomness.
+    fn decide(
+        &mut self,
+        snap: &SensorSnapshot,
+        pricer: &mut dyn CandidatePricer,
+    ) -> DecisionRecord;
+}
+
+/// Configuration of [`SloPolicy`].
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// target p99 modeled superstep latency, milliseconds (CLI:
+    /// `--slo-p99-ms`)
+    pub p99_ms: f64,
+    /// scale-in is considered only while `step_ms` is below
+    /// `p99_ms * low_watermark` (default 0.5)
+    pub low_watermark: f64,
+    /// hysteresis margin: a scale-out candidate must project at least
+    /// this relative step reduction, and a scale-in candidate must stay
+    /// this far under the target (default 0.1)
+    pub min_gain: f64,
+    /// never scale below this partition count
+    pub k_min: usize,
+    /// never scale above this partition count
+    pub k_max: usize,
+    /// candidates are enumerated in `k±neighborhood` (default 2)
+    pub neighborhood: usize,
+    /// decisions blocked after a commit: no further commit for this
+    /// many decisions (default 2)
+    pub cooldown: u32,
+    /// supersteps the projected saving is amortized over in the
+    /// cost/benefit score (default 8)
+    pub horizon: u32,
+    /// max/mean imbalance past which a boundary nudge competes with
+    /// rescaling as a remedy (default 1.15)
+    pub nudge_threshold: f64,
+    /// spot price above which scale-in pressure applies even without an
+    /// idle watermark (deadline-SLO mode: the candidate must still
+    /// project under `p99_ms`); `None` disables the price trigger
+    pub price_ceiling: Option<f64>,
+}
+
+impl SloConfig {
+    /// Defaults around the given SLO target (milliseconds).
+    pub fn new(p99_ms: f64) -> SloConfig {
+        SloConfig {
+            p99_ms,
+            low_watermark: 0.5,
+            min_gain: 0.1,
+            k_min: 1,
+            k_max: 1024,
+            neighborhood: 2,
+            cooldown: 2,
+            horizon: 8,
+            nudge_threshold: 1.15,
+            price_ceiling: None,
+        }
+    }
+
+    /// Set the scale bounds.
+    pub fn bounds(mut self, k_min: usize, k_max: usize) -> SloConfig {
+        assert!(k_min >= 1 && k_min <= k_max, "bad k bounds {k_min}..{k_max}");
+        self.k_min = k_min;
+        self.k_max = k_max;
+        self
+    }
+
+    /// Set the commit cooldown (decisions).
+    pub fn cooldown(mut self, cooldown: u32) -> SloConfig {
+        self.cooldown = cooldown;
+        self
+    }
+
+    /// Set the amortization horizon (supersteps).
+    pub fn horizon(mut self, horizon: u32) -> SloConfig {
+        self.horizon = horizon;
+        self
+    }
+
+    /// Set the candidate neighborhood width.
+    pub fn neighborhood(mut self, neighborhood: usize) -> SloConfig {
+        assert!(neighborhood >= 1, "neighborhood must be at least 1");
+        self.neighborhood = neighborhood;
+        self
+    }
+
+    /// Set the scale-in watermark fraction.
+    pub fn low_watermark(mut self, low_watermark: f64) -> SloConfig {
+        self.low_watermark = low_watermark;
+        self
+    }
+
+    /// Set the hysteresis margin fraction.
+    pub fn min_gain(mut self, min_gain: f64) -> SloConfig {
+        self.min_gain = min_gain;
+        self
+    }
+
+    /// Enable the spot-price scale-in trigger at the given ceiling.
+    pub fn price_ceiling(mut self, ceiling: f64) -> SloConfig {
+        self.price_ceiling = Some(ceiling);
+        self
+    }
+}
+
+/// The SLO policy: scale out when the modeled step latency breaches the
+/// target, scale in when it idles far below it (or the spot price spikes),
+/// nudge boundaries when skew — not capacity — is the bottleneck. Every
+/// candidate is priced before commit and scored
+/// `gain = (step - projected) * horizon` against
+/// `cost = blocking + provisioning`; commits are rate-limited by the
+/// cooldown and gated by the hysteresis margin.
+pub struct SloPolicy {
+    cfg: SloConfig,
+    cooldown_left: u32,
+}
+
+impl SloPolicy {
+    /// New policy with zero cooldown debt.
+    pub fn new(cfg: SloConfig) -> SloPolicy {
+        SloPolicy { cfg, cooldown_left: 0 }
+    }
+
+    /// The configuration the policy runs under.
+    pub fn config(&self) -> &SloConfig {
+        &self.cfg
+    }
+}
+
+impl ScalingPolicy for SloPolicy {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn may_nudge(&self) -> bool {
+        true
+    }
+
+    fn decide(
+        &mut self,
+        s: &SensorSnapshot,
+        pricer: &mut dyn CandidatePricer,
+    ) -> DecisionRecord {
+        let c = self.cfg;
+        let mut trig = 0u32;
+        let breach = s.step_ms > c.p99_ms;
+        if breach {
+            trig |= trigger::STEP_HIGH;
+        }
+        if s.p99_ms > c.p99_ms {
+            trig |= trigger::P99_HIGH;
+        }
+        let under = s.step_ms < c.p99_ms * c.low_watermark;
+        if under {
+            trig |= trigger::UNDER_WATERMARK;
+        }
+        let skewed = s.imbalance > c.nudge_threshold;
+        if skewed {
+            trig |= trigger::IMBALANCE;
+        }
+        let price_high = matches!(c.price_ceiling, Some(p) if s.price > p);
+        if price_high {
+            trig |= trigger::PRICE;
+        }
+        if !s.has_bounds {
+            trig |= trigger::NO_SUBSTRATE;
+        }
+
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return DecisionRecord::held(s, trig | trigger::COOLDOWN_HELD);
+        }
+        let mut rec = DecisionRecord::held(s, trig);
+        if !s.has_bounds {
+            return rec;
+        }
+
+        let horizon = c.horizon as f64;
+        let mut chosen: Option<CandidateRecord> = None;
+        let mut best_score = f64::NEG_INFINITY;
+
+        if breach {
+            // ---- breach: scale out within the neighborhood, or nudge if
+            // skew is the real bottleneck — best positive score wins
+            let hi = (s.k + c.neighborhood).min(c.k_max);
+            for k2 in (s.k + 1)..=hi {
+                let Some(p) = pricer.price(ScalingAction::ScaleTo(k2)) else { continue };
+                let pred = p.predicted_step_ms();
+                let gain = (s.step_ms - pred) * horizon;
+                let cost = p.blocking_ms + p.provision_ms;
+                let cand = CandidateRecord {
+                    action: ScalingAction::ScaleTo(k2),
+                    predicted_step_ms: pred,
+                    gain_ms: gain,
+                    cost_ms: cost,
+                    score: gain - cost,
+                    feasible: pred <= s.step_ms * (1.0 - c.min_gain),
+                };
+                if cand.feasible && cand.score > 0.0 && cand.score > best_score {
+                    best_score = cand.score;
+                    chosen = Some(cand.clone());
+                }
+                rec.candidates.push(cand);
+            }
+            if skewed {
+                if let Some(p) = pricer.price(ScalingAction::Nudge) {
+                    if p.range_moves > 0 {
+                        let pred = p.predicted_step_ms();
+                        let gain = (s.step_ms - pred) * horizon;
+                        let cand = CandidateRecord {
+                            action: ScalingAction::Nudge,
+                            predicted_step_ms: pred,
+                            gain_ms: gain,
+                            cost_ms: p.blocking_ms,
+                            score: gain - p.blocking_ms,
+                            feasible: pred <= s.step_ms * (1.0 - c.min_gain),
+                        };
+                        if cand.feasible && cand.score > 0.0 && cand.score > best_score {
+                            best_score = cand.score;
+                            chosen = Some(cand.clone());
+                        }
+                        rec.candidates.push(cand);
+                    }
+                }
+            }
+        } else if (under || price_high) && s.k > c.k_min {
+            // ---- idle (or price pressure): deepest feasible scale-in.
+            // Feasibility: the projected step must stay under the target
+            // with the hysteresis margin (price pressure relaxes the
+            // margin — deadline mode: just stay inside the SLO), and the
+            // one-off price must fit the accumulated slack budget.
+            let ceiling = if price_high { c.p99_ms } else { c.p99_ms * (1.0 - c.min_gain) };
+            let slack = (c.p99_ms - s.step_ms).max(0.0) * horizon;
+            let lo = c.k_min.max(s.k.saturating_sub(c.neighborhood)).max(1);
+            for k2 in lo..s.k {
+                let Some(p) = pricer.price(ScalingAction::ScaleTo(k2)) else { continue };
+                let pred = p.predicted_step_ms();
+                let cost = p.blocking_ms + p.provision_ms;
+                let cand = CandidateRecord {
+                    action: ScalingAction::ScaleTo(k2),
+                    predicted_step_ms: pred,
+                    gain_ms: 0.0,
+                    cost_ms: cost,
+                    score: ceiling - pred,
+                    feasible: pred <= ceiling && cost <= slack,
+                };
+                // deepest feasible candidate wins (enumeration is
+                // ascending from the deepest)
+                if cand.feasible && chosen.is_none() {
+                    chosen = Some(cand.clone());
+                }
+                rec.candidates.push(cand);
+            }
+        } else if skewed {
+            // ---- balanced capacity, skewed boundaries: priced nudge
+            if let Some(p) = pricer.price(ScalingAction::Nudge) {
+                if p.range_moves > 0 {
+                    let pred = p.predicted_step_ms();
+                    let gain = (s.step_ms - pred) * horizon;
+                    let cand = CandidateRecord {
+                        action: ScalingAction::Nudge,
+                        predicted_step_ms: pred,
+                        gain_ms: gain,
+                        cost_ms: p.blocking_ms,
+                        score: gain - p.blocking_ms,
+                        feasible: pred < s.step_ms,
+                    };
+                    if cand.feasible && cand.score > 0.0 {
+                        chosen = Some(cand.clone());
+                    }
+                    rec.candidates.push(cand);
+                }
+            }
+        }
+
+        match chosen {
+            Some(cand) => {
+                rec.action = cand.action;
+                rec.chosen_k = match cand.action {
+                    ScalingAction::ScaleTo(k2) => k2,
+                    _ => s.k,
+                };
+                rec.predicted_step_ms = cand.predicted_step_ms;
+                rec.predicted_cost_ms = cand.cost_ms;
+                self.cooldown_left = c.cooldown;
+            }
+            None => {
+                if !rec.candidates.is_empty() {
+                    rec.trigger |= trigger::HYSTERESIS_HELD;
+                }
+            }
+        }
+        rec
+    }
+}
+
+/// The legacy `--rebalance threshold` mode as a degenerate policy: past
+/// a fixed max/mean imbalance ratio, unconditionally commit a boundary
+/// nudge (no cooldown, no cost/benefit gate) — exactly the pre-policy
+/// rebalance block's trigger rule, so its output is unchanged.
+pub struct ThresholdPolicy {
+    threshold: f64,
+}
+
+impl ThresholdPolicy {
+    /// Threshold policy with the given max/mean trigger ratio.
+    pub fn new(threshold: f64) -> ThresholdPolicy {
+        assert!(threshold >= 1.0, "imbalance threshold below 1.0 can never be satisfied");
+        ThresholdPolicy { threshold }
+    }
+}
+
+impl ScalingPolicy for ThresholdPolicy {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn may_nudge(&self) -> bool {
+        true
+    }
+
+    fn decide(
+        &mut self,
+        s: &SensorSnapshot,
+        pricer: &mut dyn CandidatePricer,
+    ) -> DecisionRecord {
+        let mut trig = 0u32;
+        let skewed = s.imbalance > self.threshold;
+        if skewed {
+            trig |= trigger::IMBALANCE;
+        }
+        if !s.has_bounds {
+            trig |= trigger::NO_SUBSTRATE;
+        }
+        let mut rec = DecisionRecord::held(s, trig);
+        if skewed && s.has_bounds {
+            if let Some(p) = pricer.price(ScalingAction::Nudge) {
+                if p.range_moves > 0 {
+                    let pred = p.predicted_step_ms();
+                    rec.candidates.push(CandidateRecord {
+                        action: ScalingAction::Nudge,
+                        predicted_step_ms: pred,
+                        gain_ms: (s.step_ms - pred).max(0.0),
+                        cost_ms: p.blocking_ms,
+                        score: s.step_ms - pred,
+                        feasible: true,
+                    });
+                    rec.action = ScalingAction::Nudge;
+                    rec.predicted_step_ms = pred;
+                    rec.predicted_cost_ms = p.blocking_ms;
+                }
+            }
+        }
+        rec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic pricer over a perfectly divisible workload: the step at
+    /// k′ is `work_ms / k′`, every plan blocks for `blocking_ms` and a
+    /// resize pays `provision_ms`.
+    struct LinearPricer {
+        k: usize,
+        work_ms: f64,
+        blocking_ms: f64,
+        provision_ms: f64,
+        nudge_gain: f64,
+    }
+
+    impl CandidatePricer for LinearPricer {
+        fn price(&mut self, action: ScalingAction) -> Option<PricedAction> {
+            match action {
+                ScalingAction::NoOp => None,
+                ScalingAction::ScaleTo(k2) => {
+                    if k2 == 0 || k2 == self.k {
+                        return None;
+                    }
+                    Some(PricedAction {
+                        action,
+                        blocking_ms: self.blocking_ms,
+                        overlapped_ms: 0.0,
+                        provision_ms: self.provision_ms,
+                        migrated_edges: 1000,
+                        range_moves: 2 * self.k,
+                        predicted_costs: vec![self.work_ms / k2 as f64 * 1e-3; k2],
+                    })
+                }
+                ScalingAction::Nudge => Some(PricedAction {
+                    action,
+                    blocking_ms: self.blocking_ms,
+                    overlapped_ms: 0.0,
+                    provision_ms: 0.0,
+                    migrated_edges: 100,
+                    range_moves: 2 * (self.k - 1),
+                    predicted_costs: vec![
+                        self.work_ms / self.k as f64 * self.nudge_gain * 1e-3;
+                        self.k
+                    ],
+                }),
+            }
+        }
+    }
+
+    fn snap(it: u32, k: usize, step_ms: f64) -> SensorSnapshot {
+        SensorSnapshot {
+            iteration: it,
+            k,
+            step_ms,
+            p50_ms: step_ms,
+            p99_ms: step_ms,
+            costs: vec![step_ms * 1e-3; k],
+            imbalance: 1.0,
+            comm_bytes: 0,
+            backlog: 0.0,
+            price: 0.0,
+            has_bounds: true,
+        }
+    }
+
+    #[test]
+    fn breach_commits_scale_out_with_positive_score() {
+        let mut pol = SloPolicy::new(SloConfig::new(10.0).bounds(1, 16).horizon(8));
+        let mut pricer = LinearPricer {
+            k: 4,
+            work_ms: 80.0,
+            blocking_ms: 2.0,
+            provision_ms: 1.0,
+            nudge_gain: 1.0,
+        };
+        // step 20 ms at k=4 against a 10 ms target: k=6 projects 13.3,
+        // k=5 projects 16 — both feasible, k=6 scores higher
+        let d = pol.decide(&snap(0, 4, 20.0), &mut pricer);
+        assert_eq!(d.action, ScalingAction::ScaleTo(6));
+        assert_eq!(d.chosen_k, 6);
+        assert!(d.trigger & trigger::STEP_HIGH != 0);
+        assert!(d.predicted_step_ms < 20.0);
+        assert!(d.predicted_cost_ms > 0.0);
+        assert_eq!(d.candidates.len(), 2);
+        assert!(d.candidates.iter().all(|c| c.feasible));
+    }
+
+    #[test]
+    fn migration_cost_above_amortized_gain_holds() {
+        let mut pol = SloPolicy::new(SloConfig::new(10.0).bounds(1, 16).horizon(1));
+        let mut pricer = LinearPricer {
+            k: 4,
+            work_ms: 44.0,
+            blocking_ms: 500.0, // pricier than any 1-step saving
+            provision_ms: 100.0,
+            nudge_gain: 1.0,
+        };
+        let d = pol.decide(&snap(0, 4, 11.0), &mut pricer);
+        assert_eq!(d.action, ScalingAction::NoOp);
+        assert!(d.trigger & trigger::HYSTERESIS_HELD != 0);
+        assert!(!d.candidates.is_empty());
+        assert!(d.candidates.iter().all(|c| c.score < 0.0));
+    }
+
+    #[test]
+    fn idle_commits_deepest_feasible_scale_in() {
+        let mut pol = SloPolicy::new(SloConfig::new(10.0).bounds(1, 16));
+        let mut pricer = LinearPricer {
+            k: 8,
+            work_ms: 16.0, // step 2 ms at k=8; 2.7 at k=6; 3.2 at k=5
+            blocking_ms: 1.0,
+            provision_ms: 1.0,
+            nudge_gain: 1.0,
+        };
+        let d = pol.decide(&snap(0, 8, 2.0), &mut pricer);
+        assert!(d.trigger & trigger::UNDER_WATERMARK != 0);
+        // deepest neighborhood candidate k=6 projects 2.67 ≤ 9 → wins
+        assert_eq!(d.action, ScalingAction::ScaleTo(6));
+        assert!(d.predicted_step_ms <= 10.0 * 0.9);
+    }
+
+    #[test]
+    fn scale_in_respects_k_min() {
+        let mut pol = SloPolicy::new(SloConfig::new(10.0).bounds(4, 16));
+        let mut pricer = LinearPricer {
+            k: 4,
+            work_ms: 4.0,
+            blocking_ms: 0.1,
+            provision_ms: 0.1,
+            nudge_gain: 1.0,
+        };
+        let d = pol.decide(&snap(0, 4, 1.0), &mut pricer);
+        assert_eq!(d.action, ScalingAction::NoOp);
+        assert!(d.candidates.is_empty());
+    }
+
+    #[test]
+    fn price_spike_forces_scale_in_within_deadline() {
+        let mut pol =
+            SloPolicy::new(SloConfig::new(10.0).bounds(1, 16).price_ceiling(1.5));
+        let mut pricer = LinearPricer {
+            k: 8,
+            work_ms: 48.0, // step 6 ms: above the 5 ms watermark, no idle
+            blocking_ms: 1.0,
+            provision_ms: 1.0,
+            nudge_gain: 1.0,
+        };
+        let mut s = snap(0, 8, 6.0);
+        // no price spike: 6 ms is not idle, nothing happens
+        let d = pol.decide(&s, &mut pricer);
+        assert_eq!(d.action, ScalingAction::NoOp);
+        assert_eq!(d.trigger & trigger::PRICE, 0);
+        // price spike: shed workers as deep as the deadline allows —
+        // k=6 projects 8 ms ≤ 10 ms target
+        s.price = 2.0;
+        let d = pol.decide(&s, &mut pricer);
+        assert!(d.trigger & trigger::PRICE != 0);
+        assert_eq!(d.action, ScalingAction::ScaleTo(6));
+        assert!(d.predicted_step_ms <= 10.0);
+    }
+
+    #[test]
+    fn skew_without_breach_commits_priced_nudge() {
+        let mut pol = SloPolicy::new(SloConfig::new(10.0).bounds(1, 16));
+        let mut pricer = LinearPricer {
+            k: 4,
+            work_ms: 32.0,
+            blocking_ms: 0.5,
+            provision_ms: 1.0,
+            nudge_gain: 0.7, // nudge projects a 30% step cut
+        };
+        let mut s = snap(0, 4, 8.0); // between watermark (5) and target (10)
+        s.imbalance = 1.5;
+        let d = pol.decide(&s, &mut pricer);
+        assert!(d.trigger & trigger::IMBALANCE != 0);
+        assert_eq!(d.action, ScalingAction::Nudge);
+        assert_eq!(d.chosen_k, 4);
+    }
+
+    #[test]
+    fn scattered_substrate_is_held_with_no_substrate_bit() {
+        let mut pol = SloPolicy::new(SloConfig::new(10.0).bounds(1, 16));
+        let mut pricer = LinearPricer {
+            k: 4,
+            work_ms: 80.0,
+            blocking_ms: 1.0,
+            provision_ms: 1.0,
+            nudge_gain: 1.0,
+        };
+        let mut s = snap(0, 4, 20.0);
+        s.has_bounds = false;
+        let d = pol.decide(&s, &mut pricer);
+        assert_eq!(d.action, ScalingAction::NoOp);
+        assert!(d.trigger & trigger::NO_SUBSTRATE != 0);
+        assert!(d.candidates.is_empty());
+    }
+
+    #[test]
+    fn threshold_policy_mirrors_legacy_trigger_rule() {
+        let mut pol = ThresholdPolicy::new(1.15);
+        let mut pricer = LinearPricer {
+            k: 4,
+            work_ms: 32.0,
+            blocking_ms: 0.5,
+            provision_ms: 1.0,
+            nudge_gain: 0.9,
+        };
+        let mut s = snap(0, 4, 8.0);
+        s.imbalance = 1.10;
+        let d = pol.decide(&s, &mut pricer);
+        assert_eq!(d.action, ScalingAction::NoOp, "below threshold must hold");
+        s.imbalance = 1.30;
+        let d = pol.decide(&s, &mut pricer);
+        assert_eq!(d.action, ScalingAction::Nudge, "past threshold must nudge");
+        // no cooldown: fires again immediately, like the legacy block
+        let d = pol.decide(&s, &mut pricer);
+        assert_eq!(d.action, ScalingAction::Nudge);
+    }
+
+    /// Property: on an adversarial sawtooth load (breach one iteration,
+    /// idle the next, forever) the cooldown bounds oscillation — no two
+    /// commits ever land within the cooldown window, so no A→B→A flip
+    /// can happen inside it, and total commits stay rate-limited.
+    #[test]
+    fn hysteresis_bounds_oscillation_on_sawtooth_load() {
+        let cooldown = 3u32;
+        let cfg = SloConfig::new(10.0).bounds(1, 16).cooldown(cooldown).horizon(20);
+        let mut pol = SloPolicy::new(cfg);
+        let mut k = 4usize;
+        let total_work = 80.0; // step 20 ms at k=4 (breach), 2 ms spikes-off
+        let iterations = 200u32;
+        let mut commits: Vec<(u32, usize, ScalingAction)> = Vec::new();
+        for it in 0..iterations {
+            // sawtooth: heavy load on even iterations, near-zero on odd
+            let work_ms = if it % 2 == 0 { total_work } else { total_work / 10.0 };
+            let step_ms = work_ms / k as f64;
+            let mut pricer = LinearPricer {
+                k,
+                work_ms,
+                blocking_ms: 1.0,
+                provision_ms: 1.0,
+                nudge_gain: 1.0,
+            };
+            let d = pol.decide(&snap(it, k, step_ms), &mut pricer);
+            if let ScalingAction::ScaleTo(k2) = d.action {
+                commits.push((it, k2, d.action));
+                k = k2;
+            } else if d.action == ScalingAction::Nudge {
+                commits.push((it, k, d.action));
+            }
+        }
+        assert!(!commits.is_empty(), "the sawtooth never triggered the policy");
+        // no two commits within the cooldown window — in particular no
+        // A→B→A flip inside it
+        for w in commits.windows(2) {
+            let gap = w[1].0 - w[0].0;
+            assert!(
+                gap > cooldown,
+                "commits at {} and {} violate the {}-decision cooldown",
+                w[0].0,
+                w[1].0,
+                cooldown
+            );
+        }
+        // rate limit: at most one commit per cooldown+1 decisions
+        assert!(
+            commits.len() as u32 <= iterations / (cooldown + 1) + 1,
+            "{} commits over {} iterations thrashes",
+            commits.len(),
+            iterations
+        );
+        // k stayed inside the configured bounds throughout
+        assert!((1..=16).contains(&k));
+    }
+
+    #[test]
+    fn cooldown_decrements_and_releases() {
+        let mut pol = SloPolicy::new(SloConfig::new(10.0).bounds(1, 16).cooldown(2));
+        let mut pricer = LinearPricer {
+            k: 4,
+            work_ms: 80.0,
+            blocking_ms: 1.0,
+            provision_ms: 1.0,
+            nudge_gain: 1.0,
+        };
+        let d0 = pol.decide(&snap(0, 4, 20.0), &mut pricer);
+        assert!(matches!(d0.action, ScalingAction::ScaleTo(_)));
+        let d1 = pol.decide(&snap(1, 6, 13.3), &mut pricer);
+        assert!(d1.trigger & trigger::COOLDOWN_HELD != 0);
+        assert_eq!(d1.action, ScalingAction::NoOp);
+        let d2 = pol.decide(&snap(2, 6, 13.3), &mut pricer);
+        assert!(d2.trigger & trigger::COOLDOWN_HELD != 0);
+        let d3 = pol.decide(&snap(3, 6, 13.3), &mut pricer);
+        assert_eq!(d3.trigger & trigger::COOLDOWN_HELD, 0, "cooldown must release");
+    }
+
+    #[test]
+    fn fingerprint_words_are_stable_and_total() {
+        let mut pol = SloPolicy::new(SloConfig::new(10.0).bounds(1, 16));
+        let mut pricer = LinearPricer {
+            k: 4,
+            work_ms: 80.0,
+            blocking_ms: 2.0,
+            provision_ms: 1.0,
+            nudge_gain: 1.0,
+        };
+        let d = pol.decide(&snap(7, 4, 20.0), &mut pricer);
+        let w1 = d.fingerprint_words();
+        let w2 = d.fingerprint_words();
+        assert_eq!(w1, w2);
+        // NaN realized fields canonicalize instead of poisoning the hash
+        assert!(w1.contains(&u64::MAX));
+        assert!(w1.len() >= 12);
+    }
+}

@@ -68,10 +68,33 @@
 //! meters per-partition cost (modeled ns/edge compute + `CommMeter` lane
 //! bytes), [`partition::weighted::balanced_boundaries`] re-solves split
 //! points by prefix-sum when the metered max/mean imbalance trips the
-//! configured threshold ([`coordinator::RebalanceConfig`]), and
+//! configured threshold, and
 //! [`scaling::migration::MigrationPlan::between_boundaries`] turns the
 //! boundary shift into ≤ 2(k−1) contiguous moves — priced, executed and
 //! audited exactly like a rescale plan.
+//!
+//! ## Autoscaling
+//!
+//! Scripted scale events say *when*; the [`coordinator::policy`] layer
+//! decides *whether*. One [`coordinator::RunConfig`] drives both
+//! substrates through [`coordinator::Controller::drive`] (churn in the
+//! scenario selects streaming, [`coordinator::DriveMode`] pins it), and
+//! its [`coordinator::PolicyConfig`] selects the scaling policy: `Off`,
+//! `Threshold` (the skew-rebalancing loop above, expressed as the
+//! degenerate policy), or `Slo`
+//! ([`coordinator::SloConfig`]/[`coordinator::SloPolicy`]). Between
+//! supersteps the driver assembles a [`coordinator::SensorSnapshot`]
+//! from the [`obs`] histograms and the metered cost vector (modeled
+//! step latency, p50/p99, churn backlog, imbalance, the scenario price
+//! trace); the policy enumerates candidates (scale to k′ in a bounded
+//! neighborhood, boundary nudge, no-op), prices each through the same
+//! `NetworkModel` machinery as scripted rescales, and commits the
+//! winner only when the predicted gain over its horizon clears the
+//! migration + provisioning cost and hysteresis (cooldown) allows it.
+//! Every decision is audited ([`coordinator::DecisionRecord`]: trigger
+//! bits, the priced candidate table, predictions patched against the
+//! realized step one iteration later), mirrored as an `event:decision`
+//! span, and bit-identical at any thread width.
 //!
 //! Every hot path above (CSR construction, the quality sweeps, engine
 //! supersteps and mirror aggregation, staged-batch ingest) runs on the
@@ -100,8 +123,10 @@
 //! splice-and-rebuild-touched discipline as a migration plan, now with a
 //! growing edge-id (and vertex-id) space. When the
 //! [`stream::CompactionPolicy`] budget is spent, the staged state folds
-//! back through a fresh GEO pass. [`coordinator::run_streaming`] drives
-//! interleaved churn + rescale scenarios end to end.
+//! back through a fresh GEO pass. [`coordinator::Controller::drive`]
+//! selects this substrate automatically whenever the scenario carries
+//! churn and drives interleaved churn + rescale (+ policy) scenarios
+//! end to end.
 //!
 //! ## Quickstart
 //!

@@ -8,6 +8,7 @@
 //! egs run       --dataset orkut-s --app pagerank --k 8 [--backend xla]
 //! egs elastic   --dataset orkut-s --method cep --scenario out --k 8 --steps 4
 //!               [--net-model closed|emulated] [--net-gbps 8] [--net-skew-us 0]
+//!               [--policy off|threshold|slo] [--slo-p99-ms 5] [--slo-ref-ms t]
 //!               [--rebalance off|threshold] [--rebalance-threshold 1.15]
 //!               [--trace-out trace.jsonl]
 //! egs report    --in trace.jsonl
@@ -36,16 +37,24 @@
 //! report --in trace.jsonl` folds a trace back into a human summary table
 //! (per-span-name counts and log-bucketed wall-time quantiles).
 //!
-//! `--rebalance threshold` arms the skew-aware boundary rebalancer on the
-//! CEP path: after each superstep whose metered max/mean cost imbalance
-//! exceeds `--rebalance-threshold` (default 1.15), the coordinator
-//! re-solves the chunk boundaries against the metered profile and
-//! executes the ≤ 2(k−1)-move boundary-shift plan, priced like any other
-//! migration. `--scenario steady` runs a fixed-k scenario for isolating
-//! the rebalancer.
+//! `--policy` selects the scaling policy that runs between supersteps
+//! (the unified [`egs::coordinator::Controller::drive`] loop): `off`
+//! (scripted events only), `threshold` (the skew-aware boundary
+//! rebalancer: nudge whenever the metered max/mean cost imbalance
+//! exceeds `--rebalance-threshold`, default 1.15), or `slo` (the
+//! SLO-driven autoscaler: when the modeled step latency breaches
+//! `--slo-p99-ms` the policy prices candidate rescales through the
+//! selected network model and commits the winner of the cost/benefit
+//! rule, subject to hysteresis and cooldown). The legacy `--rebalance
+//! off|threshold` spelling maps onto the same policy layer and keeps its
+//! exact output. `--slo-ref-ms` audits SLO violations against a fixed
+//! target even when no policy runs (e.g. to score a scripted baseline).
+//! `--scenario steady` runs a fixed-k scenario for isolating the
+//! rebalancer; `--scenario flash` runs an unscripted flash-crowd churn
+//! spike that only a policy (or luck) can absorb.
 
 use anyhow::{bail, Context};
-use egs::coordinator::{run_scenario, ControllerConfig, RebalanceConfig};
+use egs::coordinator::{Controller, PolicyConfig, RunConfig, ScalingAction, SloConfig};
 use egs::engine::{apps, Engine};
 use egs::graph::{datasets, io, stats};
 use egs::metrics::table::{f2, secs, Table};
@@ -238,7 +247,14 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
         "out" => Scenario::scale_out(k, steps, period),
         "in" => Scenario::scale_in(k, steps, period),
         "steady" => Scenario::steady(k, (steps as u32 + 1) * period),
-        other => bail!("unknown scenario {other} (out|in|steady)"),
+        "flash" => Scenario::flash_crowd(
+            k,
+            period,
+            period,
+            2 * period,
+            args.get_parse::<u32>("burst-inserts", 2000),
+        ),
+        other => bail!("unknown scenario {other} (out|in|steady|flash)"),
     };
     let mut net_model = NetModelConfig::default();
     if let Some(nm) = args.get("net-model") {
@@ -251,27 +267,37 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
     if args.flag("no-overlap") {
         net_model.overlap = false;
     }
-    let rebalance = match args.get_or("rebalance", "off").as_str() {
-        "off" => RebalanceConfig::off(),
-        "threshold" => {
-            RebalanceConfig::threshold(args.get_parse::<f64>("rebalance-threshold", 1.15))
+    let rebalance_threshold = args.get_parse::<f64>("rebalance-threshold", 1.15);
+    let policy = match args.get("policy") {
+        Some("off") => PolicyConfig::Off,
+        Some("threshold") => PolicyConfig::Threshold { threshold: rebalance_threshold },
+        Some("slo") => {
+            PolicyConfig::Slo(SloConfig::new(args.get_parse::<f64>("slo-p99-ms", 5.0)))
         }
-        other => bail!("unknown rebalance policy {other} (off|threshold)"),
+        Some(other) => bail!("unknown policy {other} (off|threshold|slo)"),
+        // legacy spelling: --rebalance maps onto the policy layer
+        None => match args.get_or("rebalance", "off").as_str() {
+            "off" => PolicyConfig::Off,
+            "threshold" => PolicyConfig::Threshold { threshold: rebalance_threshold },
+            other => bail!("unknown rebalance policy {other} (off|threshold)"),
+        },
     };
-    let cfg = ControllerConfig {
-        method: args.get_or("method", "cep"),
-        net: Network::gbps(args.get_parse::<f64>("net-gbps", 8.0)),
-        net_model,
-        threads: args.thread_config(),
-        rebalance,
-        ..Default::default()
-    };
+    let mut cfg = RunConfig::new()
+        .method(&args.get_or("method", "cep"))
+        .net(Network::gbps(args.get_parse::<f64>("net-gbps", 8.0)))
+        .net_model(net_model)
+        .seed(seed)
+        .threads(args.thread_config())
+        .policy(policy);
+    if args.get("slo-ref-ms").is_some() {
+        cfg = cfg.slo_ref_ms(args.get_parse::<f64>("slo-ref-ms", 0.0));
+    }
     let trace_out = args.get("trace-out");
     let mut factory = backend_factory(args)?;
     if trace_out.is_some() {
         egs::obs::begin();
     }
-    let out = run_scenario(&ordered, &scenario, &cfg, &mut *factory)?;
+    let out = Controller::drive(ordered, &scenario, &cfg, &mut *factory)?;
     let trace = if trace_out.is_some() { egs::obs::end() } else { None };
     let mut t = Table::new(
         &format!(
@@ -302,7 +328,16 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
             );
         }
     }
-    if cfg.rebalance.is_threshold() {
+    if !scenario.churn.is_empty() {
+        println!(
+            "  churn: {} batches in {}, {} compactions, {} live edges",
+            out.churn_events.len(),
+            secs(out.churn_s),
+            out.compactions,
+            out.live_edges
+        );
+    }
+    if matches!(cfg.policy, PolicyConfig::Threshold { .. }) {
         for r in &out.rebalances {
             println!(
                 "  rebalance @it{} k={}: imbalance {:.3} -> {:.3}, {} moves ({} edges), \
@@ -318,6 +353,42 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
             );
         }
         println!("  final metered imbalance: {:.3}", out.final_imbalance);
+    }
+    if matches!(cfg.policy, PolicyConfig::Slo(_)) {
+        for d in &out.decisions {
+            let what = match d.action {
+                ScalingAction::NoOp => continue,
+                ScalingAction::ScaleTo(k2) => format!("scale {}→{k2}", d.k),
+                ScalingAction::Nudge => "nudge".to_string(),
+            };
+            println!(
+                "  decision @it{} k={}: {what}, step {:.3} ms → predicted {:.3} ms \
+                 (cost {:.3} ms, {} candidates)",
+                d.at_iteration,
+                d.k,
+                d.step_ms,
+                d.predicted_step_ms,
+                d.predicted_cost_ms,
+                d.candidates.len()
+            );
+        }
+        let committed =
+            out.decisions.iter().filter(|d| d.action != ScalingAction::NoOp).count();
+        println!(
+            "  policy slo: {} decisions, {committed} committed, final k={}",
+            out.decisions.len(),
+            out.final_k
+        );
+    }
+    if let Some(slo) = out.slo_ref_ms {
+        println!(
+            "  SLO {slo:.3} ms: {} violations over {} iterations \
+             (modeled p50 {:.3} ms, p99 {:.3} ms)",
+            out.slo_violations,
+            scenario.total_iterations,
+            out.modeled_p50_ms,
+            out.modeled_p99_ms
+        );
     }
     println!(
         "  superstep latency: p50 {:.3} ms, p99 {:.3} ms over {} supersteps",

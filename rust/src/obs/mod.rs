@@ -40,7 +40,7 @@ pub mod trace;
 pub use hist::{HistSnapshot, Histogram};
 pub use registry::{Registry, RegistrySnapshot};
 pub use span::{
-    active, begin, capture, counter_add, end, gauge_set, hist_record, secs_to_ns, span,
-    SessionData, SpanGuard, SpanRecord,
+    active, begin, capture, counter_add, counter_value, end, gauge_set, gauge_value, hist_record,
+    hist_snapshot, secs_to_ns, span, SessionData, SpanGuard, SpanRecord,
 };
 pub use trace::{fingerprint, render_jsonl, write_jsonl, TRACE_SCHEMA};

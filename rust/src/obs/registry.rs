@@ -41,6 +41,22 @@ impl Registry {
         self.hists.entry(name).or_insert_with(Histogram::new).record(v);
     }
 
+    /// Current value of the named counter (`None` if never touched).
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    /// Current value of the named gauge (`None` if never set).
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Point-in-time snapshot of the named histogram (`None` if never
+    /// recorded into).
+    pub fn hist(&self, name: &str) -> Option<HistSnapshot> {
+        self.hists.get(name).map(|h| h.snapshot())
+    }
+
     /// Owned, name-sorted copy of every metric.
     pub fn snapshot(&self) -> RegistrySnapshot {
         RegistrySnapshot {

@@ -233,6 +233,26 @@ pub fn hist_record(name: &'static str, v: u64) {
     });
 }
 
+/// Current value of the session's named counter (`None` without a
+/// session or before first touch). The sensor-side read API: policies
+/// sample mid-run without draining the session.
+pub fn counter_value(name: &str) -> Option<u64> {
+    SESSION.with(|s| s.borrow().as_ref().and_then(|sess| sess.registry.counter(name)))
+}
+
+/// Current value of the session's named gauge (`None` without a session
+/// or before first set).
+pub fn gauge_value(name: &str) -> Option<f64> {
+    SESSION.with(|s| s.borrow().as_ref().and_then(|sess| sess.registry.gauge(name)))
+}
+
+/// Point-in-time snapshot of the session's named histogram (`None`
+/// without a session or before the first record). Quantiles come from
+/// the snapshot: `hist_snapshot("superstep_modeled_ns")?.quantile(0.99)`.
+pub fn hist_snapshot(name: &str) -> Option<crate::obs::HistSnapshot> {
+    SESSION.with(|s| s.borrow().as_ref().and_then(|sess| sess.registry.hist(name)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +308,26 @@ mod tests {
         gauge_set("g", 1.0);
         hist_record("h", 1);
         assert!(end().is_none());
+    }
+
+    #[test]
+    fn mid_session_reads_see_live_values() {
+        assert!(counter_value("splices").is_none(), "no session → None");
+        let ((), _) = capture(|| {
+            assert!(counter_value("splices").is_none(), "untouched → None");
+            counter_add("splices", 2);
+            assert_eq!(counter_value("splices"), Some(2));
+            counter_add("splices", 3);
+            assert_eq!(counter_value("splices"), Some(5));
+            gauge_set("imbalance", 1.25);
+            assert_eq!(gauge_value("imbalance"), Some(1.25));
+            hist_record("lat", 100);
+            hist_record("lat", 200);
+            let h = hist_snapshot("lat").expect("recorded");
+            assert_eq!(h.count, 2);
+            assert!(hist_snapshot("other").is_none());
+        });
+        assert!(hist_snapshot("lat").is_none(), "session drained → None");
     }
 
     #[test]

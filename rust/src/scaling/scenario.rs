@@ -32,7 +32,8 @@ pub struct ChurnEvent {
 }
 
 /// A scripted scenario: initial k plus sequences of scale and churn
-/// events.
+/// events, optionally annotated with a per-iteration price trace
+/// ([`Scenario::with_prices`]) the SLO policy can sense.
 #[derive(Clone, Debug)]
 pub struct Scenario {
     /// descriptive name ("scale-out", "churn+scale-out", ...)
@@ -43,6 +44,10 @@ pub struct Scenario {
     pub events: Vec<ScaleEvent>,
     /// churn events in firing order (empty for the static scenarios)
     pub churn: Vec<ChurnEvent>,
+    /// spot price per iteration ($/partition-hour or any consistent
+    /// unit); indexed by iteration, clamped to the last entry, empty =
+    /// price 0 everywhere. Pure sensor input — prices never fire events
+    pub prices: Vec<f64>,
     /// total application iterations to run
     pub total_iterations: u32,
 }
@@ -58,6 +63,7 @@ impl Scenario {
             initial_k: k0,
             events,
             churn: Vec::new(),
+            prices: Vec::new(),
             total_iterations: (steps as u32 + 1) * period,
         }
     }
@@ -72,6 +78,7 @@ impl Scenario {
             initial_k: k0,
             events,
             churn: Vec::new(),
+            prices: Vec::new(),
             total_iterations: (steps as u32 + 1) * period,
         }
     }
@@ -85,6 +92,7 @@ impl Scenario {
             initial_k: k,
             events: Vec::new(),
             churn: Vec::new(),
+            prices: Vec::new(),
             total_iterations: iterations,
         }
     }
@@ -123,6 +131,39 @@ impl Scenario {
         Scenario::scale_out(k0, steps, period).with_churn(period.max(2) / 2, inserts, deletes)
     }
 
+    /// A flash crowd: `pre` calm iterations at `k0`, then a burst window
+    /// of `burst` iterations where every iteration ingests `inserts`
+    /// edges (insert-only — a traffic spike, not turnover), then `post`
+    /// iterations of decay churn at one tenth of the burst rate. No
+    /// scripted scale events: the load change is the whole point, and a
+    /// scaling policy (or an oracle script layered on top) must react.
+    pub fn flash_crowd(k0: usize, pre: u32, burst: u32, post: u32, inserts: u32) -> Scenario {
+        assert!(burst > 0, "a flash crowd needs a burst window");
+        let mut churn = Vec::new();
+        for it in pre..pre + burst {
+            churn.push(ChurnEvent { at_iteration: it, inserts, deletes: 0 });
+        }
+        let decay = (inserts / 10).max(1);
+        for it in pre + burst..pre + burst + post {
+            churn.push(ChurnEvent { at_iteration: it, inserts: decay, deletes: decay });
+        }
+        Scenario {
+            name: format!("flash-crowd k={k0} +{inserts}x{burst}"),
+            initial_k: k0,
+            events: Vec::new(),
+            churn,
+            prices: Vec::new(),
+            total_iterations: pre + burst + post,
+        }
+    }
+
+    /// Annotate the scenario with a per-iteration price trace (sensor
+    /// input for price-aware policies; see [`Scenario::price_at`]).
+    pub fn with_prices(mut self, prices: Vec<f64>) -> Scenario {
+        self.prices = prices;
+        self
+    }
+
     /// Scale event scheduled at iteration `it`, if any.
     pub fn event_at(&self, it: u32) -> Option<&ScaleEvent> {
         self.events.iter().find(|e| e.at_iteration == it)
@@ -141,6 +182,15 @@ impl Scenario {
     /// Total scripted deletions.
     pub fn total_deletes(&self) -> u64 {
         self.churn.iter().map(|c| c.deletes as u64).sum()
+    }
+
+    /// Spot price at iteration `it`: the trace entry, clamped to the
+    /// last one past the end; 0.0 when no trace is attached.
+    pub fn price_at(&self, it: u32) -> f64 {
+        match self.prices.get(it as usize) {
+            Some(p) => *p,
+            None => self.prices.last().copied().unwrap_or(0.0),
+        }
     }
 }
 
@@ -173,6 +223,37 @@ mod tests {
         assert_eq!(s.total_iterations, 12);
         assert!(s.events.is_empty() && s.churn.is_empty());
         assert!((0..12).all(|it| s.event_at(it).is_none() && s.churn_at(it).is_none()));
+    }
+
+    #[test]
+    fn flash_crowd_shapes_burst_and_decay() {
+        let s = Scenario::flash_crowd(3, 4, 3, 5, 200);
+        assert_eq!(s.initial_k, 3);
+        assert!(s.events.is_empty(), "the policy, not the script, must react");
+        assert_eq!(s.total_iterations, 12);
+        // calm window: no churn
+        assert!((0..4).all(|it| s.churn_at(it).is_none()));
+        // burst window: insert-only spikes
+        for it in 4..7 {
+            let c = s.churn_at(it).unwrap();
+            assert_eq!((c.inserts, c.deletes), (200, 0));
+        }
+        // decay window: one tenth, balanced turnover
+        for it in 7..12 {
+            let c = s.churn_at(it).unwrap();
+            assert_eq!((c.inserts, c.deletes), (20, 20));
+        }
+    }
+
+    #[test]
+    fn price_trace_clamps_to_last_entry() {
+        let s = Scenario::steady(4, 10);
+        assert_eq!(s.price_at(0), 0.0, "no trace, price 0 everywhere");
+        let s = s.with_prices(vec![1.0, 2.5, 0.5]);
+        assert_eq!(s.price_at(0), 1.0);
+        assert_eq!(s.price_at(1), 2.5);
+        assert_eq!(s.price_at(2), 0.5);
+        assert_eq!(s.price_at(9), 0.5, "clamped to the last entry");
     }
 
     #[test]

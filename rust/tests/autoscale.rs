@@ -1,0 +1,271 @@
+//! Acceptance suite of the SLO-driven autoscaling controller
+//! (`egs::coordinator::policy` + the unified `Controller::drive` loop).
+//!
+//! The contract under test, end to end on real scenarios:
+//!
+//! * on a **flash crowd** the fixed fleet violates a p99 SLO the policy
+//!   run meets (violations cut by better than half), at a total SCALE
+//!   blocking cost within 2× of a schedule-aware oracle script;
+//! * on a **spot-price spike** the policy sheds capacity (deadline
+//!   mode) without leaving the SLO;
+//! * `PolicyConfig::Threshold` is the legacy `--rebalance threshold`
+//!   path *verbatim*: every rebalance record bit-equal through the
+//!   deprecated shims and the unified driver.
+
+use egs::coordinator::{
+    Controller, PolicyConfig, RunConfig, RunReport, ScalingAction, SloConfig,
+};
+use egs::coordinator::{trigger, RebalanceRecord};
+use egs::graph::generators::{rmat, RmatParams};
+use egs::graph::Graph;
+use egs::ordering::geo::{self, GeoConfig};
+use egs::runtime::native::NativeBackend;
+use egs::scaling::netsim::NetModelConfig;
+use egs::scaling::scenario::{ScaleEvent, Scenario};
+use std::time::Duration;
+
+fn test_graph() -> Graph {
+    let raw = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() }, 4);
+    geo::order(&raw, &GeoConfig { seed: 7, ..Default::default() }).apply(&raw)
+}
+
+/// Modeled compute dominates the sensor (load moves the step latency)
+/// and provisioning is cheap (the cost/benefit rule prices migrations,
+/// not VM boots).
+fn base_cfg() -> RunConfig {
+    RunConfig::new()
+        .net_model(NetModelConfig { compute_ns_per_edge: 500.0, ..Default::default() })
+        .latency(egs::coordinator::provisioner::LatencyModel {
+            startup: Duration::from_micros(200),
+            teardown: Duration::from_micros(100),
+        })
+}
+
+fn drive(g: &Graph, scenario: &Scenario, cfg: &RunConfig) -> RunReport {
+    Controller::drive(g.clone(), scenario, cfg, |_| Box::new(NativeBackend::new())).unwrap()
+}
+
+fn violations(out: &RunReport, slo_ms: f64) -> usize {
+    out.modeled_steps_ms.iter().filter(|&&s| s > slo_ms).count()
+}
+
+fn scale_blocking_ms(out: &RunReport) -> f64 {
+    out.events.iter().map(|e| e.net_blocking_ms).sum()
+}
+
+/// The tentpole acceptance: on a flash crowd the SLO policy senses the
+/// breach, buys capacity through the cost/benefit rule, and meets a p99
+/// SLO the fixed fleet violates for the whole burst — at a SCALE
+/// blocking cost within 2× of an oracle script that knows the schedule.
+#[test]
+fn slo_policy_absorbs_flash_crowd_the_fixed_fleet_cannot() {
+    let g = test_graph();
+    let (k0, pre, burst, post) = (3usize, 4u32, 4u32, 8u32);
+    let flash = Scenario::flash_crowd(k0, pre, burst, post, 2_000);
+    let base = base_cfg();
+
+    // fixed fleet: no script, no policy — the SLO is derived from its
+    // calm window so the test adapts to the modeled cost scale
+    let fixed = drive(&g, &flash, &base);
+    let calm_max =
+        fixed.modeled_steps_ms[..pre as usize].iter().cloned().fold(0.0, f64::max);
+    assert!(calm_max > 0.0);
+    let slo_ms = calm_max * 1.6;
+    let fixed_viol = violations(&fixed, slo_ms);
+    assert!(
+        fixed_viol as u32 >= burst + post - 2,
+        "burst must push the fixed fleet over the SLO \
+         (got {fixed_viol} violations, slo {slo_ms:.3} ms)"
+    );
+
+    // oracle: a script that knows the burst schedule and walks the same
+    // bounded neighborhood the policy is allowed
+    let mut oracle_scn = flash.clone();
+    oracle_scn.events = vec![
+        ScaleEvent { at_iteration: pre, target_k: k0 + 2 },
+        ScaleEvent { at_iteration: pre + 2, target_k: k0 + 4 },
+    ];
+    let oracle = drive(&g, &oracle_scn, &base);
+
+    // the policy only senses: modeled step latency vs its target
+    let slo_cfg = base.clone().policy(PolicyConfig::Slo(
+        SloConfig::new(slo_ms).bounds(1, 8).cooldown(1).low_watermark(0.6),
+    ));
+    let adaptive = drive(&g, &flash, &slo_cfg);
+    let adaptive_viol = violations(&adaptive, slo_ms);
+
+    assert!(
+        adaptive_viol * 2 < fixed_viol,
+        "policy must cut SLO violations by better than half: \
+         {adaptive_viol} vs fixed {fixed_viol} (slo {slo_ms:.3} ms)"
+    );
+    assert!(adaptive.final_k > k0, "the policy must have bought capacity");
+    let committed: Vec<_> = adaptive
+        .decisions
+        .iter()
+        .filter(|d| matches!(d.action, ScalingAction::ScaleTo(_)))
+        .collect();
+    assert!(!committed.is_empty(), "no scale-out decision committed");
+    for d in &committed {
+        assert!(d.trigger & trigger::STEP_HIGH != 0, "scale-out without a breach trigger");
+        assert!(!d.candidates.is_empty(), "committed decision carries no candidate audit");
+        assert!(d.predicted_cost_ms >= 0.0 && d.predicted_step_ms > 0.0);
+    }
+    // every decision was patched with the latency it predicted (the last
+    // iteration's stays NaN only when it is the final superstep)
+    for d in adaptive.decisions.iter().rev().skip(1) {
+        assert!(!d.realized_step_ms.is_nan(), "decision @{} unpatched", d.at_iteration);
+    }
+
+    let oracle_blocking = scale_blocking_ms(&oracle);
+    let policy_blocking = scale_blocking_ms(&adaptive);
+    assert!(oracle_blocking > 0.0);
+    assert!(
+        policy_blocking <= 2.0 * oracle_blocking,
+        "SCALE blocking {policy_blocking:.3} ms must stay within 2x of the \
+         oracle's {oracle_blocking:.3} ms"
+    );
+}
+
+/// Deadline mode: a spot-price spike above the ceiling applies scale-in
+/// pressure, and the policy sheds capacity — but only to a k whose
+/// projected step still fits inside the SLO.
+#[test]
+fn price_spike_sheds_capacity_without_leaving_the_slo() {
+    let g = test_graph();
+    let k0 = 8usize;
+    let iters = 12u32;
+    let mut prices = vec![1.0; 4];
+    prices.resize(iters as usize, 2.0); // spike from iteration 4 on
+    let scenario = Scenario::steady(k0, iters).with_prices(prices);
+
+    let base = base_cfg();
+    let probe = drive(&g, &scenario, &base);
+    // generous SLO: capacity is ample, only the price should move the policy
+    let slo_ms = probe.modeled_p99_ms * 4.0;
+
+    let cfg = base.policy(PolicyConfig::Slo(
+        SloConfig::new(slo_ms)
+            .bounds(4, 12)
+            .cooldown(1)
+            .low_watermark(0.0) // idle trigger off: isolate the price trigger
+            .price_ceiling(1.5),
+    ));
+    let out = drive(&g, &scenario, &cfg);
+
+    assert!(out.final_k < k0, "price pressure must shed capacity");
+    let committed: Vec<_> = out
+        .decisions
+        .iter()
+        .filter(|d| matches!(d.action, ScalingAction::ScaleTo(_)))
+        .collect();
+    assert!(!committed.is_empty());
+    for d in &committed {
+        assert!(d.at_iteration >= 4, "scale-in before the price spike");
+        assert!(d.trigger & trigger::PRICE != 0, "scale-in without the price trigger");
+        assert!(d.chosen_k < d.k, "price pressure committed a scale-out");
+        assert!(
+            d.predicted_step_ms <= slo_ms,
+            "deadline mode left the SLO: predicted {:.3} ms > {slo_ms:.3} ms",
+            d.predicted_step_ms
+        );
+    }
+    // and the realized steps after shedding still fit the SLO
+    assert_eq!(violations(&out, slo_ms), 0, "shedding must not violate the SLO");
+}
+
+/// `--rebalance threshold` regression pin: the legacy shims and the
+/// unified driver with `PolicyConfig::Threshold` must produce bit-equal
+/// rebalance records and final imbalance on both substrates.
+#[test]
+#[allow(deprecated)]
+fn threshold_policy_is_the_legacy_rebalance_path_verbatim() {
+    use egs::coordinator::{
+        run_scenario, run_streaming, ControllerConfig, DriveMode, RebalanceConfig,
+        StreamingConfig,
+    };
+
+    let g = test_graph();
+    let fp = |rs: &[RebalanceRecord], final_imb: f64| -> Vec<u64> {
+        rs.iter()
+            .flat_map(|r| {
+                [
+                    r.at_iteration as u64,
+                    r.k as u64,
+                    r.imbalance_before.to_bits(),
+                    r.imbalance_after.to_bits(),
+                    r.moved_edges,
+                    r.range_moves as u64,
+                    r.layout_ranges as u64,
+                    r.net_blocking_ms.to_bits(),
+                    r.net_overlapped_ms.to_bits(),
+                ]
+            })
+            .chain([final_imb.to_bits()])
+            .collect()
+    };
+
+    // batch: pure comm-lane skew so the threshold trips on a power-law graph
+    let scenario = Scenario::steady(4, 6);
+    let skew = NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() };
+    let legacy_cfg = ControllerConfig {
+        net_model: skew,
+        rebalance: RebalanceConfig::threshold(1.01),
+        ..Default::default()
+    };
+    let legacy =
+        run_scenario(&g, &scenario, &legacy_cfg, |_| Box::new(NativeBackend::new())).unwrap();
+    let unified_cfg = RunConfig::new()
+        .net_model(skew)
+        .policy(PolicyConfig::Threshold { threshold: 1.01 })
+        .mode(DriveMode::Batch);
+    let unified = drive(&g, &scenario, &unified_cfg);
+    let reference = fp(&legacy.rebalances, legacy.final_imbalance);
+    assert!(reference.len() > 1, "threshold policy never fired");
+    assert_eq!(fp(&unified.rebalances, unified.final_imbalance), reference);
+    // every nudge surfaces in the unified decision audit too
+    assert_eq!(
+        unified.decisions.iter().filter(|d| d.action == ScalingAction::Nudge).count(),
+        unified.rebalances.len()
+    );
+
+    // streaming: churn + rescale interleaved with the nudges
+    let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
+    let geo_cfg = GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 7, ..Default::default() };
+    let legacy_cfg = StreamingConfig {
+        geo: geo_cfg,
+        net_model: skew,
+        rebalance: RebalanceConfig::threshold(1.01),
+        ..Default::default()
+    };
+    let legacy =
+        run_streaming(g.clone(), &scenario, &legacy_cfg, |_| Box::new(NativeBackend::new()))
+            .unwrap();
+    let unified_cfg = RunConfig::new()
+        .net_model(skew)
+        .geo(geo_cfg)
+        .policy(PolicyConfig::Threshold { threshold: 1.01 })
+        .mode(DriveMode::Streaming);
+    let unified = drive(&g, &scenario, &unified_cfg);
+    let reference = fp(&legacy.rebalances, legacy.final_imbalance);
+    assert!(reference.len() > 1, "streaming threshold policy never fired");
+    assert_eq!(fp(&unified.rebalances, unified.final_imbalance), reference);
+}
+
+/// The unified driver dispatches the substrate from the scenario: churn
+/// selects streaming (compactions, churn audit), no churn selects batch
+/// — and `DriveMode` overrides pin it either way.
+#[test]
+fn drive_mode_auto_dispatches_on_churn() {
+    let g = test_graph();
+    let base = base_cfg();
+
+    let batch = drive(&g, &Scenario::scale_out(3, 1, 3), &base);
+    assert!(batch.churn_events.is_empty());
+    assert_eq!(batch.live_edges, 0, "batch substrate reports no live-edge audit");
+
+    let streamed = drive(&g, &Scenario::interleaved(3, 1, 4, 40, 10), &base);
+    assert!(!streamed.churn_events.is_empty(), "churn must select the streaming substrate");
+    assert!(streamed.live_edges > 0);
+    assert!(streamed.final_rf.is_some());
+}

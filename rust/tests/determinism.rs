@@ -394,6 +394,50 @@ fn engine_state_is_thread_invariant_across_run_rescale_churn() {
     }
 }
 
+/// SLO policy decisions are bit-identical at widths 1/2/8 through the
+/// unified driver: the sensor snapshot reads only modeled costs and
+/// deterministic tallies, candidate pricing goes through width-invariant
+/// network models, and hysteresis state advances by iteration — so every
+/// `DecisionRecord` (trigger, action, candidate table, predictions,
+/// realized patches) must fingerprint identically no matter the width.
+#[test]
+fn policy_decisions_are_thread_invariant() {
+    use egs::coordinator::{Controller, PolicyConfig, RunConfig, ScalingAction, SloConfig};
+    use egs::scaling::netsim::NetModelConfig;
+    use egs::scaling::scenario::Scenario;
+
+    let raw = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() }, 4);
+    let g = egs::ordering::geo::order(&raw, &geo_cfg(1)).apply(&raw);
+    // insert-only burst over a calm window: modeled compute dominates, so
+    // the breach (and hence the decision sequence) is load-driven
+    let scenario = Scenario::flash_crowd(3, 4, 4, 8, 2_000);
+
+    let run = |w: usize| -> (Vec<u64>, usize) {
+        let cfg = RunConfig::new()
+            .net_model(NetModelConfig { compute_ns_per_edge: 500.0, ..Default::default() })
+            .geo(geo_cfg(w))
+            .threads(ThreadConfig::new(w))
+            .policy(PolicyConfig::Slo(
+                SloConfig::new(1.0).bounds(1, 8).cooldown(1).low_watermark(0.6),
+            ));
+        let out =
+            Controller::drive(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+                .unwrap();
+        let committed = out
+            .decisions
+            .iter()
+            .filter(|d| matches!(d.action, ScalingAction::ScaleTo(_)))
+            .count();
+        (out.decisions.iter().flat_map(|d| d.fingerprint_words()).collect(), committed)
+    };
+    let (reference, committed) = run(1);
+    assert!(!reference.is_empty(), "policy produced no decision audit");
+    assert!(committed > 0, "policy never committed a scale-out");
+    for w in WIDTHS {
+        assert_eq!(run(w), (reference.clone(), committed), "width {w}: decisions diverge");
+    }
+}
+
 /// The observability span stream's *logical projection* — ids, nesting,
 /// names, tally counters — is bit-identical at widths 1/2/8 through both
 /// controller paths. Wall times differ run to run, but
