@@ -19,7 +19,8 @@
 //!   "net_model": <"closed"|"emulated"|null>, "net_ms": <f64|null>,
 //!   "imbalance": <f64|null>, "rebalance_ms": <f64|null>,
 //!   "p50_ms": <f64|null>, "p99_ms": <f64|null>,
-//!   "slo_violations": <u64|null>, "decisions": <u64|null>}`.
+//!   "slo_violations": <u64|null>, "decisions": <u64|null>,
+//!   "cache_hit_rate": <f64|null>, "peak_resident_bytes": <u64|null>}`.
 //!   `layout_ranges`/`layout_bytes` report the interval-set ownership
 //!   metadata resident in a `PartitionLayout` after the measured run
 //!   (`null` for benches without a layout). `net_model`/`net_ms` report
@@ -33,6 +34,10 @@
 //!   `slo_violations`/`decisions` report autoscaling-policy telemetry:
 //!   modeled steps over the SLO reference and policy decisions taken
 //!   (`null` for benches without an SLO audit).
+//!   `cache_hit_rate`/`peak_resident_bytes` report page-cache telemetry
+//!   from out-of-core (`PagedEdges`) scenarios: the fraction of edge
+//!   reads served without a disk fill and the high-water mark of cached
+//!   page bytes (`null` for resident benches).
 //!   Rows are recorded with the fluent [`BenchLog::record`] builder; the
 //!   legacy `row_*` helpers delegate to it. All benches share this
 //!   schema; CI points every bench at the same `BENCH_ci.json` and diffs
@@ -97,6 +102,7 @@ struct Row {
     rebalance_ms: Option<f64>,
     latency: Option<(f64, f64)>,
     slo: Option<(u64, u64)>,
+    cache: Option<(f64, u64)>,
 }
 
 /// Row collector for one bench binary. Call [`BenchLog::record`] per
@@ -160,6 +166,15 @@ impl RowMut<'_> {
         self.row.slo = Some((violations, decisions));
         self
     }
+
+    /// Attach page-cache telemetry from an out-of-core run: fraction of
+    /// edge reads served from resident pages and the high-water mark of
+    /// cached page bytes (`PagedEdges::cache_hit_rate` /
+    /// `peak_resident_bytes`).
+    pub fn cache(self, hit_rate: f64, peak_resident_bytes: u64) -> Self {
+        self.row.cache = Some((hit_rate, peak_resident_bytes));
+        self
+    }
 }
 
 impl BenchLog {
@@ -181,6 +196,7 @@ impl BenchLog {
             rebalance_ms: None,
             latency: None,
             slo: None,
+            cache: None,
         });
         RowMut { row: self.rows.last_mut().expect("just pushed") }
     }
@@ -313,6 +329,10 @@ impl BenchLog {
                 Some((v, d)) => (v.to_string(), d.to_string()),
                 None => ("null".into(), "null".into()),
             };
+            let (hit_s, peak_s) = match row.cache {
+                Some((h, p)) => (format!("{h:.4}"), p.to_string()),
+                None => ("null".into(), "null".into()),
+            };
             writeln!(
                 fh,
                 "{{\"v\":{ROW_SCHEMA},\"bench\":\"{}\",\"scenario\":\"{}\",\
@@ -322,7 +342,8 @@ impl BenchLog {
                  \"net_model\":{},\"net_ms\":{},\
                  \"imbalance\":{},\"rebalance_ms\":{},\
                  \"p50_ms\":{},\"p99_ms\":{},\
-                 \"slo_violations\":{},\"decisions\":{}}}",
+                 \"slo_violations\":{},\"decisions\":{},\
+                 \"cache_hit_rate\":{},\"peak_resident_bytes\":{}}}",
                 self.bench,
                 row.scenario,
                 row.wall_ms,
@@ -336,7 +357,9 @@ impl BenchLog {
                 p50_s,
                 p99_s,
                 slo_s,
-                dec_s
+                dec_s,
+                hit_s,
+                peak_s
             )
             .expect("write bench row");
         }

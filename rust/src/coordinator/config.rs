@@ -12,11 +12,13 @@
 
 use super::policy::{ScalingPolicy, SloConfig, SloPolicy, ThresholdPolicy};
 use super::provisioner::LatencyModel;
+use crate::graph::PagedConfig;
 use crate::ordering::geo::GeoConfig;
 use crate::par::ThreadConfig;
 use crate::scaling::netsim::NetModelConfig;
 use crate::scaling::network::Network;
 use crate::stream::CompactionPolicy;
+use std::path::PathBuf;
 
 /// Which substrate [`crate::coordinator::Controller::drive`] runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -130,6 +132,17 @@ pub struct RunConfig {
     /// additionally price a fresh GEO+CEP repartition of the final
     /// mutated graph and report its RF (streaming)
     pub measure_fresh_baseline: bool,
+    /// out-of-core spill directory (CLI: `--spill <dir>`): when set, the
+    /// batch substrate writes the edge list to a `.egs` file under this
+    /// directory at init and serves every edge read through a
+    /// fixed-budget page cache ([`crate::graph::PagedEdges`]) for the
+    /// rest of the run — the resident edge list and CSR are dropped.
+    /// Batch substrate with chunk-contiguous methods only.
+    pub spill: Option<PathBuf>,
+    /// page-cache budget in MiB for the spilled store (CLI:
+    /// `--page-cache-mb`); `None` defers to `PALLAS_PAGE_CACHE_MB`,
+    /// then the 64 MiB default
+    pub page_cache_mb: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -150,6 +163,8 @@ impl Default for RunConfig {
             flush_at_end: true,
             audit_rf: false,
             measure_fresh_baseline: false,
+            spill: None,
+            page_cache_mb: None,
         }
     }
 }
@@ -251,6 +266,30 @@ impl RunConfig {
         self
     }
 
+    /// Spill the batch substrate's edge list under `dir` and run
+    /// out-of-core (see the `spill` field).
+    pub fn spill(mut self, dir: impl Into<PathBuf>) -> RunConfig {
+        self.spill = Some(dir.into());
+        self
+    }
+
+    /// Set the page-cache budget (MiB) for `--spill` runs.
+    pub fn page_cache_mb(mut self, mb: usize) -> RunConfig {
+        self.page_cache_mb = Some(mb);
+        self
+    }
+
+    /// The paged-store geometry a `--spill` run opens the spill file
+    /// with: env-seeded defaults (`PALLAS_PAGE_CACHE_MB`) with the
+    /// explicit `page_cache_mb` override on top.
+    pub fn paged_config(&self) -> PagedConfig {
+        let cfg = PagedConfig::from_env();
+        match self.page_cache_mb {
+            Some(mb) => cfg.with_cache_mb(mb),
+            None => cfg,
+        }
+    }
+
     /// The SLO reference (milliseconds) violations are counted against:
     /// the explicit `slo_ref_ms` if set, else the policy's own target.
     pub fn slo_reference_ms(&self) -> Option<f64> {
@@ -286,6 +325,16 @@ mod tests {
         assert_eq!(cfg.slo_reference_ms(), Some(5.0));
         let cfg = cfg.slo_ref_ms(9.0);
         assert_eq!(cfg.slo_reference_ms(), Some(9.0));
+    }
+
+    #[test]
+    fn spill_builder_sets_paged_geometry() {
+        let cfg = RunConfig::new();
+        assert!(cfg.spill.is_none() && cfg.page_cache_mb.is_none());
+        let cfg = cfg.spill("/tmp/egs-spill").page_cache_mb(8);
+        assert_eq!(cfg.spill.as_deref(), Some(std::path::Path::new("/tmp/egs-spill")));
+        // the explicit override wins over any PALLAS_PAGE_CACHE_MB env
+        assert_eq!(cfg.paged_config().cache_bytes, 8 << 20);
     }
 
     #[test]

@@ -34,7 +34,7 @@ use super::policy::{
 use super::provisioner::{LatencyModel, Provisioner};
 use super::state::ClusterState;
 use crate::engine::{apps::pagerank, Combine, Engine};
-use crate::graph::Graph;
+use crate::graph::{EdgeSource, Graph, PagedEdges};
 use crate::obs;
 use crate::partition::bvc::BvcState;
 use crate::partition::cep::Cep;
@@ -50,7 +50,7 @@ use crate::scaling::scenario::Scenario;
 use crate::stream::{quality as stream_quality, ChurnPlan, MutationBatch, StagedGraph};
 use crate::util::rng::Rng;
 use crate::Result;
-use anyhow::bail;
+use anyhow::{bail, Context};
 use std::time::{Duration, Instant};
 
 /// The unified controller: [`Controller::drive`] replaces the
@@ -131,6 +131,13 @@ pub struct RunReport {
     /// per-iteration policy decision audit (empty when the policy is
     /// off)
     pub decisions: Vec<DecisionRecord>,
+    /// page-cache hit rate of the spilled edge store (`--spill` batch
+    /// runs only; interleaving-dependent — never feed it into anything
+    /// the cross-width fingerprint covers)
+    pub cache_hit_rate: Option<f64>,
+    /// high-water mark of the spilled store's page-cache bytes
+    /// (`--spill` batch runs only)
+    pub peak_resident_bytes: Option<u64>,
 }
 
 impl From<RunReport> for RunBreakdown {
@@ -222,12 +229,51 @@ impl ActiveAssignment {
     }
 }
 
+/// Edge substrate of the batch path: the resident graph, or its
+/// out-of-core paged spill (`--spill`) — the engine, migration splices
+/// and quality sweeps all consume [`EdgeSource`], so the two are
+/// interchangeable bit for bit; only the resident footprint differs.
+pub(crate) enum BatchEdges {
+    /// the in-memory graph (edge list + CSR)
+    Resident(Graph),
+    /// the paged spill; the in-memory graph was dropped at init
+    Paged(Box<PagedEdges>),
+}
+
+impl BatchEdges {
+    /// The [`EdgeSource`] the engine and splice paths read from.
+    fn source(&self) -> &(dyn EdgeSource + Sync) {
+        match self {
+            BatchEdges::Resident(g) => g,
+            BatchEdges::Paged(p) => p.as_ref(),
+        }
+    }
+
+    /// The resident graph, when it survived init (no spill). Stateless
+    /// methods repartition from it on every rescale, so spilled runs
+    /// reject them up front.
+    fn resident(&self) -> Option<&Graph> {
+        match self {
+            BatchEdges::Resident(g) => Some(g),
+            BatchEdges::Paged(_) => None,
+        }
+    }
+
+    /// The paged spill, when one is active.
+    fn paged(&self) -> Option<&PagedEdges> {
+        match self {
+            BatchEdges::Resident(_) => None,
+            BatchEdges::Paged(p) => Some(p),
+        }
+    }
+}
+
 /// What the driver runs over: the immutable batch graph with its method
 /// state, or the staged streaming graph (CEP-native) with its optional
 /// weighted chunk boundaries.
 enum Substrate {
     Batch {
-        g: Graph,
+        edges: BatchEdges,
         method: MethodState,
         assignment: ActiveAssignment,
     },
@@ -265,6 +311,12 @@ impl Controller {
         if streaming && cfg.method != "cep" {
             bail!("streaming substrate is CEP-native; method {} unsupported", cfg.method);
         }
+        if streaming && cfg.spill.is_some() {
+            bail!(
+                "--spill runs on the batch substrate only (mirror a staged graph with \
+                 StagedGraph::spill instead)"
+            );
+        }
         let mut k = scenario.initial_k;
         let mut cluster = ClusterState::new(k);
         let mut rng = Rng::new(cfg.seed);
@@ -301,29 +353,38 @@ impl Controller {
                 other => bail!("unknown scaling method {other}"),
             };
             let assignment = initial_assignment(&g, &method, &cfg.method, k);
-            let engine = Engine::new(&g, assignment.as_assignment(), &mut backend_for)?
+            let edges = match cfg.spill.as_ref() {
+                Some(dir) => {
+                    if matches!(method, MethodState::Stateless) {
+                        bail!(
+                            "--spill requires a chunk-contiguous method (cep|bvc); \
+                             {} repartitions from the resident graph",
+                            cfg.method
+                        );
+                    }
+                    std::fs::create_dir_all(dir)
+                        .with_context(|| format!("create spill dir {}", dir.display()))?;
+                    let path = dir.join(format!("{}-k{k}-s{}.egs", scenario.name, cfg.seed));
+                    let pe = PagedEdges::spill(&g, &path, cfg.paged_config())?;
+                    drop(g); // edge list + CSR released: bounded resident set
+                    BatchEdges::Paged(Box::new(pe))
+                }
+                None => BatchEdges::Resident(g),
+            };
+            let engine = Engine::new(edges.source(), assignment.as_assignment(), &mut backend_for)?
                 .with_threads(cfg.threads);
-            (Substrate::Batch { g, method, assignment }, engine)
+            (Substrate::Batch { edges, method, assignment }, engine)
         };
         let mut init_s = t_init.elapsed().as_secs_f64() + provisioner.accounted().as_secs_f64();
 
         // ---- application state (PageRank), survives churn and rescales
         let mut n = match &substrate {
-            Substrate::Batch { g, .. } => g.num_vertices(),
+            Substrate::Batch { edges, .. } => edges.source().num_vertices(),
             Substrate::Stream { sg, .. } => sg.num_vertices(),
         };
         let mut ranks = vec![1.0f32 / n.max(1) as f32; n];
         let mut aux: Vec<f32> = match &substrate {
-            Substrate::Batch { g, .. } => (0..n as u32)
-                .map(|v| {
-                    let d = g.degree(v);
-                    if d == 0 {
-                        0.0
-                    } else {
-                        1.0 / d as f32
-                    }
-                })
-                .collect(),
+            Substrate::Batch { edges, .. } => inv_degrees(edges),
             Substrate::Stream { sg, .. } => (0..n as u32)
                 .map(|v| {
                     let d = sg.degree(v);
@@ -650,6 +711,20 @@ impl Controller {
             Substrate::Batch { .. } => (None, None, 0, 0),
         };
 
+        // ---- paged-substrate telemetry: published into the metrics
+        // registry (excluded from the cross-width span fingerprint) and
+        // surfaced on the report
+        let (cache_hit_rate, peak_resident_bytes) = match &substrate {
+            Substrate::Batch { edges, .. } => match edges.paged() {
+                Some(pe) => {
+                    pe.publish_obs();
+                    (Some(pe.cache_hit_rate()), Some(pe.peak_resident_bytes()))
+                }
+                None => (None, None),
+            },
+            Substrate::Stream { .. } => (None, None),
+        };
+
         let ss = superstep_hist.snapshot();
         let mss = modeled_hist.snapshot();
         scn.add("supersteps", ss.count);
@@ -696,8 +771,34 @@ impl Controller {
             churn_events: churn_log,
             rebalances: rebalance_log,
             decisions,
+            cache_hit_rate,
+            peak_resident_bytes,
         })
     }
+}
+
+/// PageRank's 1/degree auxiliary vector for the batch substrate. The
+/// resident graph answers from its CSR; the paged spill derives degrees
+/// with one sequential (readahead-friendly) edge scan — O(|V|) memory,
+/// never a CSR. Identical values either way (no self loops, each
+/// undirected edge stored once).
+fn inv_degrees(edges: &BatchEdges) -> Vec<f32> {
+    let deg: Vec<u32> = match edges {
+        BatchEdges::Resident(g) => {
+            (0..g.num_vertices() as u32).map(|v| g.degree(v) as u32).collect()
+        }
+        BatchEdges::Paged(p) => {
+            let src: &PagedEdges = p;
+            let mut deg = vec![0u32; EdgeSource::num_vertices(src)];
+            for id in 0..EdgeSource::num_edges(src) as u64 {
+                let e = src.edge(id);
+                deg[e.u as usize] += 1;
+                deg[e.v as usize] += 1;
+            }
+            deg
+        }
+    };
+    deg.iter().map(|&d| if d == 0 { 0.0 } else { 1.0 / d as f32 }).collect()
 }
 
 /// Execute one rescale to `target_k` on either substrate: derive the
@@ -729,10 +830,10 @@ where
     let from_k = *k;
     let t_scale = Instant::now();
     let (migrated, range_moves, cost, prov) = match substrate {
-        Substrate::Batch { g, method, assignment } => {
+        Substrate::Batch { edges, method, assignment } => {
             let (plan, new_assignment) = {
                 let psp = obs::span("phase:plan-derive");
-                let r = plan_rescale(g, method, assignment, &cfg.method, target_k);
+                let r = plan_rescale(edges.resident(), method, assignment, &cfg.method, target_k);
                 psp.add("range_moves", r.0.num_moves() as u64);
                 r
             };
@@ -763,7 +864,12 @@ where
             }
             let prov = provisioner.resize_to(target_k, cluster.epoch + 1);
             // execute the plan: range-based transfer, touched workers only
-            engine.apply_migration(&*g, &plan, new_assignment.as_assignment(), &mut *backend_for)?;
+            engine.apply_migration(
+                edges.source(),
+                &plan,
+                new_assignment.as_assignment(),
+                &mut *backend_for,
+            )?;
             *assignment = new_assignment;
             (migrated, plan.num_moves(), cost, prov)
         }
@@ -877,8 +983,8 @@ where
     let cost = netsim::price_plan(&cfg.net, &cfg.net_model, &plan, k, cfg.value_bytes, app.as_ref());
     let view = WeightedCepView::from_bounds(new_bounds.clone());
     match substrate {
-        Substrate::Batch { g, assignment, .. } => {
-            engine.apply_migration(&*g, &plan, &view, &mut *backend_for)?;
+        Substrate::Batch { edges, assignment, .. } => {
+            engine.apply_migration(edges.source(), &plan, &view, &mut *backend_for)?;
             *assignment = ActiveAssignment::Weighted(view);
         }
         Substrate::Stream { sg, wbounds } => {
@@ -1008,8 +1114,10 @@ fn initial_assignment(
 /// plus the new active assignment. For CEP this is O(k + k') chunk
 /// metadata (a rescale resets any skew-nudged boundaries to the uniform
 /// grid of the new k); BVC and the stateless methods diff per edge.
+/// `g` is `None` on spilled runs — only the stateless methods need the
+/// resident graph, and init rejects the spill + stateless combination.
 fn plan_rescale(
-    g: &Graph,
+    g: Option<&Graph>,
     state: &mut MethodState,
     current: &ActiveAssignment,
     method: &str,
@@ -1039,6 +1147,7 @@ fn plan_rescale(
             )
         }
         MethodState::Stateless => {
+            let g = g.expect("stateless methods keep the graph resident");
             let after = stateless_partition(g, method, target_k);
             (
                 MigrationPlan::diff(current.as_assignment(), &after),

@@ -58,8 +58,9 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Build from an edge source (a [`crate::graph::Graph`] or a streaming
-    /// [`crate::stream::StagedGraph`]) and any partition assignment view
+    /// Build from an edge source (a [`crate::graph::Graph`], a streaming
+    /// [`crate::stream::StagedGraph`], or an out-of-core
+    /// [`crate::graph::PagedEdges`]) and any partition assignment view
     /// (materialized vector or O(1) [`crate::partition::CepView`]).
     /// `backend_for` is invoked once per partition (clone an
     /// [`crate::runtime::executor::XlaBackend`] handle or create fresh

@@ -21,7 +21,20 @@ use anyhow::{bail, Context};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-const MAGIC: u32 = 0x4547_5331; // "EGS1"
+pub(crate) const MAGIC: u32 = 0x4547_5331; // "EGS1"
+
+/// Fixed byte length of the `.egs` header (magic, version, |V|, |E|) —
+/// edge `i` of the physical list lives at byte `HEADER_BYTES + 8 * i`,
+/// which is what lets [`super::paged::PagedEdges`] map page indices to
+/// contiguous edge-id ranges with pure arithmetic.
+pub(crate) const HEADER_BYTES: u64 = 20;
+
+/// Fixed-size staging buffer for binary IO: loads and saves stream the
+/// edge section through this much memory instead of materializing a
+/// second `|E| * 8`-byte copy next to the edge list (which doubled the
+/// peak RSS of every load). Always a multiple of 8 so full edges never
+/// straddle a refill.
+const IO_BUF_BYTES: usize = 1 << 20;
 
 /// A decoded `.egs` file with its streaming state (v1 files decode with an
 /// empty tail and no tombstones).
@@ -68,17 +81,16 @@ pub fn save_text(g: &Graph, path: &Path) -> Result<()> {
 /// Save the (ordered) edge list in the binary `.egs` format.
 pub fn save_binary(g: &Graph, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path)?;
-    let mut w = BufWriter::new(f);
+    let mut w = BufWriter::with_capacity(IO_BUF_BYTES, f);
     w.write_all(&MAGIC.to_le_bytes())?;
     w.write_all(&1u32.to_le_bytes())?; // version
     w.write_all(&(g.num_vertices() as u32).to_le_bytes())?;
     w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
-    let mut buf = Vec::with_capacity(g.num_edges() * 8);
     for e in g.edges().iter() {
-        buf.extend_from_slice(&e.u.to_le_bytes());
-        buf.extend_from_slice(&e.v.to_le_bytes());
+        w.write_all(&e.u.to_le_bytes())?;
+        w.write_all(&e.v.to_le_bytes())?;
     }
-    w.write_all(&buf)?;
+    w.flush()?;
     Ok(())
 }
 
@@ -96,17 +108,15 @@ pub fn save_binary_v2(
         bail!("staged tail {staged_len} longer than edge list {ne}");
     }
     let f = std::fs::File::create(path)?;
-    let mut w = BufWriter::new(f);
+    let mut w = BufWriter::with_capacity(IO_BUF_BYTES, f);
     w.write_all(&MAGIC.to_le_bytes())?;
     w.write_all(&2u32.to_le_bytes())?; // version
     w.write_all(&(g.num_vertices() as u32).to_le_bytes())?;
     w.write_all(&ne.to_le_bytes())?;
-    let mut buf = Vec::with_capacity(g.num_edges() * 8);
     for e in g.edges().iter() {
-        buf.extend_from_slice(&e.u.to_le_bytes());
-        buf.extend_from_slice(&e.v.to_le_bytes());
+        w.write_all(&e.u.to_le_bytes())?;
+        w.write_all(&e.v.to_le_bytes())?;
     }
-    w.write_all(&buf)?;
     w.write_all(&staged_len.to_le_bytes())?;
     let nwords = ne.div_ceil(64);
     let mut words = vec![0u64; nwords as usize];
@@ -120,6 +130,7 @@ pub fn save_binary_v2(
     for word in words {
         w.write_all(&word.to_le_bytes())?;
     }
+    w.flush()?;
     Ok(())
 }
 
@@ -162,16 +173,7 @@ pub fn load_binary_v2(path: &Path) -> Result<EgsSnapshot> {
     }
     let nv = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
     let ne = u64::from_le_bytes(hdr[12..20].try_into().unwrap()) as usize;
-    let mut buf = vec![0u8; ne * 8];
-    f.read_exact(&mut buf)?;
-    let mut edges: Vec<Edge> = Vec::with_capacity(ne);
-    let mut max_v = 0usize;
-    for c in buf.chunks_exact(8) {
-        let u = u32::from_le_bytes(c[0..4].try_into().unwrap());
-        let v = u32::from_le_bytes(c[4..8].try_into().unwrap());
-        max_v = max_v.max(u.max(v) as usize + 1);
-        edges.push(Edge::new(u, v));
-    }
+    let (edges, max_v) = stream_edges(&mut f, ne, IO_BUF_BYTES)?;
     let n = nv.max(max_v);
     let el = EdgeList::from_vec(edges);
     let csr = Csr::build(n, &el);
@@ -191,24 +193,57 @@ pub fn load_binary_v2(path: &Path) -> Result<EgsSnapshot> {
         if nwords != (ne as u64).div_ceil(64) {
             bail!("tombstone bitmap has {nwords} words for {ne} edges");
         }
-        let mut words = vec![0u8; nwords as usize * 8];
-        f.read_exact(&mut words)?;
         let mut tombstones = Vec::new();
-        for (wi, c) in words.chunks_exact(8).enumerate() {
-            let mut word = u64::from_le_bytes(c.try_into().unwrap());
-            while word != 0 {
-                let bit = word.trailing_zeros() as u64;
-                let id = wi as u64 * 64 + bit;
-                if id >= ne as u64 {
-                    bail!("tombstone id {id} beyond edge list {ne}");
+        let mut buf = vec![0u8; IO_BUF_BYTES.min((nwords as usize * 8).max(8))];
+        let mut wi = 0u64;
+        let mut remaining = nwords as usize * 8;
+        while remaining > 0 {
+            let take = buf.len().min(remaining);
+            f.read_exact(&mut buf[..take])?;
+            for c in buf[..take].chunks_exact(8) {
+                let mut word = u64::from_le_bytes(c.try_into().unwrap());
+                while word != 0 {
+                    let bit = word.trailing_zeros() as u64;
+                    let id = wi * 64 + bit;
+                    if id >= ne as u64 {
+                        bail!("tombstone id {id} beyond edge list {ne}");
+                    }
+                    tombstones.push(id);
+                    word &= word - 1;
                 }
-                tombstones.push(id);
-                word &= word - 1;
+                wi += 1;
             }
+            remaining -= take;
         }
         (staged_len, tombstones)
     };
     Ok(EgsSnapshot { graph, staged_len, tombstones })
+}
+
+/// Decode `ne` edges from `r` through a fixed-size staging buffer of
+/// `buf_bytes` (clamped to a positive multiple of 8, so an edge never
+/// straddles a refill). Returns the edges plus the dense vertex-space
+/// size implied by the largest endpoint seen. Peak transient memory is
+/// `buf_bytes`, independent of `ne` — the whole-file slurp it replaces
+/// held a second `ne * 8`-byte copy next to the edge vector.
+fn stream_edges<R: Read>(r: &mut R, ne: usize, buf_bytes: usize) -> Result<(Vec<Edge>, usize)> {
+    let buf_bytes = (buf_bytes / 8).max(1) * 8;
+    let mut buf = vec![0u8; buf_bytes.min((ne * 8).max(8))];
+    let mut edges: Vec<Edge> = Vec::with_capacity(ne);
+    let mut max_v = 0usize;
+    let mut remaining = ne * 8;
+    while remaining > 0 {
+        let take = buf.len().min(remaining);
+        r.read_exact(&mut buf[..take])?;
+        for c in buf[..take].chunks_exact(8) {
+            let u = u32::from_le_bytes(c[0..4].try_into().unwrap());
+            let v = u32::from_le_bytes(c[4..8].try_into().unwrap());
+            max_v = max_v.max(u.max(v) as usize + 1);
+            edges.push(Edge::new(u, v));
+        }
+        remaining -= take;
+    }
+    Ok((edges, max_v))
 }
 
 #[cfg(test)]
@@ -287,6 +322,47 @@ mod tests {
         let p = tmp("v2bad.egs");
         assert!(save_binary_v2(&g, 61, &[], &p).is_err(), "tail > |E|");
         assert!(save_binary_v2(&g, 0, &[60], &p).is_err(), "tombstone out of range");
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// The streamed decoder must produce the same edges as the old
+    /// whole-file slurp no matter where the refill boundaries fall:
+    /// exercise buffers smaller than the section, equal to one edge,
+    /// and misaligned requests (clamped down to a multiple of 8).
+    #[test]
+    fn streamed_load_is_buffer_size_invariant() {
+        let g = erdos_renyi(150, 700, 9);
+        let p = tmp("stream.egs");
+        save_binary(&g, &p).unwrap();
+        for buf_bytes in [8usize, 24, 40, 1 << 12, 1 << 26] {
+            let mut f = std::fs::File::open(&p).unwrap();
+            let mut hdr = [0u8; 20];
+            f.read_exact(&mut hdr).unwrap();
+            let (edges, max_v) = stream_edges(&mut f, g.num_edges(), buf_bytes).unwrap();
+            assert_eq!(edges.as_slice(), g.edges().as_slice(), "buf={buf_bytes}");
+            assert!(max_v <= g.num_vertices(), "buf={buf_bytes}");
+        }
+        // a misaligned buffer request must still decode whole edges
+        let mut f = std::fs::File::open(&p).unwrap();
+        let mut hdr = [0u8; 20];
+        f.read_exact(&mut hdr).unwrap();
+        let (edges, _) = stream_edges(&mut f, g.num_edges(), 13).unwrap();
+        assert_eq!(edges.as_slice(), g.edges().as_slice());
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Full-fidelity v2 round trip through the streaming load path with
+    /// a tombstone set that straddles word boundaries.
+    #[test]
+    fn v2_streamed_round_trip_matches_slurp_semantics() {
+        let g = erdos_renyi(200, 2000, 11);
+        let p = tmp("stream_v2.egs");
+        let tombs: Vec<u64> = (0..2000u64).filter(|i| i % 129 == 0).collect();
+        save_binary_v2(&g, 64, &tombs, &p).unwrap();
+        let snap = load_binary_v2(&p).unwrap();
+        assert_eq!(snap.graph.edges().as_slice(), g.edges().as_slice());
+        assert_eq!(snap.staged_len, 64);
+        assert_eq!(snap.tombstones, tombs);
         std::fs::remove_file(&p).ok();
     }
 

@@ -11,10 +11,12 @@ pub mod datasets;
 pub mod edgelist;
 pub mod generators;
 pub mod io;
+pub mod paged;
 pub mod stats;
 
 pub use csr::Csr;
 pub use edgelist::{Edge, EdgeList};
+pub use paged::{PagedConfig, PagedEdges, PagedStats};
 
 use crate::{EdgeId, VertexId};
 

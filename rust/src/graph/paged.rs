@@ -1,0 +1,958 @@
+//! Out-of-core paged edge store: the crate's edge substrate when the
+//! edge list does not fit in memory.
+//!
+//! [`PagedEdges`] serves [`EdgeSource`] reads from an on-disk `.egs`
+//! edge section through a fixed-budget page cache instead of a resident
+//! `Vec<Edge>`. Everything downstream — the engine's mirror layout, the
+//! quality sweeps, `MigrationPlan`/`ChurnPlan` execution — already talks
+//! to edges through [`EdgeSource`], so the whole pipeline runs unmodified
+//! against spilled edges. The design leans on two invariants the rest of
+//! the crate establishes:
+//!
+//! * **Pages are contiguous edge-id ranges.** Edge `i` lives at byte
+//!   `20 + 8·i` of the file, so page `p` covers exactly the ids
+//!   `[p·E, (p+1)·E)` where `E = page_bytes / 8` — a pure function of
+//!   the page size, independent of thread count. CEP chunks and
+//!   `IdRangeSet` intervals are contiguous id ranges too, so owner
+//!   lookup stays O(1) and a per-partition sweep touches only that
+//!   partition's file extent.
+//! * **GEO order is scan order.** Chunk sweeps walk ids in ascending
+//!   order, which the cache detects and turns into readahead batches of
+//!   [`PagedConfig::readahead_pages`] pages, so cold sweeps run at
+//!   streaming bandwidth instead of one synchronous fault per page.
+//!
+//! The cache is `std`-only: `std::os::unix::fs::FileExt::read_at` (no
+//! `libc`, no `mmap` — the offline vendored build stays dependency-free),
+//! clock/second-chance eviction over a fixed frame pool sized by
+//! `--page-cache-mb` / `PALLAS_PAGE_CACHE_MB`, and per-frame pin counts
+//! so a caller can hold a page across a splice while eviction pressure
+//! continues around it. Cache *behavior* (hit/miss/readahead tallies,
+//! fill latencies) is interleaving-dependent and therefore kept out of
+//! the fingerprinted span stream entirely: it is exposed as a
+//! [`PagedStats`] snapshot (and optionally published to the metrics
+//! registry, which the cross-width trace gate ignores). The edge *data*
+//! returned is byte-identical to the in-memory substrate at any budget
+//! and any `PALLAS_THREADS`, which is what the determinism suite pins.
+//!
+//! Streaming state rides along in memory: a resident staged tail
+//! (appended edges beyond the spilled base) and a sorted tombstone set,
+//! mirroring [`crate::stream::StagedGraph`]'s `base + staging − tombstones`
+//! shape so churn chains replay bit-identically against the spill.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::edgelist::Edge;
+use super::io::{HEADER_BYTES, MAGIC};
+use super::{EdgeSource, Graph};
+use crate::obs::{HistSnapshot, Histogram};
+use crate::ordering::geo::GeoConfig;
+use crate::partition::cep::Cep;
+use crate::stream::StagedAssignment;
+use crate::{EdgeId, Result};
+use anyhow::{bail, Context};
+
+/// Bytes per stored edge (`u32 u`, `u32 v`, little-endian).
+const EDGE_BYTES: usize = 8;
+
+/// Sentinel page id for an unoccupied frame.
+const NO_PAGE: u64 = u64::MAX;
+
+/// Page-cache geometry: page size, total byte budget, readahead depth.
+///
+/// The page size fixes the page → edge-id-range map (`page_bytes / 8`
+/// edges per page), so two stores with the same page size agree on page
+/// boundaries regardless of their cache budgets — budgets change *what
+/// is resident*, never *what an edge id means*.
+#[derive(Clone, Debug)]
+pub struct PagedConfig {
+    /// Bytes per page; clamped to a positive multiple of 8 at open time.
+    pub page_bytes: usize,
+    /// Total cache budget in bytes; the frame pool holds
+    /// `max(1, cache_bytes / page_bytes)` pages.
+    pub cache_bytes: usize,
+    /// Pages fetched ahead of a sequential miss (0 disables readahead).
+    pub readahead_pages: usize,
+}
+
+impl Default for PagedConfig {
+    fn default() -> Self {
+        PagedConfig {
+            page_bytes: 64 << 10,  // 64 KiB = 8192 edges
+            cache_bytes: 64 << 20, // 64 MiB
+            readahead_pages: 8,
+        }
+    }
+}
+
+impl PagedConfig {
+    /// Default geometry with the cache budget overridden by the
+    /// `PALLAS_PAGE_CACHE_MB` environment variable when set.
+    pub fn from_env() -> PagedConfig {
+        let mut cfg = PagedConfig::default();
+        if let Ok(v) = std::env::var("PALLAS_PAGE_CACHE_MB") {
+            if let Ok(mb) = v.trim().parse::<usize>() {
+                cfg.cache_bytes = mb << 20;
+            }
+        }
+        cfg
+    }
+
+    /// Set the cache budget in MiB (`--page-cache-mb`).
+    pub fn with_cache_mb(mut self, mb: usize) -> PagedConfig {
+        self.cache_bytes = mb << 20;
+        self
+    }
+
+    /// Set the cache budget in bytes.
+    pub fn with_cache_bytes(mut self, bytes: usize) -> PagedConfig {
+        self.cache_bytes = bytes;
+        self
+    }
+
+    /// Set the page size in bytes (clamped to a multiple of 8, min 8).
+    pub fn with_page_bytes(mut self, bytes: usize) -> PagedConfig {
+        self.page_bytes = bytes;
+        self
+    }
+
+    /// Set the readahead depth in pages.
+    pub fn with_readahead(mut self, pages: usize) -> PagedConfig {
+        self.readahead_pages = pages;
+        self
+    }
+
+    /// Page size normalized to a positive multiple of the edge record.
+    fn page_bytes_norm(&self) -> usize {
+        (self.page_bytes / EDGE_BYTES).max(1) * EDGE_BYTES
+    }
+
+    /// Frame-pool capacity implied by the budget (always ≥ 1 so the
+    /// store works — slowly — even under an absurd budget).
+    pub fn frames(&self) -> usize {
+        (self.cache_bytes / self.page_bytes_norm()).max(1)
+    }
+}
+
+/// One cache frame: a page-sized buffer plus clock metadata.
+struct Frame {
+    /// Page currently held (`NO_PAGE` when empty).
+    page: u64,
+    data: Box<[u8]>,
+    /// Valid bytes (shorter than `page_bytes` only on the final page).
+    len: usize,
+    /// Second-chance reference bit: set on access, cleared by the clock
+    /// hand; a frame is evicted only after a full sweep left it cold.
+    refbit: bool,
+    /// Pinned frames are never evicted (splice-in-progress protection).
+    pins: u32,
+}
+
+impl Frame {
+    fn empty(page_bytes: usize) -> Frame {
+        Frame {
+            page: NO_PAGE,
+            data: vec![0u8; page_bytes].into_boxed_slice(),
+            len: 0,
+            refbit: false,
+            pins: 0,
+        }
+    }
+}
+
+/// Mutex-guarded cache state. A single lock keeps the clock, the
+/// residency map, and the sequential-scan watermark consistent; edge
+/// *decoding* happens inside the lock too, so concurrent `par`-pool
+/// sweeps are safe (if slower than slice reads — this substrate trades
+/// latency for footprint by design).
+struct CacheInner {
+    frames: Vec<Frame>,
+    /// page id → frame index for resident pages.
+    map: HashMap<u64, usize>,
+    /// Clock hand over `frames`.
+    hand: usize,
+    /// One past the last page filled by the most recent fill batch: a
+    /// miss exactly here is a sequential scan and triggers readahead.
+    next_seq: u64,
+}
+
+/// Lock-free telemetry cells (safe to bump from any pool thread).
+struct CacheStats {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    readaheads: AtomicU64,
+    fills: AtomicU64,
+    peak_resident: AtomicU64,
+    fill_ns: Histogram,
+}
+
+impl CacheStats {
+    fn new() -> CacheStats {
+        CacheStats {
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            readaheads: AtomicU64::new(0),
+            fills: AtomicU64::new(0),
+            peak_resident: AtomicU64::new(0),
+            fill_ns: Histogram::new(),
+        }
+    }
+}
+
+/// Point-in-time cache telemetry, the source of the `cache_hit_rate` /
+/// `peak_resident_bytes` fields on audit records and bench rows.
+///
+/// These numbers are *wall-clock-like*: they depend on access
+/// interleaving across pool threads and must never enter the
+/// fingerprinted logical span stream (the determinism suite pins that
+/// stream bit-identical across `PALLAS_THREADS` widths).
+#[derive(Clone, Debug)]
+pub struct PagedStats {
+    /// Accesses served from a resident page.
+    pub hits: u64,
+    /// Accesses that faulted a page in (demand fills).
+    pub misses: u64,
+    /// Pages fetched by sequential-scan readahead.
+    pub readaheads: u64,
+    /// Total page fills (misses + readaheads).
+    pub fills: u64,
+    /// High-water mark of frame-pool bytes (page-cache resident set).
+    pub peak_resident_bytes: u64,
+    /// Page-fill latency distribution in nanoseconds.
+    pub fill_ns: HistSnapshot,
+}
+
+impl PagedStats {
+    /// Fraction of accesses served without a demand fill (1.0 when the
+    /// store was never read — vacuously all-hit).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// RAII pin on the page holding one edge: the page cannot be evicted
+/// until the guard drops, so splice code can hold source bytes stable
+/// while other accesses churn the cache.
+pub struct PinnedPage<'a> {
+    store: &'a PagedEdges,
+    page: u64,
+}
+
+impl Drop for PinnedPage<'_> {
+    fn drop(&mut self) {
+        self.store.unpin_page(self.page);
+    }
+}
+
+/// A paged, out-of-core edge store over an on-disk `.egs` file, plus
+/// resident streaming state (staged tail + tombstones). See the module
+/// docs for the design.
+pub struct PagedEdges {
+    file: File,
+    path: PathBuf,
+    /// Dense vertex-space size (`.egs` headers written by this crate
+    /// record it exactly; the paged opener trusts the header because a
+    /// full endpoint scan is exactly what it exists to avoid).
+    n: usize,
+    /// Edges on disk (the spilled base).
+    base_edges: usize,
+    /// Resident staged tail: physical ids `base_edges..num_edges()`.
+    staging: Vec<Edge>,
+    /// Sorted physical ids of tombstoned edges (base or staged).
+    tombstones: Vec<EdgeId>,
+    /// Staged-tail length recorded in the file itself (v2 snapshots).
+    file_staged_len: u64,
+    cfg: PagedConfig,
+    cache: Mutex<CacheInner>,
+    stats: CacheStats,
+}
+
+impl PagedEdges {
+    /// Open an existing `.egs` file (v1 or v2) as a paged store. Only
+    /// the header and the v2 trailer are read eagerly; the edge section
+    /// stays on disk and is faulted in page by page.
+    pub fn open(path: &Path, cfg: PagedConfig) -> Result<PagedEdges> {
+        let cfg = PagedConfig { page_bytes: cfg.page_bytes_norm(), ..cfg };
+        let file =
+            File::open(path).with_context(|| format!("open {} for paging", path.display()))?;
+        let mut hdr = [0u8; HEADER_BYTES as usize];
+        file.read_exact_at(&mut hdr, 0)
+            .with_context(|| format!("read header of {}", path.display()))?;
+        let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            bail!("not an egs file: bad magic {magic:#x}");
+        }
+        let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        if version != 1 && version != 2 {
+            bail!("unsupported egs version {version}");
+        }
+        let nv = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+        let ne = u64::from_le_bytes(hdr[12..20].try_into().unwrap()) as usize;
+        let (file_staged_len, tombstones) = if version == 1 {
+            (0u64, Vec::new())
+        } else {
+            Self::read_trailer(&file, ne)?
+        };
+        Ok(PagedEdges {
+            file,
+            path: path.to_path_buf(),
+            n: nv,
+            base_edges: ne,
+            staging: Vec::new(),
+            tombstones,
+            file_staged_len,
+            cfg,
+            cache: Mutex::new(CacheInner {
+                frames: Vec::new(),
+                map: HashMap::new(),
+                hand: 0,
+                next_seq: 0,
+            }),
+            stats: CacheStats::new(),
+        })
+    }
+
+    /// Spill an in-memory graph to `path` and reopen it paged — the
+    /// one-call conversion the bench and CLI paths use.
+    pub fn spill(g: &Graph, path: &Path, cfg: PagedConfig) -> Result<PagedEdges> {
+        super::io::save_binary(g, path)?;
+        PagedEdges::open(path, cfg)
+    }
+
+    /// External-memory GEO: order `g`'s edges in cache-budget-sized
+    /// runs, each through a full sequential GEO pass on its induced
+    /// subgraph, and merge the locality-ordered runs into the spill
+    /// file. Runs partition the edge-id space contiguously, so the
+    /// merge is a sequential concatenation — the spilled base never
+    /// needs a second resident copy and auxiliary memory is bounded by
+    /// one run (≈ the cache budget) regardless of `|E|`.
+    ///
+    /// Deterministic in `(g, geo, cfg)` only: the run loop is
+    /// sequential and each run reuses the parallel-GEO sub-problem
+    /// machinery, which is itself executor-width invariant.
+    pub fn geo_spill(
+        g: &Graph,
+        geo: &GeoConfig,
+        cfg: &PagedConfig,
+        path: &Path,
+    ) -> Result<PagedEdges> {
+        let m = g.num_edges();
+        let run_edges = (cfg.cache_bytes / EDGE_BYTES)
+            .max(cfg.page_bytes_norm() / EDGE_BYTES)
+            .max(1);
+        let f = File::create(path)
+            .with_context(|| format!("create spill file {}", path.display()))?;
+        let mut w = BufWriter::with_capacity(1 << 20, f);
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&1u32.to_le_bytes())?;
+        w.write_all(&(g.num_vertices() as u32).to_le_bytes())?;
+        w.write_all(&(m as u64).to_le_bytes())?;
+        let mut start = 0usize;
+        let mut run = 0u64;
+        while start < m {
+            let end = (start + run_edges).min(m);
+            let ids: Vec<EdgeId> = (start as u64..end as u64).collect();
+            let sub_cfg = GeoConfig { seed: geo.seed ^ run, ..*geo };
+            let ordered = crate::ordering::geo_parallel::order_bucket(g, &ids, &sub_cfg);
+            for eid in ordered {
+                let e = g.edges()[eid as usize];
+                w.write_all(&e.u.to_le_bytes())?;
+                w.write_all(&e.v.to_le_bytes())?;
+            }
+            start = end;
+            run += 1;
+        }
+        w.flush()?;
+        drop(w);
+        PagedEdges::open(path, cfg.clone())
+    }
+
+    /// Read a v2 trailer (staged length + tombstone bitmap) through a
+    /// fixed-size buffer using positioned reads.
+    fn read_trailer(file: &File, ne: usize) -> Result<(u64, Vec<EdgeId>)> {
+        let mut w8 = [0u8; 8];
+        let tpos = HEADER_BYTES + (ne * EDGE_BYTES) as u64;
+        file.read_exact_at(&mut w8, tpos)?;
+        let staged_len = u64::from_le_bytes(w8);
+        if staged_len > ne as u64 {
+            bail!("staged tail {staged_len} longer than edge list {ne}");
+        }
+        file.read_exact_at(&mut w8, tpos + 8)?;
+        let nwords = u64::from_le_bytes(w8);
+        if nwords != (ne as u64).div_ceil(64) {
+            bail!("tombstone bitmap has {nwords} words for {ne} edges");
+        }
+        let mut tombstones = Vec::new();
+        let mut buf = vec![0u8; (1usize << 16).min((nwords as usize * 8).max(8))];
+        let mut off = tpos + 16;
+        let mut wi = 0u64;
+        let mut remaining = nwords as usize * 8;
+        while remaining > 0 {
+            let take = buf.len().min(remaining);
+            file.read_exact_at(&mut buf[..take], off)?;
+            for c in buf[..take].chunks_exact(8) {
+                let mut word = u64::from_le_bytes(c.try_into().unwrap());
+                while word != 0 {
+                    let bit = word.trailing_zeros() as u64;
+                    let id = wi * 64 + bit;
+                    if id >= ne as u64 {
+                        bail!("tombstone id {id} beyond edge list {ne}");
+                    }
+                    tombstones.push(id);
+                    word &= word - 1;
+                }
+                wi += 1;
+            }
+            off += take as u64;
+            remaining -= take;
+        }
+        Ok((staged_len, tombstones))
+    }
+
+    /// Replace the resident staged tail and the vertex-space size —
+    /// the mirror hook [`crate::stream::StagedGraph::spill`] uses to
+    /// keep a paged twin in lockstep with churn.
+    pub fn set_staging(&mut self, staging: Vec<Edge>, num_vertices: usize) {
+        self.staging = staging;
+        self.n = self.n.max(num_vertices);
+    }
+
+    /// Replace the tombstone set (must be sorted physical ids).
+    pub fn set_tombstones(&mut self, tombstones: Vec<EdgeId>) {
+        debug_assert!(tombstones.windows(2).all(|w| w[0] < w[1]));
+        self.tombstones = tombstones;
+    }
+
+    /// Edges per page — the page → edge-id-range map.
+    #[inline]
+    fn edges_per_page(&self) -> u64 {
+        (self.cfg.page_bytes / EDGE_BYTES) as u64
+    }
+
+    /// Number of pages backing the on-disk base.
+    fn num_pages(&self) -> u64 {
+        (self.base_edges as u64).div_ceil(self.edges_per_page())
+    }
+
+    /// Spilled (on-disk) edge count; ids below this page-fault, ids at
+    /// or above index the resident staged tail.
+    pub fn base_edges(&self) -> usize {
+        self.base_edges
+    }
+
+    /// Resident staged-tail length.
+    pub fn staging_len(&self) -> usize {
+        self.staging.len()
+    }
+
+    /// Staged-tail length recorded in the file's own v2 trailer.
+    pub fn file_staged_len(&self) -> u64 {
+        self.file_staged_len
+    }
+
+    /// Sorted tombstoned physical ids.
+    pub fn tombstones(&self) -> &[EdgeId] {
+        &self.tombstones
+    }
+
+    /// Is physical edge `id` live (not tombstoned)?
+    pub fn is_live(&self, id: EdgeId) -> bool {
+        self.tombstones.binary_search(&id).is_err()
+    }
+
+    /// Live (non-tombstoned) edge count.
+    pub fn num_live_edges(&self) -> usize {
+        self.base_edges + self.staging.len() - self.tombstones.len()
+    }
+
+    /// The CEP assignment over the physical id space with this store's
+    /// tombstones — O(1) owner lookup, chunk ranges aligned with the
+    /// file extents pages map to.
+    pub fn assignment(&self, k: usize) -> StagedAssignment<'_> {
+        StagedAssignment::new(Cep::new(EdgeSource::num_edges(self), k), &self.tombstones)
+    }
+
+    /// Cache geometry in force.
+    pub fn config(&self) -> &PagedConfig {
+        &self.cfg
+    }
+
+    /// Backing file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Snapshot the cache telemetry.
+    pub fn stats(&self) -> PagedStats {
+        PagedStats {
+            hits: self.stats.hits.load(Ordering::Relaxed),
+            misses: self.stats.misses.load(Ordering::Relaxed),
+            readaheads: self.stats.readaheads.load(Ordering::Relaxed),
+            fills: self.stats.fills.load(Ordering::Relaxed),
+            peak_resident_bytes: self.stats.peak_resident.load(Ordering::Relaxed),
+            fill_ns: self.stats.fill_ns.snapshot(),
+        }
+    }
+
+    /// Convenience: current hit rate (see [`PagedStats::cache_hit_rate`]).
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.stats().cache_hit_rate()
+    }
+
+    /// Convenience: high-water mark of page-cache resident bytes.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.stats.peak_resident.load(Ordering::Relaxed)
+    }
+
+    /// Publish the cache telemetry into the active obs session's
+    /// metrics registry (control-thread call sites only). Registry
+    /// counter/gauge lines ride in the trace file but are excluded from
+    /// the cross-width logical projection, so interleaving-dependent
+    /// tallies are safe here and *only* here — never in span counters.
+    pub fn publish_obs(&self) {
+        let s = self.stats();
+        crate::obs::counter_add("paged.page_hits", s.hits);
+        crate::obs::counter_add("paged.page_faults", s.misses);
+        crate::obs::counter_add("paged.readahead_pages", s.readaheads);
+        crate::obs::counter_add("paged.page_fills", s.fills);
+        crate::obs::gauge_set("paged.peak_resident_bytes", s.peak_resident_bytes as f64);
+        crate::obs::gauge_set("paged.cache_hit_rate", s.cache_hit_rate());
+        if !s.fill_ns.is_empty() {
+            crate::obs::gauge_set("paged.fill_p50_ns", s.fill_ns.quantile(0.5) as f64);
+            crate::obs::gauge_set("paged.fill_p99_ns", s.fill_ns.quantile(0.99) as f64);
+        }
+    }
+
+    /// Pin the page holding edge `id` (faulting it in if needed) until
+    /// the returned guard drops. Returns `None` for staged-tail ids —
+    /// the tail is always resident, there is nothing to pin.
+    pub fn pin(&self, id: EdgeId) -> Option<PinnedPage<'_>> {
+        if id as usize >= self.base_edges {
+            return None;
+        }
+        let page = id / self.edges_per_page();
+        let mut inner = self.cache.lock().unwrap();
+        let fi = match inner.map.get(&page) {
+            Some(&fi) => fi,
+            None => self.fill_page(&mut inner, page),
+        };
+        inner.frames[fi].pins += 1;
+        Some(PinnedPage { store: self, page })
+    }
+
+    fn unpin_page(&self, page: u64) {
+        let mut inner = self.cache.lock().unwrap();
+        if let Some(&fi) = inner.map.get(&page) {
+            let f = &mut inner.frames[fi];
+            f.pins = f.pins.saturating_sub(1);
+        }
+    }
+
+    /// Serve a base-edge read through the cache.
+    fn disk_edge(&self, id: EdgeId) -> Edge {
+        let epp = self.edges_per_page();
+        let page = id / epp;
+        let slot = (id % epp) as usize * EDGE_BYTES;
+        let mut inner = self.cache.lock().unwrap();
+        if let Some(&fi) = inner.map.get(&page) {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            let f = &mut inner.frames[fi];
+            f.refbit = true;
+            debug_assert!(slot + EDGE_BYTES <= f.len);
+            return decode_edge(&f.data[slot..slot + EDGE_BYTES]);
+        }
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        let sequential = page == inner.next_seq;
+        let fi = self.fill_page(&mut inner, page);
+        let e = decode_edge(&inner.frames[fi].data[slot..slot + EDGE_BYTES]);
+        let mut last_filled = page;
+        // Sequential-scan readahead: batch the next pages in one
+        // synchronous burst so a GEO-ordered chunk sweep pays one fault
+        // per batch, not per page. Clamped at EOF, skipped entirely when
+        // the frame pool is too small to hold the batch plus the page
+        // the caller is actually reading.
+        let ra_max = self.cfg.readahead_pages.min(self.cfg.frames().saturating_sub(1)) as u64;
+        if sequential && ra_max > 0 {
+            let top = self.num_pages();
+            for d in 1..=ra_max {
+                let p = page + d;
+                if p >= top {
+                    break; // never read past EOF
+                }
+                if inner.map.contains_key(&p) {
+                    continue;
+                }
+                self.fill_page(&mut inner, p);
+                self.stats.readaheads.fetch_add(1, Ordering::Relaxed);
+                last_filled = p;
+            }
+        }
+        inner.next_seq = last_filled + 1;
+        e
+    }
+
+    /// Fault `page` into a frame: grow the pool up to capacity, else run
+    /// the clock over it (skip pinned frames, give referenced frames a
+    /// second chance, evict the first cold one). If *every* frame is
+    /// pinned the pool overcommits one frame rather than deadlocking —
+    /// the overflow frame rejoins the clock and is reused under later
+    /// pressure. Returns the frame index now holding `page`.
+    fn fill_page(&self, inner: &mut CacheInner, page: u64) -> usize {
+        debug_assert!(!inner.map.contains_key(&page));
+        let cap = self.cfg.frames();
+        let fi = if inner.frames.len() < cap {
+            inner.frames.push(Frame::empty(self.cfg.page_bytes));
+            inner.frames.len() - 1
+        } else {
+            let nf = inner.frames.len();
+            let mut victim = None;
+            // Two full sweeps suffice: the first may only clear
+            // reference bits, the second must then find a cold frame
+            // unless everything is pinned.
+            for _ in 0..2 * nf {
+                let i = inner.hand;
+                inner.hand = (inner.hand + 1) % nf;
+                let f = &mut inner.frames[i];
+                if f.pins > 0 {
+                    continue;
+                }
+                if f.refbit {
+                    f.refbit = false;
+                    continue;
+                }
+                victim = Some(i);
+                break;
+            }
+            match victim {
+                Some(i) => i,
+                None => {
+                    inner.frames.push(Frame::empty(self.cfg.page_bytes));
+                    inner.frames.len() - 1
+                }
+            }
+        };
+        let old = inner.frames[fi].page;
+        if old != NO_PAGE {
+            inner.map.remove(&old);
+        }
+        let start = HEADER_BYTES + page * self.cfg.page_bytes as u64;
+        let section_end = self.base_edges * EDGE_BYTES;
+        let page_start = page as usize * self.cfg.page_bytes;
+        let len = self.cfg.page_bytes.min(section_end - page_start);
+        let t0 = Instant::now();
+        {
+            let f = &mut inner.frames[fi];
+            // EdgeSource::edge is infallible by contract (in-memory
+            // substrates index a slice); an IO error on an already-open
+            // spill file is as unrecoverable as a torn slice, so panic
+            // with context rather than silently fabricating edges.
+            self.file.read_exact_at(&mut f.data[..len], start).unwrap_or_else(|e| {
+                panic!("paged edge store {}: read page {page}: {e}", self.path.display())
+            });
+            f.page = page;
+            f.len = len;
+            f.refbit = true;
+        }
+        inner.map.insert(page, fi);
+        self.stats.fill_ns.record(t0.elapsed().as_nanos() as u64);
+        self.stats.fills.fetch_add(1, Ordering::Relaxed);
+        let resident = (inner.frames.len() * self.cfg.page_bytes) as u64;
+        self.stats.peak_resident.fetch_max(resident, Ordering::Relaxed);
+        fi
+    }
+
+    #[cfg(test)]
+    fn cached_pages(&self) -> Vec<u64> {
+        let inner = self.cache.lock().unwrap();
+        let mut pages: Vec<u64> = inner.map.keys().copied().collect();
+        pages.sort_unstable();
+        pages
+    }
+}
+
+#[inline]
+fn decode_edge(b: &[u8]) -> Edge {
+    Edge::new(
+        u32::from_le_bytes(b[0..4].try_into().unwrap()),
+        u32::from_le_bytes(b[4..8].try_into().unwrap()),
+    )
+}
+
+impl EdgeSource for PagedEdges {
+    fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    fn num_edges(&self) -> usize {
+        self.base_edges + self.staging.len()
+    }
+
+    #[inline]
+    fn edge(&self, id: EdgeId) -> Edge {
+        let base = self.base_edges as u64;
+        if id < base {
+            self.disk_edge(id)
+        } else {
+            self.staging[(id - base) as usize]
+        }
+    }
+}
+
+impl std::fmt::Debug for PagedEdges {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedEdges")
+            .field("path", &self.path)
+            .field("n", &self.n)
+            .field("base_edges", &self.base_edges)
+            .field("staging", &self.staging.len())
+            .field("tombstones", &self.tombstones.len())
+            .field("page_bytes", &self.cfg.page_bytes)
+            .field("frames", &self.cfg.frames())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+    use crate::graph::io;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("egs_paged_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    /// page_bytes=16 → 2 edges per page; tiny deterministic geometry
+    /// for scripted cache traces.
+    fn tiny_cfg(frames: usize) -> PagedConfig {
+        PagedConfig {
+            page_bytes: 16,
+            cache_bytes: 16 * frames,
+            readahead_pages: 0,
+        }
+    }
+
+    #[test]
+    fn paged_matches_in_memory_at_any_budget() {
+        let g = erdos_renyi(120, 500, 21);
+        let p = tmp("match.egs");
+        for cfg in [
+            tiny_cfg(1),
+            tiny_cfg(3),
+            PagedConfig::default(), // effectively unbounded for 500 edges
+            PagedConfig { page_bytes: 16, cache_bytes: 64, readahead_pages: 4 },
+        ] {
+            let pe = PagedEdges::spill(&g, &p, cfg).unwrap();
+            assert_eq!(EdgeSource::num_edges(&pe), g.num_edges());
+            assert_eq!(EdgeSource::num_vertices(&pe), g.num_vertices());
+            for id in 0..g.num_edges() as u64 {
+                assert_eq!(pe.edge(id), g.edges()[id as usize], "edge {id}");
+            }
+            // and again in reverse, against a now-warm cache
+            for id in (0..g.num_edges() as u64).rev() {
+                assert_eq!(pe.edge(id), g.edges()[id as usize], "edge {id} (rev)");
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Scripted clock trace: second chance spares the referenced frame.
+    #[test]
+    fn clock_second_chance_evicts_the_cold_frame() {
+        let g = erdos_renyi(64, 40, 3);
+        let p = tmp("clock.egs");
+        let pe = PagedEdges::spill(&g, &p, tiny_cfg(2)).unwrap();
+        pe.edge(0); // fault page 0 → frame 0
+        pe.edge(2); // fault page 1 → frame 1
+        assert_eq!(pe.cached_pages(), vec![0, 1]);
+        pe.edge(1); // hit page 0 (sets its reference bit)
+        // fault page 2: hand sweeps frame 0 (referenced → spared, bit
+        // cleared), frame 1 (referenced from its fill → cleared), then
+        // frame 0 again (now cold) → page 0 evicted
+        pe.edge(4);
+        assert_eq!(pe.cached_pages(), vec![1, 2]);
+        let s = pe.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.fills, 3);
+        // the pool never outgrew its 2-frame budget
+        assert_eq!(s.peak_resident_bytes, 32);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn pinned_pages_survive_eviction_pressure() {
+        let g = erdos_renyi(64, 40, 4);
+        let p = tmp("pin.egs");
+        let pe = PagedEdges::spill(&g, &p, tiny_cfg(2)).unwrap();
+        let guard = pe.pin(0).unwrap(); // pin page 0
+        // sweep enough distinct pages to evict everything unpinned
+        for id in (2..20u64).step_by(2) {
+            pe.edge(id);
+        }
+        assert!(pe.cached_pages().contains(&0), "pinned page evicted");
+        let fills_before = pe.stats().fills;
+        pe.edge(0); // must be a hit — no refill of the pinned page
+        assert_eq!(pe.stats().fills, fills_before);
+        drop(guard);
+        // unpinned now: pressure may reclaim it
+        for id in (2..20u64).step_by(2) {
+            pe.edge(id);
+        }
+        assert!(!pe.cached_pages().contains(&0), "unpinned page never reclaimed");
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// With every frame pinned the pool overcommits instead of
+    /// deadlocking, and the high-water mark records the overshoot.
+    #[test]
+    fn fully_pinned_pool_overcommits_one_frame() {
+        let g = erdos_renyi(64, 40, 5);
+        let p = tmp("overcommit.egs");
+        let pe = PagedEdges::spill(&g, &p, tiny_cfg(1)).unwrap();
+        let _guard = pe.pin(0).unwrap();
+        let e = pe.edge(2); // page 1 with the only frame pinned
+        assert_eq!(e, g.edges()[2]);
+        assert!(pe.cached_pages().contains(&0));
+        assert_eq!(pe.stats().peak_resident_bytes, 32, "one overflow frame");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn sequential_scan_triggers_readahead_and_clamps_at_eof() {
+        let g = erdos_renyi(64, 41, 6); // 41 edges → 21 pages, last one short
+        let p = tmp("ra.egs");
+        let cfg = PagedConfig { page_bytes: 16, cache_bytes: 16 * 8, readahead_pages: 4 };
+        let pe = PagedEdges::spill(&g, &p, cfg).unwrap();
+        for id in 0..41u64 {
+            assert_eq!(pe.edge(id), g.edges()[id as usize]);
+        }
+        let s = pe.stats();
+        let pages = 21u64;
+        // every page filled exactly once — readahead never re-fetched or
+        // ran past EOF (a past-EOF read would have panicked in fill)
+        assert_eq!(s.fills, pages);
+        assert!(s.readaheads > 0, "sequential scan produced no readahead");
+        assert_eq!(s.misses + s.readaheads, pages);
+        // batch faulting: far fewer demand misses than pages
+        assert!(s.misses <= pages - s.readaheads);
+        assert_eq!(s.hits, 41 - s.misses);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn readahead_on_final_page_is_a_noop() {
+        let g = erdos_renyi(64, 40, 7);
+        let p = tmp("ra_eof.egs");
+        let cfg = PagedConfig { page_bytes: 16, cache_bytes: 16 * 8, readahead_pages: 4 };
+        let pe = PagedEdges::spill(&g, &p, cfg).unwrap();
+        // prime the sequential detector right at the end of the file
+        pe.edge(36);
+        pe.edge(38); // sequential miss on the last page: no pages beyond
+        let s = pe.stats();
+        assert_eq!(s.readaheads, pe.stats().fills - s.misses);
+        assert_eq!(pe.edge(39), g.edges()[39]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v2_state_and_assignment_round_trip() {
+        let g = erdos_renyi(100, 300, 8);
+        let p = tmp("v2.egs");
+        let tombs: Vec<u64> = vec![1, 64, 299];
+        io::save_binary_v2(&g, 10, &tombs, &p).unwrap();
+        let pe = PagedEdges::open(&p, tiny_cfg(4)).unwrap();
+        assert_eq!(pe.file_staged_len(), 10);
+        assert_eq!(pe.tombstones(), tombs.as_slice());
+        assert_eq!(pe.num_live_edges(), 297);
+        assert!(!pe.is_live(64));
+        assert!(pe.is_live(63));
+        let a = pe.assignment(4);
+        let live: u64 = a.live_sizes().iter().sum();
+        assert_eq!(live, 297);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn staged_tail_reads_are_resident() {
+        let g = erdos_renyi(50, 80, 9);
+        let p = tmp("tail.egs");
+        let mut pe = PagedEdges::spill(&g, &p, tiny_cfg(2)).unwrap();
+        pe.set_staging(vec![Edge::new(50, 51), Edge::new(51, 52)], 53);
+        assert_eq!(EdgeSource::num_edges(&pe), 82);
+        assert_eq!(EdgeSource::num_vertices(&pe), 53);
+        let fills = pe.stats().fills;
+        assert_eq!(pe.edge(80), Edge::new(50, 51));
+        assert_eq!(pe.edge(81), Edge::new(51, 52));
+        assert_eq!(pe.stats().fills, fills, "tail reads must not touch the cache");
+        assert!(pe.pin(80).is_none(), "tail pages cannot be pinned");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn geo_spill_is_a_permutation_of_the_input() {
+        use crate::graph::generators::{rmat, RmatParams};
+        let g = rmat(&RmatParams { scale: 10, edge_factor: 8, ..Default::default() }, 13);
+        let p = tmp("geo_spill.egs");
+        // budget far below the edge list → multiple runs
+        let cfg = PagedConfig {
+            page_bytes: 1 << 10,
+            cache_bytes: g.num_edges() * EDGE_BYTES / 4,
+            readahead_pages: 4,
+        };
+        let pe = PagedEdges::geo_spill(&g, &GeoConfig::default(), &cfg, &p).unwrap();
+        assert_eq!(EdgeSource::num_edges(&pe), g.num_edges());
+        let mut orig: Vec<(u32, u32)> =
+            g.edges().iter().map(|e| e.canonical()).collect();
+        let mut spilled: Vec<(u32, u32)> =
+            (0..g.num_edges() as u64).map(|i| pe.edge(i).canonical()).collect();
+        orig.sort_unstable();
+        spilled.sort_unstable();
+        assert_eq!(orig, spilled, "geo_spill lost or duplicated edges");
+        // the scan above was ≥4× the budget and sequential: bounded
+        // resident set, streaming readahead
+        let s = pe.stats();
+        assert!(s.readaheads > 0);
+        assert!(
+            s.peak_resident_bytes <= (cfg.cache_bytes + cfg.page_bytes) as u64,
+            "resident {} exceeded budget {}",
+            s.peak_resident_bytes,
+            cfg.cache_bytes
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn hit_rate_and_peak_resident_telemetry() {
+        let g = erdos_renyi(80, 200, 10);
+        let p = tmp("stats.egs");
+        let pe = PagedEdges::spill(&g, &p, tiny_cfg(100)).unwrap(); // all fits
+        assert_eq!(pe.stats().cache_hit_rate(), 1.0, "vacuous hit rate");
+        for id in 0..200u64 {
+            pe.edge(id);
+        }
+        for id in 0..200u64 {
+            pe.edge(id);
+        }
+        let s = pe.stats();
+        assert_eq!(s.misses, 100); // 2 edges/page, cold pass faults each once
+        assert_eq!(s.hits, 300);
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-9);
+        assert_eq!(s.peak_resident_bytes, 100 * 16);
+        assert_eq!(s.fill_ns.count, s.fills);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -128,6 +128,29 @@
 //! churn and drives interleaved churn + rescale (+ policy) scenarios
 //! end to end.
 //!
+//! ## The out-of-core substrate
+//!
+//! Every consumer above reads edges through the
+//! [`graph::EdgeSource`] trait, and [`graph::PagedEdges`] implements it
+//! over an on-disk `.egs` file behind a fixed-budget page cache
+//! (`read_at` frame fills, clock/second-chance eviction,
+//! sequential-scan readahead) — so engine mirror construction,
+//! migration/churn plan execution and the quality sweeps run unmodified
+//! on graphs whose edge list exceeds RAM. Pages are contiguous edge-id
+//! ranges, a pure function of the page size, so paged results are
+//! bit-identical to the in-memory substrate at any thread width and any
+//! cache budget. [`coordinator::RunConfig::spill`] makes the driver
+//! write the ordered edge list to disk after the initial assignment and
+//! drop the resident [`graph::Graph`] (`egs elastic --spill
+//! --page-cache-mb`, budget default from `PALLAS_PAGE_CACHE_MB`);
+//! [`stream::StagedGraph::spill`] mirrors a churned streaming state
+//! (base file + resident staging tail + tombstones); and
+//! [`graph::PagedEdges::geo_spill`] is the external-memory GEO path,
+//! ordering cache-budget-sized runs and merging them into the spill
+//! file. The cache reports interleaving-dependent telemetry
+//! (`cache_hit_rate`, `peak_resident_bytes`) through audit records and
+//! registry metrics only — never through the fingerprinted span stream.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

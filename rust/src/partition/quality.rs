@@ -4,7 +4,13 @@
 //! All metrics are generic over [`PartitionAssignment`], so they price a
 //! materialized [`EdgePartition`] and a zero-materialization
 //! [`super::CepView`] identically — the CEP sweeps never allocate a
-//! per-edge vector.
+//! per-edge vector. They are also generic over the edge substrate
+//! ([`EdgeSource`]): an in-memory [`crate::graph::Graph`], a streaming
+//! [`crate::stream::StagedGraph`], or an out-of-core
+//! [`crate::graph::paged::PagedEdges`] price identically — the chunked
+//! sweep reads each partition's contiguous id range in ascending order,
+//! which is exactly the access pattern the paged store turns into
+//! readahead.
 //!
 //! The sweeps run on the [`crate::par`] pool. Chunked assignments shard
 //! the partition space (each worker carries one epoch-stamp scratch array
@@ -17,22 +23,26 @@
 use super::cep::Cep;
 use super::view::{CepView, PartitionAssignment};
 use super::EdgePartition;
-use crate::graph::Graph;
+use crate::graph::EdgeSource;
 use crate::par::{self, ThreadConfig};
 use std::collections::HashSet;
 
 /// Per-partition vertex counts `|V(E_p)|` on the process-wide pool.
-pub fn vertex_counts<P: PartitionAssignment + Sync + ?Sized>(g: &Graph, part: &P) -> Vec<u64> {
+pub fn vertex_counts<E, P>(g: &E, part: &P) -> Vec<u64>
+where
+    E: EdgeSource + Sync + ?Sized,
+    P: PartitionAssignment + Sync + ?Sized,
+{
     vertex_counts_with(g, part, par::global())
 }
 
 /// Per-partition vertex counts `|V(E_p)|` with an explicit executor
 /// width; results are identical at any width.
-pub fn vertex_counts_with<P: PartitionAssignment + Sync + ?Sized>(
-    g: &Graph,
-    part: &P,
-    threads: ThreadConfig,
-) -> Vec<u64> {
+pub fn vertex_counts_with<E, P>(g: &E, part: &P, threads: ThreadConfig) -> Vec<u64>
+where
+    E: EdgeSource + Sync + ?Sized,
+    P: PartitionAssignment + Sync + ?Sized,
+{
     let n = g.num_vertices();
     let k = part.k();
     if let Some(chunks) = part.as_chunks() {
@@ -54,7 +64,7 @@ pub fn vertex_counts_with<P: PartitionAssignment + Sync + ?Sized>(
                     if !part.is_live(i) {
                         continue;
                     }
-                    let e = g.edges()[i as usize];
+                    let e = g.edge(i);
                     if stamp[e.u as usize] != epoch {
                         stamp[e.u as usize] = epoch;
                         counts[p - plo] += 1;
@@ -73,7 +83,6 @@ pub fn vertex_counts_with<P: PartitionAssignment + Sync + ?Sized>(
         // partials over edge shards, merged into one deduplicating union —
         // a set cardinality, independent of the sharding.
         let m = g.num_edges();
-        let el = g.edges().as_slice();
         let seen: HashSet<(u32, u32)> = par::par_reduce(
             threads,
             m,
@@ -83,7 +92,7 @@ pub fn vertex_counts_with<P: PartitionAssignment + Sync + ?Sized>(
                     if !part.is_live(i as u64) {
                         continue;
                     }
-                    let e = el[i];
+                    let e = g.edge(i as u64);
                     let p = part.partition_of(i as u64);
                     s.insert((e.u, p));
                     s.insert((e.v, p));
@@ -105,16 +114,23 @@ pub fn vertex_counts_with<P: PartitionAssignment + Sync + ?Sized>(
 }
 
 /// Replication factor `RF = (1/|V|) Σ_p |V(E_p)|` (Def. 1). Best = 1.0.
-pub fn replication_factor<P: PartitionAssignment + Sync + ?Sized>(g: &Graph, part: &P) -> f64 {
+pub fn replication_factor<E, P>(g: &E, part: &P) -> f64
+where
+    E: EdgeSource + Sync + ?Sized,
+    P: PartitionAssignment + Sync + ?Sized,
+{
     let counts = vertex_counts(g, part);
     counts.iter().sum::<u64>() as f64 / g.num_vertices() as f64
 }
 
-/// RF computed directly from chunk metadata for an **ordered** graph —
-/// O(|E|) with epoch stamping, no per-pair hashing (the fast path used by
-/// the figure sweeps; runs the chunked path of [`vertex_counts_with`]
-/// across the pool).
-pub fn replication_factor_chunked(g_ordered: &Graph, c: &Cep) -> f64 {
+/// RF computed directly from chunk metadata for an **ordered** edge
+/// source — O(|E|) with epoch stamping, no per-pair hashing (the fast
+/// path used by the figure sweeps; runs the chunked path of
+/// [`vertex_counts_with`] across the pool).
+pub fn replication_factor_chunked<E>(g_ordered: &E, c: &Cep) -> f64
+where
+    E: EdgeSource + Sync + ?Sized,
+{
     let counts = vertex_counts_with(g_ordered, &CepView::new(*c), par::global());
     counts.iter().sum::<u64>() as f64 / g_ordered.num_vertices() as f64
 }
@@ -139,7 +155,11 @@ pub fn edge_balance<P: PartitionAssignment + ?Sized>(part: &P) -> f64 {
 }
 
 /// Vertex balance `VB = B({|V(E_p)|})`.
-pub fn vertex_balance<P: PartitionAssignment + Sync + ?Sized>(g: &Graph, part: &P) -> f64 {
+pub fn vertex_balance<E, P>(g: &E, part: &P) -> f64
+where
+    E: EdgeSource + Sync + ?Sized,
+    P: PartitionAssignment + Sync + ?Sized,
+{
     balance(&vertex_counts(g, part))
 }
 
@@ -156,7 +176,11 @@ pub struct Quality {
 
 /// Compute RF / EB / VB in one call (one vertex-count sweep serves both
 /// RF and VB).
-pub fn quality<P: PartitionAssignment + Sync + ?Sized>(g: &Graph, part: &P) -> Quality {
+pub fn quality<E, P>(g: &E, part: &P) -> Quality
+where
+    E: EdgeSource + Sync + ?Sized,
+    P: PartitionAssignment + Sync + ?Sized,
+{
     let counts = vertex_counts(g, part);
     Quality {
         rf: counts.iter().sum::<u64>() as f64 / g.num_vertices() as f64,
@@ -221,6 +245,34 @@ mod tests {
             let part = EdgePartition::new(k, assign);
             assert!(replication_factor(&g, &part) >= 1.0 - 1e-12);
         });
+    }
+
+    /// The sweeps are substrate-generic: an out-of-core paged store must
+    /// price bit-identically to the in-memory graph it was spilled
+    /// from, on both the chunked and the scattered decomposition, even
+    /// with a pathological 1-frame cache.
+    #[test]
+    fn paged_substrate_prices_identically() {
+        use crate::graph::paged::{PagedConfig, PagedEdges};
+        let g = erdos_renyi(90, 450, 31);
+        let mut path = std::env::temp_dir();
+        path.push(format!("egs_quality_paged_{}.egs", std::process::id()));
+        let cfg = PagedConfig { page_bytes: 64, cache_bytes: 64, readahead_pages: 2 };
+        let pe = PagedEdges::spill(&g, &path, cfg).unwrap();
+        let chunked = crate::partition::CepView::new(Cep::new(g.num_edges(), 6));
+        let mut rng = crate::util::rng::Rng::new(0x9A);
+        let scattered =
+            EdgePartition::new(5, (0..g.num_edges()).map(|_| rng.below(5) as u32).collect());
+        let qm = quality(&g, &chunked);
+        let qp = quality(&pe, &chunked);
+        assert_eq!(qm.rf.to_bits(), qp.rf.to_bits());
+        assert_eq!(qm.vb.to_bits(), qp.vb.to_bits());
+        assert_eq!(
+            vertex_counts(&g, &scattered),
+            vertex_counts(&pe, &scattered),
+            "scattered sweep diverged on the paged substrate"
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

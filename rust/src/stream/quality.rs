@@ -28,13 +28,15 @@ where
 }
 
 /// [`live_vertex_counts`] with an explicit executor width; results are
-/// identical at any width.
-pub fn live_vertex_counts_with<A>(
-    sg: &StagedGraph,
-    assign: &A,
-    threads: ThreadConfig,
-) -> Vec<u64>
+/// identical at any width. Generic over the edge substrate too: a
+/// [`StagedGraph`] and its out-of-core spill
+/// ([`crate::graph::paged::PagedEdges`]) price bit-identically — the
+/// sweep only reads `num_vertices()` and `edge(id)` over live
+/// sub-ranges, in ascending id order (the paged store's readahead
+/// pattern).
+pub fn live_vertex_counts_with<E, A>(sg: &E, assign: &A, threads: ThreadConfig) -> Vec<u64>
 where
+    E: EdgeSource + Sync + ?Sized,
     A: LiveChunks + Sync + ?Sized,
 {
     let n = sg.num_vertices();
@@ -76,6 +78,32 @@ where
     A: LiveChunks + Sync + ?Sized,
 {
     live_vertex_counts(sg, assign).iter().sum::<u64>() as f64 / sg.num_vertices().max(1) as f64
+}
+
+/// [`live_replication_factor`] over any edge substrate (in-memory,
+/// staged, or paged) with an explicit executor width.
+pub fn live_replication_factor_with<E, A>(src: &E, assign: &A, threads: ThreadConfig) -> f64
+where
+    E: EdgeSource + Sync + ?Sized,
+    A: LiveChunks + Sync + ?Sized,
+{
+    live_vertex_counts_with(src, assign, threads).iter().sum::<u64>() as f64
+        / src.num_vertices().max(1) as f64
+}
+
+/// [`live_quality`] over any edge substrate with an explicit executor
+/// width.
+pub fn live_quality_with<E, A>(src: &E, assign: &A, threads: ThreadConfig) -> Quality
+where
+    E: EdgeSource + Sync + ?Sized,
+    A: LiveChunks + Sync + ?Sized,
+{
+    let counts = live_vertex_counts_with(src, assign, threads);
+    Quality {
+        rf: counts.iter().sum::<u64>() as f64 / src.num_vertices().max(1) as f64,
+        eb: balance(&assign.live_counts()),
+        vb: balance(&counts),
+    }
 }
 
 /// RF / EB / VB of the live staged state in one sweep.

@@ -14,7 +14,7 @@ use super::assignment::{StagedAssignment, WeightedStagedAssignment};
 use super::compaction::CompactionPolicy;
 use super::mutation::{BatchOutcome, EdgeMutation, MutationBatch};
 use super::plan::{merge_sorted_par, ChurnPlan};
-use crate::graph::{io, Csr, Edge, EdgeList, EdgeSource, Graph};
+use crate::graph::{io, Csr, Edge, EdgeList, EdgeSource, Graph, PagedConfig, PagedEdges};
 use crate::ordering::geo::{self, GeoConfig};
 use crate::ordering::window::TailWindow;
 use crate::par;
@@ -393,6 +393,22 @@ impl StagedGraph {
         io::save_binary_v2(&g, self.staging.len() as u64, &self.tombstones, path)
     }
 
+    /// Spill the **base** edge list to disk and return a paged twin of
+    /// this staged graph: same physical id space, same vertex space, same
+    /// liveness. The base (the overwhelming bulk of the physical space)
+    /// is served from the page cache; the staging tail and tombstone list
+    /// stay resident on the twin — tombstone ids span base *and* staged
+    /// ids, so they cannot live in the v1 base file. The twin prices
+    /// bit-identically to `self` under every [`EdgeSource`] consumer
+    /// (engine mirrors, quality sweeps, churn-plan execution).
+    pub fn spill(&self, path: &Path, cfg: PagedConfig) -> Result<PagedEdges> {
+        io::save_binary(&self.base, path)?;
+        let mut pe = PagedEdges::open(path, cfg)?;
+        pe.set_staging(self.staging.clone(), self.n);
+        pe.set_tombstones(self.tombstones.clone());
+        Ok(pe)
+    }
+
     /// Load a `.egs` snapshot (v1 or v2) back into a staged graph. The
     /// base is **not** re-ordered — the snapshot's order is trusted, so a
     /// v1 file behaves as an already-ordered base with an empty tail.
@@ -740,6 +756,37 @@ mod tests {
             wa.sizes().iter().sum::<u64>(),
             sg.live_edges() as u64
         );
+    }
+
+    /// A paged spill twin answers every physical-id query — endpoints,
+    /// liveness, live count — identically to the staged graph it mirrors,
+    /// even through a cache far smaller than the base list.
+    #[test]
+    fn spill_twin_matches_staged_state() {
+        let g = erdos_renyi(70, 350, 13);
+        let mut sg = StagedGraph::new(g, cfg());
+        let mut rng = Rng::new(8);
+        let mut batch = MutationBatch::new();
+        for _ in 0..20 {
+            batch.insert(rng.below(70) as u32, rng.below(70) as u32);
+        }
+        for id in [2u64, 9, 41] {
+            batch.delete(id);
+        }
+        sg.apply_batch(&batch, 4);
+        let path =
+            std::env::temp_dir().join(format!("egs_staged_spill_{}.egs", std::process::id()));
+        let paged_cfg =
+            crate::graph::PagedConfig::default().with_page_bytes(64).with_cache_bytes(256);
+        let pe = sg.spill(&path, paged_cfg).unwrap();
+        assert_eq!(EdgeSource::num_edges(&pe), sg.physical_edges());
+        assert_eq!(EdgeSource::num_vertices(&pe), sg.num_vertices());
+        assert_eq!(pe.num_live_edges(), sg.live_edges());
+        for id in 0..sg.physical_edges() as EdgeId {
+            assert_eq!(pe.edge(id), sg.edge(id), "edge {id}");
+            assert_eq!(pe.is_live(id), sg.is_live(id), "liveness {id}");
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

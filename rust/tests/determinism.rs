@@ -394,6 +394,217 @@ fn engine_state_is_thread_invariant_across_run_rescale_churn() {
     }
 }
 
+/// The out-of-core paged substrate is bit-identical to the in-memory
+/// staged graph through a full engine chain — run, churn batch,
+/// compaction (fresh spill + engine rebuild), rescale — at every cache
+/// budget ({1 frame, tiny, effectively unbounded}) and every executor
+/// width. The cache only decides *what is resident*; the f32 vertex
+/// state, comm-lane tallies and ownership metadata must never see it.
+#[test]
+fn paged_substrate_is_bit_identical_to_in_memory() {
+    use egs::graph::{PagedConfig, PagedEdges};
+
+    fn supersteps(engine: &mut Engine, sg: &StagedGraph, ranks: &mut Vec<f32>) {
+        let nn = sg.num_vertices();
+        if ranks.len() < nn {
+            ranks.resize(nn, 1.0 / nn as f32);
+        }
+        let aux: Vec<f32> = (0..nn as u32)
+            .map(|v| {
+                let d = sg.degree(v);
+                if d == 0 {
+                    0.0
+                } else {
+                    1.0 / d as f32
+                }
+            })
+            .collect();
+        let active = vec![true; nn];
+        for _ in 0..3 {
+            let (contrib, _) = engine
+                .superstep(StepKind::PageRank, Combine::Sum, ranks, &aux, &active)
+                .unwrap();
+            for v in 0..nn {
+                ranks[v] = 0.15 / nn as f32 + 0.85 * contrib[v];
+            }
+        }
+    }
+
+    /// One engine chain; `spill` == `None` runs in memory, otherwise the
+    /// engine reads every edge through a paged twin re-spilled after
+    /// each mutation of the staged graph (the lockstep-mirror protocol).
+    fn chain(
+        w: usize,
+        spill: Option<&PagedConfig>,
+        path: &std::path::Path,
+    ) -> (Vec<u32>, u64, Vec<usize>) {
+        let t = ThreadConfig::new(w);
+        let g = erdos_renyi(180, 900, 11);
+        let mut sg = StagedGraph::new(g, geo_cfg(w));
+        let k = 4usize;
+        let mut twin: Option<PagedEdges> =
+            spill.map(|c| sg.spill(path, c.clone()).unwrap());
+        let mut engine = {
+            let assign = sg.assignment(k);
+            match &twin {
+                Some(pe) => Engine::new(pe, &assign, |_| Box::new(NativeBackend::new())),
+                None => Engine::new(&sg, &assign, |_| Box::new(NativeBackend::new())),
+            }
+            .unwrap()
+            .with_threads(t)
+        };
+        let mut ranks = vec![1.0f32 / sg.num_vertices() as f32; sg.num_vertices()];
+        supersteps(&mut engine, &sg, &mut ranks);
+
+        // churn batch through the delta-plan path
+        let mut rng = Rng::new(0xE5);
+        let mut batch = MutationBatch::new();
+        for _ in 0..40 {
+            batch.insert(rng.below(200) as u32, rng.below(200) as u32);
+        }
+        for _ in 0..10 {
+            batch.delete(rng.below(sg.physical_edges() as u64));
+        }
+        let (_, plan) = sg.apply_batch(&batch, k);
+        if let Some(c) = spill {
+            twin = Some(sg.spill(path, c.clone()).unwrap());
+        }
+        {
+            let assign = sg.assignment(k);
+            match &twin {
+                Some(pe) => {
+                    engine.apply_churn(pe, &plan, &assign, |_| Box::new(NativeBackend::new()))
+                }
+                None => {
+                    engine.apply_churn(&sg, &plan, &assign, |_| Box::new(NativeBackend::new()))
+                }
+            }
+            .unwrap();
+        }
+        supersteps(&mut engine, &sg, &mut ranks);
+
+        // compaction renumbers the physical space: fresh spill, fresh
+        // engine (the same rebuild the streaming driver performs)
+        sg.compact();
+        if let Some(c) = spill {
+            twin = Some(sg.spill(path, c.clone()).unwrap());
+        }
+        engine = {
+            let assign = sg.assignment(k);
+            match &twin {
+                Some(pe) => Engine::new(pe, &assign, |_| Box::new(NativeBackend::new())),
+                None => Engine::new(&sg, &assign, |_| Box::new(NativeBackend::new())),
+            }
+            .unwrap()
+            .with_threads(t)
+        };
+        supersteps(&mut engine, &sg, &mut ranks);
+
+        // rescale through the same machinery
+        let new_k = 7usize;
+        let plan = sg.rescale_plan(k, new_k);
+        {
+            let assign = sg.assignment(new_k);
+            match &twin {
+                Some(pe) => {
+                    engine.apply_churn(pe, &plan, &assign, |_| Box::new(NativeBackend::new()))
+                }
+                None => {
+                    engine.apply_churn(&sg, &plan, &assign, |_| Box::new(NativeBackend::new()))
+                }
+            }
+            .unwrap();
+        }
+        supersteps(&mut engine, &sg, &mut ranks);
+
+        engine.comm.reset();
+        let n = sg.num_vertices();
+        let aux = vec![0.0f32; n];
+        let active = vec![true; n];
+        let (out, _) =
+            engine.superstep(StepKind::Wcc, Combine::Min, &ranks, &aux, &active).unwrap();
+        let bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+        let ranges: Vec<usize> =
+            (0..new_k).map(|p| engine.layout().range_count(p)).collect();
+        (bits, engine.comm.total_bytes(), ranges)
+    }
+
+    let budgets = [
+        // one 8-edge frame: every miss evicts
+        ("one_frame", PagedConfig { page_bytes: 64, cache_bytes: 64, readahead_pages: 0 }),
+        // a few short pages with readahead
+        ("tiny", PagedConfig { page_bytes: 256, cache_bytes: 1024, readahead_pages: 2 }),
+        // default geometry: effectively unbounded at this scale
+        ("unbounded", PagedConfig::default()),
+    ];
+    let reference = chain(1, None, std::path::Path::new("/dev/null"));
+    for (tag, cfg) in &budgets {
+        for w in WIDTHS {
+            let path = std::env::temp_dir()
+                .join(format!("egs_det_paged_{}_{tag}_{w}.egs", std::process::id()));
+            let got = chain(w, Some(cfg), &path);
+            std::fs::remove_file(&path).ok();
+            assert_eq!(got.0, reference.0, "budget {tag} width {w}: vertex state diverges");
+            assert_eq!(got.1, reference.1, "budget {tag} width {w}: comm bytes diverge");
+            assert_eq!(got.2, reference.2, "budget {tag} width {w}: layout diverges");
+        }
+    }
+}
+
+/// `--spill` is unobservable in every deterministic output of the
+/// unified driver: a scale-out run over the paged substrate reports the
+/// same events, comm bytes and layout as the resident run at every
+/// width — while actually serving edges from disk (cache telemetry
+/// present on the report, absent on resident runs).
+#[test]
+fn driver_spill_run_matches_resident_run() {
+    use egs::coordinator::{Controller, RunConfig, RunReport};
+    use egs::scaling::scenario::Scenario;
+
+    let raw = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() }, 4);
+    let g = egs::ordering::geo::order(&raw, &geo_cfg(1)).apply(&raw);
+    let scenario = Scenario::scale_out(3, 2, 3);
+    let fingerprint = |out: &RunReport| -> Vec<u64> {
+        out.events
+            .iter()
+            .flat_map(|e| {
+                [
+                    e.from_k as u64,
+                    e.to_k as u64,
+                    e.migrated_edges,
+                    e.range_moves as u64,
+                    e.layout_ranges as u64,
+                ]
+            })
+            .chain([
+                out.com_bytes,
+                out.final_k as u64,
+                out.layout_ranges as u64,
+                out.layout_bytes as u64,
+            ])
+            .collect()
+    };
+    let resident = {
+        let cfg = RunConfig::new().threads(ThreadConfig::new(2));
+        Controller::drive(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+            .unwrap()
+    };
+    assert!(resident.cache_hit_rate.is_none() && resident.peak_resident_bytes.is_none());
+    let dir = std::env::temp_dir().join(format!("egs_det_spill_{}", std::process::id()));
+    for w in WIDTHS {
+        let cfg =
+            RunConfig::new().threads(ThreadConfig::new(w)).spill(&dir).page_cache_mb(1);
+        let out =
+            Controller::drive(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+                .unwrap();
+        assert_eq!(fingerprint(&out), fingerprint(&resident), "width {w}");
+        let rate = out.cache_hit_rate.expect("spill run must report a hit rate");
+        assert!((0.0..=1.0).contains(&rate), "hit rate {rate} out of range");
+        assert!(out.peak_resident_bytes.expect("peak resident missing") > 0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// SLO policy decisions are bit-identical at widths 1/2/8 through the
 /// unified driver: the sensor snapshot reads only modeled costs and
 /// deterministic tallies, candidate pricing goes through width-invariant
