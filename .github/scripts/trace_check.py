@@ -4,7 +4,8 @@ check cross-thread logical equality.
 
 Usage:
 
-    trace_check.py [--expect-decisions] trace_t1.jsonl [trace_t2.jsonl ...]
+    trace_check.py [--expect-decisions] [--expect-reads] \
+        trace_t1.jsonl [trace_t2.jsonl ...]
 
 Each file is the schema-v1 stream written by rust/src/obs/trace.rs: a
 `meta` line (tool, threads, span count, fingerprint over the logical
@@ -37,6 +38,16 @@ policy loop in rust/src/coordinator/driver.rs):
   * with --expect-decisions, every file must contain at least one
     decision span (the run was policy-driven), and — through the
     cross-file projection check above — the decision sequence is
+    bit-identical across the thread matrix.
+
+Serving audit checks (`serve` spans, emitted by the epoch-routed read
+path in rust/src/coordinator/driver.rs):
+  * every serve span carries the full counter set (reads, double_reads,
+    stale_reads, misses, errors, epoch, read_p50_ns, read_p99_ns) with
+    zero errors (the liveness contract) and p99 >= p50;
+  * with --expect-reads, every file must contain at least one serve
+    span (the run had serving enabled), and — through the cross-file
+    projection check above — the per-iteration read telemetry is
     bit-identical across the thread matrix.
 
 Exit code 1 on any violation.
@@ -161,6 +172,42 @@ def check_decisions(path, spans, expect):
     return n
 
 
+SERVE_COUNTERS = (
+    "reads",
+    "double_reads",
+    "stale_reads",
+    "misses",
+    "errors",
+    "epoch",
+    "read_p50_ns",
+    "read_p99_ns",
+)
+
+
+def check_serves(path, spans, expect):
+    """Validate the serving audit spans; return how many the file holds."""
+    n = 0
+    for obj, where in spans:
+        if obj["name"] != "serve":
+            continue
+        n += 1
+        for c in SERVE_COUNTERS:
+            if c not in obj["counters"]:
+                fail(f"{where}: serve span missing counter {c!r}")
+        counters = obj["counters"]
+        if counters["errors"] != 0:
+            fail(f"{where}: serve span reports {counters['errors']} read errors")
+        if counters["read_p99_ns"] < counters["read_p50_ns"]:
+            fail(
+                f"{where}: serve span quantiles inverted "
+                f"(p50 {counters['read_p50_ns']} ns > "
+                f"p99 {counters['read_p99_ns']} ns)"
+            )
+    if expect and n == 0:
+        fail(f"{path}: --expect-reads but no serve span")
+    return n
+
+
 def projection(spans):
     """The logical (width-invariant) view of the span stream."""
     return [
@@ -178,10 +225,12 @@ def projection(spans):
 def main():
     args = sys.argv[1:]
     expect_decisions = "--expect-decisions" in args
-    paths = [a for a in args if a != "--expect-decisions"]
+    expect_reads = "--expect-reads" in args
+    flags = {"--expect-decisions", "--expect-reads"}
+    paths = [a for a in args if a not in flags]
     if not paths:
         print(
-            f"usage: {sys.argv[0]} [--expect-decisions] "
+            f"usage: {sys.argv[0]} [--expect-decisions] [--expect-reads] "
             "trace.jsonl [trace2.jsonl ...]"
         )
         return 2
@@ -190,11 +239,12 @@ def main():
         meta, spans, metrics = load(path)
         check_structure(path, meta, spans)
         decisions = check_decisions(path, spans, expect_decisions)
+        serves = check_serves(path, spans, expect_reads)
         loaded.append((path, meta, spans))
         print(
             f"trace_check: {path}: ok — threads={meta.get('threads')} "
             f"spans={len(spans)} metric-lines={metrics} "
-            f"decisions={decisions} "
+            f"decisions={decisions} serves={serves} "
             f"fingerprint={meta.get('fingerprint')}"
         )
     ref_path, ref_meta, ref_spans = loaded[0]

@@ -20,7 +20,9 @@
 //!   "imbalance": <f64|null>, "rebalance_ms": <f64|null>,
 //!   "p50_ms": <f64|null>, "p99_ms": <f64|null>,
 //!   "slo_violations": <u64|null>, "decisions": <u64|null>,
-//!   "cache_hit_rate": <f64|null>, "peak_resident_bytes": <u64|null>}`.
+//!   "cache_hit_rate": <f64|null>, "peak_resident_bytes": <u64|null>,
+//!   "read_p50_ms": <f64|null>, "read_p99_ms": <f64|null>,
+//!   "stale_reads": <u64|null>}`.
 //!   `layout_ranges`/`layout_bytes` report the interval-set ownership
 //!   metadata resident in a `PartitionLayout` after the measured run
 //!   (`null` for benches without a layout). `net_model`/`net_ms` report
@@ -38,6 +40,10 @@
 //!   from out-of-core (`PagedEdges`) scenarios: the fraction of edge
 //!   reads served without a disk fill and the high-water mark of cached
 //!   page bytes (`null` for resident benches).
+//!   `read_p50_ms`/`read_p99_ms`/`stale_reads` report serving-read-path
+//!   telemetry from runs driven with a `ServeConfig`: modeled per-read
+//!   latency quantiles and reads answered from a superseded epoch during
+//!   an in-flight migration (`null` for benches without serving).
 //!   Rows are recorded with the fluent [`BenchLog::record`] builder; the
 //!   legacy `row_*` helpers delegate to it. All benches share this
 //!   schema; CI points every bench at the same `BENCH_ci.json` and diffs
@@ -103,6 +109,7 @@ struct Row {
     latency: Option<(f64, f64)>,
     slo: Option<(u64, u64)>,
     cache: Option<(f64, u64)>,
+    reads: Option<(f64, f64, u64)>,
 }
 
 /// Row collector for one bench binary. Call [`BenchLog::record`] per
@@ -175,6 +182,16 @@ impl RowMut<'_> {
         self.row.cache = Some((hit_rate, peak_resident_bytes));
         self
     }
+
+    /// Attach serving-read-path telemetry from a run driven with a
+    /// `ServeConfig`: modeled per-read latency quantiles in milliseconds
+    /// and the count of reads answered from a superseded epoch while a
+    /// migration was in flight (`RunReport::read_p50_ms` /
+    /// `read_p99_ms` / `stale_reads`).
+    pub fn reads(self, p50_ms: f64, p99_ms: f64, stale: u64) -> Self {
+        self.row.reads = Some((p50_ms, p99_ms, stale));
+        self
+    }
 }
 
 impl BenchLog {
@@ -197,6 +214,7 @@ impl BenchLog {
             latency: None,
             slo: None,
             cache: None,
+            reads: None,
         });
         RowMut { row: self.rows.last_mut().expect("just pushed") }
     }
@@ -333,6 +351,12 @@ impl BenchLog {
                 Some((h, p)) => (format!("{h:.4}"), p.to_string()),
                 None => ("null".into(), "null".into()),
             };
+            let (rd50_s, rd99_s, stale_s) = match row.reads {
+                Some((p50, p99, st)) => {
+                    (format!("{p50:.3}"), format!("{p99:.3}"), st.to_string())
+                }
+                None => ("null".into(), "null".into(), "null".into()),
+            };
             writeln!(
                 fh,
                 "{{\"v\":{ROW_SCHEMA},\"bench\":\"{}\",\"scenario\":\"{}\",\
@@ -343,7 +367,8 @@ impl BenchLog {
                  \"imbalance\":{},\"rebalance_ms\":{},\
                  \"p50_ms\":{},\"p99_ms\":{},\
                  \"slo_violations\":{},\"decisions\":{},\
-                 \"cache_hit_rate\":{},\"peak_resident_bytes\":{}}}",
+                 \"cache_hit_rate\":{},\"peak_resident_bytes\":{},\
+                 \"read_p50_ms\":{},\"read_p99_ms\":{},\"stale_reads\":{}}}",
                 self.bench,
                 row.scenario,
                 row.wall_ms,
@@ -359,7 +384,10 @@ impl BenchLog {
                 slo_s,
                 dec_s,
                 hit_s,
-                peak_s
+                peak_s,
+                rd50_s,
+                rd99_s,
+                stale_s
             )
             .expect("write bench row");
         }

@@ -16,7 +16,7 @@
 mod common;
 
 use common::BenchLog;
-use egs::coordinator::{run_scenario, ControllerConfig, RebalanceConfig};
+use egs::coordinator::{Controller, PolicyConfig, RunConfig};
 use egs::metrics::table::{secs, Table};
 use egs::ordering::geo::{self, GeoConfig};
 use egs::runtime::native::NativeBackend;
@@ -39,19 +39,20 @@ fn main() {
     // and under the discrete-event emulator (overlap mode)
     let light = NetModelConfig { compute_ns_per_edge: 0.1, ..Default::default() };
     let light_emu = NetModelConfig { compute_ns_per_edge: 0.1, ..NetModelConfig::emulated() };
-    for (label, net_model, rebalance) in [
-        ("uniform", light, RebalanceConfig::off()),
-        ("nudged", light, RebalanceConfig::threshold(1.05)),
-        ("nudged (emu)", light_emu, RebalanceConfig::threshold(1.05)),
+    for (label, net_model, threshold) in [
+        ("uniform", light, None),
+        ("nudged", light, Some(1.05)),
+        ("nudged (emu)", light_emu, Some(1.05)),
     ] {
-        let cfg = ControllerConfig {
-            method: "cep".into(),
-            net_model,
-            rebalance,
-            ..Default::default()
+        let policy = match threshold {
+            Some(t) => PolicyConfig::Threshold { threshold: t },
+            None => PolicyConfig::Off,
         };
-        let out =
-            run_scenario(&ordered, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        let cfg = RunConfig::new().method("cep").net_model(net_model).policy(policy);
+        let out = Controller::drive(ordered.clone(), &scenario, &cfg, |_| {
+            Box::new(NativeBackend::new())
+        })
+        .unwrap();
         let moved: u64 = out.rebalances.iter().map(|r| r.moved_edges).sum();
         t.row(vec![
             label.to_string(),
@@ -63,16 +64,12 @@ fn main() {
             out.rebalances.len().to_string(),
             moved.to_string(),
         ]);
-        let scenario_key = match (rebalance.is_threshold(), net_model.model) {
+        let scenario_key = match (threshold.is_some(), net_model.model) {
             (true, NetworkModel::Emulated) => "nudged-emulated/steady",
             (true, _) => "nudged/steady",
             (false, _) => "uniform/steady",
         };
-        let rebalance_ms = if rebalance.is_threshold() {
-            Some(out.rebalance_s * 1e3)
-        } else {
-            None
-        };
+        let rebalance_ms = threshold.map(|_| out.rebalance_s * 1e3);
         log.record(scenario_key, out.all_s * 1e3)
             .layout(out.layout_ranges as u64, out.layout_bytes as u64)
             .net(net_model.model.name(), out.net_s * 1e3)

@@ -9,7 +9,7 @@
 mod common;
 
 use common::BenchLog;
-use egs::coordinator::{run_scenario, ControllerConfig};
+use egs::coordinator::{Controller, RunConfig};
 use egs::metrics::table::{secs, Table};
 use egs::ordering::geo::{self, GeoConfig};
 use egs::runtime::native::NativeBackend;
@@ -39,11 +39,13 @@ fn main() {
             ("cep", NetModelConfig::default()),
             ("cep", NetModelConfig::emulated()),
         ] {
-            let cfg = ControllerConfig { method: method.into(), net_model, ..Default::default() };
+            let cfg = RunConfig::new().method(method).net_model(net_model);
             // CEP needs the GEO-ordered list; the others their raw input
             let input = if method == "cep" { &ordered } else { &g };
-            let out = run_scenario(input, scenario, &cfg, |_| Box::new(NativeBackend::new()))
-                .unwrap();
+            let out = Controller::drive(input.clone(), scenario, &cfg, |_| {
+                Box::new(NativeBackend::new())
+            })
+            .unwrap();
             let label = match (method, net_model.model) {
                 ("cep", egs::scaling::netsim::NetworkModel::Emulated) => "geo+cep (emu)".into(),
                 ("cep", _) => "geo+cep".into(),

@@ -19,7 +19,7 @@
 //! cargo run --release --example streaming_pagerank
 //! ```
 
-use egs::coordinator::{run_streaming, StreamingConfig};
+use egs::coordinator::{Controller, RunConfig};
 use egs::graph::datasets;
 use egs::metrics::table::{f3, secs, Table};
 use egs::runtime::native::NativeBackend;
@@ -34,9 +34,8 @@ fn main() -> egs::Result<()> {
     let scenario = Scenario::scale_out(8, 4, 5).with_churn(2, (m0 / 200) as u32, (m0 / 600) as u32);
     println!("[plan]    {}", scenario.name);
 
-    let cfg =
-        StreamingConfig { audit_rf: true, measure_fresh_baseline: true, ..Default::default() };
-    let out = run_streaming(g, &scenario, &cfg, |_| Box::new(NativeBackend::new()))?;
+    let cfg = RunConfig::new().audit_rf(true).measure_fresh_baseline(true);
+    let out = Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new()))?;
 
     let mut log = Table::new(
         "churn batches (delta plans, range ops only)",
@@ -88,12 +87,11 @@ fn main() -> egs::Result<()> {
     summary.print();
 
     let fresh = out.fresh_rf.expect("baseline requested");
+    let live_rf = out.final_rf.expect("audit_rf requested");
     println!(
-        "quality: live |E|={} RF={:.3} vs fresh GEO+CEP repartition RF={:.3} ({:+.1}%)",
+        "quality: live |E|={} RF={live_rf:.3} vs fresh GEO+CEP repartition RF={fresh:.3} ({:+.1}%)",
         out.live_edges,
-        out.final_rf,
-        fresh,
-        100.0 * (out.final_rf / fresh - 1.0)
+        100.0 * (live_rf / fresh - 1.0)
     );
     Ok(())
 }

@@ -1,14 +1,14 @@
 //! The unified run configuration: one config type, one builder, for
 //! both controller substrates.
 //!
-//! `ControllerConfig` and `StreamingConfig` grew as near-duplicates
-//! (net, net_model, value_bytes, latency, seed, threads, rebalance all
-//! repeated); [`RunConfig`] merges them behind a fluent builder —
-//! `RunConfig::new().net(...).policy(...)` — and
+//! The legacy `ControllerConfig` and `StreamingConfig` grew as
+//! near-duplicates (net, net_model, value_bytes, latency, seed,
+//! threads, rebalance all repeated); [`RunConfig`] merges them behind a
+//! fluent builder — `RunConfig::new().net(...).policy(...)` — and
 //! [`crate::coordinator::Controller::drive`] consumes it on either
-//! substrate. The legacy types remain as thin deprecated shims for one
-//! release (see the migration note in the README's Autoscaling
-//! section).
+//! substrate. The deprecated shims have been removed; `RunConfig` +
+//! `drive` is the only API (see the migration note in the README's
+//! Autoscaling section).
 
 use super::policy::{ScalingPolicy, SloConfig, SloPolicy, ThresholdPolicy};
 use super::provisioner::LatencyModel;
@@ -17,6 +17,7 @@ use crate::ordering::geo::GeoConfig;
 use crate::par::ThreadConfig;
 use crate::scaling::netsim::NetModelConfig;
 use crate::scaling::network::Network;
+use crate::serve::ServeConfig;
 use crate::stream::CompactionPolicy;
 use std::path::PathBuf;
 
@@ -143,6 +144,12 @@ pub struct RunConfig {
     /// `--page-cache-mb`); `None` defers to `PALLAS_PAGE_CACHE_MB`,
     /// then the 64 MiB default
     pub page_cache_mb: Option<usize>,
+    /// the serving read path (CLI: `--serve`, `--read-rate`, `--zipf`):
+    /// when set, an open-loop [`crate::serve::WorkloadGen`] issues point
+    /// reads through the epoch [`crate::serve::ShardRouter`] between
+    /// supersteps and the run reports
+    /// `read_p50_ms`/`read_p99_ms`/`stale_reads`
+    pub serve: Option<ServeConfig>,
 }
 
 impl Default for RunConfig {
@@ -165,6 +172,7 @@ impl Default for RunConfig {
             measure_fresh_baseline: false,
             spill: None,
             page_cache_mb: None,
+            serve: None,
         }
     }
 }
@@ -276,6 +284,12 @@ impl RunConfig {
     /// Set the page-cache budget (MiB) for `--spill` runs.
     pub fn page_cache_mb(mut self, mb: usize) -> RunConfig {
         self.page_cache_mb = Some(mb);
+        self
+    }
+
+    /// Enable the serving read path with the given workload config.
+    pub fn serve(mut self, serve: ServeConfig) -> RunConfig {
+        self.serve = Some(serve);
         self
     }
 

@@ -1,96 +1,19 @@
-//! Legacy controller surface: the audit records and breakdown rows both
-//! run paths report, plus the deprecated `ControllerConfig` /
-//! `StreamingConfig` + `run_scenario` / `run_streaming` shims.
+//! The controller's audit records: one struct per executed transition
+//! (scale event, churn batch, boundary rebalance), shared by both
+//! substrates.
 //!
-//! The run loops themselves live in [`super::driver`] behind the unified
+//! The run loop itself lives in [`super::driver`] behind the unified
 //! [`Controller::drive`] entry point — one loop, one policy hook, one
-//! pricing/audit pipeline for both substrates. The shims here translate
-//! the legacy config shapes into a [`RunConfig`] (the threshold
-//! rebalance folds into [`PolicyConfig::Threshold`]) and convert the
-//! unified [`super::driver::RunReport`] back into the legacy breakdown
-//! rows, so existing callers keep compiling — and keep their outputs —
-//! for one release.
-
-use super::config::{DriveMode, PolicyConfig, RunConfig};
-use super::driver::Controller;
-use super::provisioner::LatencyModel;
-use crate::graph::Graph;
-use crate::ordering::geo::GeoConfig;
-use crate::par::ThreadConfig;
-use crate::runtime::ComputeBackend;
-use crate::scaling::netsim::NetModelConfig;
-use crate::scaling::network::Network;
-use crate::scaling::scenario::Scenario;
-use crate::stream::CompactionPolicy;
-use crate::Result;
-
-/// When the coordinator nudges chunk boundaries toward the metered
-/// per-partition cost profile (CLI: `--rebalance`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum RebalanceMode {
-    /// never rebalance — boundaries stay the method's own (the default)
-    Off,
-    /// between supersteps, whenever the metered max/mean cost imbalance
-    /// exceeds [`RebalanceConfig::threshold`], re-solve the chunk
-    /// boundaries against the metered profile and execute the O(k)
-    /// boundary-shift plan
-    Threshold,
-}
-
-/// Skew-aware rebalancing policy: watches the engine's metered
-/// per-partition costs ([`Engine::partition_costs`]) and, past the
-/// trigger, nudges the weighted chunk boundaries
-/// ([`crate::partition::weighted::balanced_boundaries`]) with a
-/// ≤ 2(k−1)-move interval-splice plan. Only chunk-contiguous assignments
-/// (the CEP paths) can be nudged; scattered methods ignore the policy.
-///
-/// This is the config-level surface of
-/// [`super::policy::ThresholdPolicy`]: the unified driver runs it as a
-/// degenerate scaling policy, and [`PolicyConfig::Threshold`] is the
-/// unified way to ask for it.
-///
-/// [`Engine::partition_costs`]: crate::engine::Engine::partition_costs
-#[derive(Clone, Copy, Debug)]
-pub struct RebalanceConfig {
-    /// the policy
-    pub mode: RebalanceMode,
-    /// max/mean metered cost imbalance that triggers a boundary nudge in
-    /// [`RebalanceMode::Threshold`] (1.0 = perfectly balanced)
-    pub threshold: f64,
-}
-
-impl Default for RebalanceConfig {
-    fn default() -> Self {
-        RebalanceConfig { mode: RebalanceMode::Off, threshold: 1.15 }
-    }
-}
-
-impl RebalanceConfig {
-    /// Rebalancing disabled (the default).
-    pub fn off() -> RebalanceConfig {
-        RebalanceConfig::default()
-    }
-
-    /// Threshold policy with the given max/mean trigger.
-    pub fn threshold(threshold: f64) -> RebalanceConfig {
-        assert!(threshold >= 1.0, "imbalance threshold below 1.0 can never be satisfied");
-        RebalanceConfig { mode: RebalanceMode::Threshold, threshold }
-    }
-
-    /// Is the threshold policy active?
-    pub fn is_threshold(&self) -> bool {
-        self.mode == RebalanceMode::Threshold
-    }
-
-    /// The equivalent unified policy selection.
-    pub fn as_policy(&self) -> PolicyConfig {
-        if self.is_threshold() {
-            PolicyConfig::Threshold { threshold: self.threshold }
-        } else {
-            PolicyConfig::Off
-        }
-    }
-}
+//! pricing/audit pipeline for both substrates, configured by a single
+//! [`RunConfig`](super::RunConfig). The deprecated
+//! `ControllerConfig` / `StreamingConfig` shims and the
+//! `run_scenario` / `run_streaming` pair they fed are gone; every
+//! record here is stamped with the ownership [`AssignmentEpoch`] id its
+//! transition published, so audit logs line up with the serving read
+//! path's double-read windows.
+//!
+//! [`Controller::drive`]: super::Controller::drive
+//! [`AssignmentEpoch`]: crate::partition::AssignmentEpoch
 
 /// Audit record of one executed boundary rebalance.
 #[derive(Clone, Copy, Debug)]
@@ -116,66 +39,9 @@ pub struct RebalanceRecord {
     /// rebalance network milliseconds hidden behind the app's superstep
     /// window (emulated overlap mode; 0 under the closed form)
     pub net_overlapped_ms: f64,
-}
-
-/// Legacy batch-path configuration. Superseded by [`RunConfig`]: the
-/// same fields, one builder, plus the policy layer.
-#[deprecated(note = "use RunConfig + Controller::drive")]
-pub struct ControllerConfig {
-    /// partitioning/scaling method: `cep` (graph must be GEO-ordered for
-    /// the paper's quality), `1d`, `bvc`, `oblivious`, `ginger`
-    pub method: String,
-    /// physical network for migration pricing (bandwidth + barrier)
-    pub net: Network,
-    /// which pricing model runs on `net`: the closed form or the
-    /// discrete-event emulator (CLI: `--net-model`), plus the emulator's
-    /// skew/overlap knobs
-    pub net_model: NetModelConfig,
-    /// bytes of application value migrated per edge
-    pub value_bytes: u64,
-    /// worker provisioning latencies
-    pub latency: LatencyModel,
-    /// RNG seed for methods that need one
-    pub seed: u64,
-    /// executor width for engine supersteps (pure execution knob —
-    /// results identical at any value; defaults to `PALLAS_THREADS`)
-    pub threads: ThreadConfig,
-    /// skew-aware boundary rebalancing policy (CLI: `--rebalance`)
-    pub rebalance: RebalanceConfig,
-}
-
-#[allow(deprecated)]
-impl Default for ControllerConfig {
-    fn default() -> Self {
-        ControllerConfig {
-            method: "cep".into(),
-            net: Network::gbps(8.0),
-            net_model: NetModelConfig::default(),
-            value_bytes: 8,
-            latency: LatencyModel::default(),
-            seed: 42,
-            threads: ThreadConfig::default(),
-            rebalance: RebalanceConfig::default(),
-        }
-    }
-}
-
-#[allow(deprecated)]
-impl From<&ControllerConfig> for RunConfig {
-    fn from(c: &ControllerConfig) -> RunConfig {
-        RunConfig {
-            method: c.method.clone(),
-            net: c.net,
-            net_model: c.net_model,
-            value_bytes: c.value_bytes,
-            latency: c.latency,
-            seed: c.seed,
-            threads: c.threads,
-            policy: c.rebalance.as_policy(),
-            mode: DriveMode::Batch,
-            ..RunConfig::default()
-        }
-    }
+    /// ownership epoch id this nudge published — strictly monotone
+    /// across every transition of a run
+    pub epoch: u64,
 }
 
 /// Audit record of one executed scale event.
@@ -201,164 +67,9 @@ pub struct EventRecord {
     /// window (emulated overlap mode; 0 under the closed form, which
     /// cannot express overlap)
     pub net_overlapped_ms: f64,
-}
-
-/// Table 7 row: total and component times (seconds). `SCALE` combines the
-/// measured repartitioning time, the *emulated* migration network time and
-/// the provisioning latency; `APP` and `INIT` are measured wall time.
-#[derive(Clone, Debug)]
-pub struct RunBreakdown {
-    /// method name
-    pub method: String,
-    /// total = init + app + scale + rebalance
-    pub all_s: f64,
-    /// initialization: initial partitioning + engine build
-    pub init_s: f64,
-    /// application compute
-    pub app_s: f64,
-    /// repartition + migration + provisioning
-    pub scale_s: f64,
-    /// total network seconds the migration traffic was priced at across
-    /// all events (blocking + overlapped; only the blocking share is
-    /// inside `scale_s`)
-    pub net_s: f64,
-    /// total migrated edges over all events
-    pub migrated_edges: u64,
-    /// communication bytes of the app phases
-    pub com_bytes: u64,
-    /// final partition count
-    pub final_k: usize,
-    /// ownership intervals resident in the final layout (O(k + moved
-    /// ranges), never per-edge)
-    pub layout_ranges: usize,
-    /// resident bytes of the final layout's ownership metadata
-    pub layout_bytes: usize,
-    /// skew-aware rebalancing: solver + migration wall plus blocking
-    /// network seconds across all boundary nudges (0 when the policy is
-    /// [`RebalanceMode::Off`])
-    pub rebalance_s: f64,
-    /// metered max/mean cost imbalance after the final superstep
-    pub final_imbalance: f64,
-    /// histogram-backed p50 superstep wall latency across all APP
-    /// iterations, in milliseconds (log-bucketed, ≤ 12.5% bucket error;
-    /// 0 when the scenario ran no supersteps)
-    pub superstep_p50_ms: f64,
-    /// histogram-backed p99 superstep wall latency, in milliseconds
-    pub superstep_p99_ms: f64,
-    /// per-event audit log of the executed plans
-    pub events: Vec<EventRecord>,
-    /// per-nudge audit log of the rebalance policy
-    pub rebalances: Vec<RebalanceRecord>,
-}
-
-/// Run PageRank under `scenario`, scaling with `cfg.method`.
-/// `backend_for` supplies a compute backend per partition at every epoch.
-///
-/// Thin shim over [`Controller::drive`] pinned to the batch substrate
-/// (churn events in the scenario are ignored, the legacy contract).
-/// Clones the graph — `drive` takes it by value.
-#[deprecated(note = "use Controller::drive with a RunConfig")]
-#[allow(deprecated)]
-pub fn run_scenario<F>(
-    g: &Graph,
-    scenario: &Scenario,
-    cfg: &ControllerConfig,
-    backend_for: F,
-) -> Result<RunBreakdown>
-where
-    F: FnMut(usize) -> Box<dyn ComputeBackend>,
-{
-    let run_cfg = RunConfig::from(cfg);
-    Ok(Controller::drive(g.clone(), scenario, &run_cfg, backend_for)?.into())
-}
-
-// ---------------------------------------------------------------------------
-// Streaming: interleaved churn + rescale over a StagedGraph
-// ---------------------------------------------------------------------------
-
-/// Legacy streaming-path configuration. Superseded by [`RunConfig`]
-/// (with [`DriveMode::Streaming`] or a churn-carrying scenario under
-/// [`DriveMode::Auto`]).
-#[deprecated(note = "use RunConfig + Controller::drive")]
-pub struct StreamingConfig {
-    /// physical network for pricing inter-worker rebalancing moves
-    pub net: Network,
-    /// which pricing model runs on `net` (closed form or emulator, with
-    /// the emulator's skew/overlap knobs)
-    pub net_model: NetModelConfig,
-    /// bytes of application value migrated per edge
-    pub value_bytes: u64,
-    /// worker provisioning latencies
-    pub latency: LatencyModel,
-    /// RNG seed for the generated mutation batches
-    pub seed: u64,
-    /// GEO configuration for the initial ordering and every compaction
-    pub geo: GeoConfig,
-    /// staging/tombstone quality budget
-    pub policy: CompactionPolicy,
-    /// fold the staging tail once the scenario ends (a final compaction),
-    /// so the run hands steady-state serving a fully GEO-ordered graph
-    pub flush_at_end: bool,
-    /// record the live replication factor in every [`ChurnRecord`] — an
-    /// O(|E|) audit sweep per batch, so off by default (the streaming
-    /// path itself stays O(k + batch) per batch); records hold NaN when
-    /// disabled
-    pub audit_rf: bool,
-    /// additionally price a *fresh* GEO+CEP repartition of the final
-    /// mutated graph (one extra GEO pass, different seed) and report its
-    /// RF — the quality-drift baseline the acceptance criteria compare
-    /// against; off by default
-    pub measure_fresh_baseline: bool,
-    /// executor width for engine supersteps (ingest-side parallelism
-    /// follows `geo.threads`); pure execution knob — results identical
-    pub threads: ThreadConfig,
-    /// skew-aware boundary rebalancing policy (CLI: `--rebalance`); when
-    /// active the streaming assignment carries weighted chunk boundaries
-    /// over the staged physical id space
-    pub rebalance: RebalanceConfig,
-}
-
-#[allow(deprecated)]
-impl Default for StreamingConfig {
-    fn default() -> Self {
-        StreamingConfig {
-            net: Network::gbps(8.0),
-            net_model: NetModelConfig::default(),
-            value_bytes: 8,
-            latency: LatencyModel::default(),
-            seed: 42,
-            geo: GeoConfig::default(),
-            policy: CompactionPolicy::default(),
-            flush_at_end: true,
-            audit_rf: false,
-            measure_fresh_baseline: false,
-            threads: ThreadConfig::default(),
-            rebalance: RebalanceConfig::default(),
-        }
-    }
-}
-
-#[allow(deprecated)]
-impl From<&StreamingConfig> for RunConfig {
-    fn from(c: &StreamingConfig) -> RunConfig {
-        RunConfig {
-            method: "cep".into(),
-            net: c.net,
-            net_model: c.net_model,
-            value_bytes: c.value_bytes,
-            latency: c.latency,
-            seed: c.seed,
-            threads: c.threads,
-            policy: c.rebalance.as_policy(),
-            slo_ref_ms: None,
-            mode: DriveMode::Streaming,
-            geo: c.geo,
-            compaction: c.policy,
-            flush_at_end: c.flush_at_end,
-            audit_rf: c.audit_rf,
-            measure_fresh_baseline: c.measure_fresh_baseline,
-        }
-    }
+    /// ownership epoch id this rescale published — strictly monotone
+    /// across every transition of a run
+    pub epoch: u64,
 }
 
 /// Audit record of one executed churn batch.
@@ -397,100 +108,22 @@ pub struct ChurnRecord {
     /// compactions — a full rebuild cannot overlap)
     pub net_overlapped_ms: f64,
     /// live replication factor after the batch was applied
-    /// ([`RunConfig::audit_rf`]; NaN when disabled)
+    /// ([`audit_rf`](super::RunConfig::audit_rf); NaN when disabled)
     pub rf: f64,
-}
-
-/// Breakdown of a streaming run: Table 7's INIT/APP/SCALE plus a CHURN
-/// component, with per-event audit logs.
-#[derive(Clone, Debug)]
-pub struct StreamingBreakdown {
-    /// scenario name
-    pub name: String,
-    /// total = init + app + scale + churn + rebalance
-    pub all_s: f64,
-    /// initial GEO ordering + engine build
-    pub init_s: f64,
-    /// application compute
-    pub app_s: f64,
-    /// rescale planning + migration + provisioning
-    pub scale_s: f64,
-    /// churn ingest + delta-plan application + compactions
-    pub churn_s: f64,
-    /// total network seconds priced across rescales, delta plans and
-    /// compaction redistributions (blocking + overlapped)
-    pub net_s: f64,
-    /// communication bytes of the app phases
-    pub com_bytes: u64,
-    /// final partition count
-    pub final_k: usize,
-    /// live replication factor at the end of the run
-    pub final_rf: f64,
-    /// RF of a fresh GEO+CEP repartition of the final mutated graph
-    /// (only when `measure_fresh_baseline` is set)
-    pub fresh_rf: Option<f64>,
-    /// ownership intervals resident in the final layout
-    pub layout_ranges: usize,
-    /// resident bytes of the final layout's ownership metadata
-    pub layout_bytes: usize,
-    /// compactions performed (including a final flush)
-    pub compactions: u32,
-    /// live edges at the end of the run
-    pub live_edges: usize,
-    /// skew-aware rebalancing: solver + migration wall plus blocking
-    /// network seconds across all boundary nudges (0 when the policy is
-    /// [`RebalanceMode::Off`])
-    pub rebalance_s: f64,
-    /// metered max/mean cost imbalance after the final superstep (before
-    /// any end-of-run flush, which rebuilds the engine and clears the
-    /// comm lanes)
-    pub final_imbalance: f64,
-    /// histogram-backed p50 superstep wall latency across all APP
-    /// iterations, in milliseconds (log-bucketed, ≤ 12.5% bucket error;
-    /// 0 when the scenario ran no supersteps)
-    pub superstep_p50_ms: f64,
-    /// histogram-backed p99 superstep wall latency, in milliseconds
-    pub superstep_p99_ms: f64,
-    /// per-rescale audit log
-    pub events: Vec<EventRecord>,
-    /// per-batch audit log
-    pub churn_events: Vec<ChurnRecord>,
-    /// per-nudge audit log of the rebalance policy
-    pub rebalances: Vec<RebalanceRecord>,
-}
-
-/// Run PageRank over an evolving graph: churn batches and rescales fire
-/// between iterations per `scenario`, every delta reaches the engine as
-/// range operations over a [`crate::stream::StagedAssignment`], and the
-/// staged state compacts through GEO when the quality budget is spent.
-/// Takes ownership of the graph — the staged base is GEO-ordered once at
-/// INIT.
-///
-/// Thin shim over [`Controller::drive`] pinned to the streaming
-/// substrate.
-#[deprecated(note = "use Controller::drive with a RunConfig")]
-#[allow(deprecated)]
-pub fn run_streaming<F>(
-    g: Graph,
-    scenario: &Scenario,
-    cfg: &StreamingConfig,
-    backend_for: F,
-) -> Result<StreamingBreakdown>
-where
-    F: FnMut(usize) -> Box<dyn ComputeBackend>,
-{
-    let run_cfg = RunConfig::from(cfg);
-    Ok(Controller::drive(g, scenario, &run_cfg, backend_for)?.into())
+    /// ownership epoch id this batch published — strictly monotone
+    /// across every transition of a run
+    pub epoch: u64,
 }
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)]
-
-    use super::*;
+    use super::super::config::{DriveMode, PolicyConfig, RunConfig};
+    use super::super::driver::Controller;
     use crate::graph::generators::{rmat, RmatParams};
+    use crate::graph::Graph;
     use crate::ordering::geo::{self, GeoConfig};
     use crate::runtime::native::NativeBackend;
+    use crate::scaling::netsim::{NetModelConfig, NetworkModel};
     use crate::scaling::scenario::Scenario;
 
     fn small_graph() -> Graph {
@@ -498,23 +131,34 @@ mod tests {
         geo::order(&g, &GeoConfig { k_min: 2, k_max: 8, ..Default::default() }).apply(&g)
     }
 
+    fn stream_geo() -> GeoConfig {
+        GeoConfig { k_min: 2, k_max: 8, ..Default::default() }
+    }
+
     #[test]
     fn cep_scenario_runs_and_accounts() {
         let g = small_graph();
         let scenario = Scenario::scale_out(3, 2, 3); // 3→5 over 9 iters
-        let cfg = ControllerConfig::default();
+        let cfg = RunConfig::new();
         let out =
-            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+            Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
         assert_eq!(out.final_k, 5);
         assert_eq!(out.events.len(), 2);
         assert!(out.migrated_edges > 0);
         assert!(out.app_s > 0.0 && out.scale_s > 0.0 && out.init_s > 0.0);
         assert!(
-            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.rebalance_s)).abs() < 1e-9
+            (out.all_s
+                - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
+                .abs()
+                < 1e-9
         );
         // the default policy is Off: no nudges, no rebalance seconds
         assert!(out.rebalances.is_empty());
         assert_eq!(out.rebalance_s, 0.0);
+        // every transition published a strictly later ownership epoch
+        let epochs: Vec<u64> = out.events.iter().map(|e| e.epoch).collect();
+        assert!(epochs.windows(2).all(|w| w[0] < w[1]), "{epochs:?}");
+        assert_eq!(out.final_epoch, *epochs.last().unwrap());
     }
 
     /// Acceptance: on the CEP path a coordinator-driven rescale reaches
@@ -524,9 +168,9 @@ mod tests {
     fn cep_rescale_reaches_engine_as_range_moves() {
         let g = small_graph();
         let scenario = Scenario::scale_out(4, 3, 2); // 4→7
-        let cfg = ControllerConfig::default();
+        let cfg = RunConfig::new();
         let out =
-            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+            Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
         assert_eq!(out.final_k, 7);
         for ev in &out.events {
             assert!(
@@ -554,14 +198,16 @@ mod tests {
     fn cep_scales_cheaper_than_stateless_oblivious() {
         let g = small_graph();
         let scenario = Scenario::scale_out(3, 2, 2);
-        let mut cep_cfg = ControllerConfig::default();
-        cep_cfg.method = "cep".into();
-        let mut obl_cfg = ControllerConfig::default();
-        obl_cfg.method = "oblivious".into();
-        let cep =
-            run_scenario(&g, &scenario, &cep_cfg, |_| Box::new(NativeBackend::new())).unwrap();
-        let obl =
-            run_scenario(&g, &scenario, &obl_cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        let cep_cfg = RunConfig::new().method("cep");
+        let obl_cfg = RunConfig::new().method("oblivious");
+        let cep = Controller::drive(g.clone(), &scenario, &cep_cfg, |_| {
+            Box::new(NativeBackend::new())
+        })
+        .unwrap();
+        let obl = Controller::drive(g.clone(), &scenario, &obl_cfg, |_| {
+            Box::new(NativeBackend::new())
+        })
+        .unwrap();
         // CEP's per-event migration obeys Theorem 2 (≈ m/2 per x=1 step)
         let m = g.num_edges() as f64;
         for ev in &cep.events {
@@ -580,9 +226,9 @@ mod tests {
     fn scale_in_works() {
         let g = small_graph();
         let scenario = Scenario::scale_in(5, 2, 2);
-        let cfg = ControllerConfig::default();
+        let cfg = RunConfig::new();
         let out =
-            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+            Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
         assert_eq!(out.final_k, 3);
     }
 
@@ -591,10 +237,11 @@ mod tests {
         let g = small_graph();
         let scenario = Scenario::scale_out(3, 1, 2);
         for method in ["bvc", "1d", "ginger"] {
-            let mut cfg = ControllerConfig::default();
-            cfg.method = method.into();
-            let out = run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new()))
-                .unwrap_or_else(|e| panic!("{method}: {e:#}"));
+            let cfg = RunConfig::new().method(method);
+            let out = Controller::drive(g.clone(), &scenario, &cfg, |_| {
+                Box::new(NativeBackend::new())
+            })
+            .unwrap_or_else(|e| panic!("{method}: {e:#}"));
             assert_eq!(out.final_k, 4, "{method}");
             assert_eq!(out.events.len(), 1, "{method}");
             assert!(out.migrated_edges > 0, "{method}");
@@ -609,10 +256,11 @@ mod tests {
         let g = small_graph();
         let scenario = Scenario::scale_in(5, 2, 2); // 5 → 3
         for method in ["bvc", "1d"] {
-            let mut cfg = ControllerConfig::default();
-            cfg.method = method.into();
-            let out = run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new()))
-                .unwrap_or_else(|e| panic!("{method}: {e:#}"));
+            let cfg = RunConfig::new().method(method);
+            let out = Controller::drive(g.clone(), &scenario, &cfg, |_| {
+                Box::new(NativeBackend::new())
+            })
+            .unwrap_or_else(|e| panic!("{method}: {e:#}"));
             assert_eq!(out.final_k, 3, "{method}");
             assert_eq!(out.events.len(), 2, "{method}");
             assert!(out.migrated_edges > 0, "{method}");
@@ -625,18 +273,15 @@ mod tests {
         let m0 = g.num_edges();
         // churn every 2 iterations, scale 3→5 at iterations 4 and 8
         let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
-        let cfg = StreamingConfig {
-            geo: GeoConfig { k_min: 2, k_max: 8, ..Default::default() },
-            audit_rf: true,
-            ..Default::default()
-        };
+        let cfg = RunConfig::new().geo(stream_geo()).audit_rf(true);
         let out =
-            run_streaming(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+            Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
         assert_eq!(out.final_k, 5);
         assert_eq!(out.events.len(), 2);
         assert_eq!(out.churn_events.len(), scenario.churn.len());
         assert!(
-            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
+            (out.all_s
+                - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
                 .abs()
                 < 1e-9
         );
@@ -651,7 +296,7 @@ mod tests {
         assert!(ins > 0 && del > 0);
         // flush_at_end folded the churn away
         assert!(out.compactions >= 1);
-        assert!(out.final_rf >= 1.0);
+        assert!(out.final_rf.unwrap() >= 1.0);
         for cr in &out.churn_events {
             // delta plans: O(k + batch) range ops, rebalancing moves O(k)
             assert!(
@@ -660,7 +305,7 @@ mod tests {
                 cr.at_iteration,
                 cr.range_ops
             );
-            assert!(cr.staging_fraction <= cfg.policy.budget + 0.05);
+            assert!(cr.staging_fraction <= cfg.compaction.budget + 0.05);
             assert!(cr.rf >= 1.0);
             // staged chunks are contiguous: the layout never fragments
             // beyond one interval per partition
@@ -682,15 +327,23 @@ mod tests {
             assert!(ev.layout_ranges <= ev.to_k);
         }
         assert!(out.layout_ranges <= out.final_k);
+        // churn batches, rescales and the final flush each published an
+        // ownership epoch; ids are strictly monotone per audit stream
+        let ce: Vec<u64> = out.churn_events.iter().map(|c| c.epoch).collect();
+        assert!(ce.windows(2).all(|w| w[0] < w[1]), "{ce:?}");
+        let ee: Vec<u64> = out.events.iter().map(|e| e.epoch).collect();
+        assert!(ee.windows(2).all(|w| w[0] < w[1]), "{ee:?}");
+        // the flush published after every audited transition
+        assert!(out.final_epoch > *ce.last().unwrap().max(ee.last().unwrap()));
     }
 
     #[test]
     fn streaming_without_churn_matches_plain_scale_shape() {
         let g = small_graph();
         let scenario = Scenario::scale_out(3, 2, 3);
-        let cfg = StreamingConfig::default();
+        let cfg = RunConfig::new().mode(DriveMode::Streaming);
         let out =
-            run_streaming(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+            Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
         assert_eq!(out.final_k, 5);
         assert!(out.churn_events.is_empty());
         assert_eq!(out.compactions, 0, "no churn, nothing to flush");
@@ -706,22 +359,20 @@ mod tests {
     /// priced second as blocking.
     #[test]
     fn emulated_and_closed_form_agree_on_cep_run() {
-        use crate::scaling::netsim::{NetModelConfig, NetworkModel};
         let g = small_graph();
         let scenario = Scenario::scale_out(3, 2, 3);
-        let closed_cfg = ControllerConfig::default();
-        let emu_cfg = ControllerConfig {
-            net_model: NetModelConfig {
-                model: NetworkModel::Emulated,
-                overlap: false,
-                ..Default::default()
-            },
+        let closed_cfg = RunConfig::new();
+        let emu_cfg = RunConfig::new().net_model(NetModelConfig {
+            model: NetworkModel::Emulated,
+            overlap: false,
             ..Default::default()
-        };
-        let closed =
-            run_scenario(&g, &scenario, &closed_cfg, |_| Box::new(NativeBackend::new())).unwrap();
-        let emu =
-            run_scenario(&g, &scenario, &emu_cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        });
+        let closed = Controller::drive(g.clone(), &scenario, &closed_cfg, |_| {
+            Box::new(NativeBackend::new())
+        })
+        .unwrap();
+        let emu = Controller::drive(g, &scenario, &emu_cfg, |_| Box::new(NativeBackend::new()))
+            .unwrap();
         assert_eq!(closed.events.len(), emu.events.len());
         assert!(closed.net_s > 0.0 && emu.net_s > 0.0);
         assert!(
@@ -738,21 +389,17 @@ mod tests {
         }
     }
 
-    /// Emulated overlap mode on the `run` path: every event's audit
+    /// Emulated overlap mode on the batch path: every event's audit
     /// record splits network time into a blocking and an overlapped
     /// share, and some migration traffic really hides behind the app
     /// window.
     #[test]
     fn emulated_overlap_splits_net_time_on_run() {
-        use crate::scaling::netsim::NetModelConfig;
         let g = small_graph();
         let scenario = Scenario::scale_out(3, 2, 3);
-        let cfg = ControllerConfig {
-            net_model: NetModelConfig::emulated(),
-            ..Default::default()
-        };
+        let cfg = RunConfig::new().net_model(NetModelConfig::emulated());
         let out =
-            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+            Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
         assert_eq!(out.events.len(), 2);
         assert!(out.net_s > 0.0);
         for ev in &out.events {
@@ -763,7 +410,10 @@ mod tests {
             assert!(ev.net_overlapped_ms > 0.0, "no overlap on {}→{}", ev.from_k, ev.to_k);
         }
         assert!(
-            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.rebalance_s)).abs() < 1e-9
+            (out.all_s
+                - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
+                .abs()
+                < 1e-9
         );
     }
 
@@ -772,18 +422,14 @@ mod tests {
     /// overlap (full rebuilds are sync points).
     #[test]
     fn streaming_emulated_model_exposes_net_split() {
-        use crate::scaling::netsim::NetModelConfig;
         let g = small_graph();
         let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
-        let cfg = StreamingConfig {
-            geo: GeoConfig { k_min: 2, k_max: 8, ..Default::default() },
-            net_model: NetModelConfig::emulated(),
-            ..Default::default()
-        };
+        let cfg = RunConfig::new().geo(stream_geo()).net_model(NetModelConfig::emulated());
         let out =
-            run_streaming(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+            Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
         assert!(
-            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
+            (out.all_s
+                - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
                 .abs()
                 < 1e-9
         );
@@ -800,33 +446,34 @@ mod tests {
         }
     }
 
-    /// Threshold rebalancing on the run path: metered skew trips the
+    /// Threshold rebalancing on the batch path: metered skew trips the
     /// policy, every nudge is ≤ 2(k−1) contiguous interval splices that
     /// keep the layout O(k), the solver-modeled imbalance drops, and the
     /// closed form prices every nudge as pure blocking time.
     #[test]
     fn threshold_rebalance_fires_and_reduces_imbalance() {
-        use crate::scaling::netsim::NetModelConfig;
         let g = small_graph();
         let scenario = Scenario::steady(4, 6);
-        let cfg = ControllerConfig {
+        let threshold = 1.01;
+        let cfg = RunConfig::new()
             // zero modeled compute: the cost profile is the metered comm
             // lanes alone, which a power-law graph skews hard
-            net_model: NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() },
-            rebalance: RebalanceConfig::threshold(1.01),
-            ..Default::default()
-        };
+            .net_model(NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() })
+            .policy(PolicyConfig::Threshold { threshold });
         let out =
-            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+            Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
         assert_eq!(out.final_k, 4);
         assert!(out.events.is_empty());
         assert!(!out.rebalances.is_empty(), "comm skew never tripped the 1.01 threshold");
         assert!(out.rebalance_s > 0.0);
         assert!(
-            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.rebalance_s)).abs() < 1e-9
+            (out.all_s
+                - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
+                .abs()
+                < 1e-9
         );
         for r in &out.rebalances {
-            assert!(r.imbalance_before > cfg.rebalance.threshold);
+            assert!(r.imbalance_before > threshold);
             assert!(
                 r.imbalance_after <= r.imbalance_before,
                 "nudge at {}: {} -> {}",
@@ -854,6 +501,9 @@ mod tests {
         }
         assert!(out.final_imbalance >= 1.0);
         assert!(out.layout_ranges <= out.final_k + 2 * (out.final_k - 1));
+        // each nudge is its own epoch transition
+        let re: Vec<u64> = out.rebalances.iter().map(|r| r.epoch).collect();
+        assert!(re.windows(2).all(|w| w[0] < w[1]), "{re:?}");
     }
 
     /// Rebalanced (weighted) boundaries survive rescales: the next scale
@@ -862,18 +512,18 @@ mod tests {
     /// shares like any other migration.
     #[test]
     fn rebalance_composes_with_rescales_under_emulation() {
-        use crate::scaling::netsim::NetModelConfig;
         let g = small_graph();
         let scenario = Scenario::scale_out(3, 2, 4); // 3→5 over 12 iters
-        let cfg = ControllerConfig {
+        let cfg = RunConfig::new()
             // small but positive modeled compute: costs stay comm-driven
             // while the emulator keeps a positive overlap window
-            net_model: NetModelConfig { compute_ns_per_edge: 0.1, ..NetModelConfig::emulated() },
-            rebalance: RebalanceConfig::threshold(1.01),
-            ..Default::default()
-        };
+            .net_model(NetModelConfig {
+                compute_ns_per_edge: 0.1,
+                ..NetModelConfig::emulated()
+            })
+            .policy(PolicyConfig::Threshold { threshold: 1.01 });
         let out =
-            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+            Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
         assert_eq!(out.final_k, 5);
         assert_eq!(out.events.len(), 2);
         assert!(!out.rebalances.is_empty(), "comm skew never tripped the 1.01 threshold");
@@ -902,29 +552,28 @@ mod tests {
     /// accounting is untouched, and the breakdown stays consistent.
     #[test]
     fn streaming_threshold_rebalance_nudges_boundaries() {
-        use crate::scaling::netsim::NetModelConfig;
         let g = small_graph();
         let m0 = g.num_edges();
         let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
-        let cfg = StreamingConfig {
-            geo: GeoConfig { k_min: 2, k_max: 8, ..Default::default() },
-            net_model: NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() },
-            rebalance: RebalanceConfig::threshold(1.01),
-            audit_rf: true,
-            ..Default::default()
-        };
+        let threshold = 1.01;
+        let cfg = RunConfig::new()
+            .geo(stream_geo())
+            .net_model(NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() })
+            .policy(PolicyConfig::Threshold { threshold })
+            .audit_rf(true);
         let out =
-            run_streaming(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+            Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
         assert_eq!(out.final_k, 5);
         assert!(
-            (out.all_s - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
+            (out.all_s
+                - (out.init_s + out.app_s + out.scale_s + out.churn_s + out.rebalance_s))
                 .abs()
                 < 1e-9
         );
         assert!(!out.rebalances.is_empty(), "comm skew never tripped the 1.01 threshold");
         assert!(out.rebalance_s > 0.0);
         for r in &out.rebalances {
-            assert!(r.imbalance_before > cfg.rebalance.threshold);
+            assert!(r.imbalance_before > threshold);
             assert!(r.imbalance_after <= r.imbalance_before);
             assert!(r.moved_edges > 0);
             assert!(r.range_moves <= 2 * (r.k - 1));
@@ -938,7 +587,7 @@ mod tests {
         for cr in &out.churn_events {
             assert!(cr.rf >= 1.0);
         }
-        assert!(out.final_rf >= 1.0);
+        assert!(out.final_rf.unwrap() >= 1.0);
         assert!(out.final_imbalance >= 1.0);
         assert!(out.layout_ranges <= out.final_k);
     }
@@ -947,8 +596,9 @@ mod tests {
     fn unknown_method_errors() {
         let g = small_graph();
         let scenario = Scenario::scale_out(2, 1, 2);
-        let mut cfg = ControllerConfig::default();
-        cfg.method = "nope".into();
-        assert!(run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).is_err());
+        let cfg = RunConfig::new().method("nope");
+        assert!(
+            Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).is_err()
+        );
     }
 }

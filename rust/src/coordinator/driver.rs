@@ -6,10 +6,22 @@
 //! feature (network pricing, skew rebalancing, observability) was wired
 //! into both paths by hand. `drive` dispatches on [`DriveMode`] (by
 //! default: streaming iff the scenario carries churn) into a single
-//! loop — CHURN → scripted SCALE → APP superstep → SENSE → POLICY —
-//! over a [`Substrate`] enum that owns either the immutable batch graph
-//! plus method state, or the staged streaming graph plus its weighted
-//! chunk boundaries.
+//! loop — CHURN → scripted SCALE → APP superstep → SERVE → SENSE →
+//! POLICY — over a [`Substrate`] enum that owns either the immutable
+//! batch graph plus method state, or the staged streaming graph plus
+//! its weighted chunk boundaries.
+//!
+//! Every ownership transition (rescale, churn batch, boundary nudge,
+//! compaction, final flush) is an **epoch transition**: the driver
+//! builds an immutable [`AssignmentEpoch`] snapshot of the
+//! post-transition assignment, masters and layout, publishes it to the
+//! engine's epoch store, and leaves the pre-transition epoch readable
+//! until the serving phase retires it — the double-read window the
+//! [`crate::serve::ShardRouter`] resolves moved edge-id ranges
+//! through. When [`RunConfig::serve`] is set, a deterministic
+//! open-loop workload issues point reads between supersteps; per-read
+//! latency is *modeled* ([`crate::serve::modeled_read_ns`]) and lands
+//! in `read_p50_ms`/`read_p99_ms`/`stale_reads` on the report.
 //!
 //! After every superstep the driver meters the *modeled* step latency
 //! (max per-partition cost from [`Engine::partition_costs`]: modeled
@@ -25,9 +37,7 @@
 //! `PALLAS_THREADS` width.
 
 use super::config::{DriveMode, RunConfig};
-use super::controller::{
-    ChurnRecord, EventRecord, RebalanceRecord, RunBreakdown, StreamingBreakdown,
-};
+use super::controller::{ChurnRecord, EventRecord, RebalanceRecord};
 use super::policy::{
     CandidatePricer, DecisionRecord, PricedAction, ScalingAction, SensorSnapshot,
 };
@@ -40,28 +50,32 @@ use crate::partition::bvc::BvcState;
 use crate::partition::cep::Cep;
 use crate::partition::weighted::{balanced_boundaries, imbalance, predicted_costs, uniform_bounds};
 use crate::partition::{
-    ginger, hash1d, oblivious, CepView, EdgePartition, PartitionAssignment, WeightedCepView,
+    ginger, hash1d, oblivious, AssignmentEpoch, CepView, EdgePartition, PartitionAssignment,
+    WeightedCepView,
 };
 use crate::runtime::{ComputeBackend, StepKind};
 use crate::scaling::migration::MigrationPlan;
 use crate::scaling::netsim::{self, NetModelConfig, NetSim};
 use crate::scaling::network::Network;
 use crate::scaling::scenario::Scenario;
+use crate::serve::{modeled_read_ns, ReadKind, ServeRecord, ShardRouter, WorkloadGen};
 use crate::stream::{quality as stream_quality, ChurnPlan, MutationBatch, StagedGraph};
 use crate::util::rng::Rng;
 use crate::Result;
 use anyhow::{bail, Context};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// The unified controller: [`Controller::drive`] replaces the
-/// `run_scenario` / `run_streaming` pair (both survive as thin
-/// deprecated shims over it).
+/// The unified controller: [`Controller::drive`] is the single entry
+/// point for scripted, policy-driven and churned runs on either
+/// substrate (the legacy `run_scenario` / `run_streaming` pair is
+/// gone).
 pub struct Controller;
 
-/// Full audit of one driven run: the union of the legacy
-/// [`RunBreakdown`] and [`StreamingBreakdown`] columns plus the policy
-/// decision stream and SLO accounting. Convert with `Into` when a
-/// legacy breakdown shape is needed.
+/// Full audit of one driven run: timing breakdown, quality and layout
+/// columns for both substrates, the scaling/churn/rebalance audit logs,
+/// the policy decision stream, SLO accounting and the serving read-path
+/// summary.
 #[derive(Clone, Debug)]
 pub struct RunReport {
     /// scenario name
@@ -138,59 +152,26 @@ pub struct RunReport {
     /// high-water mark of the spilled store's page-cache bytes
     /// (`--spill` batch runs only)
     pub peak_resident_bytes: Option<u64>,
-}
-
-impl From<RunReport> for RunBreakdown {
-    fn from(r: RunReport) -> RunBreakdown {
-        RunBreakdown {
-            method: r.method,
-            all_s: r.all_s,
-            init_s: r.init_s,
-            app_s: r.app_s,
-            scale_s: r.scale_s,
-            net_s: r.net_s,
-            migrated_edges: r.migrated_edges,
-            com_bytes: r.com_bytes,
-            final_k: r.final_k,
-            layout_ranges: r.layout_ranges,
-            layout_bytes: r.layout_bytes,
-            rebalance_s: r.rebalance_s,
-            final_imbalance: r.final_imbalance,
-            superstep_p50_ms: r.superstep_p50_ms,
-            superstep_p99_ms: r.superstep_p99_ms,
-            events: r.events,
-            rebalances: r.rebalances,
-        }
-    }
-}
-
-impl From<RunReport> for StreamingBreakdown {
-    fn from(r: RunReport) -> StreamingBreakdown {
-        StreamingBreakdown {
-            name: r.name,
-            all_s: r.all_s,
-            init_s: r.init_s,
-            app_s: r.app_s,
-            scale_s: r.scale_s,
-            churn_s: r.churn_s,
-            net_s: r.net_s,
-            com_bytes: r.com_bytes,
-            final_k: r.final_k,
-            final_rf: r.final_rf.unwrap_or(f64::NAN),
-            fresh_rf: r.fresh_rf,
-            layout_ranges: r.layout_ranges,
-            layout_bytes: r.layout_bytes,
-            compactions: r.compactions,
-            live_edges: r.live_edges,
-            rebalance_s: r.rebalance_s,
-            final_imbalance: r.final_imbalance,
-            superstep_p50_ms: r.superstep_p50_ms,
-            superstep_p99_ms: r.superstep_p99_ms,
-            events: r.events,
-            churn_events: r.churn_events,
-            rebalances: r.rebalances,
-        }
-    }
+    /// point reads issued by the serving workload over the whole run
+    /// (0 when serving is off)
+    pub reads: u64,
+    /// reads answered stale — via the pre-plan owner of a moved or
+    /// retired range — over the whole run
+    pub stale_reads: u64,
+    /// reads of a live key that no published epoch could route; the
+    /// serving contract pins this at 0
+    pub read_errors: u64,
+    /// modeled read-latency p50 across the run, milliseconds (serving
+    /// runs only)
+    pub read_p50_ms: Option<f64>,
+    /// modeled read-latency p99 across the run, milliseconds (serving
+    /// runs only)
+    pub read_p99_ms: Option<f64>,
+    /// per-iteration serving audit log (empty when serving is off)
+    pub serve_events: Vec<ServeRecord>,
+    /// id of the last published ownership epoch — a strictly monotone
+    /// count of every transition (rescale, churn, nudge, compaction)
+    pub final_epoch: u64,
 }
 
 pub(crate) enum MethodState {
@@ -206,7 +187,9 @@ pub(crate) enum MethodState {
 pub(crate) enum ActiveAssignment {
     Chunked(CepView),
     Weighted(WeightedCepView),
-    Materialized(EdgePartition),
+    /// `Arc`-held so epoch snapshots of per-edge methods share the
+    /// vector instead of cloning it per transition
+    Materialized(Arc<EdgePartition>),
 }
 
 impl ActiveAssignment {
@@ -214,7 +197,7 @@ impl ActiveAssignment {
         match self {
             ActiveAssignment::Chunked(v) => v,
             ActiveAssignment::Weighted(v) => v,
-            ActiveAssignment::Materialized(p) => p,
+            ActiveAssignment::Materialized(p) => p.as_ref(),
         }
     }
 
@@ -285,6 +268,86 @@ enum Substrate {
         /// build
         wbounds: Option<Vec<u64>>,
     },
+}
+
+impl Substrate {
+    /// Vertex-id space of the substrate's current graph.
+    fn num_vertices(&self) -> usize {
+        match self {
+            Substrate::Batch { edges, .. } => edges.source().num_vertices(),
+            Substrate::Stream { sg, .. } => sg.num_vertices(),
+        }
+    }
+
+    /// PageRank's 1/degree auxiliary vector. The resident batch graph
+    /// answers from its CSR; the paged spill derives degrees with one
+    /// sequential (readahead-friendly) edge scan — O(|V|) memory, never
+    /// a CSR; the staged graph answers through its live degree index.
+    /// Identical values on every path (no self loops, each undirected
+    /// edge stored once).
+    fn inv_degrees(&self) -> Vec<f32> {
+        let deg: Vec<u32> = match self {
+            Substrate::Batch { edges: BatchEdges::Resident(g), .. } => {
+                (0..g.num_vertices() as u32).map(|v| g.degree(v) as u32).collect()
+            }
+            Substrate::Batch { edges: BatchEdges::Paged(p), .. } => {
+                let src: &PagedEdges = p;
+                let mut deg = vec![0u32; EdgeSource::num_vertices(src)];
+                for id in 0..EdgeSource::num_edges(src) as u64 {
+                    let e = src.edge(id);
+                    deg[e.u as usize] += 1;
+                    deg[e.v as usize] += 1;
+                }
+                deg
+            }
+            Substrate::Stream { sg, .. } => {
+                (0..sg.num_vertices() as u32).map(|v| sg.degree(v)).collect()
+            }
+        };
+        deg.iter().map(|&d| if d == 0 { 0.0 } else { 1.0 / d as f32 }).collect()
+    }
+
+    /// Staging backlog the policy layer senses: the staged graph's
+    /// staging fraction, 0 on the immutable batch substrate.
+    fn staging_fraction(&self) -> f64 {
+        match self {
+            Substrate::Stream { sg, .. } => sg.staging_fraction(),
+            Substrate::Batch { .. } => 0.0,
+        }
+    }
+
+    /// Paged-store telemetry (`--spill` batch runs): publishes the
+    /// cache counters into the metrics registry and returns
+    /// `(cache_hit_rate, peak_resident_bytes)`; `(None, None)` when no
+    /// spill is active.
+    fn cache_stats(&self) -> (Option<f64>, Option<u64>) {
+        match self {
+            Substrate::Batch { edges, .. } => match edges.paged() {
+                Some(pe) => {
+                    pe.publish_obs();
+                    (Some(pe.cache_hit_rate()), Some(pe.peak_resident_bytes()))
+                }
+                None => (None, None),
+            },
+            Substrate::Stream { .. } => (None, None),
+        }
+    }
+
+    /// An immutable ownership snapshot of the current assignment under
+    /// epoch id `id` — the unit every transition publishes to the
+    /// engine's epoch store (masters attached by the publish path).
+    fn epoch_snapshot(&self, id: u64, k: usize) -> AssignmentEpoch {
+        match self {
+            Substrate::Batch { assignment, .. } => match assignment {
+                ActiveAssignment::Chunked(v) => v.epoch(id),
+                ActiveAssignment::Weighted(v) => v.epoch(id),
+                ActiveAssignment::Materialized(p) => {
+                    AssignmentEpoch::from_materialized(id, p.clone())
+                }
+            },
+            Substrate::Stream { sg, wbounds } => stream_epoch(sg, wbounds.as_ref(), id, k),
+        }
+    }
 }
 
 impl Controller {
@@ -377,25 +440,20 @@ impl Controller {
         };
         let mut init_s = t_init.elapsed().as_secs_f64() + provisioner.accounted().as_secs_f64();
 
+        // ---- epoch 0: the initial assignment's ownership snapshot;
+        // every later transition bumps the id and publishes the next one
+        let mut next_epoch_id: u64 = 0;
+        {
+            let snap = substrate
+                .epoch_snapshot(next_epoch_id, k)
+                .with_masters(engine.masters_snapshot());
+            engine.publish_epoch(Arc::new(snap));
+        }
+
         // ---- application state (PageRank), survives churn and rescales
-        let mut n = match &substrate {
-            Substrate::Batch { edges, .. } => edges.source().num_vertices(),
-            Substrate::Stream { sg, .. } => sg.num_vertices(),
-        };
+        let mut n = substrate.num_vertices();
         let mut ranks = vec![1.0f32 / n.max(1) as f32; n];
-        let mut aux: Vec<f32> = match &substrate {
-            Substrate::Batch { edges, .. } => inv_degrees(edges),
-            Substrate::Stream { sg, .. } => (0..n as u32)
-                .map(|v| {
-                    let d = sg.degree(v);
-                    if d == 0 {
-                        0.0
-                    } else {
-                        1.0 / d as f32
-                    }
-                })
-                .collect(),
-        };
+        let mut aux: Vec<f32> = substrate.inv_degrees();
         let mut active = vec![true; n];
 
         let mut app_s = 0.0f64;
@@ -412,6 +470,14 @@ impl Controller {
         let mut slo_violations = 0u64;
         let mut policy = cfg.policy.build();
         let slo_ref = cfg.slo_reference_ms();
+        // ---- serving state: the open-loop workload generator and the
+        // run-level modeled read-latency distribution
+        let mut workload = cfg.serve.as_ref().map(|s| WorkloadGen::new(s, n));
+        let read_hist = obs::Histogram::new();
+        let mut serve_log: Vec<ServeRecord> = Vec::new();
+        let mut reads_total = 0u64;
+        let mut stale_total = 0u64;
+        let mut read_errors = 0u64;
         // one superstep window per priced transfer: when several events
         // fire around the same APP phase (churn, rescale, rebalance),
         // only the first may hide its flows behind the window — the rest
@@ -474,34 +540,28 @@ impl Controller {
                             cfg.value_bytes,
                             app.as_ref(),
                         );
-                        match wbounds.as_ref() {
-                            Some(b) => {
-                                let view = WeightedCepView::from_bounds(b.clone());
-                                let assign = sg.weighted_assignment(&view);
-                                engine.apply_churn(&*sg, &plan, &assign, &mut backend_for)?;
-                            }
-                            None => {
-                                let assign = sg.assignment(k);
-                                engine.apply_churn(&*sg, &plan, &assign, &mut backend_for)?;
-                            }
-                        }
+                        churn_with_bounds(
+                            &mut engine,
+                            sg,
+                            wbounds.as_ref(),
+                            &plan,
+                            k,
+                            &mut backend_for,
+                        )?;
                         (cost, plan.moved_edges(), plan.range_ops())
                     };
                     grow_state(sg, &mut n, &mut ranks, &mut aux, &mut active);
+                    // publish the post-churn ownership as the next epoch
+                    // (a compaction rebuilt the engine — a sync point, so
+                    // its fresh store opens with no double-read window)
+                    next_epoch_id += 1;
+                    let snap = stream_epoch(sg, wbounds.as_ref(), next_epoch_id, k)
+                        .with_masters(engine.masters_snapshot());
+                    engine.publish_epoch(Arc::new(snap));
                     churn_s += t.elapsed().as_secs_f64() + cost.blocking_s;
                     net_s += cost.total_s;
                     let rf = if cfg.audit_rf {
-                        match wbounds.as_ref() {
-                            Some(b) => {
-                                let view = WeightedCepView::from_bounds(b.clone());
-                                let assign = sg.weighted_assignment(&view);
-                                stream_quality::live_replication_factor(sg, &assign)
-                            }
-                            None => {
-                                let assign = sg.assignment(k);
-                                stream_quality::live_replication_factor(sg, &assign)
-                            }
-                        }
+                        stream_live_rf(sg, wbounds.as_ref(), k)
                     } else {
                         f64::NAN
                     };
@@ -520,6 +580,7 @@ impl Controller {
                         net_blocking_ms: cost.blocking_s * 1e3,
                         net_overlapped_ms: cost.overlapped_s * 1e3,
                         rf,
+                        epoch: next_epoch_id,
                     };
                     emit_churn_span(&ev_sp, &rec);
                     churn_log.push(rec);
@@ -543,6 +604,7 @@ impl Controller {
                     &mut scale_s,
                     &mut net_s,
                     &mut event_log,
+                    &mut next_epoch_id,
                 )?;
             }
 
@@ -561,6 +623,103 @@ impl Controller {
             com_bytes += engine.comm.total_bytes();
             app_s += t_app.elapsed().as_secs_f64();
             window_free = true; // fresh superstep window metered in the lanes
+
+            // ---- SERVE: issue the open-loop point-read window through
+            // the published epoch pair. Everything here is a pure
+            // function of (workload seed, epoch metadata, app state), so
+            // counters, latencies and the route fingerprint are
+            // bit-identical at any thread width.
+            if let (Some(scfg), Some(gen)) = (cfg.serve.as_ref(), workload.as_mut()) {
+                let sv_sp = obs::span("serve");
+                gen.resize_keys(n);
+                let reads_target = scfg.arrival.reads_at(it, scfg.read_rate);
+                let router = ShardRouter::with_previous(
+                    engine
+                        .current_epoch()
+                        .cloned()
+                        .expect("every transition publishes before the serve phase"),
+                    engine.previous_epoch().cloned(),
+                );
+                // edge keys are drawn over the current epoch's physical
+                // id space, so retired and appended ids are reachable
+                // mid-plan
+                let id_space = router.current().num_edges();
+                let iter_hist = obs::Histogram::new();
+                let (mut double_reads, mut stale, mut misses) = (0u64, 0u64, 0u64);
+                // a live key is always routable by construction (misses
+                // are tombstoned keys — deleted data); the counter stays
+                // in the audit contract so a router regression surfaces
+                let errors = 0u64;
+                let mut fp: u64 = 0xcbf29ce484222325;
+                for _ in 0..reads_target {
+                    let op = gen.next_read(id_space);
+                    let decision = match op.kind {
+                        ReadKind::EdgeOwner => match router.route_edge(op.edge) {
+                            Some(d) => d,
+                            None => {
+                                misses += 1;
+                                fp = fnv_fold(fp, op.edge ^ u64::MAX);
+                                continue;
+                            }
+                        },
+                        _ => router.route_vertex(op.vertex),
+                    };
+                    if decision.double_read {
+                        double_reads += 1;
+                    }
+                    if decision.stale {
+                        stale += 1;
+                    }
+                    let degree = match aux.get(op.vertex as usize) {
+                        Some(&a) if a > 0.0 => (1.0 / a).round() as u32,
+                        _ => 0,
+                    };
+                    let key = match op.kind {
+                        ReadKind::EdgeOwner => op.edge,
+                        _ => op.vertex as u64,
+                    };
+                    let ns = modeled_read_ns(op.kind, &decision, degree, key);
+                    read_hist.record(ns);
+                    iter_hist.record(ns);
+                    obs::hist_record("read_modeled_ns", ns);
+                    fp = fnv_fold(fp, decision.partition as u64);
+                    fp = fnv_fold(fp, decision.epoch);
+                    fp = fnv_fold(fp, ((decision.double_read as u64) << 1) | decision.stale as u64);
+                    if op.kind == ReadKind::AppState {
+                        let r = ranks.get(op.vertex as usize).copied().unwrap_or(0.0);
+                        fp = fnv_fold(fp, r.to_bits() as u64);
+                    }
+                }
+                let isnap = iter_hist.snapshot();
+                sv_sp.add("reads", reads_target as u64);
+                sv_sp.add("double_reads", double_reads);
+                sv_sp.add("stale_reads", stale);
+                sv_sp.add("misses", misses);
+                sv_sp.add("errors", errors);
+                sv_sp.add("epoch", router.current().epoch_id());
+                sv_sp.add("read_p50_ns", isnap.quantile(0.50));
+                sv_sp.add("read_p99_ns", isnap.quantile(0.99));
+                serve_log.push(ServeRecord {
+                    at_iteration: it,
+                    epoch: router.current().epoch_id(),
+                    reads: reads_target as u64,
+                    double_reads,
+                    stale_reads: stale,
+                    misses,
+                    errors,
+                    p50_ms: isnap.quantile(0.50) as f64 / 1e6,
+                    p99_ms: isnap.quantile(0.99) as f64 / 1e6,
+                    route_fp: fp,
+                });
+                reads_total += reads_target as u64;
+                stale_total += stale;
+                read_errors += errors;
+                drop(router);
+                // the serving window over this transition is done — the
+                // pre-plan epoch retires and the next transition opens a
+                // fresh double-read window
+                engine.retire_previous_epoch();
+            }
 
             // ---- SENSE: meter the modeled step latency (logical, not
             // wall clock) and audit it against the SLO reference.
@@ -599,10 +758,7 @@ impl Controller {
                     costs: costs.clone(),
                     imbalance: imbalance(&costs),
                     comm_bytes: engine.comm.total_bytes(),
-                    backlog: match &substrate {
-                        Substrate::Stream { sg, .. } => sg.staging_fraction(),
-                        Substrate::Batch { .. } => 0.0,
-                    },
+                    backlog: substrate.staging_fraction(),
                     price: scenario.price_at(it),
                     has_bounds: bounds.is_some(),
                 };
@@ -636,6 +792,7 @@ impl Controller {
                             &mut scale_s,
                             &mut net_s,
                             &mut event_log,
+                            &mut next_epoch_id,
                         )?;
                     }
                     ScalingAction::Nudge => {
@@ -651,6 +808,7 @@ impl Controller {
                             &mut rebalance_s,
                             &mut net_s,
                             &mut rebalance_log,
+                            &mut next_epoch_id,
                         )?
                         .unwrap_or(0.0);
                     }
@@ -681,19 +839,15 @@ impl Controller {
                     if let Some(b) = wbounds.as_mut() {
                         *b = uniform_bounds(sg.physical_edges() as u64, k);
                     }
+                    // the flush is a transition too: the folded layout is
+                    // the run's final published epoch
+                    next_epoch_id += 1;
+                    let snap = stream_epoch(sg, wbounds.as_ref(), next_epoch_id, k)
+                        .with_masters(engine.masters_snapshot());
+                    engine.publish_epoch(Arc::new(snap));
                     churn_s += t.elapsed().as_secs_f64();
                 }
-                let final_rf = match wbounds.as_ref() {
-                    Some(b) => {
-                        let view = WeightedCepView::from_bounds(b.clone());
-                        let assign = sg.weighted_assignment(&view);
-                        stream_quality::live_replication_factor(sg, &assign)
-                    }
-                    None => {
-                        let assign = sg.assignment(k);
-                        stream_quality::live_replication_factor(sg, &assign)
-                    }
-                };
+                let final_rf = stream_live_rf(sg, wbounds.as_ref(), k);
                 let fresh_rf = if cfg.measure_fresh_baseline {
                     let live = sg.as_graph();
                     let mut fresh_cfg = cfg.geo;
@@ -714,16 +868,7 @@ impl Controller {
         // ---- paged-substrate telemetry: published into the metrics
         // registry (excluded from the cross-width span fingerprint) and
         // surfaced on the report
-        let (cache_hit_rate, peak_resident_bytes) = match &substrate {
-            Substrate::Batch { edges, .. } => match edges.paged() {
-                Some(pe) => {
-                    pe.publish_obs();
-                    (Some(pe.cache_hit_rate()), Some(pe.peak_resident_bytes()))
-                }
-                None => (None, None),
-            },
-            Substrate::Stream { .. } => (None, None),
-        };
+        let (cache_hit_rate, peak_resident_bytes) = substrate.cache_stats();
 
         let ss = superstep_hist.snapshot();
         let mss = modeled_hist.snapshot();
@@ -737,9 +882,23 @@ impl Controller {
             scn.add("compactions", compactions as u64);
         }
         scn.add("final_k", k as u64);
+        scn.add("final_epoch", next_epoch_id);
         if policy.is_some() {
             scn.add("decisions", decisions.len() as u64);
         }
+        if cfg.serve.is_some() {
+            scn.add("reads", reads_total);
+            scn.add("stale_reads", stale_total);
+        }
+        let rs = read_hist.snapshot();
+        let (read_p50_ms, read_p99_ms) = if cfg.serve.is_some() {
+            (
+                Some(rs.quantile(0.50) as f64 / 1e6),
+                Some(rs.quantile(0.99) as f64 / 1e6),
+            )
+        } else {
+            (None, None)
+        };
         Ok(RunReport {
             name: scenario.name.clone(),
             method: cfg.method.clone(),
@@ -773,32 +932,105 @@ impl Controller {
             decisions,
             cache_hit_rate,
             peak_resident_bytes,
+            reads: reads_total,
+            stale_reads: stale_total,
+            read_errors,
+            read_p50_ms,
+            read_p99_ms,
+            serve_events: serve_log,
+            final_epoch: next_epoch_id,
         })
     }
 }
 
-/// PageRank's 1/degree auxiliary vector for the batch substrate. The
-/// resident graph answers from its CSR; the paged spill derives degrees
-/// with one sequential (readahead-friendly) edge scan — O(|V|) memory,
-/// never a CSR. Identical values either way (no self loops, each
-/// undirected edge stored once).
-fn inv_degrees(edges: &BatchEdges) -> Vec<f32> {
-    let deg: Vec<u32> = match edges {
-        BatchEdges::Resident(g) => {
-            (0..g.num_vertices() as u32).map(|v| g.degree(v) as u32).collect()
+/// Ownership snapshot of the streaming substrate's current assignment:
+/// the weighted staged view when nudged boundaries are carried, the
+/// uniform staged assignment otherwise. Shared by
+/// [`Substrate::epoch_snapshot`] and the churn/flush publish sites
+/// (which hold the destructured `sg`/`wbounds` borrows).
+fn stream_epoch(
+    sg: &StagedGraph,
+    wbounds: Option<&Vec<u64>>,
+    id: u64,
+    k: usize,
+) -> AssignmentEpoch {
+    match wbounds {
+        Some(b) => {
+            let view = WeightedCepView::from_bounds(b.clone());
+            sg.weighted_assignment(&view).epoch(id)
         }
-        BatchEdges::Paged(p) => {
-            let src: &PagedEdges = p;
-            let mut deg = vec![0u32; EdgeSource::num_vertices(src)];
-            for id in 0..EdgeSource::num_edges(src) as u64 {
-                let e = src.edge(id);
-                deg[e.u as usize] += 1;
-                deg[e.v as usize] += 1;
-            }
-            deg
+        None => sg.assignment(k).epoch(id),
+    }
+}
+
+/// Live replication factor of the streaming substrate under its current
+/// boundary mode — the one O(|E|) audit sweep both the per-batch
+/// `audit_rf` hook and the end-of-run quality column share.
+fn stream_live_rf(sg: &StagedGraph, wbounds: Option<&Vec<u64>>, k: usize) -> f64 {
+    match wbounds {
+        Some(b) => {
+            let view = WeightedCepView::from_bounds(b.clone());
+            let assign = sg.weighted_assignment(&view);
+            stream_quality::live_replication_factor(sg, &assign)
         }
-    };
-    deg.iter().map(|&d| if d == 0 { 0.0 } else { 1.0 / d as f32 }).collect()
+        None => {
+            let assign = sg.assignment(k);
+            stream_quality::live_replication_factor(sg, &assign)
+        }
+    }
+}
+
+/// Apply a churn plan under the streaming substrate's boundary mode
+/// (weighted when nudged bounds are carried, uniform otherwise).
+fn churn_with_bounds<F>(
+    engine: &mut Engine,
+    sg: &StagedGraph,
+    wbounds: Option<&Vec<u64>>,
+    plan: &ChurnPlan,
+    k: usize,
+    backend_for: &mut F,
+) -> Result<()>
+where
+    F: FnMut(usize) -> Box<dyn ComputeBackend>,
+{
+    match wbounds {
+        Some(b) => {
+            let view = WeightedCepView::from_bounds(b.clone());
+            let assign = sg.weighted_assignment(&view);
+            engine.apply_churn(sg, plan, &assign, &mut *backend_for)
+        }
+        None => {
+            let assign = sg.assignment(k);
+            engine.apply_churn(sg, plan, &assign, &mut *backend_for)
+        }
+    }
+}
+
+/// Publish the substrate's post-transition ownership as the next epoch.
+/// The pre-transition epoch shifts into the engine's previous slot and
+/// stays readable (the double-read window) until the serving phase
+/// retires it. Returns the published id.
+fn publish_transition(
+    substrate: &Substrate,
+    engine: &mut Engine,
+    next_id: &mut u64,
+    k: usize,
+) -> u64 {
+    *next_id += 1;
+    let snap = substrate.epoch_snapshot(*next_id, k).with_masters(engine.masters_snapshot());
+    engine.publish_epoch(Arc::new(snap));
+    *next_id
+}
+
+/// FNV-1a over one little-endian `u64` word — the serving phase folds
+/// every routing decision into a run fingerprint with it.
+fn fnv_fold(fp: u64, word: u64) -> u64 {
+    let mut h = fp;
+    for b in word.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
 }
 
 /// Execute one rescale to `target_k` on either substrate: derive the
@@ -822,6 +1054,7 @@ fn exec_scale<F>(
     scale_s: &mut f64,
     net_s: &mut f64,
     event_log: &mut Vec<EventRecord>,
+    next_epoch_id: &mut u64,
 ) -> Result<f64>
 where
     F: FnMut(usize) -> Box<dyn ComputeBackend>,
@@ -916,6 +1149,7 @@ where
         }
     };
     *k = target_k;
+    let epoch = publish_transition(substrate, engine, next_epoch_id, target_k);
     // only the blocking share stalls the app; overlapped seconds ride
     // inside the APP window
     let total = t_scale.elapsed().as_secs_f64() + cost.blocking_s + prov.as_secs_f64();
@@ -930,6 +1164,7 @@ where
         layout_ranges: engine.layout().total_ranges(),
         net_blocking_ms: cost.blocking_s * 1e3,
         net_overlapped_ms: cost.overlapped_s * 1e3,
+        epoch,
     };
     emit_event_span(&ev_sp, &rec);
     event_log.push(rec);
@@ -954,6 +1189,7 @@ fn exec_nudge<F>(
     rebalance_s: &mut f64,
     net_s: &mut f64,
     rebalance_log: &mut Vec<RebalanceRecord>,
+    next_epoch_id: &mut u64,
 ) -> Result<Option<f64>>
 where
     F: FnMut(usize) -> Box<dyn ComputeBackend>,
@@ -995,6 +1231,7 @@ where
             *wbounds = Some(new_bounds);
         }
     }
+    let epoch = publish_transition(substrate, engine, next_epoch_id, k);
     let rec = RebalanceRecord {
         at_iteration: it,
         k,
@@ -1005,6 +1242,7 @@ where
         layout_ranges: engine.layout().total_ranges(),
         net_blocking_ms: cost.blocking_s * 1e3,
         net_overlapped_ms: cost.overlapped_s * 1e3,
+        epoch,
     };
     emit_rebalance_span(&rb_sp, &rec);
     rebalance_log.push(rec);
@@ -1103,9 +1341,9 @@ fn initial_assignment(
 ) -> ActiveAssignment {
     match state {
         MethodState::Cep(c) => ActiveAssignment::Chunked(CepView::new(*c)),
-        MethodState::Bvc(b) => ActiveAssignment::Materialized(b.to_partition()),
+        MethodState::Bvc(b) => ActiveAssignment::Materialized(Arc::new(b.to_partition())),
         MethodState::Stateless => {
-            ActiveAssignment::Materialized(stateless_partition(g, method, k))
+            ActiveAssignment::Materialized(Arc::new(stateless_partition(g, method, k)))
         }
     }
 }
@@ -1141,18 +1379,14 @@ fn plan_rescale(
             let before = b.to_partition();
             b.scale_to(target_k);
             let after = b.to_partition();
-            (
-                MigrationPlan::diff(&before, &after),
-                ActiveAssignment::Materialized(after),
-            )
+            let plan = MigrationPlan::diff(&before, &after);
+            (plan, ActiveAssignment::Materialized(Arc::new(after)))
         }
         MethodState::Stateless => {
             let g = g.expect("stateless methods keep the graph resident");
             let after = stateless_partition(g, method, target_k);
-            (
-                MigrationPlan::diff(current.as_assignment(), &after),
-                ActiveAssignment::Materialized(after),
-            )
+            let plan = MigrationPlan::diff(current.as_assignment(), &after);
+            (plan, ActiveAssignment::Materialized(Arc::new(after)))
         }
     }
 }
@@ -1235,6 +1469,7 @@ fn emit_event_span(sp: &obs::SpanGuard, r: &EventRecord) {
     sp.add("migrated_edges", r.migrated_edges);
     sp.add("range_moves", r.range_moves as u64);
     sp.add("layout_ranges", r.layout_ranges as u64);
+    sp.add("epoch", r.epoch);
     sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
     sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
 }
@@ -1252,6 +1487,7 @@ fn emit_churn_span(sp: &obs::SpanGuard, r: &ChurnRecord) {
     sp.add("layout_ranges", r.layout_ranges as u64);
     sp.add("tombstones_after", r.tombstones_after as u64);
     sp.add("compacted", r.compacted as u64);
+    sp.add("epoch", r.epoch);
     sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
     sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
 }
@@ -1264,6 +1500,7 @@ fn emit_rebalance_span(sp: &obs::SpanGuard, r: &RebalanceRecord) {
     sp.add("moved_edges", r.moved_edges);
     sp.add("range_moves", r.range_moves as u64);
     sp.add("layout_ranges", r.layout_ranges as u64);
+    sp.add("epoch", r.epoch);
     sp.add_secs("net_blocking_ns", r.net_blocking_ms * 1e-3);
     sp.add_secs("net_overlapped_ns", r.net_overlapped_ms * 1e-3);
 }

@@ -23,15 +23,9 @@ pub mod provisioner;
 pub mod state;
 
 pub use config::{DriveMode, PolicyConfig, RunConfig};
-pub use controller::{
-    ChurnRecord, EventRecord, RebalanceConfig, RebalanceMode, RebalanceRecord, RunBreakdown,
-    StreamingBreakdown,
-};
+pub use controller::{ChurnRecord, EventRecord, RebalanceRecord};
 pub use driver::{Controller, RunReport};
 pub use policy::{
     trigger, CandidatePricer, CandidateRecord, DecisionRecord, PricedAction, ScalingAction,
     ScalingPolicy, SensorSnapshot, SloConfig, SloPolicy, ThresholdPolicy,
 };
-
-#[allow(deprecated)]
-pub use controller::{run_scenario, run_streaming, ControllerConfig, StreamingConfig};

@@ -23,7 +23,7 @@ pub mod worker;
 use crate::graph::EdgeSource;
 use crate::obs;
 use crate::par::{self, ThreadConfig};
-use crate::partition::PartitionAssignment;
+use crate::partition::{AssignmentEpoch, PartitionAssignment};
 use crate::runtime::{ComputeBackend, StepKind};
 use crate::scaling::migration::MigrationPlan;
 use crate::stream::plan::ChurnPlan;
@@ -31,6 +31,7 @@ use crate::Result;
 use comm::CommMeter;
 use mirrors::PartitionLayout;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use worker::Worker;
 
 /// Combine rule of the apply phase.
@@ -55,6 +56,13 @@ pub struct Engine {
     pub comm: CommMeter,
     /// executor width for supersteps (pure execution knob)
     threads: ThreadConfig,
+    /// the published ownership snapshot readers route by (`None` until
+    /// the driver publishes one; direct engine users are unaffected)
+    epoch: Option<Arc<AssignmentEpoch>>,
+    /// the pre-transition snapshot, kept readable while the splice the
+    /// current epoch encodes is still in flight — the serving router
+    /// double-reads across the `(previous, current)` pair
+    prev_epoch: Option<Arc<AssignmentEpoch>>,
 }
 
 impl Engine {
@@ -82,6 +90,8 @@ impl Engine {
             workers,
             comm: CommMeter::with_workers(k),
             threads: ThreadConfig::default(),
+            epoch: None,
+            prev_epoch: None,
         })
     }
 
@@ -207,6 +217,45 @@ impl Engine {
     /// The partition layout (mirror placement etc.).
     pub fn layout(&self) -> &PartitionLayout {
         &self.layout
+    }
+
+    /// Publish the post-transition ownership snapshot: the current epoch
+    /// (if any) shifts to the previous slot and stays fully readable —
+    /// the transition's splice never blocks a point read. Callers
+    /// publish *after* [`Self::apply_migration`]/[`Self::apply_churn`]
+    /// and retire the previous epoch once the overlap window closes.
+    pub fn publish_epoch(&mut self, epoch: Arc<AssignmentEpoch>) {
+        debug_assert!(
+            self.epoch.as_ref().map_or(true, |e| e.epoch_id() < epoch.epoch_id()),
+            "epoch ids must be strictly monotone"
+        );
+        self.prev_epoch = self.epoch.take();
+        self.epoch = Some(epoch);
+    }
+
+    /// The currently published ownership snapshot, if any.
+    pub fn current_epoch(&self) -> Option<&Arc<AssignmentEpoch>> {
+        self.epoch.as_ref()
+    }
+
+    /// The pre-transition snapshot still readable during the in-flight
+    /// splice, if any.
+    pub fn previous_epoch(&self) -> Option<&Arc<AssignmentEpoch>> {
+        self.prev_epoch.as_ref()
+    }
+
+    /// Close the double-read window: drop (and return) the previous
+    /// epoch once the transition that superseded it has fully settled.
+    pub fn retire_previous_epoch(&mut self) -> Option<Arc<AssignmentEpoch>> {
+        self.prev_epoch.take()
+    }
+
+    /// Snapshot the layout's master index (`u32::MAX` = isolated) for
+    /// attaching to an [`AssignmentEpoch`] via
+    /// [`AssignmentEpoch::with_masters`].
+    pub fn masters_snapshot(&self) -> Arc<[u32]> {
+        let n = self.layout.num_vertices();
+        (0..n as u32).map(|v| self.layout.master_of(v)).collect::<Vec<u32>>().into()
     }
 
     /// Snapshot the currently metered superstep traffic as emulator

@@ -96,6 +96,29 @@
 //! realized step one iteration later), mirrored as an `event:decision`
 //! span, and bit-identical at any thread width.
 //!
+//! ## Serving through migrations
+//!
+//! Scaling is only "free" if reads stay live while it happens. Every
+//! ownership transition above — rescale, churn batch, boundary nudge,
+//! compaction — now publishes an immutable
+//! [`partition::AssignmentEpoch`]: an `Arc`-shared snapshot of the
+//! assignment view, its [`partition::IdRangeSet`] layout, the master
+//! index and a strictly monotone epoch id, answering owner lookups in
+//! O(1)/O(log k) straight from chunk arithmetic. The [`serve`]
+//! subsystem routes point reads (neighborhood, degree, app state such
+//! as PageRank scores) through the published pair
+//! ([`serve::ShardRouter`]): while a plan is in flight both epochs stay
+//! readable and moved edge-id ranges resolve by **double-read** —
+//! consult the pre-plan owner, fall back to the post-plan one — so a
+//! live key never errors mid-migration. A deterministic open-loop
+//! workload generator ([`serve::WorkloadGen`]: Zipf-skewed keys,
+//! configurable arrival curve, seeded RNG) issues reads between
+//! supersteps inside [`coordinator::Controller::drive`]
+//! ([`coordinator::RunConfig::serve`]); per-read latency is *modeled*
+//! ([`serve::modeled_read_ns`]) and fed into the [`obs`] histograms, so
+//! `read_p50_ms`/`read_p99_ms`/`stale_reads` land on audit records and
+//! bench rows bit-identically at any thread width.
+//!
 //! Every hot path above (CSR construction, the quality sweeps, engine
 //! supersteps and mirror aggregation, staged-batch ingest) runs on the
 //! [`par`] deterministic parallel runtime: one scoped thread pool with a
@@ -185,6 +208,7 @@ pub mod par;
 pub mod partition;
 pub mod runtime;
 pub mod scaling;
+pub mod serve;
 pub mod stream;
 pub mod theory;
 pub mod util;

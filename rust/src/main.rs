@@ -11,6 +11,7 @@
 //!               [--policy off|threshold|slo] [--slo-p99-ms 5] [--slo-ref-ms t]
 //!               [--rebalance off|threshold] [--rebalance-threshold 1.15]
 //!               [--spill dir] [--page-cache-mb n] [--trace-out trace.jsonl]
+//!               [--serve] [--read-rate 64] [--zipf 1.1]
 //! egs report    --in trace.jsonl
 //! egs table2
 //! egs info      --dataset orkut-s
@@ -60,6 +61,14 @@
 //! (`--page-cache-mb`, default from `PALLAS_PAGE_CACHE_MB` or 64).
 //! Results are bit-identical to the resident run; the summary reports
 //! the cache hit rate and peak resident bytes of the page cache.
+//!
+//! `--serve` turns on the serving read path: a deterministic open-loop
+//! workload ([`egs::serve::WorkloadGen`], `--read-rate` reads per
+//! iteration at Zipf skew `--zipf`) issues point reads between
+//! supersteps, routed through the published ownership epochs
+//! ([`egs::serve::ShardRouter`]) so reads stay live through every
+//! migration via double-read. The summary reports read counts, the
+//! stale/double-read tallies and the modeled read p50/p99.
 
 use anyhow::{bail, Context};
 use egs::coordinator::{Controller, PolicyConfig, RunConfig, ScalingAction, SloConfig};
@@ -306,6 +315,14 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
     if args.get("page-cache-mb").is_some() {
         cfg = cfg.page_cache_mb(args.get_parse::<usize>("page-cache-mb", 64));
     }
+    if args.flag("serve") || args.get("read-rate").is_some() || args.get("zipf").is_some() {
+        cfg = cfg.serve(
+            egs::serve::ServeConfig::new()
+                .read_rate(args.get_parse::<u32>("read-rate", 64))
+                .zipf_s(args.get_parse::<f64>("zipf", 1.1))
+                .seed(seed),
+        );
+    }
     let trace_out = args.get("trace-out");
     let mut factory = backend_factory(args)?;
     if trace_out.is_some() {
@@ -417,6 +434,18 @@ fn cmd_elastic(args: &Args) -> egs::Result<()> {
         out.superstep_p99_ms,
         scenario.total_iterations
     );
+    if cfg.serve.is_some() {
+        println!(
+            "  serving: {} reads ({} stale, {} errors), modeled read p50 {:.3} ms \
+             p99 {:.3} ms, final epoch {}",
+            out.reads,
+            out.stale_reads,
+            out.read_errors,
+            out.read_p50_ms.unwrap_or(0.0),
+            out.read_p99_ms.unwrap_or(0.0),
+            out.final_epoch
+        );
+    }
     if let (Some(path), Some(data)) = (trace_out, trace.as_ref()) {
         egs::obs::write_jsonl(std::path::Path::new(path), data, cfg.threads.threads())
             .with_context(|| format!("writing trace to {path}"))?;

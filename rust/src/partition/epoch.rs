@@ -1,0 +1,323 @@
+//! **Epoch-versioned ownership snapshots** — the immutable read-side
+//! authority the serving tier routes by.
+//!
+//! Every mutable ownership structure in the pipeline ([`CepView`],
+//! [`WeightedCepView`], [`crate::stream::StagedAssignment`], the engine's
+//! [`crate::engine::mirrors::PartitionLayout`]) is patched in place while
+//! a [`crate::scaling::migration::MigrationPlan`] or
+//! [`crate::stream::ChurnPlan`] executes, so nothing could safely answer
+//! an owner query mid-splice. An [`AssignmentEpoch`] fixes that by
+//! snapshotting everything a reader needs — the assignment view, the
+//! per-partition [`IdRangeSet`] layout, the master index, and a strictly
+//! monotone epoch id — into one cheap, immutable, `Arc`-shared value:
+//!
+//! * owner lookup is the same O(1)/O(log k) chunk arithmetic the views
+//!   use (never a per-edge vector on the CEP paths),
+//! * liveness is an O(log t) probe of the owned, sorted tombstone
+//!   snapshot,
+//! * publication is an `Arc` pointer swap, so the previous epoch stays
+//!   fully readable while the next one is spliced in — the
+//!   [`crate::serve`] router double-reads across the pair and no read
+//!   ever blocks on a migration.
+//!
+//! The views are *constructors* of epochs, not long-lived authorities:
+//! [`CepView::epoch`], [`WeightedCepView::epoch`] and
+//! [`crate::stream::StagedAssignment::epoch`] each freeze their current
+//! state into a snapshot and hand ownership of the copy to the epoch.
+
+use super::cep::Cep;
+use super::intervals::IdRangeSet;
+use super::view::CepView;
+use super::weighted::WeightedCepView;
+use super::{EdgePartition, PartitionAssignment};
+use crate::{EdgeId, PartitionId, VertexId};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Sentinel in the master snapshot for vertices without a master
+/// (isolated in the layout the snapshot was taken from).
+const NO_MASTER: u32 = u32::MAX;
+
+/// The assignment view frozen inside an epoch: chunk metadata for the
+/// CEP paths (O(1) owner queries), weighted boundaries after a skew
+/// nudge (O(log k)), or a shared materialized vector for the scattered
+/// methods.
+#[derive(Clone, Debug)]
+enum EpochView {
+    Chunked(Cep),
+    Weighted(WeightedCepView),
+    Materialized(Arc<EdgePartition>),
+}
+
+/// An immutable, `Arc`-shared snapshot of ownership state at one point
+/// in the scale/churn/rebalance chain: assignment view, per-partition
+/// [`IdRangeSet`] layout, tombstone set, master index, and the epoch id.
+///
+/// Epochs are cheap on the chunked paths — O(k) metadata plus the
+/// tombstone copy — and never change after construction; the driver
+/// publishes a new one on every ownership transition and keeps the
+/// previous one readable until the transition's splice has retired.
+#[derive(Clone, Debug)]
+pub struct AssignmentEpoch {
+    id: u64,
+    view: EpochView,
+    /// sorted, owned tombstone snapshot (empty on batch substrates)
+    tombstones: Arc<[EdgeId]>,
+    /// master partition per vertex ([`NO_MASTER`] = isolated); empty
+    /// when the epoch was built without a layout snapshot
+    masters: Arc<[u32]>,
+    /// nominal per-partition edge-id intervals, derived from the view
+    layout: Arc<[IdRangeSet]>,
+}
+
+impl AssignmentEpoch {
+    fn build(id: u64, view: EpochView, tombstones: Arc<[EdgeId]>) -> AssignmentEpoch {
+        debug_assert!(tombstones.windows(2).all(|w| w[0] < w[1]), "tombstones unsorted");
+        let layout: Vec<IdRangeSet> = match &view {
+            EpochView::Chunked(c) => {
+                (0..c.k() as PartitionId).map(|p| IdRangeSet::from_range(c.range(p))).collect()
+            }
+            EpochView::Weighted(w) => {
+                (0..w.k() as PartitionId).map(|p| IdRangeSet::from_range(w.range(p))).collect()
+            }
+            EpochView::Materialized(part) => {
+                let mut sets = vec![IdRangeSet::new(); part.k];
+                for (i, &p) in part.assign.iter().enumerate() {
+                    sets[p as usize].push_back(i as EdgeId);
+                }
+                sets
+            }
+        };
+        AssignmentEpoch {
+            id,
+            view,
+            tombstones,
+            masters: Arc::from(Vec::new()),
+            layout: Arc::from(layout),
+        }
+    }
+
+    /// Snapshot a uniform CEP layout — O(k) metadata.
+    pub fn from_chunked(id: u64, cep: Cep) -> AssignmentEpoch {
+        AssignmentEpoch::build(id, EpochView::Chunked(cep), Arc::from(Vec::new()))
+    }
+
+    /// Snapshot skew-nudged weighted boundaries — O(k) metadata.
+    pub fn from_weighted(id: u64, view: WeightedCepView) -> AssignmentEpoch {
+        AssignmentEpoch::build(id, EpochView::Weighted(view), Arc::from(Vec::new()))
+    }
+
+    /// Snapshot a materialized per-edge assignment (scattered methods) —
+    /// O(m), shared by `Arc` so republishing the same vector is cheap.
+    pub fn from_materialized(id: u64, part: Arc<EdgePartition>) -> AssignmentEpoch {
+        AssignmentEpoch::build(id, EpochView::Materialized(part), Arc::from(Vec::new()))
+    }
+
+    /// Attach a sorted tombstone snapshot (streaming substrates): the
+    /// ids keep their nominal owner but report dead via
+    /// [`AssignmentEpoch::is_live`], and [`AssignmentEpoch::owner_of`]
+    /// returns `None` for them.
+    pub fn with_tombstones(mut self, tombstones: Arc<[EdgeId]>) -> AssignmentEpoch {
+        debug_assert!(tombstones.windows(2).all(|w| w[0] < w[1]), "tombstones unsorted");
+        self.tombstones = tombstones;
+        self
+    }
+
+    /// Attach a master-index snapshot (`masters[v]` = master partition of
+    /// vertex `v`, `u32::MAX` for isolated vertices) so the epoch can
+    /// answer vertex-keyed routing queries.
+    pub fn with_masters(mut self, masters: Arc<[u32]>) -> AssignmentEpoch {
+        self.masters = masters;
+        self
+    }
+
+    /// The epoch id — strictly monotone across every ownership
+    /// transition (scale, churn, rebalance, compaction) of one run.
+    pub fn epoch_id(&self) -> u64 {
+        self.id
+    }
+
+    /// Owner of edge id `e`: `None` when `e` is beyond the id space or
+    /// tombstoned in this epoch, otherwise the O(1)/O(log k) view
+    /// lookup.
+    #[inline]
+    pub fn owner_of(&self, e: EdgeId) -> Option<PartitionId> {
+        if e >= self.num_edges() || !self.is_live(e) {
+            return None;
+        }
+        Some(self.nominal_owner(e))
+    }
+
+    /// Nominal owner of edge id `e` ignoring liveness — the chunk the id
+    /// falls into. Panics (debug) when `e` is beyond the id space.
+    #[inline]
+    pub fn nominal_owner(&self, e: EdgeId) -> PartitionId {
+        match &self.view {
+            EpochView::Chunked(c) => c.partition_of(e),
+            EpochView::Weighted(w) => w.partition_of(e),
+            EpochView::Materialized(p) => p.assign[e as usize],
+        }
+    }
+
+    /// Master partition of vertex `v`, when a master snapshot was
+    /// attached and `v` has one.
+    pub fn master_of(&self, v: VertexId) -> Option<PartitionId> {
+        match self.masters.get(v as usize) {
+            Some(&m) if m != NO_MASTER => Some(m),
+            _ => None,
+        }
+    }
+
+    /// True when a master-index snapshot was attached.
+    pub fn has_masters(&self) -> bool {
+        !self.masters.is_empty()
+    }
+
+    /// Vertices covered by the master snapshot (0 without one).
+    pub fn num_vertices(&self) -> usize {
+        self.masters.len()
+    }
+
+    /// The nominal edge-id intervals of partition `p` in this epoch.
+    pub fn owned_ranges(&self, p: PartitionId) -> &[Range<EdgeId>] {
+        self.layout.get(p as usize).map(|s| s.ranges()).unwrap_or(&[])
+    }
+
+    /// Total intervals across the layout snapshot — the metadata
+    /// footprint audit (`layout_ranges`).
+    pub fn layout_ranges(&self) -> usize {
+        self.layout.iter().map(|s| s.num_ranges()).sum()
+    }
+
+    /// Resident bytes of the snapshot's ownership metadata.
+    pub fn metadata_bytes(&self) -> usize {
+        self.layout.iter().map(|s| s.metadata_bytes()).sum::<usize>()
+            + std::mem::size_of_val(&self.tombstones[..])
+            + std::mem::size_of_val(&self.masters[..])
+    }
+}
+
+impl PartitionAssignment for AssignmentEpoch {
+    fn k(&self) -> usize {
+        match &self.view {
+            EpochView::Chunked(c) => c.k(),
+            EpochView::Weighted(w) => w.k(),
+            EpochView::Materialized(p) => p.k,
+        }
+    }
+
+    fn num_edges(&self) -> u64 {
+        match &self.view {
+            EpochView::Chunked(c) => c.num_edges(),
+            EpochView::Weighted(w) => w.num_edges(),
+            EpochView::Materialized(p) => p.assign.len() as u64,
+        }
+    }
+
+    #[inline]
+    fn partition_of(&self, i: EdgeId) -> PartitionId {
+        self.nominal_owner(i)
+    }
+
+    #[inline]
+    fn is_live(&self, i: EdgeId) -> bool {
+        self.tombstones.binary_search(&i).is_err()
+    }
+
+    fn num_live_edges(&self) -> u64 {
+        self.num_edges() - self.tombstones.len() as u64
+    }
+
+    fn as_chunks(&self) -> Option<Vec<Range<EdgeId>>> {
+        match &self.view {
+            EpochView::Chunked(c) => {
+                Some((0..c.k() as PartitionId).map(|p| c.range(p)).collect())
+            }
+            EpochView::Weighted(w) => {
+                Some((0..w.k() as PartitionId).map(|p| w.range(p)).collect())
+            }
+            EpochView::Materialized(_) => None,
+        }
+    }
+}
+
+impl CepView {
+    /// Freeze this view into an [`AssignmentEpoch`] with the given id.
+    pub fn epoch(&self, id: u64) -> AssignmentEpoch {
+        AssignmentEpoch::from_chunked(id, *self.cep())
+    }
+}
+
+impl WeightedCepView {
+    /// Freeze this view into an [`AssignmentEpoch`] with the given id.
+    pub fn epoch(&self, id: u64) -> AssignmentEpoch {
+        AssignmentEpoch::from_weighted(id, self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunked_epoch_matches_cep_arithmetic() {
+        let cep = Cep::new(137, 10);
+        let ep = CepView::new(cep).epoch(3);
+        assert_eq!(ep.epoch_id(), 3);
+        assert_eq!(ep.k(), 10);
+        assert_eq!(ep.num_edges(), 137);
+        assert_eq!(ep.layout_ranges(), 10);
+        for i in 0..137u64 {
+            assert_eq!(ep.owner_of(i), Some(cep.partition_of(i)));
+            assert!(ep.is_live(i));
+        }
+        assert_eq!(ep.owner_of(137), None);
+        for p in 0..10u32 {
+            assert_eq!(ep.owned_ranges(p), &[cep.range(p)]);
+        }
+    }
+
+    #[test]
+    fn tombstones_mask_owners_but_not_nominal_owner() {
+        let dead: Arc<[EdgeId]> = Arc::from(vec![0u64, 5, 6, 13]);
+        let ep = AssignmentEpoch::from_chunked(7, Cep::new(14, 4)).with_tombstones(dead);
+        assert_eq!(ep.num_live_edges(), 10);
+        assert_eq!(ep.owner_of(5), None);
+        assert!(!ep.is_live(5));
+        assert_eq!(ep.nominal_owner(5), 1); // paper Fig 3 widths 3,3,4,4
+        assert_eq!(ep.owner_of(4), Some(1));
+    }
+
+    #[test]
+    fn weighted_epoch_uses_boundary_search() {
+        let view = WeightedCepView::from_bounds(vec![0, 3, 6, 10, 14]);
+        let ep = view.epoch(9);
+        assert_eq!(ep.k(), 4);
+        for i in 0..14u64 {
+            assert_eq!(ep.owner_of(i), Some(view.partition_of(i)));
+        }
+        assert_eq!(ep.owned_ranges(2), &[6..10]);
+    }
+
+    #[test]
+    fn materialized_epoch_builds_scattered_layout() {
+        let part = Arc::new(EdgePartition::new(2, vec![0, 1, 0, 1, 0]));
+        let ep = AssignmentEpoch::from_materialized(1, part);
+        assert_eq!(ep.owner_of(0), Some(0));
+        assert_eq!(ep.owner_of(3), Some(1));
+        assert_eq!(ep.owned_ranges(0), &[0..1, 2..3, 4..5]);
+        assert_eq!(ep.layout_ranges(), 5);
+        assert!(ep.as_chunks().is_none());
+    }
+
+    #[test]
+    fn masters_snapshot_answers_vertex_routing() {
+        let masters: Arc<[u32]> = Arc::from(vec![0u32, 1, NO_MASTER, 1]);
+        let ep = AssignmentEpoch::from_chunked(0, Cep::new(10, 2)).with_masters(masters);
+        assert!(ep.has_masters());
+        assert_eq!(ep.num_vertices(), 4);
+        assert_eq!(ep.master_of(0), Some(0));
+        assert_eq!(ep.master_of(2), None); // isolated
+        assert_eq!(ep.master_of(99), None); // out of range
+    }
+}

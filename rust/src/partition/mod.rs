@@ -11,6 +11,7 @@ pub mod bvc;
 pub mod cep;
 pub mod cvp;
 pub mod dbh;
+pub mod epoch;
 pub mod ginger;
 pub mod hash1d;
 pub mod hash2d;
@@ -24,6 +25,7 @@ pub mod vertex2edge;
 pub mod view;
 pub mod weighted;
 
+pub use epoch::AssignmentEpoch;
 pub use intervals::IdRangeSet;
 pub use view::{CepView, PartitionAssignment};
 pub use weighted::WeightedCepView;

@@ -5,7 +5,8 @@
 //!
 //! Scenarios also carry **churn events** — batched edge
 //! insertions/deletions fired between application iterations — so the
-//! streaming coordinator ([`crate::coordinator::run_streaming`]) can
+//! driver ([`crate::coordinator::Controller::drive`], which selects the
+//! streaming substrate whenever a scenario carries churn) can
 //! script interleaved churn + rescale workloads. When a churn and a scale
 //! event share an iteration, churn applies first (the rescale sees the
 //! mutated edge-id space).

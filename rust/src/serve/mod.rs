@@ -1,0 +1,212 @@
+//! The **serving front-end**: a shard router over epoch-versioned
+//! ownership snapshots plus a deterministic open-loop point-read
+//! workload, driven by [`crate::coordinator::Controller::drive`] between
+//! supersteps.
+//!
+//! The analytics engine patches ownership in place while a migration or
+//! churn plan executes; serving traffic cannot wait for that. The
+//! [`ShardRouter`] therefore routes every point read (neighborhood,
+//! degree, app state such as PageRank scores) through the immutable
+//! [`crate::partition::AssignmentEpoch`] pair the engine publishes:
+//! while a plan is in flight the pre-plan epoch stays readable and moved
+//! edge-id ranges resolve by **double-read** — consult the old owner,
+//! fall back to the new one — so reads never block on a splice and never
+//! error on a live key.
+//!
+//! Read latency is **modeled**, never wall clock: a pure function of the
+//! read kind, the routing decision and the key (base hop + an extra hop
+//! for double reads + a per-edge scan term for neighborhood reads + a
+//! deterministic queueing jitter). The driver feeds it into the
+//! [`crate::obs`] histograms, so `read_p50_ms`/`read_p99_ms` and the
+//! serving span counters are bit-identical at any `PALLAS_THREADS`
+//! width.
+
+pub mod router;
+pub mod workload;
+
+pub use router::{RouteDecision, ShardRouter};
+pub use workload::{ReadKind, ReadOp, WorkloadGen, ZipfSampler};
+
+use crate::util::rng::mix64;
+
+/// Arrival curve of the open-loop workload generator: how many reads
+/// are issued per superstep window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ArrivalCurve {
+    /// a constant `read_rate` reads every iteration (the default)
+    #[default]
+    Steady,
+    /// a triangular diurnal wave: `read_rate` at the trough, up to
+    /// 3×`read_rate` at the peak, repeating every `period` iterations
+    Diurnal {
+        /// iterations per full wave (≥ 2)
+        period: u32,
+    },
+}
+
+impl ArrivalCurve {
+    /// Reads to issue at iteration `it` for a base `rate` — integer
+    /// arithmetic only, so the schedule is deterministic everywhere.
+    pub fn reads_at(&self, it: u32, rate: u32) -> u32 {
+        match self {
+            ArrivalCurve::Steady => rate,
+            ArrivalCurve::Diurnal { period } => {
+                let period = (*period).max(2);
+                let phase = it % period;
+                let half = period / 2;
+                let rise = if phase <= half { phase } else { period - phase };
+                rate + 2 * rate * rise / half.max(1)
+            }
+        }
+    }
+}
+
+/// Configuration of the serving read path
+/// ([`crate::coordinator::RunConfig::serve`], CLI: `egs elastic --serve
+/// --read-rate --zipf`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// point reads issued per superstep window (open loop — the
+    /// generator never waits for answers)
+    pub read_rate: u32,
+    /// Zipf skew exponent over the vertex key space (0 = uniform)
+    pub zipf_s: f64,
+    /// workload RNG seed, independent of the run seed
+    pub seed: u64,
+    /// arrival curve shaping `read_rate` over the run
+    pub arrival: ArrivalCurve,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            read_rate: 64,
+            zipf_s: 1.1,
+            seed: 0x5EED,
+            arrival: ArrivalCurve::Steady,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Defaults: 64 Zipf(1.1) reads per iteration, steady arrivals.
+    pub fn new() -> ServeConfig {
+        ServeConfig::default()
+    }
+
+    /// Set the per-iteration read rate.
+    pub fn read_rate(mut self, rate: u32) -> ServeConfig {
+        self.read_rate = rate;
+        self
+    }
+
+    /// Set the Zipf skew exponent.
+    pub fn zipf_s(mut self, s: f64) -> ServeConfig {
+        self.zipf_s = s;
+        self
+    }
+
+    /// Set the workload RNG seed.
+    pub fn seed(mut self, seed: u64) -> ServeConfig {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the arrival curve.
+    pub fn arrival(mut self, arrival: ArrivalCurve) -> ServeConfig {
+        self.arrival = arrival;
+        self
+    }
+}
+
+/// Per-iteration serving audit record, pushed to
+/// [`crate::coordinator::RunReport::serve_events`]. Every field is a
+/// logical tally or a modeled quantity — bit-identical at any thread
+/// width.
+#[derive(Clone, Debug)]
+pub struct ServeRecord {
+    /// the iteration the reads were issued in
+    pub at_iteration: u32,
+    /// the current epoch id at serve time
+    pub epoch: u64,
+    /// reads issued this iteration
+    pub reads: u64,
+    /// reads that consulted both epochs (ownership moved mid-plan)
+    pub double_reads: u64,
+    /// reads answered via the fallback owner — the pre-plan epoch's
+    /// owner disagreed with the post-plan one
+    pub stale_reads: u64,
+    /// reads whose key was dead in every readable epoch (deleted data —
+    /// a legitimate miss, not an error)
+    pub misses: u64,
+    /// reads of a live key that no epoch could route — must stay 0
+    pub errors: u64,
+    /// modeled per-read latency p50 of this iteration, milliseconds
+    pub p50_ms: f64,
+    /// modeled per-read latency p99 of this iteration, milliseconds
+    pub p99_ms: f64,
+    /// FNV-1a fingerprint of every routing decision (partition, epoch,
+    /// flags, read value bits) this iteration — the determinism suite
+    /// compares it across thread widths
+    pub route_fp: u64,
+}
+
+/// modeled base cost of one routed point read (lookup + one network hop)
+const BASE_READ_NS: u64 = 150_000;
+/// modeled cost of the extra hop a double-read fallback pays
+const DOUBLE_READ_HOP_NS: u64 = 120_000;
+/// modeled per-edge scan cost of a neighborhood read
+const NEIGHBORHOOD_SCAN_NS: u64 = 400;
+/// bound on the deterministic queueing jitter folded in per key
+const JITTER_SPAN_NS: u64 = 100_000;
+
+/// Modeled latency of one point read, in nanoseconds: a pure function
+/// of the read kind, the routing decision and the key — no wall clock
+/// anywhere, so histograms built from it are bit-identical at any
+/// thread width. `degree` is only consulted for
+/// [`ReadKind::Neighborhood`] reads.
+pub fn modeled_read_ns(kind: ReadKind, decision: &RouteDecision, degree: u32, key: u64) -> u64 {
+    let mut ns = BASE_READ_NS;
+    if decision.double_read {
+        ns += DOUBLE_READ_HOP_NS;
+    }
+    if kind == ReadKind::Neighborhood {
+        ns += NEIGHBORHOOD_SCAN_NS * degree as u64;
+    }
+    // deterministic queueing jitter: a pure hash of (key, epoch) so the
+    // distribution has spread without any wall-clock input
+    ns + mix64(key ^ decision.epoch.rotate_left(17)) % JITTER_SPAN_NS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::cep::Cep;
+    use crate::partition::{AssignmentEpoch, CepView};
+    use std::sync::Arc;
+
+    #[test]
+    fn arrival_curves_are_deterministic_and_bounded() {
+        let steady = ArrivalCurve::Steady;
+        assert_eq!(steady.reads_at(0, 64), 64);
+        assert_eq!(steady.reads_at(9, 64), 64);
+        let wave = ArrivalCurve::Diurnal { period: 8 };
+        let loads: Vec<u32> = (0..16).map(|it| wave.reads_at(it, 10)).collect();
+        assert_eq!(&loads[..8], &loads[8..], "wave repeats every period");
+        assert!(loads.iter().all(|&r| (10..=30).contains(&r)), "{loads:?}");
+        assert_eq!(loads[0], 10, "trough at phase 0");
+        assert_eq!(loads[4], 30, "peak at half period");
+    }
+
+    #[test]
+    fn modeled_latency_is_pure_and_kind_sensitive() {
+        let ep = Arc::new(CepView::new(Cep::new(100, 4)).epoch(1));
+        let router = ShardRouter::new(ep);
+        let d = router.route_edge(5).unwrap();
+        let a = modeled_read_ns(ReadKind::Degree, &d, 7, 5);
+        let b = modeled_read_ns(ReadKind::Degree, &d, 7, 5);
+        assert_eq!(a, b, "same inputs, same modeled cost");
+        let nb = modeled_read_ns(ReadKind::Neighborhood, &d, 7, 5);
+        assert_eq!(nb, a + NEIGHBORHOOD_SCAN_NS * 7);
+    }
+}

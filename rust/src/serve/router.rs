@@ -1,0 +1,254 @@
+//! The shard router: `vertex/edge → partition → worker` by epoch
+//! lookup, with **double-read** resolution across an in-flight
+//! migration.
+//!
+//! A router holds the current [`AssignmentEpoch`] and, while a plan is
+//! in flight, the previous one. Both are immutable `Arc` snapshots, so
+//! routing never observes a half-spliced layout:
+//!
+//! * owners agree across the pair → a plain single read,
+//! * owners disagree (the id sits in a moved range) → consult the old
+//!   owner first, fall back to the new one — a *double read*, counted
+//!   and flagged [`RouteDecision::stale`],
+//! * retired mid-plan (live in the old epoch only) → served stale from
+//!   the old owner,
+//! * appended mid-plan (live in the new epoch only) → served fresh from
+//!   the new owner; the old epoch rules itself out by metadata alone,
+//! * dead in both → a miss (`None`): the key holds no data anywhere —
+//!   deleted, not an error.
+//!
+//! Vertex routing goes through the epochs' master index snapshots; a
+//! vertex without a master (isolated, or an epoch built without a
+//! layout snapshot) falls back to a deterministic hash over `k`, so a
+//! vertex read always routes somewhere.
+
+use crate::partition::{AssignmentEpoch, PartitionAssignment};
+use crate::util::rng::mix64;
+use crate::{EdgeId, PartitionId, VertexId};
+use std::sync::Arc;
+
+/// Where one point read was routed, and how.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RouteDecision {
+    /// the partition (= worker) that answered
+    pub partition: PartitionId,
+    /// the id of the epoch whose ownership answered
+    pub epoch: u64,
+    /// both epochs were consulted (the key sat in a moved or retired
+    /// range of an in-flight plan)
+    pub double_read: bool,
+    /// the answer came from somewhere other than the current epoch's
+    /// owner view — the pre-plan owner's copy, or a moved range's
+    /// fallback
+    pub stale: bool,
+}
+
+/// Routes point reads through the published epoch pair. Cheap to build
+/// per serving window: two `Arc` clones.
+#[derive(Clone, Debug)]
+pub struct ShardRouter {
+    current: Arc<AssignmentEpoch>,
+    previous: Option<Arc<AssignmentEpoch>>,
+}
+
+impl ShardRouter {
+    /// Route by a single epoch (no migration in flight).
+    pub fn new(current: Arc<AssignmentEpoch>) -> ShardRouter {
+        ShardRouter { current, previous: None }
+    }
+
+    /// Route by the `(previous, current)` pair published around an
+    /// in-flight plan; `previous = None` degrades to [`Self::new`].
+    pub fn with_previous(
+        current: Arc<AssignmentEpoch>,
+        previous: Option<Arc<AssignmentEpoch>>,
+    ) -> ShardRouter {
+        ShardRouter { current, previous }
+    }
+
+    /// The epoch the router treats as authoritative.
+    pub fn current(&self) -> &Arc<AssignmentEpoch> {
+        &self.current
+    }
+
+    /// True while a pre-plan epoch is still readable behind the current
+    /// one.
+    pub fn migration_in_flight(&self) -> bool {
+        self.previous.is_some()
+    }
+
+    /// Route an edge-keyed read. `None` means the key is dead in every
+    /// readable epoch — deleted data, not a routing failure.
+    pub fn route_edge(&self, e: EdgeId) -> Option<RouteDecision> {
+        let new = self.current.owner_of(e);
+        let old = self.previous.as_ref().and_then(|p| p.owner_of(e));
+        match (old, new) {
+            // owners agree, or no plan in flight: one read
+            (None, Some(p)) if self.previous.is_none() => Some(RouteDecision {
+                partition: p,
+                epoch: self.current.epoch_id(),
+                double_read: false,
+                stale: false,
+            }),
+            (Some(po), Some(pn)) if po == pn => Some(RouteDecision {
+                partition: pn,
+                epoch: self.current.epoch_id(),
+                double_read: false,
+                stale: false,
+            }),
+            // moved mid-plan: consult the old owner, fall back to new
+            (Some(_), Some(pn)) => Some(RouteDecision {
+                partition: pn,
+                epoch: self.current.epoch_id(),
+                double_read: true,
+                stale: true,
+            }),
+            // retired mid-plan: the old owner still holds the last copy
+            (Some(po), None) => Some(RouteDecision {
+                partition: po,
+                epoch: self.previous.as_ref().unwrap().epoch_id(),
+                double_read: true,
+                stale: true,
+            }),
+            // appended mid-plan: only the new epoch can hold it, and the
+            // old epoch's metadata rules it out without a remote read
+            (None, Some(pn)) => Some(RouteDecision {
+                partition: pn,
+                epoch: self.current.epoch_id(),
+                double_read: false,
+                stale: false,
+            }),
+            (None, None) => None,
+        }
+    }
+
+    /// Route a vertex-keyed read via the master index snapshots. Never
+    /// fails: vertices without a master route by a deterministic hash.
+    pub fn route_vertex(&self, v: VertexId) -> RouteDecision {
+        let cur = self.current.master_of(v);
+        let prev = self.previous.as_ref().and_then(|p| p.master_of(v));
+        match (prev, cur) {
+            (Some(po), Some(pn)) if po != pn => RouteDecision {
+                partition: pn,
+                epoch: self.current.epoch_id(),
+                double_read: true,
+                stale: true,
+            },
+            (_, Some(pn)) => RouteDecision {
+                partition: pn,
+                epoch: self.current.epoch_id(),
+                double_read: false,
+                stale: false,
+            },
+            // master moved out from under us mid-plan and the new epoch
+            // has no snapshot for it yet: serve from the old master
+            (Some(po), None) => RouteDecision {
+                partition: po,
+                epoch: self.previous.as_ref().unwrap().epoch_id(),
+                double_read: true,
+                stale: true,
+            },
+            (None, None) => RouteDecision {
+                partition: (mix64(v as u64) % self.current.k().max(1) as u64) as PartitionId,
+                epoch: self.current.epoch_id(),
+                double_read: false,
+                stale: false,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::cep::Cep;
+    use crate::partition::CepView;
+
+    fn ep(id: u64, m: usize, k: usize) -> Arc<AssignmentEpoch> {
+        Arc::new(CepView::new(Cep::new(m, k)).epoch(id))
+    }
+
+    #[test]
+    fn single_epoch_routing_matches_chunk_arithmetic() {
+        let e = ep(1, 137, 10);
+        let r = ShardRouter::new(e.clone());
+        assert!(!r.migration_in_flight());
+        for i in 0..137u64 {
+            let d = r.route_edge(i).unwrap();
+            assert_eq!(d.partition, e.owner_of(i).unwrap());
+            assert!(!d.double_read && !d.stale);
+            assert_eq!(d.epoch, 1);
+        }
+        assert!(r.route_edge(137).is_none(), "beyond the id space");
+    }
+
+    #[test]
+    fn double_read_covers_a_rescale_pair() {
+        let old = ep(1, 1000, 4);
+        let new = ep(2, 1000, 6);
+        let r = ShardRouter::with_previous(new.clone(), Some(old.clone()));
+        assert!(r.migration_in_flight());
+        let mut moved = 0u64;
+        for i in 0..1000u64 {
+            let d = r.route_edge(i).expect("every id live in both epochs");
+            let po = old.owner_of(i).unwrap();
+            let pn = new.owner_of(i).unwrap();
+            // every read is answered by the pre- or post-plan owner
+            assert!(d.partition == po || d.partition == pn, "id {i}");
+            if po != pn {
+                assert!(d.double_read && d.stale, "moved id {i} must double-read");
+                assert_eq!(d.partition, pn, "fallback lands on the new owner");
+                moved += 1;
+            } else {
+                assert!(!d.double_read && !d.stale);
+            }
+        }
+        assert!(moved > 0, "a 4→6 rescale moves ids");
+    }
+
+    #[test]
+    fn retired_and_appended_ids_route_without_errors() {
+        use std::sync::Arc as A;
+        // old epoch: 10 ids; new epoch: 12 ids with id 3 tombstoned
+        let old = ep(1, 10, 2);
+        let new = A::new(
+            CepView::new(Cep::new(12, 2)).epoch(2).with_tombstones(A::from(vec![3u64])),
+        );
+        let r = ShardRouter::with_previous(new.clone(), Some(old.clone()));
+        // retired mid-plan: stale read from the old owner
+        let d = r.route_edge(3).unwrap();
+        assert!(d.stale && d.double_read);
+        assert_eq!(d.partition, old.owner_of(3).unwrap());
+        assert_eq!(d.epoch, 1);
+        // appended mid-plan: fresh read from the new owner
+        let d = r.route_edge(11).unwrap();
+        assert!(!d.stale && !d.double_read);
+        assert_eq!(d.partition, new.owner_of(11).unwrap());
+    }
+
+    #[test]
+    fn vertex_routing_uses_masters_and_falls_back_deterministically() {
+        let masters: Arc<[u32]> = Arc::from(vec![0u32, 1, u32::MAX]);
+        let cur = Arc::new(CepView::new(Cep::new(10, 2)).epoch(5).with_masters(masters));
+        let r = ShardRouter::new(cur);
+        assert_eq!(r.route_vertex(1).partition, 1);
+        let f1 = r.route_vertex(2);
+        let f2 = r.route_vertex(2);
+        assert_eq!(f1, f2, "hash fallback is deterministic");
+        assert!(f1.partition < 2);
+    }
+
+    #[test]
+    fn moved_master_double_reads() {
+        let old_m: Arc<[u32]> = Arc::from(vec![0u32, 0]);
+        let new_m: Arc<[u32]> = Arc::from(vec![0u32, 1]);
+        let old = Arc::new(CepView::new(Cep::new(10, 2)).epoch(1).with_masters(old_m));
+        let new = Arc::new(CepView::new(Cep::new(10, 2)).epoch(2).with_masters(new_m));
+        let r = ShardRouter::with_previous(new, Some(old));
+        let d = r.route_vertex(1);
+        assert!(d.double_read && d.stale);
+        assert_eq!(d.partition, 1, "fallback lands on the new master");
+        let d = r.route_vertex(0);
+        assert!(!d.double_read && !d.stale);
+    }
+}

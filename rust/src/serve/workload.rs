@@ -1,0 +1,212 @@
+//! Deterministic open-loop point-read workload: Zipf-skewed vertex
+//! keys, uniform edge keys, a fixed read-kind rotation, all driven by
+//! one seeded [`Rng`] so the same config replays the same reads on any
+//! machine at any thread width.
+
+use crate::serve::ServeConfig;
+use crate::util::rng::Rng;
+use crate::{EdgeId, VertexId};
+
+/// What a point read asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadKind {
+    /// a vertex's degree
+    Degree,
+    /// a vertex's neighborhood (modeled cost scales with degree)
+    Neighborhood,
+    /// a vertex's application state (e.g. its PageRank score)
+    AppState,
+    /// an edge id's owning partition (pure metadata read)
+    EdgeOwner,
+}
+
+/// One generated point read. Vertex-keyed kinds consult `vertex`,
+/// [`ReadKind::EdgeOwner`] consults `edge`; both are always populated.
+#[derive(Clone, Copy, Debug)]
+pub struct ReadOp {
+    /// what the read asks for
+    pub kind: ReadKind,
+    /// the Zipf-sampled vertex key
+    pub vertex: VertexId,
+    /// the uniformly-sampled edge key
+    pub edge: EdgeId,
+}
+
+/// Zipf(s) sampler over `0..n` by inverse-CDF lookup. The CDF is
+/// precomputed once per key-space size, so sampling is one `f64` draw
+/// plus a binary search.
+#[derive(Clone, Debug)]
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    /// Build the CDF over `n` keys with skew exponent `s` (`s = 0` is
+    /// uniform). `n` is clamped to at least 1.
+    pub fn new(n: usize, s: f64) -> ZipfSampler {
+        let n = n.max(1);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    /// Number of keys in the sampled space.
+    pub fn num_keys(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Draw one key: rank 0 is the hottest.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// The open-loop generator: rotates through the four [`ReadKind`]s,
+/// draws vertex keys from [`ZipfSampler`] and edge keys uniformly.
+/// Deterministic given ([`ServeConfig::seed`], the key-space sizes it
+/// was driven with).
+#[derive(Clone, Debug)]
+pub struct WorkloadGen {
+    rng: Rng,
+    zipf: ZipfSampler,
+    n_keys: usize,
+    issued: u64,
+    zipf_s: f64,
+}
+
+impl WorkloadGen {
+    /// A generator over `n_keys` vertex keys, seeded from `cfg`.
+    pub fn new(cfg: &ServeConfig, n_keys: usize) -> WorkloadGen {
+        WorkloadGen {
+            rng: Rng::new(cfg.seed),
+            zipf: ZipfSampler::new(n_keys, cfg.zipf_s),
+            n_keys: n_keys.max(1),
+            issued: 0,
+            zipf_s: cfg.zipf_s,
+        }
+    }
+
+    /// Track vertex-key-space growth (churn inserts vertices): rebuilds
+    /// the Zipf CDF only when the size actually changed. Deterministic
+    /// because the key-space size itself is deterministic per iteration.
+    pub fn resize_keys(&mut self, n: usize) {
+        let n = n.max(1);
+        if n != self.n_keys {
+            self.zipf = ZipfSampler::new(n, self.zipf_s);
+            self.n_keys = n;
+        }
+    }
+
+    /// Total reads generated so far.
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    /// Generate the next read. `num_edges` bounds the uniform edge-key
+    /// draw (the current *physical* id space, so retired and appended
+    /// ids are both reachable mid-plan).
+    pub fn next_read(&mut self, num_edges: u64) -> ReadOp {
+        let kind = match self.issued % 4 {
+            0 => ReadKind::Degree,
+            1 => ReadKind::Neighborhood,
+            2 => ReadKind::AppState,
+            _ => ReadKind::EdgeOwner,
+        };
+        self.issued += 1;
+        let vertex = self.zipf.sample(&mut self.rng) as VertexId;
+        let edge = if num_edges == 0 { 0 } else { self.rng.below(num_edges) };
+        ReadOp { kind, vertex, edge }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_is_skewed_and_normalized() {
+        let z = ZipfSampler::new(1000, 1.1);
+        assert_eq!(z.num_keys(), 1000);
+        let mut rng = Rng::new(42);
+        let mut head = 0u64;
+        const DRAWS: u64 = 10_000;
+        for _ in 0..DRAWS {
+            let key = z.sample(&mut rng);
+            assert!(key < 1000);
+            if key < 10 {
+                head += 1;
+            }
+        }
+        // Zipf(1.1) over 1000 keys puts well over a third of the mass on
+        // the top 10 keys; uniform would put ~1% there.
+        assert!(head > DRAWS / 4, "head mass {head}/{DRAWS}");
+    }
+
+    #[test]
+    fn zipf_zero_is_roughly_uniform() {
+        let z = ZipfSampler::new(100, 0.0);
+        let mut rng = Rng::new(7);
+        let mut counts = [0u32; 100];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(*min > 100 && *max < 400, "min {min} max {max}");
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_cycles_kinds() {
+        let cfg = ServeConfig::new().seed(99).zipf_s(1.2);
+        let mut a = WorkloadGen::new(&cfg, 500);
+        let mut b = WorkloadGen::new(&cfg, 500);
+        for i in 0..64 {
+            let ra = a.next_read(2_000);
+            let rb = b.next_read(2_000);
+            assert_eq!(ra.vertex, rb.vertex);
+            assert_eq!(ra.edge, rb.edge);
+            assert_eq!(ra.kind, rb.kind);
+            let expect = match i % 4 {
+                0 => ReadKind::Degree,
+                1 => ReadKind::Neighborhood,
+                2 => ReadKind::AppState,
+                _ => ReadKind::EdgeOwner,
+            };
+            assert_eq!(ra.kind, expect);
+            assert!(ra.edge < 2_000);
+            assert!((ra.vertex as usize) < 500);
+        }
+        assert_eq!(a.issued(), 64);
+    }
+
+    #[test]
+    fn resize_keeps_stream_deterministic_for_same_size_sequence() {
+        let cfg = ServeConfig::new();
+        let mut a = WorkloadGen::new(&cfg, 100);
+        a.resize_keys(100); // no-op: same size must not rebuild or perturb
+        let mut b = WorkloadGen::new(&cfg, 100);
+        for _ in 0..16 {
+            let (ra, rb) = (a.next_read(50), b.next_read(50));
+            assert_eq!((ra.vertex, ra.edge), (rb.vertex, rb.edge));
+        }
+        a.resize_keys(200);
+        assert!((0..32).all(|_| (a.next_read(50).vertex as usize) < 200));
+    }
+
+    #[test]
+    fn degenerate_spaces_do_not_panic() {
+        let cfg = ServeConfig::new();
+        let mut g = WorkloadGen::new(&cfg, 0);
+        let op = g.next_read(0);
+        assert_eq!(op.vertex, 0);
+        assert_eq!(op.edge, 0);
+    }
+}

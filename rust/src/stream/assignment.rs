@@ -69,6 +69,16 @@ impl<'a> StagedAssignment<'a> {
             .map(|p| self.cep.width(p) - self.dead_in(self.cep.range(p)))
             .collect()
     }
+
+    /// Freeze this assignment into an
+    /// [`crate::partition::AssignmentEpoch`] with the given id: the
+    /// chunk metadata is copied and the borrowed tombstone list is
+    /// snapshotted into owned shared storage, so the epoch outlives the
+    /// staged graph state it was taken from.
+    pub fn epoch(&self, id: u64) -> crate::partition::AssignmentEpoch {
+        crate::partition::AssignmentEpoch::from_chunked(id, self.cep)
+            .with_tombstones(std::sync::Arc::from(self.tombstones))
+    }
 }
 
 impl PartitionAssignment for StagedAssignment<'_> {
@@ -162,6 +172,14 @@ impl<'a> WeightedStagedAssignment<'a> {
                 (r.end - r.start) - self.dead_in(r)
             })
             .collect()
+    }
+
+    /// Freeze this assignment into an
+    /// [`crate::partition::AssignmentEpoch`] with the given id (see
+    /// [`StagedAssignment::epoch`]).
+    pub fn epoch(&self, id: u64) -> crate::partition::AssignmentEpoch {
+        crate::partition::AssignmentEpoch::from_weighted(id, self.view.clone())
+            .with_tombstones(std::sync::Arc::from(self.tombstones))
     }
 }
 

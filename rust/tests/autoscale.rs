@@ -8,9 +8,10 @@
 //!   blocking cost within 2× of a schedule-aware oracle script;
 //! * on a **spot-price spike** the policy sheds capacity (deadline
 //!   mode) without leaving the SLO;
-//! * `PolicyConfig::Threshold` is the legacy `--rebalance threshold`
-//!   path *verbatim*: every rebalance record bit-equal through the
-//!   deprecated shims and the unified driver.
+//! * `PolicyConfig::Threshold` is the skew-rebalancing loop expressed as
+//!   the degenerate policy: it fires on both substrates, every nudge
+//!   surfaces in the decision audit, and the rebalance record stream is
+//!   bit-reproducible run over run.
 
 use egs::coordinator::{
     Controller, PolicyConfig, RunConfig, RunReport, ScalingAction, SloConfig,
@@ -174,16 +175,13 @@ fn price_spike_sheds_capacity_without_leaving_the_slo() {
     assert_eq!(violations(&out, slo_ms), 0, "shedding must not violate the SLO");
 }
 
-/// `--rebalance threshold` regression pin: the legacy shims and the
-/// unified driver with `PolicyConfig::Threshold` must produce bit-equal
-/// rebalance records and final imbalance on both substrates.
+/// `--rebalance threshold` regression pin: the degenerate threshold
+/// policy fires on both substrates, produces a bit-reproducible
+/// rebalance record stream run over run, and every nudge surfaces in
+/// the unified decision audit with a monotone ownership epoch.
 #[test]
-#[allow(deprecated)]
-fn threshold_policy_is_the_legacy_rebalance_path_verbatim() {
-    use egs::coordinator::{
-        run_scenario, run_streaming, ControllerConfig, DriveMode, RebalanceConfig,
-        StreamingConfig,
-    };
+fn threshold_policy_rebalance_path_is_reproducible() {
+    use egs::coordinator::DriveMode;
 
     let g = test_graph();
     let fp = |rs: &[RebalanceRecord], final_imb: f64| -> Vec<u64> {
@@ -199,30 +197,29 @@ fn threshold_policy_is_the_legacy_rebalance_path_verbatim() {
                     r.layout_ranges as u64,
                     r.net_blocking_ms.to_bits(),
                     r.net_overlapped_ms.to_bits(),
+                    r.epoch,
                 ]
             })
             .chain([final_imb.to_bits()])
             .collect()
     };
+    let epochs_monotone = |rs: &[RebalanceRecord]| {
+        rs.windows(2).all(|w| w[0].epoch < w[1].epoch)
+    };
 
     // batch: pure comm-lane skew so the threshold trips on a power-law graph
     let scenario = Scenario::steady(4, 6);
     let skew = NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() };
-    let legacy_cfg = ControllerConfig {
-        net_model: skew,
-        rebalance: RebalanceConfig::threshold(1.01),
-        ..Default::default()
-    };
-    let legacy =
-        run_scenario(&g, &scenario, &legacy_cfg, |_| Box::new(NativeBackend::new())).unwrap();
-    let unified_cfg = RunConfig::new()
+    let batch_cfg = RunConfig::new()
         .net_model(skew)
         .policy(PolicyConfig::Threshold { threshold: 1.01 })
         .mode(DriveMode::Batch);
-    let unified = drive(&g, &scenario, &unified_cfg);
-    let reference = fp(&legacy.rebalances, legacy.final_imbalance);
+    let unified = drive(&g, &scenario, &batch_cfg);
+    let reference = fp(&unified.rebalances, unified.final_imbalance);
     assert!(reference.len() > 1, "threshold policy never fired");
-    assert_eq!(fp(&unified.rebalances, unified.final_imbalance), reference);
+    let replay = drive(&g, &scenario, &batch_cfg);
+    assert_eq!(fp(&replay.rebalances, replay.final_imbalance), reference);
+    assert!(epochs_monotone(&unified.rebalances));
     // every nudge surfaces in the unified decision audit too
     assert_eq!(
         unified.decisions.iter().filter(|d| d.action == ScalingAction::Nudge).count(),
@@ -232,24 +229,17 @@ fn threshold_policy_is_the_legacy_rebalance_path_verbatim() {
     // streaming: churn + rescale interleaved with the nudges
     let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
     let geo_cfg = GeoConfig { k_min: 2, k_max: 8, delta: None, seed: 7, ..Default::default() };
-    let legacy_cfg = StreamingConfig {
-        geo: geo_cfg,
-        net_model: skew,
-        rebalance: RebalanceConfig::threshold(1.01),
-        ..Default::default()
-    };
-    let legacy =
-        run_streaming(g.clone(), &scenario, &legacy_cfg, |_| Box::new(NativeBackend::new()))
-            .unwrap();
-    let unified_cfg = RunConfig::new()
+    let stream_cfg = RunConfig::new()
         .net_model(skew)
         .geo(geo_cfg)
         .policy(PolicyConfig::Threshold { threshold: 1.01 })
         .mode(DriveMode::Streaming);
-    let unified = drive(&g, &scenario, &unified_cfg);
-    let reference = fp(&legacy.rebalances, legacy.final_imbalance);
+    let unified = drive(&g, &scenario, &stream_cfg);
+    let reference = fp(&unified.rebalances, unified.final_imbalance);
     assert!(reference.len() > 1, "streaming threshold policy never fired");
-    assert_eq!(fp(&unified.rebalances, unified.final_imbalance), reference);
+    let replay = drive(&g, &scenario, &stream_cfg);
+    assert_eq!(fp(&replay.rebalances, replay.final_imbalance), reference);
+    assert!(epochs_monotone(&unified.rebalances));
 }
 
 /// The unified driver dispatches the substrate from the scenario: churn

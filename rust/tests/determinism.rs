@@ -158,25 +158,22 @@ fn staged_ingest_is_thread_invariant() {
 /// integer lanes — never wall clock, RNG or thread scheduling.
 #[test]
 fn emulated_net_pricing_is_thread_invariant() {
-    use egs::coordinator::{run_scenario, run_streaming, ControllerConfig, StreamingConfig};
+    use egs::coordinator::{Controller, RunConfig};
     use egs::scaling::netsim::NetModelConfig;
     use egs::scaling::scenario::Scenario;
 
     let raw = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() }, 4);
     let g = egs::ordering::geo::order(&raw, &geo_cfg(1)).apply(&raw);
 
-    // batch controller (`run`)
+    // batch substrate
     let scenario = Scenario::scale_out(3, 2, 3);
     let run = |w: usize| -> Vec<u64> {
         let mut mc = NetModelConfig::emulated();
         mc.barrier_skew_s = 2e-4;
-        let cfg = ControllerConfig {
-            net_model: mc,
-            threads: ThreadConfig::new(w),
-            ..Default::default()
-        };
+        let cfg = RunConfig::new().net_model(mc).threads(ThreadConfig::new(w));
         let out =
-            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+            Controller::drive(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+                .unwrap();
         out.events
             .iter()
             .flat_map(|e| {
@@ -190,17 +187,16 @@ fn emulated_net_pricing_is_thread_invariant() {
         assert_eq!(run(w), reference, "run width {w}: emulated pricing diverges");
     }
 
-    // streaming controller (`run_streaming`)
+    // streaming substrate (churn in the scenario selects it)
     let srun = |w: usize| -> Vec<u64> {
         let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
-        let cfg = StreamingConfig {
-            geo: geo_cfg(w),
-            net_model: NetModelConfig::emulated(),
-            threads: ThreadConfig::new(w),
-            ..Default::default()
-        };
-        let out = run_streaming(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
-            .unwrap();
+        let cfg = RunConfig::new()
+            .geo(geo_cfg(w))
+            .net_model(NetModelConfig::emulated())
+            .threads(ThreadConfig::new(w));
+        let out =
+            Controller::drive(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+                .unwrap();
         out.events
             .iter()
             .flat_map(|e| [e.net_blocking_ms.to_bits(), e.net_overlapped_ms.to_bits()])
@@ -225,9 +221,7 @@ fn emulated_net_pricing_is_thread_invariant() {
 /// fingerprint identically no matter the executor width.
 #[test]
 fn weighted_rebalancing_is_thread_invariant() {
-    use egs::coordinator::{
-        run_scenario, run_streaming, ControllerConfig, RebalanceConfig, StreamingConfig,
-    };
+    use egs::coordinator::{Controller, PolicyConfig, RunConfig};
     use egs::scaling::netsim::NetModelConfig;
     use egs::scaling::scenario::Scenario;
 
@@ -252,17 +246,17 @@ fn weighted_rebalancing_is_thread_invariant() {
             .collect()
     };
 
-    // batch controller: pure comm-lane skew (zero modeled compute) so the
+    // batch substrate: pure comm-lane skew (zero modeled compute) so the
     // threshold policy fires on the power-law graph
     let scenario = Scenario::steady(4, 6);
     let run = |w: usize| -> Vec<u64> {
-        let cfg = ControllerConfig {
-            net_model: NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() },
-            rebalance: RebalanceConfig::threshold(1.01),
-            threads: ThreadConfig::new(w),
-            ..Default::default()
-        };
-        let out = run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        let cfg = RunConfig::new()
+            .net_model(NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() })
+            .policy(PolicyConfig::Threshold { threshold: 1.01 })
+            .threads(ThreadConfig::new(w));
+        let out =
+            Controller::drive(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+                .unwrap();
         fingerprint(&out.rebalances, out.final_imbalance)
     };
     let reference = run(1);
@@ -271,18 +265,17 @@ fn weighted_rebalancing_is_thread_invariant() {
         assert_eq!(run(w), reference, "run width {w}: rebalance decisions diverge");
     }
 
-    // streaming controller: churn + rescale interleaved with the nudges
+    // streaming substrate: churn + rescale interleaved with the nudges
     let srun = |w: usize| -> Vec<u64> {
         let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
-        let cfg = StreamingConfig {
-            geo: geo_cfg(w),
-            net_model: NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() },
-            rebalance: RebalanceConfig::threshold(1.01),
-            threads: ThreadConfig::new(w),
-            ..Default::default()
-        };
-        let out = run_streaming(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
-            .unwrap();
+        let cfg = RunConfig::new()
+            .geo(geo_cfg(w))
+            .net_model(NetModelConfig { compute_ns_per_edge: 0.0, ..Default::default() })
+            .policy(PolicyConfig::Threshold { threshold: 1.01 })
+            .threads(ThreadConfig::new(w));
+        let out =
+            Controller::drive(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+                .unwrap();
         fingerprint(&out.rebalances, out.final_imbalance)
     };
     let sreference = srun(1);
@@ -658,23 +651,20 @@ fn policy_decisions_are_thread_invariant() {
 /// `--trace-out` files of the thread matrix.
 #[test]
 fn trace_fingerprint_is_thread_invariant() {
-    use egs::coordinator::{run_scenario, run_streaming, ControllerConfig, StreamingConfig};
+    use egs::coordinator::{Controller, RunConfig};
     use egs::scaling::netsim::NetModelConfig;
     use egs::scaling::scenario::Scenario;
 
     let raw = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() }, 4);
     let g = egs::ordering::geo::order(&raw, &geo_cfg(1)).apply(&raw);
 
-    // batch controller (`run_scenario`)
+    // batch substrate
     let scenario = Scenario::scale_out(3, 2, 3);
     let run = |w: usize| -> (u64, usize) {
-        let cfg = ControllerConfig {
-            net_model: NetModelConfig::emulated(),
-            threads: ThreadConfig::new(w),
-            ..Default::default()
-        };
+        let cfg =
+            RunConfig::new().net_model(NetModelConfig::emulated()).threads(ThreadConfig::new(w));
         let (out, data) = egs::obs::capture(|| {
-            run_scenario(&g, &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+            Controller::drive(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
         });
         out.unwrap();
         for name in
@@ -693,17 +683,15 @@ fn trace_fingerprint_is_thread_invariant() {
         assert_eq!(run(w), reference, "run width {w}: span stream diverges");
     }
 
-    // streaming controller (`run_streaming`)
+    // streaming substrate (churn in the scenario selects it)
     let srun = |w: usize| -> (u64, usize) {
         let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
-        let cfg = StreamingConfig {
-            geo: geo_cfg(w),
-            net_model: NetModelConfig::emulated(),
-            threads: ThreadConfig::new(w),
-            ..Default::default()
-        };
+        let cfg = RunConfig::new()
+            .geo(geo_cfg(w))
+            .net_model(NetModelConfig::emulated())
+            .threads(ThreadConfig::new(w));
         let (out, data) = egs::obs::capture(|| {
-            run_streaming(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+            Controller::drive(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
         });
         out.unwrap();
         for name in ["scenario", "event:churn", "event:scale", "phase:ingest", "phase:geo-pass"] {
@@ -717,5 +705,85 @@ fn trace_fingerprint_is_thread_invariant() {
     let sreference = srun(1);
     for w in WIDTHS {
         assert_eq!(srun(w), sreference, "streaming width {w}: span stream diverges");
+    }
+}
+
+/// The serving read path is bit-identical at widths 1/2/8 on both
+/// substrates: the workload generator is seeded, routing reads only
+/// epoch metadata, and per-read latency is *modeled* — so every
+/// `ServeRecord` (tallies, epoch, p50/p99, the FNV route fingerprint)
+/// and the report's aggregate read metrics must never see the executor
+/// width.
+#[test]
+fn serving_read_path_is_thread_invariant() {
+    use egs::coordinator::{Controller, RunConfig};
+    use egs::scaling::scenario::Scenario;
+    use egs::serve::ServeConfig;
+
+    let raw = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() }, 4);
+    let g = egs::ordering::geo::order(&raw, &geo_cfg(1)).apply(&raw);
+    let serve = ServeConfig::new().read_rate(48).zipf_s(1.1).seed(0xC0FFEE);
+
+    let fingerprint = |out: &egs::coordinator::RunReport| -> Vec<u64> {
+        out.serve_events
+            .iter()
+            .flat_map(|s| {
+                [
+                    s.at_iteration as u64,
+                    s.epoch,
+                    s.reads,
+                    s.double_reads,
+                    s.stale_reads,
+                    s.misses,
+                    s.errors,
+                    s.p50_ms.to_bits(),
+                    s.p99_ms.to_bits(),
+                    s.route_fp,
+                ]
+            })
+            .chain([
+                out.reads,
+                out.stale_reads,
+                out.read_errors,
+                out.read_p50_ms.unwrap().to_bits(),
+                out.read_p99_ms.unwrap().to_bits(),
+                out.final_epoch,
+            ])
+            .collect()
+    };
+
+    // batch substrate: reads issue across two rescales
+    let scenario = Scenario::scale_out(3, 2, 3);
+    let run = |w: usize| -> Vec<u64> {
+        let cfg = RunConfig::new().serve(serve).threads(ThreadConfig::new(w));
+        let out =
+            Controller::drive(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+                .unwrap();
+        assert_eq!(out.read_errors, 0, "width {w}: serving errored");
+        fingerprint(&out)
+    };
+    let reference = run(1);
+    assert!(!reference.is_empty());
+    for w in WIDTHS {
+        assert_eq!(run(w), reference, "width {w}: serving read path diverges");
+    }
+
+    // streaming substrate: reads issue across churn batches too
+    let srun = |w: usize| -> Vec<u64> {
+        let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
+        let cfg = RunConfig::new()
+            .geo(geo_cfg(w))
+            .serve(serve)
+            .threads(ThreadConfig::new(w));
+        let out =
+            Controller::drive(g.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+                .unwrap();
+        assert_eq!(out.read_errors, 0, "streaming width {w}: serving errored");
+        fingerprint(&out)
+    };
+    let sreference = srun(1);
+    assert!(!sreference.is_empty());
+    for w in WIDTHS {
+        assert_eq!(srun(w), sreference, "streaming width {w}: serving read path diverges");
     }
 }

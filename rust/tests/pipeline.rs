@@ -2,7 +2,7 @@
 //! ordering → partitioning → engine apps → dynamic scaling, asserting the
 //! paper's qualitative claims on CI-sized graphs.
 
-use egs::coordinator::{run_scenario, ControllerConfig};
+use egs::coordinator::{Controller, RunConfig};
 use egs::graph::datasets;
 use egs::engine::{apps, Engine};
 use egs::ordering::{geo, random::random_edge_order};
@@ -75,9 +75,10 @@ fn controller_preserves_pagerank_across_rescales() {
     let g = datasets::by_name("road-ca-s", 42).unwrap();
     let ordered = geo::order(&g, &geo::GeoConfig::default()).apply(&g);
     let scenario = Scenario::scale_out(2, 2, 4); // 12 iterations total
-    let cfg = ControllerConfig::default();
+    let cfg = RunConfig::new();
     let scaled =
-        run_scenario(&ordered, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+        Controller::drive(ordered.clone(), &scenario, &cfg, |_| Box::new(NativeBackend::new()))
+            .unwrap();
     assert_eq!(scaled.final_k, 4);
 
     // static run of the same iteration count

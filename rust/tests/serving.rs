@@ -1,0 +1,218 @@
+//! Acceptance + property suite of the serving read path: reads stay
+//! live through migrations.
+//!
+//! The contract under test:
+//!
+//! * **double-read covers any migration plan**: while a
+//!   [`MigrationPlan`] is in flight, every edge id routed through the
+//!   epoch pair answers with the pre-plan or post-plan owner — never a
+//!   panic, never a miss on a live id;
+//! * **double-read covers any churn plan**: retired ids keep answering
+//!   from the pre-batch epoch, appended ids answer from the post-batch
+//!   one, and only ids dead in *both* epochs miss;
+//! * **epoch ids are strictly monotone** across every ownership
+//!   transition of a run — scale events, churn batches, boundary
+//!   nudges, the final flush;
+//! * **the acceptance scenario**: a steady run with serving enabled
+//!   executes a rescale while reads issue continuously — zero read
+//!   errors, modeled read quantiles on the report.
+
+use egs::coordinator::{Controller, PolicyConfig, RunConfig};
+use egs::graph::generators::{rmat, RmatParams};
+use egs::graph::Graph;
+use egs::ordering::geo::{self, GeoConfig};
+use egs::partition::{cep::Cep, AssignmentEpoch, CepView, PartitionAssignment};
+use egs::runtime::native::NativeBackend;
+use egs::scaling::migration::MigrationPlan;
+use egs::scaling::scenario::{ScaleEvent, Scenario};
+use egs::serve::{ServeConfig, ShardRouter};
+use egs::stream::{MutationBatch, StagedGraph};
+use std::sync::Arc;
+
+fn small_graph() -> Graph {
+    let g = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() }, 1);
+    geo::order(&g, &GeoConfig { k_min: 2, k_max: 8, ..Default::default() }).apply(&g)
+}
+
+/// Double-read across a rescale: for every `k → k'` pair, every edge id
+/// in the space routes to its pre-plan or post-plan owner, moved ids
+/// (exactly the plan's ranges) double-read to the new owner, unmoved
+/// ids route plainly — and nothing panics or misses.
+#[test]
+fn double_read_covers_every_edge_of_any_migration_plan() {
+    let m = 10_007usize; // deliberately not a multiple of any k below
+    for (k, new_k) in [(2usize, 3usize), (4, 6), (6, 4), (5, 8), (8, 3), (7, 9)] {
+        let old = Cep::new(m, k);
+        let new = old.rescaled(new_k);
+        let plan = MigrationPlan::between_ceps(&old, &new);
+        let pre = Arc::new(CepView::new(old).epoch(0));
+        let post = Arc::new(CepView::new(new).epoch(1));
+        assert!(pre.epoch_id() < post.epoch_id());
+        let router = ShardRouter::with_previous(post, Some(pre));
+        assert!(router.migration_in_flight());
+
+        let mut moved = 0u64;
+        for e in 0..m as u64 {
+            let (po, pn) = (old.partition_of(e), new.partition_of(e));
+            let d = router.route_edge(e).unwrap_or_else(|| panic!("edge {e} missed"));
+            assert!(
+                d.partition == po || d.partition == pn,
+                "edge {e}: routed to {} (pre {po}, post {pn})",
+                d.partition
+            );
+            if po == pn {
+                assert!(!d.double_read && !d.stale, "unmoved edge {e} double-read");
+            } else {
+                moved += 1;
+                assert!(d.double_read && d.stale, "moved edge {e} routed plainly");
+                assert_eq!(d.partition, pn, "moved edge {e} answered by neither plan side");
+            }
+        }
+        // the double-read set is exactly the plan's migration volume
+        assert_eq!(moved, plan.migrated_edges(), "{k}→{new_k}");
+        // and ids beyond the space miss instead of panicking
+        assert!(router.route_edge(m as u64).is_none());
+    }
+}
+
+/// Double-read across a churn batch: deleted ids answer from the
+/// pre-batch epoch, appended ids from the post-batch one, and only ids
+/// dead in both epochs miss.
+#[test]
+fn double_read_covers_retired_and_appended_ids_of_a_churn_plan() {
+    let k = 5usize;
+    let g = rmat(&RmatParams { scale: 8, edge_factor: 6, ..Default::default() }, 3);
+    let geo_cfg = GeoConfig { k_min: 2, k_max: 8, ..Default::default() };
+    let mut sg = StagedGraph::new(g, geo_cfg);
+    let pre: Arc<AssignmentEpoch> = Arc::new(sg.assignment(k).epoch(0));
+    let pre_space = pre.num_edges();
+
+    let mut batch = MutationBatch::new();
+    for i in 0..60u32 {
+        batch.insert(i % 113, (i * 11 + 29) % 113);
+    }
+    for id in [3u64, 40, 41, 500, 777] {
+        batch.delete(id);
+    }
+    let (outcome, plan) = sg.apply_batch(&batch, k);
+    assert!(outcome.inserted > 0 && outcome.deleted > 0);
+    assert!(plan.range_ops() > 0);
+    let post: Arc<AssignmentEpoch> = Arc::new(sg.assignment(k).epoch(1));
+    assert!(pre.epoch_id() < post.epoch_id());
+    let router = ShardRouter::with_previous(Arc::clone(&post), Some(Arc::clone(&pre)));
+
+    for e in 0..post.num_edges() {
+        let live_pre = e < pre_space && pre.owner_of(e).is_some();
+        let live_post = post.owner_of(e).is_some();
+        match router.route_edge(e) {
+            Some(d) => {
+                assert!(live_pre || live_post, "dead id {e} routed");
+                let candidates = [pre.owner_of(e), post.owner_of(e)];
+                assert!(
+                    candidates.contains(&Some(d.partition)),
+                    "id {e}: routed to {} outside the epoch pair {candidates:?}",
+                    d.partition
+                );
+                if live_pre && !live_post {
+                    // retired mid-plan: the pre-batch epoch still answers
+                    assert_eq!(d.epoch, pre.epoch_id(), "retired id {e} not served stale");
+                    assert!(d.double_read && d.stale);
+                } else if !live_pre && live_post {
+                    // appended: only the post-batch epoch knows it
+                    assert_eq!(d.epoch, post.epoch_id());
+                    assert!(!d.double_read, "appended id {e} double-read");
+                }
+            }
+            None => {
+                assert!(
+                    !live_pre && !live_post,
+                    "live id {e} missed (pre {live_pre}, post {live_post})"
+                );
+            }
+        }
+    }
+}
+
+/// Epoch ids are strictly monotone across every transition kind in one
+/// run — churn batches, scale events and boundary nudges interleaved —
+/// and the final epoch supersedes them all.
+#[test]
+fn epoch_ids_are_strictly_monotone_across_all_transitions() {
+    let g = small_graph();
+    let scenario = Scenario::interleaved(3, 2, 4, 60, 20);
+    let cfg = RunConfig::new()
+        .geo(GeoConfig { k_min: 2, k_max: 8, ..Default::default() })
+        .policy(PolicyConfig::Threshold { threshold: 1.01 })
+        .serve(ServeConfig::new().read_rate(32));
+    let out = Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+
+    // merge every audited transition into (iteration-ish order, epoch)
+    let mut epochs: Vec<u64> = Vec::new();
+    epochs.extend(out.churn_events.iter().map(|c| c.epoch));
+    epochs.extend(out.events.iter().map(|e| e.epoch));
+    epochs.extend(out.rebalances.iter().map(|r| r.epoch));
+    assert!(!epochs.is_empty(), "scenario produced no transitions");
+    // distinct across kinds: every transition got its own epoch
+    let mut sorted = epochs.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), epochs.len(), "transitions shared an epoch id: {epochs:?}");
+    // each audit stream is strictly increasing on its own
+    for stream in [
+        out.churn_events.iter().map(|c| c.epoch).collect::<Vec<_>>(),
+        out.events.iter().map(|e| e.epoch).collect::<Vec<_>>(),
+        out.rebalances.iter().map(|r| r.epoch).collect::<Vec<_>>(),
+    ] {
+        assert!(stream.windows(2).all(|w| w[0] < w[1]), "{stream:?}");
+    }
+    // every published id is positive (epoch 0 is the initial assignment)
+    assert!(epochs.iter().all(|&e| e > 0));
+    // the run's final epoch supersedes every audited transition
+    assert!(out.final_epoch >= *sorted.last().unwrap());
+    // the serving read path watched the ids advance, never regress
+    let serve_epochs: Vec<u64> = out.serve_events.iter().map(|s| s.epoch).collect();
+    assert!(!serve_epochs.is_empty());
+    assert!(serve_epochs.windows(2).all(|w| w[0] <= w[1]), "{serve_epochs:?}");
+    assert_eq!(out.read_errors, 0);
+}
+
+/// The headline acceptance run: a steady serving workload rides through
+/// a mid-run rescale — reads issue continuously on every iteration,
+/// zero read errors, and the modeled read quantiles land on the report.
+#[test]
+fn serving_stays_live_through_a_rescale() {
+    let g = small_graph();
+    let scenario = Scenario {
+        name: "steady-serve".into(),
+        initial_k: 4,
+        events: vec![ScaleEvent { at_iteration: 3, target_k: 6 }],
+        churn: vec![],
+        prices: vec![],
+        total_iterations: 8,
+    };
+    let serve = ServeConfig::new().read_rate(64).zipf_s(1.1);
+    let cfg = RunConfig::new().serve(serve);
+    let out = Controller::drive(g, &scenario, &cfg, |_| Box::new(NativeBackend::new())).unwrap();
+
+    assert_eq!(out.final_k, 6);
+    assert_eq!(out.events.len(), 1, "the rescale must execute mid-run");
+    // reads issued on every iteration, including the rescale one
+    assert_eq!(out.serve_events.len(), scenario.total_iterations as usize);
+    for s in &out.serve_events {
+        assert!(s.reads > 0, "iteration {} served no reads", s.at_iteration);
+        assert_eq!(s.errors, 0, "iteration {} errored", s.at_iteration);
+        assert!(s.p99_ms >= s.p50_ms && s.p50_ms > 0.0);
+    }
+    assert_eq!(out.reads, 64 * scenario.total_iterations as u64);
+    assert_eq!(out.read_errors, 0, "a read went unanswered mid-migration");
+    // the rescale moved ownership under the reads: some double-read
+    let ev_epoch = out.events[0].epoch;
+    let migration_window: Vec<_> =
+        out.serve_events.iter().filter(|s| s.epoch == ev_epoch).collect();
+    assert!(!migration_window.is_empty(), "no reads served under the post-plan epoch");
+    let p50 = out.read_p50_ms.expect("serving must report read p50");
+    let p99 = out.read_p99_ms.expect("serving must report read p99");
+    assert!(p99 >= p50 && p50 > 0.0);
+    // modeled read costs stay in the designed envelope (0.15–0.7 ms/read)
+    assert!(p50 < 1.0 && p99 < 2.0, "p50 {p50} ms, p99 {p99} ms");
+}
